@@ -1,0 +1,86 @@
+//! Ablation A2: serializer design — raw vs zstd vs byte-shuffle+zstd —
+//! on bf16-valued f32 checkpoints (the Table 1 compression effect:
+//! "TensorStore's compression is particularly valuable in the first
+//! commit since T0 3B was trained using bfloat16 precision but is
+//! distributed as a float32 checkpoint").
+
+use git_theta::benchkit::render_table;
+use git_theta::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
+use git_theta::theta::serialize::{Serializer, TensorStoreSerializer};
+use git_theta::util::humansize;
+use git_theta::util::rng::Pcg64;
+use std::time::Instant;
+
+fn make(n: usize, bf16_valued: bool, seed: u64) -> Tensor {
+    let mut rng = Pcg64::new(seed);
+    let vals: Vec<f32> = (0..n)
+        .map(|_| {
+            let v = rng.next_gaussian() as f32 * 0.02;
+            if bf16_valued {
+                bf16_to_f32(f32_to_bf16(v))
+            } else {
+                v
+            }
+        })
+        .collect();
+    Tensor::from_f32(vec![n], vals).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = 4_000_000; // 16 MB
+    let mut rows = Vec::new();
+    for (label, t) in [
+        ("bf16-valued f32 (T0-like)", make(n, true, 1)),
+        ("full-precision f32", make(n, false, 2)),
+    ] {
+        for (cfg_label, ser) in [
+            (
+                "zstd only",
+                TensorStoreSerializer {
+                    shuffle: false,
+                    ..Default::default()
+                },
+            ),
+            ("shuffle+zstd (default)", TensorStoreSerializer::default()),
+            (
+                "shuffle+zstd level 9",
+                TensorStoreSerializer {
+                    level: 9,
+                    ..Default::default()
+                },
+            ),
+        ] {
+            let t0 = Instant::now();
+            let bytes = ser.serialize(&t)?;
+            let enc = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let back = ser.deserialize(&bytes)?;
+            let dec = t1.elapsed().as_secs_f64();
+            assert_eq!(back, t);
+            rows.push(vec![
+                label.to_string(),
+                cfg_label.to_string(),
+                humansize::bytes(bytes.len() as u64),
+                format!("{:.2}x", t.nbytes() as f64 / bytes.len() as f64),
+                format!("{:.0} MB/s", t.nbytes() as f64 / enc / 1e6),
+                format!("{:.0} MB/s", t.nbytes() as f64 / dec / 1e6),
+            ]);
+        }
+        rows.push(vec![
+            label.to_string(),
+            "raw".into(),
+            humansize::bytes(t.nbytes() as u64),
+            "1.00x".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["data", "serializer", "size", "ratio", "enc", "dec"],
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Ablation A3: update-type storage cost vs sparsity / rank.
+//!
+//! Sweeps LoRA rank and sparse-update density on a 1024x1024 group and
+//! reports stored bytes per update type chosen by `infer_best`, versus
+//! the dense baseline — the core of the paper's "smallest amount of
+//! information needed to describe how the parameter group was modified".
+
+use git_theta::benchkit::render_table;
+use git_theta::tensor::Tensor;
+use git_theta::theta::updates::infer_best;
+use git_theta::util::humansize;
+use git_theta::util::rng::Pcg64;
+
+fn random(seed: u64, m: usize, n: usize) -> Tensor {
+    let mut rng = Pcg64::new(seed);
+    let vals: Vec<f32> = (0..m * n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect();
+    Tensor::from_f32(vec![m, n], vals).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let (m, n) = (1024usize, 1024usize);
+    let prev = random(1, m, n);
+    let dense_bytes = prev.nbytes();
+    let mut rows = Vec::new();
+
+    // LoRA rank sweep.
+    for rank in [1usize, 4, 16, 64] {
+        let mut rng = Pcg64::new(100 + rank as u64);
+        let a: Vec<f64> = (0..m * rank).map(|_| rng.next_gaussian() * 0.01).collect();
+        let b: Vec<f64> = (0..rank * n).map(|_| rng.next_gaussian() * 0.01).collect();
+        let pv = prev.to_f32_vec()?;
+        let mut nv = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for k in 0..rank {
+                    acc += a[i * rank + k] * b[k * n + j];
+                }
+                nv[i * n + j] = (pv[i * n + j] as f64 + acc) as f32;
+            }
+        }
+        let new = Tensor::from_f32(vec![m, n], nv)?;
+        let p = infer_best(Some(&prev), &new, None)?;
+        rows.push(vec![
+            format!("LoRA rank {rank}"),
+            p.kind.clone(),
+            humansize::bytes(p.raw_bytes() as u64),
+            format!("{:.1}x", dense_bytes as f64 / p.raw_bytes() as f64),
+        ]);
+    }
+
+    // Sparse density sweep.
+    for density in [0.001f64, 0.01, 0.1, 0.3] {
+        let mut rng = Pcg64::new(200 + (density * 1000.0) as u64);
+        let mut nv = prev.to_f32_vec()?;
+        let nnz = (nv.len() as f64 * density) as usize;
+        for idx in rng.choose_indices(nv.len(), nnz) {
+            nv[idx] += 1.0;
+        }
+        let new = Tensor::from_f32(vec![m, n], nv)?;
+        let p = infer_best(Some(&prev), &new, None)?;
+        rows.push(vec![
+            format!("sparse density {density}"),
+            p.kind.clone(),
+            humansize::bytes(p.raw_bytes() as u64),
+            format!("{:.1}x", dense_bytes as f64 / p.raw_bytes() as f64),
+        ]);
+    }
+
+    // IA3 and trim.
+    {
+        let pv = prev.to_f32_vec()?;
+        let nv: Vec<f32> = pv
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v * (1.0 + (i % n) as f32 * 1e-4))
+            .collect();
+        let new = Tensor::from_f32(vec![m, n], nv)?;
+        let p = infer_best(Some(&prev), &new, None)?;
+        rows.push(vec![
+            "IA3 column rescale".into(),
+            p.kind.clone(),
+            humansize::bytes(p.raw_bytes() as u64),
+            format!("{:.1}x", dense_bytes as f64 / p.raw_bytes() as f64),
+        ]);
+        let trimmed = prev.take_rows(m - 100)?;
+        let p = infer_best(Some(&prev), &trimmed, None)?;
+        rows.push(vec![
+            "trim 100 rows".into(),
+            p.kind.clone(),
+            humansize::bytes(p.raw_bytes() as u64),
+            format!("{:.0}x", dense_bytes as f64 / p.raw_bytes() as f64),
+        ]);
+    }
+
+    // Dense fallback.
+    {
+        let new = random(2, m, n);
+        let p = infer_best(Some(&prev), &new, None)?;
+        rows.push(vec![
+            "full fine-tune".into(),
+            p.kind.clone(),
+            humansize::bytes(p.raw_bytes() as u64),
+            "1.0x".into(),
+        ]);
+    }
+
+    println!(
+        "{}",
+        render_table(
+            &["update", "inferred type", "stored (pre-compression)", "saving vs dense"],
+            &rows
+        )
+    );
+    Ok(())
+}

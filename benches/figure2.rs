@@ -1,0 +1,13 @@
+//! Figure 2: relative space saving of Git-Theta over Git LFS per commit.
+
+use git_theta::benchkit::workflow;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = workflow::ModelConfig::from_env();
+    let models = workflow::build_models(&cfg, 42);
+    let lfs = workflow::run_lfs_workflow(&models)?;
+    let theta = workflow::run_theta_workflow(&models)?;
+    let series = workflow::figure2_series(&lfs, &theta);
+    println!("{}", workflow::render_figure2(&series));
+    Ok(())
+}

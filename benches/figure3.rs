@@ -1,0 +1,23 @@
+//! Figure 3: model performance at each point in commit history, with
+//! real training through the AOT train/eval artifacts and a native
+//! merge through the Git-Theta merge driver.
+//!
+//! Requires `make artifacts`. Steps via THETA_FIG3_STEPS (default 600).
+
+use git_theta::benchkit::figure3;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::var("THETA_FIG3_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(600);
+    match figure3::run_figure3(steps, 0.1)? {
+        Some(result) => {
+            println!("{}", figure3::render_figure3(&result));
+        }
+        None => {
+            eprintln!("[figure3] skipped: artifacts not built (run `make artifacts`)");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! P1: clean/smudge throughput scaling — threads x checkpoint size.
+//!
+//! The paper attributes Git-Theta's speed to "the embarrassingly
+//! parallel nature of parameter processing"; this bench measures the
+//! clean and smudge filter throughput (MB/s) across thread counts and
+//! drives the §Perf optimization loop in EXPERIMENTS.md.
+
+use git_theta::benchkit::workflow::{base_model, ModelConfig};
+use git_theta::benchkit::{render_table, time_n};
+use git_theta::lfs::LfsStore;
+use git_theta::theta::filter::{clean_checkpoint, smudge_metadata, ObjectAccess};
+use git_theta::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::from_env();
+    let ck = base_model(&cfg, 7);
+    let mb = ck.total_bytes() as f64 / 1e6;
+    eprintln!(
+        "[perf_filters] checkpoint: {} groups, {:.0} MB",
+        ck.len(),
+        mb
+    );
+
+    let mut rows = Vec::new();
+    for threads in [1usize, 2, 4, 8, 16] {
+        let td = TempDir::new("perf")?;
+        let acc = ObjectAccess {
+            store: LfsStore::open(td.path()),
+            remote: None,
+        };
+        // clean (first version: all dense).
+        let stats = time_n(1, 3, || {
+            let td2 = TempDir::new("perf-clean")?;
+            let acc2 = ObjectAccess {
+                store: LfsStore::open(td2.path()),
+                remote: None,
+            };
+            clean_checkpoint(&acc2, &ck, "safetensors", None, None, threads)?;
+            Ok(())
+        })?;
+        let clean_mbs = mb / stats.min();
+
+        // smudge.
+        let meta = clean_checkpoint(&acc, &ck, "safetensors", None, None, threads)?;
+        let stats = time_n(1, 3, || {
+            smudge_metadata(&acc, &meta, threads)?;
+            Ok(())
+        })?;
+        let smudge_mbs = mb / stats.min();
+
+        rows.push(vec![
+            threads.to_string(),
+            format!("{clean_mbs:.0} MB/s"),
+            format!("{smudge_mbs:.0} MB/s"),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["threads", "clean throughput", "smudge throughput"], &rows)
+    );
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Distributed collaboration: two contributors, one remote.
+//!
+//! Alice publishes a base model; Bob clones it (downloading only the
+//! metadata + the parameters he checks out), fine-tunes one group, and
+//! pushes back — transferring only the sparse delta. Alice pulls and
+//! merges Bob's branch with her own concurrent change using parameter
+//! averaging. This is the paper's "bazaar" workflow end to end.
+//!
+//! ```bash
+//! cargo run --release --example collaboration
+//! ```
+
+use git_theta::baseline::ThetaRepo;
+use git_theta::checkpoint::{Checkpoint, CheckpointFormat, SafetensorsFormat};
+use git_theta::gitcore::repo::Repository;
+use git_theta::lfs::LfsStore;
+use git_theta::tensor::Tensor;
+use git_theta::util::humansize;
+use git_theta::util::rng::Pcg64;
+use git_theta::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    git_theta::init();
+    let remote = TempDir::new("remote")?;
+    let alice_dir = TempDir::new("alice")?;
+    let bob_dir = TempDir::new("bob")?;
+
+    // Alice publishes the base model.
+    let alice = ThetaRepo::init(alice_dir.path(), "model.safetensors")?;
+    let mut rng = Pcg64::new(3);
+    let mut ck = Checkpoint::new();
+    for l in 0..4 {
+        let vals: Vec<f32> = (0..256 * 256).map(|_| rng.next_gaussian() as f32 * 0.02).collect();
+        ck.insert(format!("layer_{l}/w"), Tensor::from_f32(vec![256, 256], vals)?);
+    }
+    alice.write_model(&ck)?;
+    alice.repo.add(&["model.safetensors", ".thetaattributes"])?;
+    alice.commit("base model")?;
+    let report = alice.repo.push(remote.path(), "main")?;
+    println!(
+        "alice pushed base: {} objects, {}",
+        report.objects_sent,
+        humansize::bytes(report.bytes_sent)
+    );
+
+    // Bob clones (init + config remote + pull) and fine-tunes layer_0.
+    let bob_repo = Repository::init(bob_dir.path())?;
+    bob_repo.config_set("remote", remote.path().to_str().unwrap())?;
+    bob_repo.pull(remote.path(), "main")?;
+    println!(
+        "bob cloned; local LFS cache holds {}",
+        humansize::bytes(LfsStore::open(bob_repo.theta_dir()).disk_usage()?)
+    );
+
+    let mut bob_ck = SafetensorsFormat.load_file(&bob_dir.join("model.safetensors"))?;
+    let mut vals = bob_ck.get("layer_0/w").unwrap().to_f32_vec()?;
+    for v in vals.iter_mut().take(500) {
+        *v += 0.01; // Bob's sparse-ish tune
+    }
+    bob_ck.insert("layer_0/w", Tensor::from_f32(vec![256, 256], vals)?);
+    SafetensorsFormat.save_file(&bob_ck, &bob_dir.join("model.safetensors"))?;
+    bob_repo.add(&["model.safetensors"])?;
+    bob_repo.commit("bob: tune layer_0", "bob <bob@example.com>")?;
+    let report = bob_repo.push(remote.path(), "main")?;
+    println!(
+        "bob pushed update: {} objects, {} (only the delta moved)",
+        report.objects_sent,
+        humansize::bytes(report.bytes_sent)
+    );
+    assert!(report.bytes_sent < 200_000, "delta should be small");
+
+    // Alice concurrently tuned layer_3 on a branch, then pulls Bob's
+    // main and merges — non-overlapping groups merge automatically.
+    alice.repo.create_branch("alice-tune")?;
+    alice.checkout("alice-tune")?;
+    let mut alice_ck = alice.read_model()?;
+    let mut vals = alice_ck.get("layer_3/w").unwrap().to_f32_vec()?;
+    for v in vals.iter_mut().take(500) {
+        *v -= 0.01;
+    }
+    alice_ck.insert("layer_3/w", Tensor::from_f32(vec![256, 256], vals)?);
+    alice.write_model(&alice_ck)?;
+    alice.repo.add(&["model.safetensors"])?;
+    alice.commit("alice: tune layer_3")?;
+
+    alice.checkout("main")?;
+    alice.repo.pull(remote.path(), "main")?;
+    let report = alice.repo.merge(
+        "alice-tune",
+        &git_theta::gitcore::drivers::MergeOptions::default(),
+        "alice <alice@example.com>",
+    )?;
+    println!(
+        "alice merged her branch with bob's main (driver resolved {} groups)",
+        report.driver_resolved.len()
+    );
+
+    // Both tunes are present in the final model.
+    let merged = alice.read_model()?;
+    assert!(merged.get("layer_0/w").unwrap().to_f32_vec()?[0] > 0.0 + ck.get("layer_0/w").unwrap().to_f32_vec()?[0]);
+    assert!(merged.get("layer_3/w").unwrap().to_f32_vec()?[0] < ck.get("layer_3/w").unwrap().to_f32_vec()?[0]);
+    println!("final model contains both contributors' updates ✓");
+    Ok(())
+}

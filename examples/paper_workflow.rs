@@ -1,0 +1,54 @@
+//! End-to-end driver: the paper's full §4 evaluation on a real (small)
+//! workload, proving all three layers compose.
+//!
+//! 1. **Figure 3** — real training: the L2 transformer is trained from
+//!    Rust via the AOT `train_step`/`train_step_lora`/`eval_step` HLO
+//!    artifacts (Pallas attention kernel inside), each stage committed
+//!    through Git-Theta, the branches merged by the native merge driver
+//!    with parameter averaging, and every task evaluated at every
+//!    commit.
+//! 2. **Table 1 / Figure 2** — the six-commit storage/timing comparison
+//!    against the Git LFS baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example paper_workflow
+//! # larger Table 1 model: THETA_BENCH_PARAMS=120 cargo run ...
+//! ```
+
+use git_theta::benchkit::{figure3, workflow};
+
+fn main() -> anyhow::Result<()> {
+    git_theta::init();
+
+    println!("=== Figure 3: performance across commit history (real training) ===");
+    let steps: usize = std::env::var("THETA_FIG3_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(600);
+    match figure3::run_figure3(steps, 0.1)? {
+        Some(result) => print!("{}", figure3::render_figure3(&result)),
+        None => println!("skipped: run `make artifacts` first"),
+    }
+
+    println!("\n=== Table 1: Git LFS vs Git-Theta over the 6-commit workflow ===");
+    let cfg = workflow::ModelConfig::from_env();
+    println!(
+        "model: d={} layers={} vocab={}+{} = {:.1}M params",
+        cfg.d_model,
+        cfg.layers,
+        cfg.vocab,
+        cfg.sentinels,
+        cfg.param_count() as f64 / 1e6
+    );
+    let models = workflow::build_models(&cfg, 42);
+    let lfs = workflow::run_lfs_workflow(&models)?;
+    let theta = workflow::run_theta_workflow(&models)?;
+    print!("{}", workflow::render_table1(&lfs, &theta));
+
+    println!("\n=== Figure 2: relative space savings ===");
+    print!(
+        "{}",
+        workflow::render_figure2(&workflow::figure2_series(&lfs, &theta))
+    );
+    Ok(())
+}

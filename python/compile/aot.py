@@ -1,0 +1,177 @@
+"""AOT lowering: JAX/Pallas (L2/L1) → HLO text artifacts for the Rust
+runtime.
+
+Run once via ``make artifacts``. Emits into ``artifacts/``:
+
+* ``train_step.hlo.txt``, ``train_step_lora.hlo.txt``,
+  ``eval_step.hlo.txt`` — the Figure 3 model entry points;
+* ``lsh_project.hlo.txt``, ``param_average.hlo.txt``,
+  ``lora_apply_{m}x{n}x{r}.hlo.txt`` — standalone kernels used by the
+  Rust mlops layer;
+* ``init_params.safetensors`` / ``init_lora.safetensors`` — initial
+  parameters (hand-rolled safetensors writer; interoperates with the
+  Rust reader);
+* ``manifest.json`` — model dims + flattened parameter ordering.
+
+HLO **text** is the interchange format: jax >= 0.5 serialized protos
+carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels import average as average_kernel
+from .kernels import lora as lora_kernel
+from .kernels import lsh as lsh_kernel
+
+SEED = 20230717
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def save_safetensors(path, tensors):
+    """Minimal safetensors writer (f32 only), compatible with the Rust
+    reader in rust/src/checkpoint/safetensors.rs."""
+    header = {}
+    offset = 0
+    names = sorted(tensors)
+    for name in names:
+        t = tensors[name]
+        nbytes = t.size * 4
+        header[name] = {
+            "dtype": "F32",
+            "shape": list(t.shape),
+            "data_offsets": [offset, offset + nbytes],
+        }
+        offset += nbytes
+    header_text = json.dumps(header, separators=(",", ":"))
+    while (8 + len(header_text)) % 8 != 0:
+        header_text += " "
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(header_text)))
+        f.write(header_text.encode())
+        import numpy as np
+
+        for name in names:
+            f.write(np.asarray(tensors[name], dtype="<f4").tobytes())
+
+
+def write(out_dir, name, lowered):
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def lower_model(cfg, out_dir):
+    key = jax.random.PRNGKey(SEED)
+    params = model_lib.init_params(cfg, key)
+    lora = model_lib.init_lora(cfg, jax.random.fold_in(key, 1))
+
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    lab_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    p_spec = jax.tree_util.tree_map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), params
+    )
+    l_spec = jax.tree_util.tree_map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), lora
+    )
+
+    write(
+        out_dir,
+        "train_step",
+        jax.jit(model_lib.make_train_step(cfg)).lower(p_spec, tok_spec, lab_spec, lr_spec),
+    )
+    write(
+        out_dir,
+        "train_step_lora",
+        jax.jit(model_lib.make_train_step_lora(cfg)).lower(
+            p_spec, l_spec, tok_spec, lab_spec, lr_spec
+        ),
+    )
+    write(
+        out_dir,
+        "eval_step",
+        jax.jit(model_lib.make_eval_step(cfg)).lower(p_spec, tok_spec, lab_spec),
+    )
+
+    save_safetensors(os.path.join(out_dir, "init_params.safetensors"), params)
+    save_safetensors(os.path.join(out_dir, "init_lora.safetensors"), lora)
+
+    manifest = {
+        "model": {
+            **cfg.to_dict(),
+            "param_names": sorted(params),
+            "lora_param_names": sorted(lora),
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("  wrote manifest.json + init params")
+
+
+def lower_kernels(cfg, out_dir):
+    # LSH projection block.
+    x_spec = jax.ShapeDtypeStruct(
+        (lsh_kernel.BLOCK_ROWS, lsh_kernel.POOL_SIZE), jnp.float32
+    )
+    pool_spec = jax.ShapeDtypeStruct(
+        (lsh_kernel.POOL_SIZE, lsh_kernel.NUM_HASHES), jnp.float32
+    )
+    write(out_dir, "lsh_project", jax.jit(lsh_kernel.lsh_project).lower(x_spec, pool_spec))
+
+    # Parameter averaging block.
+    n = 1 << 20
+    v_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    write(out_dir, "param_average", jax.jit(average_kernel.param_average).lower(v_spec, v_spec))
+
+    # LoRA application for the model's attention shape and a larger
+    # benchmark shape.
+    d = cfg.d_model
+    for (m, nn, r) in [(d, d, cfg.lora_rank), (512, 512, 16)]:
+        w_spec = jax.ShapeDtypeStruct((m, nn), jnp.float32)
+        a_spec = jax.ShapeDtypeStruct((m, r), jnp.float32)
+        b_spec = jax.ShapeDtypeStruct((r, nn), jnp.float32)
+        alpha_spec = jax.ShapeDtypeStruct((1,), jnp.float32)
+        write(
+            out_dir,
+            f"lora_apply_{m}x{nn}x{r}",
+            jax.jit(lora_kernel.lora_apply).lower(w_spec, a_spec, b_spec, alpha_spec),
+        )
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--d-model", type=int, default=128)
+    parser.add_argument("--layers", type=int, default=2)
+    parser.add_argument("--vocab", type=int, default=256)
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cfg = model_lib.ModelConfig(
+        vocab=args.vocab, d_model=args.d_model, layers=args.layers
+    )
+    print(f"lowering model {cfg.to_dict()}")
+    lower_model(cfg, args.out)
+    lower_kernels(cfg, args.out)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Pallas kernel: fused causal attention (Layer 1).
+
+Used inside the L2 transformer (Figure 3 model). One grid step per
+(batch*head): the full (S, Dh) Q/K/V tiles fit VMEM at this model
+scale, so scores, causal mask, softmax, and the value matmul are fused
+in one kernel — the flash-style row-blocked schedule is unnecessary at
+S=32 but the same BlockSpec structure extends to it.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]  # (S, Dh)
+    k = k_ref[0]
+    v = v_ref[0]
+    s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+
+
+def _attention_fwd_kernel(q, k, v):
+    bh, s, dh = q.shape
+    spec = pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(bh,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def _ref_attention(q, k, v):
+    # Reference math used for the backward pass (standard fused-attention
+    # practice: the kernel carries a custom VJP whose bwd re-derives
+    # gradients from the mathematically-equivalent graph).
+    s = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.einsum("bsd,btd->bst", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,btd->bsd", probs, v)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """q, k, v: (BH, S, Dh) f32 -> (BH, S, Dh) f32, causal."""
+    return _attention_fwd_kernel(q, k, v)
+
+
+def _attention_fwd(q, k, v):
+    return _attention_fwd_kernel(q, k, v), (q, k, v)
+
+
+def _attention_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(_ref_attention, q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,34 @@
+"""Pallas kernel: parameter averaging (Layer 1).
+
+The merge driver's hot loop: elementwise mean of two flattened
+parameter blocks. Pure VPU work, tiled so each grid step streams one
+chunk of both inputs through VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 65536
+
+
+def _kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = (x_ref[...] + y_ref[...]) * 0.5
+
+
+def param_average(x, y):
+    """x, y: (N,) f32 with N % CHUNK == 0 -> (N,) f32."""
+    n = x.shape[0]
+    chunk = min(CHUNK, n)
+    grid = (n // chunk,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((chunk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, y)

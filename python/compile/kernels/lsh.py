@@ -1,0 +1,65 @@
+"""Pallas kernel: pooled LSH projection (Layer 1).
+
+The Van Durme & Lall random-pool LSH is re-expressed as a pooled
+projection matmul (DESIGN.md §Hardware-Adaptation): the parameter
+vector is folded into rows of POOL_SIZE, streamed HBM→VMEM one
+row-block at a time, and multiplied against the resident (POOL, K)
+Gaussian pool matrix on the MXU, accumulating K partial sums on-chip.
+
+The pool matrix is an *argument* (generated once by the Rust side), so
+both implementations project against identical Gaussians.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU performance is estimated statically in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Shapes the AOT artifact is lowered for (mirrored by rust mlops).
+BLOCK_ROWS = 64
+POOL_SIZE = 16384
+NUM_HASHES = 16
+
+# Rows per grid step: the VMEM working set per step is
+# ROW_TILE*POOL*4B (x tile) + POOL*K*4B (pool, resident) + K*4B (acc).
+ROW_TILE = 8
+
+
+def _kernel(x_ref, pool_ref, o_ref):
+    step = pl.program_id(0)
+    partial = jnp.sum(
+        jnp.dot(x_ref[...], pool_ref[...], preferred_element_type=jnp.float32),
+        axis=0,
+    )
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(step != 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lsh_project(x, pool):
+    """x: (BLOCK_ROWS, POOL_SIZE) f32, pool: (POOL_SIZE, K) f32 -> (K,) f32."""
+    rows, pool_size = x.shape
+    k = pool.shape[1]
+    grid = (rows // ROW_TILE,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, pool_size), lambda i: (i, 0)),
+            pl.BlockSpec((pool_size, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=True,
+    )(x, pool)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here;
+pytest (python/tests/) sweeps shapes and dtypes with hypothesis and
+asserts allclose between kernel and oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def lsh_project(x, pool):
+    """Pooled LSH projection.
+
+    x:    (rows, POOL) f32 — parameter values folded into pool-width rows
+          (zero-padded).
+    pool: (POOL, K) f32 — fixed Gaussian pool matrix.
+    returns (K,) f32 — projections y_j = sum_i x_i * pool[i mod POOL, j].
+    """
+    return jnp.sum(x @ pool, axis=0)
+
+
+def lora_apply(w, a, b, alpha):
+    """W + (alpha / r) * A @ B."""
+    r = a.shape[1]
+    scale = alpha / r if r > 0 else 0.0
+    return w + scale * (a @ b)
+
+
+def param_average(x, y):
+    """Elementwise mean of two parameter vectors."""
+    return (x + y) * 0.5
+
+
+def attention(q, k, v):
+    """Causal single-head attention over (BH, S, Dh) tensors."""
+    s = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.einsum("bsd,btd->bst", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,btd->bsd", probs, v)

@@ -1,0 +1,179 @@
+"""Layer 2: the JAX transformer classifier used for Figure 3.
+
+A small pre-LN transformer with learned positions, causal attention
+(through the L1 Pallas kernel), mean pooling, and a linear head. Three
+compiled entry points, all lowered to HLO text by aot.py:
+
+* ``train_step``       — full fine-tune (SGD), returns (params, loss)
+* ``train_step_lora``  — LoRA adapters on q/v only, base frozen,
+                         returns (lora, loss)
+* ``eval_step``        — returns (correct_count, loss)
+
+Parameters are flat dicts keyed by names that match the Rust side
+(``block_0/attn/q`` etc.); JAX flattens dicts in sorted-key order,
+which is the order recorded in ``artifacts/manifest.json``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention as attention_kernel
+
+
+class ModelConfig:
+    def __init__(
+        self,
+        vocab=256,
+        seq_len=32,
+        d_model=128,
+        layers=2,
+        heads=4,
+        classes=2,
+        batch=32,
+        lora_rank=8,
+    ):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.d_model = d_model
+        self.layers = layers
+        self.heads = heads
+        self.classes = classes
+        self.batch = batch
+        self.lora_rank = lora_rank
+
+    def to_dict(self):
+        return {
+            "vocab": self.vocab,
+            "seq_len": self.seq_len,
+            "d_model": self.d_model,
+            "layers": self.layers,
+            "heads": self.heads,
+            "classes": self.classes,
+            "batch": self.batch,
+            "lora_rank": self.lora_rank,
+        }
+
+
+def init_params(cfg, key):
+    """Initialize base parameters (the 'pre-trained' stand-in)."""
+    params = {}
+    k = iter(jax.random.split(key, 64))
+    d = cfg.d_model
+
+    def dense(shape, scale):
+        return (jax.random.normal(next(k), shape) * scale).astype(jnp.float32)
+
+    params["embed/weight"] = dense((cfg.vocab, d), 0.02)
+    params["pos/weight"] = dense((cfg.seq_len, d), 0.02)
+    for l in range(cfg.layers):
+        p = f"block_{l}"
+        for name in ("q", "k", "v", "o"):
+            params[f"{p}/attn/{name}"] = dense((d, d), d**-0.5)
+        params[f"{p}/mlp/wi"] = dense((d, 4 * d), d**-0.5)
+        params[f"{p}/mlp/wo"] = dense((4 * d, d), (4 * d) ** -0.5)
+        params[f"{p}/ln1/scale"] = jnp.ones((d,), jnp.float32)
+        params[f"{p}/ln2/scale"] = jnp.ones((d,), jnp.float32)
+    params["ln_f/scale"] = jnp.ones((d,), jnp.float32)
+    params["head/weight"] = dense((d, cfg.classes), d**-0.5)
+    return params
+
+
+def init_lora(cfg, key):
+    """Zero-init LoRA adapters for every q/v projection (B side zero,
+    so the adapted model starts identical to the base)."""
+    lora = {}
+    k = iter(jax.random.split(key, 32))
+    d = cfg.d_model
+    r = cfg.lora_rank
+    for l in range(cfg.layers):
+        for name in ("q", "v"):
+            target = f"block_{l}/attn/{name}"
+            lora[f"{target}.lora_a"] = (
+                jax.random.normal(next(k), (d, r)) * 0.01
+            ).astype(jnp.float32)
+            lora[f"{target}.lora_b"] = jnp.zeros((r, d), jnp.float32)
+    return lora
+
+
+def _layer_norm(x, scale):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + 1e-6) * scale
+
+
+def _proj(h, params, lora, name):
+    w = params[name]
+    y = h @ w
+    if lora is not None and f"{name}.lora_a" in lora:
+        # scale 1.0 (alpha == r by convention; rust merges with alpha=r).
+        y = y + (h @ lora[f"{name}.lora_a"]) @ lora[f"{name}.lora_b"]
+    return y
+
+
+def forward(params, lora, tokens, cfg):
+    """tokens: (B, S) int32 -> logits (B, classes)."""
+    b, s = tokens.shape
+    d = cfg.d_model
+    h_count = cfg.heads
+    dh = d // h_count
+
+    x = params["embed/weight"][tokens] + params["pos/weight"][None, :s, :]
+    for l in range(cfg.layers):
+        p = f"block_{l}"
+        h = _layer_norm(x, params[f"{p}/ln1/scale"])
+        q = _proj(h, params, lora, f"{p}/attn/q")
+        k = _proj(h, params, None, f"{p}/attn/k")
+        v = _proj(h, params, lora, f"{p}/attn/v")
+
+        def split(t):
+            return t.reshape(b, s, h_count, dh).transpose(0, 2, 1, 3).reshape(b * h_count, s, dh)
+
+        attn = attention_kernel(split(q), split(k), split(v))
+        attn = attn.reshape(b, h_count, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + attn @ params[f"{p}/attn/o"]
+
+        h2 = _layer_norm(x, params[f"{p}/ln2/scale"])
+        x = x + jax.nn.relu(h2 @ params[f"{p}/mlp/wi"]) @ params[f"{p}/mlp/wo"]
+
+    x = _layer_norm(x, params["ln_f/scale"])
+    pooled = jnp.mean(x, axis=1)
+    return pooled @ params["head/weight"]
+
+
+def loss_fn(params, lora, tokens, labels, cfg):
+    logits = forward(params, lora, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    return nll
+
+
+def make_train_step(cfg):
+    def train_step(params, tokens, labels, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, None, tokens, labels, cfg)
+        new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return new_params, loss
+
+    return train_step
+
+
+def make_train_step_lora(cfg):
+    def train_step_lora(params, lora, tokens, labels, lr):
+        def lora_loss(lora_params):
+            return loss_fn(params, lora_params, tokens, labels, cfg)
+
+        loss, grads = jax.value_and_grad(lora_loss)(lora)
+        new_lora = jax.tree_util.tree_map(lambda p, g: p - lr * g, lora, grads)
+        return new_lora, loss
+
+    return train_step_lora
+
+
+def make_eval_step(cfg):
+    def eval_step(params, tokens, labels):
+        logits = forward(params, None, tokens, cfg)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+        return correct, nll
+
+    return eval_step

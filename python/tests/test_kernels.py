@@ -1,0 +1,138 @@
+"""Pallas kernels vs pure-jnp oracles (hypothesis shape sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attention_kernel
+from compile.kernels import average as average_kernel
+from compile.kernels import lora as lora_kernel
+from compile.kernels import lsh as lsh_kernel
+from compile.kernels import ref
+
+
+def rand(key, shape, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(
+        jnp.float32
+    )
+
+
+# ----------------------------------------------------------------------
+# lsh_project
+# ----------------------------------------------------------------------
+
+
+def test_lsh_project_matches_ref():
+    x = rand(0, (lsh_kernel.BLOCK_ROWS, lsh_kernel.POOL_SIZE), 0.1)
+    pool = rand(1, (lsh_kernel.POOL_SIZE, lsh_kernel.NUM_HASHES))
+    got = lsh_kernel.lsh_project(x, pool)
+    want = ref.lsh_project(x, pool)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+def test_lsh_project_zero_padding_invariant():
+    # Zero rows contribute nothing (rust pads partial blocks with zeros).
+    pool = rand(2, (lsh_kernel.POOL_SIZE, lsh_kernel.NUM_HASHES))
+    x = jnp.zeros((lsh_kernel.BLOCK_ROWS, lsh_kernel.POOL_SIZE), jnp.float32)
+    x = x.at[0, :100].set(rand(3, (100,), 0.1))
+    got = lsh_kernel.lsh_project(x, pool)
+    want = ref.lsh_project(x, pool)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-4)
+    assert float(jnp.abs(got).max()) > 0
+
+
+# ----------------------------------------------------------------------
+# lora_apply
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([64, 128, 256]),
+    n=st.sampled_from([64, 128]),
+    r=st.sampled_from([1, 4, 8, 16]),
+    alpha=st.floats(min_value=0.25, max_value=32.0),
+)
+def test_lora_apply_matches_ref(m, n, r, alpha):
+    w = rand(m * 31 + n, (m, n), 0.1)
+    a = rand(m, (m, r), 0.1)
+    b = rand(n, (r, n), 0.1)
+    alpha_arr = jnp.asarray([alpha], jnp.float32)
+    got = lora_kernel.lora_apply(w, a, b, alpha_arr)
+    want = ref.lora_apply(w, a, b, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_lora_apply_zero_b_is_identity():
+    w = rand(7, (64, 64), 0.1)
+    a = rand(8, (64, 8), 0.1)
+    b = jnp.zeros((8, 64), jnp.float32)
+    got = lora_kernel.lora_apply(w, a, b, jnp.asarray([8.0], jnp.float32))
+    np.testing.assert_allclose(got, w, rtol=0, atol=0)
+
+
+# ----------------------------------------------------------------------
+# param_average
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([65536, 131072, 1 << 20]))
+def test_param_average_matches_ref(n, ):
+    x = rand(n % 97, (n,), 1.0)
+    y = rand(n % 89 + 1, (n,), 1.0)
+    got = average_kernel.param_average(x, y)
+    want = ref.param_average(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_param_average_commutes():
+    x = rand(10, (65536,))
+    y = rand(11, (65536,))
+    np.testing.assert_array_equal(
+        average_kernel.param_average(x, y), average_kernel.param_average(y, x)
+    )
+
+
+# ----------------------------------------------------------------------
+# attention
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bh=st.sampled_from([1, 4, 8]),
+    s=st.sampled_from([8, 16, 32]),
+    dh=st.sampled_from([16, 32]),
+)
+def test_attention_matches_ref(bh, s, dh):
+    q = rand(bh, (bh, s, dh), 0.5)
+    k = rand(s, (bh, s, dh), 0.5)
+    v = rand(dh, (bh, s, dh), 0.5)
+    got = attention_kernel.attention(q, k, v)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_attention_is_causal():
+    # Changing a future token must not change earlier outputs.
+    q = rand(1, (1, 8, 16), 0.5)
+    k = rand(2, (1, 8, 16), 0.5)
+    v = rand(3, (1, 8, 16), 0.5)
+    out1 = attention_kernel.attention(q, k, v)
+    k2 = k.at[0, -1].add(10.0)
+    v2 = v.at[0, -1].add(10.0)
+    out2 = attention_kernel.attention(q, k2, v2)
+    np.testing.assert_allclose(out1[0, :-1], out2[0, :-1], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[0, -1], out2[0, -1])
+
+
+def test_attention_softmax_rows_bounded():
+    q = rand(4, (2, 16, 16), 2.0)
+    k = rand(5, (2, 16, 16), 2.0)
+    v = jnp.ones((2, 16, 16), jnp.float32)
+    out = attention_kernel.attention(q, k, v)
+    # With constant V, any convex combination returns exactly V.
+    np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,161 @@
+//! The Git LFS baseline (paper §4).
+//!
+//! The paper compares Git-Theta against Git LFS, where each checkpoint
+//! version is one opaque blob: "any change to a model file results in a
+//! new copy of the entire model being stored". This module packages
+//! that workflow so the benchmark harness can run the two systems over
+//! identical commit sequences and measure add/checkout wall-clock and
+//! on-disk size (Table 1, Figure 2).
+
+use crate::checkpoint::{Checkpoint, CheckpointFormat, SafetensorsFormat};
+use crate::gitcore::attributes::Attributes;
+use crate::gitcore::object::Oid;
+use crate::gitcore::repo::Repository;
+use crate::lfs::LfsStore;
+use anyhow::Result;
+use std::path::Path;
+
+/// A repository that tracks a single checkpoint file as an LFS blob.
+pub struct LfsBaselineRepo {
+    pub repo: Repository,
+    pub model_path: String,
+}
+
+impl LfsBaselineRepo {
+    pub fn init(dir: &Path, model_path: &str) -> Result<LfsBaselineRepo> {
+        crate::init();
+        let repo = Repository::init(dir)?;
+        Attributes::add_line(repo.worktree(), &format!("{model_path} filter=lfs"))?;
+        Ok(LfsBaselineRepo {
+            repo,
+            model_path: model_path.to_string(),
+        })
+    }
+
+    /// Write the checkpoint into the working tree (not timed).
+    pub fn write_model(&self, ck: &Checkpoint) -> Result<()> {
+        SafetensorsFormat.save_file(ck, &self.repo.worktree().join(&self.model_path))
+    }
+
+    /// `git add` the model (the timed clean-filter path).
+    pub fn add(&self) -> Result<()> {
+        self.repo.add(&[self.model_path.as_str()])
+    }
+
+    pub fn commit(&self, message: &str) -> Result<Oid> {
+        self.repo.commit(message, "bench <bench@localhost>")
+    }
+
+    /// `git checkout <rev>` (the timed smudge-filter path).
+    pub fn checkout(&self, rev: &str) -> Result<()> {
+        self.repo.checkout(rev)
+    }
+
+    /// Read the checked-out model back.
+    pub fn read_model(&self) -> Result<Checkpoint> {
+        SafetensorsFormat.load_file(&self.repo.worktree().join(&self.model_path))
+    }
+
+    /// Bytes in the LFS object store (the paper's per-commit "Size").
+    pub fn storage_bytes(&self) -> Result<u64> {
+        LfsStore::open(self.repo.theta_dir()).disk_usage()
+    }
+}
+
+/// Same workflow driven through Git-Theta.
+pub struct ThetaRepo {
+    pub repo: Repository,
+    pub model_path: String,
+}
+
+impl ThetaRepo {
+    pub fn init(dir: &Path, model_path: &str) -> Result<ThetaRepo> {
+        crate::init();
+        let repo = Repository::init(dir)?;
+        crate::theta::track(&repo, model_path)?;
+        Ok(ThetaRepo {
+            repo,
+            model_path: model_path.to_string(),
+        })
+    }
+
+    pub fn write_model(&self, ck: &Checkpoint) -> Result<()> {
+        SafetensorsFormat.save_file(ck, &self.repo.worktree().join(&self.model_path))
+    }
+
+    pub fn add(&self) -> Result<()> {
+        self.repo.add(&[self.model_path.as_str()])
+    }
+
+    pub fn commit(&self, message: &str) -> Result<Oid> {
+        self.repo.commit(message, "bench <bench@localhost>")
+    }
+
+    pub fn checkout(&self, rev: &str) -> Result<()> {
+        self.repo.checkout(rev)
+    }
+
+    pub fn read_model(&self) -> Result<Checkpoint> {
+        SafetensorsFormat.load_file(&self.repo.worktree().join(&self.model_path))
+    }
+
+    pub fn storage_bytes(&self) -> Result<u64> {
+        LfsStore::open(self.repo.theta_dir()).disk_usage()
+    }
+
+    /// Merge another branch with a strategy (paper: automatic merge).
+    pub fn merge_with_strategy(&self, branch: &str, strategy: &str) -> Result<Oid> {
+        let opts = crate::gitcore::drivers::MergeOptions {
+            strategy: Some(strategy.to_string()),
+            per_group: vec![],
+        };
+        let report = self.repo.merge(branch, &opts, "bench <bench@localhost>")?;
+        report.commit.ok_or_else(|| anyhow::anyhow!("merge produced no commit"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::tmp::TempDir;
+
+    fn ck(v: f32) -> Checkpoint {
+        let mut c = Checkpoint::new();
+        c.insert("w", Tensor::from_f32(vec![100], vec![v; 100]).unwrap());
+        c
+    }
+
+    #[test]
+    fn lfs_baseline_stores_full_copy_per_version() {
+        let td = TempDir::new("base").unwrap();
+        let b = LfsBaselineRepo::init(td.path(), "m.safetensors").unwrap();
+        b.write_model(&ck(1.0)).unwrap();
+        b.add().unwrap();
+        b.commit("v1").unwrap();
+        let s1 = b.storage_bytes().unwrap();
+        b.write_model(&ck(2.0)).unwrap();
+        b.add().unwrap();
+        b.commit("v2").unwrap();
+        let s2 = b.storage_bytes().unwrap();
+        // Storage doubles: each version is a whole blob.
+        assert!(s2 >= 2 * s1 - 16, "s1={s1} s2={s2}");
+        assert_eq!(b.read_model().unwrap(), ck(2.0));
+    }
+
+    #[test]
+    fn theta_repo_shares_unchanged_groups() {
+        let td = TempDir::new("theta").unwrap();
+        let t = ThetaRepo::init(td.path(), "m.safetensors").unwrap();
+        t.write_model(&ck(1.0)).unwrap();
+        t.add().unwrap();
+        let c1 = t.commit("v1").unwrap();
+        let s1 = t.storage_bytes().unwrap();
+        // Identical re-add: no new storage.
+        t.write_model(&ck(1.0)).unwrap();
+        t.add().unwrap();
+        let c2 = t.commit("v2 (noop)").unwrap();
+        assert_eq!(c1, c2); // empty commit skipped
+        assert_eq!(t.storage_bytes().unwrap(), s1);
+    }
+}

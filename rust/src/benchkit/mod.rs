@@ -1,0 +1,149 @@
+//! Benchmark harness (criterion substitute) + the paper's workloads.
+//!
+//! [`Timer`]/[`Stats`] provide warmup + repeated measurement;
+//! [`workflow`] implements the paper's six-commit community development
+//! workflow (§4) over both Git LFS and Git-Theta; `benches/*.rs` are
+//! thin `harness = false` wrappers that print each paper table/figure.
+
+pub mod figure3;
+pub mod workflow;
+
+use anyhow::Result;
+use std::time::Instant;
+
+/// Summary statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|s| (s - m) * (s - m))
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        var.sqrt()
+    }
+}
+
+/// Time a closure `samples` times after `warmup` runs.
+pub fn time_n<F: FnMut() -> Result<()>>(warmup: usize, samples: usize, mut f: F) -> Result<Stats> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f()?;
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(Stats { samples: out })
+}
+
+/// Time a closure once, returning (elapsed seconds, result).
+pub fn time_once<T, F: FnOnce() -> Result<T>>(f: F) -> Result<(f64, T)> {
+    let t0 = Instant::now();
+    let v = f()?;
+    Ok((t0.elapsed().as_secs_f64(), v))
+}
+
+/// Render an aligned text table (the benches print paper-style rows).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, cell) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<w$} | ", cell, w = widths[i]));
+        }
+        line.trim_end().to_string() + "\n"
+    };
+    let header_cells: Vec<String> = headers.iter().map(|h| h.to_string()).collect();
+    out.push_str(&fmt_row(&header_cells, &widths));
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&"-".repeat(w + 2));
+        sep.push('|');
+    }
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// `git-theta bench <name>` entry point.
+pub fn cli_bench(args: &[String]) -> Result<()> {
+    let name = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match name {
+        "table1" => workflow::run_table1_cli(&args[1..]),
+        "figure2" => workflow::run_figure2_cli(&args[1..]),
+        "figure3" => figure3::run_figure3_cli(&args[1..]),
+        _ => {
+            println!(
+                "benchmarks: table1, figure2, figure3 (full set lives in `cargo bench`)\n\
+                 env: THETA_BENCH_PARAMS=<millions> scales the model"
+            );
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats {
+            samples: vec![1.0, 2.0, 3.0],
+        };
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert!(s.stddev() > 0.0);
+    }
+
+    #[test]
+    fn time_n_counts_samples() {
+        let s = time_n(1, 5, || Ok(())).unwrap();
+        assert_eq!(s.samples.len(), 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["Commit", "Metric", "Git LFS", "Git-Theta"],
+            &[
+                vec!["Add T0".into(), "add".into(), "2m".into(), "14m".into()],
+                vec!["CB LoRA".into(), "Size".into(), "11.4GB".into(), "0.27GB".into()],
+            ],
+        );
+        assert!(t.contains("| Commit"));
+        assert!(t.lines().count() == 4);
+    }
+}

@@ -1,0 +1,499 @@
+//! The paper's §4 benchmark workflow: a community development history
+//! replayed over Git LFS (baseline) and Git-Theta.
+//!
+//! Paper workflow on T0-3B, scaled to a synthetic transformer here:
+//! 1. **Add T0 3B** — commit the pre-trained base checkpoint.
+//! 2. **Train on CB with LoRA** — low-rank updates to q/v projections.
+//! 3. **Fine-Tune on RTE** — full fine-tune on a new branch.
+//! 4. **Fine-Tune on ANLI** — full fine-tune on main.
+//! 5. **Merge by averaging parameters** — `git merge` (Git-Theta merges
+//!    natively; Git LFS commits an externally-merged checkpoint, as in
+//!    the paper).
+//! 6. **Remove sentinels** — trim sentinel rows from the embedding.
+//!
+//! For every commit we measure the paper's three metrics: `add`
+//! wall-clock (clean filter), `checkout` wall-clock (smudge filter),
+//! and the on-disk size of newly stored objects.
+
+use crate::baseline::{LfsBaselineRepo, ThetaRepo};
+use crate::benchkit::{render_table, time_once};
+use crate::checkpoint::Checkpoint;
+use crate::tensor::{bf16_to_f32, f32_to_bf16, weighted_average, Tensor};
+use crate::util::humansize;
+use crate::util::rng::Pcg64;
+use crate::util::tmp::TempDir;
+use anyhow::{Context, Result};
+
+/// Synthetic transformer configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelConfig {
+    pub d_model: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    /// Sentinel rows appended to the embedding (removed by commit 6).
+    pub sentinels: usize,
+}
+
+impl ModelConfig {
+    /// Default benchmark scale (~15M params), overridable with
+    /// `THETA_BENCH_PARAMS` (target millions of parameters).
+    pub fn from_env() -> ModelConfig {
+        let target_m: f64 = std::env::var("THETA_BENCH_PARAMS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(15.0);
+        ModelConfig::with_target_params((target_m * 1e6) as usize)
+    }
+
+    /// Pick dimensions for a rough parameter target.
+    pub fn with_target_params(target: usize) -> ModelConfig {
+        // params ≈ vocab·d + layers·12·d²; fix layers=4, vocab=16·d.
+        let layers = 4usize;
+        let mut d = 64usize;
+        while (ModelConfig { d_model: d * 2, layers, vocab: d * 32, sentinels: 100 }).param_count()
+            <= target
+        {
+            d *= 2;
+        }
+        ModelConfig {
+            d_model: d,
+            layers,
+            vocab: d * 16,
+            sentinels: 100,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        (self.vocab + self.sentinels) * d + self.layers * (4 * d * d + 8 * d * d + 2 * d)
+    }
+}
+
+/// Generate the synthetic pre-trained base checkpoint. Values are
+/// bf16-rounded f32 (the paper's T0-3B is "trained using bfloat16
+/// precision but distributed as a float32 checkpoint").
+pub fn base_model(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+    let mut rng = Pcg64::new(seed);
+    let mut ck = Checkpoint::new();
+    let d = cfg.d_model;
+    let tensor = |rng: &mut Pcg64, shape: Vec<usize>, sigma: f32| {
+        let n: usize = shape.iter().product();
+        let vals: Vec<f32> = (0..n)
+            .map(|_| bf16_to_f32(f32_to_bf16(rng.next_gaussian() as f32 * sigma)))
+            .collect();
+        Tensor::from_f32(shape, vals).unwrap()
+    };
+    ck.insert(
+        "embed/weight",
+        tensor(&mut rng, vec![cfg.vocab + cfg.sentinels, d], 0.02),
+    );
+    for l in 0..cfg.layers {
+        for name in ["q", "k", "v", "o"] {
+            ck.insert(
+                format!("block_{l}/attn/{name}"),
+                tensor(&mut rng, vec![d, d], 0.02),
+            );
+        }
+        ck.insert(format!("block_{l}/mlp/wi"), tensor(&mut rng, vec![d, 4 * d], 0.02));
+        ck.insert(format!("block_{l}/mlp/wo"), tensor(&mut rng, vec![4 * d, d], 0.02));
+        ck.insert(format!("block_{l}/ln1/scale"), tensor(&mut rng, vec![d], 0.01));
+        ck.insert(format!("block_{l}/ln2/scale"), tensor(&mut rng, vec![d], 0.01));
+    }
+    ck
+}
+
+/// LoRA-style update: add rank-r deltas to every q/v projection.
+pub fn lora_update(ck: &Checkpoint, cfg: &ModelConfig, rank: usize, seed: u64) -> Checkpoint {
+    let mut rng = Pcg64::new(seed);
+    let mut out = ck.clone();
+    for l in 0..cfg.layers {
+        for name in ["q", "v"] {
+            let key = format!("block_{l}/attn/{name}");
+            let w = ck.get(&key).unwrap();
+            let (m, n) = (w.shape()[0], w.shape()[1]);
+            let a: Vec<f64> = (0..m * rank).map(|_| rng.next_gaussian() * 0.004).collect();
+            let b: Vec<f64> = (0..rank * n).map(|_| rng.next_gaussian() * 0.004).collect();
+            let wv = w.to_f32_vec().unwrap();
+            let mut nv = vec![0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0f64;
+                    for k in 0..rank {
+                        acc += a[i * rank + k] * b[k * n + j];
+                    }
+                    nv[i * n + j] = (wv[i * n + j] as f64 + acc) as f32;
+                }
+            }
+            out.insert(key, Tensor::from_f32(vec![m, n], nv).unwrap());
+        }
+    }
+    out
+}
+
+/// Full fine-tune: perturb every parameter (bf16-rounded).
+pub fn fine_tune(ck: &Checkpoint, seed: u64, sigma: f32) -> Checkpoint {
+    let mut rng = Pcg64::new(seed);
+    let mut out = Checkpoint::new();
+    for (name, t) in ck.iter() {
+        let vals: Vec<f32> = t
+            .to_f32_vec()
+            .unwrap()
+            .iter()
+            .map(|&v| bf16_to_f32(f32_to_bf16(v + rng.next_gaussian() as f32 * sigma)))
+            .collect();
+        out.insert(name.clone(), Tensor::from_f32(t.shape().to_vec(), vals).unwrap());
+    }
+    out
+}
+
+/// External parameter-average (what the LFS baseline must do off-line).
+pub fn average_models(a: &Checkpoint, b: &Checkpoint) -> Checkpoint {
+    let mut out = Checkpoint::new();
+    for (name, ta) in a.iter() {
+        let tb = b.get(name).expect("models share parameter groups");
+        out.insert(name.clone(), weighted_average(&[ta, tb], &[1.0, 1.0]).unwrap());
+    }
+    out
+}
+
+/// Remove the sentinel rows from the embedding (paper commit 6).
+pub fn remove_sentinels(ck: &Checkpoint, cfg: &ModelConfig) -> Checkpoint {
+    let mut out = ck.clone();
+    let emb = ck.get("embed/weight").unwrap();
+    out.insert("embed/weight", emb.take_rows(cfg.vocab).unwrap());
+    out
+}
+
+/// One measured commit row.
+#[derive(Debug, Clone)]
+pub struct CommitMeasurement {
+    pub name: &'static str,
+    pub add_secs: f64,
+    pub checkout_secs: f64,
+    /// Bytes of new objects stored by this commit.
+    pub size_bytes: u64,
+}
+
+/// Full result of one system's run over the workflow.
+#[derive(Debug, Clone)]
+pub struct WorkflowResult {
+    pub system: &'static str,
+    pub commits: Vec<CommitMeasurement>,
+    pub total_bytes: u64,
+}
+
+pub const COMMIT_NAMES: [&str; 6] = [
+    "Add base model",
+    "Train on CB with LoRA",
+    "Fine-Tune on RTE",
+    "Fine-Tune on ANLI",
+    "Merge by averaging parameters",
+    "Remove sentinels",
+];
+
+/// The six model versions of the workflow, in commit order, plus the
+/// branch structure implied (RTE is authored on a side branch).
+pub struct WorkflowModels {
+    pub base: Checkpoint,
+    pub cb_lora: Checkpoint,
+    pub rte: Checkpoint,
+    pub anli: Checkpoint,
+    pub merged: Checkpoint,
+    pub trimmed: Checkpoint,
+}
+
+pub fn build_models(cfg: &ModelConfig, seed: u64) -> WorkflowModels {
+    let base = base_model(cfg, seed);
+    let cb_lora = lora_update(&base, cfg, 16, seed + 1);
+    let rte = fine_tune(&cb_lora, seed + 2, 1e-3);
+    let anli = fine_tune(&cb_lora, seed + 3, 1e-3);
+    let merged = average_models(&anli, &rte);
+    let trimmed = remove_sentinels(&merged, cfg);
+    WorkflowModels {
+        base,
+        cb_lora,
+        rte,
+        anli,
+        merged,
+        trimmed,
+    }
+}
+
+/// Run the workflow through the Git LFS baseline (linear history; the
+/// merge is performed externally, as the paper does for LFS).
+pub fn run_lfs_workflow(models: &WorkflowModels) -> Result<WorkflowResult> {
+    let td = TempDir::new("bench-lfs")?;
+    let repo = LfsBaselineRepo::init(td.path(), "model.safetensors")?;
+    let sequence = [
+        &models.base,
+        &models.cb_lora,
+        &models.rte,
+        &models.anli,
+        &models.merged,
+        &models.trimmed,
+    ];
+    let mut commits = Vec::new();
+    let mut prev_size = 0u64;
+    let mut prev_commit: Option<crate::gitcore::object::Oid> = None;
+    for (i, ck) in sequence.iter().enumerate() {
+        repo.write_model(ck)?;
+        let (add_secs, _) = time_once(|| repo.add())?;
+        let commit = repo.commit(COMMIT_NAMES[i])?;
+        let size = repo.storage_bytes()?;
+        // Time checkout of this commit starting from the previous one.
+        let checkout_secs = match prev_commit {
+            Some(prev) => {
+                repo.checkout(&prev.to_hex())?;
+                let (t, _) = time_once(|| repo.checkout(&commit.to_hex()))?;
+                t
+            }
+            None => {
+                // First commit: re-checkout itself after clearing the file.
+                std::fs::remove_file(repo.repo.worktree().join(&repo.model_path))?;
+                let (t, _) = time_once(|| repo.checkout(&commit.to_hex()))?;
+                t
+            }
+        };
+        commits.push(CommitMeasurement {
+            name: COMMIT_NAMES[i],
+            add_secs,
+            checkout_secs,
+            size_bytes: size - prev_size,
+        });
+        prev_size = size;
+        prev_commit = Some(commit);
+    }
+    Ok(WorkflowResult {
+        system: "Git LFS",
+        commits,
+        total_bytes: prev_size,
+    })
+}
+
+/// Run the workflow through Git-Theta with real branching and a native
+/// `git merge --strategy average`.
+pub fn run_theta_workflow(models: &WorkflowModels) -> Result<WorkflowResult> {
+    let td = TempDir::new("bench-theta")?;
+    let repo = ThetaRepo::init(td.path(), "model.safetensors")?;
+    let mut commits: Vec<CommitMeasurement> = Vec::new();
+    let mut prev_size = 0u64;
+    let mut measure = |repo: &ThetaRepo,
+                       name: &'static str,
+                       add_secs: f64,
+                       commit: crate::gitcore::object::Oid,
+                       prev_commit: Option<crate::gitcore::object::Oid>|
+     -> Result<CommitMeasurement> {
+        let size = repo.storage_bytes()?;
+        let checkout_secs = match prev_commit {
+            Some(prev) => {
+                repo.checkout(&prev.to_hex())?;
+                let (t, _) = time_once(|| repo.checkout(&commit.to_hex()))?;
+                t
+            }
+            None => {
+                std::fs::remove_file(repo.repo.worktree().join(&repo.model_path))?;
+                let (t, _) = time_once(|| repo.checkout(&commit.to_hex()))?;
+                t
+            }
+        };
+        let m = CommitMeasurement {
+            name,
+            add_secs,
+            checkout_secs,
+            size_bytes: size - prev_size,
+        };
+        prev_size = size;
+        Ok(m)
+    };
+
+    // 1. Add base.
+    repo.write_model(&models.base)?;
+    let (t_add, _) = time_once(|| repo.add())?;
+    let c1 = repo.commit(COMMIT_NAMES[0])?;
+    commits.push(measure(&repo, COMMIT_NAMES[0], t_add, c1, None)?);
+    repo.checkout(&c1.to_hex())?;
+    repo.checkout("main")?;
+
+    // 2. LoRA on CB (main).
+    repo.write_model(&models.cb_lora)?;
+    let (t_add, _) = time_once(|| repo.add())?;
+    let c2 = repo.commit(COMMIT_NAMES[1])?;
+    commits.push(measure(&repo, COMMIT_NAMES[1], t_add, c2, Some(c1))?);
+    repo.checkout("main")?;
+
+    // 3. RTE on a side branch.
+    repo.repo.create_branch("rte")?;
+    repo.checkout("rte")?;
+    repo.write_model(&models.rte)?;
+    let (t_add, _) = time_once(|| repo.add())?;
+    let c3 = repo.commit(COMMIT_NAMES[2])?;
+    commits.push(measure(&repo, COMMIT_NAMES[2], t_add, c3, Some(c2))?);
+
+    // 4. ANLI on main.
+    repo.checkout("main")?;
+    repo.write_model(&models.anli)?;
+    let (t_add, _) = time_once(|| repo.add())?;
+    let c4 = repo.commit(COMMIT_NAMES[3])?;
+    commits.push(measure(&repo, COMMIT_NAMES[3], t_add, c4, Some(c3))?);
+    repo.checkout("main")?;
+
+    // 5. Native merge with parameter averaging. The paper reports `add`
+    //    for LFS's externally-merged checkpoint; for Git-Theta the merge
+    //    driver does the equivalent work, so we time the merge itself.
+    let (t_merge, c5) = time_once(|| repo.merge_with_strategy("rte", "average"))?;
+    commits.push(measure(&repo, COMMIT_NAMES[4], t_merge, c5, Some(c4))?);
+    repo.checkout("main")?;
+
+    // 6. Remove sentinels.
+    repo.write_model(&models.trimmed)?;
+    let (t_add, _) = time_once(|| repo.add())?;
+    let c6 = repo.commit(COMMIT_NAMES[5])?;
+    commits.push(measure(&repo, COMMIT_NAMES[5], t_add, c6, Some(c5))?);
+
+    Ok(WorkflowResult {
+        system: "Git-Theta",
+        commits,
+        total_bytes: prev_size,
+    })
+}
+
+/// Render Table 1 from two workflow results.
+pub fn render_table1(lfs: &WorkflowResult, theta: &WorkflowResult) -> String {
+    let mut rows = Vec::new();
+    for (l, t) in lfs.commits.iter().zip(&theta.commits) {
+        rows.push(vec![
+            l.name.to_string(),
+            "add".into(),
+            humansize::duration(l.add_secs),
+            humansize::duration(t.add_secs),
+        ]);
+        rows.push(vec![
+            String::new(),
+            "checkout".into(),
+            humansize::duration(l.checkout_secs),
+            humansize::duration(t.checkout_secs),
+        ]);
+        rows.push(vec![
+            String::new(),
+            "Size".into(),
+            humansize::bytes(l.size_bytes),
+            humansize::bytes(t.size_bytes),
+        ]);
+    }
+    rows.push(vec![
+        "Total".into(),
+        "Size".into(),
+        humansize::bytes(lfs.total_bytes),
+        humansize::bytes(theta.total_bytes),
+    ]);
+    render_table(&["Commit", "Metric", "Git LFS", "Git-Theta"], &rows)
+}
+
+/// Figure 2 series: relative space saving per commit.
+pub fn figure2_series(lfs: &WorkflowResult, theta: &WorkflowResult) -> Vec<(String, f64)> {
+    lfs.commits
+        .iter()
+        .zip(&theta.commits)
+        .map(|(l, t)| {
+            let saving = 1.0 - t.size_bytes as f64 / l.size_bytes.max(1) as f64;
+            (l.name.to_string(), saving)
+        })
+        .collect()
+}
+
+/// Render Figure 2 as an ASCII bar chart.
+pub fn render_figure2(series: &[(String, f64)]) -> String {
+    let mut out = String::from("Relative space saving of Git-Theta over Git LFS\n");
+    for (name, saving) in series {
+        let pct = saving * 100.0;
+        let bars = "#".repeat(((pct.max(0.0) / 2.0) as usize).min(50));
+        out.push_str(&format!("{name:<32} {pct:>7.2}% |{bars}\n"));
+    }
+    out
+}
+
+pub fn run_table1_cli(_args: &[String]) -> Result<()> {
+    let cfg = ModelConfig::from_env();
+    eprintln!(
+        "workflow model: d={} layers={} vocab={} (+{} sentinels) = {:.1}M params",
+        cfg.d_model,
+        cfg.layers,
+        cfg.vocab,
+        cfg.sentinels,
+        cfg.param_count() as f64 / 1e6
+    );
+    let models = build_models(&cfg, 42);
+    let lfs = run_lfs_workflow(&models).context("lfs workflow")?;
+    let theta = run_theta_workflow(&models).context("theta workflow")?;
+    println!("{}", render_table1(&lfs, &theta));
+    Ok(())
+}
+
+pub fn run_figure2_cli(_args: &[String]) -> Result<()> {
+    let cfg = ModelConfig::from_env();
+    let models = build_models(&cfg, 42);
+    let lfs = run_lfs_workflow(&models)?;
+    let theta = run_theta_workflow(&models)?;
+    println!("{}", render_figure2(&figure2_series(&lfs, &theta)));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            d_model: 32,
+            layers: 2,
+            vocab: 128,
+            sentinels: 16,
+        }
+    }
+
+    #[test]
+    fn model_config_scaling() {
+        let cfg = ModelConfig::with_target_params(15_000_000);
+        let p = cfg.param_count();
+        assert!(p > 2_000_000 && p < 16_000_000, "params {p}");
+    }
+
+    #[test]
+    fn workflow_models_are_consistent() {
+        let cfg = tiny_cfg();
+        let m = build_models(&cfg, 1);
+        assert_eq!(m.base.len(), m.cb_lora.len());
+        // LoRA only touches q/v.
+        assert_eq!(m.base.get("block_0/attn/k"), m.cb_lora.get("block_0/attn/k"));
+        assert_ne!(m.base.get("block_0/attn/q"), m.cb_lora.get("block_0/attn/q"));
+        // Trim removed sentinel rows.
+        assert_eq!(
+            m.trimmed.get("embed/weight").unwrap().shape()[0],
+            cfg.vocab
+        );
+    }
+
+    #[test]
+    fn end_to_end_tiny_workflow() {
+        let cfg = tiny_cfg();
+        let models = build_models(&cfg, 2);
+        let lfs = run_lfs_workflow(&models).unwrap();
+        let theta = run_theta_workflow(&models).unwrap();
+        assert_eq!(lfs.commits.len(), 6);
+        assert_eq!(theta.commits.len(), 6);
+
+        // The paper's qualitative claims, at tiny scale:
+        // LoRA commit: theta stores far less than LFS.
+        assert!(theta.commits[1].size_bytes * 4 < lfs.commits[1].size_bytes);
+        // Trim commit: theta stores almost nothing.
+        assert!(theta.commits[5].size_bytes * 10 < lfs.commits[5].size_bytes);
+        // Total: theta smaller overall.
+        assert!(theta.total_bytes < lfs.total_bytes);
+
+        let table = render_table1(&lfs, &theta);
+        assert!(table.contains("Train on CB with LoRA"));
+        let fig2 = figure2_series(&lfs, &theta);
+        assert_eq!(fig2.len(), 6);
+        assert!(fig2[1].1 > 0.5, "LoRA saving {:?}", fig2[1]);
+    }
+}

@@ -1,0 +1,111 @@
+//! Checkpoint abstraction: framework-native file ⇄ named parameter groups.
+//!
+//! Mirrors the paper's `Checkpoint` plug-in type: "Checkpoints are
+//! responsible for loading a framework-native checkpoint file into a
+//! standardized format in memory, identifying parameter groups, and
+//! saving in-memory models back onto disk in the same framework-native
+//! format." Two formats ship built-in — a safetensors-compatible format
+//! and a msgpack-framed native format — and new ones register through
+//! [`registry`].
+
+mod native;
+mod npz;
+mod registry;
+mod safetensors;
+
+pub use native::NativeFormat;
+pub use npz::NpzFormat;
+pub use registry::{detect_format, format_by_name, register_format, registered_formats, CheckpointFormat};
+pub use safetensors::SafetensorsFormat;
+
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+/// An in-memory model: ordered map of parameter-group name → tensor.
+///
+/// Names are flattened with `/` separators (e.g. `block_0/attn/q_proj`),
+/// matching how the paper's Checkpoint plug-ins flatten PyTorch state
+/// dicts and Flax pytrees.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    groups: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, tensor: Tensor) {
+        self.groups.insert(name.into(), tensor);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.groups.get(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.groups.remove(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.groups.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.groups.keys()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.groups.iter()
+    }
+
+    pub fn into_iter_groups(self) -> impl Iterator<Item = (String, Tensor)> {
+        self.groups.into_iter()
+    }
+
+    /// Total parameter count across groups.
+    pub fn total_params(&self) -> usize {
+        self.groups.values().map(|t| t.numel()).sum()
+    }
+
+    /// Total in-memory byte size across groups.
+    pub fn total_bytes(&self) -> usize {
+        self.groups.values().map(|t| t.nbytes()).sum()
+    }
+}
+
+impl FromIterator<(String, Tensor)> for Checkpoint {
+    fn from_iter<T: IntoIterator<Item = (String, Tensor)>>(iter: T) -> Self {
+        Checkpoint {
+            groups: iter.into_iter().collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn basic_map_ops() {
+        let mut ck = Checkpoint::new();
+        ck.insert("layer0/w", Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap());
+        ck.insert("layer0/b", Tensor::from_f32(vec![2], vec![0., 0.]).unwrap());
+        assert_eq!(ck.len(), 2);
+        assert_eq!(ck.total_params(), 6);
+        assert_eq!(ck.total_bytes(), 24);
+        assert!(ck.contains("layer0/w"));
+        let names: Vec<_> = ck.names().cloned().collect();
+        assert_eq!(names, vec!["layer0/b", "layer0/w"]); // sorted
+    }
+}

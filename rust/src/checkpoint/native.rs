@@ -1,0 +1,121 @@
+//! Native msgpack-framed checkpoint format (`.theta` extension).
+//!
+//! A compact format for tests and tooling: a msgpack map
+//! `{"version": 1, "tensors": {name: {"dtype", "shape", "data"}}}`.
+
+use super::registry::CheckpointFormat;
+use super::Checkpoint;
+use crate::tensor::{DType, Tensor};
+use crate::util::msgpack::Mp;
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 6] = b"THETA\x01";
+
+/// The native format plug-in.
+#[derive(Debug, Default)]
+pub struct NativeFormat;
+
+impl CheckpointFormat for NativeFormat {
+    fn name(&self) -> &'static str {
+        "theta-native"
+    }
+
+    fn extensions(&self) -> &'static [&'static str] {
+        &["theta"]
+    }
+
+    fn sniff(&self, prefix: &[u8]) -> bool {
+        prefix.starts_with(MAGIC)
+    }
+
+    fn load_bytes(&self, bytes: &[u8]) -> Result<Checkpoint> {
+        if !bytes.starts_with(MAGIC) {
+            bail!("native: missing THETA magic");
+        }
+        let root = Mp::decode(&bytes[MAGIC.len()..]).context("native: bad msgpack")?;
+        let version = root
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .context("native: missing version")?;
+        if version != 1 {
+            bail!("native: unsupported version {version}");
+        }
+        let tensors = match root.get("tensors") {
+            Some(Mp::Map(entries)) => entries,
+            _ => bail!("native: missing tensors map"),
+        };
+        let mut ck = Checkpoint::new();
+        for (name, entry) in tensors {
+            let dtype_name = entry
+                .get("dtype")
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("native: tensor '{name}' missing dtype"))?;
+            let dtype =
+                DType::parse(dtype_name).with_context(|| format!("native: bad dtype '{dtype_name}'"))?;
+            let shape: Vec<usize> = entry
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .with_context(|| format!("native: tensor '{name}' missing shape"))?
+                .iter()
+                .map(|d| d.as_u64().map(|v| v as usize).context("bad dim"))
+                .collect::<Result<_>>()?;
+            let data = entry
+                .get("data")
+                .and_then(|v| v.as_bin())
+                .with_context(|| format!("native: tensor '{name}' missing data"))?;
+            ck.insert(
+                name.clone(),
+                Tensor::from_bytes(dtype, shape, data.to_vec())
+                    .with_context(|| format!("native: tensor '{name}'"))?,
+            );
+        }
+        Ok(ck)
+    }
+
+    fn save_bytes(&self, ck: &Checkpoint) -> Result<Vec<u8>> {
+        let tensors: Vec<(String, Mp)> = ck
+            .iter()
+            .map(|(name, t)| {
+                (
+                    name.clone(),
+                    Mp::map_from(vec![
+                        ("dtype", Mp::Str(t.dtype().name().to_string())),
+                        (
+                            "shape",
+                            Mp::Arr(t.shape().iter().map(|&d| Mp::UInt(d as u64)).collect()),
+                        ),
+                        ("data", Mp::Bin(t.bytes().to_vec())),
+                    ]),
+                )
+            })
+            .collect();
+        let root = Mp::map_from(vec![
+            ("version", Mp::UInt(1)),
+            ("tensors", Mp::Map(tensors)),
+        ]);
+        let mut out = MAGIC.to_vec();
+        out.extend_from_slice(&root.encode());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap());
+        ck.insert("idx", Tensor::from_i64(vec![2], vec![5, -7]).unwrap());
+        let fmt = NativeFormat;
+        let bytes = fmt.save_bytes(&ck).unwrap();
+        assert!(fmt.sniff(&bytes));
+        assert_eq!(fmt.load_bytes(&bytes).unwrap(), ck);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        assert!(NativeFormat.load_bytes(b"NOTTHETA").is_err());
+    }
+}

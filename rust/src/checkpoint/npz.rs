@@ -1,0 +1,343 @@
+//! NumPy `.npz` checkpoint format plug-in (paper §6 future work:
+//! "supporting more Checkpoint types").
+//!
+//! An `.npz` is a ZIP archive of `.npy` members; flax/optax users
+//! commonly ship weights this way. Supports the dtypes in
+//! [`crate::tensor::DType`], little-endian, C-order; members may be
+//! stored (method 0) or deflated (method 8).
+
+use super::registry::CheckpointFormat;
+use super::Checkpoint;
+use crate::tensor::{DType, Tensor};
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+
+/// The npz format plug-in.
+#[derive(Debug, Default)]
+pub struct NpzFormat;
+
+fn dtype_to_descr(dt: DType) -> &'static str {
+    match dt {
+        DType::F64 => "<f8",
+        DType::F32 => "<f4",
+        DType::F16 => "<f2",
+        // NumPy has no native bf16; we borrow ml_dtypes' "bfloat16"
+        // spelling on write and accept <V2 on read is NOT safe, so bf16
+        // round-trips through our own descr tag.
+        DType::BF16 => "bfloat16",
+        DType::I64 => "<i8",
+        DType::I32 => "<i4",
+        DType::U8 => "|u1",
+        DType::Bool => "|b1",
+    }
+}
+
+fn descr_to_dtype(descr: &str) -> Option<DType> {
+    Some(match descr {
+        "<f8" | "f8" => DType::F64,
+        "<f4" | "f4" => DType::F32,
+        "<f2" | "f2" => DType::F16,
+        "bfloat16" => DType::BF16,
+        "<i8" | "i8" => DType::I64,
+        "<i4" | "i4" => DType::I32,
+        "|u1" | "u1" => DType::U8,
+        "|b1" | "b1" => DType::Bool,
+        _ => return None,
+    })
+}
+
+fn npy_bytes(t: &Tensor) -> Vec<u8> {
+    let shape = t
+        .shape()
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    let shape = if t.shape().len() == 1 {
+        format!("({shape},)")
+    } else {
+        format!("({shape})")
+    };
+    let mut header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {shape}, }}",
+        dtype_to_descr(t.dtype())
+    );
+    // Pad so magic(6)+ver(2)+len(2)+header is a multiple of 64.
+    while (10 + header.len() + 1) % 64 != 0 {
+        header.push(' ');
+    }
+    header.push('\n');
+    let mut out = Vec::with_capacity(10 + header.len() + t.nbytes());
+    out.extend_from_slice(b"\x93NUMPY\x01\x00");
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(t.bytes());
+    out
+}
+
+fn parse_npy(bytes: &[u8]) -> Result<Tensor> {
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        bail!("npy: bad magic");
+    }
+    let (hlen, body_at) = match bytes[6] {
+        1 => (
+            u16::from_le_bytes(bytes[8..10].try_into().unwrap()) as usize,
+            10usize,
+        ),
+        2 | 3 => (
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize,
+            12usize,
+        ),
+        v => bail!("npy: unsupported version {v}"),
+    };
+    let header = std::str::from_utf8(&bytes[body_at..body_at + hlen])
+        .context("npy: header not utf-8")?;
+
+    let grab = |key: &str| -> Option<&str> {
+        let at = header.find(key)?;
+        let rest = &header[at + key.len()..];
+        let rest = rest.trim_start_matches([':', ' ']);
+        Some(rest)
+    };
+    let descr_raw = grab("'descr'").context("npy: missing descr")?;
+    let descr = descr_raw
+        .trim_start_matches('\'')
+        .split('\'')
+        .next()
+        .unwrap_or("");
+    let dtype = descr_to_dtype(descr)
+        .with_context(|| format!("npy: unsupported descr '{descr}'"))?;
+    if grab("'fortran_order'")
+        .map(|v| v.starts_with("True"))
+        .unwrap_or(false)
+    {
+        bail!("npy: fortran order unsupported");
+    }
+    let shape_raw = grab("'shape'").context("npy: missing shape")?;
+    let inside = shape_raw
+        .trim_start_matches('(')
+        .split(')')
+        .next()
+        .unwrap_or("");
+    let shape: Vec<usize> = inside
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().context("npy: bad dim"))
+        .collect::<Result<_>>()?;
+    let data = &bytes[body_at + hlen..];
+    let want = shape.iter().product::<usize>() * dtype.size();
+    if data.len() < want {
+        bail!("npy: truncated data");
+    }
+    Ok(Tensor::from_bytes(dtype, shape, data[..want].to_vec())?)
+}
+
+// --- minimal ZIP (store + deflate) ---------------------------------------
+
+struct ZipMember {
+    name: String,
+    data: Vec<u8>,
+}
+
+fn crc32(data: &[u8]) -> u32 {
+    let mut h = flate2::Crc::new();
+    h.update(data);
+    h.sum()
+}
+
+fn write_zip(members: &[ZipMember]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut central = Vec::new();
+    for m in members {
+        let offset = out.len() as u32;
+        let crc = crc32(&m.data);
+        let name = m.name.as_bytes();
+        // Local file header, method 0 (stored).
+        out.extend_from_slice(&0x04034b50u32.to_le_bytes());
+        out.extend_from_slice(&20u16.to_le_bytes()); // version
+        out.extend_from_slice(&0u16.to_le_bytes()); // flags
+        out.extend_from_slice(&0u16.to_le_bytes()); // method: store
+        out.extend_from_slice(&0u32.to_le_bytes()); // dos time/date
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&(m.data.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(m.data.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        out.extend_from_slice(name);
+        out.extend_from_slice(&m.data);
+
+        central.extend_from_slice(&0x02014b50u32.to_le_bytes());
+        central.extend_from_slice(&20u16.to_le_bytes()); // version made by
+        central.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        central.extend_from_slice(&0u16.to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes());
+        central.extend_from_slice(&0u32.to_le_bytes());
+        central.extend_from_slice(&crc.to_le_bytes());
+        central.extend_from_slice(&(m.data.len() as u32).to_le_bytes());
+        central.extend_from_slice(&(m.data.len() as u32).to_le_bytes());
+        central.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes());
+        central.extend_from_slice(&0u32.to_le_bytes());
+        central.extend_from_slice(&offset.to_le_bytes());
+        central.extend_from_slice(name);
+    }
+    let central_offset = out.len() as u32;
+    out.extend_from_slice(&central);
+    // End of central directory.
+    out.extend_from_slice(&0x06054b50u32.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&(members.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(members.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(central.len() as u32).to_le_bytes());
+    out.extend_from_slice(&central_offset.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out
+}
+
+fn read_zip(bytes: &[u8]) -> Result<Vec<ZipMember>> {
+    // Find end-of-central-directory (scan back; no zip comments expected).
+    let eocd = bytes
+        .windows(4)
+        .rposition(|w| w == 0x06054b50u32.to_le_bytes())
+        .context("zip: no end-of-central-directory")?;
+    if bytes.len() < eocd + 22 {
+        bail!("zip: truncated EOCD");
+    }
+    let count = u16::from_le_bytes(bytes[eocd + 10..eocd + 12].try_into().unwrap()) as usize;
+    let cd_offset = u32::from_le_bytes(bytes[eocd + 16..eocd + 20].try_into().unwrap()) as usize;
+
+    let mut members = Vec::with_capacity(count);
+    let mut pos = cd_offset;
+    for _ in 0..count {
+        if &bytes[pos..pos + 4] != 0x02014b50u32.to_le_bytes().as_slice() {
+            bail!("zip: bad central directory entry");
+        }
+        let method = u16::from_le_bytes(bytes[pos + 10..pos + 12].try_into().unwrap());
+        let csize = u32::from_le_bytes(bytes[pos + 20..pos + 24].try_into().unwrap()) as usize;
+        let usize_ = u32::from_le_bytes(bytes[pos + 24..pos + 28].try_into().unwrap()) as usize;
+        let nlen = u16::from_le_bytes(bytes[pos + 28..pos + 30].try_into().unwrap()) as usize;
+        let elen = u16::from_le_bytes(bytes[pos + 30..pos + 32].try_into().unwrap()) as usize;
+        let clen = u16::from_le_bytes(bytes[pos + 32..pos + 34].try_into().unwrap()) as usize;
+        let lho = u32::from_le_bytes(bytes[pos + 42..pos + 46].try_into().unwrap()) as usize;
+        let name = String::from_utf8(bytes[pos + 46..pos + 46 + nlen].to_vec())
+            .context("zip: member name not utf-8")?;
+        pos += 46 + nlen + elen + clen;
+
+        // Local header: re-read name/extra lengths (can differ from CD).
+        let lnlen = u16::from_le_bytes(bytes[lho + 26..lho + 28].try_into().unwrap()) as usize;
+        let lelen = u16::from_le_bytes(bytes[lho + 28..lho + 30].try_into().unwrap()) as usize;
+        let data_at = lho + 30 + lnlen + lelen;
+        let raw = &bytes[data_at..data_at + csize];
+        let data = match method {
+            0 => raw.to_vec(),
+            8 => {
+                let mut out = Vec::with_capacity(usize_);
+                flate2::read::DeflateDecoder::new(raw)
+                    .read_to_end(&mut out)
+                    .context("zip: inflate")?;
+                out
+            }
+            m => bail!("zip: unsupported compression method {m}"),
+        };
+        members.push(ZipMember { name, data });
+    }
+    Ok(members)
+}
+
+impl CheckpointFormat for NpzFormat {
+    fn name(&self) -> &'static str {
+        "npz"
+    }
+
+    fn extensions(&self) -> &'static [&'static str] {
+        &["npz"]
+    }
+
+    fn sniff(&self, prefix: &[u8]) -> bool {
+        prefix.starts_with(b"PK\x03\x04")
+    }
+
+    fn load_bytes(&self, bytes: &[u8]) -> Result<Checkpoint> {
+        let mut ck = Checkpoint::new();
+        for m in read_zip(bytes)? {
+            let name = m.name.strip_suffix(".npy").unwrap_or(&m.name);
+            ck.insert(
+                name.to_string(),
+                parse_npy(&m.data).with_context(|| format!("npz member '{}'", m.name))?,
+            );
+        }
+        Ok(ck)
+    }
+
+    fn save_bytes(&self, ck: &Checkpoint) -> Result<Vec<u8>> {
+        let members: Vec<ZipMember> = ck
+            .iter()
+            .map(|(name, t)| ZipMember {
+                name: format!("{name}.npy"),
+                data: npy_bytes(t),
+            })
+            .collect();
+        Ok(write_zip(&members))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        ck.insert(
+            "layer/w",
+            Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap(),
+        );
+        ck.insert("idx", Tensor::from_i64(vec![2], vec![-1, 99]).unwrap());
+        ck.insert(
+            "half",
+            Tensor::from_f32(vec![4], vec![0.5, 1.0, -2.0, 0.0])
+                .unwrap()
+                .cast(DType::F16)
+                .unwrap(),
+        );
+        ck
+    }
+
+    #[test]
+    fn roundtrip() {
+        let fmt = NpzFormat;
+        let bytes = fmt.save_bytes(&sample()).unwrap();
+        assert!(fmt.sniff(&bytes));
+        assert_eq!(fmt.load_bytes(&bytes).unwrap(), sample());
+    }
+
+    #[test]
+    fn numpy_compatible_npy_header() {
+        let t = Tensor::from_f32(vec![3], vec![1., 2., 3.]).unwrap();
+        let npy = npy_bytes(&t);
+        assert!(npy.starts_with(b"\x93NUMPY\x01\x00"));
+        let text = String::from_utf8_lossy(&npy[10..80]);
+        assert!(text.contains("'descr': '<f4'"), "{text}");
+        assert!(text.contains("'shape': (3,)"), "{text}");
+        assert_eq!(parse_npy(&npy).unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let fmt = NpzFormat;
+        assert!(fmt.load_bytes(b"not a zip").is_err());
+        let mut bytes = fmt.save_bytes(&sample()).unwrap();
+        bytes.truncate(bytes.len() / 2);
+        assert!(fmt.load_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn registered_in_registry() {
+        crate::init();
+        assert!(crate::checkpoint::format_by_name("npz").is_some());
+    }
+}

@@ -1,0 +1,137 @@
+//! Checkpoint format plug-in registry.
+//!
+//! Reproduces the paper's entry-point-based plug-in system: core code
+//! looks formats up by name or by file sniffing; users register
+//! additional formats at startup with [`register_format`].
+
+use super::{Checkpoint, NativeFormat, NpzFormat, SafetensorsFormat};
+use anyhow::{Context, Result};
+use once_cell::sync::Lazy;
+use std::path::Path;
+use std::sync::RwLock;
+
+/// A checkpoint format plug-in ("Checkpoint" in the paper's taxonomy).
+pub trait CheckpointFormat: Send + Sync {
+    /// Registry key (e.g. "safetensors").
+    fn name(&self) -> &'static str;
+
+    /// File extensions this format claims (without dots).
+    fn extensions(&self) -> &'static [&'static str];
+
+    /// Cheap content-based detection from the first bytes of a file.
+    fn sniff(&self, prefix: &[u8]) -> bool;
+
+    /// Parse a framework-native checkpoint into parameter groups.
+    fn load_bytes(&self, bytes: &[u8]) -> Result<Checkpoint>;
+
+    /// Serialize parameter groups back into the framework-native format.
+    fn save_bytes(&self, ck: &Checkpoint) -> Result<Vec<u8>>;
+
+    /// Load from a path (default: whole-file read).
+    fn load_file(&self, path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        self.load_bytes(&bytes)
+    }
+
+    /// Save to a path (default: whole-file write).
+    fn save_file(&self, ck: &Checkpoint, path: &Path) -> Result<()> {
+        let bytes = self.save_bytes(ck)?;
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+}
+
+static REGISTRY: Lazy<RwLock<Vec<&'static dyn CheckpointFormat>>> = Lazy::new(|| {
+    RwLock::new(vec![
+        &SafetensorsFormat as &'static dyn CheckpointFormat,
+        &NativeFormat as &'static dyn CheckpointFormat,
+        &NpzFormat as &'static dyn CheckpointFormat,
+    ])
+});
+
+/// Register a user-defined format plug-in (leaked to get 'static).
+pub fn register_format(fmt: Box<dyn CheckpointFormat>) {
+    REGISTRY.write().unwrap().push(Box::leak(fmt));
+}
+
+/// Look up a format by registry name.
+pub fn format_by_name(name: &str) -> Option<&'static dyn CheckpointFormat> {
+    REGISTRY.read().unwrap().iter().copied().find(|f| f.name() == name)
+}
+
+/// Names of all registered formats, in registration order.
+pub fn registered_formats() -> Vec<&'static str> {
+    REGISTRY.read().unwrap().iter().map(|f| f.name()).collect()
+}
+
+/// Pick a format for a file: extension first, then content sniffing.
+pub fn detect_format(path: &Path, prefix: &[u8]) -> Option<&'static dyn CheckpointFormat> {
+    let ext = path
+        .extension()
+        .and_then(|e| e.to_str())
+        .map(|e| e.to_ascii_lowercase());
+    let reg = REGISTRY.read().unwrap();
+    if let Some(ext) = &ext {
+        if let Some(f) = reg.iter().copied().find(|f| f.extensions().contains(&ext.as_str())) {
+            return Some(f);
+        }
+    }
+    reg.iter().copied().find(|f| f.sniff(prefix))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn builtin_formats_registered() {
+        assert!(format_by_name("safetensors").is_some());
+        assert!(format_by_name("theta-native").is_some());
+        assert!(format_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn detect_by_extension_and_content() {
+        let fmt = detect_format(Path::new("m.safetensors"), b"").unwrap();
+        assert_eq!(fmt.name(), "safetensors");
+        let fmt = detect_format(Path::new("m.theta"), b"").unwrap();
+        assert_eq!(fmt.name(), "theta-native");
+        // Unknown extension falls back to sniffing.
+        let mut ck = Checkpoint::new();
+        ck.insert("x", Tensor::from_f32(vec![1], vec![1.0]).unwrap());
+        let bytes = SafetensorsFormat.save_bytes(&ck).unwrap();
+        let fmt = detect_format(Path::new("m.bin"), &bytes[..16]).unwrap();
+        assert_eq!(fmt.name(), "safetensors");
+    }
+
+    #[test]
+    fn user_plugin_registration() {
+        #[derive(Debug)]
+        struct Dummy;
+        impl CheckpointFormat for Dummy {
+            fn name(&self) -> &'static str {
+                "dummy-fmt"
+            }
+            fn extensions(&self) -> &'static [&'static str] {
+                &["dummy"]
+            }
+            fn sniff(&self, _p: &[u8]) -> bool {
+                false
+            }
+            fn load_bytes(&self, _b: &[u8]) -> Result<Checkpoint> {
+                Ok(Checkpoint::new())
+            }
+            fn save_bytes(&self, _c: &Checkpoint) -> Result<Vec<u8>> {
+                Ok(vec![])
+            }
+        }
+        register_format(Box::new(Dummy));
+        assert!(format_by_name("dummy-fmt").is_some());
+        assert_eq!(
+            detect_format(Path::new("x.dummy"), b"").unwrap().name(),
+            "dummy-fmt"
+        );
+    }
+}

@@ -1,0 +1,181 @@
+//! Safetensors-compatible checkpoint format.
+//!
+//! Layout: `u64 le` header length, JSON header mapping tensor name →
+//! {dtype, shape, data_offsets}, then the raw little-endian tensor data.
+//! Interoperates with files produced by the `safetensors` Python package
+//! (and by `python/compile/` in this repo), which is how checkpoints move
+//! between the JAX build path and the Rust VCS.
+
+use super::registry::CheckpointFormat;
+use super::Checkpoint;
+use crate::tensor::{DType, Tensor};
+use crate::util::json::{Json, JsonObj};
+use anyhow::{bail, Context, Result};
+
+/// The safetensors format plug-in.
+#[derive(Debug, Default)]
+pub struct SafetensorsFormat;
+
+impl CheckpointFormat for SafetensorsFormat {
+    fn name(&self) -> &'static str {
+        "safetensors"
+    }
+
+    fn extensions(&self) -> &'static [&'static str] {
+        &["safetensors"]
+    }
+
+    fn sniff(&self, prefix: &[u8]) -> bool {
+        // Header length (u64) followed by '{' is a strong signal.
+        if prefix.len() < 9 {
+            return false;
+        }
+        let len = u64::from_le_bytes(prefix[..8].try_into().unwrap());
+        len > 0 && len < (1 << 33) && prefix[8] == b'{'
+    }
+
+    fn load_bytes(&self, bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < 8 {
+            bail!("safetensors: file shorter than header length field");
+        }
+        let header_len = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+        let header_end = 8usize
+            .checked_add(header_len)
+            .context("safetensors: header length overflow")?;
+        if bytes.len() < header_end {
+            bail!("safetensors: truncated header");
+        }
+        let header_text = std::str::from_utf8(&bytes[8..header_end])
+            .context("safetensors: header is not utf-8")?;
+        let header = Json::parse(header_text).context("safetensors: bad header json")?;
+        let obj = header
+            .as_obj()
+            .context("safetensors: header is not an object")?;
+        let data = &bytes[header_end..];
+
+        let mut ck = Checkpoint::new();
+        for (name, entry) in obj.iter() {
+            if name == "__metadata__" {
+                continue;
+            }
+            let dtype_name = entry
+                .get("dtype")
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("safetensors: tensor '{name}' missing dtype"))?;
+            let dtype = DType::parse(dtype_name)
+                .with_context(|| format!("safetensors: unsupported dtype '{dtype_name}'"))?;
+            let shape: Vec<usize> = entry
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .with_context(|| format!("safetensors: tensor '{name}' missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<_>>()?;
+            let offsets = entry
+                .get("data_offsets")
+                .and_then(|v| v.as_arr())
+                .with_context(|| format!("safetensors: tensor '{name}' missing data_offsets"))?;
+            if offsets.len() != 2 {
+                bail!("safetensors: tensor '{name}' has malformed data_offsets");
+            }
+            let begin = offsets[0].as_usize().context("bad offset")?;
+            let end = offsets[1].as_usize().context("bad offset")?;
+            if end < begin || end > data.len() {
+                bail!("safetensors: tensor '{name}' offsets out of range");
+            }
+            let tensor = Tensor::from_bytes(dtype, shape, data[begin..end].to_vec())
+                .with_context(|| format!("safetensors: tensor '{name}'"))?;
+            ck.insert(name.clone(), tensor);
+        }
+        Ok(ck)
+    }
+
+    fn save_bytes(&self, ck: &Checkpoint) -> Result<Vec<u8>> {
+        let mut header = JsonObj::new();
+        let mut offset = 0usize;
+        for (name, t) in ck.iter() {
+            let mut entry = JsonObj::new();
+            entry.insert("dtype", t.dtype().safetensors_name());
+            entry.insert(
+                "shape",
+                Json::Arr(t.shape().iter().map(|&d| Json::from(d)).collect()),
+            );
+            entry.insert(
+                "data_offsets",
+                Json::Arr(vec![Json::from(offset), Json::from(offset + t.nbytes())]),
+            );
+            header.insert(name.clone(), entry);
+            offset += t.nbytes();
+        }
+        let mut header_text = Json::Obj(header).to_string_compact();
+        // Pad header to 8-byte alignment with spaces (spec allows this and
+        // it aligns tensor data for zero-copy readers).
+        while (8 + header_text.len()) % 8 != 0 {
+            header_text.push(' ');
+        }
+
+        let mut out = Vec::with_capacity(8 + header_text.len() + offset);
+        out.extend_from_slice(&(header_text.len() as u64).to_le_bytes());
+        out.extend_from_slice(header_text.as_bytes());
+        for (_, t) in ck.iter() {
+            out.extend_from_slice(t.bytes());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        ck.insert("a/w", Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
+        ck.insert("a/b", Tensor::from_f32(vec![3], vec![-1., 0., 1.]).unwrap());
+        ck.insert(
+            "emb",
+            Tensor::from_f32(vec![4, 2], (0..8).map(|x| x as f32).collect())
+                .unwrap()
+                .cast(DType::BF16)
+                .unwrap(),
+        );
+        ck
+    }
+
+    #[test]
+    fn roundtrip() {
+        let fmt = SafetensorsFormat;
+        let bytes = fmt.save_bytes(&sample()).unwrap();
+        assert!(fmt.sniff(&bytes[..16]));
+        let back = fmt.load_bytes(&bytes).unwrap();
+        assert_eq!(back, sample());
+    }
+
+    #[test]
+    fn header_is_aligned() {
+        let bytes = SafetensorsFormat.save_bytes(&sample()).unwrap();
+        let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+        assert_eq!((8 + hlen) % 8, 0);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let fmt = SafetensorsFormat;
+        assert!(fmt.load_bytes(b"short").is_err());
+        let mut bytes = fmt.save_bytes(&sample()).unwrap();
+        bytes.truncate(bytes.len() - 4); // chop tensor data
+        assert!(fmt.load_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn skips_metadata_key() {
+        let header = r#"{"__metadata__":{"format":"pt"},"x":{"dtype":"F32","shape":[1],"data_offsets":[0,4]}}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        let ck = SafetensorsFormat.load_bytes(&bytes).unwrap();
+        assert_eq!(ck.len(), 1);
+        assert_eq!(ck.get("x").unwrap().to_f32_vec().unwrap(), vec![1.5]);
+    }
+}

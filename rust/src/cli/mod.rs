@@ -1,0 +1,401 @@
+//! The `git-theta` command-line interface.
+//!
+//! Hand-rolled subcommand parser (no clap in the offline vendor set).
+//! Mirrors the Git workflow from the paper:
+//!
+//! ```text
+//! git-theta init
+//! git-theta track model.safetensors      # paper: git theta track
+//! git-theta lfs-track '*.bin'            # baseline: whole-blob LFS
+//! git-theta add model.safetensors
+//! git-theta commit -m "Train on CB with LoRA"
+//! git-theta branch rte && git-theta checkout rte
+//! git-theta merge rte --strategy average
+//! git-theta diff HEAD~ HEAD              # parameter-group diff
+//! git-theta push /path/to/remote main
+//! ```
+
+use crate::gitcore::drivers::MergeOptions;
+use crate::gitcore::repo::Repository;
+use crate::util::humansize;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Entry point: parse args, dispatch, map errors to exit codes.
+pub fn run() -> i32 {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+/// Dispatch a parsed argument vector (testable without a process).
+pub fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    match cmd {
+        "init" => cmd_init(rest),
+        "track" => cmd_track(rest),
+        "lfs-track" => cmd_lfs_track(rest),
+        "add" => cmd_add(rest),
+        "commit" => cmd_commit(rest),
+        "status" => cmd_status(rest),
+        "log" => cmd_log(rest),
+        "diff" => cmd_diff(rest),
+        "checkout" => cmd_checkout(rest),
+        "branch" => cmd_branch(rest),
+        "merge" => cmd_merge(rest),
+        "push" => cmd_push(rest),
+        "pull" => cmd_pull(rest),
+        "clone" => cmd_clone(rest),
+        "config" => cmd_config(rest),
+        "fsck" => cmd_fsck(rest),
+        "bench" => crate::benchkit::cli_bench(rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{}", usage()),
+    }
+}
+
+fn usage() -> &'static str {
+    "git-theta — version control for ML models (Git-Theta reproduction)
+
+USAGE:
+  git-theta <command> [args]
+
+COMMANDS:
+  init [dir]                     create a repository
+  track <pattern>                track a checkpoint with Git-Theta
+  lfs-track <pattern>            track a file with plain LFS (baseline)
+  add <paths...>                 stage files (runs clean filters)
+  commit -m <msg> [--author a]   commit the index
+  status                         working tree status
+  log                            commit history
+  diff [<rev> [<rev>]]           diff (parameter-group aware)
+  checkout <rev|branch>          switch revisions (runs smudge filters)
+  branch [<name>]                list or create branches
+  merge <branch> [--strategy s] [--group glob=s]
+                                 merge a branch (s: average|us|them|ancestor)
+  push <remote-dir> [branch]     push commits + LFS objects
+  pull <remote-dir> [branch]     pull commits + metadata
+  clone <remote-dir> <dir>       clone a remote
+  config <key> [<value>]         get/set repo config (e.g. remote)
+  fsck                           verify object stores
+  bench <name>                   run paper benchmarks (see `bench help`)"
+}
+
+fn open_repo() -> Result<Repository> {
+    crate::init();
+    Repository::discover(Path::new("."))
+}
+
+fn cmd_init(args: &[String]) -> Result<()> {
+    let dir = args.first().map(PathBuf::from).unwrap_or_else(|| PathBuf::from("."));
+    std::fs::create_dir_all(&dir)?;
+    Repository::init(&dir)?;
+    println!(
+        "initialized empty theta repository in {}",
+        dir.join(".theta").display()
+    );
+    Ok(())
+}
+
+fn cmd_track(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let pattern = args.first().context("usage: git-theta track <pattern>")?;
+    if crate::theta::track(&repo, pattern)? {
+        println!("tracking '{pattern}' with git-theta");
+    } else {
+        println!("'{pattern}' already tracked");
+    }
+    Ok(())
+}
+
+fn cmd_lfs_track(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let pattern = args.first().context("usage: git-theta lfs-track <pattern>")?;
+    crate::gitcore::attributes::Attributes::add_line(
+        repo.worktree(),
+        &format!("{pattern} filter=lfs"),
+    )?;
+    println!("tracking '{pattern}' with lfs");
+    Ok(())
+}
+
+fn cmd_add(args: &[String]) -> Result<()> {
+    if args.is_empty() {
+        bail!("usage: git-theta add <paths...>");
+    }
+    let repo = open_repo()?;
+    let paths: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    repo.add(&paths)?;
+    println!("staged {} file(s)", paths.len());
+    Ok(())
+}
+
+fn cmd_commit(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let mut message = None;
+    let mut author = "git-theta <theta@localhost>".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "-m" | "--message" => {
+                message = Some(args.get(i + 1).context("-m needs a value")?.clone());
+                i += 2;
+            }
+            "--author" => {
+                author = args.get(i + 1).context("--author needs a value")?.clone();
+                i += 2;
+            }
+            other => bail!("unknown commit flag '{other}'"),
+        }
+    }
+    let message = message.context("usage: git-theta commit -m <message>")?;
+    let oid = repo.commit(&message, &author)?;
+    println!("[{}] {message}", oid.short());
+    Ok(())
+}
+
+fn cmd_status(_args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    print!("{}", repo.status()?.render());
+    Ok(())
+}
+
+fn cmd_log(_args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    for (oid, commit) in repo.log()? {
+        let merge = if commit.parents.len() > 1 { " (merge)" } else { "" };
+        println!("commit {}{merge}", oid.short());
+        println!("  author: {}", commit.author);
+        println!("  {}", commit.message.lines().next().unwrap_or(""));
+    }
+    Ok(())
+}
+
+fn cmd_diff(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let resolve_rev = |rev: &str| -> Result<crate::gitcore::object::Oid> {
+        if let Some(stripped) = rev.strip_suffix('~') {
+            let base = repo.resolve(if stripped.is_empty() { "HEAD" } else { stripped })?;
+            let commit = repo.odb().read_commit(&base)?;
+            return commit
+                .parents
+                .first()
+                .copied()
+                .context("revision has no parent");
+        }
+        repo.resolve(rev)
+    };
+    let (old, new) = match args.len() {
+        0 => (None, None), // HEAD vs index
+        1 => (Some(resolve_rev(&args[0])?), None),
+        _ => (Some(resolve_rev(&args[0])?), Some(resolve_rev(&args[1])?)),
+    };
+    print!("{}", repo.diff(old, new)?);
+    Ok(())
+}
+
+fn cmd_checkout(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let target = args.first().context("usage: git-theta checkout <rev>")?;
+    repo.checkout(target)?;
+    println!("checked out '{target}'");
+    Ok(())
+}
+
+fn cmd_branch(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    match args.first() {
+        Some(name) => {
+            repo.create_branch(name)?;
+            println!("created branch '{name}'");
+        }
+        None => {
+            let head = repo.refs().head()?;
+            for (name, oid) in repo.refs().branches()? {
+                let marker = match &head {
+                    crate::gitcore::refs::Head::Branch(b) if *b == name => "*",
+                    _ => " ",
+                };
+                println!("{marker} {name} {}", oid.short());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_merge(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let branch = args.first().context("usage: git-theta merge <branch>")?;
+    let mut opts = MergeOptions::default();
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--strategy" | "-s" => {
+                opts.strategy = Some(args.get(i + 1).context("--strategy needs a value")?.clone());
+                i += 2;
+            }
+            "--group" | "-g" => {
+                let spec = args.get(i + 1).context("--group needs glob=strategy")?;
+                let (glob, strat) = spec
+                    .split_once('=')
+                    .context("--group format is <glob>=<strategy>")?;
+                opts.per_group.push((glob.to_string(), strat.to_string()));
+                i += 2;
+            }
+            other => bail!("unknown merge flag '{other}'"),
+        }
+    }
+    let report = repo.merge(branch, &opts, "git-theta <theta@localhost>")?;
+    if report.already_up_to_date {
+        println!("already up to date");
+    } else if report.fast_forward {
+        println!("fast-forward to {}", report.commit.unwrap().short());
+    } else {
+        println!("merged '{branch}' -> {}", report.commit.unwrap().short());
+        for group in &report.driver_resolved {
+            println!("  resolved: {group}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_push(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let remote = args
+        .first()
+        .context("usage: git-theta push <remote-dir> [branch]")?;
+    let branch = args.get(1).map(|s| s.as_str()).unwrap_or("main");
+    let report = repo.push(Path::new(remote), branch)?;
+    println!(
+        "pushed {} commit(s), {} object(s), {}",
+        report.commits.len(),
+        report.objects_sent,
+        humansize::bytes(report.bytes_sent)
+    );
+    Ok(())
+}
+
+fn cmd_pull(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let remote = args
+        .first()
+        .context("usage: git-theta pull <remote-dir> [branch]")?;
+    let branch = args.get(1).map(|s| s.as_str()).unwrap_or("main");
+    let tip = repo.pull(Path::new(remote), branch)?;
+    println!("'{branch}' is at {}", tip.short());
+    Ok(())
+}
+
+fn cmd_clone(args: &[String]) -> Result<()> {
+    crate::init();
+    let remote = args
+        .first()
+        .context("usage: git-theta clone <remote-dir> <dir>")?;
+    let dir = args.get(1).context("usage: git-theta clone <remote-dir> <dir>")?;
+    let dir = PathBuf::from(dir);
+    std::fs::create_dir_all(&dir)?;
+    let repo = Repository::init(&dir)?;
+    repo.config_set("remote", remote)?;
+    repo.pull(Path::new(remote), "main")?;
+    println!("cloned into {}", dir.display());
+    Ok(())
+}
+
+fn cmd_config(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    match args {
+        [key] => match repo.config_get(key)? {
+            Some(v) => println!("{v}"),
+            None => bail!("config key '{key}' not set"),
+        },
+        [key, value] => {
+            repo.config_set(key, value)?;
+        }
+        _ => bail!("usage: git-theta config <key> [<value>]"),
+    }
+    Ok(())
+}
+
+fn cmd_fsck(_args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let mut objects = 0usize;
+    for oid in repo.odb().list()? {
+        repo.odb()
+            .read(&oid)
+            .with_context(|| format!("object {} corrupt", oid.short()))?;
+        objects += 1;
+    }
+    let store = crate::lfs::LfsStore::open(repo.theta_dir());
+    let mut lfs_objects = 0usize;
+    for oid in store.list()? {
+        store
+            .get(&oid)
+            .with_context(|| format!("lfs object {} corrupt", oid.short()))?;
+        lfs_objects += 1;
+    }
+    println!(
+        "ok: {objects} odb objects, {lfs_objects} lfs objects ({})",
+        humansize::bytes(store.disk_usage()?)
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+    use std::sync::Mutex;
+
+    // CLI tests chdir; serialize them.
+    static CWD_LOCK: Mutex<()> = Mutex::new(());
+
+    fn in_dir<F: FnOnce() -> Result<()>>(dir: &Path, f: F) {
+        let _guard = CWD_LOCK.lock().unwrap();
+        let old = std::env::current_dir().unwrap();
+        std::env::set_current_dir(dir).unwrap();
+        let result = f();
+        std::env::set_current_dir(old).unwrap();
+        result.unwrap();
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn full_cli_lifecycle() {
+        let td = TempDir::new("cli").unwrap();
+        in_dir(td.path(), || {
+            dispatch(&sv(&["init"]))?;
+            std::fs::write("notes.txt", "hello")?;
+            dispatch(&sv(&["add", "notes.txt"]))?;
+            dispatch(&sv(&["commit", "-m", "first"]))?;
+            dispatch(&sv(&["status"]))?;
+            dispatch(&sv(&["log"]))?;
+            dispatch(&sv(&["branch", "side"]))?;
+            dispatch(&sv(&["checkout", "side"]))?;
+            std::fs::write("notes.txt", "side")?;
+            dispatch(&sv(&["add", "notes.txt"]))?;
+            dispatch(&sv(&["commit", "-m", "side edit"]))?;
+            dispatch(&sv(&["checkout", "main"]))?;
+            dispatch(&sv(&["merge", "side"]))?;
+            assert_eq!(std::fs::read_to_string("notes.txt")?, "side");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&sv(&["frobnicate"])).is_err());
+        assert!(dispatch(&sv(&["help"])).is_ok());
+    }
+}

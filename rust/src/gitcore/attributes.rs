@@ -1,0 +1,164 @@
+//! `.thetaattributes` — per-file customization, mirroring `.gitattributes`.
+//!
+//! Each line: `<glob-pattern> key=value key2=value2 ...`. Git-Theta's
+//! `track` command writes lines like:
+//!
+//! ```text
+//! model.safetensors filter=theta diff=theta merge=theta
+//! ```
+//!
+//! Later lines override earlier ones for the same key (Git semantics).
+
+use crate::util::glob::Glob;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub const ATTRIBUTES_FILE: &str = ".thetaattributes";
+
+/// Value of one attribute for one file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AttrValue {
+    Set,
+    Unset,
+    Value(String),
+}
+
+#[derive(Debug, Clone)]
+struct Rule {
+    glob: Glob,
+    attrs: Vec<(String, AttrValue)>,
+}
+
+/// A parsed attributes file.
+#[derive(Debug, Clone, Default)]
+pub struct Attributes {
+    rules: Vec<Rule>,
+}
+
+impl Attributes {
+    pub fn parse(text: &str) -> Attributes {
+        let mut rules = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let pattern = match parts.next() {
+                Some(p) => p,
+                None => continue,
+            };
+            let mut attrs = Vec::new();
+            for tok in parts {
+                if let Some((k, v)) = tok.split_once('=') {
+                    attrs.push((k.to_string(), AttrValue::Value(v.to_string())));
+                } else if let Some(k) = tok.strip_prefix('-') {
+                    attrs.push((k.to_string(), AttrValue::Unset));
+                } else {
+                    attrs.push((tok.to_string(), AttrValue::Set));
+                }
+            }
+            rules.push(Rule {
+                glob: Glob::new(pattern),
+                attrs,
+            });
+        }
+        Attributes { rules }
+    }
+
+    /// Load from a working tree root (missing file = empty).
+    pub fn load(worktree: &Path) -> Result<Attributes> {
+        let path = worktree.join(ATTRIBUTES_FILE);
+        if !path.exists() {
+            return Ok(Attributes::default());
+        }
+        Ok(Attributes::parse(&std::fs::read_to_string(path)?))
+    }
+
+    /// All attributes that apply to `path`, with later rules overriding.
+    pub fn lookup(&self, path: &str) -> BTreeMap<String, AttrValue> {
+        let mut out = BTreeMap::new();
+        for rule in &self.rules {
+            if rule.glob.matches(path) {
+                for (k, v) in &rule.attrs {
+                    out.insert(k.clone(), v.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// The value of a single attribute for `path`, if it's `key=value`.
+    pub fn value_of(&self, path: &str, key: &str) -> Option<String> {
+        match self.lookup(path).remove(key) {
+            Some(AttrValue::Value(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Append a tracking line (used by `git theta track`); dedupes exact lines.
+    pub fn add_line(worktree: &Path, line: &str) -> Result<bool> {
+        let path = worktree.join(ATTRIBUTES_FILE);
+        let existing = if path.exists() {
+            std::fs::read_to_string(&path)?
+        } else {
+            String::new()
+        };
+        if existing.lines().any(|l| l.trim() == line.trim()) {
+            return Ok(false);
+        }
+        let mut out = existing;
+        if !out.is_empty() && !out.ends_with('\n') {
+            out.push('\n');
+        }
+        out.push_str(line);
+        out.push('\n');
+        std::fs::write(&path, out)?;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn parse_and_lookup() {
+        let attrs = Attributes::parse(
+            "# comment\n\
+             *.safetensors filter=theta diff=theta merge=theta\n\
+             *.bin filter=lfs\n\
+             legacy.bin -filter\n\
+             special.bin binary\n",
+        );
+        assert_eq!(
+            attrs.value_of("model.safetensors", "filter"),
+            Some("theta".into())
+        );
+        assert_eq!(attrs.value_of("sub/dir/model.safetensors", "merge"), Some("theta".into()));
+        assert_eq!(attrs.value_of("weights.bin", "filter"), Some("lfs".into()));
+        // Later rule unsets filter for legacy.bin.
+        assert_eq!(attrs.value_of("legacy.bin", "filter"), None);
+        assert_eq!(
+            attrs.lookup("legacy.bin").get("filter"),
+            Some(&AttrValue::Unset)
+        );
+        assert_eq!(
+            attrs.lookup("special.bin").get("binary"),
+            Some(&AttrValue::Set)
+        );
+        assert!(attrs.lookup("unrelated.txt").is_empty());
+    }
+
+    #[test]
+    fn add_line_dedupes() {
+        let td = TempDir::new("attrs").unwrap();
+        assert!(Attributes::add_line(td.path(), "m.safetensors filter=theta").unwrap());
+        assert!(!Attributes::add_line(td.path(), "m.safetensors filter=theta").unwrap());
+        assert!(Attributes::add_line(td.path(), "n.safetensors filter=theta").unwrap());
+        let text = std::fs::read_to_string(td.join(ATTRIBUTES_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 2);
+    }
+}

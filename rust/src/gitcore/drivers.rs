@@ -1,0 +1,158 @@
+//! Driver and hook registries — gitcore's inversion-of-control points.
+//!
+//! Mirrors Git's extension architecture (paper §2.3): the `filter`
+//! attribute selects a clean/smudge [`FilterDriver`]; the `diff` and
+//! `merge` attributes select [`DiffDriver`] / [`MergeDriver`]; hooks run
+//! around commit and push. Git-Theta (`theta/`) and the LFS substrate
+//! (`lfs/`) register their drivers here by name at startup.
+
+use super::repo::Repository;
+use anyhow::Result;
+use once_cell::sync::Lazy;
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// Clean/smudge filter pair (Git's `filter` attribute).
+pub trait FilterDriver: Send + Sync {
+    /// Working tree → staging area transformation (runs on `add`).
+    fn clean(&self, repo: &Repository, path: &str, working: &[u8]) -> Result<Vec<u8>>;
+
+    /// Staging area → working tree transformation (runs on `checkout`).
+    fn smudge(&self, repo: &Repository, path: &str, staged: &[u8]) -> Result<Vec<u8>>;
+}
+
+/// Custom diff driver (Git's `diff` attribute).
+pub trait DiffDriver: Send + Sync {
+    /// Render a human-readable diff between two staged representations.
+    fn diff(
+        &self,
+        repo: &Repository,
+        path: &str,
+        old: Option<&[u8]>,
+        new: Option<&[u8]>,
+    ) -> Result<String>;
+}
+
+/// Result of a merge-driver invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MergeOutcome {
+    /// Fully resolved staged content for the merged file.
+    Resolved(Vec<u8>),
+    /// The driver could not resolve; the merge must stop.
+    Conflict(String),
+}
+
+/// Options threaded into merge drivers from the CLI.
+#[derive(Debug, Clone, Default)]
+pub struct MergeOptions {
+    /// Non-interactive strategy selection (e.g. "average", "ours").
+    pub strategy: Option<String>,
+    /// Per-parameter-group strategy overrides: (group glob, strategy).
+    pub per_group: Vec<(String, String)>,
+}
+
+/// Custom merge driver (Git's `merge` attribute).
+pub trait MergeDriver: Send + Sync {
+    fn merge(
+        &self,
+        repo: &Repository,
+        path: &str,
+        ancestor: Option<&[u8]>,
+        ours: Option<&[u8]>,
+        theirs: Option<&[u8]>,
+        opts: &MergeOptions,
+    ) -> Result<MergeOutcome>;
+}
+
+/// Repository-level hooks (Git's hook scripts).
+pub trait Hooks: Send + Sync {
+    /// Runs after a commit is created (paper: records new LFS objects
+    /// under `.theta/commits/<commit>`).
+    fn post_commit(&self, _repo: &Repository, _commit: &super::object::Oid) -> Result<()> {
+        Ok(())
+    }
+
+    /// Runs before commits are pushed (paper: syncs LFS objects).
+    fn pre_push(
+        &self,
+        _repo: &Repository,
+        _remote: &std::path::Path,
+        _commits: &[super::object::Oid],
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[derive(Default)]
+struct Registries {
+    filters: BTreeMap<String, Arc<dyn FilterDriver>>,
+    diffs: BTreeMap<String, Arc<dyn DiffDriver>>,
+    merges: BTreeMap<String, Arc<dyn MergeDriver>>,
+    hooks: Vec<Arc<dyn Hooks>>,
+}
+
+static REGISTRIES: Lazy<RwLock<Registries>> = Lazy::new(|| RwLock::new(Registries::default()));
+
+/// Global driver registry facade.
+pub struct DriverRegistry;
+
+impl DriverRegistry {
+    pub fn register_filter(name: &str, driver: Arc<dyn FilterDriver>) {
+        REGISTRIES.write().unwrap().filters.insert(name.to_string(), driver);
+    }
+
+    pub fn register_diff(name: &str, driver: Arc<dyn DiffDriver>) {
+        REGISTRIES.write().unwrap().diffs.insert(name.to_string(), driver);
+    }
+
+    pub fn register_merge(name: &str, driver: Arc<dyn MergeDriver>) {
+        REGISTRIES.write().unwrap().merges.insert(name.to_string(), driver);
+    }
+
+    pub fn register_hooks(hooks: Arc<dyn Hooks>) {
+        REGISTRIES.write().unwrap().hooks.push(hooks);
+    }
+
+    pub fn filter(name: &str) -> Option<Arc<dyn FilterDriver>> {
+        REGISTRIES.read().unwrap().filters.get(name).cloned()
+    }
+
+    pub fn diff(name: &str) -> Option<Arc<dyn DiffDriver>> {
+        REGISTRIES.read().unwrap().diffs.get(name).cloned()
+    }
+
+    pub fn merge(name: &str) -> Option<Arc<dyn MergeDriver>> {
+        REGISTRIES.read().unwrap().merges.get(name).cloned()
+    }
+
+    pub fn all_hooks() -> Vec<Arc<dyn Hooks>> {
+        REGISTRIES.read().unwrap().hooks.clone()
+    }
+
+    pub fn filter_names() -> Vec<String> {
+        REGISTRIES.read().unwrap().filters.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Upper;
+    impl FilterDriver for Upper {
+        fn clean(&self, _r: &Repository, _p: &str, w: &[u8]) -> Result<Vec<u8>> {
+            Ok(w.to_ascii_uppercase())
+        }
+        fn smudge(&self, _r: &Repository, _p: &str, s: &[u8]) -> Result<Vec<u8>> {
+            Ok(s.to_ascii_lowercase())
+        }
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        DriverRegistry::register_filter("upper-test", Arc::new(Upper));
+        assert!(DriverRegistry::filter("upper-test").is_some());
+        assert!(DriverRegistry::filter("absent").is_none());
+        assert!(DriverRegistry::filter_names().contains(&"upper-test".to_string()));
+    }
+}

@@ -1,0 +1,157 @@
+//! The staging area (`.theta/index`).
+//!
+//! Maps repository-relative paths to staged blob oids. What lands here
+//! for filtered files is the *clean-filter output* (for Git-Theta: the
+//! model metadata file), exactly as in Git.
+
+use super::object::Oid;
+use crate::util::json::{Json, JsonObj};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One staged file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexEntry {
+    pub oid: Oid,
+    /// Size of the staged blob in bytes.
+    pub size: u64,
+    /// Hash of the *raw working-tree* content at staging time (before the
+    /// clean filter ran). Lets `status` detect modifications without
+    /// re-running expensive filters.
+    pub raw: Oid,
+}
+
+/// The staging index.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Index {
+    entries: BTreeMap<String, IndexEntry>,
+}
+
+impl Index {
+    pub fn new() -> Index {
+        Index::default()
+    }
+
+    pub fn load(theta_dir: &Path) -> Result<Index> {
+        let path = index_path(theta_dir);
+        if !path.exists() {
+            return Ok(Index::new());
+        }
+        let text = std::fs::read_to_string(&path).context("reading index")?;
+        let json = Json::parse(&text).context("parsing index")?;
+        let obj = json
+            .get("entries")
+            .and_then(|v| v.as_obj())
+            .context("index missing entries")?;
+        let mut entries = BTreeMap::new();
+        for (path, entry) in obj.iter() {
+            let oid = Oid::from_hex(
+                entry
+                    .get("oid")
+                    .and_then(|v| v.as_str())
+                    .context("index entry missing oid")?,
+            )?;
+            let size = entry
+                .get("size")
+                .and_then(|v| v.as_u64())
+                .context("index entry missing size")?;
+            let raw = Oid::from_hex(
+                entry
+                    .get("raw")
+                    .and_then(|v| v.as_str())
+                    .context("index entry missing raw hash")?,
+            )?;
+            entries.insert(path.clone(), IndexEntry { oid, size, raw });
+        }
+        Ok(Index { entries })
+    }
+
+    pub fn save(&self, theta_dir: &Path) -> Result<()> {
+        let mut obj = JsonObj::new();
+        for (path, e) in &self.entries {
+            let mut entry = JsonObj::new();
+            entry.insert("oid", e.oid.to_hex());
+            entry.insert("size", e.size);
+            entry.insert("raw", e.raw.to_hex());
+            obj.insert(path.clone(), entry);
+        }
+        let mut root = JsonObj::new();
+        root.insert("version", 1u64);
+        root.insert("entries", obj);
+        std::fs::write(index_path(theta_dir), Json::Obj(root).to_string_pretty())
+            .context("writing index")
+    }
+
+    pub fn stage(&mut self, path: impl Into<String>, oid: Oid, size: u64, raw: Oid) {
+        self.entries.insert(path.into(), IndexEntry { oid, size, raw });
+    }
+
+    pub fn unstage(&mut self, path: &str) -> Option<IndexEntry> {
+        self.entries.remove(path)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&IndexEntry> {
+        self.entries.get(path)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &IndexEntry)> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Replace the whole index with a tree's contents (used on checkout).
+    pub fn reset_to(&mut self, entries: impl Iterator<Item = (String, Oid, u64, Oid)>) {
+        self.entries.clear();
+        for (path, oid, size, raw) in entries {
+            self.entries.insert(path, IndexEntry { oid, size, raw });
+        }
+    }
+}
+
+fn index_path(theta_dir: &Path) -> PathBuf {
+    theta_dir.join("index")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn stage_save_load() {
+        let td = TempDir::new("index").unwrap();
+        let mut idx = Index::new();
+        idx.stage("model.safetensors", Oid::of_bytes(b"meta"), 1234, Oid::of_bytes(b"rawm"));
+        idx.stage("train.py", Oid::of_bytes(b"code"), 99, Oid::of_bytes(b"rawc"));
+        idx.save(td.path()).unwrap();
+        let loaded = Index::load(td.path()).unwrap();
+        assert_eq!(loaded, idx);
+        assert_eq!(loaded.get("train.py").unwrap().size, 99);
+    }
+
+    #[test]
+    fn missing_index_is_empty() {
+        let td = TempDir::new("index").unwrap();
+        assert!(Index::load(td.path()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unstage_and_reset() {
+        let mut idx = Index::new();
+        idx.stage("a", Oid::of_bytes(b"1"), 1, Oid::of_bytes(b"1"));
+        idx.stage("b", Oid::of_bytes(b"2"), 2, Oid::of_bytes(b"2"));
+        assert!(idx.unstage("a").is_some());
+        assert!(idx.get("a").is_none());
+        idx.reset_to(vec![("c".to_string(), Oid::of_bytes(b"3"), 3u64, Oid::of_bytes(b"3"))].into_iter());
+        assert_eq!(idx.len(), 1);
+        assert!(idx.get("c").is_some());
+    }
+}

@@ -1,0 +1,203 @@
+//! Merge-base computation: lowest common ancestor over the commit DAG.
+
+use super::object::Oid;
+use super::odb::Odb;
+use anyhow::Result;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// All ancestors of `start` (inclusive).
+pub fn ancestors(odb: &Odb, start: Oid) -> Result<HashSet<Oid>> {
+    let mut seen = HashSet::new();
+    let mut queue = VecDeque::from([start]);
+    while let Some(oid) = queue.pop_front() {
+        if !seen.insert(oid) {
+            continue;
+        }
+        let commit = odb.read_commit(&oid)?;
+        for p in commit.parents {
+            queue.push_back(p);
+        }
+    }
+    Ok(seen)
+}
+
+/// Best common ancestor of `a` and `b` for three-way merge.
+///
+/// Returns a common ancestor that is not an ancestor of any other common
+/// ancestor (a "maximal" common ancestor). With criss-cross histories
+/// several maximal candidates can exist; ties break by highest timestamp
+/// then oid for determinism, matching what `git merge-base` would pick as
+/// one of its results.
+pub fn merge_base(odb: &Odb, a: Oid, b: Oid) -> Result<Option<Oid>> {
+    if a == b {
+        return Ok(Some(a));
+    }
+    let anc_a = ancestors(odb, a)?;
+    let anc_b = ancestors(odb, b)?;
+    let common: HashSet<Oid> = anc_a.intersection(&anc_b).copied().collect();
+    if common.is_empty() {
+        return Ok(None);
+    }
+
+    // Remove every common ancestor reachable from another common ancestor
+    // via at least one edge; survivors are maximal.
+    let mut reachable_from_common: HashSet<Oid> = HashSet::new();
+    for &c in &common {
+        let commit = odb.read_commit(&c)?;
+        let mut queue: VecDeque<Oid> = commit.parents.into();
+        let mut seen = HashSet::new();
+        while let Some(p) = queue.pop_front() {
+            if !seen.insert(p) {
+                continue;
+            }
+            reachable_from_common.insert(p);
+            let pc = odb.read_commit(&p)?;
+            for gp in pc.parents {
+                queue.push_back(gp);
+            }
+        }
+    }
+    let mut maximal: Vec<Oid> = common
+        .iter()
+        .filter(|c| !reachable_from_common.contains(c))
+        .copied()
+        .collect();
+    if maximal.is_empty() {
+        return Ok(None);
+    }
+    let mut stamped: Vec<(u64, Oid)> = Vec::new();
+    for oid in maximal.drain(..) {
+        stamped.push((odb.read_commit(&oid)?.timestamp, oid));
+    }
+    stamped.sort_by(|x, y| y.0.cmp(&x.0).then(y.1.cmp(&x.1)));
+    Ok(Some(stamped[0].1))
+}
+
+/// Is `anc` an ancestor of (or equal to) `desc`? Used for fast-forward checks.
+pub fn is_ancestor(odb: &Odb, anc: Oid, desc: Oid) -> Result<bool> {
+    Ok(ancestors(odb, desc)?.contains(&anc))
+}
+
+/// Commits reachable from `tip` but not from any commit in `exclude`,
+/// oldest-first — the set a push must transfer.
+pub fn commits_between(odb: &Odb, tip: Oid, exclude: &[Oid]) -> Result<Vec<Oid>> {
+    let mut excluded = HashSet::new();
+    for &e in exclude {
+        excluded.extend(ancestors(odb, e)?);
+    }
+    let mut out = Vec::new();
+    let mut seen = HashSet::new();
+    let mut queue = VecDeque::from([tip]);
+    while let Some(oid) = queue.pop_front() {
+        if excluded.contains(&oid) || !seen.insert(oid) {
+            continue;
+        }
+        out.push(oid);
+        for p in odb.read_commit(&oid)?.parents {
+            queue.push_back(p);
+        }
+    }
+    // Topological order (parents before children), timestamp/oid tie-break,
+    // so same-second commits still apply oldest-first.
+    let set: HashSet<Oid> = out.iter().copied().collect();
+    let mut indegree: HashMap<Oid, usize> = HashMap::new();
+    let mut children: HashMap<Oid, Vec<Oid>> = HashMap::new();
+    let mut stamped: HashMap<Oid, u64> = HashMap::new();
+    for &oid in &out {
+        let c = odb.read_commit(&oid)?;
+        stamped.insert(oid, c.timestamp);
+        let in_parents = c.parents.iter().filter(|p| set.contains(p)).count();
+        indegree.insert(oid, in_parents);
+        for p in c.parents {
+            if set.contains(&p) {
+                children.entry(p).or_default().push(oid);
+            }
+        }
+    }
+    let mut ready: Vec<Oid> = out
+        .iter()
+        .copied()
+        .filter(|o| indegree[o] == 0)
+        .collect();
+    let mut ordered = Vec::with_capacity(out.len());
+    while !ready.is_empty() {
+        ready.sort_by_key(|o| (std::cmp::Reverse(stamped[o]), std::cmp::Reverse(*o)));
+        let next = ready.pop().unwrap();
+        ordered.push(next);
+        for &child in children.get(&next).into_iter().flatten() {
+            let d = indegree.get_mut(&child).unwrap();
+            *d -= 1;
+            if *d == 0 {
+                ready.push(child);
+            }
+        }
+    }
+    Ok(ordered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gitcore::object::{Commit, Object, Tree};
+    use crate::util::tmp::TempDir;
+
+    fn commit(odb: &Odb, parents: Vec<Oid>, ts: u64, msg: &str) -> Oid {
+        let tree = odb.write(&Object::Tree(Tree::default())).unwrap();
+        odb.write(&Object::Commit(Commit {
+            tree,
+            parents,
+            author: "t".into(),
+            timestamp: ts,
+            message: msg.into(),
+        }))
+        .unwrap()
+    }
+
+    #[test]
+    fn linear_history() {
+        let td = TempDir::new("mb").unwrap();
+        let odb = Odb::init(td.path()).unwrap();
+        let c1 = commit(&odb, vec![], 1, "c1");
+        let c2 = commit(&odb, vec![c1], 2, "c2");
+        let c3 = commit(&odb, vec![c2], 3, "c3");
+        assert_eq!(merge_base(&odb, c3, c2).unwrap(), Some(c2));
+        assert_eq!(merge_base(&odb, c2, c3).unwrap(), Some(c2));
+        assert!(is_ancestor(&odb, c1, c3).unwrap());
+        assert!(!is_ancestor(&odb, c3, c1).unwrap());
+    }
+
+    #[test]
+    fn diverged_branches() {
+        let td = TempDir::new("mb").unwrap();
+        let odb = Odb::init(td.path()).unwrap();
+        let base = commit(&odb, vec![], 1, "base");
+        let main2 = commit(&odb, vec![base], 2, "anli");
+        let feat2 = commit(&odb, vec![base], 3, "rte");
+        assert_eq!(merge_base(&odb, main2, feat2).unwrap(), Some(base));
+        // After merging, base of merge vs either tip is the tip itself.
+        let merged = commit(&odb, vec![main2, feat2], 4, "merge");
+        assert_eq!(merge_base(&odb, merged, main2).unwrap(), Some(main2));
+    }
+
+    #[test]
+    fn unrelated_histories() {
+        let td = TempDir::new("mb").unwrap();
+        let odb = Odb::init(td.path()).unwrap();
+        let a = commit(&odb, vec![], 1, "a");
+        let b = commit(&odb, vec![], 1, "b");
+        assert_eq!(merge_base(&odb, a, b).unwrap(), None);
+    }
+
+    #[test]
+    fn commits_between_excludes_remote() {
+        let td = TempDir::new("mb").unwrap();
+        let odb = Odb::init(td.path()).unwrap();
+        let c1 = commit(&odb, vec![], 1, "c1");
+        let c2 = commit(&odb, vec![c1], 2, "c2");
+        let c3 = commit(&odb, vec![c2], 3, "c3");
+        let c4 = commit(&odb, vec![c3], 4, "c4");
+        assert_eq!(commits_between(&odb, c4, &[c2]).unwrap(), vec![c3, c4]);
+        assert_eq!(commits_between(&odb, c4, &[]).unwrap(), vec![c1, c2, c3, c4]);
+        assert!(commits_between(&odb, c2, &[c4]).unwrap().is_empty());
+    }
+}

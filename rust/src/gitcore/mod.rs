@@ -1,0 +1,33 @@
+//! `gitcore` — a from-scratch content-addressed version control substrate.
+//!
+//! The paper builds Git-Theta as an extension of Git, using a narrow,
+//! well-defined slice of Git's machinery: the object database, refs,
+//! the staging index, `.gitattributes`-driven clean/smudge filters,
+//! custom diff/merge drivers, repository-level hooks, and three-way
+//! merges over a commit DAG. This module implements exactly that slice
+//! natively in Rust (per DESIGN.md §1 the external `git` binary is
+//! substituted, preserving the identical control flow: clean on add,
+//! smudge on checkout, driver dispatch on merge/diff, hooks around
+//! commit/push).
+//!
+//! Terminology matches Git: objects are zlib-deflated, sha256-addressed
+//! blobs/trees/commits under `.theta/objects/`; branches live under
+//! `.theta/refs/heads/`; the staging area is `.theta/index`.
+
+pub mod attributes;
+pub mod drivers;
+pub mod index;
+pub mod mergebase;
+pub mod object;
+pub mod odb;
+pub mod refs;
+pub mod repo;
+pub mod status;
+
+pub use attributes::{AttrValue, Attributes};
+pub use drivers::{DiffDriver, DriverRegistry, FilterDriver, MergeDriver, MergeOutcome};
+pub use index::Index;
+pub use object::{Commit, Object, Oid, Tree, TreeEntry};
+pub use odb::Odb;
+pub use repo::{MergeReport, Repository, THETA_DIR};
+pub use status::{FileStatus, Status};

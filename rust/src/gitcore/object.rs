@@ -1,0 +1,283 @@
+//! Object model: oids, blobs, trees, commits and their wire encodings.
+
+use crate::util::hex;
+use anyhow::{bail, Context, Result};
+use sha2::{Digest, Sha256};
+use std::fmt;
+
+/// A sha256 object id.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Oid(pub [u8; 32]);
+
+impl Oid {
+    pub fn of_bytes(bytes: &[u8]) -> Oid {
+        let mut h = Sha256::new();
+        h.update(bytes);
+        Oid(h.finalize().into())
+    }
+
+    pub fn to_hex(&self) -> String {
+        hex::encode(&self.0)
+    }
+
+    pub fn from_hex(s: &str) -> Result<Oid> {
+        let bytes = hex::decode(s.trim()).context("invalid hex oid")?;
+        let arr: [u8; 32] = bytes
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("oid must be 32 bytes"))?;
+        Ok(Oid(arr))
+    }
+
+    /// Abbreviated id for display.
+    pub fn short(&self) -> String {
+        self.to_hex()[..10].to_string()
+    }
+}
+
+impl fmt::Debug for Oid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Oid({})", self.short())
+    }
+}
+
+impl fmt::Display for Oid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_hex())
+    }
+}
+
+/// A tree entry: one tracked file (flat path) → blob oid.
+///
+/// Unlike Git's nested trees, `gitcore` stores one flat manifest per
+/// commit. Blob-level dedup (what Git-Theta relies on) is identical;
+/// only subtree-level dedup of the manifest itself is lost, which is
+/// negligible at checkpoint-metadata scale.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TreeEntry {
+    pub path: String,
+    pub oid: Oid,
+}
+
+/// A flat tree (sorted by path).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Tree {
+    pub entries: Vec<TreeEntry>,
+}
+
+impl Tree {
+    pub fn from_entries(mut entries: Vec<TreeEntry>) -> Tree {
+        entries.sort_by(|a, b| a.path.cmp(&b.path));
+        entries.dedup_by(|a, b| a.path == b.path);
+        Tree { entries }
+    }
+
+    pub fn get(&self, path: &str) -> Option<Oid> {
+        self.entries
+            .binary_search_by(|e| e.path.as_str().cmp(path))
+            .ok()
+            .map(|i| self.entries[i].oid)
+    }
+
+    pub fn paths(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.path.as_str())
+    }
+}
+
+/// A commit object.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Commit {
+    pub tree: Oid,
+    pub parents: Vec<Oid>,
+    pub author: String,
+    /// Seconds since the epoch.
+    pub timestamp: u64,
+    pub message: String,
+}
+
+/// Any object in the database.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Object {
+    Blob(Vec<u8>),
+    Tree(Tree),
+    Commit(Commit),
+}
+
+impl Object {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Object::Blob(_) => "blob",
+            Object::Tree(_) => "tree",
+            Object::Commit(_) => "commit",
+        }
+    }
+
+    /// Canonical byte encoding: `<kind> <len>\0<body>` (like Git).
+    pub fn encode(&self) -> Vec<u8> {
+        let body = self.encode_body();
+        let mut out = Vec::with_capacity(body.len() + 16);
+        out.extend_from_slice(self.kind().as_bytes());
+        out.push(b' ');
+        out.extend_from_slice(body.len().to_string().as_bytes());
+        out.push(0);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    fn encode_body(&self) -> Vec<u8> {
+        match self {
+            Object::Blob(data) => data.clone(),
+            Object::Tree(tree) => {
+                let mut out = Vec::new();
+                for e in &tree.entries {
+                    out.extend_from_slice(e.oid.to_hex().as_bytes());
+                    out.push(b' ');
+                    out.extend_from_slice(e.path.as_bytes());
+                    out.push(b'\n');
+                }
+                out
+            }
+            Object::Commit(c) => {
+                let mut out = String::new();
+                out.push_str(&format!("tree {}\n", c.tree));
+                for p in &c.parents {
+                    out.push_str(&format!("parent {p}\n"));
+                }
+                out.push_str(&format!("author {}\n", c.author));
+                out.push_str(&format!("timestamp {}\n", c.timestamp));
+                out.push('\n');
+                out.push_str(&c.message);
+                out.into_bytes()
+            }
+        }
+    }
+
+    /// Decode from the canonical encoding.
+    pub fn decode(bytes: &[u8]) -> Result<Object> {
+        let nul = bytes
+            .iter()
+            .position(|&b| b == 0)
+            .context("object missing header terminator")?;
+        let header = std::str::from_utf8(&bytes[..nul]).context("object header not utf-8")?;
+        let (kind, len_str) = header
+            .split_once(' ')
+            .context("object header missing space")?;
+        let len: usize = len_str.parse().context("object header bad length")?;
+        let body = &bytes[nul + 1..];
+        if body.len() != len {
+            bail!("object length mismatch: header says {len}, body is {}", body.len());
+        }
+        match kind {
+            "blob" => Ok(Object::Blob(body.to_vec())),
+            "tree" => {
+                let text = std::str::from_utf8(body).context("tree body not utf-8")?;
+                let mut entries = Vec::new();
+                for line in text.lines() {
+                    let (oid_hex, path) = line.split_once(' ').context("bad tree entry")?;
+                    entries.push(TreeEntry {
+                        path: path.to_string(),
+                        oid: Oid::from_hex(oid_hex)?,
+                    });
+                }
+                Ok(Object::Tree(Tree::from_entries(entries)))
+            }
+            "commit" => {
+                let text = std::str::from_utf8(body).context("commit body not utf-8")?;
+                let (headers, message) = text
+                    .split_once("\n\n")
+                    .unwrap_or((text, ""));
+                let mut tree = None;
+                let mut parents = Vec::new();
+                let mut author = String::new();
+                let mut timestamp = 0u64;
+                for line in headers.lines() {
+                    let (key, val) = line.split_once(' ').context("bad commit header")?;
+                    match key {
+                        "tree" => tree = Some(Oid::from_hex(val)?),
+                        "parent" => parents.push(Oid::from_hex(val)?),
+                        "author" => author = val.to_string(),
+                        "timestamp" => timestamp = val.parse().context("bad timestamp")?,
+                        _ => {} // forward-compatible: ignore unknown headers
+                    }
+                }
+                Ok(Object::Commit(Commit {
+                    tree: tree.context("commit missing tree")?,
+                    parents,
+                    author,
+                    timestamp,
+                    message: message.to_string(),
+                }))
+            }
+            other => bail!("unknown object kind '{other}'"),
+        }
+    }
+
+    /// Object id: sha256 of the canonical encoding.
+    pub fn oid(&self) -> Oid {
+        Oid::of_bytes(&self.encode())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oid_hex_roundtrip() {
+        let oid = Oid::of_bytes(b"hello");
+        let hexs = oid.to_hex();
+        assert_eq!(hexs.len(), 64);
+        assert_eq!(Oid::from_hex(&hexs).unwrap(), oid);
+        assert!(Oid::from_hex("xyz").is_err());
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let obj = Object::Blob(vec![0, 1, 2, 255]);
+        let enc = obj.encode();
+        assert!(enc.starts_with(b"blob 4\0"));
+        assert_eq!(Object::decode(&enc).unwrap(), obj);
+    }
+
+    #[test]
+    fn tree_roundtrip_and_sorting() {
+        let tree = Tree::from_entries(vec![
+            TreeEntry { path: "z.txt".into(), oid: Oid::of_bytes(b"z") },
+            TreeEntry { path: "a/b.txt".into(), oid: Oid::of_bytes(b"ab") },
+        ]);
+        assert_eq!(tree.entries[0].path, "a/b.txt");
+        let obj = Object::Tree(tree.clone());
+        let back = Object::decode(&obj.encode()).unwrap();
+        assert_eq!(back, Object::Tree(tree.clone()));
+        assert_eq!(tree.get("z.txt"), Some(Oid::of_bytes(b"z")));
+        assert_eq!(tree.get("missing"), None);
+    }
+
+    #[test]
+    fn commit_roundtrip() {
+        let c = Commit {
+            tree: Oid::of_bytes(b"tree"),
+            parents: vec![Oid::of_bytes(b"p1"), Oid::of_bytes(b"p2")],
+            author: "tester <t@example.com>".into(),
+            timestamp: 1_700_000_000,
+            message: "Merge branch 'rte'\n\nbody".into(),
+        };
+        let obj = Object::Commit(c.clone());
+        assert_eq!(Object::decode(&obj.encode()).unwrap(), Object::Commit(c));
+    }
+
+    #[test]
+    fn content_addressing_is_stable() {
+        let a = Object::Blob(b"same".to_vec());
+        let b = Object::Blob(b"same".to_vec());
+        assert_eq!(a.oid(), b.oid());
+        let c = Object::Blob(b"diff".to_vec());
+        assert_ne!(a.oid(), c.oid());
+    }
+
+    #[test]
+    fn decode_rejects_corrupt() {
+        assert!(Object::decode(b"blob 5\0abc").is_err());
+        assert!(Object::decode(b"weird 3\0abc").is_err());
+        assert!(Object::decode(b"no-nul").is_err());
+    }
+}

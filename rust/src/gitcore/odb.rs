@@ -1,0 +1,210 @@
+//! Object database: zlib-deflated, sha256-addressed object storage.
+
+use super::object::{Commit, Object, Oid, Tree};
+use anyhow::{bail, Context, Result};
+use flate2::read::ZlibDecoder;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// An on-disk object store rooted at `<dir>/objects/`.
+#[derive(Debug, Clone)]
+pub struct Odb {
+    root: PathBuf,
+}
+
+impl Odb {
+    pub fn open(theta_dir: &Path) -> Odb {
+        Odb {
+            root: theta_dir.join("objects"),
+        }
+    }
+
+    pub fn init(theta_dir: &Path) -> Result<Odb> {
+        let odb = Odb::open(theta_dir);
+        std::fs::create_dir_all(&odb.root).context("creating objects dir")?;
+        Ok(odb)
+    }
+
+    fn path_for(&self, oid: &Oid) -> PathBuf {
+        let hex = oid.to_hex();
+        self.root.join(&hex[..2]).join(&hex[2..])
+    }
+
+    pub fn contains(&self, oid: &Oid) -> bool {
+        self.path_for(oid).exists()
+    }
+
+    /// Write an object; returns its oid. Idempotent.
+    pub fn write(&self, obj: &Object) -> Result<Oid> {
+        let encoded = obj.encode();
+        let oid = Oid::of_bytes(&encoded);
+        let path = self.path_for(&oid);
+        if path.exists() {
+            return Ok(oid);
+        }
+        std::fs::create_dir_all(path.parent().unwrap())?;
+        let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&encoded)?;
+        let compressed = enc.finish()?;
+        // Write-then-rename for atomicity under concurrent writers.
+        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+        std::fs::write(&tmp, &compressed)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(oid)
+    }
+
+    /// Read and verify an object.
+    pub fn read(&self, oid: &Oid) -> Result<Object> {
+        let path = self.path_for(oid);
+        let compressed = std::fs::read(&path)
+            .with_context(|| format!("object {} not found", oid.short()))?;
+        let mut dec = ZlibDecoder::new(&compressed[..]);
+        let mut encoded = Vec::new();
+        dec.read_to_end(&mut encoded).context("corrupt object (zlib)")?;
+        let actual = Oid::of_bytes(&encoded);
+        if actual != *oid {
+            bail!(
+                "object corruption: {} hashes to {}",
+                oid.short(),
+                actual.short()
+            );
+        }
+        Object::decode(&encoded)
+    }
+
+    pub fn read_blob(&self, oid: &Oid) -> Result<Vec<u8>> {
+        match self.read(oid)? {
+            Object::Blob(data) => Ok(data),
+            other => bail!("expected blob {}, found {}", oid.short(), other.kind()),
+        }
+    }
+
+    pub fn read_tree(&self, oid: &Oid) -> Result<Tree> {
+        match self.read(oid)? {
+            Object::Tree(t) => Ok(t),
+            other => bail!("expected tree {}, found {}", oid.short(), other.kind()),
+        }
+    }
+
+    pub fn read_commit(&self, oid: &Oid) -> Result<Commit> {
+        match self.read(oid)? {
+            Object::Commit(c) => Ok(c),
+            other => bail!("expected commit {}, found {}", oid.short(), other.kind()),
+        }
+    }
+
+    pub fn write_blob(&self, data: Vec<u8>) -> Result<Oid> {
+        self.write(&Object::Blob(data))
+    }
+
+    /// Total on-disk bytes of all stored objects (for benchmarking).
+    pub fn disk_usage(&self) -> Result<u64> {
+        let mut total = 0u64;
+        if !self.root.exists() {
+            return Ok(0);
+        }
+        for shard in std::fs::read_dir(&self.root)? {
+            let shard = shard?;
+            if shard.file_type()?.is_dir() {
+                for f in std::fs::read_dir(shard.path())? {
+                    total += f?.metadata()?.len();
+                }
+            }
+        }
+        Ok(total)
+    }
+
+    /// All oids in the store (diagnostics / fsck).
+    pub fn list(&self) -> Result<Vec<Oid>> {
+        let mut out = Vec::new();
+        if !self.root.exists() {
+            return Ok(out);
+        }
+        for shard in std::fs::read_dir(&self.root)? {
+            let shard = shard?;
+            if !shard.file_type()?.is_dir() {
+                continue;
+            }
+            let prefix = shard.file_name().to_string_lossy().to_string();
+            for f in std::fs::read_dir(shard.path())? {
+                let name = f?.file_name().to_string_lossy().to_string();
+                if let Ok(oid) = Oid::from_hex(&format!("{prefix}{name}")) {
+                    out.push(oid);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gitcore::object::TreeEntry;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let td = TempDir::new("odb").unwrap();
+        let odb = Odb::init(td.path()).unwrap();
+        let oid = odb.write_blob(b"parameter data".to_vec()).unwrap();
+        assert!(odb.contains(&oid));
+        assert_eq!(odb.read_blob(&oid).unwrap(), b"parameter data");
+    }
+
+    #[test]
+    fn dedup_identical_content() {
+        let td = TempDir::new("odb").unwrap();
+        let odb = Odb::init(td.path()).unwrap();
+        let a = odb.write_blob(vec![7u8; 1000]).unwrap();
+        let usage1 = odb.disk_usage().unwrap();
+        let b = odb.write_blob(vec![7u8; 1000]).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(odb.disk_usage().unwrap(), usage1);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let td = TempDir::new("odb").unwrap();
+        let odb = Odb::init(td.path()).unwrap();
+        let oid = odb.write_blob(b"data".to_vec()).unwrap();
+        // Overwrite the object file with a different valid object's bytes.
+        let other = Object::Blob(b"tampered".to_vec());
+        let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&other.encode()).unwrap();
+        let path = odb.path_for(&oid);
+        std::fs::write(&path, enc.finish().unwrap()).unwrap();
+        assert!(odb.read(&oid).is_err());
+    }
+
+    #[test]
+    fn typed_readers_enforce_kind() {
+        let td = TempDir::new("odb").unwrap();
+        let odb = Odb::init(td.path()).unwrap();
+        let blob = odb.write_blob(b"x".to_vec()).unwrap();
+        assert!(odb.read_tree(&blob).is_err());
+        let tree_oid = odb
+            .write(&Object::Tree(Tree::from_entries(vec![TreeEntry {
+                path: "f".into(),
+                oid: blob,
+            }])))
+            .unwrap();
+        assert!(odb.read_tree(&tree_oid).is_ok());
+        assert!(odb.read_commit(&tree_oid).is_err());
+    }
+
+    #[test]
+    fn list_finds_all() {
+        let td = TempDir::new("odb").unwrap();
+        let odb = Odb::init(td.path()).unwrap();
+        let mut oids: Vec<Oid> = (0..10)
+            .map(|i| odb.write_blob(vec![i as u8; 10]).unwrap())
+            .collect();
+        let mut listed = odb.list().unwrap();
+        oids.sort();
+        listed.sort();
+        assert_eq!(oids, listed);
+    }
+}

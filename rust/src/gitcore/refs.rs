@@ -1,0 +1,176 @@
+//! Refs: branches and HEAD.
+
+use super::object::Oid;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Where HEAD currently points.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Head {
+    /// On a branch (which may not exist yet in a fresh repo).
+    Branch(String),
+    /// Detached at a commit.
+    Detached(Oid),
+}
+
+#[derive(Debug, Clone)]
+pub struct Refs {
+    theta_dir: PathBuf,
+}
+
+impl Refs {
+    pub fn open(theta_dir: &Path) -> Refs {
+        Refs {
+            theta_dir: theta_dir.to_path_buf(),
+        }
+    }
+
+    pub fn init(theta_dir: &Path, default_branch: &str) -> Result<Refs> {
+        let refs = Refs::open(theta_dir);
+        std::fs::create_dir_all(theta_dir.join("refs/heads"))?;
+        refs.set_head(&Head::Branch(default_branch.to_string()))?;
+        Ok(refs)
+    }
+
+    fn head_path(&self) -> PathBuf {
+        self.theta_dir.join("HEAD")
+    }
+
+    fn branch_path(&self, name: &str) -> Result<PathBuf> {
+        if name.is_empty()
+            || name.contains("..")
+            || name.starts_with('/')
+            || name.chars().any(|c| c.is_whitespace() || c == '\\' || c == ':')
+        {
+            bail!("invalid branch name '{name}'");
+        }
+        Ok(self.theta_dir.join("refs/heads").join(name))
+    }
+
+    pub fn head(&self) -> Result<Head> {
+        let text = std::fs::read_to_string(self.head_path()).context("reading HEAD")?;
+        let text = text.trim();
+        if let Some(branch) = text.strip_prefix("ref: refs/heads/") {
+            Ok(Head::Branch(branch.to_string()))
+        } else {
+            Ok(Head::Detached(Oid::from_hex(text)?))
+        }
+    }
+
+    pub fn set_head(&self, head: &Head) -> Result<()> {
+        let content = match head {
+            Head::Branch(name) => format!("ref: refs/heads/{name}\n"),
+            Head::Detached(oid) => format!("{oid}\n"),
+        };
+        std::fs::write(self.head_path(), content).context("writing HEAD")
+    }
+
+    /// The commit HEAD resolves to (None on an unborn branch).
+    pub fn head_commit(&self) -> Result<Option<Oid>> {
+        match self.head()? {
+            Head::Branch(name) => self.branch(&name),
+            Head::Detached(oid) => Ok(Some(oid)),
+        }
+    }
+
+    pub fn branch(&self, name: &str) -> Result<Option<Oid>> {
+        let path = self.branch_path(name)?;
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(path)?;
+        Ok(Some(Oid::from_hex(text.trim())?))
+    }
+
+    pub fn set_branch(&self, name: &str, oid: &Oid) -> Result<()> {
+        let path = self.branch_path(name)?;
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, format!("{oid}\n")).context("writing branch ref")
+    }
+
+    pub fn delete_branch(&self, name: &str) -> Result<()> {
+        let path = self.branch_path(name)?;
+        if path.exists() {
+            std::fs::remove_file(path)?;
+        }
+        Ok(())
+    }
+
+    pub fn branches(&self) -> Result<Vec<(String, Oid)>> {
+        let dir = self.theta_dir.join("refs/heads");
+        let mut out = Vec::new();
+        if !dir.exists() {
+            return Ok(out);
+        }
+        collect_refs(&dir, String::new(), &mut out)?;
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+}
+
+fn collect_refs(dir: &Path, prefix: String, out: &mut Vec<(String, Oid)>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().to_string();
+        let full = if prefix.is_empty() {
+            name.clone()
+        } else {
+            format!("{prefix}/{name}")
+        };
+        if entry.file_type()?.is_dir() {
+            collect_refs(&entry.path(), full, out)?;
+        } else {
+            let text = std::fs::read_to_string(entry.path())?;
+            out.push((full, Oid::from_hex(text.trim())?));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn init_and_head() {
+        let td = TempDir::new("refs").unwrap();
+        let refs = Refs::init(td.path(), "main").unwrap();
+        assert_eq!(refs.head().unwrap(), Head::Branch("main".into()));
+        assert_eq!(refs.head_commit().unwrap(), None); // unborn
+
+        let oid = Oid::of_bytes(b"c1");
+        refs.set_branch("main", &oid).unwrap();
+        assert_eq!(refs.head_commit().unwrap(), Some(oid));
+    }
+
+    #[test]
+    fn branches_and_detached() {
+        let td = TempDir::new("refs").unwrap();
+        let refs = Refs::init(td.path(), "main").unwrap();
+        let a = Oid::of_bytes(b"a");
+        let b = Oid::of_bytes(b"b");
+        refs.set_branch("main", &a).unwrap();
+        refs.set_branch("feature/rte", &b).unwrap();
+        let branches = refs.branches().unwrap();
+        assert_eq!(
+            branches,
+            vec![("feature/rte".to_string(), b), ("main".to_string(), a)]
+        );
+        refs.set_head(&Head::Detached(a)).unwrap();
+        assert_eq!(refs.head_commit().unwrap(), Some(a));
+        refs.delete_branch("feature/rte").unwrap();
+        assert_eq!(refs.branch("feature/rte").unwrap(), None);
+    }
+
+    #[test]
+    fn rejects_bad_branch_names() {
+        let td = TempDir::new("refs").unwrap();
+        let refs = Refs::init(td.path(), "main").unwrap();
+        for bad in ["", "../x", "/abs", "has space", "a:b"] {
+            assert!(refs.set_branch(bad, &Oid::of_bytes(b"x")).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,1118 @@
+//! The repository facade: init/open, add, commit, checkout, branch,
+//! merge, diff, log, status, push/pull.
+//!
+//! This is where gitcore's inversion of control happens (paper §3.3):
+//! `add` runs the clean filter selected by `.thetaattributes`, `checkout`
+//! runs the smudge filter, `merge`/`diff` dispatch registered drivers,
+//! and `commit`/`push` fire hooks.
+
+use super::attributes::Attributes;
+use super::drivers::{DriverRegistry, MergeOptions, MergeOutcome};
+use super::index::Index;
+use super::mergebase::{commits_between, is_ancestor, merge_base};
+use super::object::{Commit, Object, Oid, Tree, TreeEntry};
+use super::odb::Odb;
+use super::refs::{Head, Refs};
+use super::status::{FileStatus, Status};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Name of the repository metadata directory (Git's `.git`).
+pub const THETA_DIR: &str = ".theta";
+
+/// An opened repository.
+#[derive(Debug, Clone)]
+pub struct Repository {
+    worktree: PathBuf,
+    theta_dir: PathBuf,
+    odb: Odb,
+    refs: Refs,
+}
+
+/// Result of a merge.
+#[derive(Debug, Clone)]
+pub struct MergeReport {
+    pub commit: Option<Oid>,
+    pub fast_forward: bool,
+    pub already_up_to_date: bool,
+    /// Paths whose conflicts were resolved by a merge driver.
+    pub driver_resolved: Vec<String>,
+}
+
+/// Result of a push.
+#[derive(Debug, Clone)]
+pub struct PushReport {
+    pub commits: Vec<Oid>,
+    pub objects_sent: usize,
+    pub bytes_sent: u64,
+}
+
+impl Repository {
+    /// Create a new repository in `worktree`.
+    pub fn init(worktree: &Path) -> Result<Repository> {
+        let theta_dir = worktree.join(THETA_DIR);
+        if theta_dir.exists() {
+            bail!("repository already exists at {}", worktree.display());
+        }
+        std::fs::create_dir_all(&theta_dir)?;
+        let odb = Odb::init(&theta_dir)?;
+        let refs = Refs::init(&theta_dir, "main")?;
+        Ok(Repository {
+            worktree: worktree.to_path_buf(),
+            theta_dir,
+            odb,
+            refs,
+        })
+    }
+
+    /// Open an existing repository rooted exactly at `worktree`.
+    pub fn open(worktree: &Path) -> Result<Repository> {
+        let theta_dir = worktree.join(THETA_DIR);
+        if !theta_dir.exists() {
+            bail!("not a theta repository: {}", worktree.display());
+        }
+        Ok(Repository {
+            worktree: worktree.to_path_buf(),
+            theta_dir: theta_dir.clone(),
+            odb: Odb::open(&theta_dir),
+            refs: Refs::open(&theta_dir),
+        })
+    }
+
+    /// Walk up from `start` to find a repository (like `git` does).
+    pub fn discover(start: &Path) -> Result<Repository> {
+        let mut dir = start.canonicalize().unwrap_or_else(|_| start.to_path_buf());
+        loop {
+            if dir.join(THETA_DIR).exists() {
+                return Repository::open(&dir);
+            }
+            if !dir.pop() {
+                bail!("no theta repository found above {}", start.display());
+            }
+        }
+    }
+
+    pub fn worktree(&self) -> &Path {
+        &self.worktree
+    }
+
+    pub fn theta_dir(&self) -> &Path {
+        &self.theta_dir
+    }
+
+    pub fn odb(&self) -> &Odb {
+        &self.odb
+    }
+
+    pub fn refs(&self) -> &Refs {
+        &self.refs
+    }
+
+    pub fn attributes(&self) -> Result<Attributes> {
+        Attributes::load(&self.worktree)
+    }
+
+    pub fn head_commit(&self) -> Result<Option<Oid>> {
+        self.refs.head_commit()
+    }
+
+    fn abs(&self, rel: &str) -> PathBuf {
+        self.worktree.join(rel)
+    }
+
+    /// Normalize a user-supplied path to repo-relative forward-slash form.
+    pub fn rel_path(&self, path: &Path) -> Result<String> {
+        let abs = if path.is_absolute() {
+            path.to_path_buf()
+        } else {
+            self.worktree.join(path)
+        };
+        let rel = abs
+            .strip_prefix(&self.worktree)
+            .map_err(|_| anyhow::anyhow!("path {} is outside the repository", path.display()))?;
+        Ok(rel.to_string_lossy().replace('\\', "/"))
+    }
+
+    // ------------------------------------------------------------------
+    // add / commit
+    // ------------------------------------------------------------------
+
+    /// Stage files: run the clean filter (if any) and record the result.
+    pub fn add(&self, paths: &[&str]) -> Result<()> {
+        let attrs = self.attributes()?;
+        let mut index = Index::load(&self.theta_dir)?;
+        for path in paths {
+            let abs = self.abs(path);
+            let working = std::fs::read(&abs)
+                .with_context(|| format!("reading {} for staging", abs.display()))?;
+            let raw = Oid::of_bytes(&working);
+            let staged = match attrs.value_of(path, "filter") {
+                Some(name) => {
+                    let driver = DriverRegistry::filter(&name)
+                        .with_context(|| format!("no filter driver '{name}' registered"))?;
+                    driver.clean(self, path, &working)?
+                }
+                None => working,
+            };
+            let size = staged.len() as u64;
+            let oid = self.odb.write_blob(staged)?;
+            index.stage(path.to_string(), oid, size, raw);
+        }
+        index.save(&self.theta_dir)
+    }
+
+    /// Stage a file whose staged content is provided directly (used by
+    /// tooling that already produced clean-filter output).
+    pub fn add_staged_bytes(&self, path: &str, staged: Vec<u8>, raw: Oid) -> Result<Oid> {
+        let mut index = Index::load(&self.theta_dir)?;
+        let size = staged.len() as u64;
+        let oid = self.odb.write_blob(staged)?;
+        index.stage(path.to_string(), oid, size, raw);
+        index.save(&self.theta_dir)?;
+        Ok(oid)
+    }
+
+    /// The staged (clean-filtered) content HEAD/index currently has for a
+    /// path. Clean filters use this to compare against the prior version.
+    pub fn prior_staged(&self, path: &str) -> Result<Option<Vec<u8>>> {
+        let index = Index::load(&self.theta_dir)?;
+        if let Some(entry) = index.get(path) {
+            return Ok(Some(self.odb.read_blob(&entry.oid)?));
+        }
+        if let Some(head) = self.head_commit()? {
+            let tree = self.odb.read_tree(&self.odb.read_commit(&head)?.tree)?;
+            if let Some(oid) = tree.get(path) {
+                return Ok(Some(self.odb.read_blob(&oid)?));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Commit the index. Returns the new commit oid.
+    pub fn commit(&self, message: &str, author: &str) -> Result<Oid> {
+        let parents = match self.head_commit()? {
+            Some(head) => vec![head],
+            None => vec![],
+        };
+        self.commit_with_parents(message, author, parents)
+    }
+
+    fn now() -> u64 {
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0)
+    }
+
+    pub fn commit_with_parents(
+        &self,
+        message: &str,
+        author: &str,
+        parents: Vec<Oid>,
+    ) -> Result<Oid> {
+        let index = Index::load(&self.theta_dir)?;
+        if index.is_empty() {
+            bail!("nothing staged to commit");
+        }
+        let entries: Vec<TreeEntry> = index
+            .iter()
+            .map(|(path, e)| TreeEntry {
+                path: path.clone(),
+                oid: e.oid,
+            })
+            .collect();
+        let tree = self.odb.write(&Object::Tree(Tree::from_entries(entries)))?;
+        // Skip empty commits (same tree as sole parent).
+        if let [parent] = parents.as_slice() {
+            if self.odb.read_commit(parent)?.tree == tree {
+                return Ok(*parent);
+            }
+        }
+        let commit_oid = self.odb.write(&Object::Commit(Commit {
+            tree,
+            parents,
+            author: author.to_string(),
+            timestamp: Self::now(),
+            message: message.to_string(),
+        }))?;
+        match self.refs.head()? {
+            Head::Branch(name) => self.refs.set_branch(&name, &commit_oid)?,
+            Head::Detached(_) => self.refs.set_head(&Head::Detached(commit_oid))?,
+        }
+        for hooks in DriverRegistry::all_hooks() {
+            hooks.post_commit(self, &commit_oid)?;
+        }
+        Ok(commit_oid)
+    }
+
+    // ------------------------------------------------------------------
+    // checkout / branch
+    // ------------------------------------------------------------------
+
+    /// Resolve a revision string: branch name, full/short hex oid, or "HEAD".
+    pub fn resolve(&self, rev: &str) -> Result<Oid> {
+        if rev == "HEAD" {
+            return self
+                .head_commit()?
+                .context("HEAD does not point at a commit yet");
+        }
+        if let Some(oid) = self.refs.branch(rev)? {
+            return Ok(oid);
+        }
+        if rev.len() == 64 {
+            if let Ok(oid) = Oid::from_hex(rev) {
+                if self.odb.contains(&oid) {
+                    return Ok(oid);
+                }
+            }
+        }
+        // Short hex prefix.
+        if rev.len() >= 6 && rev.chars().all(|c| c.is_ascii_hexdigit()) {
+            let matches: Vec<Oid> = self
+                .odb
+                .list()?
+                .into_iter()
+                .filter(|o| o.to_hex().starts_with(rev))
+                .collect();
+            match matches.len() {
+                1 => return Ok(matches[0]),
+                n if n > 1 => bail!("ambiguous revision '{rev}' ({n} matches)"),
+                _ => {}
+            }
+        }
+        bail!("unknown revision '{rev}'")
+    }
+
+    /// Create a branch at HEAD (does not switch).
+    pub fn create_branch(&self, name: &str) -> Result<()> {
+        let head = self
+            .head_commit()?
+            .context("cannot branch from an unborn HEAD")?;
+        if self.refs.branch(name)?.is_some() {
+            bail!("branch '{name}' already exists");
+        }
+        self.refs.set_branch(name, &head)
+    }
+
+    /// Switch to a branch or commit, materializing its tree (smudge).
+    pub fn checkout(&self, target: &str) -> Result<()> {
+        let (head, commit_oid) = match self.refs.branch(target)? {
+            Some(oid) => (Head::Branch(target.to_string()), oid),
+            None => {
+                let oid = self.resolve(target)?;
+                (Head::Detached(oid), oid)
+            }
+        };
+        let old_tree = match self.head_commit()? {
+            Some(h) => Some(self.odb.read_tree(&self.odb.read_commit(&h)?.tree)?),
+            None => None,
+        };
+        // Point HEAD at the target *before* smudging so smudge filters
+        // that consult repository state see the checked-out revision.
+        self.refs.set_head(&head)?;
+        self.materialize(commit_oid, old_tree.as_ref())
+    }
+
+    /// Write the tree of `commit_oid` into the working tree, smudging
+    /// filtered files, and reset the index to match.
+    pub fn materialize(&self, commit_oid: Oid, old_tree: Option<&Tree>) -> Result<()> {
+        let commit = self.odb.read_commit(&commit_oid)?;
+        let tree = self.odb.read_tree(&commit.tree)?;
+
+        // Attributes of the target revision (so smudge uses the filters
+        // that were in effect when the tree was committed).
+        let attrs = match tree.get(super::attributes::ATTRIBUTES_FILE) {
+            Some(oid) => Attributes::parse(&String::from_utf8_lossy(&self.odb.read_blob(&oid)?)),
+            None => self.attributes()?,
+        };
+
+        let mut index_entries = Vec::new();
+        for entry in &tree.entries {
+            let staged = self.odb.read_blob(&entry.oid)?;
+            let working = match attrs.value_of(&entry.path, "filter") {
+                Some(name) => {
+                    let driver = DriverRegistry::filter(&name)
+                        .with_context(|| format!("no filter driver '{name}' registered"))?;
+                    driver.smudge(self, &entry.path, &staged)?
+                }
+                None => staged.clone(),
+            };
+            let abs = self.abs(&entry.path);
+            if let Some(parent) = abs.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(&abs, &working)?;
+            index_entries.push((
+                entry.path.clone(),
+                entry.oid,
+                staged.len() as u64,
+                Oid::of_bytes(&working),
+            ));
+        }
+
+        // Remove files tracked by the old revision but absent in the new.
+        if let Some(old) = old_tree {
+            for path in old.paths() {
+                if tree.get(path).is_none() {
+                    let abs = self.abs(path);
+                    if abs.exists() {
+                        std::fs::remove_file(&abs)?;
+                    }
+                }
+            }
+        }
+
+        let mut index = Index::load(&self.theta_dir)?;
+        index.reset_to(index_entries.into_iter());
+        index.save(&self.theta_dir)
+    }
+
+    // ------------------------------------------------------------------
+    // history / inspection
+    // ------------------------------------------------------------------
+
+    /// Commits reachable from HEAD, newest-first.
+    pub fn log(&self) -> Result<Vec<(Oid, Commit)>> {
+        let head = match self.head_commit()? {
+            Some(h) => h,
+            None => return Ok(vec![]),
+        };
+        let oids = commits_between(&self.odb, head, &[])?;
+        let mut out = Vec::with_capacity(oids.len());
+        for oid in oids.into_iter().rev() {
+            out.push((oid, self.odb.read_commit(&oid)?));
+        }
+        Ok(out)
+    }
+
+    /// The staged content of `path` at `commit` (None if absent).
+    pub fn read_path_at(&self, commit: Oid, path: &str) -> Result<Option<Vec<u8>>> {
+        let tree = self.odb.read_tree(&self.odb.read_commit(&commit)?.tree)?;
+        match tree.get(path) {
+            Some(oid) => Ok(Some(self.odb.read_blob(&oid)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Render a diff between two revisions (or HEAD and the index when
+    /// `old`/`new` are None), dispatching per-path diff drivers.
+    pub fn diff(&self, old: Option<Oid>, new: Option<Oid>) -> Result<String> {
+        let old_tree = match old {
+            Some(oid) => self.odb.read_tree(&self.odb.read_commit(&oid)?.tree)?,
+            None => match self.head_commit()? {
+                Some(h) => self.odb.read_tree(&self.odb.read_commit(&h)?.tree)?,
+                None => Tree::default(),
+            },
+        };
+        let new_tree = match new {
+            Some(oid) => self.odb.read_tree(&self.odb.read_commit(&oid)?.tree)?,
+            None => {
+                // Index as a tree.
+                let index = Index::load(&self.theta_dir)?;
+                Tree::from_entries(
+                    index
+                        .iter()
+                        .map(|(p, e)| TreeEntry {
+                            path: p.clone(),
+                            oid: e.oid,
+                        })
+                        .collect(),
+                )
+            }
+        };
+        let attrs = self.attributes()?;
+        let mut paths: Vec<&str> = old_tree.paths().chain(new_tree.paths()).collect();
+        paths.sort_unstable();
+        paths.dedup();
+
+        let mut out = String::new();
+        for path in paths {
+            let o = old_tree.get(path);
+            let n = new_tree.get(path);
+            if o == n {
+                continue;
+            }
+            let old_bytes = o.map(|oid| self.odb.read_blob(&oid)).transpose()?;
+            let new_bytes = n.map(|oid| self.odb.read_blob(&oid)).transpose()?;
+            let rendered = match attrs.value_of(path, "diff") {
+                Some(name) => {
+                    let driver = DriverRegistry::diff(&name)
+                        .with_context(|| format!("no diff driver '{name}' registered"))?;
+                    driver.diff(self, path, old_bytes.as_deref(), new_bytes.as_deref())?
+                }
+                None => default_text_diff(path, old_bytes.as_deref(), new_bytes.as_deref()),
+            };
+            out.push_str(&rendered);
+        }
+        Ok(out)
+    }
+
+    /// Repository status.
+    pub fn status(&self) -> Result<Status> {
+        let index = Index::load(&self.theta_dir)?;
+        let head = self.head_commit()?;
+        let head_tree = match head {
+            Some(h) => Some(self.odb.read_tree(&self.odb.read_commit(&h)?.tree)?),
+            None => None,
+        };
+        let mut entries: BTreeMap<String, FileStatus> = BTreeMap::new();
+
+        // Index vs HEAD.
+        for (path, e) in index.iter() {
+            match head_tree.as_ref().and_then(|t| t.get(path)) {
+                None => {
+                    entries.insert(path.clone(), FileStatus::Added);
+                }
+                Some(oid) if oid != e.oid => {
+                    entries.insert(path.clone(), FileStatus::Staged);
+                }
+                _ => {}
+            }
+        }
+        // HEAD vs index: deletions.
+        if let Some(tree) = &head_tree {
+            for path in tree.paths() {
+                if index.get(path).is_none() {
+                    entries.insert(path.to_string(), FileStatus::Deleted);
+                }
+            }
+        }
+        // Working tree vs index.
+        let mut work_files = Vec::new();
+        collect_files(&self.worktree, &self.worktree, &mut work_files)?;
+        for path in &work_files {
+            match index.get(path) {
+                Some(e) => {
+                    let bytes = std::fs::read(self.abs(path))?;
+                    if Oid::of_bytes(&bytes) != e.raw {
+                        entries.insert(path.clone(), FileStatus::Modified);
+                    }
+                }
+                None => {
+                    entries.insert(path.clone(), FileStatus::Untracked);
+                }
+            }
+        }
+        // Index entries whose working file vanished.
+        for (path, _) in index.iter() {
+            if !self.abs(path).exists() {
+                entries.insert(path.clone(), FileStatus::Deleted);
+            }
+        }
+
+        Ok(Status {
+            entries: entries.into_iter().collect(),
+            head,
+            branch: match self.refs.head()? {
+                Head::Branch(b) => Some(b),
+                Head::Detached(_) => None,
+            },
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // merge
+    // ------------------------------------------------------------------
+
+    /// Merge `other` (a branch name or revision) into HEAD.
+    pub fn merge(&self, other: &str, opts: &MergeOptions, author: &str) -> Result<MergeReport> {
+        let ours = self
+            .head_commit()?
+            .context("cannot merge into an unborn HEAD")?;
+        let theirs = self.resolve(other)?;
+
+        if is_ancestor(&self.odb, theirs, ours)? {
+            return Ok(MergeReport {
+                commit: None,
+                fast_forward: false,
+                already_up_to_date: true,
+                driver_resolved: vec![],
+            });
+        }
+        if is_ancestor(&self.odb, ours, theirs)? {
+            // Fast-forward.
+            let old_tree = self.odb.read_tree(&self.odb.read_commit(&ours)?.tree)?;
+            match self.refs.head()? {
+                Head::Branch(name) => self.refs.set_branch(&name, &theirs)?,
+                Head::Detached(_) => self.refs.set_head(&Head::Detached(theirs))?,
+            }
+            self.materialize(theirs, Some(&old_tree))?;
+            return Ok(MergeReport {
+                commit: Some(theirs),
+                fast_forward: true,
+                already_up_to_date: false,
+                driver_resolved: vec![],
+            });
+        }
+
+        let base = merge_base(&self.odb, ours, theirs)?;
+        let base_tree = match base {
+            Some(b) => self.odb.read_tree(&self.odb.read_commit(&b)?.tree)?,
+            None => Tree::default(),
+        };
+        let our_tree = self.odb.read_tree(&self.odb.read_commit(&ours)?.tree)?;
+        let their_tree = self.odb.read_tree(&self.odb.read_commit(&theirs)?.tree)?;
+        let attrs = self.attributes()?;
+
+        let mut paths: Vec<&str> = base_tree
+            .paths()
+            .chain(our_tree.paths())
+            .chain(their_tree.paths())
+            .collect();
+        paths.sort_unstable();
+        paths.dedup();
+
+        let mut merged_entries = Vec::new();
+        let mut driver_resolved = Vec::new();
+        for path in paths {
+            let o = base_tree.get(path);
+            let a = our_tree.get(path);
+            let b = their_tree.get(path);
+            let pick = if a == b {
+                a // identical (or both deleted)
+            } else if a == o {
+                b // only theirs changed
+            } else if b == o {
+                a // only ours changed
+            } else {
+                // Both sides changed: dispatch the merge driver.
+                let name = attrs
+                    .value_of(path, "merge")
+                    .with_context(|| format!("conflict in '{path}' and no merge driver set"))?;
+                let driver = DriverRegistry::merge(&name)
+                    .with_context(|| format!("no merge driver '{name}' registered"))?;
+                let base_bytes = o.map(|oid| self.odb.read_blob(&oid)).transpose()?;
+                let our_bytes = a.map(|oid| self.odb.read_blob(&oid)).transpose()?;
+                let their_bytes = b.map(|oid| self.odb.read_blob(&oid)).transpose()?;
+                match driver.merge(
+                    self,
+                    path,
+                    base_bytes.as_deref(),
+                    our_bytes.as_deref(),
+                    their_bytes.as_deref(),
+                    opts,
+                )? {
+                    MergeOutcome::Resolved(bytes) => {
+                        driver_resolved.push(path.to_string());
+                        Some(self.odb.write_blob(bytes)?)
+                    }
+                    MergeOutcome::Conflict(msg) => {
+                        bail!("merge conflict in '{path}': {msg}")
+                    }
+                }
+            };
+            if let Some(oid) = pick {
+                merged_entries.push(TreeEntry {
+                    path: path.to_string(),
+                    oid,
+                });
+            }
+        }
+
+        let merged_tree = self
+            .odb
+            .write(&Object::Tree(Tree::from_entries(merged_entries)))?;
+        let commit_oid = self.odb.write(&Object::Commit(Commit {
+            tree: merged_tree,
+            parents: vec![ours, theirs],
+            author: author.to_string(),
+            timestamp: Self::now(),
+            message: format!("Merge '{other}'"),
+        }))?;
+        match self.refs.head()? {
+            Head::Branch(name) => self.refs.set_branch(&name, &commit_oid)?,
+            Head::Detached(_) => self.refs.set_head(&Head::Detached(commit_oid))?,
+        }
+        let old_tree = self.odb.read_tree(&self.odb.read_commit(&ours)?.tree)?;
+        self.materialize(commit_oid, Some(&old_tree))?;
+        for hooks in DriverRegistry::all_hooks() {
+            hooks.post_commit(self, &commit_oid)?;
+        }
+        Ok(MergeReport {
+            commit: Some(commit_oid),
+            fast_forward: false,
+            already_up_to_date: false,
+            driver_resolved,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // config
+    // ------------------------------------------------------------------
+
+    /// Read a key from `.theta/config` (flat JSON string map).
+    pub fn config_get(&self, key: &str) -> Result<Option<String>> {
+        let path = self.theta_dir.join("config");
+        if !path.exists() {
+            return Ok(None);
+        }
+        let json = crate::util::json::Json::parse(&std::fs::read_to_string(&path)?)
+            .context("parsing .theta/config")?;
+        Ok(json.get(key).and_then(|v| v.as_str()).map(|s| s.to_string()))
+    }
+
+    /// Write a key to `.theta/config`.
+    pub fn config_set(&self, key: &str, value: &str) -> Result<()> {
+        use crate::util::json::{Json, JsonObj};
+        let path = self.theta_dir.join("config");
+        let mut obj = if path.exists() {
+            match Json::parse(&std::fs::read_to_string(&path)?) {
+                Ok(Json::Obj(o)) => o,
+                _ => JsonObj::new(),
+            }
+        } else {
+            JsonObj::new()
+        };
+        obj.insert(key.to_string(), value);
+        std::fs::write(&path, Json::Obj(obj).to_string_pretty()).context("writing config")
+    }
+
+    // ------------------------------------------------------------------
+    // remote transfer
+    // ------------------------------------------------------------------
+
+    /// Push `branch` to a directory remote, transferring missing objects.
+    pub fn push(&self, remote: &Path, branch: &str) -> Result<PushReport> {
+        let tip = self
+            .refs
+            .branch(branch)?
+            .with_context(|| format!("no local branch '{branch}'"))?;
+        let remote_repo = RemoteDir::open_or_init(remote)?;
+        let remote_tip = remote_repo.refs.branch(branch)?;
+
+        if let Some(rt) = remote_tip {
+            if rt == tip {
+                return Ok(PushReport {
+                    commits: vec![],
+                    objects_sent: 0,
+                    bytes_sent: 0,
+                });
+            }
+            if !self.odb.contains(&rt) || !is_ancestor(&self.odb, rt, tip)? {
+                bail!("push rejected: remote '{branch}' is not an ancestor of local (fetch first)");
+            }
+        }
+
+        let exclude: Vec<Oid> = remote_tip.into_iter().collect();
+        let commits = commits_between(&self.odb, tip, &exclude)?;
+
+        // Pre-push hooks run before any object transfer (paper: LFS sync).
+        for hooks in DriverRegistry::all_hooks() {
+            hooks.pre_push(self, remote, &commits)?;
+        }
+
+        let mut objects_sent = 0usize;
+        let mut bytes_sent = 0u64;
+        for &commit_oid in &commits {
+            let commit = self.odb.read_commit(&commit_oid)?;
+            let tree = self.odb.read_tree(&commit.tree)?;
+            for entry in &tree.entries {
+                if !remote_repo.odb.contains(&entry.oid) {
+                    let blob = self.odb.read(&entry.oid)?;
+                    bytes_sent += blob_size(&blob);
+                    remote_repo.odb.write(&blob)?;
+                    objects_sent += 1;
+                }
+            }
+            if !remote_repo.odb.contains(&commit.tree) {
+                remote_repo.odb.write(&Object::Tree(tree))?;
+                objects_sent += 1;
+            }
+            if !remote_repo.odb.contains(&commit_oid) {
+                remote_repo.odb.write(&Object::Commit(commit))?;
+                objects_sent += 1;
+            }
+        }
+        remote_repo.refs.set_branch(branch, &tip)?;
+        Ok(PushReport {
+            commits,
+            objects_sent,
+            bytes_sent,
+        })
+    }
+
+    /// Fetch `branch` from a directory remote into the local odb and
+    /// fast-forward the local branch. Does not touch the working tree.
+    pub fn fetch(&self, remote: &Path, branch: &str) -> Result<Oid> {
+        let remote_repo = RemoteDir::open_or_init(remote)?;
+        let remote_tip = remote_repo
+            .refs
+            .branch(branch)?
+            .with_context(|| format!("remote has no branch '{branch}'"))?;
+        let local_tip = self.refs.branch(branch)?;
+
+        let exclude: Vec<Oid> = local_tip
+            .into_iter()
+            .filter(|t| remote_repo.odb.contains(t))
+            .collect();
+        let commits = commits_between(&remote_repo.odb, remote_tip, &exclude)?;
+        for &commit_oid in &commits {
+            let commit = remote_repo.odb.read_commit(&commit_oid)?;
+            let tree = remote_repo.odb.read_tree(&commit.tree)?;
+            for entry in &tree.entries {
+                if !self.odb.contains(&entry.oid) {
+                    self.odb.write(&remote_repo.odb.read(&entry.oid)?)?;
+                }
+            }
+            self.odb.write(&Object::Tree(tree))?;
+            self.odb.write(&Object::Commit(commit))?;
+        }
+        if let Some(lt) = local_tip {
+            if lt != remote_tip && !is_ancestor(&self.odb, lt, remote_tip)? {
+                bail!("fetch: local branch '{branch}' has diverged from remote");
+            }
+        }
+        self.refs.set_branch(branch, &remote_tip)?;
+        Ok(remote_tip)
+    }
+
+    /// Fetch + materialize if HEAD is on that branch (paper's `git pull`).
+    pub fn pull(&self, remote: &Path, branch: &str) -> Result<Oid> {
+        let old_tree = match self.head_commit()? {
+            Some(h) => Some(self.odb.read_tree(&self.odb.read_commit(&h)?.tree)?),
+            None => None,
+        };
+        // Remember the remote (like git's `origin`) so smudge filters can
+        // lazily download large objects referenced by pulled commits.
+        if self.config_get("remote")?.is_none() {
+            if let Some(r) = remote.to_str() {
+                self.config_set("remote", r)?;
+            }
+        }
+        let tip = self.fetch(remote, branch)?;
+        if self.refs.head()? == Head::Branch(branch.to_string()) {
+            self.materialize(tip, old_tree.as_ref())?;
+        }
+        Ok(tip)
+    }
+}
+
+/// A bare directory remote: just an odb and refs.
+struct RemoteDir {
+    odb: Odb,
+    refs: Refs,
+}
+
+impl RemoteDir {
+    fn open_or_init(path: &Path) -> Result<RemoteDir> {
+        std::fs::create_dir_all(path.join("refs/heads"))?;
+        let odb = Odb::init(path)?;
+        let refs = Refs::open(path);
+        if !path.join("HEAD").exists() {
+            Refs::init(path, "main")?;
+        }
+        Ok(RemoteDir { odb, refs })
+    }
+}
+
+fn blob_size(obj: &Object) -> u64 {
+    match obj {
+        Object::Blob(b) => b.len() as u64,
+        _ => 0,
+    }
+}
+
+fn collect_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name == THETA_DIR {
+            continue;
+        }
+        let path = entry.path();
+        if entry.file_type()?.is_dir() {
+            collect_files(root, &path, out)?;
+        } else {
+            out.push(
+                path.strip_prefix(root)
+                    .unwrap()
+                    .to_string_lossy()
+                    .replace('\\', "/"),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Minimal line-based unified-ish diff for unfiltered text files.
+fn default_text_diff(path: &str, old: Option<&[u8]>, new: Option<&[u8]>) -> String {
+    let mut out = format!("--- {path}\n");
+    match (old, new) {
+        (None, Some(n)) => {
+            out.push_str(&format!("new file ({} bytes)\n", n.len()));
+        }
+        (Some(o), None) => {
+            out.push_str(&format!("deleted ({} bytes)\n", o.len()));
+        }
+        (Some(o), Some(n)) => {
+            let (os, ns) = (String::from_utf8_lossy(o), String::from_utf8_lossy(n));
+            let old_lines: Vec<&str> = os.lines().collect();
+            let new_lines: Vec<&str> = ns.lines().collect();
+            for l in &old_lines {
+                if !new_lines.contains(l) {
+                    out.push_str(&format!("- {l}\n"));
+                }
+            }
+            for l in &new_lines {
+                if !old_lines.contains(l) {
+                    out.push_str(&format!("+ {l}\n"));
+                }
+            }
+        }
+        (None, None) => {}
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn write(repo: &Repository, rel: &str, content: &str) {
+        let abs = repo.worktree().join(rel);
+        std::fs::create_dir_all(abs.parent().unwrap()).unwrap();
+        std::fs::write(abs, content).unwrap();
+    }
+
+    #[test]
+    fn init_add_commit_log() {
+        let td = TempDir::new("repo").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        write(&repo, "train.py", "print('hi')\n");
+        repo.add(&["train.py"]).unwrap();
+        let c1 = repo.commit("initial", "tester").unwrap();
+        write(&repo, "train.py", "print('v2')\n");
+        repo.add(&["train.py"]).unwrap();
+        let c2 = repo.commit("update", "tester").unwrap();
+        let log = repo.log().unwrap();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].0, c2);
+        assert_eq!(log[1].0, c1);
+        assert_eq!(
+            repo.read_path_at(c1, "train.py").unwrap().unwrap(),
+            b"print('hi')\n"
+        );
+    }
+
+    #[test]
+    fn empty_commit_is_skipped() {
+        let td = TempDir::new("repo").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        write(&repo, "a", "1");
+        repo.add(&["a"]).unwrap();
+        let c1 = repo.commit("c1", "t").unwrap();
+        repo.add(&["a"]).unwrap();
+        let c2 = repo.commit("c2", "t").unwrap();
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn branch_checkout_restores_content() {
+        let td = TempDir::new("repo").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        write(&repo, "f.txt", "base");
+        repo.add(&["f.txt"]).unwrap();
+        repo.commit("base", "t").unwrap();
+
+        repo.create_branch("feature").unwrap();
+        repo.checkout("feature").unwrap();
+        write(&repo, "f.txt", "feature-version");
+        repo.add(&["f.txt"]).unwrap();
+        repo.commit("feat", "t").unwrap();
+
+        repo.checkout("main").unwrap();
+        assert_eq!(
+            std::fs::read_to_string(td.join("f.txt")).unwrap(),
+            "base"
+        );
+        repo.checkout("feature").unwrap();
+        assert_eq!(
+            std::fs::read_to_string(td.join("f.txt")).unwrap(),
+            "feature-version"
+        );
+    }
+
+    #[test]
+    fn checkout_removes_files_absent_in_target() {
+        let td = TempDir::new("repo").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        write(&repo, "keep.txt", "k");
+        repo.add(&["keep.txt"]).unwrap();
+        repo.commit("c1", "t").unwrap();
+        repo.create_branch("extra").unwrap();
+        repo.checkout("extra").unwrap();
+        write(&repo, "extra.txt", "e");
+        repo.add(&["extra.txt"]).unwrap();
+        repo.commit("c2", "t").unwrap();
+        repo.checkout("main").unwrap();
+        assert!(!td.join("extra.txt").exists());
+        assert!(td.join("keep.txt").exists());
+    }
+
+    #[test]
+    fn merge_non_overlapping_changes() {
+        let td = TempDir::new("repo").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        write(&repo, "a.txt", "a");
+        write(&repo, "b.txt", "b");
+        repo.add(&["a.txt", "b.txt"]).unwrap();
+        repo.commit("base", "t").unwrap();
+
+        repo.create_branch("side").unwrap();
+        repo.checkout("side").unwrap();
+        write(&repo, "a.txt", "a-side");
+        repo.add(&["a.txt"]).unwrap();
+        repo.commit("side edit", "t").unwrap();
+
+        repo.checkout("main").unwrap();
+        write(&repo, "b.txt", "b-main");
+        repo.add(&["b.txt"]).unwrap();
+        repo.commit("main edit", "t").unwrap();
+
+        let report = repo.merge("side", &MergeOptions::default(), "t").unwrap();
+        assert!(!report.fast_forward && !report.already_up_to_date);
+        assert_eq!(std::fs::read_to_string(td.join("a.txt")).unwrap(), "a-side");
+        assert_eq!(std::fs::read_to_string(td.join("b.txt")).unwrap(), "b-main");
+        // Merge commit has two parents.
+        let head = repo.head_commit().unwrap().unwrap();
+        assert_eq!(repo.odb().read_commit(&head).unwrap().parents.len(), 2);
+    }
+
+    #[test]
+    fn merge_fast_forward_and_up_to_date() {
+        let td = TempDir::new("repo").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        write(&repo, "f", "1");
+        repo.add(&["f"]).unwrap();
+        repo.commit("c1", "t").unwrap();
+        repo.create_branch("ahead").unwrap();
+        repo.checkout("ahead").unwrap();
+        write(&repo, "f", "2");
+        repo.add(&["f"]).unwrap();
+        let c2 = repo.commit("c2", "t").unwrap();
+        repo.checkout("main").unwrap();
+        let report = repo.merge("ahead", &MergeOptions::default(), "t").unwrap();
+        assert!(report.fast_forward);
+        assert_eq!(report.commit, Some(c2));
+        assert_eq!(std::fs::read_to_string(td.join("f")).unwrap(), "2");
+        let report2 = repo.merge("ahead", &MergeOptions::default(), "t").unwrap();
+        assert!(report2.already_up_to_date);
+    }
+
+    #[test]
+    fn merge_conflict_without_driver_errors() {
+        let td = TempDir::new("repo").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        write(&repo, "f", "base");
+        repo.add(&["f"]).unwrap();
+        repo.commit("base", "t").unwrap();
+        repo.create_branch("side").unwrap();
+        repo.checkout("side").unwrap();
+        write(&repo, "f", "side");
+        repo.add(&["f"]).unwrap();
+        repo.commit("side", "t").unwrap();
+        repo.checkout("main").unwrap();
+        write(&repo, "f", "main");
+        repo.add(&["f"]).unwrap();
+        repo.commit("main", "t").unwrap();
+        assert!(repo.merge("side", &MergeOptions::default(), "t").is_err());
+    }
+
+    #[test]
+    fn status_lifecycle() {
+        let td = TempDir::new("repo").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        write(&repo, "f", "1");
+        let st = repo.status().unwrap();
+        assert_eq!(st.of("f"), Some(&FileStatus::Untracked));
+        repo.add(&["f"]).unwrap();
+        assert_eq!(repo.status().unwrap().of("f"), Some(&FileStatus::Added));
+        repo.commit("c", "t").unwrap();
+        assert!(repo.status().unwrap().is_clean());
+        write(&repo, "f", "2");
+        assert_eq!(repo.status().unwrap().of("f"), Some(&FileStatus::Modified));
+        std::fs::remove_file(td.join("f")).unwrap();
+        assert_eq!(repo.status().unwrap().of("f"), Some(&FileStatus::Deleted));
+    }
+
+    #[test]
+    fn push_pull_roundtrip() {
+        let td_a = TempDir::new("repoA").unwrap();
+        let td_b = TempDir::new("repoB").unwrap();
+        let td_r = TempDir::new("remote").unwrap();
+        let a = Repository::init(td_a.path()).unwrap();
+        write(&a, "m.txt", "v1");
+        a.add(&["m.txt"]).unwrap();
+        a.commit("v1", "alice").unwrap();
+        let report = a.push(td_r.path(), "main").unwrap();
+        assert!(report.objects_sent >= 3);
+
+        let b = Repository::init(td_b.path()).unwrap();
+        b.pull(td_r.path(), "main").unwrap();
+        assert_eq!(std::fs::read_to_string(td_b.join("m.txt")).unwrap(), "v1");
+
+        // Second push transfers only the delta.
+        write(&a, "m.txt", "v2");
+        a.add(&["m.txt"]).unwrap();
+        a.commit("v2", "alice").unwrap();
+        let report2 = a.push(td_r.path(), "main").unwrap();
+        assert_eq!(report2.commits.len(), 1);
+        b.pull(td_r.path(), "main").unwrap();
+        assert_eq!(std::fs::read_to_string(td_b.join("m.txt")).unwrap(), "v2");
+    }
+
+    #[test]
+    fn push_rejects_non_fast_forward() {
+        let td_a = TempDir::new("repoA").unwrap();
+        let td_b = TempDir::new("repoB").unwrap();
+        let td_r = TempDir::new("remote").unwrap();
+        let a = Repository::init(td_a.path()).unwrap();
+        write(&a, "f", "1");
+        a.add(&["f"]).unwrap();
+        a.commit("c1", "alice").unwrap();
+        a.push(td_r.path(), "main").unwrap();
+
+        let b = Repository::init(td_b.path()).unwrap();
+        b.pull(td_r.path(), "main").unwrap();
+        std::fs::write(td_b.join("f"), "b-edit").unwrap();
+        b.add(&["f"]).unwrap();
+        b.commit("b2", "bob").unwrap();
+        b.push(td_r.path(), "main").unwrap();
+
+        // A commits without fetching; push must be rejected.
+        write(&a, "f", "a-edit");
+        a.add(&["f"]).unwrap();
+        a.commit("a2", "alice").unwrap();
+        assert!(a.push(td_r.path(), "main").is_err());
+    }
+
+    #[test]
+    fn resolve_short_hex_and_head() {
+        let td = TempDir::new("repo").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        write(&repo, "f", "1");
+        repo.add(&["f"]).unwrap();
+        let c1 = repo.commit("c1", "t").unwrap();
+        assert_eq!(repo.resolve("HEAD").unwrap(), c1);
+        assert_eq!(repo.resolve(&c1.to_hex()).unwrap(), c1);
+        assert_eq!(repo.resolve(&c1.to_hex()[..12]).unwrap(), c1);
+        assert!(repo.resolve("nonexistent").is_err());
+    }
+
+    #[test]
+    fn diff_default_driver() {
+        let td = TempDir::new("repo").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        write(&repo, "f.txt", "alpha\nbeta\n");
+        repo.add(&["f.txt"]).unwrap();
+        let c1 = repo.commit("c1", "t").unwrap();
+        write(&repo, "f.txt", "alpha\ngamma\n");
+        repo.add(&["f.txt"]).unwrap();
+        let c2 = repo.commit("c2", "t").unwrap();
+        let diff = repo.diff(Some(c1), Some(c2)).unwrap();
+        assert!(diff.contains("- beta"));
+        assert!(diff.contains("+ gamma"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Working-tree status: staged / modified / untracked / deleted.
+
+use super::object::Oid;
+
+/// Status of one path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FileStatus {
+    /// Staged and new relative to HEAD.
+    Added,
+    /// Staged with content differing from HEAD.
+    Staged,
+    /// Working tree differs from the staged version.
+    Modified,
+    /// In HEAD or index but missing from the working tree.
+    Deleted,
+    /// Present in the working tree but never staged.
+    Untracked,
+}
+
+/// Full repository status snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct Status {
+    /// (path, status) pairs sorted by path.
+    pub entries: Vec<(String, FileStatus)>,
+    /// HEAD commit at the time of the snapshot.
+    pub head: Option<Oid>,
+    /// Current branch name (None when detached).
+    pub branch: Option<String>,
+}
+
+impl Status {
+    pub fn is_clean(&self) -> bool {
+        self.entries
+            .iter()
+            .all(|(_, s)| matches!(s, FileStatus::Untracked))
+    }
+
+    pub fn of(&self, path: &str) -> Option<&FileStatus> {
+        self.entries
+            .iter()
+            .find(|(p, _)| p == path)
+            .map(|(_, s)| s)
+    }
+
+    /// Render like `git status --short`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        match (&self.branch, &self.head) {
+            (Some(b), Some(h)) => out.push_str(&format!("On branch {b} at {}\n", h.short())),
+            (Some(b), None) => out.push_str(&format!("On branch {b} (no commits yet)\n")),
+            (None, Some(h)) => out.push_str(&format!("HEAD detached at {}\n", h.short())),
+            (None, None) => out.push_str("Empty repository\n"),
+        }
+        for (path, st) in &self.entries {
+            let code = match st {
+                FileStatus::Added => "A ",
+                FileStatus::Staged => "M ",
+                FileStatus::Modified => " M",
+                FileStatus::Deleted => " D",
+                FileStatus::Untracked => "??",
+            };
+            out.push_str(&format!("{code} {path}\n"));
+        }
+        if self.entries.is_empty() {
+            out.push_str("nothing to commit, working tree clean\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_queries() {
+        let st = Status {
+            entries: vec![
+                ("a.txt".into(), FileStatus::Added),
+                ("b.txt".into(), FileStatus::Modified),
+                ("c.txt".into(), FileStatus::Untracked),
+            ],
+            head: Some(Oid::of_bytes(b"h")),
+            branch: Some("main".into()),
+        };
+        assert!(!st.is_clean());
+        assert_eq!(st.of("b.txt"), Some(&FileStatus::Modified));
+        let rendered = st.render();
+        assert!(rendered.contains("On branch main"));
+        assert!(rendered.contains("A  a.txt"));
+        assert!(rendered.contains(" M b.txt"));
+        assert!(rendered.contains("?? c.txt"));
+    }
+
+    #[test]
+    fn untracked_only_is_clean() {
+        let st = Status {
+            entries: vec![("x".into(), FileStatus::Untracked)],
+            head: None,
+            branch: Some("main".into()),
+        };
+        assert!(st.is_clean());
+    }
+}

@@ -1,0 +1,23 @@
+//! Git LFS substrate (paper §2.4).
+//!
+//! Reimplements the slice of Git LFS that Git-Theta builds on: pointer
+//! files, a content-addressed large-object store under
+//! `.theta/lfs/objects/`, clean/smudge filters that swap file contents
+//! for pointers, a pre-push hook that syncs referenced objects to an
+//! LFS remote, and lazy smudge-time download from the remote.
+//!
+//! It is used two ways in this repo:
+//! 1. as Git-Theta's parameter-group storage backend (paper §3.3
+//!    "Storage"), and
+//! 2. as the **Table 1 baseline**: tracking a whole checkpoint as one
+//!    opaque LFS blob (`baseline/`).
+
+pub mod filter;
+pub mod pointer;
+pub mod remote;
+pub mod store;
+
+pub use filter::{register_lfs, LfsFilter, LfsHooks};
+pub use pointer::Pointer;
+pub use remote::{sync_to_remote, LfsRemote};
+pub use store::LfsStore;

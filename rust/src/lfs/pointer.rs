@@ -1,0 +1,103 @@
+//! LFS pointer files.
+//!
+//! A pointer file replaces a large binary in version control (paper
+//! §2.4): it records the spec version, the object's sha256, and its
+//! size. Format mirrors Git LFS:
+//!
+//! ```text
+//! version https://git-lfs.github.com/spec/v1
+//! oid sha256:4d7a214614ab2935c943f9e0ff69d22eadbb8f32b1258daaa5e2ca24d17e2393
+//! size 12345
+//! ```
+
+use crate::gitcore::object::Oid;
+use anyhow::{bail, Context, Result};
+
+pub const SPEC_VERSION: &str = "https://git-lfs.github.com/spec/v1";
+
+/// A parsed LFS pointer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pointer {
+    pub oid: Oid,
+    pub size: u64,
+}
+
+impl Pointer {
+    pub fn new(oid: Oid, size: u64) -> Pointer {
+        Pointer { oid, size }
+    }
+
+    /// Serialize to pointer-file text.
+    pub fn to_text(&self) -> String {
+        format!(
+            "version {SPEC_VERSION}\noid sha256:{}\nsize {}\n",
+            self.oid, self.size
+        )
+    }
+
+    /// Parse pointer-file text.
+    pub fn parse(text: &str) -> Result<Pointer> {
+        let mut version = None;
+        let mut oid = None;
+        let mut size = None;
+        for line in text.lines() {
+            let (key, val) = line
+                .split_once(' ')
+                .with_context(|| format!("malformed pointer line '{line}'"))?;
+            match key {
+                "version" => version = Some(val.to_string()),
+                "oid" => {
+                    let hex = val
+                        .strip_prefix("sha256:")
+                        .context("pointer oid must be sha256")?;
+                    oid = Some(Oid::from_hex(hex)?);
+                }
+                "size" => size = Some(val.parse::<u64>().context("bad pointer size")?),
+                _ => {} // forward-compatible
+            }
+        }
+        let version = version.context("pointer missing version")?;
+        if version != SPEC_VERSION {
+            bail!("unsupported pointer spec '{version}'");
+        }
+        Ok(Pointer {
+            oid: oid.context("pointer missing oid")?,
+            size: size.context("pointer missing size")?,
+        })
+    }
+
+    /// Heuristic: does this staged blob look like a pointer file?
+    pub fn is_pointer(bytes: &[u8]) -> bool {
+        bytes.len() < 400 && bytes.starts_with(b"version https://git-lfs")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let p = Pointer::new(Oid::of_bytes(b"big model"), 123456789);
+        let text = p.to_text();
+        assert!(Pointer::is_pointer(text.as_bytes()));
+        assert_eq!(Pointer::parse(&text).unwrap(), p);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Pointer::parse("").is_err());
+        assert!(Pointer::parse("version wrong\noid sha256:00\nsize 1\n").is_err());
+        assert!(Pointer::parse(&format!(
+            "version {SPEC_VERSION}\noid md5:abc\nsize 1\n"
+        ))
+        .is_err());
+        assert!(Pointer::parse(&format!("version {SPEC_VERSION}\nsize 1\n")).is_err());
+    }
+
+    #[test]
+    fn is_pointer_rejects_binaries() {
+        assert!(!Pointer::is_pointer(&vec![0u8; 100]));
+        assert!(!Pointer::is_pointer(&vec![b'v'; 1000]));
+    }
+}

@@ -1,0 +1,169 @@
+//! The local large-object store: `.theta/lfs/objects/<aa>/<rest>`.
+//!
+//! Objects are stored raw (compression is the serializer's job — see
+//! `theta/serialize/`), addressed by sha256, written atomically, and
+//! deduplicated by content.
+
+use crate::gitcore::object::Oid;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct LfsStore {
+    root: PathBuf,
+}
+
+impl LfsStore {
+    /// Open the store under a repository's `.theta` dir (creates lazily).
+    pub fn open(theta_dir: &Path) -> LfsStore {
+        LfsStore {
+            root: theta_dir.join("lfs/objects"),
+        }
+    }
+
+    /// Open a bare store rooted at an arbitrary directory (remotes).
+    pub fn at(root: &Path) -> LfsStore {
+        LfsStore {
+            root: root.to_path_buf(),
+        }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path_for(&self, oid: &Oid) -> PathBuf {
+        let hex = oid.to_hex();
+        self.root.join(&hex[..2]).join(&hex[2..])
+    }
+
+    pub fn contains(&self, oid: &Oid) -> bool {
+        self.path_for(oid).exists()
+    }
+
+    /// Store a blob; returns (oid, size). Idempotent by content.
+    pub fn put(&self, bytes: &[u8]) -> Result<(Oid, u64)> {
+        let oid = Oid::of_bytes(bytes);
+        let path = self.path_for(&oid);
+        if path.exists() {
+            return Ok((oid, bytes.len() as u64));
+        }
+        std::fs::create_dir_all(path.parent().unwrap())?;
+        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok((oid, bytes.len() as u64))
+    }
+
+    /// Retrieve a blob, verifying its hash.
+    pub fn get(&self, oid: &Oid) -> Result<Vec<u8>> {
+        let path = self.path_for(oid);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("lfs object {} not found locally", oid.short()))?;
+        if Oid::of_bytes(&bytes) != *oid {
+            bail!("lfs object {} is corrupt on disk", oid.short());
+        }
+        Ok(bytes)
+    }
+
+    /// Copy an object from another store (no-op if present). Returns
+    /// whether a transfer actually happened (dedup metric).
+    pub fn fetch_from(&self, other: &LfsStore, oid: &Oid) -> Result<bool> {
+        if self.contains(oid) {
+            return Ok(false);
+        }
+        let bytes = other.get(oid)?;
+        self.put(&bytes)?;
+        Ok(true)
+    }
+
+    /// Total bytes stored.
+    pub fn disk_usage(&self) -> Result<u64> {
+        let mut total = 0;
+        if !self.root.exists() {
+            return Ok(0);
+        }
+        for shard in std::fs::read_dir(&self.root)? {
+            let shard = shard?;
+            if shard.file_type()?.is_dir() {
+                for f in std::fs::read_dir(shard.path())? {
+                    total += f?.metadata()?.len();
+                }
+            }
+        }
+        Ok(total)
+    }
+
+    /// All stored oids.
+    pub fn list(&self) -> Result<Vec<Oid>> {
+        let mut out = Vec::new();
+        if !self.root.exists() {
+            return Ok(out);
+        }
+        for shard in std::fs::read_dir(&self.root)? {
+            let shard = shard?;
+            if !shard.file_type()?.is_dir() {
+                continue;
+            }
+            let prefix = shard.file_name().to_string_lossy().to_string();
+            for f in std::fs::read_dir(shard.path())? {
+                let name = f?.file_name().to_string_lossy().to_string();
+                if let Ok(oid) = Oid::from_hex(&format!("{prefix}{name}")) {
+                    out.push(oid);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn put_get_dedup() {
+        let td = TempDir::new("lfs").unwrap();
+        let store = LfsStore::open(td.path());
+        let (oid, size) = store.put(&vec![42u8; 1000]).unwrap();
+        assert_eq!(size, 1000);
+        assert!(store.contains(&oid));
+        assert_eq!(store.get(&oid).unwrap(), vec![42u8; 1000]);
+        let before = store.disk_usage().unwrap();
+        store.put(&vec![42u8; 1000]).unwrap();
+        assert_eq!(store.disk_usage().unwrap(), before);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let td = TempDir::new("lfs").unwrap();
+        let store = LfsStore::open(td.path());
+        let (oid, _) = store.put(b"data").unwrap();
+        std::fs::write(store.path_for(&oid), b"tampered").unwrap();
+        assert!(store.get(&oid).is_err());
+    }
+
+    #[test]
+    fn fetch_from_other_store() {
+        let td_a = TempDir::new("lfsA").unwrap();
+        let td_b = TempDir::new("lfsB").unwrap();
+        let a = LfsStore::open(td_a.path());
+        let b = LfsStore::open(td_b.path());
+        let (oid, _) = a.put(b"shared weights").unwrap();
+        assert!(b.fetch_from(&a, &oid).unwrap());
+        assert!(!b.fetch_from(&a, &oid).unwrap()); // cached now
+        assert_eq!(b.get(&oid).unwrap(), b"shared weights");
+    }
+
+    #[test]
+    fn list_and_usage() {
+        let td = TempDir::new("lfs").unwrap();
+        let store = LfsStore::open(td.path());
+        assert_eq!(store.disk_usage().unwrap(), 0);
+        store.put(b"one").unwrap();
+        store.put(b"two!").unwrap();
+        assert_eq!(store.list().unwrap().len(), 2);
+        assert_eq!(store.disk_usage().unwrap(), 7);
+    }
+}

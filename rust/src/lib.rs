@@ -1,0 +1,42 @@
+//! # git-theta-rs
+//!
+//! A full-system reproduction of **"Git-Theta: A Git Extension for
+//! Collaborative Development of Machine Learning Models"** (Kandpal*,
+//! Lester*, et al., ICML 2023) as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! Layer 3 (this crate) is the entire request path: a from-scratch
+//! content-addressed VCS ([`gitcore`]), an LFS substrate ([`lfs`]),
+//! and Git-Theta itself ([`theta`]) — parameter-group-level tracking,
+//! communication-efficient updates, LSH change detection, automatic
+//! model merging, and meaningful diffs. Layers 2/1 (JAX model + Pallas
+//! kernels under `python/compile/`) are AOT-lowered to HLO once and
+//! executed from Rust via PJRT ([`runtime`]); Python never runs on the
+//! request path.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-reproduction results (Table 1, Figures 2–3).
+
+pub mod baseline;
+pub mod benchkit;
+pub mod checkpoint;
+pub mod cli;
+pub mod gitcore;
+pub mod lfs;
+pub mod mlops;
+pub mod runtime;
+pub mod tensor;
+pub mod theta;
+pub mod train;
+pub mod util;
+
+/// Register every built-in driver/plug-in (idempotent). Call once at
+/// startup before using repositories with filtered files.
+pub fn init() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        lfs::register_lfs();
+        theta::register_theta();
+    });
+}

@@ -1,0 +1,4 @@
+fn main() {
+    git_theta::init();
+    std::process::exit(git_theta::cli::run());
+}

@@ -1,0 +1,210 @@
+//! Kernel-backed numeric hot paths with pure-Rust fallbacks.
+//!
+//! Each operation here has two implementations: the AOT-compiled
+//! JAX/Pallas kernel (loaded through [`crate::runtime`] when the
+//! artifact exists) and a pure-Rust reference. The Rust paths are the
+//! *defaults* for LSH because signatures stored in metadata must be
+//! bit-deterministic across machines regardless of artifact presence;
+//! the kernel paths are used by the training/eval driver (Figure 3),
+//! the benchmark harness, and integration tests that cross-check the
+//! two implementations.
+
+use crate::runtime::Runtime;
+use crate::tensor::{weighted_average, Tensor};
+use crate::theta::lsh::{self, NUM_HASHES, POOL_SIZE};
+use anyhow::{bail, Context, Result};
+
+/// Rows per LSH kernel block: the artifact is lowered for a fixed
+/// (LSH_BLOCK_ROWS × POOL_SIZE) input tile.
+pub const LSH_BLOCK_ROWS: usize = 64;
+
+/// Pooled LSH projection through the Pallas kernel
+/// (`artifacts/lsh_project.hlo.txt`). Input is zero-padded to whole
+/// blocks; per-block partial projections are summed in f64 in Rust.
+pub fn lsh_project_kernel(values: &[f32]) -> Result<[f64; NUM_HASHES]> {
+    let rt = Runtime::global()?;
+    if !rt.available("lsh_project") {
+        bail!("artifact 'lsh_project' not built (run `make artifacts`)");
+    }
+    let params = lsh::params();
+    let pool = Tensor::from_f32(vec![POOL_SIZE, NUM_HASHES], params.pool.clone())?;
+
+    let block_elems = LSH_BLOCK_ROWS * POOL_SIZE;
+    let mut acc = [0f64; NUM_HASHES];
+    let mut offset = 0;
+    while offset < values.len() {
+        let take = (values.len() - offset).min(block_elems);
+        let mut block = vec![0f32; block_elems];
+        block[..take].copy_from_slice(&values[offset..offset + take]);
+        let x = Tensor::from_f32(vec![LSH_BLOCK_ROWS, POOL_SIZE], block)?;
+        let out = rt.execute("lsh_project", &[&x, &pool])?;
+        let proj = out
+            .first()
+            .context("lsh_project returned no output")?
+            .to_f32_vec()?;
+        for j in 0..NUM_HASHES {
+            acc[j] += proj[j] as f64;
+        }
+        offset += take;
+    }
+    Ok(acc)
+}
+
+/// LSH projection: kernel when `THETA_KERNEL_LSH=1` and available,
+/// otherwise the deterministic Rust path.
+pub fn lsh_project(values: &[f32]) -> [f64; NUM_HASHES] {
+    if std::env::var("THETA_KERNEL_LSH").as_deref() == Ok("1") {
+        if let Ok(p) = lsh_project_kernel(values) {
+            return p;
+        }
+    }
+    lsh::project(values)
+}
+
+/// Parameter averaging through the Pallas kernel
+/// (`artifacts/param_average.hlo.txt`), block-processed; falls back to
+/// the Rust implementation when the artifact is missing.
+pub fn average_pair(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let rt = Runtime::global();
+    if let Ok(rt) = rt {
+        if rt.available("param_average") && a.dtype() == crate::tensor::DType::F32 {
+            return average_pair_kernel(&rt, a, b);
+        }
+    }
+    Ok(weighted_average(&[a, b], &[1.0, 1.0])?)
+}
+
+/// Block size the param_average artifact is lowered for.
+pub const AVG_BLOCK: usize = 1 << 20;
+
+fn average_pair_kernel(rt: &Runtime, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape() != b.shape() {
+        bail!("average: shape mismatch {:?} vs {:?}", a.shape(), b.shape());
+    }
+    let av = a.to_f32_vec()?;
+    let bv = b.to_f32_vec()?;
+    let mut out = Vec::with_capacity(av.len());
+    let mut offset = 0;
+    while offset < av.len() {
+        let take = (av.len() - offset).min(AVG_BLOCK);
+        let mut xa = vec![0f32; AVG_BLOCK];
+        let mut xb = vec![0f32; AVG_BLOCK];
+        xa[..take].copy_from_slice(&av[offset..offset + take]);
+        xb[..take].copy_from_slice(&bv[offset..offset + take]);
+        let ta = Tensor::from_f32(vec![AVG_BLOCK], xa)?;
+        let tb = Tensor::from_f32(vec![AVG_BLOCK], xb)?;
+        let res = rt.execute("param_average", &[&ta, &tb])?;
+        let r = res
+            .first()
+            .context("param_average returned no output")?
+            .to_f32_vec()?;
+        out.extend_from_slice(&r[..take]);
+        offset += take;
+    }
+    Ok(Tensor::from_f32(a.shape().to_vec(), out)?)
+}
+
+/// LoRA application W' = W + (α/r)·A@B through the Pallas kernel when an
+/// artifact for this (m, n, r) exists (`lora_apply_{m}x{n}x{r}`);
+/// otherwise the exact Rust fallback.
+pub fn lora_apply(w: &Tensor, a: &Tensor, b: &Tensor, alpha: f32) -> Result<Tensor> {
+    let (m, n) = match w.shape() {
+        [m, n] => (*m, *n),
+        s => bail!("lora_apply expects a 2-D weight, got {s:?}"),
+    };
+    let r = a.shape().get(1).copied().unwrap_or(0);
+    if a.shape() != [m, r] || b.shape() != [r, n] {
+        bail!(
+            "lora_apply shape mismatch: w {:?}, a {:?}, b {:?}",
+            w.shape(),
+            a.shape(),
+            b.shape()
+        );
+    }
+    if let Ok(rt) = Runtime::global() {
+        let name = format!("lora_apply_{m}x{n}x{r}");
+        if rt.available(&name) {
+            let alpha_t = Tensor::from_f32(vec![], vec![alpha])?;
+            let out = rt.execute(&name, &[w, a, b, &alpha_t])?;
+            return out.into_iter().next().context("lora_apply returned no output");
+        }
+    }
+    lora_apply_rust(w, a, b, alpha, m, n, r)
+}
+
+/// Pure-Rust LoRA application (also the cross-check oracle).
+pub fn lora_apply_rust(
+    w: &Tensor,
+    a: &Tensor,
+    b: &Tensor,
+    alpha: f32,
+    m: usize,
+    n: usize,
+    r: usize,
+) -> Result<Tensor> {
+    let wv = w.to_f32_vec()?;
+    let av = a.to_f32_vec()?;
+    let bv = b.to_f32_vec()?;
+    let scale = if r > 0 { alpha / r as f32 } else { 0.0 };
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &av[i * r..(i + 1) * r];
+        for j in 0..n {
+            let mut acc = 0f32;
+            for (k, &ak) in arow.iter().enumerate() {
+                acc += ak * bv[k * n + j];
+            }
+            out[i * n + j] = wv[i * n + j] + scale * acc;
+        }
+    }
+    Ok(Tensor::from_f32_as(w.dtype(), w.shape().to_vec(), &out)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random(seed: u64, shape: Vec<usize>) -> Tensor {
+        let mut rng = Pcg64::new(seed);
+        let n: usize = shape.iter().product();
+        let vals: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect();
+        Tensor::from_f32(shape, vals).unwrap()
+    }
+
+    #[test]
+    fn lsh_project_default_matches_reference() {
+        let t = random(1, vec![10_000]);
+        let v = t.to_f32_vec().unwrap();
+        assert_eq!(lsh_project(&v), lsh::project(&v));
+    }
+
+    #[test]
+    fn average_pair_fallback_correct() {
+        let a = random(2, vec![100]);
+        let b = random(3, vec![100]);
+        let avg = average_pair(&a, &b).unwrap();
+        let av = a.to_f32_vec().unwrap();
+        let bv = b.to_f32_vec().unwrap();
+        let got = avg.to_f32_vec().unwrap();
+        for i in 0..100 {
+            assert!((got[i] - (av[i] + bv[i]) / 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lora_apply_rust_shapes_and_values() {
+        let w = random(4, vec![8, 6]);
+        let a = Tensor::from_f32(vec![8, 2], vec![1.0; 16]).unwrap();
+        let b = Tensor::from_f32(vec![2, 6], vec![0.5; 12]).unwrap();
+        let out = lora_apply(&w, &a, &b, 2.0).unwrap();
+        let wv = w.to_f32_vec().unwrap();
+        let ov = out.to_f32_vec().unwrap();
+        // delta = (2.0/2) * sum_k 1.0*0.5 = 1.0
+        for i in 0..48 {
+            assert!((ov[i] - (wv[i] + 1.0)).abs() < 1e-6);
+        }
+        // Shape mismatches rejected.
+        assert!(lora_apply(&w, &b, &a, 1.0).is_err());
+    }
+}

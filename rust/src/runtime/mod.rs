@@ -1,0 +1,264 @@
+//! PJRT runtime: load and execute AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, lowering the L2
+//! JAX computations (which call the L1 Pallas kernels) to **HLO text**
+//! under `artifacts/`. This module is the only bridge between the Rust
+//! request path and those artifacts: it compiles each HLO module on the
+//! PJRT CPU client at first use, caches the executable, and marshals
+//! [`Tensor`]s to/from XLA literals. Python never runs at this layer.
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax ≥
+//! 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::tensor::{DType, Tensor};
+use anyhow::{anyhow, bail, Context, Result};
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Location of compiled artifacts, overridable via `THETA_ARTIFACTS`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("THETA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Walk up from cwd looking for an artifacts/ directory.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// A PJRT runtime bound to an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: PathBuf,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// The PJRT client handle is used behind a global mutex-protected cache;
+// the underlying CPU client is thread-safe for compile/execute.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+static GLOBAL: Lazy<Mutex<Option<Arc<Runtime>>>> = Lazy::new(|| Mutex::new(None));
+
+impl Runtime {
+    /// Create a runtime over `artifacts/` with a fresh PJRT CPU client.
+    pub fn new(artifacts: PathBuf) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Process-wide shared runtime (created on first use).
+    pub fn global() -> Result<Arc<Runtime>> {
+        let mut guard = GLOBAL.lock().unwrap();
+        if let Some(rt) = guard.as_ref() {
+            return Ok(rt.clone());
+        }
+        let rt = Arc::new(Runtime::new(default_artifacts_dir())?);
+        *guard = Some(rt.clone());
+        Ok(rt)
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts
+    }
+
+    fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifacts.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Is this artifact present on disk?
+    pub fn available(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load (compile + cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifact_path(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on tensors; returns the tuple elements.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the single
+    /// output literal is always a tuple.
+    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let out = result
+            .first()
+            .and_then(|replica| replica.first())
+            .context("artifact produced no output")?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output of {name}: {e:?}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling output of {name}: {e:?}"))?;
+        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+    }
+}
+
+fn dtype_to_element_type(dt: DType) -> Result<xla::ElementType> {
+    Ok(match dt {
+        DType::F32 => xla::ElementType::F32,
+        DType::F64 => xla::ElementType::F64,
+        DType::BF16 => xla::ElementType::Bf16,
+        DType::F16 => xla::ElementType::F16,
+        DType::I32 => xla::ElementType::S32,
+        DType::I64 => xla::ElementType::S64,
+        DType::U8 => xla::ElementType::U8,
+        DType::Bool => xla::ElementType::Pred,
+    })
+}
+
+fn element_type_to_dtype(et: xla::ElementType) -> Result<DType> {
+    Ok(match et {
+        xla::ElementType::F32 => DType::F32,
+        xla::ElementType::F64 => DType::F64,
+        xla::ElementType::Bf16 => DType::BF16,
+        xla::ElementType::F16 => DType::F16,
+        xla::ElementType::S32 => DType::I32,
+        xla::ElementType::S64 => DType::I64,
+        xla::ElementType::U8 => DType::U8,
+        xla::ElementType::Pred => DType::Bool,
+        other => bail!("unsupported XLA element type {other:?}"),
+    })
+}
+
+/// Tensor → XLA literal (zero conversion: raw little-endian bytes).
+///
+/// Half-precision tensors are promoted to f32 first: the artifacts in
+/// this repo take f32/i32 inputs, and the xla crate's half-precision
+/// literal paths are unreliable (segfault in literal_copy_to).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    if matches!(t.dtype(), DType::BF16 | DType::F16) {
+        let promoted = t.cast(DType::F32)?;
+        return tensor_to_literal(&promoted);
+    }
+    let et = dtype_to_element_type(t.dtype())?;
+    xla::Literal::create_from_shape_and_untyped_data(et, t.shape(), t.bytes())
+        .map_err(|e| anyhow!("creating literal: {e:?}"))
+}
+
+/// XLA literal → Tensor.
+///
+/// `copy_raw_to` is typed, so we dispatch per element type and re-encode
+/// as little-endian bytes (a no-op copy on this platform).
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let shape = match shape {
+        xla::Shape::Array(a) => a,
+        other => bail!("expected array literal, got {other:?}"),
+    };
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let dtype = element_type_to_dtype(shape.ty())?;
+    let n: usize = dims.iter().product();
+
+    fn bytes_of<T: Copy>(v: &[T]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(std::mem::size_of_val(v));
+        unsafe {
+            out.extend_from_slice(std::slice::from_raw_parts(
+                v.as_ptr() as *const u8,
+                std::mem::size_of_val(v),
+            ));
+        }
+        out
+    }
+
+    let bytes = match dtype {
+        DType::F32 => bytes_of(
+            &l.to_vec::<f32>()
+                .map_err(|e| anyhow!("literal data: {e:?}"))?,
+        ),
+        DType::F64 => bytes_of(
+            &l.to_vec::<f64>()
+                .map_err(|e| anyhow!("literal data: {e:?}"))?,
+        ),
+        DType::I32 => bytes_of(
+            &l.to_vec::<i32>()
+                .map_err(|e| anyhow!("literal data: {e:?}"))?,
+        ),
+        DType::I64 => bytes_of(
+            &l.to_vec::<i64>()
+                .map_err(|e| anyhow!("literal data: {e:?}"))?,
+        ),
+        DType::U8 => bytes_of(
+            &l.to_vec::<u8>()
+                .map_err(|e| anyhow!("literal data: {e:?}"))?,
+        ),
+        DType::BF16 | DType::F16 | DType::Bool => {
+            bail!("{dtype} literals unsupported on the output path (use f32 outputs)")
+        }
+    };
+    let _ = n;
+    Ok(Tensor::from_bytes(dtype, dims, bytes)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests need compiled artifacts; they are exercised further by
+    // integration tests once `make artifacts` has run. Here we test the
+    // marshalling layer and graceful failure without artifacts.
+
+    #[test]
+    fn artifact_discovery_missing_is_graceful() {
+        let rt = Runtime::new(PathBuf::from("/nonexistent/artifacts")).unwrap();
+        assert!(!rt.available("model"));
+        assert!(rt.load("model").is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i64_and_bf16_promotion() {
+        let t = Tensor::from_i64(vec![4], vec![1, -2, 3, -4]).unwrap();
+        assert_eq!(literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap(), t);
+        // bf16 inputs are promoted to f32 on the way in.
+        let b = Tensor::from_f32(vec![2], vec![1.5, -0.25])
+            .unwrap()
+            .cast(DType::BF16)
+            .unwrap();
+        let back = literal_to_tensor(&tensor_to_literal(&b).unwrap()).unwrap();
+        assert_eq!(back.dtype(), DType::F32);
+        assert_eq!(back.to_f32_vec().unwrap(), vec![1.5, -0.25]);
+    }
+}

@@ -1,0 +1,252 @@
+//! Element dtypes and half-precision conversions.
+
+use std::fmt;
+
+/// Element type of a tensor, matching the set of dtypes that appear in
+/// the checkpoint formats Git-Theta supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F64,
+    F32,
+    BF16,
+    F16,
+    I64,
+    I32,
+    U8,
+    Bool,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F64 | DType::I64 => 8,
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 | DType::F16 => 2,
+            DType::U8 | DType::Bool => 1,
+        }
+    }
+
+    /// Canonical lowercase name used in metadata files.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F64 => "f64",
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+            DType::F16 => "f16",
+            DType::I64 => "i64",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+            DType::Bool => "bool",
+        }
+    }
+
+    /// Parse from a metadata name. Accepts both our canonical names and
+    /// the safetensors spellings ("F32", "BF16", ...).
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "f64" | "float64" => DType::F64,
+            "f32" | "float32" => DType::F32,
+            "bf16" | "bfloat16" => DType::BF16,
+            "f16" | "float16" => DType::F16,
+            "i64" | "int64" => DType::I64,
+            "i32" | "int32" => DType::I32,
+            "u8" | "uint8" => DType::U8,
+            "bool" => DType::Bool,
+            _ => return None,
+        })
+    }
+
+    /// The safetensors header spelling.
+    pub fn safetensors_name(self) -> &'static str {
+        match self {
+            DType::F64 => "F64",
+            DType::F32 => "F32",
+            DType::BF16 => "BF16",
+            DType::F16 => "F16",
+            DType::I64 => "I64",
+            DType::I32 => "I32",
+            DType::U8 => "U8",
+            DType::Bool => "BOOL",
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F64 | DType::F32 | DType::BF16 | DType::F16)
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// bfloat16 → f32 (bf16 is the top 16 bits of an f32).
+#[inline]
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// f32 → bfloat16 with round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        // Preserve NaN, force a quiet bit so truncation can't make it Inf.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+    let _ = round_bit;
+    (rounded >> 16) as u16
+}
+
+/// IEEE half → f32.
+#[inline]
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = ((bits >> 15) & 1) as u32;
+    let exp = ((bits >> 10) & 0x1f) as u32;
+    let frac = (bits & 0x3ff) as u32;
+    let f32_bits = if exp == 0 {
+        if frac == 0 {
+            sign << 31 // signed zero
+        } else {
+            // Subnormal: normalize.
+            let mut e = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            (sign << 31) | ((e as u32) << 23) | ((f & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        (sign << 31) | (0xff << 23) | (frac << 13) // Inf / NaN
+    } else {
+        (sign << 31) | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(f32_bits)
+}
+
+/// f32 → IEEE half with round-to-nearest-even.
+#[inline]
+pub fn f32_to_f16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 31) & 1) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        let nan = if frac != 0 { 0x200 | (frac >> 13) as u16 & 0x3ff | 1 } else { 0 };
+        return (sign << 15) | (0x1f << 10) | nan;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return (sign << 15) | (0x1f << 10); // overflow → Inf
+    }
+    if unbiased >= -14 {
+        // Normal range.
+        let half_exp = (unbiased + 15) as u32;
+        let mut half_frac = frac >> 13;
+        // Round to nearest even on the dropped 13 bits.
+        let rem = frac & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (half_frac & 1) == 1) {
+            half_frac += 1;
+        }
+        let out = (half_exp << 10) + half_frac; // carry may bump exponent
+        return (sign << 15) | out as u16;
+    }
+    if unbiased >= -24 {
+        // Subnormal half: frac_h = round(mantissa * 2^(unbiased + 1) / 2^-23)
+        // i.e. a right shift by (-1 - unbiased) with round-to-nearest-even.
+        let shift = (-1 - unbiased) as u32;
+        let mantissa = frac | 0x80_0000;
+        let mut half_frac = mantissa >> shift;
+        let rem = mantissa & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rem > halfway || (rem == halfway && (half_frac & 1) == 1) {
+            half_frac += 1;
+        }
+        return (sign << 15) | half_frac as u16;
+    }
+    sign << 15 // underflow → signed zero
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes_and_names_roundtrip() {
+        for dt in [
+            DType::F64,
+            DType::F32,
+            DType::BF16,
+            DType::F16,
+            DType::I64,
+            DType::I32,
+            DType::U8,
+            DType::Bool,
+        ] {
+            assert_eq!(DType::parse(dt.name()), Some(dt));
+            assert_eq!(DType::parse(dt.safetensors_name()), Some(dt));
+            assert!(dt.size() > 0);
+        }
+        assert_eq!(DType::parse("complex64"), None);
+    }
+
+    #[test]
+    fn bf16_roundtrip_exact_for_bf16_values() {
+        // Values representable in bf16 survive f32 -> bf16 -> f32.
+        for v in [0.0f32, 1.0, -2.5, 0.15625, 3.0e38, -1.0e-30] {
+            let b = f32_to_bf16(v);
+            let back = bf16_to_f32(b);
+            assert_eq!(f32_to_bf16(back), b);
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-9 is halfway between bf16(1.0) and the next bf16.
+        let v = f32::from_bits(0x3f80_8000);
+        let b = f32_to_bf16(v);
+        // Ties to even: mantissa of 1.0 is even, so round down to 1.0.
+        assert_eq!(bf16_to_f32(b), 1.0);
+        // Slightly above the tie rounds up.
+        let v2 = f32::from_bits(0x3f80_8001);
+        assert!(bf16_to_f32(f32_to_bf16(v2)) > 1.0);
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0xc000), -2.0);
+        assert_eq!(f16_to_f32(0x7bff), 65504.0); // max half
+        assert_eq!(f16_to_f32(0x0001), 5.960464477539063e-8); // min subnormal
+        assert!(f16_to_f32(0x7c00).is_infinite());
+        assert!(f16_to_f32(0x7e00).is_nan());
+    }
+
+    #[test]
+    fn f16_roundtrip_bits() {
+        // Every finite half value round-trips bit-exactly through f32.
+        for bits in 0u16..=0xffff {
+            let f = f16_to_f32(bits);
+            if f.is_nan() {
+                assert!(f16_to_f32(f32_to_f16(f)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16(f), bits, "bits {bits:#06x} -> {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_overflow_and_underflow() {
+        assert_eq!(f32_to_f16(1.0e6), 0x7c00); // +Inf
+        assert_eq!(f32_to_f16(-1.0e6), 0xfc00); // -Inf
+        assert_eq!(f32_to_f16(1.0e-10), 0x0000); // underflow to +0
+    }
+}

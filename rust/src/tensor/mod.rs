@@ -1,0 +1,15 @@
+//! Tensor core: dtypes, shapes, and the in-memory tensor type that
+//! parameter groups are represented as throughout Git-Theta.
+//!
+//! A checkpoint is an ordered map of parameter-group name → [`Tensor`].
+//! Tensors own a contiguous little-endian byte buffer plus a dtype and
+//! shape; numeric operations used by updates/merges promote to f64
+//! accumulation where it matters (averaging) and otherwise stay in f32.
+
+mod dtype;
+mod ops;
+mod tensor;
+
+pub use dtype::{bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, DType};
+pub use ops::{add, allclose, axpy, euclidean_distance, scale, sub, weighted_average};
+pub use tensor::{Tensor, TensorError};

@@ -1,0 +1,176 @@
+//! Elementwise numeric operations on tensors.
+//!
+//! These are the pure-Rust reference paths; `mlops/` routes large inputs
+//! through the AOT-compiled Pallas kernels and uses these for fallback
+//! and cross-checking.
+
+use super::tensor::{Tensor, TensorError};
+
+fn check_same(a: &Tensor, b: &Tensor) -> Result<(), TensorError> {
+    if a.shape() != b.shape() {
+        return Err(TensorError::ShapeMismatch {
+            a: a.shape().to_vec(),
+            b: b.shape().to_vec(),
+        });
+    }
+    Ok(())
+}
+
+/// a + b, computed in f32, result in a's dtype.
+pub fn add(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
+    check_same(a, b)?;
+    let av = a.to_f32_vec()?;
+    let bv = b.to_f32_vec()?;
+    let out: Vec<f32> = av.iter().zip(&bv).map(|(x, y)| x + y).collect();
+    Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)
+}
+
+/// a - b, computed in f32, result in a's dtype.
+pub fn sub(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
+    check_same(a, b)?;
+    let av = a.to_f32_vec()?;
+    let bv = b.to_f32_vec()?;
+    let out: Vec<f32> = av.iter().zip(&bv).map(|(x, y)| x - y).collect();
+    Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)
+}
+
+/// alpha * a, result in a's dtype.
+pub fn scale(a: &Tensor, alpha: f32) -> Result<Tensor, TensorError> {
+    let av = a.to_f32_vec()?;
+    let out: Vec<f32> = av.iter().map(|x| x * alpha).collect();
+    Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)
+}
+
+/// a + alpha * b.
+pub fn axpy(a: &Tensor, alpha: f32, b: &Tensor) -> Result<Tensor, TensorError> {
+    check_same(a, b)?;
+    let av = a.to_f32_vec()?;
+    let bv = b.to_f32_vec()?;
+    let out: Vec<f32> = av.iter().zip(&bv).map(|(x, y)| x + alpha * y).collect();
+    Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)
+}
+
+/// Weighted average of k tensors (f64 accumulation) — the paper's
+/// parameter-averaging merge (Wortsman et al. 2022; Choshen et al. 2022b).
+pub fn weighted_average(tensors: &[&Tensor], weights: &[f64]) -> Result<Tensor, TensorError> {
+    assert!(!tensors.is_empty() && tensors.len() == weights.len());
+    for t in &tensors[1..] {
+        check_same(tensors[0], t)?;
+    }
+    let total: f64 = weights.iter().sum();
+    let n = tensors[0].numel();
+    let mut acc = vec![0f64; n];
+    for (t, &w) in tensors.iter().zip(weights) {
+        let v = t.to_f32_vec()?;
+        for (a, x) in acc.iter_mut().zip(&v) {
+            *a += w * *x as f64;
+        }
+    }
+    let out: Vec<f32> = acc.iter().map(|a| (*a / total) as f32).collect();
+    Tensor::from_f32_as(tensors[0].dtype(), tensors[0].shape().to_vec(), &out)
+}
+
+/// Euclidean distance ||a - b||_2 in f64.
+pub fn euclidean_distance(a: &Tensor, b: &Tensor) -> Result<f64, TensorError> {
+    check_same(a, b)?;
+    let av = a.to_f32_vec()?;
+    let bv = b.to_f32_vec()?;
+    let mut acc = 0f64;
+    for (x, y) in av.iter().zip(&bv) {
+        let d = *x as f64 - *y as f64;
+        acc += d * d;
+    }
+    Ok(acc.sqrt())
+}
+
+/// numpy-style allclose: |a - b| <= atol + rtol * |b| elementwise.
+///
+/// This is the paper's safety check for parameter groups whose LSH
+/// distance estimate falls in the ambiguous [1e-8, 1e-6] band.
+pub fn allclose(a: &Tensor, b: &Tensor, rtol: f64, atol: f64) -> Result<bool, TensorError> {
+    if a.shape() != b.shape() {
+        return Ok(false);
+    }
+    let av = a.to_f32_vec()?;
+    let bv = b.to_f32_vec()?;
+    for (x, y) in av.iter().zip(&bv) {
+        let (x, y) = (*x as f64, *y as f64);
+        if x.is_nan() || y.is_nan() {
+            return Ok(false);
+        }
+        if (x - y).abs() > atol + rtol * y.abs() {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    fn t(vals: &[f32]) -> Tensor {
+        Tensor::from_f32(vec![vals.len()], vals.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn basic_arithmetic() {
+        let a = t(&[1., 2., 3.]);
+        let b = t(&[10., 20., 30.]);
+        assert_eq!(add(&a, &b).unwrap().to_f32_vec().unwrap(), vec![11., 22., 33.]);
+        assert_eq!(sub(&b, &a).unwrap().to_f32_vec().unwrap(), vec![9., 18., 27.]);
+        assert_eq!(scale(&a, 2.0).unwrap().to_f32_vec().unwrap(), vec![2., 4., 6.]);
+        assert_eq!(
+            axpy(&a, 0.5, &b).unwrap().to_f32_vec().unwrap(),
+            vec![6., 12., 18.]
+        );
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = t(&[1., 2.]);
+        let b = t(&[1., 2., 3.]);
+        assert!(add(&a, &b).is_err());
+    }
+
+    #[test]
+    fn average_two_and_three() {
+        let a = t(&[0., 0.]);
+        let b = t(&[2., 4.]);
+        let avg = weighted_average(&[&a, &b], &[1.0, 1.0]).unwrap();
+        assert_eq!(avg.to_f32_vec().unwrap(), vec![1., 2.]);
+        let c = t(&[4., 8.]);
+        let avg3 = weighted_average(&[&a, &b, &c], &[1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(avg3.to_f32_vec().unwrap(), vec![2., 4.]);
+        // Weighted.
+        let w = weighted_average(&[&a, &b], &[3.0, 1.0]).unwrap();
+        assert_eq!(w.to_f32_vec().unwrap(), vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn distance_and_allclose() {
+        let a = t(&[0., 3.]);
+        let b = t(&[4., 0.]);
+        assert!((euclidean_distance(&a, &b).unwrap() - 5.0).abs() < 1e-12);
+        assert!(allclose(&a, &a, 1e-5, 1e-8).unwrap());
+        assert!(!allclose(&a, &b, 1e-5, 1e-8).unwrap());
+        let c = t(&[0., 3.0 + 1e-7]);
+        assert!(allclose(&a, &c, 1e-5, 1e-8).unwrap());
+    }
+
+    #[test]
+    fn allclose_nan_is_not_close() {
+        let a = t(&[f32::NAN]);
+        assert!(!allclose(&a, &a, 1e-5, 1e-8).unwrap());
+    }
+
+    #[test]
+    fn ops_preserve_dtype() {
+        let a = t(&[1.0, 2.0]).cast(DType::BF16).unwrap();
+        let b = t(&[1.0, 2.0]).cast(DType::BF16).unwrap();
+        let s = add(&a, &b).unwrap();
+        assert_eq!(s.dtype(), DType::BF16);
+        assert_eq!(s.to_f32_vec().unwrap(), vec![2.0, 4.0]);
+    }
+}

@@ -1,0 +1,334 @@
+//! The owned tensor type used for parameter groups.
+
+use super::dtype::{bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, DType};
+
+/// Errors from tensor construction and conversion.
+#[derive(Debug, thiserror::Error)]
+pub enum TensorError {
+    #[error("data length {got} does not match shape {shape:?} x dtype {dtype} = {want} bytes")]
+    LengthMismatch {
+        got: usize,
+        want: usize,
+        shape: Vec<usize>,
+        dtype: DType,
+    },
+    #[error("dtype mismatch: expected {expected}, got {got}")]
+    DTypeMismatch { expected: DType, got: DType },
+    #[error("shape mismatch: {a:?} vs {b:?}")]
+    ShapeMismatch { a: Vec<usize>, b: Vec<usize> },
+    #[error("cannot convert dtype {from} to {to}")]
+    BadConversion { from: DType, to: DType },
+}
+
+/// A dense, contiguous, little-endian tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    dtype: DType,
+    shape: Vec<usize>,
+    /// Raw little-endian element bytes, length = numel * dtype.size().
+    data: Vec<u8>,
+}
+
+impl std::fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Tensor({} {:?}, {} bytes)",
+            self.dtype,
+            self.shape,
+            self.data.len()
+        )
+    }
+}
+
+impl Tensor {
+    /// Construct from raw little-endian bytes.
+    pub fn from_bytes(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Tensor, TensorError> {
+        let want = shape.iter().product::<usize>() * dtype.size();
+        if data.len() != want {
+            return Err(TensorError::LengthMismatch {
+                got: data.len(),
+                want,
+                shape,
+                dtype,
+            });
+        }
+        Ok(Tensor { dtype, shape, data })
+    }
+
+    /// Construct an f32 tensor from values.
+    pub fn from_f32(shape: Vec<usize>, values: Vec<f32>) -> Result<Tensor, TensorError> {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in &values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor::from_bytes(DType::F32, shape, data)
+    }
+
+    /// Construct an i64 tensor from values (used for sparse indices).
+    pub fn from_i64(shape: Vec<usize>, values: Vec<i64>) -> Result<Tensor, TensorError> {
+        let mut data = Vec::with_capacity(values.len() * 8);
+        for v in &values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor::from_bytes(DType::I64, shape, data)
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Tensor {
+        let len = shape.iter().product::<usize>() * dtype.size();
+        Tensor {
+            dtype,
+            shape,
+            data: vec![0u8; len],
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.data
+    }
+
+    /// Typed f32 view (only valid for DType::F32).
+    pub fn as_f32(&self) -> Result<&[f32], TensorError> {
+        if self.dtype != DType::F32 {
+            return Err(TensorError::DTypeMismatch {
+                expected: DType::F32,
+                got: self.dtype,
+            });
+        }
+        // Data is a Vec<u8>; alignment of Vec<u8> is 1, so we cannot
+        // transmute safely in general. We guarantee alignment by checking.
+        let ptr = self.data.as_ptr();
+        if (ptr as usize) % std::mem::align_of::<f32>() == 0 {
+            let slice =
+                unsafe { std::slice::from_raw_parts(ptr as *const f32, self.data.len() / 4) };
+            Ok(slice)
+        } else {
+            // Extremely rare (Vec<u8> from global alloc is well-aligned),
+            // but fall back correctly by erroring; callers use to_f32_vec.
+            Err(TensorError::BadConversion {
+                from: self.dtype,
+                to: DType::F32,
+            })
+        }
+    }
+
+    /// Decode elements to f32 regardless of float dtype.
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>, TensorError> {
+        let n = self.numel();
+        let mut out = Vec::with_capacity(n);
+        match self.dtype {
+            DType::F32 => {
+                for c in self.data.chunks_exact(4) {
+                    out.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+            DType::F64 => {
+                for c in self.data.chunks_exact(8) {
+                    out.push(f64::from_le_bytes(c.try_into().unwrap()) as f32);
+                }
+            }
+            DType::BF16 => {
+                for c in self.data.chunks_exact(2) {
+                    out.push(bf16_to_f32(u16::from_le_bytes(c.try_into().unwrap())));
+                }
+            }
+            DType::F16 => {
+                for c in self.data.chunks_exact(2) {
+                    out.push(f16_to_f32(u16::from_le_bytes(c.try_into().unwrap())));
+                }
+            }
+            dt => {
+                return Err(TensorError::BadConversion {
+                    from: dt,
+                    to: DType::F32,
+                })
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode elements to i64 (integer dtypes only).
+    pub fn to_i64_vec(&self) -> Result<Vec<i64>, TensorError> {
+        let mut out = Vec::with_capacity(self.numel());
+        match self.dtype {
+            DType::I64 => {
+                for c in self.data.chunks_exact(8) {
+                    out.push(i64::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+            DType::I32 => {
+                for c in self.data.chunks_exact(4) {
+                    out.push(i32::from_le_bytes(c.try_into().unwrap()) as i64);
+                }
+            }
+            DType::U8 | DType::Bool => {
+                for &b in &self.data {
+                    out.push(b as i64);
+                }
+            }
+            dt => {
+                return Err(TensorError::BadConversion {
+                    from: dt,
+                    to: DType::I64,
+                })
+            }
+        }
+        Ok(out)
+    }
+
+    /// Re-encode f32 values into this dtype (float dtypes only).
+    pub fn from_f32_as(dtype: DType, shape: Vec<usize>, values: &[f32]) -> Result<Tensor, TensorError> {
+        let mut data = Vec::with_capacity(values.len() * dtype.size());
+        match dtype {
+            DType::F32 => {
+                for v in values {
+                    data.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::F64 => {
+                for v in values {
+                    data.extend_from_slice(&(*v as f64).to_le_bytes());
+                }
+            }
+            DType::BF16 => {
+                for v in values {
+                    data.extend_from_slice(&f32_to_bf16(*v).to_le_bytes());
+                }
+            }
+            DType::F16 => {
+                for v in values {
+                    data.extend_from_slice(&f32_to_f16(*v).to_le_bytes());
+                }
+            }
+            dt => {
+                return Err(TensorError::BadConversion {
+                    from: DType::F32,
+                    to: dt,
+                })
+            }
+        }
+        Tensor::from_bytes(dtype, shape, data)
+    }
+
+    /// Cast to a different float dtype (identity if same).
+    pub fn cast(&self, dtype: DType) -> Result<Tensor, TensorError> {
+        if dtype == self.dtype {
+            return Ok(self.clone());
+        }
+        let values = self.to_f32_vec()?;
+        Tensor::from_f32_as(dtype, self.shape.clone(), &values)
+    }
+
+    /// Reshape without copying data (element counts must match).
+    pub fn reshape(&self, shape: Vec<usize>) -> Result<Tensor, TensorError> {
+        if shape.iter().product::<usize>() != self.numel() {
+            return Err(TensorError::ShapeMismatch {
+                a: self.shape.clone(),
+                b: shape,
+            });
+        }
+        Ok(Tensor {
+            dtype: self.dtype,
+            shape,
+            data: self.data.clone(),
+        })
+    }
+
+    /// Take rows [0, keep) along the first axis (used by the paper's
+    /// "remove sentinel embeddings" Trim operation).
+    pub fn take_rows(&self, keep: usize) -> Result<Tensor, TensorError> {
+        let rows = *self.shape.first().unwrap_or(&0);
+        if keep > rows {
+            return Err(TensorError::ShapeMismatch {
+                a: self.shape.clone(),
+                b: vec![keep],
+            });
+        }
+        let row_bytes = if rows == 0 { 0 } else { self.data.len() / rows };
+        let mut shape = self.shape.clone();
+        shape[0] = keep;
+        Tensor::from_bytes(self.dtype, shape, self.data[..keep * row_bytes].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_views() {
+        let t = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.nbytes(), 24);
+        assert_eq!(t.as_f32().unwrap(), &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.to_f32_vec().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn length_validation() {
+        assert!(Tensor::from_bytes(DType::F32, vec![2, 2], vec![0u8; 15]).is_err());
+        assert!(Tensor::from_bytes(DType::F32, vec![2, 2], vec![0u8; 16]).is_ok());
+    }
+
+    #[test]
+    fn casts_roundtrip_through_bf16() {
+        let vals = vec![0.0f32, 1.0, -0.5, 100.0];
+        let t = Tensor::from_f32(vec![4], vals.clone()).unwrap();
+        let b = t.cast(DType::BF16).unwrap();
+        assert_eq!(b.nbytes(), 8);
+        let back = b.cast(DType::F32).unwrap();
+        // These values are bf16-representable, so exact.
+        assert_eq!(back.to_f32_vec().unwrap(), vals);
+    }
+
+    #[test]
+    fn reshape_and_take_rows() {
+        let t = Tensor::from_f32(vec![4, 2], (0..8).map(|x| x as f32).collect()).unwrap();
+        let r = t.reshape(vec![2, 4]).unwrap();
+        assert_eq!(r.shape(), &[2, 4]);
+        assert!(t.reshape(vec![3, 3]).is_err());
+        let trimmed = t.take_rows(2).unwrap();
+        assert_eq!(trimmed.shape(), &[2, 2]);
+        assert_eq!(trimmed.to_f32_vec().unwrap(), vec![0., 1., 2., 3.]);
+        assert!(t.take_rows(5).is_err());
+    }
+
+    #[test]
+    fn i64_tensors() {
+        let t = Tensor::from_i64(vec![3], vec![-1, 0, 1 << 40]).unwrap();
+        assert_eq!(t.to_i64_vec().unwrap(), vec![-1, 0, 1 << 40]);
+        assert!(t.to_f32_vec().is_err());
+    }
+
+    #[test]
+    fn zeros() {
+        let t = Tensor::zeros(DType::BF16, vec![10]);
+        assert_eq!(t.nbytes(), 20);
+        assert!(t.to_f32_vec().unwrap().iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,192 @@
+//! The Git-Theta diff driver (paper §3.2 "Diffing Models").
+//!
+//! Where Git LFS can only say two checkpoints are "not bitwise
+//! identical", this driver reports which parameter groups were added,
+//! removed, or modified, with shapes, dtypes, update types, and the
+//! storage cost of each change.
+
+use crate::gitcore::drivers::DiffDriver;
+use crate::gitcore::repo::Repository;
+use crate::theta::metadata::{GroupMetadata, ModelMetadata};
+use crate::util::humansize;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// The `diff=theta` driver.
+pub struct ThetaDiff;
+
+/// Structured diff between two metadata versions.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelDiff {
+    pub added: Vec<String>,
+    pub removed: Vec<String>,
+    pub modified: Vec<String>,
+    pub unchanged: usize,
+}
+
+impl ModelDiff {
+    /// Compute the group-level diff between two metadata versions.
+    pub fn between(old: Option<&ModelMetadata>, new: Option<&ModelMetadata>) -> ModelDiff {
+        let empty = ModelMetadata::new("");
+        let old = old.unwrap_or(&empty);
+        let new = new.unwrap_or(&empty);
+        let mut diff = ModelDiff::default();
+        for (name, entry) in &new.groups {
+            match old.groups.get(name) {
+                None => diff.added.push(name.clone()),
+                Some(o) if o != entry => diff.modified.push(name.clone()),
+                Some(_) => diff.unchanged += 1,
+            }
+        }
+        for name in old.groups.keys() {
+            if !new.groups.contains_key(name) {
+                diff.removed.push(name.clone());
+            }
+        }
+        diff
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.added.is_empty() && self.removed.is_empty() && self.modified.is_empty()
+    }
+}
+
+fn describe(entry: &GroupMetadata) -> String {
+    format!(
+        "{:?} {} update={} stored={}",
+        entry.tensor.shape,
+        entry.tensor.dtype,
+        entry.update.kind,
+        humansize::bytes(entry.own_bytes())
+    )
+}
+
+/// Render a human-readable model diff.
+pub fn render_diff(
+    path: &str,
+    old: Option<&ModelMetadata>,
+    new: Option<&ModelMetadata>,
+) -> String {
+    let diff = ModelDiff::between(old, new);
+    let mut out = String::new();
+    let _ = writeln!(out, "model {path}");
+    if diff.is_empty() {
+        let _ = writeln!(out, "  parameters unchanged ({} groups)", diff.unchanged);
+        return out;
+    }
+    for name in &diff.added {
+        let entry = &new.unwrap().groups[name];
+        let _ = writeln!(out, "  + added    {name}  [{}]", describe(entry));
+    }
+    for name in &diff.removed {
+        let entry = &old.unwrap().groups[name];
+        let _ = writeln!(out, "  - removed  {name}  [{}]", describe(entry));
+    }
+    for name in &diff.modified {
+        let o = &old.unwrap().groups[name];
+        let n = &new.unwrap().groups[name];
+        if o.tensor.shape != n.tensor.shape {
+            let _ = writeln!(
+                out,
+                "  ~ modified {name}  shape {:?} -> {:?} [{}]",
+                o.tensor.shape,
+                n.tensor.shape,
+                describe(n)
+            );
+        } else {
+            let dist = n.tensor.lsh.distance_estimate(&o.tensor.lsh);
+            let _ = writeln!(
+                out,
+                "  ~ modified {name}  [{}] (L2 distance ~{dist:.3e})",
+                describe(n)
+            );
+        }
+    }
+    let _ = writeln!(
+        out,
+        "  = {} groups unchanged (stored as references)",
+        diff.unchanged
+    );
+    out
+}
+
+impl DiffDriver for ThetaDiff {
+    fn diff(
+        &self,
+        _repo: &Repository,
+        path: &str,
+        old: Option<&[u8]>,
+        new: Option<&[u8]>,
+    ) -> Result<String> {
+        let parse = |bytes: Option<&[u8]>| -> Option<ModelMetadata> {
+            bytes.and_then(|b| ModelMetadata::from_bytes(b).ok())
+        };
+        Ok(render_diff(path, parse(old).as_ref(), parse(new).as_ref()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::lfs::LfsStore;
+    use crate::tensor::Tensor;
+    use crate::theta::filter::{clean_checkpoint, ObjectAccess};
+    use crate::util::tmp::TempDir;
+
+    fn make_versions() -> (ModelMetadata, ModelMetadata) {
+        let td = TempDir::new("diff").unwrap();
+        let acc = ObjectAccess {
+            store: LfsStore::open(td.path()),
+            remote: None,
+        };
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![4, 4], vec![0.5; 16]).unwrap());
+        ck.insert("b", Tensor::from_f32(vec![4], vec![0.1; 4]).unwrap());
+        let v1 = clean_checkpoint(&acc, &ck, "safetensors", None, None, 1).unwrap();
+
+        let mut ck2 = Checkpoint::new();
+        let mut w = vec![0.5f32; 16];
+        w[3] = 9.0;
+        ck2.insert("w", Tensor::from_f32(vec![4, 4], w).unwrap());
+        ck2.insert("new_head", Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap());
+        let v2 = clean_checkpoint(&acc, &ck2, "safetensors", Some(&v1), None, 1).unwrap();
+        (v1, v2)
+    }
+
+    #[test]
+    fn structured_diff() {
+        let (v1, v2) = make_versions();
+        let diff = ModelDiff::between(Some(&v1), Some(&v2));
+        assert_eq!(diff.added, vec!["new_head"]);
+        assert_eq!(diff.removed, vec!["b"]);
+        assert_eq!(diff.modified, vec!["w"]);
+        assert_eq!(diff.unchanged, 0);
+    }
+
+    #[test]
+    fn identical_versions_empty_diff() {
+        let (v1, _) = make_versions();
+        let diff = ModelDiff::between(Some(&v1), Some(&v1));
+        assert!(diff.is_empty());
+        assert_eq!(diff.unchanged, 2);
+    }
+
+    #[test]
+    fn rendered_diff_mentions_groups_and_types() {
+        let (v1, v2) = make_versions();
+        let text = render_diff("model.safetensors", Some(&v1), Some(&v2));
+        assert!(text.contains("+ added    new_head"));
+        assert!(text.contains("- removed  b"));
+        assert!(text.contains("~ modified w"));
+        assert!(text.contains("update="));
+        assert!(text.contains("L2 distance"));
+    }
+
+    #[test]
+    fn new_file_diff() {
+        let (v1, _) = make_versions();
+        let diff = ModelDiff::between(None, Some(&v1));
+        assert_eq!(diff.added.len(), 2);
+    }
+}

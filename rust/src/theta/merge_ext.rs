@@ -1,0 +1,201 @@
+//! Extension merge strategies (paper §6 future work: "more
+//! sophisticated Merge operations (Matena & Raffel, 2022)").
+//!
+//! * [`WeightedAverage`] — unequal-weight parameter averaging, weights
+//!   from merge options (`--group '*'=weighted:0.7` style configs feed
+//!   through [`set_branch_weights`]).
+//! * [`FisherAverage`] — Fisher-weighted averaging (Matena & Raffel,
+//!   2022): combine per-branch values weighted by a per-parameter
+//!   importance estimate. Without access to each branch's data we use
+//!   the magnitude-squared of each branch's *delta from the ancestor*
+//!   as the importance proxy — parameters a branch actually moved are
+//!   the ones its training considered important. Falls back to uniform
+//!   averaging when no ancestor exists.
+
+use crate::tensor::Tensor;
+use crate::theta::filter::{reconstruct_group, store_payload};
+use crate::theta::lsh::LshSignature;
+use crate::theta::merge::{ConflictCtx, ConflictKind, MergeStrategy};
+use crate::theta::updates::UpdatePayload;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Global branch weights for [`WeightedAverage`] (ours, theirs), stored
+/// as f32 bits. Defaults to (1, 1) = uniform.
+static W_OURS: AtomicU32 = AtomicU32::new(0x3f80_0000);
+static W_THEIRS: AtomicU32 = AtomicU32::new(0x3f80_0000);
+
+/// Configure the branch weights used by the "weighted" strategy.
+pub fn set_branch_weights(ours: f32, theirs: f32) {
+    W_OURS.store(ours.to_bits(), Ordering::Relaxed);
+    W_THEIRS.store(theirs.to_bits(), Ordering::Relaxed);
+}
+
+fn branch_weights() -> (f64, f64) {
+    (
+        f32::from_bits(W_OURS.load(Ordering::Relaxed)) as f64,
+        f32::from_bits(W_THEIRS.load(Ordering::Relaxed)) as f64,
+    )
+}
+
+fn store_dense(ctx: &ConflictCtx, values: Tensor) -> Result<crate::theta::metadata::GroupMetadata> {
+    let sig = LshSignature::of_tensor(&values)?;
+    let mut payload = UpdatePayload::new("dense");
+    payload.tensors.insert("values".into(), values.clone());
+    store_payload(ctx.access, &values, sig, payload, None)
+}
+
+/// `weighted`: w_a·ours + w_b·theirs, normalized.
+pub struct WeightedAverage;
+
+impl MergeStrategy for WeightedAverage {
+    fn name(&self) -> &'static str {
+        "weighted"
+    }
+    fn description(&self) -> &'static str {
+        "weighted parameter average (weights set via set_branch_weights)"
+    }
+    fn applicable(&self, kind: ConflictKind) -> bool {
+        kind != ConflictKind::DeleteModify
+    }
+    fn resolve(&self, ctx: &ConflictCtx) -> Result<Option<crate::theta::metadata::GroupMetadata>> {
+        let ours = ctx.ours.context("weighted: missing our version")?;
+        let theirs = ctx.theirs.context("weighted: missing their version")?;
+        let a = reconstruct_group(ctx.access, ours)?;
+        let b = reconstruct_group(ctx.access, theirs)?;
+        if a.shape() != b.shape() {
+            bail!("weighted: incompatible shapes for '{}'", ctx.group);
+        }
+        let (wa, wb) = branch_weights();
+        let avg = crate::tensor::weighted_average(&[&a, &b], &[wa, wb])?;
+        Ok(Some(store_dense(ctx, avg)?))
+    }
+}
+
+/// `fisher`: per-parameter importance-weighted average, importance ≈
+/// squared movement from the common ancestor (+ε so untouched
+/// parameters average uniformly).
+pub struct FisherAverage;
+
+const FISHER_EPS: f64 = 1e-12;
+
+impl MergeStrategy for FisherAverage {
+    fn name(&self) -> &'static str {
+        "fisher"
+    }
+    fn description(&self) -> &'static str {
+        "Fisher-style importance-weighted average (Matena & Raffel 2022; \
+         importance = squared delta from ancestor)"
+    }
+    fn applicable(&self, kind: ConflictKind) -> bool {
+        kind == ConflictKind::BothModified // needs ancestor + both sides
+    }
+    fn resolve(&self, ctx: &ConflictCtx) -> Result<Option<crate::theta::metadata::GroupMetadata>> {
+        let ours = ctx.ours.context("fisher: missing our version")?;
+        let theirs = ctx.theirs.context("fisher: missing their version")?;
+        let anc = ctx.ancestor.context("fisher: missing ancestor")?;
+        let a = reconstruct_group(ctx.access, ours)?;
+        let b = reconstruct_group(ctx.access, theirs)?;
+        let base = reconstruct_group(ctx.access, anc)?;
+        if a.shape() != b.shape() || a.shape() != base.shape() {
+            bail!("fisher: incompatible shapes for '{}'", ctx.group);
+        }
+        let av = a.to_f32_vec()?;
+        let bv = b.to_f32_vec()?;
+        let cv = base.to_f32_vec()?;
+        let mut out = Vec::with_capacity(av.len());
+        for i in 0..av.len() {
+            let fa = (av[i] as f64 - cv[i] as f64).powi(2) + FISHER_EPS;
+            let fb = (bv[i] as f64 - cv[i] as f64).powi(2) + FISHER_EPS;
+            out.push(((fa * av[i] as f64 + fb * bv[i] as f64) / (fa + fb)) as f32);
+        }
+        let merged = Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)?;
+        Ok(Some(store_dense(ctx, merged)?))
+    }
+}
+
+/// Register the extension strategies (called from `crate::init`).
+pub fn register_extension_strategies() {
+    crate::theta::merge::register_merge_strategy(Box::new(WeightedAverage));
+    crate::theta::merge::register_merge_strategy(Box::new(FisherAverage));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::gitcore::drivers::MergeOptions;
+    use crate::lfs::LfsStore;
+    use crate::theta::filter::{clean_checkpoint, smudge_metadata, ObjectAccess};
+    use crate::theta::merge::merge_metadata;
+    use crate::util::tmp::TempDir;
+
+    fn access(td: &TempDir) -> ObjectAccess {
+        ObjectAccess {
+            store: LfsStore::open(td.path()),
+            remote: None,
+        }
+    }
+
+    fn ck(vals: Vec<f32>) -> Checkpoint {
+        let mut c = Checkpoint::new();
+        c.insert("w", Tensor::from_f32(vec![vals.len()], vals).unwrap());
+        c
+    }
+
+    fn opts(strategy: &str) -> MergeOptions {
+        MergeOptions {
+            strategy: Some(strategy.to_string()),
+            per_group: vec![],
+        }
+    }
+
+    #[test]
+    fn weighted_average_respects_weights() {
+        crate::init();
+        let td = TempDir::new("wavg").unwrap();
+        let acc = access(&td);
+        let base = ck(vec![0.0; 4]);
+        let v0 = clean_checkpoint(&acc, &base, "safetensors", None, None, 1).unwrap();
+        let ours = clean_checkpoint(&acc, &ck(vec![1.0; 4]), "safetensors", Some(&v0), None, 1).unwrap();
+        let theirs = clean_checkpoint(&acc, &ck(vec![3.0; 4]), "safetensors", Some(&v0), None, 1).unwrap();
+
+        set_branch_weights(3.0, 1.0);
+        let (m, _) = merge_metadata(&acc, Some(&v0), &ours, &theirs, &opts("weighted")).unwrap();
+        let out = smudge_metadata(&acc, &m, 1).unwrap();
+        // (3*1 + 1*3)/4 = 1.5
+        assert_eq!(out.get("w").unwrap().to_f32_vec().unwrap(), vec![1.5; 4]);
+        set_branch_weights(1.0, 1.0);
+    }
+
+    #[test]
+    fn fisher_average_prefers_the_branch_that_moved() {
+        crate::init();
+        let td = TempDir::new("fisher").unwrap();
+        let acc = access(&td);
+        let base = ck(vec![0.0, 0.0]);
+        let v0 = clean_checkpoint(&acc, &base, "safetensors", None, None, 1).unwrap();
+        // Ours moves elem 0 a lot; theirs moves elem 1 a lot; both also
+        // nudge the other elem slightly.
+        let ours = clean_checkpoint(&acc, &ck(vec![2.0, 0.1]), "safetensors", Some(&v0), None, 1).unwrap();
+        let theirs = clean_checkpoint(&acc, &ck(vec![0.1, 2.0]), "safetensors", Some(&v0), None, 1).unwrap();
+        let (m, resolved) = merge_metadata(&acc, Some(&v0), &ours, &theirs, &opts("fisher")).unwrap();
+        assert_eq!(resolved.len(), 1);
+        let out = smudge_metadata(&acc, &m, 1).unwrap();
+        let w = out.get("w").unwrap().to_f32_vec().unwrap();
+        // Each element lands near the branch that moved it hardest.
+        assert!(w[0] > 1.8, "{w:?}");
+        assert!(w[1] > 1.8, "{w:?}");
+    }
+
+    #[test]
+    fn fisher_requires_ancestor() {
+        crate::init();
+        use crate::theta::merge::menu_for;
+        let names: Vec<&str> = menu_for(ConflictKind::BothAdded).iter().map(|s| s.name()).collect();
+        assert!(!names.contains(&"fisher"));
+        let names: Vec<&str> = menu_for(ConflictKind::BothModified).iter().map(|s| s.name()).collect();
+        assert!(names.contains(&"fisher"));
+        assert!(names.contains(&"weighted"));
+    }
+}

@@ -1,0 +1,334 @@
+//! The model metadata file — what Git actually versions for a tracked
+//! checkpoint (paper §3.2 "Staging a Model").
+//!
+//! The clean filter replaces the multi-GB checkpoint with this small
+//! text file: per parameter group it records the tensor's shape, dtype
+//! and LSH signature, the update type, and the Git-LFS metadata of the
+//! serialized update objects. Unchanged groups carry their previous
+//! entry forward verbatim, so the JSON diff of two metadata versions is
+//! exactly "which groups changed" — which is also what makes Git's own
+//! text machinery efficient on it.
+//!
+//! Incremental updates (sparse/low-rank/IA3) must be applied on top of
+//! a previous version of the group. The paper reconstructs that chain
+//! by walking Git history at smudge time; here each incremental entry
+//! **embeds its base entry** under `"prev"` (the same information the
+//! history walk recovers, made explicit — see DESIGN.md §1). Chains
+//! terminate at a dense entry, so metadata stays small: a chain only
+//! grows while successive commits keep making incremental updates to
+//! the same group, and resets on any dense update.
+
+use crate::gitcore::object::Oid;
+use crate::tensor::DType;
+use crate::theta::lsh::LshSignature;
+use crate::util::json::{Json, JsonObj};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Format marker in the metadata root.
+pub const METADATA_MARKER: &str = "git-theta";
+pub const METADATA_VERSION: u64 = 1;
+
+/// Reference to one serialized object in the LFS store.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjRef {
+    pub oid: Oid,
+    pub size: u64,
+}
+
+impl ObjRef {
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("oid", self.oid.to_hex());
+        o.insert("size", self.size);
+        Json::Obj(o)
+    }
+
+    fn from_json(j: &Json) -> Result<ObjRef> {
+        Ok(ObjRef {
+            oid: Oid::from_hex(j.get("oid").and_then(|v| v.as_str()).context("objref oid")?)?,
+            size: j.get("size").and_then(|v| v.as_u64()).context("objref size")?,
+        })
+    }
+}
+
+/// Tensor-level metadata for a parameter group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorInfo {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub lsh: LshSignature,
+}
+
+/// How a group was updated and where its serialized data lives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UpdateInfo {
+    /// Update plug-in name: "dense", "sparse", "low_rank", "ia3", "trim".
+    pub kind: String,
+    /// Named LFS objects (e.g. {"data"} for dense, {"factors"} for LoRA).
+    pub objects: BTreeMap<String, ObjRef>,
+    /// Update-specific scalars (e.g. {"alpha": 2.0} or {"keep": 32000}).
+    pub extra: Json,
+}
+
+/// Full metadata for one parameter group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupMetadata {
+    pub tensor: TensorInfo,
+    pub update: UpdateInfo,
+    /// Base entry this (incremental) update applies on top of.
+    pub prev: Option<Box<GroupMetadata>>,
+}
+
+impl GroupMetadata {
+    pub fn to_json(&self) -> Json {
+        let mut t = JsonObj::new();
+        t.insert(
+            "shape",
+            Json::Arr(self.tensor.shape.iter().map(|&d| Json::from(d)).collect()),
+        );
+        t.insert("dtype", self.tensor.dtype.name());
+        t.insert("lsh", self.tensor.lsh.to_json());
+
+        let mut u = JsonObj::new();
+        u.insert("type", self.update.kind.clone());
+        let mut objs = JsonObj::new();
+        for (k, v) in &self.update.objects {
+            objs.insert(k.clone(), v.to_json());
+        }
+        u.insert("objects", objs);
+        u.insert("extra", self.update.extra.clone());
+
+        let mut g = JsonObj::new();
+        g.insert("tensor", t);
+        g.insert("update", u);
+        g.insert(
+            "prev",
+            match &self.prev {
+                Some(p) => p.to_json(),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(g)
+    }
+
+    pub fn from_json(j: &Json) -> Result<GroupMetadata> {
+        let t = j.get("tensor").context("group missing tensor")?;
+        let shape = t
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .context("tensor shape")?
+            .iter()
+            .map(|d| d.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(t.get("dtype").and_then(|v| v.as_str()).context("dtype")?)
+            .context("unknown dtype")?;
+        let lsh = LshSignature::from_json(t.get("lsh").context("lsh")?)?;
+
+        let u = j.get("update").context("group missing update")?;
+        let kind = u
+            .get("type")
+            .and_then(|v| v.as_str())
+            .context("update type")?
+            .to_string();
+        let mut objects = BTreeMap::new();
+        if let Some(objs) = u.get("objects").and_then(|v| v.as_obj()) {
+            for (k, v) in objs.iter() {
+                objects.insert(k.clone(), ObjRef::from_json(v)?);
+            }
+        }
+        let extra = u.get("extra").cloned().unwrap_or(Json::Null);
+
+        let prev = match j.get("prev") {
+            Some(Json::Null) | None => None,
+            Some(p) => Some(Box::new(GroupMetadata::from_json(p)?)),
+        };
+
+        Ok(GroupMetadata {
+            tensor: TensorInfo { shape, dtype, lsh },
+            update: UpdateInfo {
+                kind,
+                objects,
+                extra,
+            },
+            prev,
+        })
+    }
+
+    /// All LFS oids referenced by this entry and its base chain.
+    pub fn all_oids(&self, out: &mut Vec<Oid>) {
+        for obj in self.update.objects.values() {
+            out.push(obj.oid);
+        }
+        if let Some(p) = &self.prev {
+            p.all_oids(out);
+        }
+    }
+
+    /// Depth of the incremental chain (dense entry = 1).
+    pub fn chain_depth(&self) -> usize {
+        1 + self.prev.as_ref().map_or(0, |p| p.chain_depth())
+    }
+
+    /// Total serialized bytes referenced by this entry alone (not the chain).
+    pub fn own_bytes(&self) -> u64 {
+        self.update.objects.values().map(|o| o.size).sum()
+    }
+}
+
+/// The whole metadata file: one entry per parameter group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMetadata {
+    /// Checkpoint format plug-in that produced / will consume this model.
+    pub format: String,
+    pub groups: BTreeMap<String, GroupMetadata>,
+}
+
+impl ModelMetadata {
+    pub fn new(format: impl Into<String>) -> ModelMetadata {
+        ModelMetadata {
+            format: format.into(),
+            groups: BTreeMap::new(),
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut root = JsonObj::new();
+        root.insert(METADATA_MARKER, METADATA_VERSION);
+        root.insert("format", self.format.clone());
+        let mut groups = JsonObj::new();
+        for (name, g) in &self.groups {
+            groups.insert(name.clone(), g.to_json());
+        }
+        root.insert("groups", groups);
+        Json::Obj(root).to_string_pretty().into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelMetadata> {
+        let text = std::str::from_utf8(bytes).context("metadata is not utf-8")?;
+        let json = Json::parse(text).context("metadata json")?;
+        let version = json
+            .get(METADATA_MARKER)
+            .and_then(|v| v.as_u64())
+            .context("not a git-theta metadata file")?;
+        if version != METADATA_VERSION {
+            bail!("unsupported metadata version {version}");
+        }
+        let format = json
+            .get("format")
+            .and_then(|v| v.as_str())
+            .context("metadata missing format")?
+            .to_string();
+        let mut groups = BTreeMap::new();
+        if let Some(gobj) = json.get("groups").and_then(|v| v.as_obj()) {
+            for (name, g) in gobj.iter() {
+                groups.insert(
+                    name.clone(),
+                    GroupMetadata::from_json(g)
+                        .with_context(|| format!("group '{name}'"))?,
+                );
+            }
+        }
+        Ok(ModelMetadata { format, groups })
+    }
+
+    /// Cheap sniffer used by hooks scanning commits for model files.
+    pub fn is_metadata(bytes: &[u8]) -> bool {
+        let head = &bytes[..bytes.len().min(64)];
+        match std::str::from_utf8(head) {
+            Ok(s) => s.trim_start().starts_with('{') && s.contains(METADATA_MARKER),
+            Err(_) => false,
+        }
+    }
+
+    /// All LFS oids referenced by every group (including base chains).
+    pub fn all_oids(&self) -> Vec<Oid> {
+        let mut out = Vec::new();
+        for g in self.groups.values() {
+            g.all_oids(&mut out);
+        }
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// Oids referenced by `self` but not by `prev_version` — i.e. the
+    /// objects written by the commit that introduced this metadata.
+    pub fn new_oids_vs(&self, prev_version: Option<&ModelMetadata>) -> Vec<Oid> {
+        let prev: std::collections::HashSet<Oid> = prev_version
+            .map(|m| m.all_oids().into_iter().collect())
+            .unwrap_or_default();
+        self.all_oids()
+            .into_iter()
+            .filter(|o| !prev.contains(o))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::theta::lsh::LshSignature;
+
+    fn sample_group(seed: &[f32], kind: &str, prev: Option<GroupMetadata>) -> GroupMetadata {
+        GroupMetadata {
+            tensor: TensorInfo {
+                shape: vec![seed.len()],
+                dtype: DType::F32,
+                lsh: LshSignature::of_values(seed),
+            },
+            update: UpdateInfo {
+                kind: kind.to_string(),
+                objects: [(
+                    "data".to_string(),
+                    ObjRef {
+                        oid: Oid::of_bytes(kind.as_bytes()),
+                        size: 42,
+                    },
+                )]
+                .into_iter()
+                .collect(),
+                extra: Json::Null,
+            },
+            prev: prev.map(Box::new),
+        }
+    }
+
+    #[test]
+    fn roundtrip_with_chain() {
+        let base = sample_group(&[1.0, 2.0], "dense", None);
+        let inc = sample_group(&[1.5, 2.5], "sparse", Some(base));
+        let mut meta = ModelMetadata::new("safetensors");
+        meta.groups.insert("layer0/w".into(), inc);
+        meta.groups.insert("layer0/b".into(), sample_group(&[0.0], "dense", None));
+
+        let bytes = meta.to_bytes();
+        assert!(ModelMetadata::is_metadata(&bytes));
+        let back = ModelMetadata::from_bytes(&bytes).unwrap();
+        assert_eq!(back, meta);
+        assert_eq!(back.groups["layer0/w"].chain_depth(), 2);
+    }
+
+    #[test]
+    fn all_oids_and_new_oids() {
+        let base = sample_group(&[1.0], "dense", None);
+        let inc = sample_group(&[2.0], "sparse", Some(base.clone()));
+        let mut v1 = ModelMetadata::new("safetensors");
+        v1.groups.insert("w".into(), base);
+        let mut v2 = ModelMetadata::new("safetensors");
+        v2.groups.insert("w".into(), inc);
+
+        assert_eq!(v1.all_oids().len(), 1);
+        assert_eq!(v2.all_oids().len(), 2); // sparse + embedded dense
+        let new = v2.new_oids_vs(Some(&v1));
+        assert_eq!(new, vec![Oid::of_bytes(b"sparse")]);
+        assert_eq!(v2.new_oids_vs(None).len(), 2);
+    }
+
+    #[test]
+    fn rejects_non_metadata() {
+        assert!(!ModelMetadata::is_metadata(b"version https://git-lfs"));
+        assert!(ModelMetadata::from_bytes(b"{}").is_err());
+        assert!(ModelMetadata::from_bytes(b"\x00\x01binary").is_err());
+    }
+}

@@ -1,0 +1,42 @@
+//! Git-Theta core: the paper's system contribution.
+//!
+//! * [`lsh`] — locality-sensitive hashing for change detection.
+//! * [`updates`] — dense/sparse/low-rank/IA3/trim update plug-ins.
+//! * [`serialize`] — TensorStore-style chunked+compressed serializer.
+//! * [`metadata`] — the model metadata file Git versions.
+//! * [`filter`] — the clean/smudge filters.
+//! * [`diff`] — the parameter-group diff driver.
+//! * [`merge`] — the merge driver and strategy plug-ins.
+//! * [`hooks`] — post-commit / pre-push LFS object bookkeeping.
+//! * [`track`] — `git theta track`.
+
+pub mod diff;
+pub mod filter;
+pub mod hooks;
+pub mod lsh;
+pub mod merge;
+pub mod merge_ext;
+pub mod metadata;
+pub mod serialize;
+pub mod track;
+pub mod updates;
+
+pub use diff::{render_diff, ModelDiff, ThetaDiff};
+pub use filter::{clean_checkpoint, reconstruct_group, smudge_metadata, ObjectAccess, ThetaFilter};
+pub use hooks::ThetaHooks;
+pub use merge::{merge_metadata, register_merge_strategy, ThetaMerge};
+pub use metadata::{GroupMetadata, ModelMetadata, ObjRef};
+pub use track::{is_tracked, track};
+pub use updates::{infer_best, register_update_type, update_type, UpdatePayload, UpdateType};
+
+use crate::gitcore::drivers::DriverRegistry;
+use std::sync::Arc;
+
+/// Register the theta filter, diff driver, merge driver, and hooks.
+pub fn register_theta() {
+    merge_ext::register_extension_strategies();
+    DriverRegistry::register_filter("theta", Arc::new(ThetaFilter));
+    DriverRegistry::register_diff("theta", Arc::new(ThetaDiff));
+    DriverRegistry::register_merge("theta", Arc::new(ThetaMerge));
+    DriverRegistry::register_hooks(Arc::new(ThetaHooks));
+}

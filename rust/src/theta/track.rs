@@ -1,0 +1,39 @@
+//! `git theta track` (paper §3.2 "Tracking a Model"): configure a
+//! checkpoint path to use the theta filter/diff/merge drivers via the
+//! attributes file.
+
+use crate::gitcore::attributes::Attributes;
+use crate::gitcore::repo::Repository;
+use anyhow::Result;
+
+/// Start tracking `pattern` (path or glob) with Git-Theta. Returns true
+/// if a new attributes line was written.
+pub fn track(repo: &Repository, pattern: &str) -> Result<bool> {
+    let line = format!("{pattern} filter=theta diff=theta merge=theta");
+    Attributes::add_line(repo.worktree(), &line)
+}
+
+/// Is this path currently tracked by Git-Theta?
+pub fn is_tracked(repo: &Repository, path: &str) -> Result<bool> {
+    Ok(repo.attributes()?.value_of(path, "filter").as_deref() == Some("theta"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn track_writes_attributes_once() {
+        let td = TempDir::new("track").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        assert!(!is_tracked(&repo, "model.safetensors").unwrap());
+        assert!(track(&repo, "model.safetensors").unwrap());
+        assert!(is_tracked(&repo, "model.safetensors").unwrap());
+        // Idempotent.
+        assert!(!track(&repo, "model.safetensors").unwrap());
+        // Glob patterns work.
+        assert!(track(&repo, "*.ckpt").unwrap());
+        assert!(is_tracked(&repo, "sub/dir/m.ckpt").unwrap());
+    }
+}

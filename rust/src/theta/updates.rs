@@ -1,0 +1,792 @@
+//! Update plug-ins (paper §3.3 "Updates").
+//!
+//! An `Update` stores a parameter group as "the smallest amount of
+//! information needed to describe how the parameter group was modified"
+//! and can reconstruct the full values from that information plus (for
+//! incremental types) the previous version of the group:
+//!
+//! * [`DenseUpdate`] — full values; terminates every chain.
+//! * [`SparseUpdate`] — indices + new values of changed elements
+//!   (Sung et al. 2021; Guo et al. 2021). Assignment semantics make
+//!   reconstruction bit-exact.
+//! * [`LowRankUpdate`] — LoRA-style factors A·B added to the base
+//!   (Hu et al. 2022). Factors can be *inferred* from (prev, new) via
+//!   early-abort Gram–Schmidt rank factorization, or supplied exactly
+//!   by the trainer through [`UpdatePayload::low_rank_from_factors`]
+//!   (the paper's "external file" path that avoids numerical mismatch).
+//! * [`Ia3Update`] — per-column rescaling (Liu et al. 2022).
+//! * [`TrimUpdate`] — row-prefix removal (the paper's final benchmark
+//!   commit removes T5 sentinel embeddings and stores only which rows
+//!   survive).
+//!
+//! Inference tries every registered type and keeps the cheapest
+//! representation, so a LoRA-shaped delta never gets stored densely.
+
+use crate::tensor::{allclose, Tensor};
+use crate::util::json::{Json, JsonObj};
+use anyhow::{bail, Context, Result};
+use once_cell::sync::Lazy;
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+/// The data an update stores: named tensors + scalar extras.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UpdatePayload {
+    pub kind: String,
+    pub tensors: BTreeMap<String, Tensor>,
+    pub extra: Json,
+}
+
+impl UpdatePayload {
+    pub fn new(kind: &str) -> UpdatePayload {
+        UpdatePayload {
+            kind: kind.to_string(),
+            tensors: BTreeMap::new(),
+            extra: Json::Null,
+        }
+    }
+
+    /// In-memory size of the stored tensors (serialization estimate).
+    pub fn raw_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.nbytes()).sum::<usize>() + 64
+    }
+
+    /// Build an exact low-rank payload from trainer-provided factors:
+    /// new = prev + (alpha / r) · A @ B, A: (m, r), B: (r, n).
+    pub fn low_rank_from_factors(a: Tensor, b: Tensor, alpha: f32) -> Result<UpdatePayload> {
+        if a.shape().len() != 2 || b.shape().len() != 2 || a.shape()[1] != b.shape()[0] {
+            bail!(
+                "low-rank factors must be (m,r) x (r,n); got {:?} x {:?}",
+                a.shape(),
+                b.shape()
+            );
+        }
+        let mut p = UpdatePayload::new("low_rank");
+        p.tensors.insert("a".into(), a);
+        p.tensors.insert("b".into(), b);
+        let mut extra = JsonObj::new();
+        extra.insert("alpha", Json::Num(alpha as f64));
+        p.extra = Json::Obj(extra);
+        Ok(p)
+    }
+}
+
+/// An update-type plug-in.
+pub trait UpdateType: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Does reconstruction require the previous value of the group?
+    fn requires_prev(&self) -> bool;
+
+    /// Try to express `new` as this update type on top of `prev`.
+    /// Returns `None` when the type doesn't apply (wrong shape, no
+    /// saving, pattern mismatch).
+    fn infer(&self, prev: Option<&Tensor>, new: &Tensor) -> Result<Option<UpdatePayload>>;
+
+    /// Reconstruct the full parameter values.
+    fn apply(&self, payload: &UpdatePayload, prev: Option<&Tensor>) -> Result<Tensor>;
+}
+
+// ----------------------------------------------------------------------
+// dense
+// ----------------------------------------------------------------------
+
+pub struct DenseUpdate;
+
+impl UpdateType for DenseUpdate {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn requires_prev(&self) -> bool {
+        false
+    }
+
+    fn infer(&self, _prev: Option<&Tensor>, new: &Tensor) -> Result<Option<UpdatePayload>> {
+        let mut p = UpdatePayload::new("dense");
+        p.tensors.insert("values".into(), new.clone());
+        Ok(Some(p))
+    }
+
+    fn apply(&self, payload: &UpdatePayload, _prev: Option<&Tensor>) -> Result<Tensor> {
+        payload
+            .tensors
+            .get("values")
+            .cloned()
+            .context("dense update missing 'values'")
+    }
+}
+
+// ----------------------------------------------------------------------
+// sparse
+// ----------------------------------------------------------------------
+
+pub struct SparseUpdate;
+
+/// Store sparsely only when under this density (storage break-even for
+/// i64 index + f32 value vs one f32 is 1/3; leave headroom).
+const SPARSE_MAX_DENSITY: f64 = 0.25;
+
+impl UpdateType for SparseUpdate {
+    fn name(&self) -> &'static str {
+        "sparse"
+    }
+
+    fn requires_prev(&self) -> bool {
+        true
+    }
+
+    fn infer(&self, prev: Option<&Tensor>, new: &Tensor) -> Result<Option<UpdatePayload>> {
+        let prev = match prev {
+            Some(p) if p.shape() == new.shape() && p.dtype() == new.dtype() => p,
+            _ => return Ok(None),
+        };
+        if !new.dtype().is_float() {
+            return Ok(None);
+        }
+        let pv = prev.to_f32_vec()?;
+        let nv = new.to_f32_vec()?;
+        let max_nnz = (nv.len() as f64 * SPARSE_MAX_DENSITY) as usize;
+        // Sampled precheck (§Perf): a full fine-tune changes everything,
+        // so probing ~1k strided elements rejects dense changes without
+        // scanning (and allocating indices for) a quarter of the tensor.
+        if nv.len() > 4096 {
+            let stride = (nv.len() / 1024).max(1);
+            let mut sampled = 0usize;
+            let mut changed = 0usize;
+            let mut i = 0;
+            while i < nv.len() {
+                sampled += 1;
+                if pv[i].to_bits() != nv[i].to_bits() {
+                    changed += 1;
+                }
+                i += stride;
+            }
+            if changed as f64 > sampled as f64 * SPARSE_MAX_DENSITY * 1.5 {
+                return Ok(None);
+            }
+        }
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, (p, n)) in pv.iter().zip(&nv).enumerate() {
+            if p.to_bits() != n.to_bits() {
+                if indices.len() >= max_nnz {
+                    return Ok(None); // too dense to be worth it
+                }
+                indices.push(i as i64);
+                values.push(*n);
+            }
+        }
+        let mut payload = UpdatePayload::new("sparse");
+        let nnz = indices.len();
+        payload
+            .tensors
+            .insert("indices".into(), Tensor::from_i64(vec![nnz], indices)?);
+        payload
+            .tensors
+            .insert("values".into(), Tensor::from_f32(vec![nnz], values)?);
+        Ok(Some(payload))
+    }
+
+    fn apply(&self, payload: &UpdatePayload, prev: Option<&Tensor>) -> Result<Tensor> {
+        let prev = prev.context("sparse update requires previous value")?;
+        let indices = payload
+            .tensors
+            .get("indices")
+            .context("sparse update missing 'indices'")?
+            .to_i64_vec()?;
+        let values = payload
+            .tensors
+            .get("values")
+            .context("sparse update missing 'values'")?
+            .to_f32_vec()?;
+        if indices.len() != values.len() {
+            bail!("sparse update index/value length mismatch");
+        }
+        let mut out = prev.to_f32_vec()?;
+        for (&i, &v) in indices.iter().zip(&values) {
+            let i = i as usize;
+            if i >= out.len() {
+                bail!("sparse index {i} out of bounds ({})", out.len());
+            }
+            out[i] = v; // assignment semantics: bit-exact reconstruction
+        }
+        Ok(Tensor::from_f32_as(prev.dtype(), prev.shape().to_vec(), &out)?)
+    }
+}
+
+// ----------------------------------------------------------------------
+// low-rank
+// ----------------------------------------------------------------------
+
+pub struct LowRankUpdate;
+
+impl UpdateType for LowRankUpdate {
+    fn name(&self) -> &'static str {
+        "low_rank"
+    }
+
+    fn requires_prev(&self) -> bool {
+        true
+    }
+
+    fn infer(&self, prev: Option<&Tensor>, new: &Tensor) -> Result<Option<UpdatePayload>> {
+        let prev = match prev {
+            Some(p) if p.shape() == new.shape() && new.shape().len() == 2 => p,
+            _ => return Ok(None),
+        };
+        if !new.dtype().is_float() {
+            return Ok(None);
+        }
+        let (m, n) = (new.shape()[0], new.shape()[1]);
+        // Rank cap that guarantees ≥4x storage saving: r(m+n) ≤ mn/4.
+        let max_rank = (m * n) / (4 * (m + n));
+        if max_rank == 0 {
+            return Ok(None);
+        }
+        let pv = prev.to_f32_vec()?;
+        let nv = new.to_f32_vec()?;
+        let delta: Vec<f64> = nv
+            .iter()
+            .zip(&pv)
+            .map(|(a, b)| *a as f64 - *b as f64)
+            .collect();
+
+        // Residual tolerance: rows whose residual is below both a
+        // relative threshold and the f32 rounding floor of `new` are
+        // treated as dependent. The floor matters because the delta of a
+        // LoRA-merged f32 checkpoint is only rank-r up to rounding noise.
+        let max_abs = nv.iter().fold(0f64, |m, &v| m.max(v.abs() as f64));
+        let noise_floor = max_abs * 1.2e-7 * (n as f64).sqrt() * 8.0;
+        let factors = match rank_factorize(&delta, m, n, max_rank, noise_floor) {
+            Some(f) => f,
+            None => return Ok(None),
+        };
+        let (a, b, r) = factors;
+
+        // Exactness guard: accept only if prev + A·B reconstructs `new`
+        // within the f32 rounding noise of the factorization (paper:
+        // inference "can introduce numerical noise"; exact factors can
+        // always be supplied via `low_rank_from_factors` instead).
+        let recon = apply_low_rank(prev, &a, &b, m, n, r, 1.0)?;
+        // Consistent with the factorization: a dropped (dependent) row
+        // may leave up to `noise_floor` residual, so that is the
+        // per-element bound the reconstruction is held to.
+        let atol = noise_floor.max(1e-8);
+        if !allclose(&recon, new, 1e-5, atol)? {
+            return Ok(None);
+        }
+
+        let mut payload = UpdatePayload::new("low_rank");
+        payload.tensors.insert(
+            "a".into(),
+            Tensor::from_f32(vec![m, r], a.iter().map(|&x| x as f32).collect())?,
+        );
+        payload.tensors.insert(
+            "b".into(),
+            Tensor::from_f32(vec![r, n], b.iter().map(|&x| x as f32).collect())?,
+        );
+        let mut extra = JsonObj::new();
+        extra.insert("alpha", Json::Num(1.0));
+        payload.extra = Json::Obj(extra);
+        Ok(Some(payload))
+    }
+
+    fn apply(&self, payload: &UpdatePayload, prev: Option<&Tensor>) -> Result<Tensor> {
+        let prev = prev.context("low-rank update requires previous value")?;
+        let a = payload
+            .tensors
+            .get("a")
+            .context("low-rank update missing 'a'")?;
+        let b = payload
+            .tensors
+            .get("b")
+            .context("low-rank update missing 'b'")?;
+        let alpha = payload
+            .extra
+            .get("alpha")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(1.0) as f32;
+        let (m, r) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        if b.shape()[0] != r || prev.shape() != [m, n] {
+            bail!(
+                "low-rank shape mismatch: prev {:?}, a {:?}, b {:?}",
+                prev.shape(),
+                a.shape(),
+                b.shape()
+            );
+        }
+        let av: Vec<f64> = a.to_f32_vec()?.iter().map(|&x| x as f64).collect();
+        let bv: Vec<f64> = b.to_f32_vec()?.iter().map(|&x| x as f64).collect();
+        let scale = if r > 0 { alpha as f64 } else { 0.0 };
+        apply_low_rank_scaled(prev, &av, &bv, m, n, r, scale)
+    }
+}
+
+fn apply_low_rank(
+    prev: &Tensor,
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    n: usize,
+    r: usize,
+    scale: f64,
+) -> Result<Tensor> {
+    apply_low_rank_scaled(prev, a, b, m, n, r, scale)
+}
+
+fn apply_low_rank_scaled(
+    prev: &Tensor,
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    n: usize,
+    r: usize,
+    scale: f64,
+) -> Result<Tensor> {
+    let pv = prev.to_f32_vec()?;
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * r..(i + 1) * r];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let mut acc = 0f64;
+            for (k, &ak) in arow.iter().enumerate() {
+                acc += ak * b[k * n + j];
+            }
+            *o = (pv[i * n + j] as f64 + scale * acc) as f32;
+        }
+    }
+    Ok(Tensor::from_f32_as(prev.dtype(), prev.shape().to_vec(), &out)?)
+}
+
+/// Early-abort rank factorization of an m×n matrix via row-space
+/// Gram–Schmidt. Returns (A: m×r, B: r×n) with delta ≈ A·B, or None if
+/// the rank exceeds `max_rank` (cost until abort is O(max_rank²·n)).
+fn rank_factorize(
+    delta: &[f64],
+    m: usize,
+    n: usize,
+    max_rank: usize,
+    noise_floor: f64,
+) -> Option<(Vec<f64>, Vec<f64>, usize)> {
+    let frob: f64 = delta.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if frob == 0.0 {
+        return Some((vec![0.0; 0], vec![0.0; 0], 0));
+    }
+    // Per-row residual threshold: relative to the average row norm, but
+    // never below the caller's floating-point noise floor.
+    let tol = ((frob / (m as f64).sqrt()) * 1e-5).max(noise_floor);
+    let mut basis: Vec<f64> = Vec::new(); // r rows of length n, orthonormal
+    let mut coeffs: Vec<Vec<f64>> = Vec::new(); // per input row, r coefficients
+
+    for i in 0..m {
+        let row = &delta[i * n..(i + 1) * n];
+        let mut resid = row.to_vec();
+        let r = basis.len() / n.max(1);
+        let mut c = vec![0f64; r];
+        for k in 0..r {
+            let q = &basis[k * n..(k + 1) * n];
+            let dot: f64 = resid.iter().zip(q).map(|(x, y)| x * y).sum();
+            c[k] = dot;
+            for (x, y) in resid.iter_mut().zip(q) {
+                *x -= dot * y;
+            }
+        }
+        let rnorm: f64 = resid.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if rnorm > tol {
+            if basis.len() / n.max(1) >= max_rank {
+                return None; // rank too high; not worth storing low-rank
+            }
+            for x in resid.iter_mut() {
+                *x /= rnorm;
+            }
+            basis.extend_from_slice(&resid);
+            c.push(rnorm);
+        }
+        coeffs.push(c);
+    }
+
+    let r = basis.len() / n.max(1);
+    let mut a = vec![0f64; m * r];
+    for (i, c) in coeffs.iter().enumerate() {
+        a[i * r..i * r + c.len()].copy_from_slice(c);
+    }
+    Some((a, basis, r))
+}
+
+// ----------------------------------------------------------------------
+// IA3 (per-column rescaling)
+// ----------------------------------------------------------------------
+
+pub struct Ia3Update;
+
+impl UpdateType for Ia3Update {
+    fn name(&self) -> &'static str {
+        "ia3"
+    }
+
+    fn requires_prev(&self) -> bool {
+        true
+    }
+
+    fn infer(&self, prev: Option<&Tensor>, new: &Tensor) -> Result<Option<UpdatePayload>> {
+        let prev = match prev {
+            Some(p) if p.shape() == new.shape() && new.shape().len() == 2 => p,
+            _ => return Ok(None),
+        };
+        if !new.dtype().is_float() {
+            return Ok(None);
+        }
+        let (m, n) = (new.shape()[0], new.shape()[1]);
+        if m < 2 {
+            return Ok(None); // a 1-row matrix is better stored densely
+        }
+        let pv = prev.to_f32_vec()?;
+        let nv = new.to_f32_vec()?;
+        // Recover s[j] from the first row with a nonzero entry, then
+        // verify exact recomputation everywhere.
+        let mut scale = vec![1f32; n];
+        for j in 0..n {
+            let mut found = false;
+            for i in 0..m {
+                let p = pv[i * n + j];
+                if p != 0.0 {
+                    scale[j] = nv[i * n + j] / p;
+                    found = true;
+                    break;
+                }
+            }
+            if !found && nv.iter().skip(j).step_by(n).any(|&v| v != 0.0) {
+                return Ok(None); // zero column became nonzero: not a rescale
+            }
+        }
+        // Verify the rescale reproduces `new` to f32 rounding noise
+        // (recovered ratios are one division away from the trainer's
+        // multiply, so exact bit equality is too strict; the paper
+        // accepts inference-induced rounding noise).
+        for i in 0..m {
+            for j in 0..n {
+                let recon = pv[i * n + j] * scale[j];
+                let target = nv[i * n + j];
+                let tol = 4.0 * f32::EPSILON * target.abs().max(pv[i * n + j].abs());
+                if (recon - target).abs() > tol {
+                    return Ok(None);
+                }
+            }
+        }
+        let mut payload = UpdatePayload::new("ia3");
+        payload
+            .tensors
+            .insert("scale".into(), Tensor::from_f32(vec![n], scale)?);
+        Ok(Some(payload))
+    }
+
+    fn apply(&self, payload: &UpdatePayload, prev: Option<&Tensor>) -> Result<Tensor> {
+        let prev = prev.context("ia3 update requires previous value")?;
+        let scale = payload
+            .tensors
+            .get("scale")
+            .context("ia3 update missing 'scale'")?
+            .to_f32_vec()?;
+        if prev.shape().len() != 2 || prev.shape()[1] != scale.len() {
+            bail!(
+                "ia3 shape mismatch: prev {:?}, scale len {}",
+                prev.shape(),
+                scale.len()
+            );
+        }
+        let (m, n) = (prev.shape()[0], prev.shape()[1]);
+        let pv = prev.to_f32_vec()?;
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[i * n + j] = pv[i * n + j] * scale[j];
+            }
+        }
+        Ok(Tensor::from_f32_as(prev.dtype(), prev.shape().to_vec(), &out)?)
+    }
+}
+
+// ----------------------------------------------------------------------
+// trim (row-prefix removal)
+// ----------------------------------------------------------------------
+
+pub struct TrimUpdate;
+
+impl UpdateType for TrimUpdate {
+    fn name(&self) -> &'static str {
+        "trim"
+    }
+
+    fn requires_prev(&self) -> bool {
+        true
+    }
+
+    fn infer(&self, prev: Option<&Tensor>, new: &Tensor) -> Result<Option<UpdatePayload>> {
+        let prev = match prev {
+            Some(p) => p,
+            None => return Ok(None),
+        };
+        if prev.dtype() != new.dtype()
+            || prev.shape().len() != new.shape().len()
+            || prev.shape().is_empty()
+            || prev.shape()[1..] != new.shape()[1..]
+            || new.shape()[0] >= prev.shape()[0]
+        {
+            return Ok(None);
+        }
+        let keep = new.shape()[0];
+        let trimmed = prev.take_rows(keep)?;
+        if trimmed.bytes() != new.bytes() {
+            return Ok(None);
+        }
+        let mut payload = UpdatePayload::new("trim");
+        let mut extra = JsonObj::new();
+        extra.insert("keep", keep);
+        payload.extra = Json::Obj(extra);
+        Ok(Some(payload))
+    }
+
+    fn apply(&self, payload: &UpdatePayload, prev: Option<&Tensor>) -> Result<Tensor> {
+        let prev = prev.context("trim update requires previous value")?;
+        let keep = payload
+            .extra
+            .get("keep")
+            .and_then(|v| v.as_usize())
+            .context("trim update missing 'keep'")?;
+        prev.take_rows(keep).context("trim apply")
+    }
+}
+
+// ----------------------------------------------------------------------
+// registry + auto-inference
+// ----------------------------------------------------------------------
+
+static REGISTRY: Lazy<RwLock<Vec<&'static dyn UpdateType>>> = Lazy::new(|| {
+    RwLock::new(vec![
+        &TrimUpdate as &'static dyn UpdateType,
+        &Ia3Update,
+        &SparseUpdate,
+        &LowRankUpdate,
+        &DenseUpdate,
+    ])
+});
+
+/// Register a user update-type plug-in (tried before `dense`).
+pub fn register_update_type(u: Box<dyn UpdateType>) {
+    let u: &'static dyn UpdateType = Box::leak(u);
+    let mut reg = REGISTRY.write().unwrap();
+    let dense_pos = reg.iter().position(|t| t.name() == "dense").unwrap_or(0);
+    reg.insert(dense_pos, u);
+}
+
+/// Look up an update type by name.
+pub fn update_type(name: &str) -> Option<&'static dyn UpdateType> {
+    REGISTRY.read().unwrap().iter().copied().find(|u| u.name() == name)
+}
+
+/// Names of registered update types, in trial order.
+pub fn update_type_names() -> Vec<&'static str> {
+    REGISTRY.read().unwrap().iter().map(|u| u.name()).collect()
+}
+
+/// Infer the cheapest representation of `new` given `prev`.
+///
+/// `forced` pins a specific type (the paper's per-file/user override);
+/// otherwise every registered type is tried and the smallest payload
+/// wins (dense always succeeds, so this never fails).
+pub fn infer_best(
+    prev: Option<&Tensor>,
+    new: &Tensor,
+    forced: Option<&str>,
+) -> Result<UpdatePayload> {
+    if let Some(name) = forced {
+        let u = update_type(name).with_context(|| format!("unknown update type '{name}'"))?;
+        return u
+            .infer(prev, new)?
+            .with_context(|| format!("update type '{name}' cannot represent this change"));
+    }
+    let mut best: Option<UpdatePayload> = None;
+    for u in REGISTRY.read().unwrap().iter() {
+        if let Some(p) = u.infer(prev, new)? {
+            if best.as_ref().map_or(true, |b| p.raw_bytes() < b.raw_bytes()) {
+                best = Some(p);
+            }
+        }
+    }
+    best.context("no update type could represent this tensor (dense should always apply)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_matrix(seed: u64, m: usize, n: usize) -> Tensor {
+        let mut rng = Pcg64::new(seed);
+        let vals: Vec<f32> = (0..m * n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect();
+        Tensor::from_f32(vec![m, n], vals).unwrap()
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let t = random_matrix(1, 8, 8);
+        let p = DenseUpdate.infer(None, &t).unwrap().unwrap();
+        assert_eq!(DenseUpdate.apply(&p, None).unwrap(), t);
+    }
+
+    #[test]
+    fn sparse_exact_roundtrip() {
+        let prev = random_matrix(2, 32, 32);
+        let mut nv = prev.to_f32_vec().unwrap();
+        nv[5] = 7.25;
+        nv[100] = -1.5;
+        nv[1000] += 0.125;
+        let new = Tensor::from_f32(vec![32, 32], nv).unwrap();
+        let p = SparseUpdate.infer(Some(&prev), &new).unwrap().unwrap();
+        assert_eq!(p.tensors["indices"].numel(), 3);
+        let recon = SparseUpdate.apply(&p, Some(&prev)).unwrap();
+        assert_eq!(recon, new); // bit-exact
+    }
+
+    #[test]
+    fn sparse_rejects_dense_change() {
+        let prev = random_matrix(3, 16, 16);
+        let new = random_matrix(4, 16, 16); // everything changed
+        assert!(SparseUpdate.infer(Some(&prev), &new).unwrap().is_none());
+    }
+
+    #[test]
+    fn sparse_rejects_shape_change() {
+        let prev = random_matrix(5, 4, 4);
+        let new = random_matrix(5, 2, 8);
+        assert!(SparseUpdate.infer(Some(&prev), &new).unwrap().is_none());
+    }
+
+    #[test]
+    fn low_rank_infer_recovers_lora_delta() {
+        let prev = random_matrix(6, 64, 48);
+        // Build an exactly rank-2 delta in f64 then round to f32 once.
+        let mut rng = Pcg64::new(7);
+        let a: Vec<f64> = (0..64 * 2).map(|_| rng.next_gaussian() * 0.01).collect();
+        let b: Vec<f64> = (0..2 * 48).map(|_| rng.next_gaussian() * 0.01).collect();
+        let pv = prev.to_f32_vec().unwrap();
+        let mut nv = vec![0f32; 64 * 48];
+        for i in 0..64 {
+            for j in 0..48 {
+                let mut acc = 0f64;
+                for k in 0..2 {
+                    acc += a[i * 2 + k] * b[k * 48 + j];
+                }
+                nv[i * 48 + j] = (pv[i * 48 + j] as f64 + acc) as f32;
+            }
+        }
+        let new = Tensor::from_f32(vec![64, 48], nv).unwrap();
+        let p = LowRankUpdate.infer(Some(&prev), &new).unwrap().unwrap();
+        let r = p.tensors["a"].shape()[1];
+        assert!(r <= 3, "recovered rank {r}");
+        let recon = LowRankUpdate.apply(&p, Some(&prev)).unwrap();
+        assert!(allclose(&recon, &new, 1e-5, 1e-7).unwrap());
+        // Storage is much smaller than dense.
+        assert!(p.raw_bytes() < new.nbytes() / 4);
+    }
+
+    #[test]
+    fn low_rank_rejects_full_rank_delta() {
+        let prev = random_matrix(8, 32, 32);
+        let new = random_matrix(9, 32, 32);
+        assert!(LowRankUpdate.infer(Some(&prev), &new).unwrap().is_none());
+    }
+
+    #[test]
+    fn low_rank_from_factors_applies_with_alpha() {
+        let prev = random_matrix(10, 8, 6);
+        let a = Tensor::from_f32(vec![8, 1], vec![1.0; 8]).unwrap();
+        let b = Tensor::from_f32(vec![1, 6], vec![0.5; 6]).unwrap();
+        let p = UpdatePayload::low_rank_from_factors(a, b, 2.0).unwrap();
+        let out = LowRankUpdate.apply(&p, Some(&prev)).unwrap();
+        let pv = prev.to_f32_vec().unwrap();
+        let ov = out.to_f32_vec().unwrap();
+        for (o, p) in ov.iter().zip(&pv) {
+            assert!((o - (p + 1.0)).abs() < 1e-6); // 2.0 * 1.0 * 0.5
+        }
+    }
+
+    #[test]
+    fn ia3_infer_and_apply() {
+        let prev = random_matrix(11, 16, 8);
+        let scale: Vec<f32> = (0..8).map(|j| 1.0 + j as f32 * 0.1).collect();
+        let pv = prev.to_f32_vec().unwrap();
+        let nv: Vec<f32> = pv
+            .iter()
+            .enumerate()
+            .map(|(idx, &v)| v * scale[idx % 8])
+            .collect();
+        let new = Tensor::from_f32(vec![16, 8], nv).unwrap();
+        let p = Ia3Update.infer(Some(&prev), &new).unwrap().unwrap();
+        assert_eq!(p.tensors["scale"].numel(), 8);
+        assert_eq!(Ia3Update.apply(&p, Some(&prev)).unwrap(), new);
+    }
+
+    #[test]
+    fn ia3_rejects_non_rescale() {
+        let prev = random_matrix(12, 8, 8);
+        let mut nv = prev.to_f32_vec().unwrap();
+        nv[3] += 1.0;
+        let new = Tensor::from_f32(vec![8, 8], nv).unwrap();
+        assert!(Ia3Update.infer(Some(&prev), &new).unwrap().is_none());
+    }
+
+    #[test]
+    fn trim_infer_and_apply() {
+        let prev = random_matrix(13, 100, 16);
+        let new = prev.take_rows(90).unwrap();
+        let p = TrimUpdate.infer(Some(&prev), &new).unwrap().unwrap();
+        assert!(p.tensors.is_empty()); // nearly free to store
+        assert_eq!(TrimUpdate.apply(&p, Some(&prev)).unwrap(), new);
+    }
+
+    #[test]
+    fn trim_rejects_modified_prefix() {
+        let prev = random_matrix(14, 10, 4);
+        let mut t = prev.take_rows(8).unwrap().to_f32_vec().unwrap();
+        t[0] += 1.0;
+        let new = Tensor::from_f32(vec![8, 4], t).unwrap();
+        assert!(TrimUpdate.infer(Some(&prev), &new).unwrap().is_none());
+    }
+
+    #[test]
+    fn infer_best_picks_cheapest() {
+        let prev = random_matrix(15, 64, 64);
+        // Sparse change of 3 elements -> sparse wins.
+        let mut nv = prev.to_f32_vec().unwrap();
+        nv[0] = 9.0;
+        let new = Tensor::from_f32(vec![64, 64], nv).unwrap();
+        let p = infer_best(Some(&prev), &new, None).unwrap();
+        assert_eq!(p.kind, "sparse");
+        // Trim wins over everything.
+        let trimmed = prev.take_rows(32).unwrap();
+        let p = infer_best(Some(&prev), &trimmed, None).unwrap();
+        assert_eq!(p.kind, "trim");
+        // No prev -> dense.
+        let p = infer_best(None, &new, None).unwrap();
+        assert_eq!(p.kind, "dense");
+        // Forced dense works regardless.
+        let p = infer_best(Some(&prev), &new, Some("dense")).unwrap();
+        assert_eq!(p.kind, "dense");
+    }
+
+    #[test]
+    fn registry_lookup_and_names() {
+        assert!(update_type("dense").is_some());
+        assert!(update_type("sparse").is_some());
+        assert!(update_type("low_rank").is_some());
+        assert!(update_type("ia3").is_some());
+        assert!(update_type("trim").is_some());
+        assert!(update_type("bogus").is_none());
+        let names = update_type_names();
+        assert_eq!(names.last(), Some(&"dense"));
+    }
+}

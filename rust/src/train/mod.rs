@@ -1,0 +1,20 @@
+//! Figure 3 driver: real training through the AOT-compiled train step.
+//!
+//! The paper fine-tunes T0-3B on CB, RTE, and ANLI and shows task
+//! accuracy at each point in commit history (merging the RTE and ANLI
+//! branches recovers RTE performance). We reproduce the *shape* of that
+//! result with a small transformer classifier (L2, `python/compile/
+//! model.py`) trained from Rust by executing the AOT `train_step` /
+//! `eval_step` artifacts — Python never runs here.
+//!
+//! Tasks are synthetic few-shot entailment-style classification problems
+//! with controlled transfer: CB/RTE/ANLI-like tasks share a common
+//! latent labeling rule plus task-specific components, so training on
+//! one task moves performance on the others the way the paper's related
+//! NLP tasks do.
+
+pub mod data;
+pub mod trainer;
+
+pub use data::{SyntheticTask, TaskKind};
+pub use trainer::{ModelParams, TrainConfig, Trainer};

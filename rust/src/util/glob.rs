@@ -1,0 +1,171 @@
+//! Gitattributes-style glob matching.
+//!
+//! Supports `*` (any run of non-separator chars), `?` (one non-separator
+//! char), `**` (any run including separators), and character classes
+//! `[abc]` / `[a-z]` / `[!abc]`. Matching semantics follow what
+//! `.gitattributes` patterns need: a pattern without a slash matches the
+//! basename of a path; a pattern with a slash matches the full path.
+
+/// A compiled glob pattern.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Glob {
+    pattern: String,
+    has_slash: bool,
+}
+
+impl Glob {
+    pub fn new(pattern: &str) -> Glob {
+        Glob {
+            pattern: pattern.trim_start_matches("./").to_string(),
+            has_slash: pattern.contains('/'),
+        }
+    }
+
+    pub fn pattern(&self) -> &str {
+        &self.pattern
+    }
+
+    /// Does this glob match the given repository-relative path?
+    pub fn matches(&self, path: &str) -> bool {
+        let path = path.trim_start_matches("./");
+        if self.has_slash {
+            glob_match(&self.pattern, path)
+        } else {
+            let base = path.rsplit('/').next().unwrap_or(path);
+            glob_match(&self.pattern, base)
+        }
+    }
+}
+
+/// Core matcher over full strings.
+pub fn glob_match(pattern: &str, text: &str) -> bool {
+    let p: Vec<char> = pattern.chars().collect();
+    let t: Vec<char> = text.chars().collect();
+    match_at(&p, 0, &t, 0)
+}
+
+fn match_at(p: &[char], mut pi: usize, t: &[char], mut ti: usize) -> bool {
+    while pi < p.len() {
+        match p[pi] {
+            '*' => {
+                // Collapse consecutive stars; detect `**`.
+                let mut stars = 0;
+                while pi < p.len() && p[pi] == '*' {
+                    stars += 1;
+                    pi += 1;
+                }
+                let cross_sep = stars >= 2;
+                // `**/` can also match zero directories.
+                if cross_sep && pi < p.len() && p[pi] == '/' && match_at(p, pi + 1, t, ti) {
+                    return true;
+                }
+                for k in ti..=t.len() {
+                    if match_at(p, pi, t, k) {
+                        return true;
+                    }
+                    if k < t.len() && !cross_sep && t[k] == '/' {
+                        return false;
+                    }
+                }
+                return false;
+            }
+            '?' => {
+                if ti >= t.len() || t[ti] == '/' {
+                    return false;
+                }
+                pi += 1;
+                ti += 1;
+            }
+            '[' => {
+                let (matched, next_pi) = match_class(p, pi, t, ti);
+                if !matched {
+                    return false;
+                }
+                pi = next_pi;
+                ti += 1;
+            }
+            c => {
+                if ti >= t.len() || t[ti] != c {
+                    return false;
+                }
+                pi += 1;
+                ti += 1;
+            }
+        }
+    }
+    ti == t.len()
+}
+
+fn match_class(p: &[char], pi: usize, t: &[char], ti: usize) -> (bool, usize) {
+    // pi points at '['. Find closing ']'.
+    let mut end = pi + 1;
+    let negated = end < p.len() && (p[end] == '!' || p[end] == '^');
+    let start = if negated { pi + 2 } else { pi + 1 };
+    end = start;
+    // A ']' directly after the opening (or '!') is a literal member.
+    if end < p.len() && p[end] == ']' {
+        end += 1;
+    }
+    while end < p.len() && p[end] != ']' {
+        end += 1;
+    }
+    if end >= p.len() {
+        // Unterminated class: treat '[' literally.
+        return (ti < t.len() && t[ti] == '[', pi + 1);
+    }
+    if ti >= t.len() || t[ti] == '/' {
+        return (false, end + 1);
+    }
+    let c = t[ti];
+    let mut matched = false;
+    let mut i = start;
+    while i < end {
+        if i + 2 < end && p[i + 1] == '-' {
+            if p[i] <= c && c <= p[i + 2] {
+                matched = true;
+            }
+            i += 3;
+        } else {
+            if p[i] == c {
+                matched = true;
+            }
+            i += 1;
+        }
+    }
+    (matched != negated, end + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_and_star() {
+        assert!(glob_match("model.pt", "model.pt"));
+        assert!(!glob_match("model.pt", "model.pth"));
+        assert!(glob_match("*.pt", "model.pt"));
+        assert!(!glob_match("*.pt", "dir/model.pt")); // '*' does not cross '/'
+        assert!(glob_match("**/*.pt", "dir/sub/model.pt"));
+        assert!(glob_match("**/*.pt", "model.pt")); // `**/` matches zero dirs
+        assert!(glob_match("dir/**", "dir/a/b/c"));
+    }
+
+    #[test]
+    fn question_and_class() {
+        assert!(glob_match("v?.bin", "v1.bin"));
+        assert!(!glob_match("v?.bin", "v12.bin"));
+        assert!(glob_match("v[0-9].bin", "v7.bin"));
+        assert!(!glob_match("v[0-9].bin", "vx.bin"));
+        assert!(glob_match("v[!0-9].bin", "vx.bin"));
+    }
+
+    #[test]
+    fn gitattributes_basename_semantics() {
+        let g = Glob::new("*.ckpt");
+        assert!(g.matches("a/b/model.ckpt"));
+        assert!(g.matches("model.ckpt"));
+        let g2 = Glob::new("models/*.ckpt");
+        assert!(g2.matches("models/m.ckpt"));
+        assert!(!g2.matches("other/m.ckpt"));
+    }
+}

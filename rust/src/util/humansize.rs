@@ -1,0 +1,48 @@
+//! Human-readable byte sizes and durations for reports and the CLI.
+
+/// Format bytes like the paper's tables: "11.4GB", "0.27GB", "1024kB".
+pub fn bytes(n: u64) -> String {
+    const KB: f64 = 1000.0;
+    let n = n as f64;
+    if n >= KB * KB * KB {
+        format!("{:.2}GB", n / (KB * KB * KB))
+    } else if n >= KB * KB {
+        format!("{:.2}MB", n / (KB * KB))
+    } else if n >= KB {
+        format!("{:.1}kB", n / KB)
+    } else {
+        format!("{n}B")
+    }
+}
+
+/// Format a duration like the paper's tables: "2m 24.6s", "35.6s".
+pub fn duration(secs: f64) -> String {
+    if secs >= 60.0 {
+        let m = (secs / 60.0).floor() as u64;
+        format!("{m}m {:.1}s", secs - m as f64 * 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.1}s")
+    } else {
+        format!("{:.1}ms", secs * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_bytes() {
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(bytes(2_048), "2.0kB");
+        assert_eq!(bytes(11_400_000_000), "11.40GB");
+        assert_eq!(bytes(270_000_000), "270.00MB");
+    }
+
+    #[test]
+    fn formats_duration() {
+        assert_eq!(duration(144.6), "2m 24.6s");
+        assert_eq!(duration(35.6), "35.6s");
+        assert_eq!(duration(0.0352), "35.2ms");
+    }
+}

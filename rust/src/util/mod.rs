@@ -1,0 +1,17 @@
+//! Self-contained support substrates.
+//!
+//! The offline build environment provides no serde/clap/criterion/rayon,
+//! so the small generic pieces Git-Theta needs are implemented here:
+//! JSON and MessagePack codecs, hex, glob matching, a PCG64 RNG, a
+//! scoped-thread parallel map, human-readable sizes, temp dirs, and a
+//! tiny property-testing harness.
+
+pub mod glob;
+pub mod hex;
+pub mod humansize;
+pub mod json;
+pub mod msgpack;
+pub mod par;
+pub mod prop;
+pub mod rng;
+pub mod tmp;

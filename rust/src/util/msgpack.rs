@@ -1,0 +1,490 @@
+//! MessagePack encoder/decoder.
+//!
+//! The paper combines multi-tensor updates (e.g. a sparse update's indices
+//! and values) into one blob "using msgpack"; this module is that
+//! serializer. It implements the msgpack wire format for the subset of
+//! types Git-Theta needs: nil, bool, ints, f32/f64, str, bin, array, map.
+
+use std::collections::BTreeMap;
+
+/// A decoded MessagePack value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mp {
+    Nil,
+    Bool(bool),
+    Int(i64),
+    UInt(u64),
+    F32(f32),
+    F64(f64),
+    Str(String),
+    Bin(Vec<u8>),
+    Arr(Vec<Mp>),
+    /// String-keyed map (sufficient for Git-Theta payloads), ordered.
+    Map(Vec<(String, Mp)>),
+}
+
+impl Mp {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Mp::UInt(v) => Some(*v),
+            Mp::Int(v) if *v >= 0 => Some(*v as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Mp::Int(v) => Some(*v),
+            Mp::UInt(v) if *v <= i64::MAX as u64 => Some(*v as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Mp::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bin(&self) -> Option<&[u8]> {
+        match self {
+            Mp::Bin(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Mp]> {
+        match self {
+            Mp::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Mp> {
+        match self {
+            Mp::Map(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn map_from(entries: Vec<(&str, Mp)>) -> Mp {
+        Mp::Map(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Encode to msgpack bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_into(self, &mut out);
+        out
+    }
+
+    /// Decode a single msgpack value; errors on trailing bytes.
+    pub fn decode(bytes: &[u8]) -> Result<Mp, MpError> {
+        let mut d = Decoder { bytes, pos: 0 };
+        let v = d.decode_value(0)?;
+        if d.pos != bytes.len() {
+            return Err(MpError::Trailing(d.pos));
+        }
+        Ok(v)
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum MpError {
+    #[error("msgpack: truncated input at byte {0}")]
+    Truncated(usize),
+    #[error("msgpack: unknown or unsupported tag 0x{0:02x} at byte {1}")]
+    BadTag(u8, usize),
+    #[error("msgpack: invalid utf-8 string at byte {0}")]
+    BadUtf8(usize),
+    #[error("msgpack: non-string map key at byte {0}")]
+    BadKey(usize),
+    #[error("msgpack: trailing bytes after value at byte {0}")]
+    Trailing(usize),
+    #[error("msgpack: nesting too deep")]
+    TooDeep,
+}
+
+fn encode_into(v: &Mp, out: &mut Vec<u8>) {
+    match v {
+        Mp::Nil => out.push(0xc0),
+        Mp::Bool(false) => out.push(0xc2),
+        Mp::Bool(true) => out.push(0xc3),
+        Mp::Int(n) => encode_int(*n, out),
+        Mp::UInt(n) => encode_uint(*n, out),
+        Mp::F32(f) => {
+            out.push(0xca);
+            out.extend_from_slice(&f.to_be_bytes());
+        }
+        Mp::F64(f) => {
+            out.push(0xcb);
+            out.extend_from_slice(&f.to_be_bytes());
+        }
+        Mp::Str(s) => {
+            let b = s.as_bytes();
+            match b.len() {
+                0..=31 => out.push(0xa0 | b.len() as u8),
+                32..=255 => {
+                    out.push(0xd9);
+                    out.push(b.len() as u8);
+                }
+                256..=65535 => {
+                    out.push(0xda);
+                    out.extend_from_slice(&(b.len() as u16).to_be_bytes());
+                }
+                _ => {
+                    out.push(0xdb);
+                    out.extend_from_slice(&(b.len() as u32).to_be_bytes());
+                }
+            }
+            out.extend_from_slice(b);
+        }
+        Mp::Bin(b) => {
+            match b.len() {
+                0..=255 => {
+                    out.push(0xc4);
+                    out.push(b.len() as u8);
+                }
+                256..=65535 => {
+                    out.push(0xc5);
+                    out.extend_from_slice(&(b.len() as u16).to_be_bytes());
+                }
+                _ => {
+                    out.push(0xc6);
+                    out.extend_from_slice(&(b.len() as u32).to_be_bytes());
+                }
+            }
+            out.extend_from_slice(b);
+        }
+        Mp::Arr(items) => {
+            match items.len() {
+                0..=15 => out.push(0x90 | items.len() as u8),
+                16..=65535 => {
+                    out.push(0xdc);
+                    out.extend_from_slice(&(items.len() as u16).to_be_bytes());
+                }
+                _ => {
+                    out.push(0xdd);
+                    out.extend_from_slice(&(items.len() as u32).to_be_bytes());
+                }
+            }
+            for item in items {
+                encode_into(item, out);
+            }
+        }
+        Mp::Map(entries) => {
+            match entries.len() {
+                0..=15 => out.push(0x80 | entries.len() as u8),
+                16..=65535 => {
+                    out.push(0xde);
+                    out.extend_from_slice(&(entries.len() as u16).to_be_bytes());
+                }
+                _ => {
+                    out.push(0xdf);
+                    out.extend_from_slice(&(entries.len() as u32).to_be_bytes());
+                }
+            }
+            for (k, val) in entries {
+                encode_into(&Mp::Str(k.clone()), out);
+                encode_into(val, out);
+            }
+        }
+    }
+}
+
+fn encode_uint(n: u64, out: &mut Vec<u8>) {
+    match n {
+        0..=0x7f => out.push(n as u8),
+        0x80..=0xff => {
+            out.push(0xcc);
+            out.push(n as u8);
+        }
+        0x100..=0xffff => {
+            out.push(0xcd);
+            out.extend_from_slice(&(n as u16).to_be_bytes());
+        }
+        0x10000..=0xffff_ffff => {
+            out.push(0xce);
+            out.extend_from_slice(&(n as u32).to_be_bytes());
+        }
+        _ => {
+            out.push(0xcf);
+            out.extend_from_slice(&n.to_be_bytes());
+        }
+    }
+}
+
+fn encode_int(n: i64, out: &mut Vec<u8>) {
+    if n >= 0 {
+        encode_uint(n as u64, out);
+        return;
+    }
+    match n {
+        -32..=-1 => out.push(n as u8),
+        -128..=-33 => {
+            out.push(0xd0);
+            out.push(n as u8);
+        }
+        -32768..=-129 => {
+            out.push(0xd1);
+            out.extend_from_slice(&(n as i16).to_be_bytes());
+        }
+        -2147483648..=-32769 => {
+            out.push(0xd2);
+            out.extend_from_slice(&(n as i32).to_be_bytes());
+        }
+        _ => {
+            out.push(0xd3);
+            out.extend_from_slice(&n.to_be_bytes());
+        }
+    }
+}
+
+const MAX_DEPTH: usize = 64;
+
+struct Decoder<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], MpError> {
+        if self.pos + n > self.bytes.len() {
+            return Err(MpError::Truncated(self.pos));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, MpError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, MpError> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, MpError> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64v(&mut self) -> Result<u64, MpError> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str_of(&mut self, len: usize) -> Result<String, MpError> {
+        let at = self.pos;
+        let b = self.take(len)?;
+        String::from_utf8(b.to_vec()).map_err(|_| MpError::BadUtf8(at))
+    }
+
+    fn arr_of(&mut self, len: usize, depth: usize) -> Result<Mp, MpError> {
+        let mut items = Vec::with_capacity(len.min(4096));
+        for _ in 0..len {
+            items.push(self.decode_value(depth + 1)?);
+        }
+        Ok(Mp::Arr(items))
+    }
+
+    fn map_of(&mut self, len: usize, depth: usize) -> Result<Mp, MpError> {
+        let mut entries = Vec::with_capacity(len.min(4096));
+        for _ in 0..len {
+            let at = self.pos;
+            let key = match self.decode_value(depth + 1)? {
+                Mp::Str(s) => s,
+                _ => return Err(MpError::BadKey(at)),
+            };
+            entries.push((key, self.decode_value(depth + 1)?));
+        }
+        Ok(Mp::Map(entries))
+    }
+
+    fn decode_value(&mut self, depth: usize) -> Result<Mp, MpError> {
+        if depth > MAX_DEPTH {
+            return Err(MpError::TooDeep);
+        }
+        let at = self.pos;
+        let tag = self.u8()?;
+        Ok(match tag {
+            0x00..=0x7f => Mp::UInt(tag as u64),
+            0xe0..=0xff => Mp::Int(tag as i8 as i64),
+            0x80..=0x8f => self.map_of((tag & 0x0f) as usize, depth)?,
+            0x90..=0x9f => self.arr_of((tag & 0x0f) as usize, depth)?,
+            0xa0..=0xbf => {
+                let len = (tag & 0x1f) as usize;
+                Mp::Str(self.str_of(len)?)
+            }
+            0xc0 => Mp::Nil,
+            0xc2 => Mp::Bool(false),
+            0xc3 => Mp::Bool(true),
+            0xc4 => {
+                let len = self.u8()? as usize;
+                Mp::Bin(self.take(len)?.to_vec())
+            }
+            0xc5 => {
+                let len = self.u16()? as usize;
+                Mp::Bin(self.take(len)?.to_vec())
+            }
+            0xc6 => {
+                let len = self.u32()? as usize;
+                Mp::Bin(self.take(len)?.to_vec())
+            }
+            0xca => Mp::F32(f32::from_be_bytes(self.take(4)?.try_into().unwrap())),
+            0xcb => Mp::F64(f64::from_be_bytes(self.take(8)?.try_into().unwrap())),
+            0xcc => Mp::UInt(self.u8()? as u64),
+            0xcd => Mp::UInt(self.u16()? as u64),
+            0xce => Mp::UInt(self.u32()? as u64),
+            0xcf => Mp::UInt(self.u64v()?),
+            0xd0 => Mp::Int(self.u8()? as i8 as i64),
+            0xd1 => Mp::Int(self.u16()? as i16 as i64),
+            0xd2 => Mp::Int(self.u32()? as i32 as i64),
+            0xd3 => Mp::Int(self.u64v()? as i64),
+            0xd9 => {
+                let len = self.u8()? as usize;
+                Mp::Str(self.str_of(len)?)
+            }
+            0xda => {
+                let len = self.u16()? as usize;
+                Mp::Str(self.str_of(len)?)
+            }
+            0xdb => {
+                let len = self.u32()? as usize;
+                Mp::Str(self.str_of(len)?)
+            }
+            0xdc => {
+                let len = self.u16()? as usize;
+                self.arr_of(len, depth)?
+            }
+            0xdd => {
+                let len = self.u32()? as usize;
+                self.arr_of(len, depth)?
+            }
+            0xde => {
+                let len = self.u16()? as usize;
+                self.map_of(len, depth)?
+            }
+            0xdf => {
+                let len = self.u32()? as usize;
+                self.map_of(len, depth)?
+            }
+            t => return Err(MpError::BadTag(t, at)),
+        })
+    }
+}
+
+/// Map of named binary payloads — the shape Git-Theta's combined
+/// serializer stores (e.g. {"indices": ..., "values": ...}).
+pub type BinMap = BTreeMap<String, Vec<u8>>;
+
+/// Encode a map of named blobs (the paper's msgpack combiner).
+pub fn encode_bin_map(map: &BinMap) -> Vec<u8> {
+    Mp::Map(
+        map.iter()
+            .map(|(k, v)| (k.clone(), Mp::Bin(v.clone())))
+            .collect(),
+    )
+    .encode()
+}
+
+/// Decode a map of named blobs.
+pub fn decode_bin_map(bytes: &[u8]) -> Result<BinMap, MpError> {
+    let v = Mp::decode(bytes)?;
+    let entries = match v {
+        Mp::Map(e) => e,
+        _ => return Err(MpError::BadKey(0)),
+    };
+    let mut out = BinMap::new();
+    for (k, v) in entries {
+        match v {
+            Mp::Bin(b) => {
+                out.insert(k, b);
+            }
+            _ => return Err(MpError::BadKey(0)),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: Mp) {
+        let enc = v.encode();
+        assert_eq!(Mp::decode(&enc).unwrap(), v);
+    }
+
+    #[test]
+    fn roundtrip_scalars() {
+        roundtrip(Mp::Nil);
+        roundtrip(Mp::Bool(true));
+        roundtrip(Mp::Bool(false));
+        for n in [0u64, 1, 127, 128, 255, 256, 65535, 65536, u32::MAX as u64, u64::MAX] {
+            roundtrip(Mp::UInt(n));
+        }
+        for n in [-1i64, -31, -32, -33, -128, -129, -32768, -32769, i32::MIN as i64, i64::MIN] {
+            roundtrip(Mp::Int(n));
+        }
+        roundtrip(Mp::F32(3.25));
+        roundtrip(Mp::F64(-1.0e-8));
+    }
+
+    #[test]
+    fn roundtrip_strings_and_bins() {
+        roundtrip(Mp::Str(String::new()));
+        roundtrip(Mp::Str("a".repeat(31)));
+        roundtrip(Mp::Str("b".repeat(32)));
+        roundtrip(Mp::Str("c".repeat(300)));
+        roundtrip(Mp::Str("d".repeat(70_000)));
+        roundtrip(Mp::Bin(vec![]));
+        roundtrip(Mp::Bin(vec![7u8; 255]));
+        roundtrip(Mp::Bin(vec![8u8; 70_000]));
+    }
+
+    #[test]
+    fn roundtrip_containers() {
+        roundtrip(Mp::Arr(vec![Mp::UInt(1), Mp::Str("x".into()), Mp::Nil]));
+        roundtrip(Mp::Arr((0..20).map(Mp::UInt).collect()));
+        roundtrip(Mp::map_from(vec![
+            ("shape", Mp::Arr(vec![Mp::UInt(2), Mp::UInt(3)])),
+            ("data", Mp::Bin(vec![1, 2, 3])),
+        ]));
+        // 16+ entry map exercises map16 encoding.
+        roundtrip(Mp::Map(
+            (0..40).map(|i| (format!("k{i}"), Mp::Int(-(i + 1)))).collect(),
+        ));
+    }
+
+    #[test]
+    fn negative_int_encodings_match_spec() {
+        assert_eq!(Mp::Int(-1).encode(), vec![0xff]);
+        assert_eq!(Mp::Int(-32).encode(), vec![0xe0]);
+        assert_eq!(Mp::Int(-33).encode(), vec![0xd0, 0xdf]);
+        assert_eq!(Mp::UInt(5).encode(), vec![0x05]);
+        assert_eq!(Mp::UInt(200).encode(), vec![0xcc, 200]);
+    }
+
+    #[test]
+    fn bin_map_roundtrip() {
+        let mut m = BinMap::new();
+        m.insert("indices".into(), vec![0, 1, 2, 3]);
+        m.insert("values".into(), vec![9; 100]);
+        let enc = encode_bin_map(&m);
+        assert_eq!(decode_bin_map(&enc).unwrap(), m);
+    }
+
+    #[test]
+    fn rejects_truncated_and_trailing() {
+        let enc = Mp::Str("hello".into()).encode();
+        assert!(Mp::decode(&enc[..3]).is_err());
+        let mut with_extra = enc.clone();
+        with_extra.push(0);
+        assert!(matches!(Mp::decode(&with_extra), Err(MpError::Trailing(_))));
+    }
+
+    #[test]
+    fn rejects_non_string_map_keys() {
+        // fixmap with 1 entry whose key is an int.
+        let bytes = vec![0x81, 0x01, 0x02];
+        assert!(matches!(Mp::decode(&bytes), Err(MpError::BadKey(_))));
+    }
+}

@@ -1,0 +1,201 @@
+//! Scoped-thread parallel map (rayon substitute).
+//!
+//! Git-Theta's clean/smudge filters process parameter groups in an
+//! embarrassingly parallel fashion (paper §4: "Git-Theta leverages the
+//! embarrassingly parallel nature of parameter processing and makes heavy
+//! use of asynchronous and multi-core code"). This module provides the
+//! primitive: an order-preserving parallel map over a work list using an
+//! atomic work-stealing cursor and scoped threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use, overridable via `THETA_THREADS`.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("THETA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Map `f` over `items` in parallel, preserving input order in the output.
+///
+/// Work is distributed dynamically (one atomic fetch per item) so uneven
+/// per-item costs — e.g. a 300 MB embedding matrix next to a 4 KB bias —
+/// balance across threads.
+pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<Option<U>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let out = Mutex::new(&mut out);
+
+    crossbeam_utils::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|_| {
+                // Each worker buffers its results and writes them back in
+                // small batches to keep lock traffic low.
+                let mut local: Vec<(usize, U)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i, &items[i])));
+                    if local.len() >= 16 {
+                        let mut guard = out.lock().unwrap();
+                        for (j, v) in local.drain(..) {
+                            guard[j] = Some(v);
+                        }
+                    }
+                }
+                if !local.is_empty() {
+                    let mut guard = out.lock().unwrap();
+                    for (j, v) in local.drain(..) {
+                        guard[j] = Some(v);
+                    }
+                }
+            });
+        }
+    })
+    .expect("worker thread panicked");
+
+    out.into_inner()
+        .unwrap()
+        .iter_mut()
+        .map(|slot| slot.take().expect("uncomputed slot"))
+        .collect()
+}
+
+/// Parallel map where `f` may fail; returns the first error by input order.
+pub fn try_par_map<T, U, E, F>(items: &[T], threads: usize, f: F) -> Result<Vec<U>, E>
+where
+    T: Sync,
+    U: Send,
+    E: Send,
+    F: Fn(usize, &T) -> Result<U, E> + Sync,
+{
+    let results = par_map(items, threads, f);
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        out.push(r?);
+    }
+    Ok(out)
+}
+
+/// Process disjoint chunks of a mutable byte buffer in parallel.
+///
+/// Used by the serializer hot path (byte-shuffle + compression) where each
+/// chunk is independent.
+pub fn par_chunks_mut<F>(data: &mut [u8], chunk: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [u8]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let threads = threads.max(1);
+    if threads == 1 || data.len() <= chunk {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let chunks: Vec<&mut [u8]> = data.chunks_mut(chunk).collect();
+    let n = chunks.len();
+    let slots: Vec<Mutex<Option<&mut [u8]>>> =
+        chunks.into_iter().map(|c| Mutex::new(Some(c))).collect();
+    let cursor = AtomicUsize::new(0);
+    crossbeam_utils::thread::scope(|scope| {
+        for _ in 0..threads.min(n) {
+            scope.spawn(|_| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let mut guard = slots[i].lock().unwrap();
+                let c = guard.take().expect("chunk already taken");
+                drop(guard);
+                // Safety of mutation: each chunk is moved out exactly once.
+                let c: &mut [u8] = c;
+                f(i, c);
+            });
+        }
+    })
+    .expect("worker thread panicked");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        let out = par_map(&[1, 2, 3], 1, |i, &x| (i, x));
+        assert_eq!(out, vec![(0, 1), (1, 2), (2, 3)]);
+        let empty: Vec<i32> = par_map(&Vec::<i32>::new(), 4, |_, &x| x);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // Items with wildly different costs still all complete.
+        let items: Vec<usize> = (0..64).collect();
+        let out = par_map(&items, 8, |_, &x| {
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i as u64);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn try_par_map_propagates_error() {
+        let items: Vec<u32> = (0..100).collect();
+        let r: Result<Vec<u32>, String> = try_par_map(&items, 4, |_, &x| {
+            if x == 37 {
+                Err("boom".to_string())
+            } else {
+                Ok(x)
+            }
+        });
+        assert_eq!(r.unwrap_err(), "boom");
+    }
+
+    #[test]
+    fn par_chunks_mut_touches_every_byte() {
+        let mut data = vec![0u8; 10_000];
+        par_chunks_mut(&mut data, 1024, 4, |_, c| {
+            for b in c.iter_mut() {
+                *b = b.wrapping_add(1);
+            }
+        });
+        assert!(data.iter().all(|&b| b == 1));
+    }
+}

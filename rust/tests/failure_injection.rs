@@ -1,0 +1,147 @@
+//! Failure injection: the system must detect — not silently propagate —
+//! corrupted or missing objects, malformed metadata, and bad inputs.
+
+use git_theta::baseline::ThetaRepo;
+use git_theta::checkpoint::Checkpoint;
+use git_theta::gitcore::repo::Repository;
+use git_theta::lfs::LfsStore;
+use git_theta::tensor::Tensor;
+use git_theta::theta::filter::{clean_checkpoint, smudge_metadata, ObjectAccess};
+use git_theta::theta::metadata::ModelMetadata;
+use git_theta::util::rng::Pcg64;
+use git_theta::util::tmp::TempDir;
+
+fn random_ck(seed: u64) -> Checkpoint {
+    let mut rng = Pcg64::new(seed);
+    let mut ck = Checkpoint::new();
+    for g in 0..3 {
+        let vals: Vec<f32> = (0..500).map(|_| rng.next_gaussian() as f32 * 0.02).collect();
+        ck.insert(format!("g{g}"), Tensor::from_f32(vec![500], vals).unwrap());
+    }
+    ck
+}
+
+#[test]
+fn smudge_fails_loudly_on_missing_lfs_object() {
+    let td = TempDir::new("fi").unwrap();
+    let acc = ObjectAccess {
+        store: LfsStore::open(td.path()),
+        remote: None,
+    };
+    let ck = random_ck(1);
+    let meta = clean_checkpoint(&acc, &ck, "safetensors", None, None, 1).unwrap();
+
+    // Delete one object from the store.
+    let oid = meta.all_oids()[0];
+    let hex = oid.to_hex();
+    std::fs::remove_file(td.path().join("lfs/objects").join(&hex[..2]).join(&hex[2..])).unwrap();
+
+    let err = smudge_metadata(&acc, &meta, 1).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("not found"), "{msg}");
+    assert!(msg.contains("reconstructing parameter group"), "{msg}");
+}
+
+#[test]
+fn smudge_fails_loudly_on_corrupt_lfs_object() {
+    let td = TempDir::new("fi").unwrap();
+    let acc = ObjectAccess {
+        store: LfsStore::open(td.path()),
+        remote: None,
+    };
+    let ck = random_ck(2);
+    let meta = clean_checkpoint(&acc, &ck, "safetensors", None, None, 1).unwrap();
+    let oid = meta.all_oids()[0];
+    let hex = oid.to_hex();
+    let path = td.path().join("lfs/objects").join(&hex[..2]).join(&hex[2..]);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[10] ^= 0xff;
+    std::fs::write(&path, bytes).unwrap();
+
+    let err = smudge_metadata(&acc, &meta, 1).unwrap_err();
+    assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+}
+
+#[test]
+fn malformed_metadata_is_rejected() {
+    assert!(ModelMetadata::from_bytes(b"{\"git-theta\": 1}").is_err()); // missing format
+    assert!(ModelMetadata::from_bytes(b"{\"git-theta\": 99, \"format\": \"safetensors\"}").is_err());
+    assert!(ModelMetadata::from_bytes(b"\x00\x01\x02").is_err());
+    // Truncated group entry.
+    let bad = br#"{"git-theta":1,"format":"safetensors","groups":{"w":{"tensor":{}}}}"#;
+    assert!(ModelMetadata::from_bytes(bad).is_err());
+}
+
+#[test]
+fn add_of_unparseable_checkpoint_fails_cleanly() {
+    git_theta::init();
+    let td = TempDir::new("fi").unwrap();
+    let repo = ThetaRepo::init(td.path(), "m.safetensors").unwrap();
+    // Write garbage where a checkpoint should be.
+    std::fs::write(td.join("m.safetensors"), b"garbage bytes").unwrap();
+    let err = repo.repo.add(&["m.safetensors"]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("safetensors") || msg.contains("format"), "{msg}");
+    // Repository state is untouched: nothing staged.
+    assert!(repo.repo.status().unwrap().of("m.safetensors").is_some());
+}
+
+#[test]
+fn checkout_of_unknown_revision_fails() {
+    git_theta::init();
+    let td = TempDir::new("fi").unwrap();
+    let repo = Repository::init(td.path()).unwrap();
+    assert!(repo.checkout("no-such-branch").is_err());
+    assert!(repo.resolve("deadbeef00").is_err());
+}
+
+#[test]
+fn tampered_odb_object_detected_by_fsck_path() {
+    git_theta::init();
+    let td = TempDir::new("fi").unwrap();
+    let repo = Repository::init(td.path()).unwrap();
+    std::fs::write(td.join("f.txt"), "content").unwrap();
+    repo.add(&["f.txt"]).unwrap();
+    repo.commit("c", "t").unwrap();
+    // Corrupt every object file; reads must fail with hash mismatch.
+    let mut corrupted = 0;
+    for oid in repo.odb().list().unwrap() {
+        let hex = oid.to_hex();
+        let path = td
+            .path()
+            .join(".theta/objects")
+            .join(&hex[..2])
+            .join(&hex[2..]);
+        let bytes = std::fs::read(&path).unwrap();
+        if bytes.len() > 12 {
+            let mut b = bytes.clone();
+            let at = b.len() - 2;
+            b[at] ^= 0x55;
+            std::fs::write(&path, b).unwrap();
+            if repo.odb().read(&oid).is_err() {
+                corrupted += 1;
+            }
+        }
+    }
+    assert!(corrupted > 0, "no corruption detected");
+}
+
+#[test]
+fn push_to_remote_with_foreign_history_rejected() {
+    git_theta::init();
+    let td_a = TempDir::new("fiA").unwrap();
+    let td_b = TempDir::new("fiB").unwrap();
+    let td_r = TempDir::new("fiR").unwrap();
+    let a = Repository::init(td_a.path()).unwrap();
+    std::fs::write(td_a.join("x"), "a").unwrap();
+    a.add(&["x"]).unwrap();
+    a.commit("a", "a").unwrap();
+    a.push(td_r.path(), "main").unwrap();
+
+    // Unrelated repo pushes to the same branch: rejected (non-FF).
+    let b = Repository::init(td_b.path()).unwrap();
+    std::fs::write(td_b.join("y"), "b").unwrap();
+    b.add(&["y"]).unwrap();
+    b.commit("b", "b").unwrap();
+    assert!(b.push(td_r.path(), "main").is_err());
+}

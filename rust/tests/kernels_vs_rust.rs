@@ -1,0 +1,139 @@
+//! Integration: AOT-compiled Pallas/JAX artifacts vs pure-Rust paths.
+//!
+//! These run only when `make artifacts` has produced `artifacts/`; each
+//! test skips (passes trivially with a note) otherwise so `cargo test`
+//! stays green in a fresh checkout.
+
+use git_theta::mlops;
+use git_theta::runtime::Runtime;
+use git_theta::tensor::Tensor;
+use git_theta::theta::lsh;
+use git_theta::train::{SyntheticTask, TaskKind, Trainer};
+use git_theta::util::rng::Pcg64;
+
+fn artifacts_ready(names: &[&str]) -> bool {
+    match Runtime::global() {
+        Ok(rt) => names.iter().all(|n| rt.available(n)),
+        Err(_) => false,
+    }
+}
+
+#[test]
+fn lsh_kernel_matches_rust_projection() {
+    if !artifacts_ready(&["lsh_project"]) {
+        eprintln!("skipped: artifacts not built");
+        return;
+    }
+    let mut rng = Pcg64::new(11);
+    for n in [100usize, 16_384, 100_000, 2_000_000] {
+        let vals: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect();
+        let kernel = mlops::lsh_project_kernel(&vals).unwrap();
+        let rust = lsh::project(&vals);
+        for j in 0..lsh::NUM_HASHES {
+            let tol = 1e-3 * rust[j].abs().max(1.0);
+            assert!(
+                (kernel[j] - rust[j]).abs() < tol,
+                "n={n} j={j}: kernel {} vs rust {}",
+                kernel[j],
+                rust[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn param_average_kernel_matches_rust() {
+    if !artifacts_ready(&["param_average"]) {
+        eprintln!("skipped: artifacts not built");
+        return;
+    }
+    let mut rng = Pcg64::new(12);
+    let n = 1_500_000; // forces multi-block + padding path
+    let a: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+    let ta = Tensor::from_f32(vec![n], a.clone()).unwrap();
+    let tb = Tensor::from_f32(vec![n], b.clone()).unwrap();
+    let avg = mlops::average_pair(&ta, &tb).unwrap();
+    let got = avg.to_f32_vec().unwrap();
+    for i in (0..n).step_by(97_713) {
+        assert!((got[i] - (a[i] + b[i]) / 2.0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn lora_kernel_matches_rust() {
+    if !artifacts_ready(&["lora_apply_512x512x16"]) {
+        eprintln!("skipped: artifacts not built");
+        return;
+    }
+    let mut rng = Pcg64::new(13);
+    let (m, n, r) = (512usize, 512usize, 16usize);
+    let w = Tensor::from_f32(vec![m, n], (0..m * n).map(|_| rng.next_f32()).collect()).unwrap();
+    let a = Tensor::from_f32(vec![m, r], (0..m * r).map(|_| rng.next_f32() * 0.1).collect()).unwrap();
+    let b = Tensor::from_f32(vec![r, n], (0..r * n).map(|_| rng.next_f32() * 0.1).collect()).unwrap();
+    let kernel = mlops::lora_apply(&w, &a, &b, 16.0).unwrap();
+    let rust = mlops::lora_apply_rust(&w, &a, &b, 16.0, m, n, r).unwrap();
+    let kv = kernel.to_f32_vec().unwrap();
+    let rv = rust.to_f32_vec().unwrap();
+    for i in (0..m * n).step_by(9973) {
+        assert!((kv[i] - rv[i]).abs() < 1e-4, "i={i}: {} vs {}", kv[i], rv[i]);
+    }
+}
+
+#[test]
+fn train_step_learns_and_lora_freezes_base() {
+    let trainer = match Trainer::try_new().unwrap() {
+        Some(t) => t,
+        None => {
+            eprintln!("skipped: artifacts not built");
+            return;
+        }
+    };
+    let mut params = trainer.init_params().unwrap();
+    let mut task = SyntheticTask::new(TaskKind::Cb, trainer.cfg.vocab, trainer.cfg.seq_len, 5);
+
+    let (acc0, _) = trainer.eval(&params, &task, 4).unwrap();
+    let losses = trainer.train(&mut params, &mut task, 120, 0.1).unwrap();
+    let (acc1, _) = trainer.eval(&params, &task, 4).unwrap();
+    let head = losses[..20].iter().sum::<f32>() / 20.0;
+    let tail = losses[losses.len() - 20..].iter().sum::<f32>() / 20.0;
+    assert!(tail < head, "loss did not decrease: {head} -> {tail}");
+    assert!(acc1 >= acc0, "accuracy regressed: {acc0} -> {acc1}");
+
+    // LoRA: base unchanged, adapters move, merged model differs.
+    let before = params.clone();
+    let mut lora = trainer.init_lora().unwrap();
+    trainer.train_lora(&params, &mut lora, &mut task, 30, 0.1).unwrap();
+    for ((_, a), (_, b)) in params.tensors.iter().zip(&before.tensors) {
+        assert_eq!(a, b, "base weights moved during LoRA training");
+    }
+    let merged = trainer
+        .merge_lora(&params, &lora, trainer.cfg.lora_rank as f32)
+        .unwrap();
+    let changed = merged
+        .tensors
+        .iter()
+        .zip(&params.tensors)
+        .any(|((_, m), (_, p))| m != p);
+    assert!(changed, "merged model identical to base");
+}
+
+#[test]
+fn eval_step_agrees_with_training_signal() {
+    let trainer = match Trainer::try_new().unwrap() {
+        Some(t) => t,
+        None => {
+            eprintln!("skipped: artifacts not built");
+            return;
+        }
+    };
+    let params = trainer.init_params().unwrap();
+    let task = SyntheticTask::new(TaskKind::Rte, trainer.cfg.vocab, trainer.cfg.seq_len, 6);
+    let (acc, loss) = trainer.eval(&params, &task, 4).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(loss.is_finite() && loss > 0.0);
+    // Deterministic across calls.
+    let (acc2, loss2) = trainer.eval(&params, &task, 4).unwrap();
+    assert_eq!(acc, acc2);
+    assert_eq!(loss, loss2);
+}

@@ -1,0 +1,285 @@
+//! Property-based tests over coordinator invariants (proptest
+//! substitute: util::prop over a seeded PCG64).
+
+use git_theta::checkpoint::{Checkpoint, CheckpointFormat, NativeFormat, SafetensorsFormat};
+use git_theta::lfs::LfsStore;
+use git_theta::tensor::{allclose, DType, Tensor};
+use git_theta::theta::filter::{clean_checkpoint, smudge_metadata, ObjectAccess};
+use git_theta::theta::lsh::LshSignature;
+use git_theta::theta::metadata::ModelMetadata;
+use git_theta::theta::updates::{infer_best, update_type};
+use git_theta::util::json::Json;
+use git_theta::util::msgpack::Mp;
+use git_theta::util::prop::{check, gens};
+use git_theta::util::rng::Pcg64;
+use git_theta::util::tmp::TempDir;
+
+fn random_checkpoint(rng: &mut Pcg64) -> Checkpoint {
+    let groups = gens::usize_in(rng, 1, 6);
+    let mut ck = Checkpoint::new();
+    for g in 0..groups {
+        let shape = gens::shape(rng, 2, 512);
+        let n: usize = shape.iter().product();
+        let vals = gens::f32_vec(rng, n, 0.5);
+        let dtype = if rng.below(4) == 0 { DType::BF16 } else { DType::F32 };
+        let t = Tensor::from_f32(shape, vals).unwrap().cast(dtype).unwrap();
+        ck.insert(format!("g{g}"), t);
+    }
+    ck
+}
+
+#[test]
+fn prop_clean_smudge_identity() {
+    check(
+        "clean∘smudge = identity",
+        random_checkpoint,
+        |ck| {
+            let td = TempDir::new("prop").map_err(|e| e.to_string())?;
+            let acc = ObjectAccess {
+                store: LfsStore::open(td.path()),
+                remote: None,
+            };
+            let meta = clean_checkpoint(&acc, ck, "safetensors", None, None, 2)
+                .map_err(|e| format!("{e:#}"))?;
+            let back = smudge_metadata(&acc, &meta, 2).map_err(|e| format!("{e:#}"))?;
+            if back == *ck {
+                Ok(())
+            } else {
+                Err("smudge(clean(ck)) != ck".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_incremental_clean_smudge_identity() {
+    check(
+        "incremental clean∘smudge = identity",
+        |rng| {
+            let ck = random_checkpoint(rng);
+            // Derive a second version with random per-group edit kinds.
+            let mut ck2 = ck.clone();
+            let names: Vec<String> = ck.names().cloned().collect();
+            for name in &names {
+                match rng.below(4) {
+                    0 => {} // unchanged
+                    1 => {
+                        // sparse edit
+                        let t = ck2.get(name).unwrap().clone();
+                        let mut v = t.to_f32_vec().unwrap();
+                        let k = gens::usize_in(rng, 1, v.len().min(5));
+                        for i in rng.choose_indices(v.len(), k) {
+                            v[i] = rng.next_f32();
+                        }
+                        ck2.insert(
+                            name.clone(),
+                            Tensor::from_f32_as(t.dtype(), t.shape().to_vec(), &v).unwrap(),
+                        );
+                    }
+                    2 => {
+                        // full replace
+                        let t = ck2.get(name).unwrap().clone();
+                        let v = gens::f32_vec(rng, t.numel(), 0.5);
+                        ck2.insert(
+                            name.clone(),
+                            Tensor::from_f32_as(t.dtype(), t.shape().to_vec(), &v).unwrap(),
+                        );
+                    }
+                    _ => {
+                        // trim first axis (when possible)
+                        let t = ck2.get(name).unwrap().clone();
+                        if t.shape()[0] > 1 {
+                            ck2.insert(name.clone(), t.take_rows(t.shape()[0] - 1).unwrap());
+                        }
+                    }
+                }
+            }
+            (ck, ck2)
+        },
+        |(ck, ck2)| {
+            let td = TempDir::new("prop2").map_err(|e| e.to_string())?;
+            let acc = ObjectAccess {
+                store: LfsStore::open(td.path()),
+                remote: None,
+            };
+            let v1 = clean_checkpoint(&acc, ck, "safetensors", None, None, 2)
+                .map_err(|e| format!("{e:#}"))?;
+            let v2 = clean_checkpoint(&acc, ck2, "safetensors", Some(&v1), None, 2)
+                .map_err(|e| format!("{e:#}"))?;
+            let b2 = smudge_metadata(&acc, &v2, 2).map_err(|e| format!("{e:#}"))?;
+            let b1 = smudge_metadata(&acc, &v1, 2).map_err(|e| format!("{e:#}"))?;
+            // Exact for v1; v2 must be allclose (low-rank inference may
+            // introduce sub-1e-6 noise by design) and usually exact.
+            if b1 != *ck {
+                return Err("v1 mismatch".into());
+            }
+            for (name, t) in ck2.iter() {
+                let r = b2.get(name).ok_or(format!("missing {name}"))?;
+                if r.shape() != t.shape() {
+                    return Err(format!("{name} shape mismatch"));
+                }
+                if !(r == t || allclose(r, t, 1e-5, 1e-6).unwrap_or(false)) {
+                    return Err(format!("{name} values mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_update_infer_apply_identity() {
+    check(
+        "infer∘apply = identity (per update type)",
+        |rng| {
+            let shape = vec![gens::usize_in(rng, 2, 24), gens::usize_in(rng, 2, 24)];
+            let n: usize = shape.iter().product();
+            let prev = Tensor::from_f32(shape.clone(), gens::f32_vec(rng, n, 0.5)).unwrap();
+            let mut v = prev.to_f32_vec().unwrap();
+            let k = gens::usize_in(rng, 1, (n / 5).max(1));
+            for i in rng.choose_indices(n, k) {
+                v[i] = rng.next_f32();
+            }
+            let new = Tensor::from_f32(shape, v).unwrap();
+            (prev, new)
+        },
+        |(prev, new)| {
+            let payload = infer_best(Some(prev), new, None).map_err(|e| format!("{e:#}"))?;
+            let u = update_type(&payload.kind).ok_or("unknown type")?;
+            let recon = u
+                .apply(&payload, Some(prev))
+                .map_err(|e| format!("{e:#}"))?;
+            if recon == *new || allclose(&recon, new, 1e-5, 1e-6).unwrap_or(false) {
+                Ok(())
+            } else {
+                Err(format!("{} reconstruction mismatch", payload.kind))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_lsh_noise_invariance() {
+    check(
+        "LSH signature invariant under <=1e-9 L2 noise",
+        |rng| {
+            let n = gens::usize_in(rng, 100, 20_000);
+            gens::f32_vec(rng, n, 0.2)
+        },
+        |v| {
+            let mut w = v.clone();
+            let per = 1e-9f32 / (w.len() as f32).sqrt();
+            for x in w.iter_mut() {
+                *x += per;
+            }
+            let a = LshSignature::of_values(v);
+            let b = LshSignature::of_values(&w);
+            if a.buckets == b.buckets {
+                Ok(())
+            } else {
+                Err("buckets differ under noise".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_checkpoint_format_roundtrip() {
+    check(
+        "checkpoint save/load = identity (both formats)",
+        random_checkpoint,
+        |ck| {
+            for fmt in [
+                &SafetensorsFormat as &dyn CheckpointFormat,
+                &NativeFormat as &dyn CheckpointFormat,
+            ] {
+                let bytes = fmt.save_bytes(ck).map_err(|e| format!("{e:#}"))?;
+                let back = fmt.load_bytes(&bytes).map_err(|e| format!("{e:#}"))?;
+                if back != *ck {
+                    return Err(format!("{} roundtrip mismatch", fmt.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_msgpack_json_fuzz_roundtrip() {
+    check(
+        "msgpack/json value roundtrips",
+        |rng| {
+            fn gen_value(rng: &mut Pcg64, depth: usize) -> Mp {
+                match if depth > 2 { rng.below(6) } else { rng.below(8) } {
+                    0 => Mp::Nil,
+                    1 => Mp::Bool(rng.below(2) == 0),
+                    2 => Mp::Int(-(rng.below(1 << 40) as i64) - 1),
+                    3 => Mp::UInt(rng.next_u64()),
+                    4 => Mp::F64(rng.next_f64()),
+                    5 => Mp::Str(gens::ascii_string(rng, 40)),
+                    6 => Mp::Arr((0..rng.below(5)).map(|_| gen_value(rng, depth + 1)).collect()),
+                    _ => Mp::Map(
+                        (0..rng.below(5))
+                            .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                            .collect(),
+                    ),
+                }
+            }
+            gen_value(rng, 0)
+        },
+        |v| {
+            let enc = v.encode();
+            let dec = Mp::decode(&enc).map_err(|e| e.to_string())?;
+            if dec != *v {
+                return Err("msgpack mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_metadata_roundtrip() {
+    check(
+        "metadata to_bytes/from_bytes = identity",
+        |rng| {
+            let ck = random_checkpoint(rng);
+            let td = TempDir::new("meta").unwrap();
+            let acc = ObjectAccess {
+                store: LfsStore::open(td.path()),
+                remote: None,
+            };
+            clean_checkpoint(&acc, &ck, "safetensors", None, None, 1).unwrap()
+        },
+        |meta| {
+            let bytes = meta.to_bytes();
+            let back = ModelMetadata::from_bytes(&bytes).map_err(|e| format!("{e:#}"))?;
+            if back == *meta {
+                Ok(())
+            } else {
+                Err("metadata roundtrip mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_json_number_precision() {
+    check(
+        "json roundtrips f64 projections",
+        |rng| (0..16).map(|_| rng.next_gaussian() * 1e-5).collect::<Vec<f64>>(),
+        |vals| {
+            let json = Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect());
+            let text = json.to_string_compact();
+            let back = Json::parse(&text).map_err(|e| e.to_string())?;
+            let arr = back.as_arr().ok_or("not arr")?;
+            for (a, b) in vals.iter().zip(arr) {
+                let b = b.as_f64().ok_or("not num")?;
+                if *a != b {
+                    return Err(format!("{a} != {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,227 @@
+//! Integration: full Git-Theta lifecycles through the Repository API —
+//! track → add → commit → branch → merge → checkout → push/pull/clone.
+
+use git_theta::baseline::ThetaRepo;
+use git_theta::checkpoint::{Checkpoint, CheckpointFormat, SafetensorsFormat};
+use git_theta::gitcore::drivers::MergeOptions;
+use git_theta::gitcore::repo::Repository;
+use git_theta::lfs::LfsStore;
+use git_theta::tensor::Tensor;
+use git_theta::theta::metadata::ModelMetadata;
+use git_theta::util::rng::Pcg64;
+use git_theta::util::tmp::TempDir;
+
+fn random_ck(seed: u64, groups: usize, elems: usize) -> Checkpoint {
+    let mut rng = Pcg64::new(seed);
+    let mut ck = Checkpoint::new();
+    for g in 0..groups {
+        let vals: Vec<f32> = (0..elems).map(|_| rng.next_gaussian() as f32 * 0.02).collect();
+        ck.insert(format!("g{g}/w"), Tensor::from_f32(vec![elems], vals).unwrap());
+    }
+    ck
+}
+
+#[test]
+fn tracked_checkpoint_roundtrips_through_history() {
+    let td = TempDir::new("life").unwrap();
+    let repo = ThetaRepo::init(td.path(), "m.safetensors").unwrap();
+    let ck1 = random_ck(1, 5, 1000);
+    repo.write_model(&ck1).unwrap();
+    repo.add().unwrap();
+    let c1 = repo.commit("v1").unwrap();
+
+    // Sparse change to one group.
+    let mut ck2 = ck1.clone();
+    let mut v = ck2.get("g0/w").unwrap().to_f32_vec().unwrap();
+    v[7] = 3.5;
+    ck2.insert("g0/w", Tensor::from_f32(vec![1000], v).unwrap());
+    repo.write_model(&ck2).unwrap();
+    repo.add().unwrap();
+    let c2 = repo.commit("v2").unwrap();
+
+    // The staged blob is a metadata file, not the checkpoint.
+    let staged = repo.repo.read_path_at(c2, "m.safetensors").unwrap().unwrap();
+    assert!(ModelMetadata::is_metadata(&staged));
+    let meta = ModelMetadata::from_bytes(&staged).unwrap();
+    assert_eq!(meta.groups["g0/w"].update.kind, "sparse");
+
+    // Round-trip both versions bit-exactly.
+    repo.checkout(&c1.to_hex()).unwrap();
+    assert_eq!(repo.read_model().unwrap(), ck1);
+    repo.checkout(&c2.to_hex()).unwrap();
+    assert_eq!(repo.read_model().unwrap(), ck2);
+}
+
+#[test]
+fn theta_merge_average_through_repository() {
+    let td = TempDir::new("merge").unwrap();
+    let repo = ThetaRepo::init(td.path(), "m.safetensors").unwrap();
+    let base = random_ck(2, 3, 500);
+    repo.write_model(&base).unwrap();
+    repo.add().unwrap();
+    repo.commit("base").unwrap();
+
+    repo.repo.create_branch("side").unwrap();
+    repo.checkout("side").unwrap();
+    let mut side = base.clone();
+    let v: Vec<f32> = side.get("g1/w").unwrap().to_f32_vec().unwrap().iter().map(|x| x + 2.0).collect();
+    side.insert("g1/w", Tensor::from_f32(vec![500], v).unwrap());
+    repo.write_model(&side).unwrap();
+    repo.add().unwrap();
+    repo.commit("side +2").unwrap();
+
+    repo.checkout("main").unwrap();
+    let mut main = base.clone();
+    let v: Vec<f32> = main.get("g1/w").unwrap().to_f32_vec().unwrap().iter().map(|x| x + 4.0).collect();
+    main.insert("g1/w", Tensor::from_f32(vec![500], v).unwrap());
+    repo.write_model(&main).unwrap();
+    repo.add().unwrap();
+    repo.commit("main +4").unwrap();
+
+    repo.merge_with_strategy("side", "average").unwrap();
+    let merged = repo.read_model().unwrap();
+    let base_v = base.get("g1/w").unwrap().to_f32_vec().unwrap();
+    let merged_v = merged.get("g1/w").unwrap().to_f32_vec().unwrap();
+    for (b, m) in base_v.iter().zip(&merged_v) {
+        assert!((m - (b + 3.0)).abs() < 1e-5); // avg(+2, +4) = +3
+    }
+    // Untouched groups identical to base.
+    assert_eq!(merged.get("g0/w"), base.get("g0/w"));
+}
+
+#[test]
+fn clone_fetches_lazily_and_push_dedups() {
+    let td_a = TempDir::new("origin").unwrap();
+    let td_r = TempDir::new("remote").unwrap();
+    let td_b = TempDir::new("clone").unwrap();
+
+    let a = ThetaRepo::init(td_a.path(), "m.safetensors").unwrap();
+    let ck = random_ck(3, 8, 4000);
+    a.write_model(&ck).unwrap();
+    a.repo.add(&["m.safetensors", ".thetaattributes"]).unwrap();
+    a.commit("v1").unwrap();
+    a.repo.push(td_r.path(), "main").unwrap();
+
+    // Remote LFS store has the objects.
+    let remote_store = LfsStore::at(&td_r.path().join("lfs/objects"));
+    let n_objects = remote_store.list().unwrap().len();
+    assert!(n_objects >= 8);
+
+    // Clone: pull metadata; smudge lazily downloads parameters.
+    let b = Repository::init(td_b.path()).unwrap();
+    b.config_set("remote", td_r.path().to_str().unwrap()).unwrap();
+    b.pull(td_r.path(), "main").unwrap();
+    let cloned = SafetensorsFormat.load_file(&td_b.join("m.safetensors")).unwrap();
+    assert_eq!(cloned, ck);
+
+    // Sparse change from the clone side pushes only the delta.
+    let mut ck2 = cloned;
+    let mut v = ck2.get("g0/w").unwrap().to_f32_vec().unwrap();
+    v[0] = 9.0;
+    ck2.insert("g0/w", Tensor::from_f32(vec![4000], v).unwrap());
+    SafetensorsFormat.save_file(&ck2, &td_b.join("m.safetensors")).unwrap();
+    b.add(&["m.safetensors"]).unwrap();
+    b.commit("tweak", "bob").unwrap();
+    let before = remote_store.disk_usage().unwrap();
+    b.push(td_r.path(), "main").unwrap();
+    let growth = remote_store.disk_usage().unwrap() - before;
+    assert!(growth < 2000, "push transferred {growth} bytes for a 1-element change");
+
+    // Origin pulls and sees the change.
+    a.repo.pull(td_r.path(), "main").unwrap();
+    assert_eq!(a.read_model().unwrap(), ck2);
+}
+
+#[test]
+fn diff_driver_reports_group_changes() {
+    let td = TempDir::new("diff").unwrap();
+    let repo = ThetaRepo::init(td.path(), "m.safetensors").unwrap();
+    let ck = random_ck(4, 3, 200);
+    repo.write_model(&ck).unwrap();
+    repo.add().unwrap();
+    let c1 = repo.commit("v1").unwrap();
+
+    let mut ck2 = ck.clone();
+    ck2.remove("g2/w");
+    let mut v = ck2.get("g0/w").unwrap().to_f32_vec().unwrap();
+    v[0] += 1.0;
+    ck2.insert("g0/w", Tensor::from_f32(vec![200], v).unwrap());
+    ck2.insert("new/emb", Tensor::from_f32(vec![4], vec![0.0; 4]).unwrap());
+    repo.write_model(&ck2).unwrap();
+    repo.add().unwrap();
+    let c2 = repo.commit("v2").unwrap();
+
+    let diff = repo.repo.diff(Some(c1), Some(c2)).unwrap();
+    assert!(diff.contains("~ modified g0/w"), "{diff}");
+    assert!(diff.contains("- removed  g2/w"), "{diff}");
+    assert!(diff.contains("+ added    new/emb"), "{diff}");
+    assert!(diff.contains("unchanged"), "{diff}");
+}
+
+#[test]
+fn mixed_repo_code_and_model_coexist() {
+    // Code files and the model live in one repository (the paper's
+    // motivation: track code and parameters together).
+    let td = TempDir::new("mixed").unwrap();
+    let repo = ThetaRepo::init(td.path(), "model.safetensors").unwrap();
+    std::fs::write(td.join("train.py"), "print('step')\n").unwrap();
+    repo.write_model(&random_ck(5, 2, 100)).unwrap();
+    repo.repo
+        .add(&["train.py", "model.safetensors", ".thetaattributes"])
+        .unwrap();
+    let c1 = repo.commit("code + model").unwrap();
+    std::fs::write(td.join("train.py"), "print('v2')\n").unwrap();
+    repo.repo.add(&["train.py"]).unwrap();
+    let c2 = repo.commit("code only").unwrap();
+
+    // The model blob oid is shared between both commits (no re-store).
+    let t1 = repo.repo.read_path_at(c1, "model.safetensors").unwrap().unwrap();
+    let t2 = repo.repo.read_path_at(c2, "model.safetensors").unwrap().unwrap();
+    assert_eq!(t1, t2);
+    repo.checkout(&c1.to_hex()).unwrap();
+    assert_eq!(std::fs::read_to_string(td.join("train.py")).unwrap(), "print('step')\n");
+}
+
+#[test]
+fn per_group_merge_strategies_through_repo() {
+    let td = TempDir::new("pgm").unwrap();
+    let repo = ThetaRepo::init(td.path(), "m.safetensors").unwrap();
+    let base = random_ck(6, 2, 100);
+    repo.write_model(&base).unwrap();
+    repo.add().unwrap();
+    repo.commit("base").unwrap();
+
+    repo.repo.create_branch("side").unwrap();
+    repo.checkout("side").unwrap();
+    let mut side = base.clone();
+    for g in ["g0/w", "g1/w"] {
+        let v: Vec<f32> = side.get(g).unwrap().to_f32_vec().unwrap().iter().map(|x| x + 2.0).collect();
+        side.insert(g, Tensor::from_f32(vec![100], v).unwrap());
+    }
+    repo.write_model(&side).unwrap();
+    repo.add().unwrap();
+    repo.commit("side").unwrap();
+
+    repo.checkout("main").unwrap();
+    let mut main = base.clone();
+    for g in ["g0/w", "g1/w"] {
+        let v: Vec<f32> = main.get(g).unwrap().to_f32_vec().unwrap().iter().map(|x| x + 4.0).collect();
+        main.insert(g, Tensor::from_f32(vec![100], v).unwrap());
+    }
+    repo.write_model(&main).unwrap();
+    repo.add().unwrap();
+    repo.commit("main").unwrap();
+
+    let opts = MergeOptions {
+        strategy: Some("average".into()),
+        per_group: vec![("g1/w".into(), "us".into())],
+    };
+    repo.repo.merge("side", &opts, "t").unwrap();
+    let merged = repo.read_model().unwrap();
+    let b0 = base.get("g0/w").unwrap().to_f32_vec().unwrap();
+    let m0 = merged.get("g0/w").unwrap().to_f32_vec().unwrap();
+    let m1 = merged.get("g1/w").unwrap().to_f32_vec().unwrap();
+    let b1 = base.get("g1/w").unwrap().to_f32_vec().unwrap();
+    assert!((m0[0] - (b0[0] + 3.0)).abs() < 1e-5); // averaged
+    assert!((m1[0] - (b1[0] + 4.0)).abs() < 1e-5); // ours (main)
+}
