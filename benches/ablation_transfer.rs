@@ -1,0 +1,33 @@
+//! Ablation A4: per-object vs packed LFS transfer.
+//!
+//! Moves a synthetic 100-group model (bf16-valued f32 payloads) through
+//! both transfer engines in both directions and reports round trips,
+//! wire bytes, and wall-clock — the cost model behind the batched pack
+//! engine in `lfs/batch.rs` / `lfs/pack.rs`. Scale with
+//! `THETA_BENCH_GROUPS` / `THETA_BENCH_ELEMS`.
+
+use git_theta::benchkit::transfer::{render_runs, run_compare};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let groups = env_usize("THETA_BENCH_GROUPS", 100);
+    let elems = env_usize("THETA_BENCH_ELEMS", 4096);
+    let runs = run_compare(groups, elems)?;
+    print!("{}", render_runs(groups, elems, &runs));
+
+    let per = &runs[0];
+    let packed = &runs[1];
+    println!(
+        "\npacked vs per-object: {}x fewer round trips, {:.2}x wire bytes, {:.2}x upload time",
+        per.up.round_trips().max(1) / packed.up.round_trips().max(1),
+        packed.up.packed_bytes as f64 / per.up.packed_bytes.max(1) as f64,
+        packed.upload_secs / per.upload_secs.max(1e-9),
+    );
+    Ok(())
+}

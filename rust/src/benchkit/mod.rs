@@ -6,6 +6,7 @@
 //! thin `harness = false` wrappers that print each paper table/figure.
 
 pub mod figure3;
+pub mod transfer;
 pub mod workflow;
 
 use anyhow::Result;
@@ -103,9 +104,10 @@ pub fn cli_bench(args: &[String]) -> Result<()> {
         "table1" => workflow::run_table1_cli(&args[1..]),
         "figure2" => workflow::run_figure2_cli(&args[1..]),
         "figure3" => figure3::run_figure3_cli(&args[1..]),
+        "transfer" => transfer::run_transfer_cli(&args[1..]),
         _ => {
             println!(
-                "benchmarks: table1, figure2, figure3 (full set lives in `cargo bench`)\n\
+                "benchmarks: table1, figure2, figure3, transfer (full set lives in `cargo bench`)\n\
                  env: THETA_BENCH_PARAMS=<millions> scales the model"
             );
             Ok(())

@@ -1,0 +1,178 @@
+//! Transfer-engine ablation: per-object vs packed LFS movement.
+//!
+//! Builds a synthetic model store — N parameter-group objects of
+//! bf16-valued f32 data (the Table 1 compressibility profile) — and
+//! moves it through both transfer engines in both directions,
+//! reporting round trips (negotiations), wire bytes, and wall-clock.
+//! Over a real network the round-trip column is the one that matters:
+//! per-object transfer pays one copy request per group, the pack
+//! engine pays one negotiation plus one pack per model.
+
+use super::time_once;
+use crate::gitcore::object::Oid;
+use crate::lfs::{batch, LfsRemote, LfsStore};
+use crate::util::humansize;
+use crate::util::rng::Pcg64;
+use crate::util::tmp::TempDir;
+use anyhow::Result;
+
+/// Measurements for one engine: upload + download legs.
+#[derive(Debug, Clone)]
+pub struct TransferRun {
+    /// Engine name ("per-object" or "packed").
+    pub mode: &'static str,
+    /// Wall-clock seconds for the upload leg.
+    pub upload_secs: f64,
+    /// Thread-local transfer counters captured after the upload leg.
+    pub up: batch::TransferStats,
+    /// Wall-clock seconds for the download leg (fresh clone).
+    pub download_secs: f64,
+    /// Counters captured after the download leg.
+    pub down: batch::TransferStats,
+}
+
+/// Synthesize `groups` parameter-group payloads of `elems` f32s each,
+/// holding bf16-precision values (low mantissa bytes zero — the
+/// compressibility profile of real distributed checkpoints).
+pub fn synth_group_payloads(groups: usize, elems: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Pcg64::new(seed);
+    (0..groups)
+        .map(|_| {
+            let mut buf = Vec::with_capacity(elems * 4);
+            for _ in 0..elems {
+                let v = (rng.next_f32() - 0.5) * 2.0;
+                let bf16ish = crate::tensor::bf16_to_f32(crate::tensor::f32_to_bf16(v));
+                buf.extend_from_slice(&bf16ish.to_le_bytes());
+            }
+            buf
+        })
+        .collect()
+}
+
+/// Run both engines over the same `groups`×`elems` synthetic model.
+pub fn run_compare(groups: usize, elems: usize) -> Result<Vec<TransferRun>> {
+    let td_local = TempDir::new("xfer-local")?;
+    let local = LfsStore::open(td_local.path());
+    let oids: Vec<Oid> = synth_group_payloads(groups, elems, 42)
+        .iter()
+        .map(|p| Ok(local.put(p)?.0))
+        .collect::<Result<_>>()?;
+
+    let mut runs = Vec::new();
+    for mode in ["per-object", "packed"] {
+        let td_remote = TempDir::new("xfer-remote")?;
+        let remote = LfsRemote::open(td_remote.path());
+
+        // Call the engines directly (not the env-sensitive
+        // upload/download fronts) so each row measures what it claims.
+        batch::reset_stats();
+        let (upload_secs, _) = time_once(|| match mode {
+            "per-object" => remote.upload_per_object(&local, &oids).map(|_| ()),
+            _ => batch::push_pack(&local, &remote, &oids).map(|_| ()),
+        })?;
+        let up = batch::stats();
+
+        let td_clone = TempDir::new("xfer-clone")?;
+        let clone_store = LfsStore::open(td_clone.path());
+        batch::reset_stats();
+        let (download_secs, _) = time_once(|| match mode {
+            "per-object" => remote.download_per_object(&clone_store, &oids).map(|_| ()),
+            _ => batch::fetch_pack(&remote, &clone_store, &oids).map(|_| ()),
+        })?;
+        let down = batch::stats();
+
+        runs.push(TransferRun {
+            mode,
+            upload_secs,
+            up,
+            download_secs,
+            down,
+        });
+    }
+    Ok(runs)
+}
+
+/// Render the comparison as a paper-style table.
+pub fn render_runs(groups: usize, elems: usize, runs: &[TransferRun]) -> String {
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .flat_map(|r| {
+            vec![
+                vec![
+                    r.mode.to_string(),
+                    "upload".into(),
+                    r.up.round_trips().to_string(),
+                    r.up.packs.to_string(),
+                    humansize::bytes(r.up.packed_bytes),
+                    humansize::bytes(r.up.raw_bytes),
+                    humansize::duration(r.upload_secs),
+                ],
+                vec![
+                    r.mode.to_string(),
+                    "download".into(),
+                    r.down.round_trips().to_string(),
+                    r.down.packs.to_string(),
+                    humansize::bytes(r.down.packed_bytes),
+                    humansize::bytes(r.down.raw_bytes),
+                    humansize::duration(r.download_secs),
+                ],
+            ]
+        })
+        .collect();
+    format!(
+        "Transfer ablation: {groups} groups x {elems} f32 elems\n{}",
+        super::render_table(
+            &["Engine", "Leg", "Round trips", "Packs", "Wire", "Raw", "Time"],
+            &rows,
+        )
+    )
+}
+
+/// `git-theta bench transfer [groups] [elems]` entry point.
+pub fn run_transfer_cli(args: &[String]) -> Result<()> {
+    let groups = args
+        .first()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100usize);
+    let elems = args
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4096usize);
+    let runs = run_compare(groups, elems)?;
+    print!("{}", render_runs(groups, elems, &runs));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_beats_per_object_on_100_group_model() {
+        let runs = run_compare(100, 1024).unwrap();
+        let per = &runs[0];
+        let packed = &runs[1];
+        assert_eq!(per.mode, "per-object");
+        assert_eq!(packed.mode, "packed");
+
+        // Packed: 1 negotiation + 1 pack per leg. Per-object (the
+        // seed's engine): one copy request per group, plus the upload
+        // leg's single negotiation.
+        assert_eq!(packed.up.round_trips(), 2);
+        assert_eq!(per.up.round_trips(), 101);
+        assert_eq!(packed.down.round_trips(), 2);
+        assert_eq!(per.down.round_trips(), 100);
+        assert_eq!(packed.up.packs, 1);
+        assert_eq!(packed.down.packs, 1);
+
+        // Same objects moved; fewer bytes on the wire (zstd framing).
+        assert_eq!(packed.up.objects, per.up.objects);
+        assert!(
+            packed.up.packed_bytes < per.up.packed_bytes,
+            "packed wire {} >= per-object wire {}",
+            packed.up.packed_bytes,
+            per.up.packed_bytes
+        );
+        assert!(packed.down.packed_bytes < per.down.packed_bytes);
+    }
+}

@@ -50,6 +50,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "branch" => cmd_branch(rest),
         "merge" => cmd_merge(rest),
         "push" => cmd_push(rest),
+        "fetch" => cmd_fetch(rest),
         "pull" => cmd_pull(rest),
         "clone" => cmd_clone(rest),
         "config" => cmd_config(rest),
@@ -82,7 +83,9 @@ COMMANDS:
   branch [<name>]                list or create branches
   merge <branch> [--strategy s] [--group glob=s]
                                  merge a branch (s: average|us|them|ancestor)
-  push <remote-dir> [branch]     push commits + LFS objects
+  push <remote-dir> [branch] [--pack|--per-object]
+                                 push commits + LFS objects (packed by default)
+  fetch <remote-dir> [branch]    fetch commits + prefetch model objects as one pack
   pull <remote-dir> [branch]     pull commits + metadata
   clone <remote-dir> <dir>       clone a remote
   config <key> [<value>]         get/set repo config (e.g. remote)
@@ -270,16 +273,90 @@ fn cmd_merge(args: &[String]) -> Result<()> {
 
 fn cmd_push(args: &[String]) -> Result<()> {
     let repo = open_repo()?;
-    let remote = args
-        .first()
-        .context("usage: git-theta push <remote-dir> [branch]")?;
-    let branch = args.get(1).map(|s| s.as_str()).unwrap_or("main");
-    let report = repo.push(Path::new(remote), branch)?;
+    let mut remote = None;
+    let mut branch = None;
+    let mut per_object = None;
+    for arg in args {
+        match arg.as_str() {
+            // Transfer-engine selection for the LFS sync hooks.
+            "--pack" => per_object = Some(false),
+            "--per-object" => per_object = Some(true),
+            other if other.starts_with("--") => bail!("unknown push flag '{other}'"),
+            other if remote.is_none() => remote = Some(other),
+            other if branch.is_none() => branch = Some(other),
+            other => bail!("unexpected push argument '{other}'"),
+        }
+    }
+    let remote = remote.context("usage: git-theta push <remote-dir> [branch] [--pack|--per-object]")?;
+    let branch = branch.unwrap_or("main");
+    // The engine override is process-global; set it only once argument
+    // parsing has succeeded, and scope it to exactly this push.
+    crate::lfs::batch::set_per_object_mode(per_object);
+    let result = repo.push(Path::new(remote), branch);
+    crate::lfs::batch::set_per_object_mode(None);
+    let report = result?;
     println!(
         "pushed {} commit(s), {} object(s), {}",
         report.commits.len(),
         report.objects_sent,
         humansize::bytes(report.bytes_sent)
+    );
+    Ok(())
+}
+
+fn cmd_fetch(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let mut remote = None;
+    let mut branch = None;
+    for arg in args {
+        match arg.as_str() {
+            other if other.starts_with("--") => bail!("unknown fetch flag '{other}'"),
+            other if remote.is_none() => remote = Some(other),
+            other if branch.is_none() => branch = Some(other),
+            other => bail!("unexpected fetch argument '{other}'"),
+        }
+    }
+    let remote_dir = remote.context("usage: git-theta fetch <remote-dir> [branch]")?;
+    let branch = branch.unwrap_or("main");
+
+    // Fetching into the checked-out branch would move its ref under a
+    // stale index/working tree (a later commit would silently revert
+    // the fetched changes), so in that case do what pull does and
+    // materialize too. Elsewhere a plain ref + object fetch is safe.
+    let on_current_branch =
+        repo.refs().head()? == crate::gitcore::refs::Head::Branch(branch.to_string());
+    let tip = if on_current_branch {
+        repo.pull(Path::new(remote_dir), branch)?
+    } else {
+        repo.fetch(Path::new(remote_dir), branch)?
+    };
+    // Remember the remote (as pull does) so later lazy smudges of
+    // revisions outside this tip's chains can still download.
+    if repo.config_get("remote")?.is_none() {
+        repo.config_set("remote", remote_dir)?;
+    }
+
+    // Prefetch every LFS object the fetched tip references — model
+    // metadata chains and plain LFS pointers alike — in one pack, so a
+    // later checkout smudges entirely from the local store.
+    let tree = repo.odb().read_tree(&repo.odb().read_commit(&tip)?.tree)?;
+    let oids = crate::theta::hooks::referenced_lfs_oids(&repo, &tree)?;
+    let store = crate::lfs::LfsStore::open(repo.theta_dir());
+    let remote = crate::lfs::LfsRemote::open(Path::new(remote_dir));
+    let summary = crate::lfs::fetch_pack(&remote, &store, &oids)?;
+    if summary.unavailable > 0 {
+        eprintln!(
+            "warning: remote is missing {} referenced object(s); \
+             checkout of revisions needing them will fail",
+            summary.unavailable
+        );
+    }
+    println!(
+        "'{branch}' is at {}; prefetched {} object(s), {} packed ({} raw)",
+        tip.short(),
+        summary.objects,
+        humansize::bytes(summary.packed_bytes),
+        humansize::bytes(summary.raw_bytes)
     );
     Ok(())
 }
@@ -391,6 +468,31 @@ mod tests {
             assert_eq!(std::fs::read_to_string("notes.txt")?, "side");
             Ok(())
         });
+    }
+
+    #[test]
+    fn fetch_prefetches_lfs_objects() {
+        let td_origin = TempDir::new("cli-origin").unwrap();
+        let td_remote = TempDir::new("cli-remote").unwrap();
+        let td_clone = TempDir::new("cli-clone").unwrap();
+        let remote = td_remote.path().to_str().unwrap().to_string();
+        in_dir(td_origin.path(), || {
+            dispatch(&sv(&["init"]))?;
+            dispatch(&sv(&["lfs-track", "*.bin"]))?;
+            std::fs::write("w.bin", vec![5u8; 4096])?;
+            dispatch(&sv(&["add", "w.bin", ".thetaattributes"]))?;
+            dispatch(&sv(&["commit", "-m", "v1"]))?;
+            dispatch(&sv(&["push", remote.as_str(), "main", "--pack"]))?;
+            Ok(())
+        });
+        in_dir(td_clone.path(), || {
+            dispatch(&sv(&["init"]))?;
+            dispatch(&sv(&["fetch", remote.as_str(), "main"]))?;
+            Ok(())
+        });
+        // The object is local before any checkout touches it.
+        let store = crate::lfs::LfsStore::open(&td_clone.path().join(".theta"));
+        assert_eq!(store.list().unwrap().len(), 1);
     }
 
     #[test]

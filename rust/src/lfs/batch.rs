@@ -1,0 +1,394 @@
+//! Have/want negotiation and the packed transfer engine.
+//!
+//! The paper's communication-efficiency story (§3.2, §4) is about *what*
+//! moves: only changed parameter-group objects. This module is about
+//! *how* they move: instead of one negotiation and one copy per object,
+//! a client announces its full want/have set in one [`LfsRemote::batch`]
+//! call, the sender assembles every missing object into a single
+//! [`pack`](super::pack), and the receiver fans the pack back into its
+//! store — one round trip and one transfer for N objects.
+//!
+//! [`Prefetcher`] is the orchestrator: it drops already-present oids,
+//! negotiates once, then pipelines pack assembly → transfer → store
+//! fan-in on [`par`] workers. Very large want-sets are sharded into
+//! several packs processed concurrently (bounded memory, overlapping
+//! compression with fan-in).
+//!
+//! Every operation updates **thread-local** [`TransferStats`] counters,
+//! so tests and benchmarks can assert on round trips and wire bytes
+//! without interference from concurrently running tests.
+
+use super::pack;
+use super::remote::LfsRemote;
+use super::store::LfsStore;
+use crate::gitcore::object::Oid;
+use crate::util::par;
+use anyhow::Result;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Result of one have/want negotiation against a remote.
+#[derive(Debug, Clone, Default)]
+pub struct BatchResponse {
+    /// Wanted oids the remote holds.
+    pub present: Vec<Oid>,
+    /// Wanted oids the remote does not hold.
+    pub missing: Vec<Oid>,
+}
+
+/// What one packed transfer actually moved.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransferSummary {
+    /// Objects that crossed the wire.
+    pub objects: usize,
+    /// Uncompressed payload bytes of those objects.
+    pub raw_bytes: u64,
+    /// Pack bytes that crossed the wire.
+    pub packed_bytes: u64,
+    /// Wanted objects the sender could not provide.
+    pub unavailable: usize,
+}
+
+/// Point-in-time snapshot of the calling thread's transfer counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    /// Have/want negotiations performed.
+    pub negotiations: u64,
+    /// Packs assembled and applied.
+    pub packs: u64,
+    /// Objects moved in either direction.
+    pub objects: u64,
+    /// Objects moved by individual request (legacy per-object engine).
+    pub object_transfers: u64,
+    /// Uncompressed bytes moved.
+    pub raw_bytes: u64,
+    /// Wire bytes moved (pack size; per-object transfers count raw size).
+    pub packed_bytes: u64,
+}
+
+impl TransferStats {
+    /// Total round trips: each negotiation, each pack, and each
+    /// individually requested object is one wire exchange.
+    pub fn round_trips(&self) -> u64 {
+        self.negotiations + self.packs + self.object_transfers
+    }
+}
+
+thread_local! {
+    static STATS: Cell<TransferStats> = Cell::new(TransferStats::default());
+}
+
+/// Snapshot the calling thread's transfer counters.
+pub fn stats() -> TransferStats {
+    STATS.with(|s| s.get())
+}
+
+/// Zero the calling thread's transfer counters (tests and benchmarks).
+pub fn reset_stats() {
+    STATS.with(|s| s.set(TransferStats::default()))
+}
+
+/// Apply an update to the calling thread's counters.
+pub(crate) fn record(f: impl FnOnce(&mut TransferStats)) {
+    STATS.with(|s| {
+        let mut v = s.get();
+        f(&mut v);
+        s.set(v);
+    })
+}
+
+/// Process-wide engine override set by CLI flags: 0 = defer to the
+/// environment, 1 = packed, 2 = per-object. An atomic (not an env
+/// write) because concurrent `setenv`/`getenv` is undefined behavior.
+static MODE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force the transfer engine for this process: `Some(true)` = legacy
+/// per-object, `Some(false)` = packed, `None` = defer to the
+/// `THETA_TRANSFER` environment variable.
+pub fn set_per_object_mode(mode: Option<bool>) {
+    let v = match mode {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    MODE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Whether the legacy per-object engine is selected — by
+/// [`set_per_object_mode`], else `THETA_TRANSFER=object` (the default
+/// is packed transfer).
+pub fn per_object_mode() -> bool {
+    match MODE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => matches!(
+            std::env::var("THETA_TRANSFER").as_deref(),
+            Ok("object") | Ok("per-object")
+        ),
+    }
+}
+
+/// Concurrent prefetcher: one negotiation, then pack assembly →
+/// transfer → store fan-in, parallelized on [`par`] workers.
+#[derive(Debug, Clone)]
+pub struct Prefetcher {
+    /// Maximum objects per pack. Want-sets larger than this are sharded
+    /// into several packs processed concurrently.
+    pub max_pack_objects: usize,
+    /// Maximum cumulative *raw* payload bytes per pack. Bounds peak
+    /// memory: a pack (and its raw + compressed blobs) is materialized
+    /// in RAM, so large models shard into several packs regardless of
+    /// object count.
+    pub max_pack_bytes: u64,
+    /// Worker threads for compression and store fan-in.
+    pub threads: usize,
+}
+
+impl Default for Prefetcher {
+    fn default() -> Prefetcher {
+        Prefetcher {
+            max_pack_objects: 4096,
+            max_pack_bytes: 256 << 20,
+            threads: par::default_threads(),
+        }
+    }
+}
+
+impl Prefetcher {
+    /// Download `want` from `remote` into `local`.
+    ///
+    /// Drops oids already in `local`, negotiates the remainder in one
+    /// [`LfsRemote::batch`] call, and moves everything the remote holds
+    /// as a pack. Oids the remote lacks are reported as `unavailable`
+    /// rather than failing the whole transfer — the caller decides
+    /// whether an absent object is fatal.
+    pub fn fetch(&self, remote: &LfsRemote, local: &LfsStore, want: &[Oid]) -> Result<TransferSummary> {
+        let mut need: Vec<Oid> = want.iter().filter(|o| !local.contains(o)).copied().collect();
+        need.sort();
+        need.dedup();
+        if need.is_empty() {
+            return Ok(TransferSummary::default());
+        }
+        let resp = remote.batch(&need);
+        self.move_packs(remote.store(), local, &resp.present, resp.missing.len())
+    }
+
+    /// Upload `oids` from `local` to `remote`.
+    ///
+    /// Negotiates once; only objects the remote is missing *and* the
+    /// local store holds are packed and sent.
+    pub fn push(&self, local: &LfsStore, remote: &LfsRemote, oids: &[Oid]) -> Result<TransferSummary> {
+        let mut want = oids.to_vec();
+        want.sort();
+        want.dedup();
+        if want.is_empty() {
+            return Ok(TransferSummary::default());
+        }
+        let resp = remote.batch(&want);
+        let send: Vec<Oid> = resp
+            .missing
+            .iter()
+            .filter(|o| local.contains(o))
+            .copied()
+            .collect();
+        let unavailable = resp.missing.len() - send.len();
+        self.move_packs(local, remote.store(), &send, unavailable)
+    }
+
+    /// Shared pack pipeline: shard `oids`, then per shard assemble a
+    /// pack from `src` and fan it into `dst`. With one shard the
+    /// parallelism lives inside build/unpack; with many shards the
+    /// shards themselves overlap assembly with fan-in.
+    fn move_packs(
+        &self,
+        src: &LfsStore,
+        dst: &LfsStore,
+        oids: &[Oid],
+        unavailable: usize,
+    ) -> Result<TransferSummary> {
+        let mut total = TransferSummary {
+            unavailable,
+            ..Default::default()
+        };
+        if oids.is_empty() {
+            return Ok(total);
+        }
+        let shards = self.shard(src, oids);
+        let inner = if shards.len() > 1 { 1 } else { self.threads };
+        let per_shard = par::try_par_map(
+            &shards,
+            self.threads.min(shards.len()),
+            |_, shard| -> Result<pack::PackStats> {
+                let blob = pack::build_pack(src, shard, inner)?;
+                pack::unpack_into(dst, &blob, inner)
+            },
+        )?;
+        for s in &per_shard {
+            total.objects += s.objects;
+            total.raw_bytes += s.raw_bytes;
+            total.packed_bytes += s.packed_bytes;
+        }
+        record(|t| {
+            t.packs += per_shard.len() as u64;
+            t.objects += total.objects as u64;
+            t.raw_bytes += total.raw_bytes;
+            t.packed_bytes += total.packed_bytes;
+        });
+        Ok(total)
+    }
+
+    /// Greedily split `oids` into shards respecting both the object and
+    /// the raw-byte cap (sizes probed from the source store's metadata;
+    /// an oid the source lacks counts as zero and fails later in
+    /// `build_pack` with a precise error).
+    fn shard(&self, src: &LfsStore, oids: &[Oid]) -> Vec<Vec<Oid>> {
+        let max_objects = self.max_pack_objects.max(1);
+        let mut shards = Vec::new();
+        let mut cur: Vec<Oid> = Vec::new();
+        let mut cur_bytes = 0u64;
+        for &oid in oids {
+            let size = src.size_of(&oid).unwrap_or(0);
+            if !cur.is_empty()
+                && (cur.len() >= max_objects || cur_bytes.saturating_add(size) > self.max_pack_bytes)
+            {
+                shards.push(std::mem::take(&mut cur));
+                cur_bytes = 0;
+            }
+            cur.push(oid);
+            cur_bytes += size;
+        }
+        if !cur.is_empty() {
+            shards.push(cur);
+        }
+        shards
+    }
+}
+
+/// Fetch `want` into `local` with the default [`Prefetcher`].
+pub fn fetch_pack(remote: &LfsRemote, local: &LfsStore, want: &[Oid]) -> Result<TransferSummary> {
+    Prefetcher::default().fetch(remote, local, want)
+}
+
+/// Push `oids` to `remote` with the default [`Prefetcher`].
+pub fn push_pack(local: &LfsStore, remote: &LfsRemote, oids: &[Oid]) -> Result<TransferSummary> {
+    Prefetcher::default().push(local, remote, oids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn seeded(td: &TempDir, n: usize) -> (LfsStore, Vec<Oid>) {
+        let store = LfsStore::open(td.path());
+        let oids = (0..n)
+            .map(|i| store.put(format!("object-{i}").as_bytes()).unwrap().0)
+            .collect();
+        (store, oids)
+    }
+
+    #[test]
+    fn fetch_is_one_negotiation_one_pack() {
+        let td_r = TempDir::new("batch-remote").unwrap();
+        let td_l = TempDir::new("batch-local").unwrap();
+        let remote = LfsRemote::open(td_r.path());
+        let oids: Vec<Oid> = (0..20)
+            .map(|i| remote.store().put(format!("object-{i}").as_bytes()).unwrap().0)
+            .collect();
+        let local = LfsStore::open(td_l.path());
+
+        reset_stats();
+        let s = fetch_pack(&remote, &local, &oids).unwrap();
+        assert_eq!(s.objects, 20);
+        assert_eq!(s.unavailable, 0);
+        let t = stats();
+        assert_eq!(t.negotiations, 1);
+        assert_eq!(t.packs, 1);
+        assert_eq!(t.objects, 20);
+
+        // Second fetch: everything local, zero round trips.
+        reset_stats();
+        let s2 = fetch_pack(&remote, &local, &oids).unwrap();
+        assert_eq!(s2.objects, 0);
+        assert_eq!(stats(), TransferStats::default());
+    }
+
+    #[test]
+    fn push_skips_objects_the_remote_has() {
+        let td_l = TempDir::new("batch-l").unwrap();
+        let td_r = TempDir::new("batch-r").unwrap();
+        let (local, oids) = seeded(&td_l, 8);
+        let remote = LfsRemote::open(td_r.path());
+
+        reset_stats();
+        let s1 = push_pack(&local, &remote, &oids).unwrap();
+        assert_eq!(s1.objects, 8);
+        let s2 = push_pack(&local, &remote, &oids).unwrap();
+        assert_eq!(s2.objects, 0);
+        // Two negotiations (one per push), but only one pack moved.
+        let t = stats();
+        assert_eq!(t.negotiations, 2);
+        assert_eq!(t.packs, 1);
+    }
+
+    #[test]
+    fn unavailable_objects_are_reported_not_fatal() {
+        let td_l = TempDir::new("batch-l").unwrap();
+        let td_r = TempDir::new("batch-r").unwrap();
+        let (_, mut oids) = seeded(&td_l, 2);
+        let remote = LfsRemote::open(td_r.path());
+        let local = LfsStore::open(td_l.path());
+        oids.push(Oid::of_bytes(b"nobody has this"));
+
+        let s = fetch_pack(&remote, &local, &[oids[2]]).unwrap();
+        assert_eq!((s.objects, s.unavailable), (0, 1));
+        let s = push_pack(&local, &remote, &oids).unwrap();
+        assert_eq!((s.objects, s.unavailable), (2, 1));
+    }
+
+    #[test]
+    fn large_want_sets_shard_into_multiple_packs() {
+        let td_l = TempDir::new("batch-shard-l").unwrap();
+        let td_r = TempDir::new("batch-shard-r").unwrap();
+        let (local, oids) = seeded(&td_l, 25);
+        let remote = LfsRemote::open(td_r.path());
+
+        reset_stats();
+        let p = Prefetcher {
+            max_pack_objects: 10,
+            threads: 4,
+            ..Prefetcher::default()
+        };
+        let s = p.push(&local, &remote, &oids).unwrap();
+        assert_eq!(s.objects, 25);
+        let t = stats();
+        assert_eq!(t.negotiations, 1);
+        assert_eq!(t.packs, 3); // 10 + 10 + 5
+        for oid in &oids {
+            assert!(remote.store().contains(oid));
+        }
+    }
+
+    #[test]
+    fn byte_cap_shards_large_payloads() {
+        let td_l = TempDir::new("batch-bytes-l").unwrap();
+        let td_r = TempDir::new("batch-bytes-r").unwrap();
+        let local = LfsStore::open(td_l.path());
+        let oids: Vec<Oid> = (0..6u8)
+            .map(|i| local.put(&vec![i; 1000]).unwrap().0)
+            .collect();
+        let remote = LfsRemote::open(td_r.path());
+
+        reset_stats();
+        let p = Prefetcher {
+            max_pack_bytes: 2500, // fits two 1000-byte objects per pack
+            threads: 2,
+            ..Prefetcher::default()
+        };
+        p.push(&local, &remote, &oids).unwrap();
+        let t = stats();
+        assert_eq!(t.negotiations, 1);
+        assert_eq!(t.packs, 3);
+        assert_eq!(t.objects, 6);
+    }
+}

@@ -54,11 +54,7 @@ impl Hooks for LfsHooks {
             let tree = repo.odb().read_tree(&commit.tree)?;
             for entry in &tree.entries {
                 let blob = repo.odb().read_blob(&entry.oid)?;
-                if Pointer::is_pointer(&blob) {
-                    if let Ok(p) = Pointer::parse(&String::from_utf8_lossy(&blob)) {
-                        oids.push(p.oid);
-                    }
-                }
+                oids.extend(Pointer::oid_of_blob(&blob));
             }
         }
         oids.sort();

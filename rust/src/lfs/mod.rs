@@ -4,7 +4,12 @@
 //! files, a content-addressed large-object store under
 //! `.theta/lfs/objects/`, clean/smudge filters that swap file contents
 //! for pointers, a pre-push hook that syncs referenced objects to an
-//! LFS remote, and lazy smudge-time download from the remote.
+//! LFS remote, and smudge-time download from the remote.
+//!
+//! Transfer is batched: [`batch`] negotiates the full have/want set in
+//! one round trip and [`pack`] moves every missing object as a single
+//! integrity-checked packfile (see `docs/ARCHITECTURE.md` for the data
+//! flow).
 //!
 //! It is used two ways in this repo:
 //! 1. as Git-Theta's parameter-group storage backend (paper §3.3
@@ -12,12 +17,16 @@
 //! 2. as the **Table 1 baseline**: tracking a whole checkpoint as one
 //!    opaque LFS blob (`baseline/`).
 
+pub mod batch;
 pub mod filter;
+pub mod pack;
 pub mod pointer;
 pub mod remote;
 pub mod store;
 
+pub use batch::{fetch_pack, push_pack, BatchResponse, Prefetcher, TransferStats, TransferSummary};
 pub use filter::{register_lfs, LfsFilter, LfsHooks};
+pub use pack::{build_pack, pack_index, unpack_into, PackStats};
 pub use pointer::Pointer;
 pub use remote::{sync_to_remote, LfsRemote};
 pub use store::LfsStore;

@@ -1,0 +1,313 @@
+//! The Git-Theta packfile: many LFS objects in one integrity-checked blob.
+//!
+//! The per-object transfer loop in the seed negotiated and moved one
+//! object per round trip, which collapses under the many-small-objects
+//! workload the clean filter produces (one update object per changed
+//! parameter group). A pack amortizes that: the sender assembles every
+//! wanted object into a single blob, the receiver fans it back into its
+//! store, and both halves parallelize per object via [`par`].
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! header   "THP1" (4) | version u32 (4) | object count u64 (8)
+//! records  count × { oid (32) | raw_len u64 | comp_len u64 | zstd bytes }
+//! index    count × { oid (32) | record offset u64 }
+//! trailer  index offset u64 | sha256 of everything above (32)
+//! ```
+//!
+//! The trailing index lets a reader locate records without scanning, and
+//! the trailing sha256 makes truncation or bit-rot anywhere in the pack
+//! detectable before any object is admitted to a store. Each object is
+//! additionally verified against its oid (sha256 of the raw bytes) on
+//! unpack, so a pack can never silently install wrong content.
+
+use super::store::LfsStore;
+use crate::gitcore::object::Oid;
+use crate::util::par;
+use anyhow::{bail, Context, Result};
+use sha2::{Digest, Sha256};
+use std::io::Read;
+
+/// First four bytes of every pack.
+pub const PACK_MAGIC: &[u8; 4] = b"THP1";
+/// Current pack format version.
+pub const PACK_VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 16; // magic + version + count
+const TRAILER_LEN: usize = 40; // index offset + sha256
+const INDEX_ENTRY_LEN: usize = 40; // oid + record offset
+const RECORD_HEADER_LEN: usize = 48; // oid + raw_len + comp_len
+
+/// zstd level for object payloads (matches the serializer default).
+const PACK_ZSTD_LEVEL: i32 = 3;
+
+/// Format limit on a single object's uncompressed size (4 GiB). Keeps a
+/// crafted record's declared `raw_len` from driving a giant allocation
+/// before decompression can fail.
+pub const MAX_OBJECT_BYTES: u64 = 1 << 32;
+
+/// Size summary of a pack build or apply.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PackStats {
+    /// Objects carried by the pack.
+    pub objects: usize,
+    /// Total uncompressed payload bytes.
+    pub raw_bytes: u64,
+    /// Bytes of the pack blob itself (what moves over the wire).
+    pub packed_bytes: u64,
+}
+
+/// Assemble a pack holding `oids`, read from `store`.
+///
+/// Duplicate oids are packed once. Object payloads are compressed in
+/// parallel across `threads` workers; the surrounding framing is
+/// written sequentially so offsets stay deterministic.
+pub fn build_pack(store: &LfsStore, oids: &[Oid], threads: usize) -> Result<Vec<u8>> {
+    let mut unique = oids.to_vec();
+    unique.sort();
+    unique.dedup();
+
+    let blobs = par::try_par_map(&unique, threads, |_, oid| -> Result<(u64, Vec<u8>)> {
+        let raw = store
+            .get(oid)
+            .with_context(|| format!("packing object {}", oid.short()))?;
+        if raw.len() as u64 > MAX_OBJECT_BYTES {
+            bail!("object {} exceeds the pack format's size limit", oid.short());
+        }
+        let comp = zstd::bulk::compress(&raw, PACK_ZSTD_LEVEL).context("pack compress")?;
+        Ok((raw.len() as u64, comp))
+    })?;
+
+    let body: usize = blobs
+        .iter()
+        .map(|(_, c)| RECORD_HEADER_LEN + c.len())
+        .sum();
+    let mut out =
+        Vec::with_capacity(HEADER_LEN + body + unique.len() * INDEX_ENTRY_LEN + TRAILER_LEN);
+    out.extend_from_slice(PACK_MAGIC);
+    out.extend_from_slice(&PACK_VERSION.to_le_bytes());
+    out.extend_from_slice(&(unique.len() as u64).to_le_bytes());
+
+    let mut offsets = Vec::with_capacity(unique.len());
+    for (oid, (raw_len, comp)) in unique.iter().zip(&blobs) {
+        offsets.push(out.len() as u64);
+        out.extend_from_slice(&oid.0);
+        out.extend_from_slice(&raw_len.to_le_bytes());
+        out.extend_from_slice(&(comp.len() as u64).to_le_bytes());
+        out.extend_from_slice(comp);
+    }
+
+    let index_offset = out.len() as u64;
+    for (oid, off) in unique.iter().zip(&offsets) {
+        out.extend_from_slice(&oid.0);
+        out.extend_from_slice(&off.to_le_bytes());
+    }
+    out.extend_from_slice(&index_offset.to_le_bytes());
+    let digest: [u8; 32] = Sha256::digest(&out).into();
+    out.extend_from_slice(&digest);
+    Ok(out)
+}
+
+/// A validated view of a pack: the trailer checksum has been verified
+/// and the index parsed, but records are not yet decompressed.
+struct PackView {
+    index: Vec<(Oid, usize)>,
+    /// Where the index begins == where record data ends.
+    records_end: usize,
+}
+
+fn parse(pack: &[u8]) -> Result<PackView> {
+    if pack.len() < HEADER_LEN + TRAILER_LEN {
+        bail!("pack truncated ({} bytes)", pack.len());
+    }
+    if &pack[..4] != PACK_MAGIC {
+        bail!("pack: bad magic");
+    }
+    let version = u32::from_le_bytes(pack[4..8].try_into().unwrap());
+    if version != PACK_VERSION {
+        bail!("pack: unsupported version {version}");
+    }
+    let checksum_at = pack.len() - 32;
+    let actual: [u8; 32] = Sha256::digest(&pack[..checksum_at]).into();
+    if actual[..] != pack[checksum_at..] {
+        bail!("pack checksum mismatch (corrupt trailer or content)");
+    }
+    // All length/offset fields come from the (checksummed) pack, but a
+    // checksum only proves the sender wrote what we read — a malicious
+    // sender can still write absurd values. Validate with overflow-safe
+    // comparisons so a crafted pack yields Err, never a panic.
+    let index_end = checksum_at - 8;
+    let count = u64::from_le_bytes(pack[8..16].try_into().unwrap());
+    if count > (index_end / INDEX_ENTRY_LEN) as u64 {
+        bail!("pack declares more objects than it can hold");
+    }
+    let count = count as usize;
+    let index_offset = u64::from_le_bytes(pack[checksum_at - 8..checksum_at].try_into().unwrap());
+    if index_offset > index_end as u64 {
+        bail!("pack index out of bounds");
+    }
+    let index_offset = index_offset as usize;
+    if index_offset < HEADER_LEN || index_end - index_offset != count * INDEX_ENTRY_LEN {
+        bail!("pack index out of bounds");
+    }
+    let mut index = Vec::with_capacity(count);
+    for i in 0..count {
+        let at = index_offset + i * INDEX_ENTRY_LEN;
+        let oid = Oid(pack[at..at + 32].try_into().unwrap());
+        let off = u64::from_le_bytes(pack[at + 32..at + 40].try_into().unwrap());
+        let record_end = off.checked_add(RECORD_HEADER_LEN as u64);
+        if off < HEADER_LEN as u64 || record_end.map_or(true, |e| e > index_offset as u64) {
+            bail!("pack record offset out of bounds for {}", oid.short());
+        }
+        index.push((oid, off as usize));
+    }
+    Ok(PackView {
+        index,
+        records_end: index_offset,
+    })
+}
+
+/// Slice the record at `off`, returning (oid, raw_len, compressed bytes).
+fn record_at(pack: &[u8], off: usize, records_end: usize) -> Result<(Oid, u64, &[u8])> {
+    let oid = Oid(pack[off..off + 32].try_into().unwrap());
+    let raw_len = u64::from_le_bytes(pack[off + 32..off + 40].try_into().unwrap());
+    let comp_len = u64::from_le_bytes(pack[off + 40..off + 48].try_into().unwrap());
+    let start = off + RECORD_HEADER_LEN;
+    // Overflow-safe: compare in u64 before narrowing.
+    if comp_len > (records_end - start) as u64 {
+        bail!("pack record for {} overruns the index", oid.short());
+    }
+    let comp_len = comp_len as usize;
+    Ok((oid, raw_len, &pack[start..start + comp_len]))
+}
+
+/// List the (oid, raw size) of every object in a pack without
+/// decompressing any payload. Verifies the trailer checksum.
+pub fn pack_index(pack: &[u8]) -> Result<Vec<(Oid, u64)>> {
+    let view = parse(pack)?;
+    view.index
+        .iter()
+        .map(|&(oid, off)| {
+            let (record_oid, raw_len, _) = record_at(pack, off, view.records_end)?;
+            if record_oid != oid {
+                bail!("pack index entry for {} points at a foreign record", oid.short());
+            }
+            Ok((oid, raw_len))
+        })
+        .collect()
+}
+
+/// Verify, decompress, and store every object in `pack` (store fan-in).
+///
+/// Objects are admitted only after their raw bytes re-hash to the oid
+/// the pack claims, so a damaged pack can never poison a store. Workers
+/// fan objects in concurrently; [`LfsStore::put`] is atomic.
+pub fn unpack_into(store: &LfsStore, pack: &[u8], threads: usize) -> Result<PackStats> {
+    let view = parse(pack)?;
+    let sizes = par::try_par_map(&view.index, threads, |_, &(oid, off)| -> Result<u64> {
+        let (record_oid, raw_len, comp) = record_at(pack, off, view.records_end)?;
+        if record_oid != oid {
+            bail!("pack index entry for {} points at a foreign record", oid.short());
+        }
+        if raw_len > MAX_OBJECT_BYTES {
+            bail!("pack object {} declares an implausible size", oid.short());
+        }
+        // Stream-decompress with a hard read limit: the output buffer
+        // grows with actual data (a crafted `raw_len` cannot force a
+        // giant up-front allocation) and a decompression bomb stops one
+        // byte past the declared size.
+        let mut raw = Vec::with_capacity((raw_len as usize).min(16 << 20));
+        let decoder = zstd::stream::Decoder::new(comp)
+            .with_context(|| format!("pack decompress of {}", oid.short()))?;
+        decoder
+            .take(raw_len + 1)
+            .read_to_end(&mut raw)
+            .with_context(|| format!("pack decompress of {}", oid.short()))?;
+        if raw.len() as u64 != raw_len {
+            bail!("pack object {} has wrong length", oid.short());
+        }
+        if Oid::of_bytes(&raw) != oid {
+            bail!("pack object {} failed its content hash", oid.short());
+        }
+        store.put(&raw)?;
+        Ok(raw_len)
+    })?;
+    Ok(PackStats {
+        objects: sizes.len(),
+        raw_bytes: sizes.iter().sum(),
+        packed_bytes: pack.len() as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn store_with(td: &TempDir, payloads: &[&[u8]]) -> (LfsStore, Vec<Oid>) {
+        let store = LfsStore::open(td.path());
+        let oids = payloads
+            .iter()
+            .map(|p| store.put(p).unwrap().0)
+            .collect();
+        (store, oids)
+    }
+
+    #[test]
+    fn roundtrip_and_dedup() {
+        let td_a = TempDir::new("pack-a").unwrap();
+        let td_b = TempDir::new("pack-b").unwrap();
+        let (a, oids) = store_with(&td_a, &[b"alpha", b"beta", &[0u8; 10_000]]);
+        let b = LfsStore::open(td_b.path());
+
+        // Duplicates in the want list pack once.
+        let doubled: Vec<Oid> = oids.iter().chain(oids.iter()).copied().collect();
+        let pack = build_pack(&a, &doubled, 2).unwrap();
+        assert_eq!(pack_index(&pack).unwrap().len(), 3);
+
+        let stats = unpack_into(&b, &pack, 2).unwrap();
+        assert_eq!(stats.objects, 3);
+        assert_eq!(stats.raw_bytes, 5 + 4 + 10_000);
+        assert_eq!(stats.packed_bytes, pack.len() as u64);
+        for oid in &oids {
+            assert_eq!(b.get(oid).unwrap(), a.get(oid).unwrap());
+        }
+    }
+
+    #[test]
+    fn empty_pack_is_valid() {
+        let td = TempDir::new("pack-empty").unwrap();
+        let (store, _) = store_with(&td, &[]);
+        let pack = build_pack(&store, &[], 4).unwrap();
+        assert_eq!(pack.len(), HEADER_LEN + TRAILER_LEN);
+        assert!(pack_index(&pack).unwrap().is_empty());
+        assert_eq!(unpack_into(&store, &pack, 4).unwrap().objects, 0);
+    }
+
+    #[test]
+    fn every_flipped_byte_is_detected() {
+        let td = TempDir::new("pack-flip").unwrap();
+        let (store, oids) = store_with(&td, &[b"some weights", b"more weights"]);
+        let pack = build_pack(&store, &oids, 1).unwrap();
+        let td2 = TempDir::new("pack-flip2").unwrap();
+        let dst = LfsStore::open(td2.path());
+        // Flip a byte in each region: header, record payload, index, trailer.
+        for at in [2usize, HEADER_LEN + 40, pack.len() - 50, pack.len() - 1] {
+            let mut bad = pack.clone();
+            bad[at] ^= 0xff;
+            assert!(unpack_into(&dst, &bad, 1).is_err(), "flip at {at} undetected");
+        }
+        // Truncation anywhere is detected too.
+        assert!(unpack_into(&dst, &pack[..pack.len() - 7], 1).is_err());
+        assert!(unpack_into(&dst, &pack[..10], 1).is_err());
+    }
+
+    #[test]
+    fn missing_source_object_fails_build() {
+        let td = TempDir::new("pack-miss").unwrap();
+        let (store, _) = store_with(&td, &[b"x"]);
+        let ghost = Oid::of_bytes(b"never stored");
+        assert!(build_pack(&store, &[ghost], 1).is_err());
+    }
+}

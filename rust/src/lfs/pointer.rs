@@ -13,16 +13,20 @@
 use crate::gitcore::object::Oid;
 use anyhow::{bail, Context, Result};
 
+/// The Git LFS pointer spec this implementation emits and accepts.
 pub const SPEC_VERSION: &str = "https://git-lfs.github.com/spec/v1";
 
 /// A parsed LFS pointer.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Pointer {
+    /// sha256 of the object the pointer stands in for.
     pub oid: Oid,
+    /// Size of the object in bytes.
     pub size: u64,
 }
 
 impl Pointer {
+    /// Build a pointer for an object of known oid and size.
     pub fn new(oid: Oid, size: u64) -> Pointer {
         Pointer { oid, size }
     }
@@ -69,6 +73,16 @@ impl Pointer {
     /// Heuristic: does this staged blob look like a pointer file?
     pub fn is_pointer(bytes: &[u8]) -> bool {
         bytes.len() < 400 && bytes.starts_with(b"version https://git-lfs")
+    }
+
+    /// The object oid of a blob, if the blob is a parseable pointer
+    /// file. The one place pointer sniffing + parsing is combined, so
+    /// hooks and prefetchers cannot drift apart.
+    pub fn oid_of_blob(bytes: &[u8]) -> Option<Oid> {
+        if !Self::is_pointer(bytes) {
+            return None;
+        }
+        Pointer::parse(&String::from_utf8_lossy(bytes)).ok().map(|p| p.oid)
     }
 }
 

@@ -1,14 +1,22 @@
-//! LFS remote transfer: batch upload/download with content dedup.
+//! LFS remote transfer: batched have/want negotiation + packed movement.
 //!
 //! A remote is a directory acting as an LFS server (`<remote>/lfs/objects`).
-//! The batch API mirrors Git LFS's: the client announces the oids it
-//! wants to send/receive and only missing objects move, so re-pushing a
-//! model where most parameter groups are unchanged transfers almost
-//! nothing — the network-efficiency property the paper leans on.
+//! The negotiation API mirrors Git LFS's batch endpoint: the client
+//! announces every oid it wants to send or receive in one [`LfsRemote::batch`]
+//! call and only missing objects move, so re-pushing a model where most
+//! parameter groups are unchanged transfers almost nothing — the
+//! network-efficiency property the paper leans on.
+//!
+//! Movement itself goes through the [`pack`](super::pack) engine by
+//! default (one negotiation + one pack for N objects); set
+//! `THETA_TRANSFER=object` — or call the `*_per_object` variants — for
+//! the legacy engine that copies each object with its own request,
+//! kept as the benchmark baseline (`benches/ablation_transfer.rs`).
 
+use super::batch::{self, BatchResponse};
 use super::store::LfsStore;
 use crate::gitcore::object::Oid;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::path::Path;
 
 /// Handle to a directory-backed LFS remote.
@@ -18,39 +26,94 @@ pub struct LfsRemote {
 }
 
 impl LfsRemote {
+    /// Open the LFS area of a directory remote (created lazily on write).
     pub fn open(remote_root: &Path) -> LfsRemote {
         LfsRemote {
             store: LfsStore::at(&remote_root.join("lfs/objects")),
         }
     }
 
+    /// The remote's backing object store.
     pub fn store(&self) -> &LfsStore {
         &self.store
     }
 
-    /// Which of these oids is the remote missing? (Batch API check.)
-    pub fn missing(&self, oids: &[Oid]) -> Vec<Oid> {
-        oids.iter()
-            .filter(|oid| !self.store.contains(oid))
-            .copied()
-            .collect()
+    /// Have/want negotiation: partition `want` into the oids the remote
+    /// holds and the oids it lacks, in a single round trip.
+    pub fn batch(&self, want: &[Oid]) -> BatchResponse {
+        batch::record(|s| s.negotiations += 1);
+        let mut resp = BatchResponse::default();
+        for oid in want {
+            if self.store.contains(oid) {
+                resp.present.push(*oid);
+            } else {
+                resp.missing.push(*oid);
+            }
+        }
+        resp
     }
 
-    /// Upload objects the remote is missing. Returns (sent, bytes).
+    /// Which of these oids is the remote missing? (One negotiation.)
+    pub fn missing(&self, oids: &[Oid]) -> Vec<Oid> {
+        self.batch(oids).missing
+    }
+
+    /// Upload objects the remote is missing. Returns (sent, raw bytes).
+    ///
+    /// Packed by default: one negotiation, then every missing object in
+    /// a single integrity-checked pack. Errors (like the per-object
+    /// engine) if a wanted object is absent from the local store too.
     pub fn upload(&self, local: &LfsStore, oids: &[Oid]) -> Result<(usize, u64)> {
+        if batch::per_object_mode() {
+            return self.upload_per_object(local, oids);
+        }
+        let s = batch::push_pack(local, self, oids)?;
+        if s.unavailable > 0 {
+            bail!(
+                "cannot upload: {} wanted object(s) missing from the local store",
+                s.unavailable
+            );
+        }
+        Ok((s.objects, s.raw_bytes))
+    }
+
+    /// Legacy upload engine (the seed's behavior): one negotiation for
+    /// the whole set, then one copy request per missing object.
+    pub fn upload_per_object(&self, local: &LfsStore, oids: &[Oid]) -> Result<(usize, u64)> {
         let mut sent = 0;
         let mut bytes = 0;
         for oid in self.missing(oids) {
             let data = local.get(&oid)?;
             bytes += data.len() as u64;
             self.store.put(&data)?;
+            batch::record(|s| {
+                s.objects += 1;
+                s.object_transfers += 1;
+                s.raw_bytes += data.len() as u64;
+                s.packed_bytes += data.len() as u64;
+            });
             sent += 1;
         }
         Ok((sent, bytes))
     }
 
-    /// Download objects the local store is missing. Returns (fetched, bytes).
+    /// Download objects the local store is missing. Returns
+    /// (fetched, raw bytes). Packed by default, like [`LfsRemote::upload`];
+    /// errors if the remote lacks a requested object.
     pub fn download(&self, local: &LfsStore, oids: &[Oid]) -> Result<(usize, u64)> {
+        if batch::per_object_mode() {
+            return self.download_per_object(local, oids);
+        }
+        let s = batch::fetch_pack(self, local, oids)?;
+        if s.unavailable > 0 {
+            bail!("remote is missing {} requested object(s)", s.unavailable);
+        }
+        Ok((s.objects, s.raw_bytes))
+    }
+
+    /// Legacy download engine (the seed's behavior): one fetch request
+    /// per locally missing object.
+    pub fn download_per_object(&self, local: &LfsStore, oids: &[Oid]) -> Result<(usize, u64)> {
         let mut fetched = 0;
         let mut bytes = 0;
         for oid in oids {
@@ -58,6 +121,12 @@ impl LfsRemote {
                 let data = self.store.get(oid)?;
                 bytes += data.len() as u64;
                 local.put(&data)?;
+                batch::record(|s| {
+                    s.objects += 1;
+                    s.object_transfers += 1;
+                    s.raw_bytes += data.len() as u64;
+                    s.packed_bytes += data.len() as u64;
+                });
                 fetched += 1;
             }
         }
@@ -111,5 +180,82 @@ mod tests {
         let (b, _) = local.put(b"y").unwrap();
         remote.upload(&local, &[a]).unwrap();
         assert_eq!(remote.missing(&[a, b]), vec![b]);
+    }
+
+    #[test]
+    fn batch_partitions_in_one_round_trip() {
+        let td_remote = TempDir::new("lfs-remote").unwrap();
+        let remote = LfsRemote::open(td_remote.path());
+        let (held, _) = remote.store().put(b"held").unwrap();
+        let absent = Oid::of_bytes(b"absent");
+
+        batch::reset_stats();
+        let resp = remote.batch(&[held, absent]);
+        assert_eq!(resp.present, vec![held]);
+        assert_eq!(resp.missing, vec![absent]);
+        assert_eq!(batch::stats().negotiations, 1);
+    }
+
+    #[test]
+    fn packed_and_per_object_engines_agree() {
+        let td_local = TempDir::new("lfs-local").unwrap();
+        let local = LfsStore::open(td_local.path());
+        let oids: Vec<Oid> = (0..10usize)
+            .map(|i| local.put(&vec![i as u8; 100 + i]).unwrap().0)
+            .collect();
+
+        let td_a = TempDir::new("lfs-packed").unwrap();
+        let td_b = TempDir::new("lfs-perobj").unwrap();
+        let packed = LfsRemote::open(td_a.path());
+        let perobj = LfsRemote::open(td_b.path());
+        // Call the engines directly so an ambient THETA_TRANSFER can't
+        // change which one each side of the comparison exercises.
+        let s = batch::push_pack(&local, &packed, &oids).unwrap();
+        let (sent_o, bytes_o) = perobj.upload_per_object(&local, &oids).unwrap();
+        assert_eq!((s.objects, s.raw_bytes), (sent_o, bytes_o));
+        for oid in &oids {
+            assert_eq!(
+                packed.store().get(oid).unwrap(),
+                perobj.store().get(oid).unwrap()
+            );
+        }
+
+        // Both download engines restore identical stores.
+        let td_c = TempDir::new("lfs-dl-p").unwrap();
+        let td_d = TempDir::new("lfs-dl-o").unwrap();
+        let c = LfsStore::open(td_c.path());
+        let d = LfsStore::open(td_d.path());
+        batch::fetch_pack(&packed, &c, &oids).unwrap();
+        packed.download_per_object(&d, &oids).unwrap();
+        for oid in &oids {
+            assert_eq!(c.get(oid).unwrap(), d.get(oid).unwrap());
+        }
+    }
+
+    #[test]
+    fn fewer_round_trips_than_per_object() {
+        let td_local = TempDir::new("lfs-local").unwrap();
+        let local = LfsStore::open(td_local.path());
+        let oids: Vec<Oid> = (0..50)
+            .map(|i| local.put(format!("g{i}").as_bytes()).unwrap().0)
+            .collect();
+
+        let td_a = TempDir::new("lfs-a").unwrap();
+        batch::reset_stats();
+        batch::push_pack(&local, &LfsRemote::open(td_a.path()), &oids).unwrap();
+        let packed = batch::stats();
+
+        let td_b = TempDir::new("lfs-b").unwrap();
+        batch::reset_stats();
+        LfsRemote::open(td_b.path())
+            .upload_per_object(&local, &oids)
+            .unwrap();
+        let per_object = batch::stats();
+
+        // Packed: 1 negotiation + 1 pack. Per-object (seed behavior):
+        // 1 negotiation + 50 individual copies.
+        assert_eq!(packed.round_trips(), 2);
+        assert_eq!(per_object.round_trips(), 51);
+        assert_eq!(packed.objects, per_object.objects);
     }
 }

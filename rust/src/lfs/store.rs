@@ -8,6 +8,7 @@ use crate::gitcore::object::Oid;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+/// A content-addressed object store on the local filesystem.
 #[derive(Debug, Clone)]
 pub struct LfsStore {
     root: PathBuf,
@@ -28,6 +29,7 @@ impl LfsStore {
         }
     }
 
+    /// The directory objects live under.
     pub fn root(&self) -> &Path {
         &self.root
     }
@@ -37,8 +39,15 @@ impl LfsStore {
         self.root.join(&hex[..2]).join(&hex[2..])
     }
 
+    /// Whether an object is present locally.
     pub fn contains(&self, oid: &Oid) -> bool {
         self.path_for(oid).exists()
+    }
+
+    /// Size in bytes of a stored object, without reading it
+    /// (`None` if absent). Used to shard packs by payload size.
+    pub fn size_of(&self, oid: &Oid) -> Option<u64> {
+        std::fs::metadata(self.path_for(oid)).ok().map(|m| m.len())
     }
 
     /// Store a blob; returns (oid, size). Idempotent by content.

@@ -14,20 +14,35 @@
 //! executed from Rust via PJRT ([`runtime`]); Python never runs on the
 //! request path.
 //!
-//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
-//! paper-reproduction results (Table 1, Figures 2–3).
+//! See docs/ARCHITECTURE.md for the per-module map and data flow, and
+//! docs/merge-strategies.md for the merge plug-in guide.
+#![warn(missing_docs)]
 
+// rustdoc burn-down: fully documented modules participate in
+// `missing_docs`; the rest are allowed until their documentation pass
+// lands (tracked in ROADMAP.md). New public items in `lfs/` and
+// `theta/metadata.rs` must carry docs.
+#[allow(missing_docs)]
 pub mod baseline;
+#[allow(missing_docs)]
 pub mod benchkit;
+#[allow(missing_docs)]
 pub mod checkpoint;
+#[allow(missing_docs)]
 pub mod cli;
+#[allow(missing_docs)]
 pub mod gitcore;
 pub mod lfs;
+#[allow(missing_docs)]
 pub mod mlops;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod tensor;
 pub mod theta;
+#[allow(missing_docs)]
 pub mod train;
+#[allow(missing_docs)]
 pub mod util;
 
 /// Register every built-in driver/plug-in (idempotent). Call once at

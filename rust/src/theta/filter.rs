@@ -17,15 +17,16 @@
 
 use crate::checkpoint::{detect_format, format_by_name, Checkpoint};
 use crate::gitcore::drivers::FilterDriver;
+use crate::gitcore::object::Oid;
 use crate::gitcore::repo::Repository;
-use crate::lfs::{LfsRemote, LfsStore};
+use crate::lfs::{batch, LfsRemote, LfsStore};
 use crate::tensor::{allclose, Tensor};
 use crate::theta::lsh::{LshSignature, LshVerdict};
 use crate::theta::metadata::{GroupMetadata, ModelMetadata, ObjRef, TensorInfo, UpdateInfo};
 use crate::theta::serialize::{deserialize_combined, serialize_combined};
 use crate::theta::updates::{infer_best, update_type, UpdatePayload};
 use crate::util::par;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// The `filter=theta` driver.
@@ -51,13 +52,36 @@ impl ObjectAccess {
     /// Fetch an object, downloading from the remote on a local miss
     /// (paper: smudge "retrieves the serialized update from either the
     /// local cache in .git/lfs/objects or the LFS remote server").
+    ///
+    /// This is the lazy single-object path; bulk consumers should call
+    /// [`ObjectAccess::prefetch`] first so all misses arrive in one pack.
     pub fn fetch(&self, obj: &ObjRef) -> Result<Vec<u8>> {
         if !self.store.contains(&obj.oid) {
-            if let Some(remote) = &self.remote {
-                remote.download(&self.store, &[obj.oid])?;
+            match &self.remote {
+                Some(remote) => {
+                    remote.download(&self.store, &[obj.oid])?;
+                }
+                None => bail!(
+                    "lfs object {} not found locally and no remote is configured \
+                     (set one with `git-theta config remote <dir>`)",
+                    obj.oid.short()
+                ),
             }
         }
         self.store.get(&obj.oid)
+    }
+
+    /// Ensure `oids` are in the local store, fetching every miss from
+    /// the remote in a single negotiation + pack transfer.
+    ///
+    /// A no-op (zero round trips) when nothing is missing or no remote
+    /// is configured; objects the remote also lacks are left for
+    /// [`ObjectAccess::fetch`] to report when actually needed.
+    pub fn prefetch(&self, oids: &[Oid]) -> Result<()> {
+        if let Some(remote) = &self.remote {
+            batch::fetch_pack(remote, &self.store, oids)?;
+        }
+        Ok(())
     }
 }
 
@@ -92,6 +116,10 @@ pub fn clean_checkpoint(
     forced_update: Option<&str>,
     threads: usize,
 ) -> Result<ModelMetadata> {
+    // No up-front prefetch here: unchanged groups (the common case)
+    // never reconstruct their prior value, so pulling the prior's whole
+    // object closure would over-fetch. Changed groups download lazily;
+    // the bulk path that benefits from packing is smudge.
     let groups: Vec<(&String, &Tensor)> = ck.iter().collect();
     let entries = par::try_par_map(&groups, threads, |_, (name, tensor)| {
         clean_group(access, name, tensor, prior, forced_update)
@@ -201,6 +229,9 @@ pub fn smudge_metadata(
     meta: &ModelMetadata,
     threads: usize,
 ) -> Result<Checkpoint> {
+    // One negotiation + one pack for every object the model references
+    // (instead of a lazy download per missing group during reconstruction).
+    access.prefetch(&meta.all_oids())?;
     let groups: Vec<(&String, &GroupMetadata)> = meta.groups.iter().collect();
     let tensors = par::try_par_map(&groups, threads, |_, (name, entry)| {
         reconstruct_group(access, entry)
@@ -269,6 +300,19 @@ mod tests {
             ck.insert(name, Tensor::from_f32(vec![m, n], vals).unwrap());
         }
         ck
+    }
+
+    #[test]
+    fn missing_object_without_remote_is_a_clear_error() {
+        let td = TempDir::new("filter").unwrap();
+        let acc = access(&td);
+        let ghost = ObjRef {
+            oid: Oid::of_bytes(b"never stored anywhere"),
+            size: 5,
+        };
+        let err = acc.fetch(&ghost).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no remote is configured"), "{msg}");
     }
 
     #[test]

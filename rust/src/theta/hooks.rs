@@ -8,9 +8,9 @@
 //!   pushed and batch-upload them to the remote's LFS store.
 
 use crate::gitcore::drivers::Hooks;
-use crate::gitcore::object::Oid;
+use crate::gitcore::object::{Oid, Tree};
 use crate::gitcore::repo::Repository;
-use crate::lfs::{LfsRemote, LfsStore};
+use crate::lfs::{LfsRemote, LfsStore, Pointer};
 use crate::theta::metadata::ModelMetadata;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -20,6 +20,30 @@ pub struct ThetaHooks;
 
 fn commits_dir(repo: &Repository) -> PathBuf {
     repo.theta_dir().join("commits")
+}
+
+/// Every LFS oid a tree's blobs reference — model-metadata chains and
+/// plain LFS pointer files alike. Used by `git-theta fetch` to prefetch
+/// a revision's full object closure in one pack.
+pub fn referenced_lfs_oids(repo: &Repository, tree: &Tree) -> Result<Vec<Oid>> {
+    let mut oids = Vec::new();
+    for entry in &tree.entries {
+        let blob = repo.odb().read_blob(&entry.oid)?;
+        if ModelMetadata::is_metadata(&blob) {
+            // The sniffer can match lookalikes (ordinary JSON mentioning
+            // "git-theta", or future metadata versions). A read-side
+            // prefetch must not abort on them — their objects simply
+            // stay lazy.
+            if let Ok(meta) = ModelMetadata::from_bytes(&blob) {
+                oids.extend(meta.all_oids());
+            }
+        } else {
+            oids.extend(Pointer::oid_of_blob(&blob));
+        }
+    }
+    oids.sort();
+    oids.dedup();
+    Ok(oids)
 }
 
 /// Compute the LFS oids introduced by `commit` (vs its first parent).

@@ -27,12 +27,15 @@ use std::collections::BTreeMap;
 
 /// Format marker in the metadata root.
 pub const METADATA_MARKER: &str = "git-theta";
+/// Metadata schema version this code reads and writes.
 pub const METADATA_VERSION: u64 = 1;
 
 /// Reference to one serialized object in the LFS store.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ObjRef {
+    /// sha256 of the serialized object.
     pub oid: Oid,
+    /// Serialized size in bytes (what a transfer of it costs).
     pub size: u64,
 }
 
@@ -55,8 +58,11 @@ impl ObjRef {
 /// Tensor-level metadata for a parameter group.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorInfo {
+    /// Dimensions of the group's tensor.
     pub shape: Vec<usize>,
+    /// Element dtype of the group's tensor.
     pub dtype: DType,
+    /// LSH signature used for cheap change detection at clean time.
     pub lsh: LshSignature,
 }
 
@@ -74,13 +80,16 @@ pub struct UpdateInfo {
 /// Full metadata for one parameter group.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GroupMetadata {
+    /// Shape/dtype/LSH of the group's current value.
     pub tensor: TensorInfo,
+    /// How the group was updated and where its data lives.
     pub update: UpdateInfo,
     /// Base entry this (incremental) update applies on top of.
     pub prev: Option<Box<GroupMetadata>>,
 }
 
 impl GroupMetadata {
+    /// Encode this entry (and its base chain) as JSON.
     pub fn to_json(&self) -> Json {
         let mut t = JsonObj::new();
         t.insert(
@@ -112,6 +121,7 @@ impl GroupMetadata {
         Json::Obj(g)
     }
 
+    /// Decode an entry (recursively, including its base chain).
     pub fn from_json(j: &Json) -> Result<GroupMetadata> {
         let t = j.get("tensor").context("group missing tensor")?;
         let shape = t
@@ -181,10 +191,12 @@ impl GroupMetadata {
 pub struct ModelMetadata {
     /// Checkpoint format plug-in that produced / will consume this model.
     pub format: String,
+    /// Per-parameter-group entries, keyed by group name.
     pub groups: BTreeMap<String, GroupMetadata>,
 }
 
 impl ModelMetadata {
+    /// Start an empty metadata file for a checkpoint format.
     pub fn new(format: impl Into<String>) -> ModelMetadata {
         ModelMetadata {
             format: format.into(),
@@ -192,6 +204,7 @@ impl ModelMetadata {
         }
     }
 
+    /// Serialize to the pretty-printed JSON text Git versions.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut root = JsonObj::new();
         root.insert(METADATA_MARKER, METADATA_VERSION);
@@ -204,6 +217,8 @@ impl ModelMetadata {
         Json::Obj(root).to_string_pretty().into_bytes()
     }
 
+    /// Parse a metadata file, rejecting non-metadata or versions this
+    /// code does not understand.
     pub fn from_bytes(bytes: &[u8]) -> Result<ModelMetadata> {
         let text = std::str::from_utf8(bytes).context("metadata is not utf-8")?;
         let json = Json::parse(text).context("metadata json")?;

@@ -10,15 +10,26 @@
 //! * [`hooks`] — post-commit / pre-push LFS object bookkeeping.
 //! * [`track`] — `git theta track`.
 
+// rustdoc burn-down (see lib.rs): `metadata` is fully documented and
+// participates in `missing_docs`; the rest are allowed until their pass.
+#[allow(missing_docs)]
 pub mod diff;
+#[allow(missing_docs)]
 pub mod filter;
+#[allow(missing_docs)]
 pub mod hooks;
+#[allow(missing_docs)]
 pub mod lsh;
+#[allow(missing_docs)]
 pub mod merge;
+#[allow(missing_docs)]
 pub mod merge_ext;
 pub mod metadata;
+#[allow(missing_docs)]
 pub mod serialize;
+#[allow(missing_docs)]
 pub mod track;
+#[allow(missing_docs)]
 pub mod updates;
 
 pub use diff::{render_diff, ModelDiff, ThetaDiff};

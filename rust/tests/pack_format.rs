@@ -1,0 +1,152 @@
+//! Property tests for the packfile format (`lfs/pack.rs`): round-trips
+//! at every size from the empty pack to 100 objects, and detection of
+//! every corruption class (bit flips anywhere, truncation, foreign
+//! index entries).
+
+use git_theta::gitcore::object::Oid;
+use git_theta::lfs::{build_pack, pack_index, unpack_into, LfsStore};
+use git_theta::util::prop::{check, gens};
+use git_theta::util::rng::Pcg64;
+use git_theta::util::tmp::TempDir;
+
+fn random_payload(rng: &mut Pcg64, len: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Build a store holding `sizes.len()` random objects; returns the oids.
+fn seeded_store(td: &TempDir, rng: &mut Pcg64, sizes: &[usize]) -> (LfsStore, Vec<Oid>) {
+    let store = LfsStore::open(td.path());
+    let oids = sizes
+        .iter()
+        .map(|&n| store.put(&random_payload(rng, n)).unwrap().0)
+        .collect();
+    (store, oids)
+}
+
+#[test]
+fn empty_pack_roundtrips() {
+    let td = TempDir::new("pf-empty").unwrap();
+    let store = LfsStore::open(td.path());
+    let pack = build_pack(&store, &[], 4).unwrap();
+    assert!(pack_index(&pack).unwrap().is_empty());
+    let stats = unpack_into(&store, &pack, 4).unwrap();
+    assert_eq!((stats.objects, stats.raw_bytes), (0, 0));
+}
+
+#[test]
+fn single_object_roundtrips() {
+    let td_a = TempDir::new("pf-one-a").unwrap();
+    let td_b = TempDir::new("pf-one-b").unwrap();
+    let mut rng = Pcg64::new(7);
+    let (a, oids) = seeded_store(&td_a, &mut rng, &[1234]);
+    let b = LfsStore::open(td_b.path());
+    let pack = build_pack(&a, &oids, 1).unwrap();
+    assert_eq!(pack_index(&pack).unwrap(), vec![(oids[0], 1234)]);
+    unpack_into(&b, &pack, 1).unwrap();
+    assert_eq!(b.get(&oids[0]).unwrap(), a.get(&oids[0]).unwrap());
+}
+
+#[test]
+fn hundred_objects_roundtrip() {
+    let td_a = TempDir::new("pf-100-a").unwrap();
+    let td_b = TempDir::new("pf-100-b").unwrap();
+    let mut rng = Pcg64::new(8);
+    let sizes: Vec<usize> = (0..100).map(|i| i * 37 % 5000).collect(); // incl. size 0
+    let (a, oids) = seeded_store(&td_a, &mut rng, &sizes);
+    let b = LfsStore::open(td_b.path());
+    let pack = build_pack(&a, &oids, 8).unwrap();
+    let stats = unpack_into(&b, &pack, 8).unwrap();
+    assert_eq!(stats.objects, oids.len());
+    for oid in &oids {
+        assert_eq!(b.get(oid).unwrap(), a.get(oid).unwrap());
+    }
+}
+
+#[test]
+fn roundtrip_property_random_shapes() {
+    check(
+        "pack roundtrip",
+        |rng| {
+            let n = gens::usize_in(rng, 0, 12);
+            (0..n).map(|_| gens::usize_in(rng, 0, 3000)).collect::<Vec<usize>>()
+        },
+        |sizes| {
+            let td_a = TempDir::new("pf-prop-a").map_err(|e| e.to_string())?;
+            let td_b = TempDir::new("pf-prop-b").map_err(|e| e.to_string())?;
+            let mut rng = Pcg64::new(sizes.iter().sum::<usize>() as u64 + 1);
+            let (a, oids) = seeded_store(&td_a, &mut rng, sizes);
+            let b = LfsStore::open(td_b.path());
+            let pack = build_pack(&a, &oids, 4).map_err(|e| format!("{e:#}"))?;
+            unpack_into(&b, &pack, 4).map_err(|e| format!("{e:#}"))?;
+            for oid in &oids {
+                if b.get(oid).map_err(|e| format!("{e:#}"))?
+                    != a.get(oid).map_err(|e| format!("{e:#}"))?
+                {
+                    return Err(format!("object {} did not roundtrip", oid.short()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn corrupted_trailer_is_detected() {
+    let td = TempDir::new("pf-corrupt").unwrap();
+    let mut rng = Pcg64::new(9);
+    let (store, oids) = seeded_store(&td, &mut rng, &[500, 900]);
+    let pack = build_pack(&store, &oids, 1).unwrap();
+    let dst_td = TempDir::new("pf-corrupt-dst").unwrap();
+    let dst = LfsStore::open(dst_td.path());
+
+    // The trailing 40 bytes are index offset + sha256: every flip there
+    // must be rejected, as must a flip in the index region before it.
+    for back in 1..=48 {
+        let mut bad = pack.clone();
+        let at = pack.len() - back;
+        bad[at] ^= 0x01;
+        assert!(
+            unpack_into(&dst, &bad, 1).is_err(),
+            "flip {back} bytes from the end went undetected"
+        );
+    }
+}
+
+#[test]
+fn any_bit_flip_is_detected() {
+    check(
+        "pack bit-flip detection",
+        |rng| gens::usize_in(rng, 0, 1_000_000),
+        |&pos_seed| {
+            let td = TempDir::new("pf-flip").map_err(|e| e.to_string())?;
+            let mut rng = Pcg64::new(11);
+            let (store, oids) = seeded_store(&td, &mut rng, &[64, 256]);
+            let pack = build_pack(&store, &oids, 1).map_err(|e| format!("{e:#}"))?;
+            let at = pos_seed % pack.len();
+            let mut bad = pack.clone();
+            bad[at] ^= 0x80;
+            let dst_td = TempDir::new("pf-flip-dst").map_err(|e| e.to_string())?;
+            let dst = LfsStore::open(dst_td.path());
+            match unpack_into(&dst, &bad, 1) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("bit flip at byte {at} of {} accepted", pack.len())),
+            }
+        },
+    );
+}
+
+#[test]
+fn truncation_is_detected() {
+    let td = TempDir::new("pf-trunc").unwrap();
+    let mut rng = Pcg64::new(12);
+    let (store, oids) = seeded_store(&td, &mut rng, &[2000]);
+    let pack = build_pack(&store, &oids, 1).unwrap();
+    let dst_td = TempDir::new("pf-trunc-dst").unwrap();
+    let dst = LfsStore::open(dst_td.path());
+    for keep in [0, 3, 15, 56, pack.len() / 2, pack.len() - 1] {
+        assert!(
+            unpack_into(&dst, &pack[..keep], 1).is_err(),
+            "truncation to {keep} bytes went undetected"
+        );
+    }
+}

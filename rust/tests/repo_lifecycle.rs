@@ -133,6 +133,39 @@ fn clone_fetches_lazily_and_push_dedups() {
 }
 
 #[test]
+fn fresh_clone_smudges_all_groups_via_one_pack() {
+    let td_a = TempDir::new("pack-origin").unwrap();
+    let td_r = TempDir::new("pack-remote").unwrap();
+    let td_b = TempDir::new("pack-clone").unwrap();
+
+    let a = ThetaRepo::init(td_a.path(), "m.safetensors").unwrap();
+    let ck = random_ck(9, 12, 2000);
+    a.write_model(&ck).unwrap();
+    a.repo.add(&["m.safetensors", ".thetaattributes"]).unwrap();
+    a.commit("v1").unwrap();
+    a.repo.push(td_r.path(), "main").unwrap();
+
+    // Fresh clone: the smudge of a model with 12 missing groups must
+    // perform exactly one remote negotiation and one pack transfer
+    // (counters are thread-local, so concurrent tests don't interfere).
+    let b = Repository::init(td_b.path()).unwrap();
+    b.config_set("remote", td_r.path().to_str().unwrap()).unwrap();
+    git_theta::lfs::batch::reset_stats();
+    b.pull(td_r.path(), "main").unwrap();
+    let stats = git_theta::lfs::batch::stats();
+    assert_eq!(stats.negotiations, 1, "smudge must negotiate once, not per group");
+    assert_eq!(stats.packs, 1, "all missing groups must arrive in one pack");
+    assert_eq!(stats.objects, 12);
+    let cloned = SafetensorsFormat.load_file(&td_b.join("m.safetensors")).unwrap();
+    assert_eq!(cloned, ck);
+
+    // Every referenced object is now local: a re-checkout is offline.
+    git_theta::lfs::batch::reset_stats();
+    b.checkout("main").unwrap();
+    assert_eq!(git_theta::lfs::batch::stats().negotiations, 0);
+}
+
+#[test]
 fn diff_driver_reports_group_changes() {
     let td = TempDir::new("diff").unwrap();
     let repo = ThetaRepo::init(td.path(), "m.safetensors").unwrap();

@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Repo gate: formatting, lints on the transfer subsystem, build, tests.
+# Usage: scripts/check.sh   (run from anywhere inside the repository)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+# The paper-reproduction driver supplies the Cargo manifest (it wires
+# the environment-specific `xla` PJRT dependency). Without it the cargo
+# checks cannot run; skip explicitly instead of failing every build.
+if [ ! -f Cargo.toml ]; then
+    echo "::warning::no Cargo.toml at the repo root (driver-supplied manifest absent); cargo checks skipped"
+    echo "note: no Cargo.toml at the repo root (driver-supplied manifest absent);"
+    echo "      skipping cargo-based checks in this environment."
+    exit 0
+fi
+
+echo "==> cargo fmt --check (advisory until the seed-wide format pass lands)"
+cargo fmt --check || echo "warning: formatting drift reported above" >&2
+
+# Clippy warnings are denied in the modules that have had their lint
+# pass (the transfer subsystem and its benchkit harness); the rest of
+# the crate reports but does not fail until the burn-down (ROADMAP.md).
+echo "==> cargo clippy (deny warnings in lfs/ and benchkit/transfer)"
+clippy_out=$(cargo clippy --release --message-format=short 2>&1 || true)
+echo "$clippy_out"
+if echo "$clippy_out" | grep -E 'src/(lfs/|benchkit/transfer)' | grep -q 'warning'; then
+    echo "error: clippy warnings in the transfer subsystem" >&2
+    exit 1
+fi
+if echo "$clippy_out" | grep -q '^error'; then
+    echo "error: clippy failed to compile the crate" >&2
+    exit 1
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> OK"
