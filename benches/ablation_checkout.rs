@@ -1,0 +1,48 @@
+//! Ablation A5: the checkout engine — chain snapshotting, memoized
+//! reconstruction, and in-place chunk decode.
+//!
+//! Smudges a synthetic continually-trained model (dense base + sparse
+//! update commits) with each optimization toggled and reports smudge
+//! wall-clock, peak transient heap, and speedup vs the all-off
+//! baseline — the cost model behind `theta/checkout.rs` and the
+//! in-place decoder in `theta/serialize.rs`. Scale with
+//! `THETA_BENCH_DEPTH` / `THETA_BENCH_GROUPS` / `THETA_BENCH_ELEMS`.
+
+use git_theta::benchkit::checkout::{build_fixture, render_runs, run_ablation};
+use git_theta::util::alloc::TrackingAlloc;
+
+// Install the heap high-water-mark tracker so the peak-alloc column is
+// real numbers instead of n/a.
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let depth = env_usize("THETA_BENCH_DEPTH", 32);
+    let groups = env_usize("THETA_BENCH_GROUPS", 4);
+    let elems = env_usize("THETA_BENCH_ELEMS", 262_144);
+
+    let fixture = build_fixture(groups, elems, depth)?;
+    println!("clean -> smudge identity verified at every depth 1..={depth} (both histories)");
+    let runs = run_ablation(&fixture)?;
+    print!("{}", render_runs(groups, elems, &runs));
+
+    let all_off = &runs[0];
+    let all_on = &runs[4];
+    let fresh_copying = &runs[5];
+    let fresh_in_place = &runs[6];
+    println!(
+        "\nall-on vs all-off at depth {}: {:.2}x smudge speedup; \
+         fresh dense in-place vs copying: {:.2}x",
+        all_off.chain_depth,
+        all_off.smudge_secs / all_on.smudge_secs.max(1e-12),
+        fresh_copying.smudge_secs / fresh_in_place.smudge_secs.max(1e-12),
+    );
+    Ok(())
+}

@@ -1,0 +1,276 @@
+//! Checkout-engine ablation: smudge cost vs chain depth with each
+//! optimization toggled.
+//!
+//! Synthesizes a continually-trained model — a dense base commit
+//! followed by `depth - 1` sparse update commits per parameter group —
+//! twice: once with chain snapshotting disabled (the unbounded chain a
+//! pre-engine repository accumulates) and once with the default
+//! [`DEFAULT_SNAPSHOT_DEPTH`] policy. It then measures smudge
+//! wall-clock and peak transient heap (when the running binary
+//! installed [`util::alloc::TrackingAlloc`](crate::util::alloc)) under
+//! each combination of the engine's three levers:
+//!
+//! * **snapshot** — bounded vs unbounded chain depth,
+//! * **cache** — per-run memoized reconstruction on/off,
+//! * **in-place decode** — scatter decode vs the legacy copying path.
+//!
+//! Every synthesized version is verified to smudge back to the exact
+//! checkpoint that produced it (clean → smudge identity at every
+//! depth), so a config that "wins" by decoding garbage cannot pass.
+
+use super::{render_table, time_n};
+use crate::checkpoint::Checkpoint;
+use crate::lfs::LfsStore;
+use crate::tensor::Tensor;
+use crate::theta::filter::{
+    clean_checkpoint_opts, smudge_metadata_opts, CleanOptions, ObjectAccess,
+};
+use crate::theta::metadata::ModelMetadata;
+use crate::theta::serialize::set_legacy_decode;
+use crate::theta::DEFAULT_SNAPSHOT_DEPTH;
+use crate::util::rng::Pcg64;
+use crate::util::tmp::TempDir;
+use crate::util::{alloc, humansize, par};
+use anyhow::{ensure, Result};
+
+/// One measured smudge configuration.
+#[derive(Debug, Clone)]
+pub struct CheckoutRun {
+    /// Which levers were on.
+    pub label: &'static str,
+    /// Chain depth of the deepest group in the smudged metadata.
+    pub chain_depth: usize,
+    /// Mean smudge wall-clock seconds.
+    pub smudge_secs: f64,
+    /// Peak transient heap of one smudge, when the binary tracks it.
+    pub peak_bytes: Option<usize>,
+}
+
+/// The two synthesized histories plus the checkpoint they both encode.
+pub struct ChainFixture {
+    /// Object store backing both histories (content-addressed, shared).
+    pub access: ObjectAccess,
+    /// Final metadata with snapshotting disabled (full-depth chains).
+    pub deep: ModelMetadata,
+    /// Final metadata under the default snapshot policy.
+    pub snapshotted: ModelMetadata,
+    /// The checkpoint every final metadata must smudge back to.
+    pub final_ck: Checkpoint,
+    /// Keeps the store directory alive for the fixture's lifetime.
+    _dir: TempDir,
+}
+
+/// Synthesize `depth` versions of a `groups`×`elems` model and clean
+/// them through both snapshot policies, verifying clean → smudge
+/// identity at every intermediate depth.
+pub fn build_fixture(groups: usize, elems: usize, depth: usize) -> Result<ChainFixture> {
+    let dir = TempDir::new("bench-checkout")?;
+    let access = ObjectAccess {
+        store: LfsStore::open(dir.path()),
+        remote: None,
+    };
+    let threads = par::default_threads();
+    let mut rng = Pcg64::new(0xC0DE);
+    let mut ck = Checkpoint::new();
+    for g in 0..groups {
+        let vals: Vec<f32> = (0..elems).map(|_| (rng.next_f32() - 0.5) * 0.2).collect();
+        ck.insert(format!("block{g}/w"), Tensor::from_f32(vec![elems], vals)?);
+    }
+
+    let deep_opts = CleanOptions {
+        snapshot_depth: None,
+        threads,
+        ..Default::default()
+    };
+    let snap_opts = CleanOptions {
+        snapshot_depth: Some(DEFAULT_SNAPSHOT_DEPTH),
+        threads,
+        ..Default::default()
+    };
+    let mut deep = clean_checkpoint_opts(&access, &ck, "native", None, &deep_opts)?;
+    let mut snapshotted = clean_checkpoint_opts(&access, &ck, "native", None, &snap_opts)?;
+
+    for v in 1..depth {
+        // Touch ~1/64 of each group's elements: comfortably sparse, so
+        // every version appends one incremental link.
+        for g in 0..groups {
+            let name = format!("block{g}/w");
+            let mut vals = ck.get(&name).unwrap().to_f32_vec()?;
+            for k in 0..(elems / 64).max(1) {
+                let at = (v * 31 + k * 97 + g * 13) % elems;
+                vals[at] = (rng.next_f32() - 0.5) * 0.2;
+            }
+            ck.insert(name, Tensor::from_f32(vec![elems], vals)?);
+        }
+        deep = clean_checkpoint_opts(&access, &ck, "native", Some(&deep), &deep_opts)?;
+        snapshotted =
+            clean_checkpoint_opts(&access, &ck, "native", Some(&snapshotted), &snap_opts)?;
+
+        // Identity must hold at every depth, for both histories.
+        ensure!(
+            smudge_metadata_opts(&access, &deep, threads, true)? == ck,
+            "deep history diverged at depth {}",
+            v + 1
+        );
+        ensure!(
+            smudge_metadata_opts(&access, &snapshotted, threads, true)? == ck,
+            "snapshotted history diverged at depth {}",
+            v + 1
+        );
+    }
+    Ok(ChainFixture {
+        access,
+        deep,
+        snapshotted,
+        final_ck: ck,
+        _dir: dir,
+    })
+}
+
+fn max_depth(meta: &ModelMetadata) -> usize {
+    meta.groups.values().map(|g| g.chain_depth()).max().unwrap_or(0)
+}
+
+/// Measure one configuration: `warmup + samples` timed smudges plus one
+/// allocation-tracked smudge.
+fn measure(
+    label: &'static str,
+    access: &ObjectAccess,
+    meta: &ModelMetadata,
+    expect: &Checkpoint,
+    cache: bool,
+    legacy_decode: bool,
+) -> Result<CheckoutRun> {
+    let threads = par::default_threads();
+    set_legacy_decode(legacy_decode);
+    let result = (|| -> Result<CheckoutRun> {
+        ensure!(
+            smudge_metadata_opts(access, meta, threads, cache)? == *expect,
+            "config '{label}' smudged a different checkpoint"
+        );
+        let stats = time_n(1, 3, || {
+            smudge_metadata_opts(access, meta, threads, cache).map(|_| ())
+        })?;
+        let peak_bytes = if alloc::active() {
+            let base = alloc::reset_peak();
+            smudge_metadata_opts(access, meta, threads, cache)?;
+            Some(alloc::peak_bytes().saturating_sub(base))
+        } else {
+            None
+        };
+        Ok(CheckoutRun {
+            label,
+            chain_depth: max_depth(meta),
+            smudge_secs: stats.mean(),
+            peak_bytes,
+        })
+    })();
+    set_legacy_decode(false);
+    result
+}
+
+/// Run the full ablation over a prepared fixture.
+///
+/// Row order: all-off, +snapshot, +cache, +in-place, all-on, then the
+/// fresh-dense (depth-1) regression pair. The all-on/all-off ratio is
+/// the headline speedup; the fresh-dense pair guards against the
+/// in-place decoder regressing the cold-checkout path.
+pub fn run_ablation(fixture: &ChainFixture) -> Result<Vec<CheckoutRun>> {
+    let acc = &fixture.access;
+    let ck = &fixture.final_ck;
+    let mut runs = vec![
+        measure("all off", acc, &fixture.deep, ck, false, true)?,
+        measure("+snapshot", acc, &fixture.snapshotted, ck, false, true)?,
+        measure("+cache", acc, &fixture.deep, ck, true, true)?,
+        measure("+in-place decode", acc, &fixture.deep, ck, false, false)?,
+        measure("all on", acc, &fixture.snapshotted, ck, true, false)?,
+    ];
+
+    // Fresh dense model (depth 1): the engine must not regress the
+    // cold-checkout path that has no chains to optimize.
+    let threads = par::default_threads();
+    let dense = clean_checkpoint_opts(
+        acc,
+        ck,
+        "native",
+        None,
+        &CleanOptions {
+            threads,
+            ..Default::default()
+        },
+    )?;
+    // Same cache setting on both rows: this pair isolates the decode
+    // path, nothing else.
+    runs.push(measure("fresh dense, copying", acc, &dense, ck, false, true)?);
+    runs.push(measure("fresh dense, in-place", acc, &dense, ck, false, false)?);
+    Ok(runs)
+}
+
+/// Render the ablation as a paper-style table.
+pub fn render_runs(groups: usize, elems: usize, runs: &[CheckoutRun]) -> String {
+    let baseline = runs.first().map(|r| r.smudge_secs).unwrap_or(0.0);
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.to_string(),
+                r.chain_depth.to_string(),
+                humansize::duration(r.smudge_secs),
+                match r.peak_bytes {
+                    Some(b) => humansize::bytes(b as u64),
+                    None => "n/a".to_string(),
+                },
+                format!("{:.2}x", baseline / r.smudge_secs.max(1e-12)),
+            ]
+        })
+        .collect();
+    format!(
+        "Checkout ablation: {groups} groups x {elems} f32 elems\n{}",
+        render_table(
+            &["Engine config", "Depth", "Smudge", "Peak alloc", "Speedup"],
+            &rows,
+        )
+    )
+}
+
+/// `git-theta bench checkout [depth] [groups] [elems]` entry point.
+pub fn run_checkout_cli(args: &[String]) -> Result<()> {
+    let depth = args.first().and_then(|s| s.parse().ok()).unwrap_or(32usize);
+    let groups = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4usize);
+    let elems = args
+        .get(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(262_144usize);
+    let fixture = build_fixture(groups, elems, depth)?;
+    println!("clean -> smudge identity verified at every depth 1..={depth} (both histories)");
+    let runs = run_ablation(&fixture)?;
+    print!("{}", render_runs(groups, elems, &runs));
+    if !alloc::active() {
+        println!("note: peak-alloc tracking inactive (this binary did not install TrackingAlloc)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_small_model_end_to_end() {
+        // Small but deep: exercises snapshotting (> default threshold),
+        // both decode paths, and identity verification at every depth.
+        let fixture = build_fixture(2, 2048, 12).unwrap();
+        assert_eq!(max_depth(&fixture.deep), 12);
+        assert!(max_depth(&fixture.snapshotted) <= DEFAULT_SNAPSHOT_DEPTH);
+        let runs = run_ablation(&fixture).unwrap();
+        assert_eq!(runs.len(), 7);
+        // Depth column: deep rows at 12, snapshotted bounded, dense at 1.
+        assert_eq!(runs[0].chain_depth, 12);
+        assert!(runs[1].chain_depth <= DEFAULT_SNAPSHOT_DEPTH);
+        assert_eq!(runs[5].chain_depth, 1);
+        assert_eq!(runs[6].chain_depth, 1);
+        let table = render_runs(2, 2048, &runs);
+        assert!(table.contains("all on"));
+        assert!(table.contains("fresh dense, in-place"));
+    }
+}

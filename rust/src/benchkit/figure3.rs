@@ -131,7 +131,9 @@ pub fn render_figure3(r: &Fig3Result) -> String {
     }
     let mut out = super::render_table(&["Commit", "CB acc", "RTE acc", "ANLI acc"], &rows);
     let by = |label: &str| r.points.iter().find(|p| p.commit_label == label);
-    if let (Some(anli), Some(merged), Some(rte)) = (by("anli-main"), by("merged"), by("rte-branch")) {
+    if let (Some(anli), Some(merged), Some(rte)) =
+        (by("anli-main"), by("merged"), by("rte-branch"))
+    {
         out.push_str(&format!(
             "\nmerge effect on RTE: anli-only {:.3} -> merged {:.3} (rte-branch {:.3})\n",
             anli.rte, merged.rte, rte.rte

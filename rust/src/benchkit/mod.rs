@@ -5,6 +5,7 @@
 //! workflow (§4) over both Git LFS and Git-Theta; `benches/*.rs` are
 //! thin `harness = false` wrappers that print each paper table/figure.
 
+pub mod checkout;
 pub mod figure3;
 pub mod transfer;
 pub mod workflow;
@@ -105,9 +106,11 @@ pub fn cli_bench(args: &[String]) -> Result<()> {
         "figure2" => workflow::run_figure2_cli(&args[1..]),
         "figure3" => figure3::run_figure3_cli(&args[1..]),
         "transfer" => transfer::run_transfer_cli(&args[1..]),
+        "checkout" => checkout::run_checkout_cli(&args[1..]),
         _ => {
             println!(
-                "benchmarks: table1, figure2, figure3, transfer (full set lives in `cargo bench`)\n\
+                "benchmarks: table1, figure2, figure3, transfer, checkout (full set lives in \
+                 `cargo bench`)\n\
                  env: THETA_BENCH_PARAMS=<millions> scales the model"
             );
             Ok(())

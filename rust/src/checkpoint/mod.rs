@@ -15,7 +15,9 @@ mod safetensors;
 
 pub use native::NativeFormat;
 pub use npz::NpzFormat;
-pub use registry::{detect_format, format_by_name, register_format, registered_formats, CheckpointFormat};
+pub use registry::{
+    detect_format, format_by_name, register_format, registered_formats, CheckpointFormat,
+};
 pub use safetensors::SafetensorsFormat;
 
 use crate::tensor::Tensor;

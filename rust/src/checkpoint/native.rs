@@ -50,8 +50,8 @@ impl CheckpointFormat for NativeFormat {
                 .get("dtype")
                 .and_then(|v| v.as_str())
                 .with_context(|| format!("native: tensor '{name}' missing dtype"))?;
-            let dtype =
-                DType::parse(dtype_name).with_context(|| format!("native: bad dtype '{dtype_name}'"))?;
+            let dtype = DType::parse(dtype_name)
+                .with_context(|| format!("native: bad dtype '{dtype_name}'"))?;
             let shape: Vec<usize> = entry
                 .get("shape")
                 .and_then(|v| v.as_arr())

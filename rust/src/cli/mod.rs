@@ -54,6 +54,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "pull" => cmd_pull(rest),
         "clone" => cmd_clone(rest),
         "config" => cmd_config(rest),
+        "snapshot" => cmd_snapshot(rest),
         "fsck" => cmd_fsck(rest),
         "bench" => crate::benchkit::cli_bench(rest),
         "help" | "--help" | "-h" => {
@@ -88,7 +89,10 @@ COMMANDS:
   fetch <remote-dir> [branch]    fetch commits + prefetch model objects as one pack
   pull <remote-dir> [branch]     pull commits + metadata
   clone <remote-dir> <dir>       clone a remote
-  config <key> [<value>]         get/set repo config (e.g. remote)
+  config <key> [<value>]         get/set repo config (e.g. remote,
+                                 theta.snapshot-depth)
+  snapshot <path...>             re-anchor tracked models as dense entries
+                                 (bounds checkout chain depth; then commit)
   fsck                           verify object stores
   bench <name>                   run paper benchmarks (see `bench help`)"
 }
@@ -175,7 +179,11 @@ fn cmd_status(_args: &[String]) -> Result<()> {
 fn cmd_log(_args: &[String]) -> Result<()> {
     let repo = open_repo()?;
     for (oid, commit) in repo.log()? {
-        let merge = if commit.parents.len() > 1 { " (merge)" } else { "" };
+        let merge = if commit.parents.len() > 1 {
+            " (merge)"
+        } else {
+            ""
+        };
         println!("commit {}{merge}", oid.short());
         println!("  author: {}", commit.author);
         println!("  {}", commit.message.lines().next().unwrap_or(""));
@@ -287,7 +295,8 @@ fn cmd_push(args: &[String]) -> Result<()> {
             other => bail!("unexpected push argument '{other}'"),
         }
     }
-    let remote = remote.context("usage: git-theta push <remote-dir> [branch] [--pack|--per-object]")?;
+    let remote =
+        remote.context("usage: git-theta push <remote-dir> [branch] [--pack|--per-object]")?;
     let branch = branch.unwrap_or("main");
     // The engine override is process-global; set it only once argument
     // parsing has succeeded, and scope it to exactly this push.
@@ -398,6 +407,61 @@ fn cmd_config(args: &[String]) -> Result<()> {
             repo.config_set(key, value)?;
         }
         _ => bail!("usage: git-theta config <key> [<value>]"),
+    }
+    Ok(())
+}
+
+fn cmd_snapshot(args: &[String]) -> Result<()> {
+    if args.is_empty() {
+        bail!("usage: git-theta snapshot <path...>");
+    }
+    let repo = open_repo()?;
+    let access = crate::theta::ObjectAccess::for_repo(&repo)?;
+    for path in args {
+        let staged = repo
+            .prior_staged(path)?
+            .with_context(|| format!("'{path}' has no staged or committed version"))?;
+        if !crate::theta::ModelMetadata::is_metadata(&staged) {
+            bail!("'{path}' is not a git-theta tracked model (no metadata)");
+        }
+        let meta = crate::theta::ModelMetadata::from_bytes(&staged)
+            .with_context(|| format!("parsing metadata of '{path}'"))?;
+        let (snap, report) = crate::theta::snapshot_metadata(
+            &access,
+            &meta,
+            crate::util::par::default_threads(),
+        )?;
+        if report.reanchored == 0 {
+            println!("'{path}': all {} group(s) already dense", report.groups);
+            continue;
+        }
+        // The smudged bytes are unchanged by construction, so the
+        // index's raw (working tree) hash stays valid. With no index
+        // entry (path known only to HEAD), derive the raw hash from
+        // the snapshot's own smudge output — never from the working
+        // file, whose uncommitted edits must keep showing as Modified
+        // in status.
+        let index = crate::gitcore::index::Index::load(repo.theta_dir())?;
+        let raw = match index.get(path) {
+            Some(entry) => entry.raw,
+            None => {
+                let fmt = crate::checkpoint::format_by_name(&snap.format).with_context(|| {
+                    format!("checkpoint format '{}' not registered", snap.format)
+                })?;
+                let ck = crate::theta::smudge_metadata(
+                    &access,
+                    &snap,
+                    crate::util::par::default_threads(),
+                )?;
+                crate::gitcore::object::Oid::of_bytes(&fmt.save_bytes(&ck)?)
+            }
+        };
+        repo.add_staged_bytes(path, snap.to_bytes(), raw)?;
+        println!(
+            "'{path}': re-anchored {}/{} group(s), max chain depth {} -> 1; staged \
+             (commit to finish)",
+            report.reanchored, report.groups, report.max_depth_before
+        );
     }
     Ok(())
 }

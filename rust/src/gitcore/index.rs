@@ -150,7 +150,9 @@ mod tests {
         idx.stage("b", Oid::of_bytes(b"2"), 2, Oid::of_bytes(b"2"));
         assert!(idx.unstage("a").is_some());
         assert!(idx.get("a").is_none());
-        idx.reset_to(vec![("c".to_string(), Oid::of_bytes(b"3"), 3u64, Oid::of_bytes(b"3"))].into_iter());
+        idx.reset_to(
+            vec![("c".to_string(), Oid::of_bytes(b"3"), 3u64, Oid::of_bytes(b"3"))].into_iter(),
+        );
         assert_eq!(idx.len(), 1);
         assert!(idx.get("c").is_some());
     }

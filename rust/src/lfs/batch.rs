@@ -162,7 +162,12 @@ impl Prefetcher {
     /// as a pack. Oids the remote lacks are reported as `unavailable`
     /// rather than failing the whole transfer — the caller decides
     /// whether an absent object is fatal.
-    pub fn fetch(&self, remote: &LfsRemote, local: &LfsStore, want: &[Oid]) -> Result<TransferSummary> {
+    pub fn fetch(
+        &self,
+        remote: &LfsRemote,
+        local: &LfsStore,
+        want: &[Oid],
+    ) -> Result<TransferSummary> {
         let mut need: Vec<Oid> = want.iter().filter(|o| !local.contains(o)).copied().collect();
         need.sort();
         need.dedup();
@@ -177,7 +182,12 @@ impl Prefetcher {
     ///
     /// Negotiates once; only objects the remote is missing *and* the
     /// local store holds are packed and sent.
-    pub fn push(&self, local: &LfsStore, remote: &LfsRemote, oids: &[Oid]) -> Result<TransferSummary> {
+    pub fn push(
+        &self,
+        local: &LfsStore,
+        remote: &LfsRemote,
+        oids: &[Oid],
+    ) -> Result<TransferSummary> {
         let mut want = oids.to_vec();
         want.sort();
         want.dedup();
@@ -249,7 +259,8 @@ impl Prefetcher {
         for &oid in oids {
             let size = src.size_of(&oid).unwrap_or(0);
             if !cur.is_empty()
-                && (cur.len() >= max_objects || cur_bytes.saturating_add(size) > self.max_pack_bytes)
+                && (cur.len() >= max_objects
+                    || cur_bytes.saturating_add(size) > self.max_pack_bytes)
             {
                 shards.push(std::mem::take(&mut cur));
                 cur_bytes = 0;

@@ -27,6 +27,7 @@ use crate::gitcore::object::Oid;
 use crate::util::par;
 use anyhow::{bail, Context, Result};
 use sha2::{Digest, Sha256};
+use std::cell::RefCell;
 use std::io::Read;
 
 /// First four bytes of every pack.
@@ -68,15 +69,24 @@ pub fn build_pack(store: &LfsStore, oids: &[Oid], threads: usize) -> Result<Vec<
     unique.sort();
     unique.dedup();
 
+    thread_local! {
+        // Per-worker read buffer recycled across objects: with
+        // `LfsStore::get_to` this drops one allocation + full copy per
+        // object from the pack-assembly fan-in.
+        static READ_SCRATCH: RefCell<Vec<u8>> = RefCell::new(Vec::new());
+    }
     let blobs = par::try_par_map(&unique, threads, |_, oid| -> Result<(u64, Vec<u8>)> {
-        let raw = store
-            .get(oid)
-            .with_context(|| format!("packing object {}", oid.short()))?;
-        if raw.len() as u64 > MAX_OBJECT_BYTES {
-            bail!("object {} exceeds the pack format's size limit", oid.short());
-        }
-        let comp = zstd::bulk::compress(&raw, PACK_ZSTD_LEVEL).context("pack compress")?;
-        Ok((raw.len() as u64, comp))
+        READ_SCRATCH.with(|buf| {
+            let mut raw = buf.borrow_mut();
+            store
+                .get_to(oid, &mut raw)
+                .with_context(|| format!("packing object {}", oid.short()))?;
+            if raw.len() as u64 > MAX_OBJECT_BYTES {
+                bail!("object {} exceeds the pack format's size limit", oid.short());
+            }
+            let comp = zstd::bulk::compress(&raw, PACK_ZSTD_LEVEL).context("pack compress")?;
+            Ok((raw.len() as u64, comp))
+        })
     })?;
 
     let body: usize = blobs

@@ -66,13 +66,33 @@ impl LfsStore {
 
     /// Retrieve a blob, verifying its hash.
     pub fn get(&self, oid: &Oid) -> Result<Vec<u8>> {
+        let mut bytes = Vec::new();
+        self.get_to(oid, &mut bytes)?;
+        Ok(bytes)
+    }
+
+    /// Retrieve a blob into a caller-provided buffer (cleared first),
+    /// verifying its hash.
+    ///
+    /// Reuses the buffer's capacity, so bulk readers — the pack
+    /// assembler fanning hundreds of update objects into one pack —
+    /// avoid a heap allocation and its copy per object by recycling one
+    /// scratch buffer per worker.
+    pub fn get_to(&self, oid: &Oid, out: &mut Vec<u8>) -> Result<()> {
+        use std::io::Read;
         let path = self.path_for(oid);
-        let bytes = std::fs::read(&path)
+        out.clear();
+        let mut f = std::fs::File::open(&path)
             .with_context(|| format!("lfs object {} not found locally", oid.short()))?;
-        if Oid::of_bytes(&bytes) != *oid {
+        if let Ok(meta) = f.metadata() {
+            out.reserve(meta.len() as usize);
+        }
+        f.read_to_end(out)
+            .with_context(|| format!("reading lfs object {}", oid.short()))?;
+        if Oid::of_bytes(out) != *oid {
             bail!("lfs object {} is corrupt on disk", oid.short());
         }
-        Ok(bytes)
+        Ok(())
     }
 
     /// Copy an object from another store (no-op if present). Returns
@@ -151,6 +171,25 @@ mod tests {
         let (oid, _) = store.put(b"data").unwrap();
         std::fs::write(store.path_for(&oid), b"tampered").unwrap();
         assert!(store.get(&oid).is_err());
+        let mut buf = Vec::new();
+        assert!(store.get_to(&oid, &mut buf).is_err());
+    }
+
+    #[test]
+    fn get_to_reuses_buffer() {
+        let td = TempDir::new("lfs").unwrap();
+        let store = LfsStore::open(td.path());
+        let (big, _) = store.put(&vec![7u8; 4096]).unwrap();
+        let (small, _) = store.put(b"tiny").unwrap();
+        let mut buf = Vec::new();
+        store.get_to(&big, &mut buf).unwrap();
+        assert_eq!(buf.len(), 4096);
+        let cap = buf.capacity();
+        store.get_to(&small, &mut buf).unwrap();
+        assert_eq!(buf, b"tiny");
+        assert_eq!(buf.capacity(), cap, "capacity must be recycled");
+        // Missing objects error without clobbering semantics.
+        assert!(store.get_to(&Oid::of_bytes(b"ghost"), &mut buf).is_err());
     }
 
     #[test]

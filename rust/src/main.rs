@@ -1,3 +1,8 @@
+// Heap high-water-mark tracking (two relaxed atomics per allocation):
+// lets `git-theta bench checkout` report real peak-allocation numbers.
+#[global_allocator]
+static ALLOC: git_theta::util::alloc::TrackingAlloc = git_theta::util::alloc::TrackingAlloc;
+
 fn main() {
     git_theta::init();
     std::process::exit(git_theta::cli::run());

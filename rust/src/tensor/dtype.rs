@@ -140,7 +140,11 @@ pub fn f32_to_f16(v: f32) -> u16 {
 
     if exp == 0xff {
         // Inf / NaN
-        let nan = if frac != 0 { 0x200 | (frac >> 13) as u16 & 0x3ff | 1 } else { 0 };
+        let nan = if frac != 0 {
+            0x200 | (frac >> 13) as u16 & 0x3ff | 1
+        } else {
+            0
+        };
         return (sign << 15) | (0x1f << 10) | nan;
     }
     let unbiased = exp - 127;

@@ -43,7 +43,11 @@ impl std::fmt::Debug for Tensor {
 
 impl Tensor {
     /// Construct from raw little-endian bytes.
-    pub fn from_bytes(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Tensor, TensorError> {
+    pub fn from_bytes(
+        dtype: DType,
+        shape: Vec<usize>,
+        data: Vec<u8>,
+    ) -> Result<Tensor, TensorError> {
         let want = shape.iter().product::<usize>() * dtype.size();
         if data.len() != want {
             return Err(TensorError::LengthMismatch {
@@ -202,7 +206,11 @@ impl Tensor {
     }
 
     /// Re-encode f32 values into this dtype (float dtypes only).
-    pub fn from_f32_as(dtype: DType, shape: Vec<usize>, values: &[f32]) -> Result<Tensor, TensorError> {
+    pub fn from_f32_as(
+        dtype: DType,
+        shape: Vec<usize>,
+        values: &[f32],
+    ) -> Result<Tensor, TensorError> {
         let mut data = Vec::with_capacity(values.len() * dtype.size());
         match dtype {
             DType::F32 => {

@@ -1,0 +1,412 @@
+//! The checkout/commit compute engine: bounded-depth chains and
+//! memoized reconstruction.
+//!
+//! The paper's smudge filter "resolves each group's update chain and
+//! reconstructs full parameter values" (§3.2). Left unchecked, a
+//! continually-trained model grows one incremental link per commit, so
+//! checkout cost climbs linearly with training progress and the total
+//! work over a run is quadratic. This module bounds and de-duplicates
+//! that work:
+//!
+//! * **Chain snapshotting** — when a changed group's chain would exceed
+//!   [`DEFAULT_SNAPSHOT_DEPTH`] (configurable via the
+//!   `theta.snapshot-depth` repo config key), the clean filter stores
+//!   the group densely instead of incrementally, re-anchoring the chain.
+//!   The full tensor is already in memory at clean time, so the
+//!   re-anchor costs one dense serialization and no reconstruction.
+//!   [`snapshot_metadata`] applies the same re-anchoring to an existing
+//!   model (the `git-theta snapshot` command).
+//! * **Memoized reconstruction** ([`ReconstructionCache`]) — a per-run
+//!   cache keyed by [`GroupMetadata::chain_key`], the content hash of
+//!   an entry and its embedded base chain. Reconstruction is a pure
+//!   function of exactly that content, so equal keys are guaranteed to
+//!   mean equal tensors. `NeedsExactCheck` probes, incremental-update
+//!   inference in the clean filter, and merge drivers resolving both
+//!   sides of a common chain reuse each prefix instead of recomputing
+//!   it.
+//!
+//! Unchanged groups are never re-anchored by the clean filter: their
+//! metadata entries must carry forward byte-identically or every commit
+//! would look fully changed (see docs/ARCHITECTURE.md, "Metadata-file
+//! stability"). A chain written under a higher (or disabled) threshold
+//! therefore keeps its depth until the group changes again or
+//! `git-theta snapshot` is run.
+
+use crate::gitcore::object::Oid;
+use crate::gitcore::repo::Repository;
+use crate::tensor::Tensor;
+use crate::theta::filter::{store_payload, ObjectAccess};
+use crate::theta::metadata::{GroupMetadata, ModelMetadata};
+use crate::theta::serialize::deserialize_combined;
+use crate::theta::updates::{update_type, UpdatePayload};
+use crate::util::par;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Chain depth past which the clean filter re-anchors a changed group
+/// as a dense entry. Override per repository with
+/// `git-theta config theta.snapshot-depth <n|off>`.
+pub const DEFAULT_SNAPSHOT_DEPTH: usize = 8;
+
+/// Repo config key holding the snapshot depth threshold.
+pub const SNAPSHOT_DEPTH_KEY: &str = "theta.snapshot-depth";
+
+/// Parse a `theta.snapshot-depth` config value: a positive integer, or
+/// `off`/`none`/`0` to disable automatic snapshotting.
+pub fn parse_snapshot_depth(value: &str) -> Result<Option<usize>> {
+    match value.trim() {
+        "off" | "none" | "0" => Ok(None),
+        s => {
+            let n: usize = s
+                .parse()
+                .with_context(|| format!("bad {SNAPSHOT_DEPTH_KEY} value '{s}'"))?;
+            Ok(Some(n))
+        }
+    }
+}
+
+/// The repository's snapshot-depth setting (default
+/// [`DEFAULT_SNAPSHOT_DEPTH`]; `None` means snapshotting is off).
+pub fn snapshot_depth_config(repo: &Repository) -> Result<Option<usize>> {
+    match repo.config_get(SNAPSHOT_DEPTH_KEY)? {
+        Some(v) => parse_snapshot_depth(&v),
+        None => Ok(Some(DEFAULT_SNAPSHOT_DEPTH)),
+    }
+}
+
+/// Per-run memoized reconstruction cache.
+///
+/// Maps [`GroupMetadata::chain_key`] → reconstructed tensor for every
+/// *prefix* of a chain (the values below the entry being resolved).
+/// Final chain values are returned owned and not cached: they are
+/// unique to their group, so caching them would only add a copy.
+///
+/// The cache is `Sync` (a mutex-guarded map plus relaxed counters) and
+/// is shared across the parallel per-group workers of one run. It is
+/// wired in only where a chain can genuinely be resolved more than
+/// once per run — the clean filter's `NeedsExactCheck` probes and
+/// incremental inference — and is an explicit opt-in elsewhere
+/// ([`smudge_metadata_opts`](crate::theta::filter::smudge_metadata_opts)):
+/// entries pin full tensors until the run ends, so enabling it on a
+/// path with no re-resolution costs up to chain-depth × model size of
+/// heap for zero hits. It is intentionally scoped to a run, never the
+/// process, for the same reason.
+pub struct ReconstructionCache {
+    entries: Mutex<HashMap<Oid, Arc<Tensor>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Default for ReconstructionCache {
+    fn default() -> ReconstructionCache {
+        ReconstructionCache::new()
+    }
+}
+
+impl ReconstructionCache {
+    /// An empty cache.
+    pub fn new() -> ReconstructionCache {
+        ReconstructionCache {
+            entries: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    fn lookup(&self, key: &Oid) -> Option<Arc<Tensor>> {
+        let hit = self.entries.lock().unwrap().get(key).cloned();
+        match &hit {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    fn insert(&self, key: Oid, value: Arc<Tensor>) {
+        let mut map = self.entries.lock().unwrap();
+        if map.insert(key, value.clone()).is_none() {
+            self.bytes.fetch_add(value.nbytes() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Lookups answered from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to reconstruct.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total tensor bytes currently held by the cache.
+    pub fn cached_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// Apply one chain entry on top of an already-reconstructed base.
+fn apply_entry(
+    access: &ObjectAccess,
+    entry: &GroupMetadata,
+    prev: Option<&Tensor>,
+) -> Result<Tensor> {
+    let tensors = match entry.update.objects.get("data") {
+        Some(obj) => deserialize_combined(&access.fetch(obj)?)?,
+        None => Default::default(),
+    };
+    let payload = UpdatePayload {
+        kind: entry.update.kind.clone(),
+        tensors,
+        extra: entry.update.extra.clone(),
+    };
+    let u = update_type(&entry.update.kind)
+        .with_context(|| format!("unknown update type '{}'", entry.update.kind))?;
+    u.apply(&payload, prev)
+}
+
+/// Reconstruct a chain prefix, memoized in `cache` when provided.
+fn reconstruct_prefix(
+    access: &ObjectAccess,
+    entry: &GroupMetadata,
+    cache: Option<&ReconstructionCache>,
+) -> Result<Arc<Tensor>> {
+    let key = cache.map(|_| entry.chain_key());
+    if let (Some(c), Some(k)) = (cache, &key) {
+        if let Some(t) = c.lookup(k) {
+            return Ok(t);
+        }
+    }
+    let prev = match &entry.prev {
+        Some(p) => Some(reconstruct_prefix(access, p, cache)?),
+        None => None,
+    };
+    let t = Arc::new(apply_entry(access, entry, prev.as_deref())?);
+    if let (Some(c), Some(k)) = (cache, key) {
+        c.insert(k, t.clone());
+    }
+    Ok(t)
+}
+
+/// Reconstruct a group's full values from its metadata entry, resolving
+/// the incremental chain (paper §3.2 "Checking Out a Model").
+///
+/// With a cache, every chain *prefix* is looked up by content hash
+/// before being recomputed, so callers resolving overlapping chains —
+/// a `NeedsExactCheck` probe followed by incremental inference, the two
+/// sides of a merge, repeated smudges in one process — pay for each
+/// prefix once. Without a cache this is the plain linear resolution.
+pub fn reconstruct(
+    access: &ObjectAccess,
+    entry: &GroupMetadata,
+    cache: Option<&ReconstructionCache>,
+) -> Result<Tensor> {
+    let prev = match &entry.prev {
+        Some(p) => Some(reconstruct_prefix(access, p, cache)?),
+        None => None,
+    };
+    apply_entry(access, entry, prev.as_deref())
+}
+
+/// What [`snapshot_metadata`] did to a model.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SnapshotReport {
+    /// Parameter groups in the model.
+    pub groups: usize,
+    /// Groups re-anchored as fresh dense entries.
+    pub reanchored: usize,
+    /// Deepest chain before re-anchoring.
+    pub max_depth_before: usize,
+}
+
+/// Re-anchor every chained group of `meta` as a dense entry.
+///
+/// Each group with `chain_depth() > 1` (or a non-dense terminal entry)
+/// is reconstructed once and stored densely, resetting its chain depth
+/// to 1. Reconstruction is uncached: every chain resolves exactly once
+/// here, so memoization would only pin each intermediate tensor until
+/// the whole model is done. Tensor values are untouched, so the smudge
+/// output of the returned metadata is byte-for-byte identical to the
+/// input's, and the stored LSH signatures remain valid for future
+/// change detection.
+pub fn snapshot_metadata(
+    access: &ObjectAccess,
+    meta: &ModelMetadata,
+    threads: usize,
+) -> Result<(ModelMetadata, SnapshotReport)> {
+    access.prefetch(&meta.all_oids())?;
+    let groups: Vec<(&String, &GroupMetadata)> = meta.groups.iter().collect();
+    let entries = par::try_par_map(&groups, threads, |_, (name, entry)| {
+        snapshot_group(access, entry)
+            .with_context(|| format!("snapshotting parameter group '{name}'"))
+    })?;
+
+    let mut out = ModelMetadata::new(meta.format.clone());
+    let mut report = SnapshotReport {
+        groups: groups.len(),
+        ..Default::default()
+    };
+    for ((name, old), (entry, reanchored)) in groups.iter().zip(entries) {
+        report.max_depth_before = report.max_depth_before.max(old.chain_depth());
+        if reanchored {
+            report.reanchored += 1;
+        }
+        out.groups.insert((*name).clone(), entry);
+    }
+    Ok((out, report))
+}
+
+fn snapshot_group(access: &ObjectAccess, entry: &GroupMetadata) -> Result<(GroupMetadata, bool)> {
+    let already_dense = entry.prev.is_none()
+        && update_type(&entry.update.kind).map_or(false, |u| !u.requires_prev());
+    if already_dense {
+        // Keep the entry (and its oids) byte-identical: a no-op
+        // snapshot must not make the group look changed to Git.
+        return Ok((entry.clone(), false));
+    }
+    let full = reconstruct(access, entry, None)?;
+    let dense = update_type("dense")
+        .context("dense update type not registered")?
+        .infer(None, &full)?
+        .context("dense update cannot represent tensor")?;
+    let new_entry = store_payload(access, &full, entry.tensor.lsh.clone(), dense, None)?;
+    Ok((new_entry, true))
+}
+
+/// Decide whether a changed group's prospective chain must be
+/// re-anchored: true when appending one incremental link on top of
+/// `prior` would push the depth past `limit`.
+pub fn should_snapshot(prior: &GroupMetadata, limit: Option<usize>) -> bool {
+    match limit {
+        Some(limit) => prior.chain_depth() + 1 > limit,
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::lfs::LfsStore;
+    use crate::theta::filter::{clean_checkpoint, smudge_metadata};
+    use crate::util::rng::Pcg64;
+    use crate::util::tmp::TempDir;
+
+    fn access(td: &TempDir) -> ObjectAccess {
+        ObjectAccess {
+            store: LfsStore::open(td.path()),
+            remote: None,
+        }
+    }
+
+    fn random_ck(seed: u64, n: usize) -> Checkpoint {
+        let mut rng = Pcg64::new(seed);
+        let vals: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 0.2).collect();
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![n], vals).unwrap());
+        ck
+    }
+
+    /// Build a chain of `depth` versions by touching one element per
+    /// version (sparse updates all the way down).
+    fn chained(acc: &ObjectAccess, depth: usize) -> (Vec<ModelMetadata>, Checkpoint) {
+        let mut ck = random_ck(1, 256);
+        let mut metas = vec![clean_checkpoint(acc, &ck, "safetensors", None, None, 1).unwrap()];
+        for i in 1..depth {
+            let mut vals = ck.get("w").unwrap().to_f32_vec().unwrap();
+            vals[i % 256] += 1.0;
+            ck.insert("w", Tensor::from_f32(vec![256], vals).unwrap());
+            let prior = metas.last().unwrap().clone();
+            let next = crate::theta::filter::clean_checkpoint_opts(
+                acc,
+                &ck,
+                "safetensors",
+                Some(&prior),
+                &crate::theta::filter::CleanOptions {
+                    snapshot_depth: None,
+                    threads: 1,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            metas.push(next);
+        }
+        (metas, ck)
+    }
+
+    #[test]
+    fn parse_snapshot_depth_values() {
+        assert_eq!(parse_snapshot_depth("8").unwrap(), Some(8));
+        assert_eq!(parse_snapshot_depth(" 3 ").unwrap(), Some(3));
+        assert_eq!(parse_snapshot_depth("off").unwrap(), None);
+        assert_eq!(parse_snapshot_depth("none").unwrap(), None);
+        assert_eq!(parse_snapshot_depth("0").unwrap(), None);
+        assert!(parse_snapshot_depth("soon").is_err());
+    }
+
+    #[test]
+    fn cache_reuses_prefixes() {
+        let td = TempDir::new("checkout").unwrap();
+        let acc = access(&td);
+        let (metas, ck) = chained(&acc, 6);
+        let deep = &metas.last().unwrap().groups["w"];
+        assert_eq!(deep.chain_depth(), 6);
+
+        let cache = ReconstructionCache::new();
+        let a = reconstruct(&acc, deep, Some(&cache)).unwrap();
+        assert_eq!(&a, ck.get("w").unwrap());
+        let misses_first = cache.misses();
+        assert_eq!(cache.hits(), 0);
+        assert_eq!(misses_first, 5); // one per prefix level
+
+        // Second resolution of the same chain: one hit, no new misses.
+        let b = reconstruct(&acc, deep, Some(&cache)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), misses_first);
+        assert!(cache.cached_bytes() >= 256 * 4);
+    }
+
+    #[test]
+    fn snapshot_preserves_values_and_resets_depth() {
+        let td = TempDir::new("checkout").unwrap();
+        let acc = access(&td);
+        let (metas, ck) = chained(&acc, 9);
+        let deep = metas.last().unwrap();
+        assert_eq!(deep.groups["w"].chain_depth(), 9);
+
+        let (snap, report) = snapshot_metadata(&acc, deep, 1).unwrap();
+        assert_eq!(report.groups, 1);
+        assert_eq!(report.reanchored, 1);
+        assert_eq!(report.max_depth_before, 9);
+        assert_eq!(snap.groups["w"].chain_depth(), 1);
+        assert_eq!(snap.groups["w"].update.kind, "dense");
+        // LSH signature carried over; smudge output byte-for-byte equal.
+        assert_eq!(snap.groups["w"].tensor, deep.groups["w"].tensor);
+        let a = smudge_metadata(&acc, deep, 1).unwrap();
+        let b = smudge_metadata(&acc, &snap, 1).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b, ck);
+
+        // Snapshotting a dense model is a no-op with identical entries.
+        let (snap2, report2) = snapshot_metadata(&acc, &snap, 1).unwrap();
+        assert_eq!(report2.reanchored, 0);
+        assert_eq!(snap2, snap);
+    }
+
+    #[test]
+    fn should_snapshot_threshold() {
+        let td = TempDir::new("checkout").unwrap();
+        let acc = access(&td);
+        let (metas, _) = chained(&acc, 4);
+        let e = &metas.last().unwrap().groups["w"]; // depth 4
+        assert!(!should_snapshot(e, None));
+        assert!(!should_snapshot(e, Some(5)));
+        assert!(should_snapshot(e, Some(4)));
+        assert!(should_snapshot(e, Some(2)));
+    }
+}

@@ -21,9 +21,10 @@ use crate::gitcore::object::Oid;
 use crate::gitcore::repo::Repository;
 use crate::lfs::{batch, LfsRemote, LfsStore};
 use crate::tensor::{allclose, Tensor};
+use crate::theta::checkout::{self, ReconstructionCache, DEFAULT_SNAPSHOT_DEPTH};
 use crate::theta::lsh::{LshSignature, LshVerdict};
 use crate::theta::metadata::{GroupMetadata, ModelMetadata, ObjRef, TensorInfo, UpdateInfo};
-use crate::theta::serialize::{deserialize_combined, serialize_combined};
+use crate::theta::serialize::serialize_combined;
 use crate::theta::updates::{infer_best, update_type, UpdatePayload};
 use crate::util::par;
 use anyhow::{bail, Context, Result};
@@ -87,27 +88,49 @@ impl ObjectAccess {
 
 /// Reconstruct a group's full values from its metadata entry, resolving
 /// the incremental chain recursively (paper §3.2 "Checking Out a Model").
+///
+/// Uncached resolution; bulk callers create a
+/// [`ReconstructionCache`] and go through [`checkout::reconstruct`] so
+/// shared chain prefixes are computed once per run.
 pub fn reconstruct_group(access: &ObjectAccess, entry: &GroupMetadata) -> Result<Tensor> {
-    let prev = match &entry.prev {
-        Some(p) => Some(reconstruct_group(access, p)?),
-        None => None,
-    };
-    let tensors = match entry.update.objects.get("data") {
-        Some(obj) => deserialize_combined(&access.fetch(obj)?)?,
-        None => Default::default(),
-    };
-    let payload = UpdatePayload {
-        kind: entry.update.kind.clone(),
-        tensors,
-        extra: entry.update.extra.clone(),
-    };
-    let u = update_type(&entry.update.kind)
-        .with_context(|| format!("unknown update type '{}'", entry.update.kind))?;
-    u.apply(&payload, prev.as_ref())
+    checkout::reconstruct(access, entry, None)
+}
+
+/// Tuning knobs for [`clean_checkpoint_opts`].
+#[derive(Debug, Clone)]
+pub struct CleanOptions {
+    /// Pin a specific update type (the paper's per-file override);
+    /// `None` lets [`infer_best`] pick the cheapest. A forced type also
+    /// disables snapshotting for the affected groups — an explicit
+    /// `theta-update` attribute wins over the depth policy.
+    pub forced_update: Option<String>,
+    /// Re-anchor a changed group densely when its chain would exceed
+    /// this depth; `None` disables automatic snapshotting.
+    pub snapshot_depth: Option<usize>,
+    /// Worker threads for the per-group parallel loop.
+    pub threads: usize,
+    /// Share a per-run [`ReconstructionCache`] across groups so
+    /// `NeedsExactCheck` probes and incremental inference never rebuild
+    /// the same chain prefix twice.
+    pub cache: bool,
+}
+
+impl Default for CleanOptions {
+    fn default() -> CleanOptions {
+        CleanOptions {
+            forced_update: None,
+            snapshot_depth: Some(DEFAULT_SNAPSHOT_DEPTH),
+            threads: par::default_threads(),
+            cache: true,
+        }
+    }
 }
 
 /// Run the clean filter over an in-memory checkpoint. Exposed for the
 /// benchmark harness, which needs byte-level control of inputs.
+///
+/// Shorthand for [`clean_checkpoint_opts`] with default snapshotting
+/// and caching.
 pub fn clean_checkpoint(
     access: &ObjectAccess,
     ck: &Checkpoint,
@@ -116,13 +139,34 @@ pub fn clean_checkpoint(
     forced_update: Option<&str>,
     threads: usize,
 ) -> Result<ModelMetadata> {
+    let opts = CleanOptions {
+        forced_update: forced_update.map(str::to_string),
+        threads,
+        ..Default::default()
+    };
+    clean_checkpoint_opts(access, ck, format_name, prior, &opts)
+}
+
+/// Run the clean filter with explicit [`CleanOptions`].
+pub fn clean_checkpoint_opts(
+    access: &ObjectAccess,
+    ck: &Checkpoint,
+    format_name: &str,
+    prior: Option<&ModelMetadata>,
+    opts: &CleanOptions,
+) -> Result<ModelMetadata> {
     // No up-front prefetch here: unchanged groups (the common case)
     // never reconstruct their prior value, so pulling the prior's whole
     // object closure would over-fetch. Changed groups download lazily;
     // the bulk path that benefits from packing is smudge.
+    let cache = if opts.cache {
+        Some(ReconstructionCache::new())
+    } else {
+        None
+    };
     let groups: Vec<(&String, &Tensor)> = ck.iter().collect();
-    let entries = par::try_par_map(&groups, threads, |_, (name, tensor)| {
-        clean_group(access, name, tensor, prior, forced_update)
+    let entries = par::try_par_map(&groups, opts.threads, |_, (name, tensor)| {
+        clean_group(access, name, tensor, prior, opts, cache.as_ref())
             .with_context(|| format!("cleaning parameter group '{name}'"))
     })?;
     let mut meta = ModelMetadata::new(format_name);
@@ -137,7 +181,8 @@ fn clean_group(
     name: &str,
     tensor: &Tensor,
     prior: Option<&ModelMetadata>,
-    forced_update: Option<&str>,
+    opts: &CleanOptions,
+    cache: Option<&ReconstructionCache>,
 ) -> Result<GroupMetadata> {
     let sig = LshSignature::of_tensor(tensor)?;
     let prior_entry = prior.and_then(|m| m.groups.get(name));
@@ -149,23 +194,25 @@ fn clean_group(
             match sig.compare(&pe.tensor.lsh) {
                 LshVerdict::Unchanged => return Ok(pe.clone()),
                 LshVerdict::NeedsExactCheck => {
-                    // Ambiguous band: exact allclose against the stored value.
-                    let prev_value = reconstruct_group(access, pe)?;
+                    // Ambiguous band: exact allclose against the stored
+                    // value. The probe's reconstruction memoizes the
+                    // chain, so the changed path below reuses it.
+                    let prev_value = checkout::reconstruct(access, pe, cache)?;
                     if allclose(tensor, &prev_value, 1e-5, 1e-8)? {
                         return Ok(pe.clone());
                     }
-                    return store_changed(access, tensor, sig, Some((pe, prev_value)), forced_update);
+                    return store_changed(access, tensor, sig, Some((pe, prev_value)), opts);
                 }
                 LshVerdict::Changed => {}
             }
         }
         // Changed (or shape/dtype mismatch): reconstruct prev for
         // incremental-update inference.
-        let prev_value = reconstruct_group(access, pe)?;
-        return store_changed(access, tensor, sig, Some((pe, prev_value)), forced_update);
+        let prev_value = checkout::reconstruct(access, pe, cache)?;
+        return store_changed(access, tensor, sig, Some((pe, prev_value)), opts);
     }
 
-    store_changed(access, tensor, sig, None, forced_update)
+    store_changed(access, tensor, sig, None, opts)
 }
 
 fn store_changed(
@@ -173,13 +220,33 @@ fn store_changed(
     tensor: &Tensor,
     sig: LshSignature,
     prior: Option<(&GroupMetadata, Tensor)>,
-    forced_update: Option<&str>,
+    opts: &CleanOptions,
 ) -> Result<GroupMetadata> {
     let (prior_entry, prev_value) = match &prior {
         Some((pe, pv)) => (Some(*pe), Some(pv)),
         None => (None, None),
     };
-    let payload = infer_best(prev_value, tensor, forced_update)?;
+    let forced = opts.forced_update.as_deref();
+    let mut payload = infer_best(prev_value, tensor, forced)?;
+
+    // Snapshot policy: if this incremental link would push the chain
+    // past the configured depth, re-anchor the group densely instead —
+    // reconstruction cost at checkout stays bounded, and the full
+    // tensor is already in memory so the re-anchor is one dense store.
+    // An explicitly forced update type wins over the policy.
+    if forced.is_none() {
+        if let Some((pe, _)) = &prior {
+            let incremental = update_type(&payload.kind)
+                .with_context(|| format!("unknown update type '{}'", payload.kind))?
+                .requires_prev();
+            if incremental && checkout::should_snapshot(pe, opts.snapshot_depth) {
+                payload = update_type("dense")
+                    .context("dense update type not registered")?
+                    .infer(None, tensor)?
+                    .context("dense update cannot represent tensor")?;
+            }
+        }
+    }
     store_payload(access, tensor, sig, payload, prior_entry)
 }
 
@@ -224,17 +291,40 @@ pub fn store_payload(
 }
 
 /// Run the smudge filter: metadata → full checkpoint.
+///
+/// Shorthand for [`smudge_metadata_opts`] with the reconstruction
+/// cache *disabled*: a plain smudge resolves every chain exactly once
+/// (distinct groups have distinct chain keys), so a cache would add no
+/// hits while pinning every intermediate chain tensor — up to
+/// chain-depth × model size of heap — until the run ends.
 pub fn smudge_metadata(
     access: &ObjectAccess,
     meta: &ModelMetadata,
     threads: usize,
 ) -> Result<Checkpoint> {
+    smudge_metadata_opts(access, meta, threads, false)
+}
+
+/// Run the smudge filter, optionally with the per-run memoized
+/// reconstruction cache (the benchmark ablation's toggle; useful to
+/// real callers only when groups share chains, e.g. tied weights).
+pub fn smudge_metadata_opts(
+    access: &ObjectAccess,
+    meta: &ModelMetadata,
+    threads: usize,
+    use_cache: bool,
+) -> Result<Checkpoint> {
     // One negotiation + one pack for every object the model references
     // (instead of a lazy download per missing group during reconstruction).
     access.prefetch(&meta.all_oids())?;
+    let cache = if use_cache {
+        Some(ReconstructionCache::new())
+    } else {
+        None
+    };
     let groups: Vec<(&String, &GroupMetadata)> = meta.groups.iter().collect();
     let tensors = par::try_par_map(&groups, threads, |_, (name, entry)| {
-        reconstruct_group(access, entry)
+        checkout::reconstruct(access, entry, cache.as_ref())
             .with_context(|| format!("reconstructing parameter group '{name}'"))
     })?;
     Ok(groups
@@ -257,14 +347,12 @@ impl FilterDriver for ThetaFilter {
         };
         let forced = repo.attributes()?.value_of(path, "theta-update");
         let access = ObjectAccess::for_repo(repo)?;
-        let meta = clean_checkpoint(
-            &access,
-            &ck,
-            fmt.name(),
-            prior.as_ref(),
-            forced.as_deref(),
-            par::default_threads(),
-        )?;
+        let opts = CleanOptions {
+            forced_update: forced,
+            snapshot_depth: checkout::snapshot_depth_config(repo)?,
+            ..Default::default()
+        };
+        let meta = clean_checkpoint_opts(&access, &ck, fmt.name(), prior.as_ref(), &opts)?;
         Ok(meta.to_bytes())
     }
 
@@ -419,6 +507,37 @@ mod tests {
         assert_eq!(smudge_metadata(&acc, &v2, 2).unwrap(), ck2);
         assert_eq!(smudge_metadata(&acc, &v1, 2).unwrap(), ck1);
         assert_eq!(smudge_metadata(&acc, &v0, 2).unwrap(), ck0);
+    }
+
+    #[test]
+    fn snapshot_depth_caps_chains() {
+        let td = TempDir::new("filter").unwrap();
+        let acc = access(&td);
+        let mut ck = random_ck(7);
+        let mut metas = vec![clean_checkpoint(&acc, &ck, "safetensors", None, None, 2).unwrap()];
+        let opts = CleanOptions {
+            snapshot_depth: Some(3),
+            threads: 2,
+            ..Default::default()
+        };
+        for i in 0..10 {
+            let mut vals = ck.get("attn/q").unwrap().to_f32_vec().unwrap();
+            vals[i] += 1.0;
+            ck.insert("attn/q", Tensor::from_f32(vec![32, 32], vals).unwrap());
+            let prior = metas.last().unwrap().clone();
+            let next =
+                clean_checkpoint_opts(&acc, &ck, "safetensors", Some(&prior), &opts).unwrap();
+            // The chain never exceeds the threshold; every version
+            // still reconstructs the checkpoint exactly.
+            assert!(next.groups["attn/q"].chain_depth() <= 3, "iteration {i}");
+            assert_eq!(smudge_metadata(&acc, &next, 2).unwrap(), ck);
+            metas.push(next);
+        }
+        // At least one re-anchor happened (depth reset to 1 = dense).
+        assert!(metas.iter().any(|m| m.groups["attn/q"].prev.is_some()));
+        assert!(metas[1..].iter().any(|m| m.groups["attn/q"].update.kind == "dense"));
+        // Untouched groups carry forward byte-identically regardless.
+        assert_eq!(metas[0].groups["attn/v"], metas[10].groups["attn/v"]);
     }
 
     #[test]

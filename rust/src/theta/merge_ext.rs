@@ -157,8 +157,10 @@ mod tests {
         let acc = access(&td);
         let base = ck(vec![0.0; 4]);
         let v0 = clean_checkpoint(&acc, &base, "safetensors", None, None, 1).unwrap();
-        let ours = clean_checkpoint(&acc, &ck(vec![1.0; 4]), "safetensors", Some(&v0), None, 1).unwrap();
-        let theirs = clean_checkpoint(&acc, &ck(vec![3.0; 4]), "safetensors", Some(&v0), None, 1).unwrap();
+        let ours = clean_checkpoint(&acc, &ck(vec![1.0; 4]), "safetensors", Some(&v0), None, 1)
+            .unwrap();
+        let theirs = clean_checkpoint(&acc, &ck(vec![3.0; 4]), "safetensors", Some(&v0), None, 1)
+            .unwrap();
 
         set_branch_weights(3.0, 1.0);
         let (m, _) = merge_metadata(&acc, Some(&v0), &ours, &theirs, &opts("weighted")).unwrap();
@@ -177,9 +179,12 @@ mod tests {
         let v0 = clean_checkpoint(&acc, &base, "safetensors", None, None, 1).unwrap();
         // Ours moves elem 0 a lot; theirs moves elem 1 a lot; both also
         // nudge the other elem slightly.
-        let ours = clean_checkpoint(&acc, &ck(vec![2.0, 0.1]), "safetensors", Some(&v0), None, 1).unwrap();
-        let theirs = clean_checkpoint(&acc, &ck(vec![0.1, 2.0]), "safetensors", Some(&v0), None, 1).unwrap();
-        let (m, resolved) = merge_metadata(&acc, Some(&v0), &ours, &theirs, &opts("fisher")).unwrap();
+        let ours = clean_checkpoint(&acc, &ck(vec![2.0, 0.1]), "safetensors", Some(&v0), None, 1)
+            .unwrap();
+        let theirs = clean_checkpoint(&acc, &ck(vec![0.1, 2.0]), "safetensors", Some(&v0), None, 1)
+            .unwrap();
+        let (m, resolved) =
+            merge_metadata(&acc, Some(&v0), &ours, &theirs, &opts("fisher")).unwrap();
         assert_eq!(resolved.len(), 1);
         let out = smudge_metadata(&acc, &m, 1).unwrap();
         let w = out.get("w").unwrap().to_f32_vec().unwrap();
@@ -194,7 +199,10 @@ mod tests {
         use crate::theta::merge::menu_for;
         let names: Vec<&str> = menu_for(ConflictKind::BothAdded).iter().map(|s| s.name()).collect();
         assert!(!names.contains(&"fisher"));
-        let names: Vec<&str> = menu_for(ConflictKind::BothModified).iter().map(|s| s.name()).collect();
+        let names: Vec<&str> = menu_for(ConflictKind::BothModified)
+            .iter()
+            .map(|s| s.name())
+            .collect();
         assert!(names.contains(&"fisher"));
         assert!(names.contains(&"weighted"));
     }

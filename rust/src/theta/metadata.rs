@@ -180,6 +180,16 @@ impl GroupMetadata {
         1 + self.prev.as_ref().map_or(0, |p| p.chain_depth())
     }
 
+    /// Content hash identifying this entry's full chain: shape, dtype,
+    /// LSH signature, update kind/extras, object oids, and the embedded
+    /// base chain. Because reconstruction is a pure function of exactly
+    /// this information, two entries with equal chain keys reconstruct
+    /// to identical tensors — the property the checkout engine's
+    /// memoized reconstruction cache relies on for its keying.
+    pub fn chain_key(&self) -> Oid {
+        Oid::of_bytes(self.to_json().to_string_compact().as_bytes())
+    }
+
     /// Total serialized bytes referenced by this entry alone (not the chain).
     pub fn own_bytes(&self) -> u64 {
         self.update.objects.values().map(|o| o.size).sum()
@@ -338,6 +348,23 @@ mod tests {
         let new = v2.new_oids_vs(Some(&v1));
         assert_eq!(new, vec![Oid::of_bytes(b"sparse")]);
         assert_eq!(v2.new_oids_vs(None).len(), 2);
+    }
+
+    #[test]
+    fn chain_key_distinguishes_chains() {
+        let base = sample_group(&[1.0], "dense", None);
+        let other = sample_group(&[2.0], "dense", None);
+        let inc = sample_group(&[2.0], "sparse", Some(base.clone()));
+        // Equal content -> equal key; any difference in the entry or its
+        // embedded chain -> different key.
+        assert_eq!(base.chain_key(), base.clone().chain_key());
+        assert_ne!(base.chain_key(), other.chain_key());
+        assert_ne!(inc.chain_key(), base.chain_key());
+        let inc_other = sample_group(&[2.0], "sparse", Some(other));
+        assert_ne!(inc.chain_key(), inc_other.chain_key());
+        // Roundtripping through JSON preserves the key.
+        let back = GroupMetadata::from_json(&inc.to_json()).unwrap();
+        assert_eq!(back.chain_key(), inc.chain_key());
     }
 
     #[test]

@@ -2,16 +2,21 @@
 //!
 //! * [`lsh`] — locality-sensitive hashing for change detection.
 //! * [`updates`] — dense/sparse/low-rank/IA3/trim update plug-ins.
-//! * [`serialize`] — TensorStore-style chunked+compressed serializer.
+//! * [`serialize`] — TensorStore-style chunked+compressed serializer
+//!   with in-place parallel chunk decode.
 //! * [`metadata`] — the model metadata file Git versions.
 //! * [`filter`] — the clean/smudge filters.
+//! * [`checkout`] — the checkout compute engine: chain snapshotting
+//!   and memoized reconstruction.
 //! * [`diff`] — the parameter-group diff driver.
 //! * [`merge`] — the merge driver and strategy plug-ins.
 //! * [`hooks`] — post-commit / pre-push LFS object bookkeeping.
 //! * [`track`] — `git theta track`.
 
-// rustdoc burn-down (see lib.rs): `metadata` is fully documented and
-// participates in `missing_docs`; the rest are allowed until their pass.
+// rustdoc burn-down (see lib.rs): `metadata`, `serialize`, `updates`,
+// and `checkout` are fully documented and participate in
+// `missing_docs`; the rest are allowed until their pass.
+pub mod checkout;
 #[allow(missing_docs)]
 pub mod diff;
 #[allow(missing_docs)]
@@ -25,15 +30,17 @@ pub mod merge;
 #[allow(missing_docs)]
 pub mod merge_ext;
 pub mod metadata;
-#[allow(missing_docs)]
 pub mod serialize;
 #[allow(missing_docs)]
 pub mod track;
-#[allow(missing_docs)]
 pub mod updates;
 
+pub use checkout::{snapshot_metadata, ReconstructionCache, DEFAULT_SNAPSHOT_DEPTH};
 pub use diff::{render_diff, ModelDiff, ThetaDiff};
-pub use filter::{clean_checkpoint, reconstruct_group, smudge_metadata, ObjectAccess, ThetaFilter};
+pub use filter::{
+    clean_checkpoint, clean_checkpoint_opts, reconstruct_group, smudge_metadata,
+    smudge_metadata_opts, CleanOptions, ObjectAccess, ThetaFilter,
+};
 pub use hooks::ThetaHooks;
 pub use merge::{merge_metadata, register_merge_strategy, ThetaMerge};
 pub use metadata::{GroupMetadata, ModelMetadata, ObjRef};

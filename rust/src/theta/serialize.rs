@@ -10,6 +10,16 @@
 //! bf16-valued f32 data into long runs), and zstd per chunk, compressed
 //! in parallel.
 //!
+//! Decode is **in-place**: the final tensor buffer is allocated once,
+//! and because chunks have a fixed pre-compression size, chunk `i`'s
+//! bytes land at offset `i * chunk` — each worker decompresses straight
+//! into its disjoint slice (`zstd::bulk::decompress_to_buffer`), with
+//! [`byte_unshuffle_into`] fused into that scatter write. Peak
+//! transient allocation is one chunk-sized scratch per worker (only
+//! when shuffling), not a whole-tensor-capacity `Vec` per chunk plus a
+//! final copy as in the copying path (kept behind
+//! [`set_legacy_decode`] as the benchmark baseline).
+//!
 //! Multi-tensor updates (e.g. sparse = indices + values) are combined
 //! into one blob with msgpack, as in the paper.
 
@@ -18,13 +28,18 @@ use crate::util::msgpack::Mp;
 use crate::util::par;
 use anyhow::{bail, Context, Result};
 use once_cell::sync::Lazy;
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::RwLock;
 
 /// A tensor serializer plug-in.
 pub trait Serializer: Send + Sync {
+    /// Registry name of this serializer.
     fn name(&self) -> &'static str;
+    /// Encode a tensor into a self-describing byte blob.
     fn serialize(&self, t: &Tensor) -> Result<Vec<u8>>;
+    /// Decode a blob produced by [`Serializer::serialize`].
     fn deserialize(&self, bytes: &[u8]) -> Result<Tensor>;
 }
 
@@ -50,6 +65,42 @@ impl Default for TensorStoreSerializer {
 
 const TS_MAGIC: &[u8; 4] = b"TST1";
 
+/// Process-wide decode-path toggle for the `bench checkout` ablation:
+/// `true` selects the legacy copying decode (per-chunk `Vec` + final
+/// assembly loop) instead of the in-place scatter decode.
+static LEGACY_DECODE: AtomicBool = AtomicBool::new(false);
+
+/// Select the copying decode path (`true`) or the default in-place
+/// path (`false`). Benchmark-only; both paths produce identical
+/// tensors.
+pub fn set_legacy_decode(on: bool) {
+    LEGACY_DECODE.store(on, Ordering::Relaxed);
+}
+
+/// Whether the legacy copying decode path is selected.
+pub fn legacy_decode() -> bool {
+    LEGACY_DECODE.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    // Per-worker scratch reused across chunks: shuffled input on the
+    // serialize side, decompressed-but-shuffled output on the decode
+    // side. Holds at most one chunk (default 4 MiB), trading that
+    // residency for zero steady-state allocations in the hot loops.
+    static CHUNK_SCRATCH: RefCell<Vec<u8>> = RefCell::new(Vec::new());
+}
+
+/// Parallelism heuristic shared by both directions: only tensors big
+/// enough to matter get threads; the clean filter already parallelizes
+/// across parameter groups, and nested pools hurt (§Perf).
+fn chunk_threads(total_bytes: usize) -> usize {
+    if total_bytes >= 16 << 20 {
+        par::default_threads()
+    } else {
+        1
+    }
+}
+
 impl Serializer for TensorStoreSerializer {
     fn name(&self) -> &'static str {
         "tensorstore"
@@ -69,23 +120,22 @@ impl Serializer for TensorStoreSerializer {
             data.chunks(chunk).collect()
         };
 
-        // Shuffle+compress chunks in parallel — but only for tensors big
-        // enough to matter; the clean filter already parallelizes across
-        // parameter groups, and nested thread pools hurt (§Perf).
         let level = self.level;
-        let par_threads = if data.len() >= 16 << 20 { par::default_threads() } else { 1 };
         let compressed: Vec<Vec<u8>> = par::try_par_map(
             &chunks,
-            par_threads,
+            chunk_threads(data.len()),
             |_, raw| -> Result<Vec<u8>> {
-                let shuffled;
-                let input: &[u8] = if use_shuffle {
-                    shuffled = byte_shuffle(raw, elem);
-                    &shuffled
+                if use_shuffle {
+                    // Shuffle into the worker's reusable scratch, then
+                    // compress from it — no per-chunk shuffle `Vec`.
+                    CHUNK_SCRATCH.with(|s| {
+                        let mut s = s.borrow_mut();
+                        byte_shuffle_into(raw, elem, &mut s);
+                        zstd::bulk::compress(&s, level).context("zstd compress")
+                    })
                 } else {
-                    raw
-                };
-                zstd::bulk::compress(input, level).context("zstd compress")
+                    zstd::bulk::compress(raw, level).context("zstd compress")
+                }
             },
         )?;
 
@@ -151,6 +201,10 @@ impl Serializer for TensorStoreSerializer {
                 _ => None,
             })
             .unwrap_or(false);
+        let chunk = header
+            .get("chunk")
+            .and_then(|v| v.as_u64())
+            .context("missing chunk size")? as usize;
         let chunk_lens: Vec<usize> = header
             .get("chunks")
             .and_then(|v| v.as_arr())
@@ -161,6 +215,25 @@ impl Serializer for TensorStoreSerializer {
 
         let total: usize = shape.iter().product::<usize>() * dtype.size();
         let elem = dtype.size();
+
+        // Chunk layout invariants: every chunk except the last holds
+        // exactly `chunk` raw bytes, so chunk i's output offset is
+        // i * chunk. Validate up front so a corrupt header fails
+        // cleanly instead of scattering out of bounds.
+        if total > 0 {
+            if chunk == 0 {
+                bail!("tensorstore: zero chunk size");
+            }
+            let expected = (total + chunk - 1) / chunk;
+            if chunk_lens.len() != expected {
+                bail!(
+                    "tensorstore: {} chunks but layout needs {expected}",
+                    chunk_lens.len()
+                );
+            }
+        } else if !chunk_lens.is_empty() {
+            bail!("tensorstore: empty tensor with chunk data");
+        }
 
         // Slice out the compressed chunks.
         let mut spans = Vec::with_capacity(chunk_lens.len());
@@ -173,58 +246,146 @@ impl Serializer for TensorStoreSerializer {
             pos += len;
         }
 
-        let par_threads = if total >= 16 << 20 { par::default_threads() } else { 1 };
-        let decompressed: Vec<Vec<u8>> = par::try_par_map(
-            &spans,
-            par_threads,
-            |_, span| -> Result<Vec<u8>> {
-                let raw = zstd::bulk::decompress(span, total.max(1)).context("zstd decompress")?;
-                Ok(if shuffle {
-                    byte_unshuffle(&raw, elem)
-                } else {
-                    raw
-                })
-            },
-        )?;
-
-        let mut data = Vec::with_capacity(total);
-        for d in decompressed {
-            data.extend_from_slice(&d);
-        }
+        let data = if legacy_decode() {
+            decode_copying(&spans, total, elem, shuffle)?
+        } else {
+            decode_in_place(&spans, total, chunk, elem, shuffle)?
+        };
         Tensor::from_bytes(dtype, shape, data).context("tensorstore payload")
     }
 }
 
+/// In-place decode: one whole-tensor buffer, each chunk decompressed
+/// directly into its `i * chunk` slice, unshuffle fused into the
+/// scatter write.
+fn decode_in_place(
+    spans: &[&[u8]],
+    total: usize,
+    chunk: usize,
+    elem: usize,
+    shuffle: bool,
+) -> Result<Vec<u8>> {
+    let mut data = vec![0u8; total];
+    if total == 0 {
+        return Ok(data);
+    }
+    let work: Vec<(&[u8], &mut [u8])> = spans
+        .iter()
+        .copied()
+        .zip(data.chunks_mut(chunk))
+        .collect();
+    par::try_par_consume(
+        work,
+        chunk_threads(total),
+        |_, (span, dst)| -> Result<()> {
+            let expect = dst.len();
+            let written = if shuffle {
+                CHUNK_SCRATCH.with(|s| -> Result<usize> {
+                    let mut s = s.borrow_mut();
+                    s.clear();
+                    s.resize(expect, 0);
+                    let n = zstd::bulk::decompress_to_buffer(span, &mut s[..])
+                        .context("zstd decompress")?;
+                    if n == expect {
+                        byte_unshuffle_into(&s, elem, dst);
+                    }
+                    Ok(n)
+                })?
+            } else {
+                zstd::bulk::decompress_to_buffer(span, &mut *dst).context("zstd decompress")?
+            };
+            if written != expect {
+                bail!("tensorstore: chunk decompressed to {written} bytes, expected {expect}");
+            }
+            Ok(())
+        },
+    )?;
+    Ok(data)
+}
+
+/// The pre-engine copying decode: a `Vec` per chunk (allocated at
+/// whole-tensor capacity, the over-allocation this engine removed) and
+/// a final assembly copy. Kept only as the `bench checkout` baseline.
+fn decode_copying(spans: &[&[u8]], total: usize, elem: usize, shuffle: bool) -> Result<Vec<u8>> {
+    let decompressed: Vec<Vec<u8>> = par::try_par_map(
+        spans,
+        chunk_threads(total),
+        |_, span| -> Result<Vec<u8>> {
+            let raw = zstd::bulk::decompress(span, total.max(1)).context("zstd decompress")?;
+            Ok(if shuffle {
+                byte_unshuffle(&raw, elem)
+            } else {
+                raw
+            })
+        },
+    )?;
+    let mut data = Vec::with_capacity(total);
+    for d in decompressed {
+        data.extend_from_slice(&d);
+    }
+    if data.len() != total {
+        bail!(
+            "tensorstore: chunks decompressed to {} bytes, expected {total}",
+            data.len()
+        );
+    }
+    Ok(data)
+}
+
 /// Transpose bytes: [e0b0 e0b1 ... | e1b0 e1b1 ...] → all b0s, all b1s, ...
 pub fn byte_shuffle(data: &[u8], elem: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    byte_shuffle_into(data, elem, &mut out);
+    out
+}
+
+/// [`byte_shuffle`] into a caller-provided buffer (cleared and resized
+/// to `data.len()`), so hot loops can reuse one scratch allocation.
+/// Lengths that are not a multiple of `elem` pass through unchanged,
+/// matching [`byte_shuffle`].
+pub fn byte_shuffle_into(data: &[u8], elem: usize, out: &mut Vec<u8>) {
+    out.clear();
     if elem <= 1 || data.len() % elem != 0 {
-        return data.to_vec();
+        out.extend_from_slice(data);
+        return;
     }
+    out.resize(data.len(), 0);
     let n = data.len() / elem;
-    let mut out = vec![0u8; data.len()];
     for b in 0..elem {
         let dst = &mut out[b * n..(b + 1) * n];
         for (i, d) in dst.iter_mut().enumerate() {
             *d = data[i * elem + b];
         }
     }
-    out
 }
 
 /// Inverse of [`byte_shuffle`].
 pub fn byte_unshuffle(data: &[u8], elem: usize) -> Vec<u8> {
+    let mut out = vec![0u8; data.len()];
+    byte_unshuffle_into(data, elem, &mut out);
+    out
+}
+
+/// Inverse of [`byte_shuffle`], scattering directly into `out` (which
+/// must be exactly `data.len()` bytes) — the fusion that lets the
+/// in-place decoder unshuffle a chunk straight into the final tensor
+/// buffer with no intermediate copy.
+///
+/// Lengths that are not a multiple of `elem` are copied through
+/// unchanged, mirroring the shuffle side's pass-through.
+pub fn byte_unshuffle_into(data: &[u8], elem: usize, out: &mut [u8]) {
+    debug_assert_eq!(data.len(), out.len());
     if elem <= 1 || data.len() % elem != 0 {
-        return data.to_vec();
+        out.copy_from_slice(data);
+        return;
     }
     let n = data.len() / elem;
-    let mut out = vec![0u8; data.len()];
     for b in 0..elem {
         let src = &data[b * n..(b + 1) * n];
         for (i, &s) in src.iter().enumerate() {
             out[i * elem + b] = s;
         }
     }
-    out
 }
 
 // ----------------------------------------------------------------------
@@ -300,6 +461,14 @@ mod tests {
         }
         // Non-multiple lengths pass through unchanged.
         assert_eq!(byte_shuffle(&data[..63], 4), &data[..63]);
+        assert_eq!(byte_unshuffle(&data[..63], 4), &data[..63]);
+        // The into-variants agree with the allocating ones.
+        let mut buf = Vec::new();
+        byte_shuffle_into(&data, 4, &mut buf);
+        assert_eq!(buf, byte_shuffle(&data, 4));
+        let mut out = vec![0u8; buf.len()];
+        byte_unshuffle_into(&buf, 4, &mut out);
+        assert_eq!(out, data);
     }
 
     #[test]
@@ -319,6 +488,28 @@ mod tests {
         let t = random_tensor(2, 5_000); // 20 KB -> 20 chunks
         let bytes = ser.serialize(&t).unwrap();
         assert_eq!(ser.deserialize(&bytes).unwrap(), t);
+    }
+
+    #[test]
+    fn in_place_and_legacy_decode_agree() {
+        let ser = TensorStoreSerializer {
+            chunk_bytes: 512,
+            ..Default::default()
+        };
+        // Shuffled float and unshuffled int payloads, plus a tail
+        // chunk shorter than the chunk size.
+        for t in [
+            random_tensor(11, 3_333),
+            Tensor::from_i64(vec![777], (0..777).map(|i| i * 7 - 99).collect()).unwrap(),
+        ] {
+            let bytes = ser.serialize(&t).unwrap();
+            let fast = ser.deserialize(&bytes).unwrap();
+            set_legacy_decode(true);
+            let slow = ser.deserialize(&bytes);
+            set_legacy_decode(false);
+            assert_eq!(fast, slow.unwrap());
+            assert_eq!(fast, t);
+        }
     }
 
     #[test]
@@ -399,5 +590,22 @@ mod tests {
         let mut bytes = ser.serialize(&t).unwrap();
         bytes.truncate(bytes.len() - 10);
         assert!(ser.deserialize(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_multi_chunk() {
+        let ser = TensorStoreSerializer {
+            chunk_bytes: 256,
+            ..Default::default()
+        };
+        let t = random_tensor(8, 1_000);
+        let good = ser.serialize(&t).unwrap();
+        // Truncating inside the chunk stream fails in both decoders.
+        for legacy in [false, true] {
+            set_legacy_decode(legacy);
+            let r = ser.deserialize(&good[..good.len() - 100]);
+            set_legacy_decode(false);
+            assert!(r.is_err(), "legacy={legacy}");
+        }
     }
 }

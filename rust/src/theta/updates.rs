@@ -32,12 +32,16 @@ use std::sync::RwLock;
 /// The data an update stores: named tensors + scalar extras.
 #[derive(Debug, Clone, PartialEq)]
 pub struct UpdatePayload {
+    /// Update-type name this payload belongs to (e.g. "sparse").
     pub kind: String,
+    /// Named tensors the update stores (e.g. `indices` + `values`).
     pub tensors: BTreeMap<String, Tensor>,
+    /// Update-specific scalars (e.g. `{"alpha": 2.0}`).
     pub extra: Json,
 }
 
 impl UpdatePayload {
+    /// An empty payload of the given update type.
     pub fn new(kind: &str) -> UpdatePayload {
         UpdatePayload {
             kind: kind.to_string(),
@@ -73,6 +77,7 @@ impl UpdatePayload {
 
 /// An update-type plug-in.
 pub trait UpdateType: Send + Sync {
+    /// Registry name of this update type.
     fn name(&self) -> &'static str;
 
     /// Does reconstruction require the previous value of the group?
@@ -91,6 +96,7 @@ pub trait UpdateType: Send + Sync {
 // dense
 // ----------------------------------------------------------------------
 
+/// Full values; terminates every chain.
 pub struct DenseUpdate;
 
 impl UpdateType for DenseUpdate {
@@ -121,6 +127,8 @@ impl UpdateType for DenseUpdate {
 // sparse
 // ----------------------------------------------------------------------
 
+/// Indices + new values of changed elements; bit-exact assignment
+/// semantics on reconstruction.
 pub struct SparseUpdate;
 
 /// Store sparsely only when under this density (storage break-even for
@@ -219,6 +227,7 @@ impl UpdateType for SparseUpdate {
 // low-rank
 // ----------------------------------------------------------------------
 
+/// LoRA-style additive low-rank factors A·B on top of the base.
 pub struct LowRankUpdate;
 
 impl UpdateType for LowRankUpdate {
@@ -420,6 +429,7 @@ fn rank_factorize(
 // IA3 (per-column rescaling)
 // ----------------------------------------------------------------------
 
+/// IA3-style per-column rescaling (Liu et al. 2022).
 pub struct Ia3Update;
 
 impl UpdateType for Ia3Update {
@@ -513,6 +523,7 @@ impl UpdateType for Ia3Update {
 // trim (row-prefix removal)
 // ----------------------------------------------------------------------
 
+/// Row-prefix removal: stores only how many rows survive.
 pub struct TrimUpdate;
 
 impl UpdateType for TrimUpdate {

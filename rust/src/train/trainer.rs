@@ -225,7 +225,12 @@ impl Trainer {
 
     /// Merge LoRA adapters into the base weights (α/r scaling), using
     /// the kernel-backed LoRA application.
-    pub fn merge_lora(&self, params: &ModelParams, lora: &ModelParams, alpha: f32) -> Result<ModelParams> {
+    pub fn merge_lora(
+        &self,
+        params: &ModelParams,
+        lora: &ModelParams,
+        alpha: f32,
+    ) -> Result<ModelParams> {
         let mut merged = params.clone();
         for (name, _) in &lora.tensors {
             // Names are "<target>.lora_a" / "<target>.lora_b".
@@ -246,7 +251,12 @@ impl Trainer {
     }
 
     /// Accuracy + mean loss over the task's held-out eval set.
-    pub fn eval(&self, params: &ModelParams, task: &SyntheticTask, batches: usize) -> Result<(f64, f64)> {
+    pub fn eval(
+        &self,
+        params: &ModelParams,
+        task: &SyntheticTask,
+        batches: usize,
+    ) -> Result<(f64, f64)> {
         let sets = task.eval_set(batches, self.cfg.batch);
         let mut correct = 0f64;
         let mut total = 0f64;

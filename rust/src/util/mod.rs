@@ -3,9 +3,11 @@
 //! The offline build environment provides no serde/clap/criterion/rayon,
 //! so the small generic pieces Git-Theta needs are implemented here:
 //! JSON and MessagePack codecs, hex, glob matching, a PCG64 RNG, a
-//! scoped-thread parallel map, human-readable sizes, temp dirs, and a
-//! tiny property-testing harness.
+//! scoped-thread parallel map, human-readable sizes, temp dirs, a
+//! tiny property-testing harness, and an opt-in heap high-water-mark
+//! allocator for benchmarks.
 
+pub mod alloc;
 pub mod glob;
 pub mod hex;
 pub mod humansize;

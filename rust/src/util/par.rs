@@ -100,6 +100,57 @@ where
     Ok(out)
 }
 
+/// Parallel for-each over owned items where `f` may fail.
+///
+/// Each item is handed to exactly one worker by value, which lets
+/// callers move non-`Sync` state (e.g. `&mut` slices into a shared
+/// output buffer) across the pool. On failure the error with the
+/// lowest input index is returned, matching [`try_par_map`].
+pub fn try_par_consume<T, E, F>(items: Vec<T>, threads: usize, f: F) -> Result<(), E>
+where
+    T: Send,
+    E: Send,
+    F: Fn(usize, T) -> Result<(), E> + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        for (i, t) in items.into_iter().enumerate() {
+            f(i, t)?;
+        }
+        return Ok(());
+    }
+
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let errors: Vec<Mutex<Option<E>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    crossbeam_utils::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|_| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let t = slots[i].lock().unwrap().take().expect("item already taken");
+                if let Err(e) = f(i, t) {
+                    *errors[i].lock().unwrap() = Some(e);
+                }
+            });
+        }
+    })
+    .expect("worker thread panicked");
+
+    for e in errors {
+        if let Some(e) = e.into_inner().unwrap() {
+            return Err(e);
+        }
+    }
+    Ok(())
+}
+
 /// Process disjoint chunks of a mutable byte buffer in parallel.
 ///
 /// Used by the serializer hot path (byte-shuffle + compression) where each
@@ -186,6 +237,39 @@ mod tests {
             }
         });
         assert_eq!(r.unwrap_err(), "boom");
+    }
+
+    #[test]
+    fn try_par_consume_moves_mutable_borrows() {
+        let mut data = vec![0u8; 4096];
+        let work: Vec<(u8, &mut [u8])> = data
+            .chunks_mut(1024)
+            .enumerate()
+            .map(|(i, c)| (i as u8 + 1, c))
+            .collect();
+        let r: Result<(), String> = try_par_consume(work, 4, |_, (v, chunk)| {
+            for b in chunk.iter_mut() {
+                *b = v;
+            }
+            Ok(())
+        });
+        r.unwrap();
+        for (i, c) in data.chunks(1024).enumerate() {
+            assert!(c.iter().all(|&b| b == i as u8 + 1));
+        }
+    }
+
+    #[test]
+    fn try_par_consume_reports_lowest_index_error() {
+        let items: Vec<usize> = (0..100).collect();
+        let r: Result<(), String> = try_par_consume(items, 4, |_, x| {
+            if x == 17 || x == 80 {
+                Err(format!("boom {x}"))
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(r.unwrap_err(), "boom 17");
     }
 
     #[test]

@@ -1,0 +1,360 @@
+//! Checkout-engine integration tests: decode allocation bounds, deep
+//! mixed-op chains under snapshotting/caching, and the `git-theta
+//! snapshot` command.
+//!
+//! This binary installs [`TrackingAlloc`] so peak-transient-heap
+//! assertions measure the real allocator traffic of the decode path.
+
+use git_theta::checkpoint::{Checkpoint, CheckpointFormat, SafetensorsFormat};
+use git_theta::cli::dispatch;
+use git_theta::gitcore::repo::Repository;
+use git_theta::lfs::LfsStore;
+use git_theta::tensor::Tensor;
+use git_theta::theta::filter::{
+    clean_checkpoint_opts, smudge_metadata, smudge_metadata_opts, CleanOptions, ObjectAccess,
+};
+use git_theta::theta::metadata::ModelMetadata;
+use git_theta::theta::serialize::{set_legacy_decode, Serializer, TensorStoreSerializer};
+use git_theta::theta::DEFAULT_SNAPSHOT_DEPTH;
+use git_theta::util::alloc::{self, TrackingAlloc};
+use git_theta::util::prop::check;
+use git_theta::util::rng::Pcg64;
+use git_theta::util::tmp::TempDir;
+use std::path::Path;
+use std::sync::Mutex;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+// One big lock: the allocation test needs exclusive heap traffic, and
+// the CLI tests chdir. Ignore poisoning so one failure doesn't cascade.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn access(td: &TempDir) -> ObjectAccess {
+    ObjectAccess {
+        store: LfsStore::open(td.path()),
+        remote: None,
+    }
+}
+
+// ----------------------------------------------------------------------
+// decode allocation bounds (the `total.max(1)`-per-chunk fix)
+// ----------------------------------------------------------------------
+
+#[test]
+fn in_place_decode_peak_allocation_is_bounded() {
+    // Allocation counters are process-global: keep other tests of this
+    // binary from allocating during the measured region.
+    let _guard = lock();
+    // 64 chunks of 4 KiB: the layout where the old decoder allocated a
+    // whole-tensor-capacity Vec *per chunk* (64x over-allocation).
+    for shuffle in [true, false] {
+        let ser = TensorStoreSerializer {
+            chunk_bytes: 4096,
+            level: 1,
+            shuffle,
+        };
+        let mut rng = Pcg64::new(9);
+        let vals: Vec<f32> = (0..65_536).map(|_| rng.next_f32()).collect();
+        let t = Tensor::from_f32(vec![65_536], vals).unwrap();
+        let blob = ser.serialize(&t).unwrap();
+
+        // Warm thread-local scratch and lazies outside the measurement.
+        assert_eq!(ser.deserialize(&blob).unwrap(), t);
+
+        let base = alloc::reset_peak();
+        let out = ser.deserialize(&blob).unwrap();
+        let transient = alloc::peak_bytes().saturating_sub(base);
+        assert!(
+            transient < 2 * t.nbytes(),
+            "shuffle={shuffle}: in-place decode peaked at {transient} B \
+             for a {} B tensor",
+            t.nbytes()
+        );
+        assert_eq!(out, t);
+
+        // The legacy copying path demonstrates the bug this guards
+        // against: it breaks the same bound on the same input.
+        set_legacy_decode(true);
+        let base = alloc::reset_peak();
+        let out = ser.deserialize(&blob);
+        let transient = alloc::peak_bytes().saturating_sub(base);
+        set_legacy_decode(false);
+        assert_eq!(out.unwrap(), t);
+        assert!(
+            transient >= 2 * t.nbytes(),
+            "shuffle={shuffle}: expected the copying path to over-allocate, \
+             peaked at {transient} B"
+        );
+    }
+}
+
+// ----------------------------------------------------------------------
+// deep mixed-op chains: snapshot/cache equivalence
+// ----------------------------------------------------------------------
+
+/// One synthesized training history: the op applied at each version.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Op {
+    Sparse,
+    Trim,
+    Dense,
+}
+
+fn apply_op(ck: &mut Checkpoint, rng: &mut Pcg64, op: Op) {
+    let names: Vec<String> = ck.names().cloned().collect();
+    for name in names {
+        let t = ck.get(&name).unwrap().clone();
+        let (rows, cols) = (t.shape()[0], t.shape()[1]);
+        let next = match op {
+            Op::Sparse => {
+                let mut vals = t.to_f32_vec().unwrap();
+                for _ in 0..3 {
+                    let at = rng.below((rows * cols) as u64) as usize;
+                    // Guaranteed-magnitude delta: a change below the
+                    // LSH/allclose noise floor is *supposed* to be
+                    // ignored by clean, which would break this test's
+                    // bit-exact comparison for the wrong reason.
+                    vals[at] += 0.25 + rng.next_f32();
+                }
+                Tensor::from_f32(vec![rows, cols], vals).unwrap()
+            }
+            Op::Trim if rows > 6 => t.take_rows(rows - 1).unwrap(),
+            Op::Trim => t, // floor reached: keep as-is (unchanged group)
+            Op::Dense => {
+                let vals: Vec<f32> = (0..rows * cols)
+                    .map(|_| (rng.next_f32() - 0.5) * 2.0)
+                    .collect();
+                Tensor::from_f32(vec![rows, cols], vals).unwrap()
+            }
+        };
+        ck.insert(name, next);
+    }
+}
+
+#[test]
+fn prop_deep_mixed_chains_reconstruct_identically() {
+    let _guard = lock();
+    check(
+        "depth-32 mixed chains: snapshot/cache do not change smudge output",
+        |rng| rng.below(u64::MAX),
+        |&seed| {
+            let td = TempDir::new("deep-prop").map_err(|e| e.to_string())?;
+            let acc = access(&td);
+            let mut rng = Pcg64::new(seed);
+            let mut ck = Checkpoint::new();
+            for g in 0..2 {
+                let vals: Vec<f32> = (0..16 * 8).map(|_| (rng.next_f32() - 0.5) * 2.0).collect();
+                ck.insert(
+                    format!("g{g}"),
+                    Tensor::from_f32(vec![16, 8], vals).unwrap(),
+                );
+            }
+            let deep_opts = CleanOptions {
+                snapshot_depth: None,
+                threads: 2,
+                cache: false,
+                ..Default::default()
+            };
+            let snap_opts = CleanOptions {
+                snapshot_depth: Some(DEFAULT_SNAPSHOT_DEPTH),
+                threads: 2,
+                ..Default::default()
+            };
+            let e = |e: anyhow::Error| format!("{e:#}");
+            let mut deep =
+                clean_checkpoint_opts(&acc, &ck, "native", None, &deep_opts).map_err(e)?;
+            let mut snap =
+                clean_checkpoint_opts(&acc, &ck, "native", None, &snap_opts).map_err(e)?;
+            for _v in 1..32 {
+                // Mostly sparse with occasional trims and rare dense
+                // re-writes, so deep chains actually form.
+                let op = match rng.below(8) {
+                    0 => Op::Trim,
+                    1 => Op::Dense,
+                    _ => Op::Sparse,
+                };
+                apply_op(&mut ck, &mut rng, op);
+                deep = clean_checkpoint_opts(&acc, &ck, "native", Some(&deep), &deep_opts)
+                    .map_err(e)?;
+                snap = clean_checkpoint_opts(&acc, &ck, "native", Some(&snap), &snap_opts)
+                    .map_err(e)?;
+            }
+            for g in snap.groups.values() {
+                if g.chain_depth() > DEFAULT_SNAPSHOT_DEPTH {
+                    return Err(format!(
+                        "snapshotted chain depth {} exceeds threshold",
+                        g.chain_depth()
+                    ));
+                }
+            }
+            // All four (history, cache) combinations agree with the
+            // reference checkpoint.
+            for meta in [&deep, &snap] {
+                for cache in [false, true] {
+                    let back = smudge_metadata_opts(&acc, meta, 2, cache).map_err(e)?;
+                    if back != ck {
+                        return Err(format!(
+                            "smudge mismatch (snapshotted={}, cache={cache})",
+                            std::ptr::eq(meta, &snap)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn unsnapshotted_sparse_chain_reaches_depth_32() {
+    // Sanity for the property above: with snapshotting off and only
+    // sparse ops, depth really does hit 32 (the pathology the engine
+    // bounds).
+    let _guard = lock();
+    let td = TempDir::new("deep-32").unwrap();
+    let acc = access(&td);
+    let mut rng = Pcg64::new(7);
+    let mut ck = Checkpoint::new();
+    let vals: Vec<f32> = (0..16 * 8).map(|_| rng.next_f32()).collect();
+    ck.insert("w", Tensor::from_f32(vec![16, 8], vals).unwrap());
+    let opts = CleanOptions {
+        snapshot_depth: None,
+        threads: 1,
+        ..Default::default()
+    };
+    let mut meta = clean_checkpoint_opts(&acc, &ck, "native", None, &opts).unwrap();
+    for _ in 1..32 {
+        apply_op(&mut ck, &mut rng, Op::Sparse);
+        meta = clean_checkpoint_opts(&acc, &ck, "native", Some(&meta), &opts).unwrap();
+    }
+    assert_eq!(meta.groups["w"].chain_depth(), 32);
+    assert_eq!(smudge_metadata(&acc, &meta, 1).unwrap(), ck);
+}
+
+// ----------------------------------------------------------------------
+// the `git-theta snapshot` command
+// ----------------------------------------------------------------------
+
+fn in_dir<F: FnOnce() -> anyhow::Result<()>>(dir: &Path, f: F) {
+    let _guard = lock();
+    let old = std::env::current_dir().unwrap();
+    std::env::set_current_dir(dir).unwrap();
+    let result = f();
+    std::env::set_current_dir(old).unwrap();
+    result.unwrap();
+}
+
+fn sv(args: &[&str]) -> Vec<String> {
+    args.iter().map(|s| s.to_string()).collect()
+}
+
+fn staged_meta(repo: &Repository, path: &str) -> ModelMetadata {
+    ModelMetadata::from_bytes(&repo.prior_staged(path).unwrap().unwrap()).unwrap()
+}
+
+#[test]
+fn snapshot_command_reanchors_byte_for_byte() {
+    let td = TempDir::new("cli-snapshot").unwrap();
+    in_dir(td.path(), || {
+        git_theta::init();
+        dispatch(&sv(&["init"]))?;
+        // Let the chain grow unbounded so the command has work to do.
+        dispatch(&sv(&["config", "theta.snapshot-depth", "off"]))?;
+        dispatch(&sv(&["track", "model.safetensors"]))?;
+
+        let mut rng = Pcg64::new(11);
+        let mut ck = Checkpoint::new();
+        let vals: Vec<f32> = (0..512).map(|_| rng.next_f32()).collect();
+        ck.insert("w", Tensor::from_f32(vec![32, 16], vals).unwrap());
+        let fmt = SafetensorsFormat;
+        std::fs::write("model.safetensors", fmt.save_bytes(&ck)?)?;
+        dispatch(&sv(&["add", "model.safetensors", ".thetaattributes"]))?;
+        dispatch(&sv(&["commit", "-m", "base"]))?;
+        for i in 0..6 {
+            let mut vals = ck.get("w").unwrap().to_f32_vec()?;
+            vals[i * 3] += 1.0;
+            ck.insert("w", Tensor::from_f32(vec![32, 16], vals).unwrap());
+            std::fs::write("model.safetensors", fmt.save_bytes(&ck)?)?;
+            dispatch(&sv(&["add", "model.safetensors"]))?;
+            let msg = format!("step {i}");
+            dispatch(&sv(&["commit", "-m", msg.as_str()]))?;
+        }
+
+        let repo = Repository::open(Path::new("."))?;
+        let acc = ObjectAccess::for_repo(&repo)?;
+        let before = staged_meta(&repo, "model.safetensors");
+        assert_eq!(before.groups["w"].chain_depth(), 7);
+        let bytes_before = fmt.save_bytes(&smudge_metadata(&acc, &before, 1)?)?;
+
+        dispatch(&sv(&["snapshot", "model.safetensors"]))?;
+
+        let after = staged_meta(&repo, "model.safetensors");
+        assert_eq!(after.groups["w"].chain_depth(), 1);
+        assert_eq!(after.groups["w"].update.kind, "dense");
+        // Smudge output is byte-for-byte identical.
+        let bytes_after = fmt.save_bytes(&smudge_metadata(&acc, &after, 1)?)?;
+        assert_eq!(bytes_before, bytes_after);
+        // Snapshotting again is a no-op on the metadata.
+        dispatch(&sv(&["snapshot", "model.safetensors"]))?;
+        assert_eq!(staged_meta(&repo, "model.safetensors"), after);
+
+        // The re-anchor commits and checks out cleanly.
+        dispatch(&sv(&["commit", "-m", "snapshot"]))?;
+        dispatch(&sv(&["checkout", "main"]))?;
+        assert_eq!(std::fs::read("model.safetensors")?, bytes_after);
+        Ok(())
+    });
+}
+
+#[test]
+fn snapshot_depth_config_bounds_cli_chains() {
+    let td = TempDir::new("cli-depth").unwrap();
+    in_dir(td.path(), || {
+        git_theta::init();
+        dispatch(&sv(&["init"]))?;
+        dispatch(&sv(&["config", "theta.snapshot-depth", "2"]))?;
+        dispatch(&sv(&["track", "m.safetensors"]))?;
+        let fmt = SafetensorsFormat;
+        let mut rng = Pcg64::new(13);
+        let mut ck = Checkpoint::new();
+        let vals: Vec<f32> = (0..128).map(|_| rng.next_f32()).collect();
+        ck.insert("w", Tensor::from_f32(vec![128], vals).unwrap());
+        std::fs::write("m.safetensors", fmt.save_bytes(&ck)?)?;
+        dispatch(&sv(&["add", "m.safetensors", ".thetaattributes"]))?;
+        dispatch(&sv(&["commit", "-m", "base"]))?;
+
+        let repo = Repository::open(Path::new("."))?;
+        for i in 0..5 {
+            let mut vals = ck.get("w").unwrap().to_f32_vec()?;
+            vals[i] -= 0.5;
+            ck.insert("w", Tensor::from_f32(vec![128], vals).unwrap());
+            std::fs::write("m.safetensors", fmt.save_bytes(&ck)?)?;
+            dispatch(&sv(&["add", "m.safetensors"]))?;
+            let msg = format!("step {i}");
+            dispatch(&sv(&["commit", "-m", msg.as_str()]))?;
+            let depth = staged_meta(&repo, "m.safetensors").groups["w"].chain_depth();
+            assert!(depth <= 2, "step {i}: depth {depth} exceeds configured bound");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn snapshot_command_rejects_untracked_paths() {
+    let td = TempDir::new("cli-snap-err").unwrap();
+    in_dir(td.path(), || {
+        git_theta::init();
+        dispatch(&sv(&["init"]))?;
+        assert!(dispatch(&sv(&["snapshot"])).is_err());
+        assert!(dispatch(&sv(&["snapshot", "nope.safetensors"])).is_err());
+        std::fs::write("notes.txt", "plain text")?;
+        dispatch(&sv(&["add", "notes.txt"]))?;
+        assert!(dispatch(&sv(&["snapshot", "notes.txt"])).is_err());
+        Ok(())
+    });
+}

@@ -65,7 +65,9 @@ fn smudge_fails_loudly_on_corrupt_lfs_object() {
 #[test]
 fn malformed_metadata_is_rejected() {
     assert!(ModelMetadata::from_bytes(b"{\"git-theta\": 1}").is_err()); // missing format
-    assert!(ModelMetadata::from_bytes(b"{\"git-theta\": 99, \"format\": \"safetensors\"}").is_err());
+    assert!(
+        ModelMetadata::from_bytes(b"{\"git-theta\": 99, \"format\": \"safetensors\"}").is_err()
+    );
     assert!(ModelMetadata::from_bytes(b"\x00\x01\x02").is_err());
     // Truncated group entry.
     let bad = br#"{"git-theta":1,"format":"safetensors","groups":{"w":{"tensor":{}}}}"#;

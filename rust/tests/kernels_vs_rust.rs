@@ -69,8 +69,10 @@ fn lora_kernel_matches_rust() {
     let mut rng = Pcg64::new(13);
     let (m, n, r) = (512usize, 512usize, 16usize);
     let w = Tensor::from_f32(vec![m, n], (0..m * n).map(|_| rng.next_f32()).collect()).unwrap();
-    let a = Tensor::from_f32(vec![m, r], (0..m * r).map(|_| rng.next_f32() * 0.1).collect()).unwrap();
-    let b = Tensor::from_f32(vec![r, n], (0..r * n).map(|_| rng.next_f32() * 0.1).collect()).unwrap();
+    let a = Tensor::from_f32(vec![m, r], (0..m * r).map(|_| rng.next_f32() * 0.1).collect())
+        .unwrap();
+    let b = Tensor::from_f32(vec![r, n], (0..r * n).map(|_| rng.next_f32() * 0.1).collect())
+        .unwrap();
     let kernel = mlops::lora_apply(&w, &a, &b, 16.0).unwrap();
     let rust = mlops::lora_apply_rust(&w, &a, &b, 16.0, m, n, r).unwrap();
     let kv = kernel.to_f32_vec().unwrap();

@@ -21,7 +21,11 @@ fn random_checkpoint(rng: &mut Pcg64) -> Checkpoint {
         let shape = gens::shape(rng, 2, 512);
         let n: usize = shape.iter().product();
         let vals = gens::f32_vec(rng, n, 0.5);
-        let dtype = if rng.below(4) == 0 { DType::BF16 } else { DType::F32 };
+        let dtype = if rng.below(4) == 0 {
+            DType::BF16
+        } else {
+            DType::F32
+        };
         let t = Tensor::from_f32(shape, vals).unwrap().cast(dtype).unwrap();
         ck.insert(format!("g{g}"), t);
     }
@@ -210,7 +214,8 @@ fn prop_msgpack_json_fuzz_roundtrip() {
         "msgpack/json value roundtrips",
         |rng| {
             fn gen_value(rng: &mut Pcg64, depth: usize) -> Mp {
-                match if depth > 2 { rng.below(6) } else { rng.below(8) } {
+                let roll = if depth > 2 { rng.below(6) } else { rng.below(8) };
+                match roll {
                     0 => Mp::Nil,
                     1 => Mp::Bool(rng.below(2) == 0),
                     2 => Mp::Int(-(rng.below(1 << 40) as i64) - 1),

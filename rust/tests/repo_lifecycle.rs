@@ -64,7 +64,14 @@ fn theta_merge_average_through_repository() {
     repo.repo.create_branch("side").unwrap();
     repo.checkout("side").unwrap();
     let mut side = base.clone();
-    let v: Vec<f32> = side.get("g1/w").unwrap().to_f32_vec().unwrap().iter().map(|x| x + 2.0).collect();
+    let v: Vec<f32> = side
+        .get("g1/w")
+        .unwrap()
+        .to_f32_vec()
+        .unwrap()
+        .iter()
+        .map(|x| x + 2.0)
+        .collect();
     side.insert("g1/w", Tensor::from_f32(vec![500], v).unwrap());
     repo.write_model(&side).unwrap();
     repo.add().unwrap();
@@ -72,7 +79,14 @@ fn theta_merge_average_through_repository() {
 
     repo.checkout("main").unwrap();
     let mut main = base.clone();
-    let v: Vec<f32> = main.get("g1/w").unwrap().to_f32_vec().unwrap().iter().map(|x| x + 4.0).collect();
+    let v: Vec<f32> = main
+        .get("g1/w")
+        .unwrap()
+        .to_f32_vec()
+        .unwrap()
+        .iter()
+        .map(|x| x + 4.0)
+        .collect();
     main.insert("g1/w", Tensor::from_f32(vec![500], v).unwrap());
     repo.write_model(&main).unwrap();
     repo.add().unwrap();
@@ -228,7 +242,14 @@ fn per_group_merge_strategies_through_repo() {
     repo.checkout("side").unwrap();
     let mut side = base.clone();
     for g in ["g0/w", "g1/w"] {
-        let v: Vec<f32> = side.get(g).unwrap().to_f32_vec().unwrap().iter().map(|x| x + 2.0).collect();
+        let v: Vec<f32> = side
+            .get(g)
+            .unwrap()
+            .to_f32_vec()
+            .unwrap()
+            .iter()
+            .map(|x| x + 2.0)
+            .collect();
         side.insert(g, Tensor::from_f32(vec![100], v).unwrap());
     }
     repo.write_model(&side).unwrap();
@@ -238,7 +259,14 @@ fn per_group_merge_strategies_through_repo() {
     repo.checkout("main").unwrap();
     let mut main = base.clone();
     for g in ["g0/w", "g1/w"] {
-        let v: Vec<f32> = main.get(g).unwrap().to_f32_vec().unwrap().iter().map(|x| x + 4.0).collect();
+        let v: Vec<f32> = main
+            .get(g)
+            .unwrap()
+            .to_f32_vec()
+            .unwrap()
+            .iter()
+            .map(|x| x + 4.0)
+            .collect();
         main.insert(g, Tensor::from_f32(vec![100], v).unwrap());
     }
     repo.write_model(&main).unwrap();

@@ -15,8 +15,11 @@ if [ ! -f Cargo.toml ]; then
     exit 0
 fi
 
-echo "==> cargo fmt --check (advisory until the seed-wide format pass lands)"
-cargo fmt --check || echo "warning: formatting drift reported above" >&2
+echo "==> cargo fmt --check"
+if ! cargo fmt --check; then
+    echo "error: formatting drift — run 'cargo fmt' and re-commit" >&2
+    exit 1
+fi
 
 # Clippy warnings are denied in the modules that have had their lint
 # pass (the transfer subsystem and its benchkit harness); the rest of
@@ -38,5 +41,11 @@ cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q
+
+# Smoke the checkout-engine ablation (tiny configuration): exercises
+# snapshotting, both decode paths, and the per-depth identity check
+# end-to-end through the real CLI.
+echo "==> bench checkout smoke"
+cargo run --release --quiet -- bench checkout 10 2 8192
 
 echo "==> OK"
