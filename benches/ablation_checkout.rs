@@ -8,7 +8,8 @@
 //! in-place decoder in `theta/serialize.rs`. Scale with
 //! `THETA_BENCH_DEPTH` / `THETA_BENCH_GROUPS` / `THETA_BENCH_ELEMS`.
 
-use git_theta::benchkit::checkout::{build_fixture, render_runs, run_ablation};
+use git_theta::benchkit::checkout::{build_fixture, render_runs, run_ablation, runs_to_json};
+use git_theta::benchkit::write_bench_json;
 use git_theta::util::alloc::TrackingAlloc;
 
 // Install the heap high-water-mark tracker so the peak-alloc column is
@@ -32,6 +33,8 @@ fn main() -> anyhow::Result<()> {
     println!("clean -> smudge identity verified at every depth 1..={depth} (both histories)");
     let runs = run_ablation(&fixture)?;
     print!("{}", render_runs(groups, elems, &runs));
+    let path = write_bench_json("checkout", runs_to_json(depth, groups, elems, &runs))?;
+    println!("wrote {}", path.display());
 
     let all_off = &runs[0];
     let all_on = &runs[4];

@@ -1,0 +1,54 @@
+//! Ablation A6: the merge engine — shared reconstruction cache,
+//! parallel conflict resolution, batched prefetch, and change-skipping
+//! via chain keys / LSH signatures.
+//!
+//! Merges a synthetic three-way fixture (deep ancestor chains on an
+//! LFS remote, conflicted / one-sided / value-equal group quarters)
+//! with each engine lever toggled and reports merge wall-clock, peak
+//! transient heap, transfer round trips, and speedup vs the serial
+//! baseline — the cost model behind `theta/merge.rs`. Merged-output
+//! parity against the serial path is asserted on every sample. Scale
+//! with `THETA_BENCH_DEPTH` / `THETA_BENCH_GROUPS` /
+//! `THETA_BENCH_ELEMS`.
+
+use git_theta::benchkit::merge::{build_fixture, render_runs, run_ablation, runs_to_json};
+use git_theta::benchkit::write_bench_json;
+use git_theta::util::alloc::TrackingAlloc;
+
+// Install the heap high-water-mark tracker so the peak-alloc column is
+// real numbers instead of n/a.
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    git_theta::init();
+    let depth = env_usize("THETA_BENCH_DEPTH", 8);
+    let groups = env_usize("THETA_BENCH_GROUPS", 64);
+    let elems = env_usize("THETA_BENCH_ELEMS", 16_384);
+
+    let fixture = build_fixture(depth, groups, elems)?;
+    println!("merged-output parity asserted against the serial path on every sample");
+    let runs = run_ablation(&fixture)?;
+    print!("{}", render_runs(&fixture, &runs));
+    let path = write_bench_json("merge", runs_to_json(&fixture, &runs))?;
+    println!("wrote {}", path.display());
+
+    let serial = &runs[0];
+    let all_on = runs.last().unwrap();
+    println!(
+        "\nall-on vs serial on {} conflicted group(s): {:.2}x merge speedup, \
+         {} -> {} round trips",
+        serial.resolved,
+        serial.merge_secs / all_on.merge_secs.max(1e-12),
+        serial.round_trips,
+        all_on.round_trips
+    );
+    Ok(())
+}

@@ -107,7 +107,7 @@ impl ThetaRepo {
     pub fn merge_with_strategy(&self, branch: &str, strategy: &str) -> Result<Oid> {
         let opts = crate::gitcore::drivers::MergeOptions {
             strategy: Some(strategy.to_string()),
-            per_group: vec![],
+            ..Default::default()
         };
         let report = self.repo.merge(branch, &opts, "bench <bench@localhost>")?;
         report.commit.ok_or_else(|| anyhow::anyhow!("merge produced no commit"))

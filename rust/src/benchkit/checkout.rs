@@ -28,6 +28,7 @@ use crate::theta::filter::{
 use crate::theta::metadata::ModelMetadata;
 use crate::theta::serialize::set_legacy_decode;
 use crate::theta::DEFAULT_SNAPSHOT_DEPTH;
+use crate::util::json::{Json, JsonObj};
 use crate::util::rng::Pcg64;
 use crate::util::tmp::TempDir;
 use crate::util::{alloc, humansize, par};
@@ -233,6 +234,40 @@ pub fn render_runs(groups: usize, elems: usize, runs: &[CheckoutRun]) -> String 
     )
 }
 
+/// Encode the ablation as the machine-readable `BENCH_checkout.json`
+/// payload (perf trajectory tracking across PRs).
+pub fn runs_to_json(depth: usize, groups: usize, elems: usize, runs: &[CheckoutRun]) -> Json {
+    let baseline = runs.first().map(|r| r.smudge_secs).unwrap_or(0.0);
+    let mut root = JsonObj::new();
+    root.insert("bench", "checkout");
+    root.insert("depth", depth);
+    root.insert("groups", groups);
+    root.insert("elems", elems);
+    let rows: Vec<Json> = runs
+        .iter()
+        .map(|r| {
+            let mut o = JsonObj::new();
+            o.insert("label", r.label);
+            o.insert("chain_depth", r.chain_depth);
+            o.insert("smudge_secs", Json::Num(r.smudge_secs));
+            o.insert(
+                "peak_bytes",
+                match r.peak_bytes {
+                    Some(b) => Json::from(b),
+                    None => Json::Null,
+                },
+            );
+            o.insert(
+                "speedup_vs_all_off",
+                Json::Num(baseline / r.smudge_secs.max(1e-12)),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("runs", Json::Arr(rows));
+    Json::Obj(root)
+}
+
 /// `git-theta bench checkout [depth] [groups] [elems]` entry point.
 pub fn run_checkout_cli(args: &[String]) -> Result<()> {
     let depth = args.first().and_then(|s| s.parse().ok()).unwrap_or(32usize);
@@ -245,6 +280,8 @@ pub fn run_checkout_cli(args: &[String]) -> Result<()> {
     println!("clean -> smudge identity verified at every depth 1..={depth} (both histories)");
     let runs = run_ablation(&fixture)?;
     print!("{}", render_runs(groups, elems, &runs));
+    let path = super::write_bench_json("checkout", runs_to_json(depth, groups, elems, &runs))?;
+    println!("wrote {}", path.display());
     if !alloc::active() {
         println!("note: peak-alloc tracking inactive (this binary did not install TrackingAlloc)");
     }

@@ -1,0 +1,510 @@
+//! Merge-engine ablation: conflict-resolution cost with each of the
+//! engine's four levers toggled independently.
+//!
+//! Synthesizes a three-way merge over a model whose parameter groups
+//! carry deep incremental chains (a continually-trained ancestor) and
+//! split four ways: genuinely conflicted on both branches, changed on
+//! one side only, value-equal-but-re-anchored (the change-skipping
+//! lever's prey), and untouched. The chains live only on an LFS
+//! *remote*; every measured run starts from an empty local store, so
+//! the batched-prefetch lever is exercised against real per-object
+//! fetch traffic.
+//!
+//! Measured per configuration: merge wall-clock, peak transient heap
+//! (when the running binary installed
+//! [`TrackingAlloc`](crate::util::alloc)), and transfer round trips.
+//! **Merged-output parity is asserted on every sample**: each
+//! configuration's merged metadata must smudge to exactly the
+//! checkpoint the serial baseline produces, so a config that "wins" by
+//! resolving garbage cannot pass.
+
+use super::{render_table, Stats};
+use crate::checkpoint::Checkpoint;
+use crate::gitcore::drivers::MergeOptions;
+use crate::lfs::{batch, LfsRemote, LfsStore};
+use crate::tensor::Tensor;
+use crate::theta::checkout::snapshot_metadata;
+use crate::theta::filter::{clean_checkpoint_opts, smudge_metadata, CleanOptions, ObjectAccess};
+use crate::theta::merge::{merge_metadata_opts, EngineOptions};
+use crate::theta::metadata::ModelMetadata;
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::Pcg64;
+use crate::util::tmp::TempDir;
+use crate::util::{alloc, humansize, par};
+use anyhow::{ensure, Result};
+use std::time::Instant;
+
+/// One measured merge configuration.
+#[derive(Debug, Clone)]
+pub struct MergeRun {
+    /// Which levers were on.
+    pub label: &'static str,
+    /// Mean merge wall-clock seconds (each sample from a cold local store).
+    pub merge_secs: f64,
+    /// Peak transient heap of one merge, when the binary tracks it.
+    pub peak_bytes: Option<usize>,
+    /// Transfer round trips of one merge (negotiations + packs +
+    /// per-object requests).
+    pub round_trips: u64,
+    /// Conflicts resolved by a strategy.
+    pub resolved: usize,
+    /// Conflicts auto-resolved by LSH value-equality.
+    pub value_skipped: usize,
+    /// Reconstruction-cache hits.
+    pub cache_hits: u64,
+}
+
+/// The synthesized three-way merge inputs plus the checkpoint every
+/// configuration's merged output must smudge back to.
+pub struct MergeFixture {
+    /// Directory whose `lfs/objects` holds every chain object; served
+    /// to measured runs as the LFS remote.
+    remote_dir: TempDir,
+    /// The merge base: every group at chain depth `depth`.
+    pub ancestor: ModelMetadata,
+    /// Our branch: conflict + ours-only groups changed, skip-range
+    /// groups re-anchored densely (values untouched).
+    pub ours: ModelMetadata,
+    /// Their branch: conflict + theirs-only groups changed, skip-range
+    /// groups bumped then reverted (deeper chain, values untouched).
+    pub theirs: ModelMetadata,
+    /// The checkpoint the serial baseline's merge smudges to.
+    pub expect: Checkpoint,
+    /// Parameter groups in the model.
+    pub groups: usize,
+    /// f32 elements per group.
+    pub elems: usize,
+    /// Ancestor chain depth.
+    pub depth: usize,
+}
+
+impl MergeFixture {
+    /// A fresh [`ObjectAccess`] whose local store is empty and whose
+    /// remote serves the fixture's objects. Every measured sample gets
+    /// its own so prefetch/fetch costs are actually paid.
+    pub fn fresh_access(&self) -> Result<(ObjectAccess, TempDir)> {
+        let td = TempDir::new("bench-merge-local")?;
+        let access = ObjectAccess {
+            store: LfsStore::open(td.path()),
+            remote: Some(LfsRemote::open(self.remote_dir.path())),
+        };
+        Ok((access, td))
+    }
+
+    fn merge_opts() -> MergeOptions {
+        MergeOptions {
+            strategy: Some("average".into()),
+            per_group: vec![],
+            verbose: false,
+        }
+    }
+}
+
+/// Synthesize the fixture: `groups`×`elems` model, ancestor chains
+/// `depth` deep, groups split into conflict / ours-only / theirs-only /
+/// value-equal quarters.
+pub fn build_fixture(depth: usize, groups: usize, elems: usize) -> Result<MergeFixture> {
+    ensure!(depth >= 2 && groups >= 1 && elems >= 64, "fixture too small");
+    let remote_dir = TempDir::new("bench-merge-remote")?;
+    // Build chains directly into the remote's store; measured runs must
+    // fetch them.
+    let build = ObjectAccess {
+        store: LfsStore::at(&remote_dir.path().join("lfs/objects")),
+        remote: None,
+    };
+    let threads = par::default_threads();
+    let opts = CleanOptions {
+        snapshot_depth: None,
+        threads,
+        ..Default::default()
+    };
+
+    let name = |g: usize| format!("block{g}/w");
+    let mut rng = Pcg64::new(0x3E26E);
+    let mut ck = Checkpoint::new();
+    for g in 0..groups {
+        let vals: Vec<f32> = (0..elems).map(|_| (rng.next_f32() - 0.5) * 0.2).collect();
+        ck.insert(name(g), Tensor::from_f32(vec![elems], vals)?);
+    }
+    let mut meta = clean_checkpoint_opts(&build, &ck, "native", None, &opts)?;
+    for v in 1..depth {
+        // Touch ~1/64 of each group per version: sparse links all the
+        // way down, exactly the continually-trained pathology.
+        for g in 0..groups {
+            let n = name(g);
+            let mut vals = ck.get(&n).unwrap().to_f32_vec()?;
+            for k in 0..(elems / 64).max(1) {
+                let at = (v * 31 + k * 97 + g * 13) % elems;
+                vals[at] = (rng.next_f32() - 0.5) * 0.2;
+            }
+            ck.insert(n, Tensor::from_f32(vec![elems], vals)?);
+        }
+        meta = clean_checkpoint_opts(&build, &ck, "native", Some(&meta), &opts)?;
+    }
+    let ancestor = meta;
+    let anc_ck = ck;
+
+    // Group quarters.
+    let c = (groups / 4).max(1);
+    let conflict = 0..c.min(groups);
+    let ours_only = c.min(groups)..(2 * c).min(groups);
+    let theirs_only = (2 * c).min(groups)..(3 * c).min(groups);
+    let skip = (3 * c).min(groups)..groups;
+
+    // Their branch. Step 1: bump the skip-range groups...
+    let mut their_ck = anc_ck.clone();
+    for g in skip.clone() {
+        let n = name(g);
+        let mut vals = their_ck.get(&n).unwrap().to_f32_vec()?;
+        vals[0] = 7.5;
+        their_ck.insert(n, Tensor::from_f32(vec![elems], vals)?);
+    }
+    let their_step = clean_checkpoint_opts(&build, &their_ck, "native", Some(&ancestor), &opts)?;
+    // ...step 2: restore them verbatim (values now exactly the
+    // ancestor's, chain two links deeper) and apply the real changes.
+    for g in skip.clone() {
+        let n = name(g);
+        their_ck.insert(n.clone(), anc_ck.get(&n).unwrap().clone());
+    }
+    for g in conflict.clone().chain(theirs_only) {
+        let n = name(g);
+        let mut vals = their_ck.get(&n).unwrap().to_f32_vec()?;
+        vals[1] += 1.0;
+        vals[elems - 1] -= 2.0;
+        their_ck.insert(n, Tensor::from_f32(vec![elems], vals)?);
+    }
+    let theirs = clean_checkpoint_opts(&build, &their_ck, "native", Some(&their_step), &opts)?;
+
+    // Our branch: different changes on the conflict + ours-only ranges,
+    // then a dense re-anchor of the skip range (values untouched).
+    let mut our_ck = anc_ck.clone();
+    for g in conflict.chain(ours_only) {
+        let n = name(g);
+        let mut vals = our_ck.get(&n).unwrap().to_f32_vec()?;
+        vals[2] -= 3.0;
+        vals[elems / 2] += 0.5;
+        our_ck.insert(n, Tensor::from_f32(vec![elems], vals)?);
+    }
+    let mut ours = clean_checkpoint_opts(&build, &our_ck, "native", Some(&ancestor), &opts)?;
+    if !skip.is_empty() {
+        let mut sub = ModelMetadata::new("native");
+        for g in skip {
+            let n = name(g);
+            sub.groups.insert(n.clone(), ours.groups[&n].clone());
+        }
+        let (snapped, _) = snapshot_metadata(&build, &sub, threads)?;
+        for (n, entry) in snapped.groups {
+            ours.groups.insert(n, entry);
+        }
+    }
+
+    // The reference output: serial merge, smudged once.
+    let (serial, _) = merge_metadata_opts(
+        &build,
+        Some(&ancestor),
+        &ours,
+        &theirs,
+        &MergeFixture::merge_opts(),
+        &EngineOptions::serial(),
+    )?;
+    let expect = smudge_metadata(&build, &serial, threads)?;
+
+    Ok(MergeFixture {
+        remote_dir,
+        ancestor,
+        ours,
+        theirs,
+        expect,
+        groups,
+        elems,
+        depth,
+    })
+}
+
+/// Measure one configuration: `samples` cold merges (parity asserted
+/// on each), one serial stats pass for round trips, and one
+/// allocation-tracked merge when the binary tracks the heap.
+fn measure(
+    label: &'static str,
+    fixture: &MergeFixture,
+    engine: &EngineOptions,
+) -> Result<MergeRun> {
+    let opts = MergeFixture::merge_opts();
+    let mut samples = Vec::new();
+    let mut resolved = 0;
+    let mut value_skipped = 0;
+    let mut cache_hits = 0;
+    for _ in 0..3 {
+        let (access, _td) = fixture.fresh_access()?;
+        let t0 = Instant::now();
+        let (merged, stats) = merge_metadata_opts(
+            &access,
+            Some(&fixture.ancestor),
+            &fixture.ours,
+            &fixture.theirs,
+            &opts,
+            engine,
+        )?;
+        samples.push(t0.elapsed().as_secs_f64());
+        resolved = stats.resolved.len();
+        value_skipped = stats.value_skipped;
+        cache_hits = stats.cache_hits;
+        // Parity: the merged output must smudge to exactly what the
+        // serial baseline produced.
+        let threads = par::default_threads();
+        ensure!(
+            smudge_metadata(&access, &merged, threads)? == fixture.expect,
+            "config '{label}' merged a different checkpoint"
+        );
+    }
+
+    // Round trips counted with a single-threaded engine: transfer
+    // counters are thread-local, and worker-thread lazy fetches would
+    // otherwise escape the orchestrating thread's counters. The fetch
+    // *set* is thread-count-independent, so this is exact.
+    let (access, _td) = fixture.fresh_access()?;
+    batch::reset_stats();
+    merge_metadata_opts(
+        &access,
+        Some(&fixture.ancestor),
+        &fixture.ours,
+        &fixture.theirs,
+        &opts,
+        &EngineOptions {
+            threads: 1,
+            ..engine.clone()
+        },
+    )?;
+    let round_trips = batch::stats().round_trips();
+
+    let peak_bytes = if alloc::active() {
+        let (access, _td) = fixture.fresh_access()?;
+        let base = alloc::reset_peak();
+        merge_metadata_opts(
+            &access,
+            Some(&fixture.ancestor),
+            &fixture.ours,
+            &fixture.theirs,
+            &opts,
+            engine,
+        )?;
+        Some(alloc::peak_bytes().saturating_sub(base))
+    } else {
+        None
+    };
+
+    Ok(MergeRun {
+        label,
+        merge_secs: Stats { samples }.mean(),
+        peak_bytes,
+        round_trips,
+        resolved,
+        value_skipped,
+        cache_hits,
+    })
+}
+
+/// Run the full ablation: serial baseline, each lever alone, all on.
+pub fn run_ablation(fixture: &MergeFixture) -> Result<Vec<MergeRun>> {
+    let serial = EngineOptions::serial();
+    let threads = par::default_threads();
+    let configs: Vec<(&'static str, EngineOptions)> = vec![
+        ("serial", serial.clone()),
+        (
+            "+cache",
+            EngineOptions {
+                cache: true,
+                ..serial.clone()
+            },
+        ),
+        (
+            "+parallel",
+            EngineOptions {
+                threads,
+                ..serial.clone()
+            },
+        ),
+        (
+            "+prefetch",
+            EngineOptions {
+                prefetch: true,
+                ..serial.clone()
+            },
+        ),
+        (
+            "+skip",
+            EngineOptions {
+                value_skip: true,
+                ..serial
+            },
+        ),
+        ("all on", EngineOptions::default()),
+    ];
+    configs
+        .into_iter()
+        .map(|(label, engine)| measure(label, fixture, &engine))
+        .collect()
+}
+
+/// Render the ablation as a paper-style table.
+pub fn render_runs(fixture: &MergeFixture, runs: &[MergeRun]) -> String {
+    let baseline = runs.first().map(|r| r.merge_secs).unwrap_or(0.0);
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.to_string(),
+                humansize::duration(r.merge_secs),
+                match r.peak_bytes {
+                    Some(b) => humansize::bytes(b as u64),
+                    None => "n/a".to_string(),
+                },
+                r.round_trips.to_string(),
+                r.resolved.to_string(),
+                r.value_skipped.to_string(),
+                r.cache_hits.to_string(),
+                format!("{:.2}x", baseline / r.merge_secs.max(1e-12)),
+            ]
+        })
+        .collect();
+    format!(
+        "Merge ablation: {} groups x {} f32 elems, chains {} deep\n{}",
+        fixture.groups,
+        fixture.elems,
+        fixture.depth,
+        render_table(
+            &[
+                "Engine config",
+                "Merge",
+                "Peak alloc",
+                "Round trips",
+                "Resolved",
+                "Skipped",
+                "Cache hits",
+                "Speedup",
+            ],
+            &rows,
+        )
+    )
+}
+
+/// Encode the ablation as the machine-readable `BENCH_merge.json`
+/// payload (perf trajectory tracking across PRs).
+pub fn runs_to_json(fixture: &MergeFixture, runs: &[MergeRun]) -> Json {
+    let baseline = runs.first().map(|r| r.merge_secs).unwrap_or(0.0);
+    let mut root = JsonObj::new();
+    root.insert("bench", "merge");
+    root.insert("depth", fixture.depth);
+    root.insert("groups", fixture.groups);
+    root.insert("elems", fixture.elems);
+    let rows: Vec<Json> = runs
+        .iter()
+        .map(|r| {
+            let mut o = JsonObj::new();
+            o.insert("label", r.label);
+            o.insert("merge_secs", Json::Num(r.merge_secs));
+            o.insert(
+                "peak_bytes",
+                match r.peak_bytes {
+                    Some(b) => Json::from(b),
+                    None => Json::Null,
+                },
+            );
+            o.insert("round_trips", r.round_trips);
+            o.insert("resolved", r.resolved);
+            o.insert("value_skipped", r.value_skipped);
+            o.insert("cache_hits", r.cache_hits);
+            o.insert(
+                "speedup_vs_serial",
+                Json::Num(baseline / r.merge_secs.max(1e-12)),
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("runs", Json::Arr(rows));
+    Json::Obj(root)
+}
+
+/// `git-theta bench merge [depth] [groups] [elems]` entry point.
+pub fn run_merge_cli(args: &[String]) -> Result<()> {
+    let depth = args.first().and_then(|s| s.parse().ok()).unwrap_or(8usize);
+    let groups = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64usize);
+    let elems = args
+        .get(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16_384usize);
+    let fixture = build_fixture(depth, groups, elems)?;
+    println!(
+        "three-way fixture built: chains {depth} deep on the remote; \
+         merged-output parity asserted on every sample"
+    );
+    let runs = run_ablation(&fixture)?;
+    print!("{}", render_runs(&fixture, &runs));
+    let path = super::write_bench_json("merge", runs_to_json(&fixture, &runs))?;
+    println!("wrote {}", path.display());
+    if let (Some(serial), Some(all_on)) = (runs.first(), runs.last()) {
+        println!(
+            "all-on vs serial: {:.2}x merge speedup, {} -> {} round trips",
+            serial.merge_secs / all_on.merge_secs.max(1e-12),
+            serial.round_trips,
+            all_on.round_trips
+        );
+    }
+    if !alloc::active() {
+        println!("note: peak-alloc tracking inactive (this binary did not install TrackingAlloc)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_small_fixture_end_to_end() {
+        // Small but structurally complete: conflicts, one-sided
+        // changes, and value-equal re-anchors all present; parity is
+        // asserted inside measure() for every row.
+        let fixture = build_fixture(4, 8, 256).unwrap();
+        let max_depth = fixture
+            .ancestor
+            .groups
+            .values()
+            .map(|g| g.chain_depth())
+            .max()
+            .unwrap();
+        assert_eq!(max_depth, 4);
+        let runs = run_ablation(&fixture).unwrap();
+        assert_eq!(runs.len(), 6);
+        let by_label = |l: &str| runs.iter().find(|r| r.label == l).unwrap();
+
+        // The skip lever resolves the re-anchored quarter without a
+        // strategy; everyone else sends those groups to `average`.
+        assert!(by_label("+skip").value_skipped >= 1);
+        assert!(by_label("serial").value_skipped == 0);
+        assert!(by_label("serial").resolved > by_label("+skip").resolved);
+        // The cache lever reuses the shared ancestor prefix.
+        assert!(by_label("+cache").cache_hits >= 1);
+        assert_eq!(by_label("serial").cache_hits, 0);
+        // Batched prefetch collapses round trips vs lazy per-object.
+        assert!(by_label("+prefetch").round_trips < by_label("serial").round_trips);
+
+        let table = render_runs(&fixture, &runs);
+        assert!(table.contains("all on"));
+        assert!(table.contains("Round trips"));
+    }
+
+    #[test]
+    fn json_payload_roundtrips() {
+        let fixture = build_fixture(2, 4, 128).unwrap();
+        let runs = run_ablation(&fixture).unwrap();
+        let json = runs_to_json(&fixture, &runs);
+        let text = json.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("bench").and_then(|v| v.as_str()), Some("merge"));
+        assert_eq!(
+            back.get("runs").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(6)
+        );
+    }
+}

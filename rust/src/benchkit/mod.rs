@@ -7,11 +7,23 @@
 
 pub mod checkout;
 pub mod figure3;
+pub mod merge;
 pub mod transfer;
 pub mod workflow;
 
+use crate::util::json::Json;
 use anyhow::Result;
 use std::time::Instant;
+
+/// Write a machine-readable benchmark record to `BENCH_<name>.json` in
+/// the current directory (CI and the check script run from the repo
+/// root, so successive runs overwrite in place and the perf trajectory
+/// is trackable across PRs by diffing the file).
+pub fn write_bench_json(name: &str, payload: Json) -> Result<std::path::PathBuf> {
+    let path = std::path::PathBuf::from(format!("BENCH_{name}.json"));
+    std::fs::write(&path, payload.to_string_pretty())?;
+    Ok(path)
+}
 
 /// Summary statistics over repeated runs.
 #[derive(Debug, Clone)]
@@ -107,10 +119,11 @@ pub fn cli_bench(args: &[String]) -> Result<()> {
         "figure3" => figure3::run_figure3_cli(&args[1..]),
         "transfer" => transfer::run_transfer_cli(&args[1..]),
         "checkout" => checkout::run_checkout_cli(&args[1..]),
+        "merge" => merge::run_merge_cli(&args[1..]),
         _ => {
             println!(
-                "benchmarks: table1, figure2, figure3, transfer, checkout (full set lives in \
-                 `cargo bench`)\n\
+                "benchmarks: table1, figure2, figure3, transfer, checkout, merge (full set \
+                 lives in `cargo bench`)\n\
                  env: THETA_BENCH_PARAMS=<millions> scales the model"
             );
             Ok(())

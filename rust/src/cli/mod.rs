@@ -55,6 +55,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "clone" => cmd_clone(rest),
         "config" => cmd_config(rest),
         "snapshot" => cmd_snapshot(rest),
+        "gc" => cmd_gc(rest),
         "fsck" => cmd_fsck(rest),
         "bench" => crate::benchkit::cli_bench(rest),
         "help" | "--help" | "-h" => {
@@ -79,11 +80,14 @@ COMMANDS:
   commit -m <msg> [--author a]   commit the index
   status                         working tree status
   log                            commit history
-  diff [<rev> [<rev>]]           diff (parameter-group aware)
+  diff [--exact] [<rev> [<rev>]] diff (parameter-group aware; --exact
+                                 reconstructs changed groups for true L2)
   checkout <rev|branch>          switch revisions (runs smudge filters)
   branch [<name>]                list or create branches
-  merge <branch> [--strategy s] [--group glob=s]
-                                 merge a branch (s: average|us|them|ancestor)
+  merge <branch> [--strategy s] [--group glob=s] [--verbose]
+                                 merge a branch (s: average|us|them|
+                                 ancestor|weighted|fisher); --verbose
+                                 prints merge-engine statistics
   push <remote-dir> [branch] [--pack|--per-object]
                                  push commits + LFS objects (packed by default)
   fetch <remote-dir> [branch]    fetch commits + prefetch model objects as one pack
@@ -93,6 +97,8 @@ COMMANDS:
                                  theta.snapshot-depth)
   snapshot <path...>             re-anchor tracked models as dense entries
                                  (bounds checkout chain depth; then commit)
+  gc [--prune]                   report LFS objects no branch, HEAD, or the
+                                 index references (--prune deletes them)
   fsck                           verify object stores
   bench <name>                   run paper benchmarks (see `bench help`)"
 }
@@ -205,12 +211,26 @@ fn cmd_diff(args: &[String]) -> Result<()> {
         }
         repo.resolve(rev)
     };
-    let (old, new) = match args.len() {
+    let mut exact = false;
+    let mut revs: Vec<&String> = Vec::new();
+    for arg in args {
+        match arg.as_str() {
+            "--exact" => exact = true,
+            other if other.starts_with("--") => bail!("unknown diff flag '{other}'"),
+            _ => revs.push(arg),
+        }
+    }
+    let (old, new) = match revs.len() {
         0 => (None, None), // HEAD vs index
-        1 => (Some(resolve_rev(&args[0])?), None),
-        _ => (Some(resolve_rev(&args[0])?), Some(resolve_rev(&args[1])?)),
+        1 => (Some(resolve_rev(revs[0])?), None),
+        _ => (Some(resolve_rev(revs[0])?), Some(resolve_rev(revs[1])?)),
     };
-    print!("{}", repo.diff(old, new)?);
+    // The exact toggle is process-global (the diff-driver registry has
+    // no option channel); scope it to exactly this invocation.
+    crate::theta::diff::set_exact_diff(exact);
+    let result = repo.diff(old, new);
+    crate::theta::diff::set_exact_diff(false);
+    print!("{}", result?);
     Ok(())
 }
 
@@ -261,6 +281,10 @@ fn cmd_merge(args: &[String]) -> Result<()> {
                     .context("--group format is <glob>=<strategy>")?;
                 opts.per_group.push((glob.to_string(), strat.to_string()));
                 i += 2;
+            }
+            "--verbose" | "-v" => {
+                opts.verbose = true;
+                i += 1;
             }
             other => bail!("unknown merge flag '{other}'"),
         }
@@ -461,6 +485,44 @@ fn cmd_snapshot(args: &[String]) -> Result<()> {
             "'{path}': re-anchored {}/{} group(s), max chain depth {} -> 1; staged \
              (commit to finish)",
             report.reanchored, report.groups, report.max_depth_before
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gc(args: &[String]) -> Result<()> {
+    let mut prune = false;
+    for arg in args {
+        match arg.as_str() {
+            "--prune" => prune = true,
+            other => bail!("unknown gc flag '{other}' (usage: git-theta gc [--prune])"),
+        }
+    }
+    let repo = open_repo()?;
+    let report = crate::theta::collect_garbage(&repo, prune)?;
+    if report.orphaned.is_empty() {
+        println!(
+            "nothing to prune: all {} object(s) referenced by a branch, HEAD, or the index",
+            report.total
+        );
+        return Ok(());
+    }
+    for oid in &report.orphaned {
+        println!("  orphan {}", oid.short());
+    }
+    if report.pruned {
+        println!(
+            "pruned {} orphaned object(s), freed {} ({} live object(s) kept)",
+            report.orphaned.len(),
+            humansize::bytes(report.orphaned_bytes),
+            report.live
+        );
+    } else {
+        println!(
+            "{} orphaned object(s) holding {} ({} live); re-run with --prune to delete",
+            report.orphaned.len(),
+            humansize::bytes(report.orphaned_bytes),
+            report.live
         );
     }
     Ok(())

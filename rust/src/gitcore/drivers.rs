@@ -49,6 +49,10 @@ pub struct MergeOptions {
     pub strategy: Option<String>,
     /// Per-parameter-group strategy overrides: (group glob, strategy).
     pub per_group: Vec<(String, String)>,
+    /// Surface per-file merge-engine statistics (trivial/skipped group
+    /// counts, reconstruction-cache hits and misses, prefetched
+    /// objects) on stderr while merging.
+    pub verbose: bool,
 }
 
 /// Custom merge driver (Git's `merge` attribute).

@@ -7,6 +7,14 @@
 use crate::gitcore::object::Oid;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-process sequence for temp-file names: parallel clean/merge
+/// workers can store identical content concurrently, and two writers
+/// sharing one temp path could rename a partially written file into
+/// place. A unique suffix per put keeps every write-then-rename atomic
+/// for its own writer.
+static PUT_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// A content-addressed object store on the local filesystem.
 #[derive(Debug, Clone)]
@@ -58,10 +66,28 @@ impl LfsStore {
             return Ok((oid, bytes.len() as u64));
         }
         std::fs::create_dir_all(path.parent().unwrap())?;
-        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+        let tmp = path.with_extension(format!(
+            "tmp{}-{}",
+            std::process::id(),
+            PUT_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
         std::fs::write(&tmp, bytes)?;
         std::fs::rename(&tmp, &path)?;
         Ok((oid, bytes.len() as u64))
+    }
+
+    /// Remove an object from the store (no-op if absent). Returns
+    /// whether something was actually deleted. Used by `git-theta gc`
+    /// to drop orphaned objects; callers are responsible for proving
+    /// the object unreferenced first.
+    pub fn delete(&self, oid: &Oid) -> Result<bool> {
+        let path = self.path_for(oid);
+        if !path.exists() {
+            return Ok(false);
+        }
+        std::fs::remove_file(&path)
+            .with_context(|| format!("deleting lfs object {}", oid.short()))?;
+        Ok(true)
     }
 
     /// Retrieve a blob, verifying its hash.
@@ -202,6 +228,21 @@ mod tests {
         assert!(b.fetch_from(&a, &oid).unwrap());
         assert!(!b.fetch_from(&a, &oid).unwrap()); // cached now
         assert_eq!(b.get(&oid).unwrap(), b"shared weights");
+    }
+
+    #[test]
+    fn delete_removes_only_the_target() {
+        let td = TempDir::new("lfs").unwrap();
+        let store = LfsStore::open(td.path());
+        let (a, _) = store.put(b"keep me").unwrap();
+        let (b, _) = store.put(b"drop me").unwrap();
+        assert!(store.delete(&b).unwrap());
+        assert!(!store.contains(&b));
+        assert!(store.contains(&a));
+        assert_eq!(store.get(&a).unwrap(), b"keep me");
+        // Deleting again (or a ghost) is a clean no-op.
+        assert!(!store.delete(&b).unwrap());
+        assert!(!store.delete(&Oid::of_bytes(b"ghost")).unwrap());
     }
 
     #[test]

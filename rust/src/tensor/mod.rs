@@ -11,5 +11,8 @@ mod ops;
 mod tensor;
 
 pub use dtype::{bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, DType};
-pub use ops::{add, allclose, axpy, euclidean_distance, scale, sub, weighted_average};
+pub use ops::{
+    add, add_scalar, allclose, axpy, div, euclidean_distance, fisher_average, mul, scale, sub,
+    weighted_average,
+};
 pub use tensor::{Tensor, TensorError};

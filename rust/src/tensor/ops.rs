@@ -50,6 +50,34 @@ pub fn axpy(a: &Tensor, alpha: f32, b: &Tensor) -> Result<Tensor, TensorError> {
     Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)
 }
 
+/// a * b elementwise (Hadamard product), computed in f32, result in
+/// a's dtype. Used by importance-weighted merges (Fisher averaging).
+pub fn mul(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
+    check_same(a, b)?;
+    let av = a.to_f32_vec()?;
+    let bv = b.to_f32_vec()?;
+    let out: Vec<f32> = av.iter().zip(&bv).map(|(x, y)| x * y).collect();
+    Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)
+}
+
+/// a / b elementwise, computed in f32, result in a's dtype. IEEE
+/// semantics: division by zero yields ±inf/NaN rather than erroring —
+/// callers guarding with an epsilon (Fisher) never hit it.
+pub fn div(a: &Tensor, b: &Tensor) -> Result<Tensor, TensorError> {
+    check_same(a, b)?;
+    let av = a.to_f32_vec()?;
+    let bv = b.to_f32_vec()?;
+    let out: Vec<f32> = av.iter().zip(&bv).map(|(x, y)| x / y).collect();
+    Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)
+}
+
+/// a + s elementwise (scalar broadcast), result in a's dtype.
+pub fn add_scalar(a: &Tensor, s: f32) -> Result<Tensor, TensorError> {
+    let av = a.to_f32_vec()?;
+    let out: Vec<f32> = av.iter().map(|x| x + s).collect();
+    Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)
+}
+
 /// Weighted average of k tensors (f64 accumulation) — the paper's
 /// parameter-averaging merge (Wortsman et al. 2022; Choshen et al. 2022b).
 pub fn weighted_average(tensors: &[&Tensor], weights: &[f64]) -> Result<Tensor, TensorError> {
@@ -68,6 +96,33 @@ pub fn weighted_average(tensors: &[&Tensor], weights: &[f64]) -> Result<Tensor, 
     }
     let out: Vec<f32> = acc.iter().map(|a| (*a / total) as f32).collect();
     Tensor::from_f32_as(tensors[0].dtype(), tensors[0].shape().to_vec(), &out)
+}
+
+/// Fisher-style importance-weighted average of two branches against a
+/// common ancestor (Matena & Raffel 2022): each branch's per-element
+/// importance is its squared movement from the ancestor (+`eps` so
+/// elements neither branch moved average uniformly). One fused pass
+/// with f64 accumulation and no intermediate tensors — the merge
+/// driver calls this once per conflicted group, so the k-tensor
+/// op-chain equivalent would cost several full-tensor copies here.
+pub fn fisher_average(
+    a: &Tensor,
+    b: &Tensor,
+    base: &Tensor,
+    eps: f64,
+) -> Result<Tensor, TensorError> {
+    check_same(a, b)?;
+    check_same(a, base)?;
+    let av = a.to_f32_vec()?;
+    let bv = b.to_f32_vec()?;
+    let cv = base.to_f32_vec()?;
+    let mut out = Vec::with_capacity(av.len());
+    for ((&x, &y), &c) in av.iter().zip(&bv).zip(&cv) {
+        let fa = (x as f64 - c as f64).powi(2) + eps;
+        let fb = (y as f64 - c as f64).powi(2) + eps;
+        out.push(((fa * x as f64 + fb * y as f64) / (fa + fb)) as f32);
+    }
+    Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)
 }
 
 /// Euclidean distance ||a - b||_2 in f64.
@@ -125,6 +180,25 @@ mod tests {
             axpy(&a, 0.5, &b).unwrap().to_f32_vec().unwrap(),
             vec![6., 12., 18.]
         );
+        assert_eq!(
+            mul(&a, &b).unwrap().to_f32_vec().unwrap(),
+            vec![10., 40., 90.]
+        );
+        assert_eq!(div(&b, &a).unwrap().to_f32_vec().unwrap(), vec![10.; 3]);
+        assert_eq!(
+            add_scalar(&a, 0.5).unwrap().to_f32_vec().unwrap(),
+            vec![1.5, 2.5, 3.5]
+        );
+    }
+
+    #[test]
+    fn div_by_zero_is_ieee() {
+        let a = t(&[1., -1., 0.]);
+        let z = t(&[0., 0., 0.]);
+        let out = div(&a, &z).unwrap().to_f32_vec().unwrap();
+        assert_eq!(out[0], f32::INFINITY);
+        assert_eq!(out[1], f32::NEG_INFINITY);
+        assert!(out[2].is_nan());
     }
 
     #[test]
@@ -146,6 +220,20 @@ mod tests {
         // Weighted.
         let w = weighted_average(&[&a, &b], &[3.0, 1.0]).unwrap();
         assert_eq!(w.to_f32_vec().unwrap(), vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn fisher_average_weights_by_movement() {
+        let base = t(&[0.0, 0.0, 1.0]);
+        let a = t(&[2.0, 0.0, 1.0]); // moved elem 0 hard
+        let b = t(&[0.1, 3.0, 1.0]); // moved elem 1 hard
+        let out = fisher_average(&a, &b, &base, 1e-12).unwrap();
+        let v = out.to_f32_vec().unwrap();
+        assert!(v[0] > 1.9, "{v:?}"); // a's movement dominates
+        assert!(v[1] > 2.9, "{v:?}"); // b's movement dominates
+        assert_eq!(v[2], 1.0); // untouched element: uniform average
+        // Shape mismatches are rejected like every other elementwise op.
+        assert!(fisher_average(&a, &b, &t(&[0.0]), 1e-12).is_err());
     }
 
     #[test]

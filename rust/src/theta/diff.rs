@@ -4,13 +4,29 @@
 //! identical", this driver reports which parameter groups were added,
 //! removed, or modified, with shapes, dtypes, update types, and the
 //! storage cost of each change.
+//!
+//! Classification is metadata-only and never reconstructs a tensor:
+//! unchanged groups compare byte-identically, and groups whose
+//! metadata changed but whose LSH signatures prove the *values*
+//! unchanged (e.g. a `git-theta snapshot` re-anchor) are reported as
+//! re-anchored rather than modified. The optional **exact** mode
+//! ([`exact_diff`], CLI `git-theta diff --exact`) reconstructs only
+//! the genuinely modified groups — both sides in parallel, chains
+//! deduplicated through a shared [`ReconstructionCache`], every
+//! missing object prefetched as one pack — so its cost scales with
+//! the changed parameter set, not with model size.
 
 use crate::gitcore::drivers::DiffDriver;
+use crate::gitcore::object::Oid;
 use crate::gitcore::repo::Repository;
+use crate::tensor::euclidean_distance;
+use crate::theta::checkout::{self, ReconstructionCache};
+use crate::theta::filter::ObjectAccess;
 use crate::theta::metadata::{GroupMetadata, ModelMetadata};
-use crate::util::humansize;
+use crate::util::{humansize, par};
 use anyhow::Result;
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// The `diff=theta` driver.
 pub struct ThetaDiff;
@@ -18,14 +34,23 @@ pub struct ThetaDiff;
 /// Structured diff between two metadata versions.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ModelDiff {
+    /// Groups present only in the new version.
     pub added: Vec<String>,
+    /// Groups present only in the old version.
     pub removed: Vec<String>,
+    /// Groups whose metadata *and* values changed.
     pub modified: Vec<String>,
+    /// Groups whose metadata changed but whose LSH signatures prove
+    /// the values unchanged (e.g. a snapshot re-anchor). Never worth
+    /// reconstructing.
+    pub reanchored: Vec<String>,
+    /// Groups carried forward byte-identically.
     pub unchanged: usize,
 }
 
 impl ModelDiff {
     /// Compute the group-level diff between two metadata versions.
+    /// Pure metadata/LSH comparison — no tensor is ever reconstructed.
     pub fn between(old: Option<&ModelMetadata>, new: Option<&ModelMetadata>) -> ModelDiff {
         let empty = ModelMetadata::new("");
         let old = old.unwrap_or(&empty);
@@ -34,8 +59,9 @@ impl ModelDiff {
         for (name, entry) in &new.groups {
             match old.groups.get(name) {
                 None => diff.added.push(name.clone()),
-                Some(o) if o != entry => diff.modified.push(name.clone()),
-                Some(_) => diff.unchanged += 1,
+                Some(o) if o == entry => diff.unchanged += 1,
+                Some(o) if o.values_match(entry) => diff.reanchored.push(name.clone()),
+                Some(_) => diff.modified.push(name.clone()),
             }
         }
         for name in old.groups.keys() {
@@ -46,8 +72,13 @@ impl ModelDiff {
         diff
     }
 
+    /// True when nothing changed (not even a value-preserving
+    /// re-anchor, which still rewrites the metadata Git versions).
     pub fn is_empty(&self) -> bool {
-        self.added.is_empty() && self.removed.is_empty() && self.modified.is_empty()
+        self.added.is_empty()
+            && self.removed.is_empty()
+            && self.modified.is_empty()
+            && self.reanchored.is_empty()
     }
 }
 
@@ -102,6 +133,14 @@ pub fn render_diff(
             );
         }
     }
+    for name in &diff.reanchored {
+        let n = &new.unwrap().groups[name];
+        let _ = writeln!(
+            out,
+            "  = re-anchored {name}  [{}] (values unchanged)",
+            describe(n)
+        );
+    }
     let _ = writeln!(
         out,
         "  = {} groups unchanged (stored as references)",
@@ -110,10 +149,108 @@ pub fn render_diff(
     out
 }
 
+/// One exact value-level delta from [`exact_diff`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValueDelta {
+    /// Parameter-group name.
+    pub group: String,
+    /// Exact Euclidean distance between the two reconstructed values;
+    /// `None` when the shapes/dtypes differ (no distance is defined).
+    pub l2: Option<f64>,
+}
+
+/// Exact value-level diff: reconstruct *only* the modified groups and
+/// compute their true Euclidean distance.
+///
+/// Cost scales with the changed parameter set: groups the metadata or
+/// LSH comparison already proves unchanged (including re-anchors) are
+/// never reconstructed — their objects are not even fetched. Modified
+/// groups reconstruct on [`par`] workers, both sides sharing one
+/// [`ReconstructionCache`] (old and new chains usually share a
+/// prefix), with every missing object prefetched up front as one pack.
+pub fn exact_diff(
+    access: &ObjectAccess,
+    old: &ModelMetadata,
+    new: &ModelMetadata,
+    threads: usize,
+) -> Result<Vec<ValueDelta>> {
+    let diff = ModelDiff::between(Some(old), Some(new));
+    let pairs: Vec<(&String, &GroupMetadata, &GroupMetadata)> = diff
+        .modified
+        .iter()
+        .map(|name| {
+            let o = &old.groups[name];
+            let n = &new.groups[name];
+            (name, o, n)
+        })
+        .collect();
+
+    // One negotiation + one pack for exactly the objects the modified
+    // groups' chains reference.
+    let mut oids: Vec<Oid> = Vec::new();
+    for (_, o, n) in &pairs {
+        o.all_oids(&mut oids);
+        n.all_oids(&mut oids);
+    }
+    oids.sort();
+    oids.dedup();
+    access.prefetch(&oids)?;
+
+    let cache = ReconstructionCache::new();
+    par::try_par_map(&pairs, threads, |_, pair| {
+        let (name, o, n) = *pair;
+        if o.tensor.shape != n.tensor.shape || o.tensor.dtype != n.tensor.dtype {
+            return Ok(ValueDelta {
+                group: name.clone(),
+                l2: None,
+            });
+        }
+        let a = checkout::reconstruct(access, o, Some(&cache))?;
+        let b = checkout::reconstruct(access, n, Some(&cache))?;
+        Ok(ValueDelta {
+            group: name.clone(),
+            l2: Some(euclidean_distance(&a, &b)?),
+        })
+    })
+}
+
+/// Render the exact value-level distances appended in `--exact` mode.
+pub fn render_exact(deltas: &[ValueDelta]) -> String {
+    let mut out = String::new();
+    for d in deltas {
+        match d.l2 {
+            Some(l2) => {
+                let _ = writeln!(out, "  exact: {}  L2 distance = {l2:.6e}", d.group);
+            }
+            None => {
+                let _ = writeln!(out, "  exact: {}  (shape changed; no distance)", d.group);
+            }
+        }
+    }
+    out
+}
+
+/// Process-wide `--exact` toggle for the registered diff driver (the
+/// driver registry's `diff` hook carries no option channel; the CLI
+/// sets this around a `git-theta diff --exact` invocation, mirroring
+/// `lfs::batch::set_per_object_mode`).
+static EXACT_MODE: AtomicBool = AtomicBool::new(false);
+
+/// Enable or disable exact (value-level) rendering for subsequent
+/// [`ThetaDiff`] invocations in this process.
+pub fn set_exact_diff(on: bool) {
+    EXACT_MODE.store(on, Ordering::Relaxed);
+}
+
+/// Whether exact (value-level) rendering is currently enabled.
+pub fn exact_diff_enabled() -> bool {
+    EXACT_MODE.load(Ordering::Relaxed)
+}
+
 impl DiffDriver for ThetaDiff {
     fn diff(
         &self,
-        _repo: &Repository,
+        repo: &Repository,
         path: &str,
         old: Option<&[u8]>,
         new: Option<&[u8]>,
@@ -121,7 +258,17 @@ impl DiffDriver for ThetaDiff {
         let parse = |bytes: Option<&[u8]>| -> Option<ModelMetadata> {
             bytes.and_then(|b| ModelMetadata::from_bytes(b).ok())
         };
-        Ok(render_diff(path, parse(old).as_ref(), parse(new).as_ref()))
+        let old = parse(old);
+        let new = parse(new);
+        let mut out = render_diff(path, old.as_ref(), new.as_ref());
+        if exact_diff_enabled() {
+            if let (Some(o), Some(n)) = (&old, &new) {
+                let access = ObjectAccess::for_repo(repo)?;
+                let deltas = exact_diff(&access, o, n, par::default_threads())?;
+                out.push_str(&render_exact(&deltas));
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -134,8 +281,7 @@ mod tests {
     use crate::theta::filter::{clean_checkpoint, ObjectAccess};
     use crate::util::tmp::TempDir;
 
-    fn make_versions() -> (ModelMetadata, ModelMetadata) {
-        let td = TempDir::new("diff").unwrap();
+    fn make_versions_in(td: &TempDir) -> (ObjectAccess, ModelMetadata, ModelMetadata) {
         let acc = ObjectAccess {
             store: LfsStore::open(td.path()),
             remote: None,
@@ -151,6 +297,12 @@ mod tests {
         ck2.insert("w", Tensor::from_f32(vec![4, 4], w).unwrap());
         ck2.insert("new_head", Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap());
         let v2 = clean_checkpoint(&acc, &ck2, "safetensors", Some(&v1), None, 1).unwrap();
+        (acc, v1, v2)
+    }
+
+    fn make_versions() -> (ModelMetadata, ModelMetadata) {
+        let td = TempDir::new("diff").unwrap();
+        let (_, v1, v2) = make_versions_in(&td);
         (v1, v2)
     }
 
@@ -161,6 +313,7 @@ mod tests {
         assert_eq!(diff.added, vec!["new_head"]);
         assert_eq!(diff.removed, vec!["b"]);
         assert_eq!(diff.modified, vec!["w"]);
+        assert!(diff.reanchored.is_empty());
         assert_eq!(diff.unchanged, 0);
     }
 
@@ -188,5 +341,113 @@ mod tests {
         let (v1, _) = make_versions();
         let diff = ModelDiff::between(None, Some(&v1));
         assert_eq!(diff.added.len(), 2);
+    }
+
+    #[test]
+    fn reanchor_classified_by_lsh_not_as_modified() {
+        let td = TempDir::new("diff-reanchor").unwrap();
+        let acc = ObjectAccess {
+            store: LfsStore::open(td.path()),
+            remote: None,
+        };
+        // Grow a chain, then snapshot: metadata changes, values don't.
+        let deep_opts = crate::theta::filter::CleanOptions {
+            snapshot_depth: None,
+            threads: 1,
+            ..Default::default()
+        };
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![8], vec![0.25; 8]).unwrap());
+        let mut meta =
+            crate::theta::filter::clean_checkpoint_opts(&acc, &ck, "safetensors", None, &deep_opts)
+                .unwrap();
+        for i in 0..3 {
+            let mut vals = ck.get("w").unwrap().to_f32_vec().unwrap();
+            vals[i] += 1.0;
+            ck.insert("w", Tensor::from_f32(vec![8], vals).unwrap());
+            meta = crate::theta::filter::clean_checkpoint_opts(
+                &acc,
+                &ck,
+                "safetensors",
+                Some(&meta),
+                &deep_opts,
+            )
+            .unwrap();
+        }
+        let (snapped, report) = crate::theta::checkout::snapshot_metadata(&acc, &meta, 1).unwrap();
+        assert_eq!(report.reanchored, 1);
+
+        let diff = ModelDiff::between(Some(&meta), Some(&snapped));
+        assert_eq!(diff.reanchored, vec!["w"]);
+        assert!(diff.modified.is_empty());
+        assert!(!diff.is_empty()); // the metadata Git sees did change
+        let text = render_diff("m", Some(&meta), Some(&snapped));
+        assert!(text.contains("re-anchored w"), "{text}");
+
+        // Exact mode has nothing to reconstruct for a pure re-anchor.
+        let deltas = exact_diff(&acc, &meta, &snapped, 1).unwrap();
+        assert!(deltas.is_empty());
+    }
+
+    #[test]
+    fn exact_diff_distances_and_shape_changes() {
+        let td = TempDir::new("diff-exact").unwrap();
+        let (acc, v1, v2) = make_versions_in(&td);
+        let deltas = exact_diff(&acc, &v1, &v2, 2).unwrap();
+        assert_eq!(deltas.len(), 1);
+        assert_eq!(deltas[0].group, "w");
+        // One element moved 0.5 -> 9.0: exact L2 is 8.5.
+        let l2 = deltas[0].l2.unwrap();
+        assert!((l2 - 8.5).abs() < 1e-6, "{l2}");
+        let text = render_exact(&deltas);
+        assert!(text.contains("L2 distance = 8.5"), "{text}");
+
+        // Shape changes are reported without a distance.
+        let mut ck3 = Checkpoint::new();
+        ck3.insert("w", Tensor::from_f32(vec![2, 4], vec![0.5; 8]).unwrap());
+        let v3 = clean_checkpoint(&acc, &ck3, "safetensors", Some(&v1), None, 1).unwrap();
+        let deltas = exact_diff(&acc, &v1, &v3, 1).unwrap();
+        assert_eq!(deltas.len(), 1);
+        assert_eq!(deltas[0].l2, None);
+        assert!(render_exact(&deltas).contains("shape changed"));
+    }
+
+    #[test]
+    fn exact_diff_never_touches_unchanged_groups() {
+        let td = TempDir::new("diff-skip").unwrap();
+        let acc = ObjectAccess {
+            store: LfsStore::open(td.path()),
+            remote: None,
+        };
+        // Three groups; only "w" changes between versions.
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![8], vec![0.5; 8]).unwrap());
+        ck.insert("kept_a", Tensor::from_f32(vec![8], vec![1.0; 8]).unwrap());
+        ck.insert("kept_b", Tensor::from_f32(vec![4], vec![2.0; 4]).unwrap());
+        let v1 = clean_checkpoint(&acc, &ck, "safetensors", None, None, 1).unwrap();
+        let mut ck2 = ck.clone();
+        let mut w = vec![0.5f32; 8];
+        w[0] = 3.5;
+        ck2.insert("w", Tensor::from_f32(vec![8], w).unwrap());
+        let v2 = clean_checkpoint(&acc, &ck2, "safetensors", Some(&v1), None, 1).unwrap();
+        let diff = ModelDiff::between(Some(&v1), Some(&v2));
+        assert_eq!(diff.unchanged, 2);
+        assert_eq!(diff.modified, vec!["w"]);
+
+        // Delete every object the unchanged groups reference. If
+        // exact_diff reconstructed them, the store would report a
+        // missing object and the whole diff would fail.
+        let mut changed: Vec<crate::gitcore::object::Oid> = Vec::new();
+        v1.groups["w"].all_oids(&mut changed);
+        v2.groups["w"].all_oids(&mut changed);
+        for oid in acc.store.list().unwrap() {
+            if !changed.contains(&oid) {
+                assert!(acc.store.delete(&oid).unwrap());
+            }
+        }
+        let deltas = exact_diff(&acc, &v1, &v2, 2).unwrap();
+        assert_eq!(deltas.len(), 1);
+        assert_eq!(deltas[0].group, "w");
+        assert!((deltas[0].l2.unwrap() - 3.0).abs() < 1e-6);
     }
 }

@@ -1,0 +1,210 @@
+//! `git-theta gc` — drop LFS objects no reachable revision references.
+//!
+//! Snapshot re-anchoring, abandoned staging runs, and merge-strategy
+//! resolutions that were never committed all write content-addressed
+//! objects into `.theta/lfs/objects` that nothing reachable points at
+//! anymore. This module computes the live set — every object
+//! referenced by any commit reachable from any branch or HEAD, plus
+//! everything the index currently stages — and reports (dry-run) or
+//! deletes (`--prune`) the rest.
+//!
+//! Safety model: liveness is computed from the same metadata walk the
+//! transfer hooks use ([`referenced_lfs_oids`]), so an object is only
+//! ever considered garbage when no reachable metadata chain or LFS
+//! pointer names it. Deletion is opt-in; the default invocation only
+//! reports.
+
+use crate::gitcore::index::Index;
+use crate::gitcore::mergebase::ancestors;
+use crate::gitcore::object::Oid;
+use crate::gitcore::repo::Repository;
+use crate::lfs::{LfsStore, Pointer};
+use crate::theta::hooks::referenced_lfs_oids;
+use crate::theta::metadata::ModelMetadata;
+use anyhow::Result;
+use std::collections::HashSet;
+
+/// What a gc pass found (and, with prune, removed).
+#[derive(Debug, Clone, Default)]
+pub struct GcReport {
+    /// Objects in the local store before the pass.
+    pub total: usize,
+    /// Objects referenced by a reachable commit or the index.
+    pub live: usize,
+    /// Unreferenced oids, sorted (deleted when pruning).
+    pub orphaned: Vec<Oid>,
+    /// Bytes held by the orphaned objects.
+    pub orphaned_bytes: u64,
+    /// Whether the orphans were actually deleted.
+    pub pruned: bool,
+}
+
+/// Every LFS oid referenced by any commit reachable from any branch or
+/// HEAD, plus everything the index currently stages (a staged-but-
+/// uncommitted model must survive a gc).
+pub fn live_oids(repo: &Repository) -> Result<HashSet<Oid>> {
+    let mut tips: Vec<Oid> = repo
+        .refs()
+        .branches()?
+        .into_iter()
+        .map(|(_, oid)| oid)
+        .collect();
+    if let Some(head) = repo.head_commit()? {
+        tips.push(head); // covers a detached HEAD
+    }
+    let mut commits: HashSet<Oid> = HashSet::new();
+    for tip in tips {
+        commits.extend(ancestors(repo.odb(), tip)?);
+    }
+
+    let mut live: HashSet<Oid> = HashSet::new();
+    let mut seen_trees: HashSet<Oid> = HashSet::new();
+    for commit in &commits {
+        let c = repo.odb().read_commit(commit)?;
+        // Many commits share trees (e.g. merges, reverts); walk each
+        // tree's blobs once.
+        if !seen_trees.insert(c.tree) {
+            continue;
+        }
+        let tree = repo.odb().read_tree(&c.tree)?;
+        live.extend(referenced_lfs_oids(repo, &tree)?);
+    }
+
+    let index = Index::load(repo.theta_dir())?;
+    for (_, entry) in index.iter() {
+        let blob = repo.odb().read_blob(&entry.oid)?;
+        if ModelMetadata::is_metadata(&blob) {
+            if let Ok(meta) = ModelMetadata::from_bytes(&blob) {
+                live.extend(meta.all_oids());
+            }
+        } else {
+            live.extend(Pointer::oid_of_blob(&blob));
+        }
+    }
+    Ok(live)
+}
+
+/// Find — and with `prune`, delete — store objects unreachable from
+/// every branch, HEAD, and the index. Dry-run by default: callers must
+/// opt into deletion.
+pub fn collect_garbage(repo: &Repository, prune: bool) -> Result<GcReport> {
+    let store = LfsStore::open(repo.theta_dir());
+    let live = live_oids(repo)?;
+    let mut stored = store.list()?;
+    stored.sort();
+
+    let mut report = GcReport {
+        total: stored.len(),
+        ..Default::default()
+    };
+    for oid in stored {
+        if live.contains(&oid) {
+            report.live += 1;
+        } else {
+            report.orphaned_bytes += store.size_of(&oid).unwrap_or(0);
+            report.orphaned.push(oid);
+        }
+    }
+    if prune {
+        for oid in &report.orphaned {
+            store.delete(oid)?;
+        }
+        report.pruned = true;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::{Checkpoint, CheckpointFormat, SafetensorsFormat};
+    use crate::gitcore::attributes::Attributes;
+    use crate::tensor::Tensor;
+    use crate::util::tmp::TempDir;
+
+    fn setup_repo() -> (TempDir, Repository) {
+        crate::init();
+        let td = TempDir::new("gc").unwrap();
+        let repo = Repository::init(td.path()).unwrap();
+        Attributes::add_line(
+            repo.worktree(),
+            "*.safetensors filter=theta diff=theta merge=theta",
+        )
+        .unwrap();
+        (td, repo)
+    }
+
+    fn write_ck(td: &TempDir, w: Vec<f32>) {
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![w.len()], w).unwrap());
+        SafetensorsFormat
+            .save_file(&ck, &td.join("model.safetensors"))
+            .unwrap();
+    }
+
+    #[test]
+    fn gc_reports_then_prunes_orphans_only() {
+        let (td, repo) = setup_repo();
+        write_ck(&td, vec![1.0; 64]);
+        repo.add(&["model.safetensors", ".thetaattributes"]).unwrap();
+        repo.commit("v1", "t").unwrap();
+
+        let store = LfsStore::open(repo.theta_dir());
+        let live_before = store.list().unwrap().len();
+        assert!(live_before >= 1);
+        let (junk, _) = store.put(b"abandoned merge resolution").unwrap();
+
+        // Dry run: reports the orphan, deletes nothing.
+        let report = collect_garbage(&repo, false).unwrap();
+        assert_eq!(report.total, live_before + 1);
+        assert_eq!(report.live, live_before);
+        assert_eq!(report.orphaned, vec![junk]);
+        assert!(report.orphaned_bytes > 0);
+        assert!(!report.pruned);
+        assert!(store.contains(&junk));
+
+        // Prune: the orphan goes, live objects stay, checkout works.
+        let report = collect_garbage(&repo, true).unwrap();
+        assert!(report.pruned);
+        assert!(!store.contains(&junk));
+        assert_eq!(store.list().unwrap().len(), live_before);
+        repo.checkout("main").unwrap();
+
+        // A second pass finds nothing.
+        let report = collect_garbage(&repo, true).unwrap();
+        assert!(report.orphaned.is_empty());
+    }
+
+    #[test]
+    fn staged_but_uncommitted_objects_are_live() {
+        let (td, repo) = setup_repo();
+        write_ck(&td, vec![2.0; 32]);
+        repo.add(&["model.safetensors", ".thetaattributes"]).unwrap();
+        // No commit: the only reference is the index.
+        let store = LfsStore::open(repo.theta_dir());
+        assert!(!store.list().unwrap().is_empty());
+        let report = collect_garbage(&repo, true).unwrap();
+        assert!(report.orphaned.is_empty(), "{report:?}");
+        assert_eq!(report.live, report.total);
+    }
+
+    #[test]
+    fn all_branches_keep_their_objects() {
+        let (td, repo) = setup_repo();
+        write_ck(&td, vec![1.0; 32]);
+        repo.add(&["model.safetensors", ".thetaattributes"]).unwrap();
+        repo.commit("base", "t").unwrap();
+        repo.create_branch("side").unwrap();
+        repo.checkout("side").unwrap();
+        write_ck(&td, vec![5.0; 32]);
+        repo.add(&["model.safetensors"]).unwrap();
+        repo.commit("side edit", "t").unwrap();
+        repo.checkout("main").unwrap();
+
+        // Objects referenced only by `side` must stay live from main.
+        let report = collect_garbage(&repo, true).unwrap();
+        assert!(report.orphaned.is_empty(), "{report:?}");
+        repo.checkout("side").unwrap();
+        repo.checkout("main").unwrap();
+    }
+}

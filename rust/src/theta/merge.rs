@@ -9,15 +9,43 @@
 //! ones. Built-ins mirror the paper: take ours ("us"), take theirs
 //! ("them"), keep the common ancestor, or **average the parameters**
 //! (Wortsman et al. 2022; Choshen et al. 2022b).
+//!
+//! Resolution runs on the **group-parallel merge engine**
+//! ([`merge_metadata_opts`]), which layers four independent levers on
+//! top of the per-group strategy calls (each toggleable via
+//! [`EngineOptions`], measured by `bench merge`):
+//!
+//! * **Shared reconstruction cache** — one
+//!   [`ReconstructionCache`] per invocation, keyed by
+//!   [`GroupMetadata::chain_key`], shared by every strategy on every
+//!   worker. The ancestor/ours/theirs chains of one conflict share
+//!   their ancestor prefix, so the prefix is decoded once instead of
+//!   once per side.
+//! * **Batched prefetch** — every LFS object any conflicted group's
+//!   three sides reference is collected up front and fetched as a
+//!   single negotiation + pack, instead of a lazy download per missing
+//!   object mid-resolution.
+//! * **Parallel resolution** — independent conflicted groups resolve
+//!   concurrently on [`par`] workers; output assembly follows input
+//!   (name) order, so the merged metadata is deterministic regardless
+//!   of thread count.
+//! * **Change-skipping** — a conflict whose LSH signatures prove one
+//!   side value-unchanged (e.g. a `git-theta snapshot` re-anchor that
+//!   rewrote metadata but not values) is resolved without any
+//!   reconstruction, so merge cost scales with the *changed* parameter
+//!   set rather than model size.
 
 use crate::gitcore::drivers::{MergeDriver, MergeOptions, MergeOutcome};
+use crate::gitcore::object::Oid;
 use crate::gitcore::repo::Repository;
-use crate::tensor::weighted_average;
-use crate::theta::filter::{reconstruct_group, store_payload, ObjectAccess};
+use crate::tensor::{weighted_average, Tensor};
+use crate::theta::checkout::{self, ReconstructionCache};
+use crate::theta::filter::{store_payload, ObjectAccess};
 use crate::theta::lsh::LshSignature;
 use crate::theta::metadata::{GroupMetadata, ModelMetadata};
 use crate::theta::updates::UpdatePayload;
 use crate::util::glob::Glob;
+use crate::util::par;
 use anyhow::{bail, Context, Result};
 use once_cell::sync::Lazy;
 use std::collections::BTreeSet;
@@ -36,12 +64,32 @@ pub enum ConflictKind {
 
 /// Everything a strategy needs to resolve one group.
 pub struct ConflictCtx<'a> {
+    /// Name of the conflicted parameter group.
     pub group: &'a str,
+    /// How the group conflicts.
     pub kind: ConflictKind,
+    /// The group's entry at the merge base (None for [`ConflictKind::BothAdded`]).
     pub ancestor: Option<&'a GroupMetadata>,
+    /// The group's entry on our branch (None when we deleted it).
     pub ours: Option<&'a GroupMetadata>,
+    /// The group's entry on their branch (None when they deleted it).
     pub theirs: Option<&'a GroupMetadata>,
+    /// LFS access for reconstructing chains and storing resolutions.
     pub access: &'a ObjectAccess,
+    /// The engine's shared per-invocation reconstruction cache (None
+    /// when the cache lever is off). Strategies reconstruct through
+    /// [`ConflictCtx::reconstruct`] so chain prefixes shared between
+    /// sides — or with other groups on other workers — decode once.
+    pub cache: Option<&'a ReconstructionCache>,
+}
+
+impl ConflictCtx<'_> {
+    /// Reconstruct a chain's full tensor through the engine's shared
+    /// [`ReconstructionCache`] (plain uncached resolution when the
+    /// engine runs without one).
+    pub fn reconstruct(&self, entry: &GroupMetadata) -> Result<Tensor> {
+        checkout::reconstruct(self.access, entry, self.cache)
+    }
 }
 
 /// A merge-strategy plug-in.
@@ -58,6 +106,10 @@ pub trait MergeStrategy: Send + Sync {
 
     /// Resolve: `Ok(Some(entry))` keeps the group with that metadata,
     /// `Ok(None)` removes the group from the merged model.
+    ///
+    /// Called from the engine's worker threads: implementations must
+    /// not rely on process-global mutable state beyond what their
+    /// `Send + Sync` bound already promises.
     fn resolve(&self, ctx: &ConflictCtx) -> Result<Option<GroupMetadata>>;
 }
 
@@ -123,8 +175,8 @@ impl MergeStrategy for Average {
     fn resolve(&self, ctx: &ConflictCtx) -> Result<Option<GroupMetadata>> {
         let ours = ctx.ours.context("average: missing our version")?;
         let theirs = ctx.theirs.context("average: missing their version")?;
-        let a = reconstruct_group(ctx.access, ours)?;
-        let b = reconstruct_group(ctx.access, theirs)?;
+        let a = ctx.reconstruct(ours)?;
+        let b = ctx.reconstruct(theirs)?;
         if a.shape() != b.shape() {
             bail!(
                 "average: group '{}' has incompatible shapes {:?} vs {:?}",
@@ -216,14 +268,143 @@ fn select_strategy(
     );
 }
 
-/// Merge three metadata versions group-by-group.
-pub fn merge_metadata(
+/// The merge engine's tuning levers. Defaults enable everything; the
+/// `bench merge` ablation toggles each independently against the
+/// serial baseline (`EngineOptions::serial`).
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Worker threads for parallel conflict resolution (1 = serial).
+    pub threads: usize,
+    /// Share one [`ReconstructionCache`] across every resolution of the
+    /// invocation, so chain prefixes common to ancestor/ours/theirs —
+    /// or to several groups — decode once.
+    pub cache: bool,
+    /// Collect every missing LFS object across all three sides of every
+    /// conflict up front and fetch them as one negotiation + pack,
+    /// instead of a lazy per-object download mid-resolution.
+    pub prefetch: bool,
+    /// Auto-resolve conflicts whose LSH signatures prove one side
+    /// value-unchanged (no reconstruction, no strategy call) — the way
+    /// Git auto-merges identical hunks regardless of `-X`. A per-group
+    /// `--group <glob>=<strategy>` override always wins over skipping.
+    /// See [`merge_metadata_opts`] for the exact picking rules.
+    pub value_skip: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> EngineOptions {
+        EngineOptions {
+            threads: par::default_threads(),
+            cache: true,
+            prefetch: true,
+            value_skip: true,
+        }
+    }
+}
+
+impl EngineOptions {
+    /// The all-levers-off serial baseline (the pre-engine behavior;
+    /// the benchmark ablation's reference row).
+    pub fn serial() -> EngineOptions {
+        EngineOptions {
+            threads: 1,
+            cache: false,
+            prefetch: false,
+            value_skip: false,
+        }
+    }
+}
+
+/// Per-invocation statistics of the merge engine, surfaced by
+/// `git-theta merge --verbose` and asserted on by tests/benchmarks.
+#[derive(Debug, Clone, Default)]
+pub struct MergeStats {
+    /// Parameter groups examined (union of all three sides).
+    pub groups: usize,
+    /// Groups merged by metadata equality (equal on both sides, or
+    /// changed on only one) — never reconstructed.
+    pub trivial: usize,
+    /// Conflicts auto-resolved by LSH value-equality — never
+    /// reconstructed (the change-skipping lever).
+    pub value_skipped: usize,
+    /// Conflicted groups resolved by a strategy, as "name (strategy)"
+    /// in deterministic (name) order.
+    pub resolved: Vec<String>,
+    /// Reconstruction-cache lookups answered from the cache.
+    pub cache_hits: u64,
+    /// Reconstruction-cache lookups that had to reconstruct.
+    pub cache_misses: u64,
+    /// LFS objects missing locally that the up-front batched prefetch
+    /// requested (0 when nothing was missing or the lever is off).
+    pub prefetched: usize,
+}
+
+impl MergeStats {
+    /// One-line `--verbose` summary for a merged file.
+    pub fn render_verbose(&self, path: &str) -> String {
+        format!(
+            "merge '{path}': {} group(s) — {} trivial, {} value-skipped, {} resolved; \
+             cache {} hit(s) / {} miss(es); {} object(s) prefetched",
+            self.groups,
+            self.trivial,
+            self.value_skipped,
+            self.resolved.len(),
+            self.cache_hits,
+            self.cache_misses,
+            self.prefetched
+        )
+    }
+}
+
+/// True when both entries exist and [`GroupMetadata::values_match`]
+/// proves them value-equal. The ambiguous `NeedsExactCheck` band
+/// deliberately returns false — skipping must never be less safe than
+/// resolving.
+fn values_unchanged(x: Option<&GroupMetadata>, y: Option<&GroupMetadata>) -> bool {
+    match (x, y) {
+        (Some(x), Some(y)) => x.values_match(y),
+        _ => false,
+    }
+}
+
+/// A classified conflict awaiting (parallel) resolution.
+struct Conflict<'a> {
+    name: &'a String,
+    kind: ConflictKind,
+    ancestor: Option<&'a GroupMetadata>,
+    ours: Option<&'a GroupMetadata>,
+    theirs: Option<&'a GroupMetadata>,
+    strategy: &'static dyn MergeStrategy,
+}
+
+/// Merge three metadata versions group-by-group on the parallel merge
+/// engine.
+///
+/// Phases (each lever independently toggleable via [`EngineOptions`]):
+///
+/// 1. **Classify** (serial, metadata-only). Groups equal on both sides,
+///    or changed on only one, merge trivially. Remaining conflicts
+///    whose LSH signatures prove one side value-unchanged are resolved
+///    by picking the other side — ours-vs-theirs value-equal keeps
+///    ours, ours-vs-ancestor value-equal takes theirs (ours carried no
+///    value change), theirs-vs-ancestor value-equal keeps ours. Groups
+///    matched by a per-group strategy override are never skipped (the
+///    targeted directive wins). Strategy selection for true conflicts
+///    also happens here so the interactive menu error is deterministic
+///    (first conflicted group in name order).
+/// 2. **Prefetch**. All LFS objects referenced by any side of any
+///    remaining conflict are fetched as a single pack.
+/// 3. **Resolve**. Conflicts resolve concurrently, sharing one
+///    [`ReconstructionCache`]; results are assembled in name order, so
+///    output is independent of scheduling.
+pub fn merge_metadata_opts(
     access: &ObjectAccess,
     ancestor: Option<&ModelMetadata>,
     ours: &ModelMetadata,
     theirs: &ModelMetadata,
     opts: &MergeOptions,
-) -> Result<(ModelMetadata, Vec<String>)> {
+    engine: &EngineOptions,
+) -> Result<(ModelMetadata, MergeStats)> {
     let empty = ModelMetadata::new(ours.format.clone());
     let anc = ancestor.unwrap_or(&empty);
     let mut names: BTreeSet<&String> = BTreeSet::new();
@@ -232,7 +413,15 @@ pub fn merge_metadata(
     names.extend(theirs.groups.keys());
 
     let mut merged = ModelMetadata::new(ours.format.clone());
-    let mut resolved = Vec::new();
+    let mut stats = MergeStats {
+        groups: names.len(),
+        ..Default::default()
+    };
+
+    // Phase 1: classification. `Some(pick)` keeps (or, for None-pick,
+    // drops) the group without reconstruction; unresolved conflicts
+    // accumulate for the parallel phase.
+    let mut conflicts: Vec<Conflict> = Vec::new();
     for name in names {
         let o = anc.groups.get(name);
         let a = ours.groups.get(name);
@@ -240,34 +429,131 @@ pub fn merge_metadata(
         // Equal on both sides (including both-deleted) merges trivially;
         // "Git-Theta can ignore parameter groups that are equivalent
         // across histories".
-        let pick: Option<GroupMetadata> = if a == b {
-            a.cloned()
+        let trivial: Option<Option<&GroupMetadata>> = if a == b {
+            Some(a)
         } else if a == o {
-            b.cloned()
+            Some(b)
         } else if b == o {
-            a.cloned()
+            Some(a)
         } else {
-            let kind = match (o, a, b) {
-                (None, Some(_), Some(_)) => ConflictKind::BothAdded,
-                (Some(_), None, Some(_)) | (Some(_), Some(_), None) => ConflictKind::DeleteModify,
-                _ => ConflictKind::BothModified,
-            };
-            let strategy = select_strategy(name, kind, opts)?;
-            resolved.push(format!("{name} ({})", strategy.name()));
-            strategy.resolve(&ConflictCtx {
-                group: name,
-                kind,
-                ancestor: o,
-                ours: a,
-                theirs: b,
-                access,
-            })?
+            None
         };
-        if let Some(entry) = pick {
-            merged.groups.insert(name.clone(), entry);
+        if let Some(pick) = trivial {
+            stats.trivial += 1;
+            if let Some(entry) = pick {
+                merged.groups.insert(name.clone(), entry.clone());
+            }
+            continue;
+        }
+        // Change-skipping treats value-equality like Git treats
+        // identical hunks: not a conflict at all, so the global
+        // `--strategy` (which, like Git's `-X`, only governs real
+        // conflicts) does not suppress it. A per-group override is a
+        // targeted directive about exactly this group, though — it
+        // always wins over skipping.
+        let per_group_override = opts
+            .per_group
+            .iter()
+            .any(|(pattern, _)| Glob::new(pattern).matches(name));
+        if engine.value_skip && !per_group_override {
+            // Metadata differs on both sides, but the LSH signatures
+            // may still prove one side value-unchanged (e.g. a snapshot
+            // re-anchor). Prefer keeping our entry when both sides are
+            // value-equal.
+            let pick: Option<Option<&GroupMetadata>> = if values_unchanged(a, b) {
+                Some(a)
+            } else if values_unchanged(a, o) {
+                Some(b)
+            } else if values_unchanged(b, o) {
+                Some(a)
+            } else {
+                None
+            };
+            if let Some(pick) = pick {
+                stats.value_skipped += 1;
+                if let Some(entry) = pick {
+                    merged.groups.insert(name.clone(), entry.clone());
+                }
+                continue;
+            }
+        }
+        let kind = match (o, a, b) {
+            (None, Some(_), Some(_)) => ConflictKind::BothAdded,
+            (Some(_), None, Some(_)) | (Some(_), Some(_), None) => ConflictKind::DeleteModify,
+            _ => ConflictKind::BothModified,
+        };
+        let strategy = select_strategy(name, kind, opts)?;
+        conflicts.push(Conflict {
+            name,
+            kind,
+            ancestor: o,
+            ours: a,
+            theirs: b,
+            strategy,
+        });
+    }
+
+    // Phase 2: one negotiation + one pack for everything any conflict
+    // might reconstruct, instead of a lazy download per missing object.
+    if engine.prefetch && !conflicts.is_empty() {
+        let mut oids: Vec<Oid> = Vec::new();
+        for c in &conflicts {
+            for entry in [c.ancestor, c.ours, c.theirs].into_iter().flatten() {
+                entry.all_oids(&mut oids);
+            }
+        }
+        oids.sort();
+        oids.dedup();
+        stats.prefetched = oids.iter().filter(|o| !access.store.contains(o)).count();
+        access.prefetch(&oids)?;
+    }
+
+    // Phase 3: parallel resolution with a shared cache; assembly in
+    // input (name) order keeps the output deterministic.
+    let cache = if engine.cache {
+        Some(ReconstructionCache::new())
+    } else {
+        None
+    };
+    let entries = par::try_par_map(&conflicts, engine.threads, |_, c| {
+        c.strategy
+            .resolve(&ConflictCtx {
+                group: c.name,
+                kind: c.kind,
+                ancestor: c.ancestor,
+                ours: c.ours,
+                theirs: c.theirs,
+                access,
+                cache: cache.as_ref(),
+            })
+            .with_context(|| format!("resolving parameter group '{}'", c.name))
+    })?;
+    for (c, entry) in conflicts.iter().zip(entries) {
+        stats.resolved.push(format!("{} ({})", c.name, c.strategy.name()));
+        if let Some(e) = entry {
+            merged.groups.insert(c.name.clone(), e);
         }
     }
-    Ok((merged, resolved))
+    if let Some(cache) = &cache {
+        stats.cache_hits = cache.hits();
+        stats.cache_misses = cache.misses();
+    }
+    Ok((merged, stats))
+}
+
+/// Merge three metadata versions group-by-group with the default engine
+/// (all levers on). Returns the merged metadata and the "name
+/// (strategy)" list of driver-resolved groups.
+pub fn merge_metadata(
+    access: &ObjectAccess,
+    ancestor: Option<&ModelMetadata>,
+    ours: &ModelMetadata,
+    theirs: &ModelMetadata,
+    opts: &MergeOptions,
+) -> Result<(ModelMetadata, Vec<String>)> {
+    let (merged, stats) =
+        merge_metadata_opts(access, ancestor, ours, theirs, opts, &EngineOptions::default())?;
+    Ok((merged, stats.resolved))
 }
 
 /// The `merge=theta` driver.
@@ -305,8 +591,14 @@ impl MergeDriver for ThetaMerge {
             }
         };
         let access = ObjectAccess::for_repo(repo)?;
-        match merge_metadata(&access, anc.as_ref(), &ours, &theirs, opts) {
-            Ok((merged, _resolved)) => Ok(MergeOutcome::Resolved(merged.to_bytes())),
+        let engine = EngineOptions::default();
+        match merge_metadata_opts(&access, anc.as_ref(), &ours, &theirs, opts, &engine) {
+            Ok((merged, stats)) => {
+                if opts.verbose {
+                    eprintln!("{}", stats.render_verbose(path));
+                }
+                Ok(MergeOutcome::Resolved(merged.to_bytes()))
+            }
             Err(e) => Ok(MergeOutcome::Conflict(format!("{e:#}"))),
         }
     }
@@ -339,6 +631,7 @@ mod tests {
         MergeOptions {
             strategy: Some(strategy.to_string()),
             per_group: vec![],
+            verbose: false,
         }
     }
 
@@ -416,6 +709,7 @@ mod tests {
         let opts = MergeOptions {
             strategy: Some("average".into()),
             per_group: vec![("b".into(), "them".into())],
+            verbose: false,
         };
         let (merged, _) = merge_metadata(&acc, Some(&v_base), &ours, &theirs, &opts).unwrap();
         let out = smudge_metadata(&acc, &merged, 1).unwrap();
@@ -487,5 +781,244 @@ mod tests {
             out.get("w").unwrap().to_f32_vec().unwrap(),
             vec![2., 3., 1., 2.]
         );
+    }
+
+    #[test]
+    fn parallel_cached_engine_matches_serial_byte_for_byte() {
+        let td = TempDir::new("merge-par").unwrap();
+        let acc = access(&td);
+        // Several groups in conflict at once, so the parallel phase has
+        // real fan-out.
+        let mut base = Checkpoint::new();
+        for g in 0..6 {
+            base.insert(
+                format!("g{g}"),
+                Tensor::from_f32(vec![16], vec![g as f32; 16]).unwrap(),
+            );
+        }
+        let v_base = clean_checkpoint(&acc, &base, "safetensors", None, None, 1).unwrap();
+        let mut ours_ck = base.clone();
+        let mut theirs_ck = base.clone();
+        for g in 0..6 {
+            ours_ck.insert(
+                format!("g{g}"),
+                Tensor::from_f32(vec![16], vec![g as f32 + 1.0; 16]).unwrap(),
+            );
+            theirs_ck.insert(
+                format!("g{g}"),
+                Tensor::from_f32(vec![16], vec![g as f32 + 3.0; 16]).unwrap(),
+            );
+        }
+        let ours = clean_checkpoint(&acc, &ours_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+        let theirs =
+            clean_checkpoint(&acc, &theirs_ck, "safetensors", Some(&v_base), None, 1).unwrap();
+
+        let (serial, s_stats) = merge_metadata_opts(
+            &acc,
+            Some(&v_base),
+            &ours,
+            &theirs,
+            &opts("average"),
+            &EngineOptions::serial(),
+        )
+        .unwrap();
+        let (full, f_stats) = merge_metadata_opts(
+            &acc,
+            Some(&v_base),
+            &ours,
+            &theirs,
+            &opts("average"),
+            &EngineOptions {
+                threads: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(serial.to_bytes(), full.to_bytes());
+        assert_eq!(s_stats.resolved, f_stats.resolved);
+        assert_eq!(f_stats.resolved.len(), 6);
+        // Serial baseline reports no cache traffic at all.
+        assert_eq!((s_stats.cache_hits, s_stats.cache_misses), (0, 0));
+    }
+
+    #[test]
+    fn shared_cache_hits_across_merge_sides() {
+        let td = TempDir::new("merge-cache").unwrap();
+        let acc = access(&td);
+        // Build a deep shared chain, then diverge both sides from it:
+        // the common prefix must be decoded once, not once per side.
+        let mut ck = ck_with(vec![0.; 4], vec![0.; 2]);
+        let mut meta = clean_checkpoint(&acc, &ck, "safetensors", None, None, 1).unwrap();
+        let deep_opts = crate::theta::filter::CleanOptions {
+            snapshot_depth: None,
+            threads: 1,
+            ..Default::default()
+        };
+        for i in 0..4 {
+            let mut vals = ck.get("w").unwrap().to_f32_vec().unwrap();
+            vals[i % 4] += 1.0;
+            ck.insert("w", Tensor::from_f32(vec![2, 2], vals).unwrap());
+            meta = crate::theta::filter::clean_checkpoint_opts(
+                &acc,
+                &ck,
+                "safetensors",
+                Some(&meta),
+                &deep_opts,
+            )
+            .unwrap();
+        }
+        assert!(meta.groups["w"].chain_depth() >= 4);
+        let mut ours_ck = ck.clone();
+        let mut theirs_ck = ck.clone();
+        let mut ov = ck.get("w").unwrap().to_f32_vec().unwrap();
+        ov[0] += 5.0;
+        ours_ck.insert("w", Tensor::from_f32(vec![2, 2], ov).unwrap());
+        let mut tv = ck.get("w").unwrap().to_f32_vec().unwrap();
+        tv[3] += 7.0;
+        theirs_ck.insert("w", Tensor::from_f32(vec![2, 2], tv).unwrap());
+        let ours = crate::theta::filter::clean_checkpoint_opts(
+            &acc,
+            &ours_ck,
+            "safetensors",
+            Some(&meta),
+            &deep_opts,
+        )
+        .unwrap();
+        let theirs = crate::theta::filter::clean_checkpoint_opts(
+            &acc,
+            &theirs_ck,
+            "safetensors",
+            Some(&meta),
+            &deep_opts,
+        )
+        .unwrap();
+
+        let (_, stats) = merge_metadata_opts(
+            &acc,
+            Some(&meta),
+            &ours,
+            &theirs,
+            &opts("average"),
+            &EngineOptions::default(),
+        )
+        .unwrap();
+        assert!(
+            stats.cache_hits >= 1,
+            "expected the shared ancestor prefix to hit the cache: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn value_equal_conflicts_skip_strategy_resolution() {
+        let td = TempDir::new("merge-skip").unwrap();
+        let acc = access(&td);
+        // Grow a chain so a snapshot re-anchor has something to rewrite.
+        let mut ck = ck_with(vec![0.; 4], vec![0.; 2]);
+        let mut meta = clean_checkpoint(&acc, &ck, "safetensors", None, None, 1).unwrap();
+        let deep_opts = crate::theta::filter::CleanOptions {
+            snapshot_depth: None,
+            threads: 1,
+            ..Default::default()
+        };
+        for i in 0..3 {
+            let mut vals = ck.get("w").unwrap().to_f32_vec().unwrap();
+            vals[i] += 1.0;
+            ck.insert("w", Tensor::from_f32(vec![2, 2], vals).unwrap());
+            meta = crate::theta::filter::clean_checkpoint_opts(
+                &acc,
+                &ck,
+                "safetensors",
+                Some(&meta),
+                &deep_opts,
+            )
+            .unwrap();
+        }
+        // Ours: re-anchor only (metadata changes, values do not).
+        let (ours, report) = crate::theta::checkout::snapshot_metadata(&acc, &meta, 1).unwrap();
+        assert!(report.reanchored >= 1);
+        assert_ne!(ours.groups["w"], meta.groups["w"]);
+        // Theirs: a real value change.
+        let mut theirs_ck = ck.clone();
+        let mut tv = ck.get("w").unwrap().to_f32_vec().unwrap();
+        tv[3] = 9.0;
+        theirs_ck.insert("w", Tensor::from_f32(vec![2, 2], tv.clone()).unwrap());
+        let theirs = crate::theta::filter::clean_checkpoint_opts(
+            &acc,
+            &theirs_ck,
+            "safetensors",
+            Some(&meta),
+            &deep_opts,
+        )
+        .unwrap();
+
+        // With change-skipping: no strategy needed, theirs' change wins.
+        let (merged, stats) = merge_metadata_opts(
+            &acc,
+            Some(&meta),
+            &ours,
+            &theirs,
+            &MergeOptions::default(),
+            &EngineOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(stats.value_skipped, 1);
+        assert!(stats.resolved.is_empty());
+        assert_eq!(merged.groups["w"], theirs.groups["w"]);
+        let out = smudge_metadata(&acc, &merged, 1).unwrap();
+        assert_eq!(out.get("w").unwrap().to_f32_vec().unwrap(), tv);
+
+        // With the lever off the same merge demands a strategy.
+        let err = merge_metadata_opts(
+            &acc,
+            Some(&meta),
+            &ours,
+            &theirs,
+            &MergeOptions::default(),
+            &EngineOptions {
+                value_skip: false,
+                ..EngineOptions::default()
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("conflict in parameter group 'w'"));
+
+        // A targeted per-group override always beats change-skipping:
+        // "us" keeps our re-anchored entry even though theirs carries
+        // the only value change.
+        let per_group = MergeOptions {
+            strategy: None,
+            per_group: vec![("w".into(), "us".into())],
+            verbose: false,
+        };
+        let (merged, stats) = merge_metadata_opts(
+            &acc,
+            Some(&meta),
+            &ours,
+            &theirs,
+            &per_group,
+            &EngineOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(stats.value_skipped, 0);
+        assert_eq!(stats.resolved, vec!["w (us)".to_string()]);
+        assert_eq!(merged.groups["w"], ours.groups["w"]);
+    }
+
+    #[test]
+    fn verbose_stats_render_mentions_counters() {
+        let s = MergeStats {
+            groups: 5,
+            trivial: 2,
+            value_skipped: 1,
+            resolved: vec!["w (average)".into()],
+            cache_hits: 3,
+            cache_misses: 7,
+            prefetched: 4,
+        };
+        let line = s.render_verbose("model.safetensors");
+        for needle in ["5 group(s)", "2 trivial", "1 value-skipped", "3 hit", "7 miss"] {
+            assert!(line.contains(needle), "{line}");
+        }
+        assert!(line.contains("4 object(s) prefetched"), "{line}");
     }
 }

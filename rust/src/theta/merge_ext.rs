@@ -9,11 +9,16 @@
 //!   importance estimate. Without access to each branch's data we use
 //!   the magnitude-squared of each branch's *delta from the ancestor*
 //!   as the importance proxy — parameters a branch actually moved are
-//!   the ones its training considered important. Falls back to uniform
-//!   averaging when no ancestor exists.
+//!   the ones its training considered important.
+//!
+//! Both strategies reconstruct through [`ConflictCtx::reconstruct`],
+//! so chain prefixes shared with the other side (or with other groups)
+//! hit the merge engine's per-invocation
+//! [`ReconstructionCache`](crate::theta::checkout::ReconstructionCache)
+//! (see `theta/merge.rs`) instead of being decoded again.
 
-use crate::tensor::Tensor;
-use crate::theta::filter::{reconstruct_group, store_payload};
+use crate::tensor::{fisher_average, Tensor};
+use crate::theta::filter::store_payload;
 use crate::theta::lsh::LshSignature;
 use crate::theta::merge::{ConflictCtx, ConflictKind, MergeStrategy};
 use crate::theta::updates::UpdatePayload;
@@ -61,8 +66,8 @@ impl MergeStrategy for WeightedAverage {
     fn resolve(&self, ctx: &ConflictCtx) -> Result<Option<crate::theta::metadata::GroupMetadata>> {
         let ours = ctx.ours.context("weighted: missing our version")?;
         let theirs = ctx.theirs.context("weighted: missing their version")?;
-        let a = reconstruct_group(ctx.access, ours)?;
-        let b = reconstruct_group(ctx.access, theirs)?;
+        let a = ctx.reconstruct(ours)?;
+        let b = ctx.reconstruct(theirs)?;
         if a.shape() != b.shape() {
             bail!("weighted: incompatible shapes for '{}'", ctx.group);
         }
@@ -77,6 +82,8 @@ impl MergeStrategy for WeightedAverage {
 /// parameters average uniformly).
 pub struct FisherAverage;
 
+/// Importance floor: keeps the denominator nonzero and makes
+/// parameters neither branch moved average uniformly.
 const FISHER_EPS: f64 = 1e-12;
 
 impl MergeStrategy for FisherAverage {
@@ -94,22 +101,17 @@ impl MergeStrategy for FisherAverage {
         let ours = ctx.ours.context("fisher: missing our version")?;
         let theirs = ctx.theirs.context("fisher: missing their version")?;
         let anc = ctx.ancestor.context("fisher: missing ancestor")?;
-        let a = reconstruct_group(ctx.access, ours)?;
-        let b = reconstruct_group(ctx.access, theirs)?;
-        let base = reconstruct_group(ctx.access, anc)?;
+        let a = ctx.reconstruct(ours)?;
+        let b = ctx.reconstruct(theirs)?;
+        let base = ctx.reconstruct(anc)?;
         if a.shape() != b.shape() || a.shape() != base.shape() {
             bail!("fisher: incompatible shapes for '{}'", ctx.group);
         }
-        let av = a.to_f32_vec()?;
-        let bv = b.to_f32_vec()?;
-        let cv = base.to_f32_vec()?;
-        let mut out = Vec::with_capacity(av.len());
-        for i in 0..av.len() {
-            let fa = (av[i] as f64 - cv[i] as f64).powi(2) + FISHER_EPS;
-            let fb = (bv[i] as f64 - cv[i] as f64).powi(2) + FISHER_EPS;
-            out.push(((fa * av[i] as f64 + fb * bv[i] as f64) / (fa + fb)) as f32);
-        }
-        let merged = Tensor::from_f32_as(a.dtype(), a.shape().to_vec(), &out)?;
+        // Fused vectorized combine (tensor/ops.rs, next to
+        // `weighted_average`): one pass, f64 accumulation, no
+        // intermediate tensors — this runs once per conflicted group on
+        // the merge hot path.
+        let merged = fisher_average(&a, &b, &base, FISHER_EPS)?;
         Ok(Some(store_dense(ctx, merged)?))
     }
 }
@@ -147,6 +149,7 @@ mod tests {
         MergeOptions {
             strategy: Some(strategy.to_string()),
             per_group: vec![],
+            verbose: false,
         }
     }
 
@@ -191,6 +194,36 @@ mod tests {
         // Each element lands near the branch that moved it hardest.
         assert!(w[0] > 1.8, "{w:?}");
         assert!(w[1] > 1.8, "{w:?}");
+    }
+
+    #[test]
+    fn fisher_vectorized_matches_reference_loop() {
+        crate::init();
+        let td = TempDir::new("fisher-vec").unwrap();
+        let acc = access(&td);
+        let cv = vec![0.5f32, -0.25, 0.0, 1.0, 2.0];
+        let av = vec![0.75f32, -0.25, 0.3, 1.0, -1.0];
+        let bv = vec![0.5f32, 0.5, 0.1, 4.0, 2.5];
+        let v0 = clean_checkpoint(&acc, &ck(cv.clone()), "safetensors", None, None, 1).unwrap();
+        let ours = clean_checkpoint(&acc, &ck(av.clone()), "safetensors", Some(&v0), None, 1)
+            .unwrap();
+        let theirs = clean_checkpoint(&acc, &ck(bv.clone()), "safetensors", Some(&v0), None, 1)
+            .unwrap();
+        let (m, _) = merge_metadata(&acc, Some(&v0), &ours, &theirs, &opts("fisher")).unwrap();
+        let out = smudge_metadata(&acc, &m, 1).unwrap();
+        let got = out.get("w").unwrap().to_f32_vec().unwrap();
+        // The element-wise reference this module used before moving to
+        // the fused tensor op; the op must agree to f32 tolerance.
+        for i in 0..cv.len() {
+            let fa = (av[i] as f64 - cv[i] as f64).powi(2) + 1e-12;
+            let fb = (bv[i] as f64 - cv[i] as f64).powi(2) + 1e-12;
+            let want = ((fa * av[i] as f64 + fb * bv[i] as f64) / (fa + fb)) as f32;
+            assert!(
+                (got[i] - want).abs() <= 1e-5 * want.abs().max(1.0),
+                "elem {i}: got {} want {want}",
+                got[i]
+            );
+        }
     }
 
     #[test]

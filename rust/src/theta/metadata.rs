@@ -20,7 +20,7 @@
 
 use crate::gitcore::object::Oid;
 use crate::tensor::DType;
-use crate::theta::lsh::LshSignature;
+use crate::theta::lsh::{LshSignature, LshVerdict};
 use crate::util::json::{Json, JsonObj};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -194,6 +194,19 @@ impl GroupMetadata {
     pub fn own_bytes(&self) -> u64 {
         self.update.objects.values().map(|o| o.size).sum()
     }
+
+    /// LSH proof that this entry and `other` hold the same tensor
+    /// values (distance ≤ the paper's 1e-8 "unchanged" bound), however
+    /// different their chains. The ambiguous `NeedsExactCheck` band
+    /// counts as *not* matching, so this can under- but never
+    /// over-claim equality — the merge engine's change-skipping and
+    /// the diff driver's re-anchor classification both rely on that
+    /// one-sidedness.
+    pub fn values_match(&self, other: &GroupMetadata) -> bool {
+        self.tensor.shape == other.tensor.shape
+            && self.tensor.dtype == other.tensor.dtype
+            && self.tensor.lsh.compare(&other.tensor.lsh) == LshVerdict::Unchanged
+    }
 }
 
 /// The whole metadata file: one entry per parameter group.
@@ -365,6 +378,21 @@ mod tests {
         // Roundtripping through JSON preserves the key.
         let back = GroupMetadata::from_json(&inc.to_json()).unwrap();
         assert_eq!(back.chain_key(), inc.chain_key());
+    }
+
+    #[test]
+    fn values_match_ignores_chain_shape() {
+        // Same values behind different chains (a re-anchor) match;
+        // different values never do.
+        let a = sample_group(&[1.0, 2.0], "dense", None);
+        let b = sample_group(&[1.0, 2.0], "sparse", Some(a.clone()));
+        assert_ne!(a, b);
+        assert!(a.values_match(&b));
+        let c = sample_group(&[9.0, 2.0], "dense", None);
+        assert!(!a.values_match(&c));
+        let mut d = sample_group(&[1.0, 2.0], "dense", None);
+        d.tensor.shape = vec![2, 1];
+        assert!(!a.values_match(&d));
     }
 
     #[test]

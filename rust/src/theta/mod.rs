@@ -8,26 +8,29 @@
 //! * [`filter`] — the clean/smudge filters.
 //! * [`checkout`] — the checkout compute engine: chain snapshotting
 //!   and memoized reconstruction.
-//! * [`diff`] — the parameter-group diff driver.
-//! * [`merge`] — the merge driver and strategy plug-ins.
+//! * [`diff`] — the parameter-group diff driver (metadata-level plus
+//!   the `--exact` value-level mode).
+//! * [`merge`] — the merge driver, strategy plug-ins, and the
+//!   group-parallel merge engine.
+//! * [`gc`] — `git-theta gc`: drops LFS objects no reachable revision
+//!   references.
 //! * [`hooks`] — post-commit / pre-push LFS object bookkeeping.
 //! * [`track`] — `git theta track`.
 
 // rustdoc burn-down (see lib.rs): `metadata`, `serialize`, `updates`,
-// and `checkout` are fully documented and participate in
-// `missing_docs`; the rest are allowed until their pass.
+// `checkout`, `diff`, `merge`, `merge_ext`, and `gc` are fully
+// documented and participate in `missing_docs`; the rest are allowed
+// until their pass.
 pub mod checkout;
-#[allow(missing_docs)]
 pub mod diff;
 #[allow(missing_docs)]
 pub mod filter;
+pub mod gc;
 #[allow(missing_docs)]
 pub mod hooks;
 #[allow(missing_docs)]
 pub mod lsh;
-#[allow(missing_docs)]
 pub mod merge;
-#[allow(missing_docs)]
 pub mod merge_ext;
 pub mod metadata;
 pub mod serialize;
@@ -36,13 +39,17 @@ pub mod track;
 pub mod updates;
 
 pub use checkout::{snapshot_metadata, ReconstructionCache, DEFAULT_SNAPSHOT_DEPTH};
-pub use diff::{render_diff, ModelDiff, ThetaDiff};
+pub use diff::{exact_diff, render_diff, set_exact_diff, ModelDiff, ThetaDiff, ValueDelta};
 pub use filter::{
     clean_checkpoint, clean_checkpoint_opts, reconstruct_group, smudge_metadata,
     smudge_metadata_opts, CleanOptions, ObjectAccess, ThetaFilter,
 };
+pub use gc::{collect_garbage, GcReport};
 pub use hooks::ThetaHooks;
-pub use merge::{merge_metadata, register_merge_strategy, ThetaMerge};
+pub use merge::{
+    merge_metadata, merge_metadata_opts, register_merge_strategy, EngineOptions, MergeStats,
+    ThetaMerge,
+};
 pub use metadata::{GroupMetadata, ModelMetadata, ObjRef};
 pub use track::{is_tracked, track};
 pub use updates::{infer_best, register_update_type, update_type, UpdatePayload, UpdateType};

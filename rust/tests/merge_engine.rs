@@ -1,0 +1,271 @@
+//! Merge/diff-engine integration tests: byte-for-byte parity of the
+//! parallel+cached+prefetching engine against the serial path across
+//! every strategy and conflict kind, proof that non-conflicted groups
+//! are never reconstructed, and the `git-theta gc` command.
+
+use git_theta::checkpoint::{Checkpoint, CheckpointFormat, SafetensorsFormat};
+use git_theta::cli::dispatch;
+use git_theta::gitcore::drivers::MergeOptions;
+use git_theta::gitcore::object::Oid;
+use git_theta::lfs::LfsStore;
+use git_theta::tensor::Tensor;
+use git_theta::theta::filter::{clean_checkpoint_opts, CleanOptions, ObjectAccess};
+use git_theta::theta::merge::{merge_metadata_opts, ConflictKind, EngineOptions};
+use git_theta::util::prop::check;
+use git_theta::util::rng::Pcg64;
+use git_theta::util::tmp::TempDir;
+use std::path::Path;
+use std::sync::Mutex;
+
+// The gc tests chdir; serialize them (and anything else order-sensitive).
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn access(td: &TempDir) -> ObjectAccess {
+    ObjectAccess {
+        store: LfsStore::open(td.path()),
+        remote: None,
+    }
+}
+
+fn deep_opts() -> CleanOptions {
+    CleanOptions {
+        snapshot_depth: None,
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+fn opts(strategy: &str) -> MergeOptions {
+    MergeOptions {
+        strategy: Some(strategy.to_string()),
+        ..Default::default()
+    }
+}
+
+// ----------------------------------------------------------------------
+// parity: parallel + cached + prefetch + skip == serial, byte for byte
+// ----------------------------------------------------------------------
+
+#[test]
+fn prop_engine_parity_across_strategies_and_conflict_kinds() {
+    git_theta::init(); // registers weighted + fisher
+    const STRATEGIES: [&str; 6] = ["us", "them", "ancestor", "average", "weighted", "fisher"];
+    check(
+        "merge engine parity: full levers == serial across strategies/kinds",
+        |rng| rng.below(u64::MAX),
+        |&seed| {
+            let e = |err: anyhow::Error| format!("{err:#}");
+            let mut rng = Pcg64::new(seed);
+            let strategy = STRATEGIES[rng.below(STRATEGIES.len() as u64) as usize];
+            let elems = 32 + rng.below(65) as usize;
+            let depth = 1 + rng.below(4) as usize;
+
+            let td = TempDir::new("merge-prop").map_err(|err| err.to_string())?;
+            let acc = access(&td);
+            let mut ck = Checkpoint::new();
+            for g in 0..3 {
+                let vals: Vec<f32> = (0..elems).map(|_| (rng.next_f32() - 0.5) * 2.0).collect();
+                ck.insert(format!("g{g}"), Tensor::from_f32(vec![elems], vals).unwrap());
+            }
+            let mut anc =
+                clean_checkpoint_opts(&acc, &ck, "native", None, &deep_opts()).map_err(e)?;
+            for v in 1..depth {
+                for g in 0..3 {
+                    let n = format!("g{g}");
+                    let mut vals = ck.get(&n).unwrap().to_f32_vec().unwrap();
+                    // Guaranteed-magnitude bumps: sub-threshold noise
+                    // would be (correctly) ignored by clean and break
+                    // the comparison for the wrong reason.
+                    vals[(v * 7 + g) % elems] += 0.5 + rng.next_f32();
+                    ck.insert(n, Tensor::from_f32(vec![elems], vals).unwrap());
+                }
+                anc = clean_checkpoint_opts(&acc, &ck, "native", Some(&anc), &deep_opts())
+                    .map_err(e)?;
+            }
+
+            // Conflict layout per strategy applicability:
+            //   g0 — BothModified (every strategy resolves it)
+            //   g1 — DeleteModify for us/them/ancestor, else one-sided
+            //   g2 — changed on theirs only (always trivial)
+            //   new — BothAdded for us/them/average/weighted
+            let strat = git_theta::theta::merge::merge_strategy(strategy)
+                .ok_or_else(|| format!("strategy '{strategy}' not registered"))?;
+            let mut ours_ck = ck.clone();
+            let mut theirs_ck = ck.clone();
+            let bump = |c: &mut Checkpoint, name: &str, at: usize, delta: f32| {
+                let mut vals = c.get(name).unwrap().to_f32_vec().unwrap();
+                vals[at % vals.len()] += delta;
+                c.insert(name.to_string(), Tensor::from_f32(vec![vals.len()], vals).unwrap());
+            };
+            bump(&mut ours_ck, "g0", 0, 1.5);
+            bump(&mut theirs_ck, "g0", 1, -2.5);
+            if strat.applicable(ConflictKind::DeleteModify) {
+                ours_ck.remove("g1");
+                bump(&mut theirs_ck, "g1", 2, 3.0);
+            } else {
+                bump(&mut ours_ck, "g1", 2, 3.0); // ours-only: trivial
+            }
+            bump(&mut theirs_ck, "g2", 3, 0.75);
+            if strat.applicable(ConflictKind::BothAdded) {
+                ours_ck.insert("new", Tensor::from_f32(vec![8], vec![1.0; 8]).unwrap());
+                theirs_ck.insert("new", Tensor::from_f32(vec![8], vec![4.0; 8]).unwrap());
+            }
+            let ours = clean_checkpoint_opts(&acc, &ours_ck, "native", Some(&anc), &deep_opts())
+                .map_err(e)?;
+            let theirs = clean_checkpoint_opts(&acc, &theirs_ck, "native", Some(&anc), &deep_opts())
+                .map_err(e)?;
+
+            let (serial, s_stats) = merge_metadata_opts(
+                &acc,
+                Some(&anc),
+                &ours,
+                &theirs,
+                &opts(strategy),
+                &EngineOptions::serial(),
+            )
+            .map_err(e)?;
+            let (full, f_stats) = merge_metadata_opts(
+                &acc,
+                Some(&anc),
+                &ours,
+                &theirs,
+                &opts(strategy),
+                &EngineOptions {
+                    threads: 4,
+                    ..Default::default()
+                },
+            )
+            .map_err(e)?;
+            if serial.to_bytes() != full.to_bytes() {
+                return Err(format!(
+                    "strategy '{strategy}' depth {depth}: engine output diverged from serial"
+                ));
+            }
+            if s_stats.resolved != f_stats.resolved {
+                return Err(format!(
+                    "resolved lists diverged: {:?} vs {:?}",
+                    s_stats.resolved, f_stats.resolved
+                ));
+            }
+            if s_stats.resolved.is_empty() {
+                return Err("fixture produced no conflicts".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ----------------------------------------------------------------------
+// change-skipping: unconflicted groups are never reconstructed
+// ----------------------------------------------------------------------
+
+#[test]
+fn merge_never_reconstructs_unconflicted_groups() {
+    let td = TempDir::new("merge-skip-fetch").unwrap();
+    let acc = access(&td);
+    let mut ck = Checkpoint::new();
+    for g in 0..3 {
+        ck.insert(
+            format!("g{g}"),
+            Tensor::from_f32(vec![32], vec![g as f32; 32]).unwrap(),
+        );
+    }
+    let anc = clean_checkpoint_opts(&acc, &ck, "native", None, &deep_opts()).unwrap();
+    let mut ours_ck = ck.clone();
+    let mut theirs_ck = ck.clone();
+    // g0 conflicts; g1 changes only on theirs; g2 untouched.
+    ours_ck.insert("g0", Tensor::from_f32(vec![32], vec![10.0; 32]).unwrap());
+    theirs_ck.insert("g0", Tensor::from_f32(vec![32], vec![20.0; 32]).unwrap());
+    theirs_ck.insert("g1", Tensor::from_f32(vec![32], vec![30.0; 32]).unwrap());
+    let ours = clean_checkpoint_opts(&acc, &ours_ck, "native", Some(&anc), &deep_opts()).unwrap();
+    let theirs =
+        clean_checkpoint_opts(&acc, &theirs_ck, "native", Some(&anc), &deep_opts()).unwrap();
+
+    // Delete every object that is not part of g0's three sides. If the
+    // engine reconstructed (or prefetched) anything else, the merge
+    // would fail on a missing object.
+    let mut keep: Vec<Oid> = Vec::new();
+    for meta in [&anc, &ours, &theirs] {
+        meta.groups["g0"].all_oids(&mut keep);
+    }
+    for oid in acc.store.list().unwrap() {
+        if !keep.contains(&oid) {
+            assert!(acc.store.delete(&oid).unwrap());
+        }
+    }
+
+    let (merged, stats) = merge_metadata_opts(
+        &acc,
+        Some(&anc),
+        &ours,
+        &theirs,
+        &opts("average"),
+        &EngineOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(stats.resolved, vec!["g0 (average)".to_string()]);
+    assert_eq!(stats.trivial, 2);
+    // Trivially merged entries carried forward untouched.
+    assert_eq!(merged.groups["g1"], theirs.groups["g1"]);
+    assert_eq!(merged.groups["g2"], anc.groups["g2"]);
+}
+
+// ----------------------------------------------------------------------
+// `git-theta gc`
+// ----------------------------------------------------------------------
+
+fn in_dir<F: FnOnce() -> anyhow::Result<()>>(dir: &Path, f: F) {
+    let _guard = lock();
+    let old = std::env::current_dir().unwrap();
+    std::env::set_current_dir(dir).unwrap();
+    let result = f();
+    std::env::set_current_dir(old).unwrap();
+    result.unwrap();
+}
+
+fn sv(args: &[&str]) -> Vec<String> {
+    args.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn gc_command_prunes_orphans_and_preserves_history() {
+    let td = TempDir::new("cli-gc").unwrap();
+    in_dir(td.path(), || {
+        git_theta::init();
+        dispatch(&sv(&["init"]))?;
+        dispatch(&sv(&["track", "model.safetensors"]))?;
+        let fmt = SafetensorsFormat;
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::from_f32(vec![64], vec![0.5; 64]).unwrap());
+        std::fs::write("model.safetensors", fmt.save_bytes(&ck)?)?;
+        dispatch(&sv(&["add", "model.safetensors", ".thetaattributes"]))?;
+        dispatch(&sv(&["commit", "-m", "v1"]))?;
+        ck.insert("w", Tensor::from_f32(vec![64], vec![1.5; 64]).unwrap());
+        std::fs::write("model.safetensors", fmt.save_bytes(&ck)?)?;
+        dispatch(&sv(&["add", "model.safetensors"]))?;
+        dispatch(&sv(&["commit", "-m", "v2"]))?;
+
+        let store = LfsStore::open(&td.path().join(".theta"));
+        let live = store.list()?.len();
+        let (junk, _) = store.put(b"orphaned by an abandoned run")?;
+
+        // Dry run deletes nothing.
+        dispatch(&sv(&["gc"]))?;
+        assert!(store.contains(&junk));
+        // Unknown flags are rejected.
+        assert!(dispatch(&sv(&["gc", "--now"])).is_err());
+        // Prune removes exactly the orphan.
+        dispatch(&sv(&["gc", "--prune"]))?;
+        assert!(!store.contains(&junk));
+        assert_eq!(store.list()?.len(), live);
+
+        // Both committed versions still reconstruct.
+        dispatch(&sv(&["checkout", "main"]))?;
+        assert_eq!(std::fs::read("model.safetensors")?, fmt.save_bytes(&ck)?);
+        Ok(())
+    });
+}

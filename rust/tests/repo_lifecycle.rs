@@ -276,6 +276,7 @@ fn per_group_merge_strategies_through_repo() {
     let opts = MergeOptions {
         strategy: Some("average".into()),
         per_group: vec![("g1/w".into(), "us".into())],
+        ..Default::default()
     };
     repo.repo.merge("side", &opts, "t").unwrap();
     let merged = repo.read_model().unwrap();

@@ -47,5 +47,19 @@ cargo test -q
 # end-to-end through the real CLI.
 echo "==> bench checkout smoke"
 cargo run --release --quiet -- bench checkout 10 2 8192
+test -f BENCH_checkout.json || {
+    echo "error: bench checkout did not write BENCH_checkout.json" >&2
+    exit 1
+}
+
+# Smoke the merge-engine ablation (tiny configuration): classification,
+# batched prefetch, parallel resolution, change-skipping, and the
+# per-sample merged-output parity assertion, through the real CLI.
+echo "==> bench merge smoke"
+cargo run --release --quiet -- bench merge 4 12 2048
+test -f BENCH_merge.json || {
+    echo "error: bench merge did not write BENCH_merge.json" >&2
+    exit 1
+}
 
 echo "==> OK"
