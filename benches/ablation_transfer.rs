@@ -1,12 +1,15 @@
-//! Ablation A4: per-object vs packed LFS transfer.
+//! Ablation A4: per-object vs packed vs http LFS transfer.
 //!
-//! Moves a synthetic 100-group model (bf16-valued f32 payloads) through
-//! both transfer engines in both directions and reports round trips,
-//! wire bytes, and wall-clock — the cost model behind the batched pack
-//! engine in `lfs/batch.rs` / `lfs/pack.rs`. Scale with
+//! Moves a synthetic 100-group model (bf16-valued f32 payloads)
+//! through the transfer engines in both directions and reports round
+//! trips, wire bytes, and wall-clock — the cost model behind the
+//! batched pack engine in `lfs/batch.rs` / `lfs/pack.rs` and the
+//! transport abstraction in `lfs/transport.rs`. The `+resume` sample
+//! cuts the pack stream mid-flight with the fault proxy and measures
+//! how much of the retry byte-range resume saves. Scale with
 //! `THETA_BENCH_GROUPS` / `THETA_BENCH_ELEMS`.
 
-use git_theta::benchkit::transfer::{render_runs, run_compare};
+use git_theta::benchkit::transfer::{render_resume, render_runs, run_compare, run_resume_sample};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key)
@@ -20,14 +23,22 @@ fn main() -> anyhow::Result<()> {
     let elems = env_usize("THETA_BENCH_ELEMS", 4096);
     let runs = run_compare(groups, elems)?;
     print!("{}", render_runs(groups, elems, &runs));
+    let resume = run_resume_sample(groups, elems)?;
+    print!("{}", render_resume(&resume));
 
     let per = &runs[0];
     let packed = &runs[1];
+    let http = &runs[2];
     println!(
         "\npacked vs per-object: {}x fewer round trips, {:.2}x wire bytes, {:.2}x upload time",
         per.up.round_trips().max(1) / packed.up.round_trips().max(1),
         packed.up.packed_bytes as f64 / per.up.packed_bytes.max(1) as f64,
         packed.upload_secs / per.upload_secs.max(1e-9),
+    );
+    println!(
+        "http vs packed-dir: same {} round trips; resume retry re-sent {:.0}% of the pack",
+        http.up.round_trips(),
+        100.0 * resume.retry_fraction(),
     );
     Ok(())
 }

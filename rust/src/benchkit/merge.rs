@@ -86,7 +86,7 @@ impl MergeFixture {
         let td = TempDir::new("bench-merge-local")?;
         let access = ObjectAccess {
             store: LfsStore::open(td.path()),
-            remote: Some(LfsRemote::open(self.remote_dir.path())),
+            remote: Some(Box::new(LfsRemote::open(self.remote_dir.path()))),
         };
         Ok((access, td))
     }

@@ -1,25 +1,35 @@
-//! Transfer-engine ablation: per-object vs packed LFS movement.
+//! Transfer-engine ablation: per-object vs packed vs http transport.
 //!
 //! Builds a synthetic model store — N parameter-group objects of
 //! bf16-valued f32 data (the Table 1 compressibility profile) — and
-//! moves it through both transfer engines in both directions,
-//! reporting round trips (negotiations), wire bytes, and wall-clock.
+//! moves it through the transfer engines in both directions, reporting
+//! round trips (negotiations + packs), wire bytes, and wall-clock.
 //! Over a real network the round-trip column is the one that matters:
 //! per-object transfer pays one copy request per group, the pack
-//! engine pays one negotiation plus one pack per model.
+//! engine pays one negotiation plus one pack per model — identical
+//! logical counts whether the channel is a directory or the HTTP
+//! remote.
+//!
+//! The `+resume` lever samples an injected fault: a
+//! [`FaultProxy`](crate::lfs::faults::FaultProxy) kills the pack
+//! stream halfway, and the retry's byte-range resume is measured
+//! against a from-scratch transfer (`BENCH_transfer.json` carries the
+//! ratio for the CI regression gate).
 
 use super::time_once;
 use crate::gitcore::object::Oid;
-use crate::lfs::{batch, LfsRemote, LfsStore};
+use crate::lfs::faults::{Direction, FaultProxy, FaultSpec};
+use crate::lfs::{batch, transport, HttpRemote, LfsRemote, LfsServer, LfsStore};
 use crate::util::humansize;
+use crate::util::json::{Json, JsonObj};
 use crate::util::rng::Pcg64;
 use crate::util::tmp::TempDir;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// Measurements for one engine: upload + download legs.
 #[derive(Debug, Clone)]
 pub struct TransferRun {
-    /// Engine name ("per-object" or "packed").
+    /// Engine name ("per-object", "packed", or "http").
     pub mode: &'static str,
     /// Wall-clock seconds for the upload leg.
     pub upload_secs: f64,
@@ -29,6 +39,26 @@ pub struct TransferRun {
     pub download_secs: f64,
     /// Counters captured after the download leg.
     pub down: batch::TransferStats,
+}
+
+/// One injected-fault resume measurement (the `+resume` lever).
+#[derive(Debug, Clone, Copy)]
+pub struct ResumeSample {
+    /// Full pack size in bytes.
+    pub pack_bytes: u64,
+    /// Where the fault proxy cut the first attempt.
+    pub killed_after: u64,
+    /// Pack bytes the successful retry actually sent.
+    pub retry_wire_bytes: u64,
+    /// Pack bytes the retry skipped thanks to byte-range resume.
+    pub retry_resumed_bytes: u64,
+}
+
+impl ResumeSample {
+    /// Fraction of the pack the retry re-sent (1.0 = no resume).
+    pub fn retry_fraction(&self) -> f64 {
+        self.retry_wire_bytes as f64 / (self.pack_bytes as f64).max(1.0)
+    }
 }
 
 /// Synthesize `groups` parameter-group payloads of `elems` f32s each,
@@ -49,26 +79,44 @@ pub fn synth_group_payloads(groups: usize, elems: usize, seed: u64) -> Vec<Vec<u
         .collect()
 }
 
-/// Run both engines over the same `groups`×`elems` synthetic model.
-pub fn run_compare(groups: usize, elems: usize) -> Result<Vec<TransferRun>> {
-    let td_local = TempDir::new("xfer-local")?;
-    let local = LfsStore::open(td_local.path());
+fn seeded_local(groups: usize, elems: usize) -> Result<(TempDir, LfsStore, Vec<Oid>)> {
+    let td = TempDir::new("xfer-local")?;
+    let local = LfsStore::open(td.path());
     let oids: Vec<Oid> = synth_group_payloads(groups, elems, 42)
         .iter()
         .map(|p| Ok(local.put(p)?.0))
         .collect::<Result<_>>()?;
+    Ok((td, local, oids))
+}
 
+/// Run all engines over the same `groups`×`elems` synthetic model.
+/// Row order is stable: per-object, packed, http.
+pub fn run_compare(groups: usize, elems: usize) -> Result<Vec<TransferRun>> {
+    let (_td_local, local, oids) = seeded_local(groups, elems)?;
     let mut runs = Vec::new();
-    for mode in ["per-object", "packed"] {
-        let td_remote = TempDir::new("xfer-remote")?;
-        let remote = LfsRemote::open(td_remote.path());
 
-        // Call the engines directly (not the env-sensitive
-        // upload/download fronts) so each row measures what it claims.
+    for mode in ["per-object", "packed", "http"] {
+        let td_remote = TempDir::new("xfer-remote")?;
+        let td_staging = TempDir::new("xfer-staging")?;
+        // The http row goes through a real server over localhost TCP;
+        // the dir rows touch the remote directory directly. The server
+        // handle must outlive the legs (it stops on drop).
+        let mut server = None;
+        let remote: Box<dyn crate::lfs::RemoteTransport> = if mode == "http" {
+            let srv = LfsServer::spawn(td_remote.path())?;
+            let r = Box::new(HttpRemote::open(&srv.url(), Some(td_staging.path()))?);
+            server = Some(srv);
+            r
+        } else {
+            Box::new(LfsRemote::open(td_remote.path()))
+        };
+
         batch::reset_stats();
         let (upload_secs, _) = time_once(|| match mode {
-            "per-object" => remote.upload_per_object(&local, &oids).map(|_| ()),
-            _ => batch::push_pack(&local, &remote, &oids).map(|_| ()),
+            "per-object" => {
+                transport::upload_per_object(&local, remote.as_ref(), &oids).map(|_| ())
+            }
+            _ => batch::push_pack(&local, remote.as_ref(), &oids).map(|_| ()),
         })?;
         let up = batch::stats();
 
@@ -76,10 +124,13 @@ pub fn run_compare(groups: usize, elems: usize) -> Result<Vec<TransferRun>> {
         let clone_store = LfsStore::open(td_clone.path());
         batch::reset_stats();
         let (download_secs, _) = time_once(|| match mode {
-            "per-object" => remote.download_per_object(&clone_store, &oids).map(|_| ()),
-            _ => batch::fetch_pack(&remote, &clone_store, &oids).map(|_| ()),
+            "per-object" => {
+                transport::download_per_object(remote.as_ref(), &clone_store, &oids).map(|_| ())
+            }
+            _ => batch::fetch_pack(remote.as_ref(), &clone_store, &oids).map(|_| ()),
         })?;
         let down = batch::stats();
+        drop(server);
 
         runs.push(TransferRun {
             mode,
@@ -90,6 +141,52 @@ pub fn run_compare(groups: usize, elems: usize) -> Result<Vec<TransferRun>> {
         });
     }
     Ok(runs)
+}
+
+/// The `+resume` lever: push the model to an http remote, then fetch
+/// it through a fault proxy that kills the pack stream halfway. The
+/// first attempt must fail; the retry resumes from the persisted
+/// partial and is measured against the full pack size.
+pub fn run_resume_sample(groups: usize, elems: usize) -> Result<ResumeSample> {
+    let (_td_local, local, oids) = seeded_local(groups, elems)?;
+    let td_root = TempDir::new("xfer-resume-root")?;
+    let server = LfsServer::spawn(td_root.path())?;
+
+    // Seed the server through a clean push.
+    let td_up_staging = TempDir::new("xfer-resume-up")?;
+    let direct = HttpRemote::open(&server.url(), Some(td_up_staging.path()))?;
+    batch::push_pack(&local, &direct, &oids)?;
+
+    // Learn the pack size with an unfaulted fetch into a scratch store.
+    let td_scratch = TempDir::new("xfer-resume-scratch")?;
+    let scratch = LfsStore::open(td_scratch.path());
+    batch::reset_stats();
+    let baseline = batch::fetch_pack(&direct, &scratch, &oids)?;
+    let pack_bytes = baseline.packed_bytes;
+    ensure!(pack_bytes > 2, "resume sample needs a non-trivial pack");
+    let killed_after = pack_bytes / 2;
+
+    // Faulted fetch: attempt 1 dies at killed_after, the retry resumes.
+    let proxy = FaultProxy::spawn(&server.url())?;
+    let td_staging = TempDir::new("xfer-resume-staging")?;
+    let remote = HttpRemote::open(&proxy.url(), Some(td_staging.path()))?;
+    let td_store = TempDir::new("xfer-resume-store")?;
+    let store = LfsStore::open(td_store.path());
+
+    proxy.arm(FaultSpec::kill(Direction::Download, killed_after));
+    let first = batch::fetch_pack(&remote, &store, &oids);
+    ensure!(first.is_err(), "fault proxy must interrupt the first fetch");
+    ensure!(proxy.fired() == 1, "fault did not fire");
+
+    batch::reset_stats();
+    let retry = batch::fetch_pack(&remote, &store, &oids)?;
+    ensure!(retry.unavailable == 0, "resumed fetch left objects behind");
+    Ok(ResumeSample {
+        pack_bytes,
+        killed_after,
+        retry_wire_bytes: retry.wire_bytes,
+        retry_resumed_bytes: retry.resumed_bytes,
+    })
 }
 
 /// Render the comparison as a paper-style table.
@@ -128,6 +225,59 @@ pub fn render_runs(groups: usize, elems: usize, runs: &[TransferRun]) -> String 
     )
 }
 
+/// Render the `+resume` fault sample.
+pub fn render_resume(sample: &ResumeSample) -> String {
+    format!(
+        "+resume (injected fault): pack {}, killed after {}, retry sent {} (resumed {}, \
+         {:.0}% saved)\n",
+        humansize::bytes(sample.pack_bytes),
+        humansize::bytes(sample.killed_after),
+        humansize::bytes(sample.retry_wire_bytes),
+        humansize::bytes(sample.retry_resumed_bytes),
+        100.0 * (1.0 - sample.retry_fraction()),
+    )
+}
+
+/// Encode the ablation as the machine-readable `BENCH_transfer.json`
+/// payload (perf trajectory tracking + the CI regression gate).
+pub fn runs_to_json(
+    groups: usize,
+    elems: usize,
+    runs: &[TransferRun],
+    resume: &ResumeSample,
+) -> Json {
+    let mut root = JsonObj::new();
+    root.insert("bench", "transfer");
+    root.insert("groups", groups);
+    root.insert("elems", elems);
+    let rows: Vec<Json> = runs
+        .iter()
+        .map(|r| {
+            let mut o = JsonObj::new();
+            o.insert("mode", r.mode);
+            o.insert("up_round_trips", r.up.round_trips());
+            o.insert("up_packs", r.up.packs);
+            o.insert("up_wire_bytes", r.up.wire_bytes);
+            o.insert("up_raw_bytes", r.up.raw_bytes);
+            o.insert("upload_secs", Json::Num(r.upload_secs));
+            o.insert("down_round_trips", r.down.round_trips());
+            o.insert("down_packs", r.down.packs);
+            o.insert("down_wire_bytes", r.down.wire_bytes);
+            o.insert("download_secs", Json::Num(r.download_secs));
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("runs", Json::Arr(rows));
+    let mut res = JsonObj::new();
+    res.insert("pack_bytes", resume.pack_bytes);
+    res.insert("killed_after", resume.killed_after);
+    res.insert("retry_wire_bytes", resume.retry_wire_bytes);
+    res.insert("retry_resumed_bytes", resume.retry_resumed_bytes);
+    res.insert("retry_fraction", Json::Num(resume.retry_fraction()));
+    root.insert("resume", Json::Obj(res));
+    Json::Obj(root)
+}
+
 /// `git-theta bench transfer [groups] [elems]` entry point.
 pub fn run_transfer_cli(args: &[String]) -> Result<()> {
     let groups = args
@@ -140,6 +290,10 @@ pub fn run_transfer_cli(args: &[String]) -> Result<()> {
         .unwrap_or(4096usize);
     let runs = run_compare(groups, elems)?;
     print!("{}", render_runs(groups, elems, &runs));
+    let resume = run_resume_sample(groups, elems)?;
+    print!("{}", render_resume(&resume));
+    let path = super::write_bench_json("transfer", runs_to_json(groups, elems, &runs, &resume))?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 
@@ -174,5 +328,30 @@ mod tests {
             per.up.packed_bytes
         );
         assert!(packed.down.packed_bytes < per.down.packed_bytes);
+    }
+
+    #[test]
+    fn http_rows_match_packed_and_resume_halves_the_retry() {
+        let runs = run_compare(24, 512).unwrap();
+        let packed = &runs[1];
+        let http = &runs[2];
+        assert_eq!(http.mode, "http");
+        // Transport parity: identical logical round trips and payloads.
+        assert_eq!(http.up.round_trips(), packed.up.round_trips());
+        assert_eq!(http.down.round_trips(), packed.down.round_trips());
+        assert_eq!(http.up.objects, packed.up.objects);
+        assert_eq!(http.up.packed_bytes, packed.up.packed_bytes);
+        assert_eq!(http.down.raw_bytes, packed.down.raw_bytes);
+
+        let sample = run_resume_sample(24, 512).unwrap();
+        assert_eq!(sample.retry_resumed_bytes, sample.killed_after);
+        assert_eq!(
+            sample.retry_wire_bytes + sample.retry_resumed_bytes,
+            sample.pack_bytes
+        );
+        assert!(
+            sample.retry_wire_bytes < sample.pack_bytes,
+            "resume must transfer strictly fewer bytes than a from-scratch retry"
+        );
     }
 }

@@ -16,6 +16,7 @@
 //! ```
 
 use crate::gitcore::drivers::MergeOptions;
+use crate::gitcore::remote::RemoteSpec;
 use crate::gitcore::repo::Repository;
 use crate::util::humansize;
 use anyhow::{bail, Context, Result};
@@ -54,6 +55,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "pull" => cmd_pull(rest),
         "clone" => cmd_clone(rest),
         "config" => cmd_config(rest),
+        "serve" => cmd_serve(rest),
         "snapshot" => cmd_snapshot(rest),
         "gc" => cmd_gc(rest),
         "fsck" => cmd_fsck(rest),
@@ -88,11 +90,17 @@ COMMANDS:
                                  merge a branch (s: average|us|them|
                                  ancestor|weighted|fisher); --verbose
                                  prints merge-engine statistics
-  push <remote-dir> [branch] [--pack|--per-object]
-                                 push commits + LFS objects (packed by default)
-  fetch <remote-dir> [branch]    fetch commits + prefetch model objects as one pack
-  pull <remote-dir> [branch]     pull commits + metadata
-  clone <remote-dir> <dir>       clone a remote
+  push <remote> [branch] [--pack|--per-object]
+                                 push commits + LFS objects (packed by default);
+                                 <remote> is a directory or http://host:port
+  fetch <remote> [branch]        fetch commits + prefetch model objects as one
+                                 pack (interrupted pack transfers resume)
+  pull <remote> [branch]         pull commits + metadata
+  clone <remote> <dir>           clone a remote (directory or http://)
+  serve <root-dir> [--port N] [--bind HOST]
+                                 serve a remote root over http (LFS batch
+                                 protocol + resumable packs + commit/ref sync;
+                                 binds loopback unless --bind says otherwise)
   config <key> [<value>]         get/set repo config (e.g. remote,
                                  theta.snapshot-depth)
   snapshot <path...>             re-anchor tracked models as dense entries
@@ -319,13 +327,14 @@ fn cmd_push(args: &[String]) -> Result<()> {
             other => bail!("unexpected push argument '{other}'"),
         }
     }
-    let remote =
-        remote.context("usage: git-theta push <remote-dir> [branch] [--pack|--per-object]")?;
+    let usage = "usage: git-theta push <remote> [branch] [--pack|--per-object]";
+    let remote = remote.context(usage)?;
     let branch = branch.unwrap_or("main");
+    let spec = RemoteSpec::parse(remote)?;
     // The engine override is process-global; set it only once argument
     // parsing has succeeded, and scope it to exactly this push.
     crate::lfs::batch::set_per_object_mode(per_object);
-    let result = repo.push(Path::new(remote), branch);
+    let result = repo.push_spec(&spec, branch);
     crate::lfs::batch::set_per_object_mode(None);
     let report = result?;
     println!(
@@ -349,8 +358,9 @@ fn cmd_fetch(args: &[String]) -> Result<()> {
             other => bail!("unexpected fetch argument '{other}'"),
         }
     }
-    let remote_dir = remote.context("usage: git-theta fetch <remote-dir> [branch]")?;
+    let remote = remote.context("usage: git-theta fetch <remote> [branch]")?;
     let branch = branch.unwrap_or("main");
+    let spec = RemoteSpec::parse(remote)?;
 
     // Fetching into the checked-out branch would move its ref under a
     // stale index/working tree (a later commit would silently revert
@@ -359,24 +369,25 @@ fn cmd_fetch(args: &[String]) -> Result<()> {
     let on_current_branch =
         repo.refs().head()? == crate::gitcore::refs::Head::Branch(branch.to_string());
     let tip = if on_current_branch {
-        repo.pull(Path::new(remote_dir), branch)?
+        repo.pull_spec(&spec, branch)?
     } else {
-        repo.fetch(Path::new(remote_dir), branch)?
+        repo.fetch_spec(&spec, branch)?
     };
     // Remember the remote (as pull does) so later lazy smudges of
     // revisions outside this tip's chains can still download.
     if repo.config_get("remote")?.is_none() {
-        repo.config_set("remote", remote_dir)?;
+        repo.config_set("remote", &spec.to_string())?;
     }
 
     // Prefetch every LFS object the fetched tip references — model
     // metadata chains and plain LFS pointers alike — in one pack, so a
-    // later checkout smudges entirely from the local store.
+    // later checkout smudges entirely from the local store. Over an
+    // http remote an interrupted pack resumes on the next fetch.
     let tree = repo.odb().read_tree(&repo.odb().read_commit(&tip)?.tree)?;
     let oids = crate::theta::hooks::referenced_lfs_oids(&repo, &tree)?;
     let store = crate::lfs::LfsStore::open(repo.theta_dir());
-    let remote = crate::lfs::LfsRemote::open(Path::new(remote_dir));
-    let summary = crate::lfs::fetch_pack(&remote, &store, &oids)?;
+    let remote = crate::lfs::open_transport(&spec, Some(repo.theta_dir()))?;
+    let summary = crate::lfs::fetch_pack(remote.as_ref(), &store, &oids)?;
     if summary.unavailable > 0 {
         eprintln!(
             "warning: remote is missing {} referenced object(s); \
@@ -398,9 +409,9 @@ fn cmd_pull(args: &[String]) -> Result<()> {
     let repo = open_repo()?;
     let remote = args
         .first()
-        .context("usage: git-theta pull <remote-dir> [branch]")?;
+        .context("usage: git-theta pull <remote> [branch]")?;
     let branch = args.get(1).map(|s| s.as_str()).unwrap_or("main");
-    let tip = repo.pull(Path::new(remote), branch)?;
+    let tip = repo.pull_spec(&RemoteSpec::parse(remote)?, branch)?;
     println!("'{branch}' is at {}", tip.short());
     Ok(())
 }
@@ -409,15 +420,56 @@ fn cmd_clone(args: &[String]) -> Result<()> {
     crate::init();
     let remote = args
         .first()
-        .context("usage: git-theta clone <remote-dir> <dir>")?;
-    let dir = args.get(1).context("usage: git-theta clone <remote-dir> <dir>")?;
+        .context("usage: git-theta clone <remote> <dir>")?;
+    let dir = args.get(1).context("usage: git-theta clone <remote> <dir>")?;
     let dir = PathBuf::from(dir);
     std::fs::create_dir_all(&dir)?;
     let repo = Repository::init(&dir)?;
-    repo.config_set("remote", remote)?;
-    repo.pull(Path::new(remote), "main")?;
+    let spec = RemoteSpec::parse(remote)?;
+    repo.config_set("remote", &spec.to_string())?;
+    repo.pull_spec(&spec, "main")?;
     println!("cloned into {}", dir.display());
     Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut root = None;
+    let mut port = 0u16;
+    let mut host = "127.0.0.1".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--port" => {
+                port = args
+                    .get(i + 1)
+                    .and_then(|v| v.parse().ok())
+                    .context("--port needs a number")?;
+                i += 2;
+            }
+            // Bind host (default loopback; 0.0.0.0 serves the network —
+            // there is no auth story yet, so that is opt-in).
+            "--bind" => {
+                host = args.get(i + 1).context("--bind needs a host")?.clone();
+                i += 2;
+            }
+            other if other.starts_with("--") => bail!("unknown serve flag '{other}'"),
+            other if root.is_none() => {
+                root = Some(other.to_string());
+                i += 1;
+            }
+            other => bail!("unexpected serve argument '{other}'"),
+        }
+    }
+    let root = root.context("usage: git-theta serve <root-dir> [--port N] [--bind HOST]")?;
+    std::fs::create_dir_all(&root)?;
+    let server = crate::lfs::LfsServer::spawn_on(Path::new(&root), &format!("{host}:{port}"))?;
+    println!("serving {root} at {}", server.url());
+    println!("  push:  git-theta push {} main", server.url());
+    println!("  clone: git-theta clone {} <dir>", server.url());
+    println!("(ctrl-c to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 fn cmd_config(args: &[String]) -> Result<()> {

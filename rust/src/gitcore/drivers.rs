@@ -76,11 +76,13 @@ pub trait Hooks: Send + Sync {
         Ok(())
     }
 
-    /// Runs before commits are pushed (paper: syncs LFS objects).
+    /// Runs before commits are pushed (paper: syncs LFS objects). The
+    /// remote may be a directory or an http endpoint; hooks move bytes
+    /// through `lfs::transport::open_transport`, never raw paths.
     fn pre_push(
         &self,
         _repo: &Repository,
-        _remote: &std::path::Path,
+        _remote: &super::remote::RemoteSpec,
         _commits: &[super::object::Oid],
     ) -> Result<()> {
         Ok(())

@@ -21,6 +21,7 @@ pub mod mergebase;
 pub mod object;
 pub mod odb;
 pub mod refs;
+pub mod remote;
 pub mod repo;
 pub mod status;
 
@@ -29,5 +30,6 @@ pub use drivers::{DiffDriver, DriverRegistry, FilterDriver, MergeDriver, MergeOu
 pub use index::Index;
 pub use object::{Commit, Object, Oid, Tree, TreeEntry};
 pub use odb::Odb;
+pub use remote::RemoteSpec;
 pub use repo::{MergeReport, Repository, THETA_DIR};
 pub use status::{FileStatus, Status};

@@ -1,0 +1,358 @@
+//! Remote endpoints for commit/ref sync: directory- and HTTP-backed.
+//!
+//! `Repository::push/fetch/pull` used to be hard-wired to a directory
+//! on the same filesystem. This module abstracts the endpoint behind
+//! [`GitEndpoint`]: [`DirEndpoint`] keeps the original semantics (a
+//! bare odb + refs directory), while [`HttpEndpoint`] speaks the
+//! `git-theta serve` wire protocol (`/refs`, `/odb`, `/history` — see
+//! `lfs/server.rs` for the server half and `docs/ARCHITECTURE.md`
+//! "Remotes" for the full protocol). Large-object movement is *not*
+//! handled here; the pre-push hooks route it through
+//! `lfs::transport`, which shares the same [`RemoteSpec`].
+
+use super::mergebase::commits_between;
+use super::object::{Object, Oid};
+use super::odb::Odb;
+use super::refs::Refs;
+use crate::util::http;
+use crate::util::json::{Json, JsonObj};
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Where a remote lives: a directory on this filesystem or an HTTP
+/// server speaking the `git-theta serve` protocol.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RemoteSpec {
+    /// A bare directory remote (the seed's only kind).
+    Dir(PathBuf),
+    /// An `http://host:port` endpoint.
+    Http(String),
+}
+
+impl RemoteSpec {
+    /// Classify a user-supplied remote string: `http://` URLs become
+    /// [`RemoteSpec::Http`], plain strings are directory paths, and
+    /// any *other* `<scheme>://` is rejected — silently treating
+    /// `https://host` as a local directory would fabricate a directory
+    /// literally named `https:/host` and report a successful push that
+    /// never left the machine.
+    pub fn parse(s: &str) -> Result<RemoteSpec> {
+        if s.starts_with("http://") {
+            return Ok(RemoteSpec::Http(s.trim_end_matches('/').to_string()));
+        }
+        if let Some((scheme, _)) = s.split_once("://") {
+            bail!(
+                "unsupported remote scheme '{scheme}://' — git-theta remotes are a \
+                 directory path or http://host:port"
+            );
+        }
+        Ok(RemoteSpec::Dir(PathBuf::from(s)))
+    }
+
+    /// Classify a path-typed remote (legacy call sites); a path whose
+    /// text is an `http://` URL is routed to the HTTP endpoint.
+    pub fn from_path(p: &Path) -> RemoteSpec {
+        match p.to_str() {
+            Some(s) if s.starts_with("http://") => {
+                RemoteSpec::Http(s.trim_end_matches('/').to_string())
+            }
+            _ => RemoteSpec::Dir(p.to_path_buf()),
+        }
+    }
+
+    /// Whether this spec addresses an HTTP remote.
+    pub fn is_http(&self) -> bool {
+        matches!(self, RemoteSpec::Http(_))
+    }
+}
+
+impl fmt::Display for RemoteSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RemoteSpec::Dir(p) => write!(f, "{}", p.display()),
+            RemoteSpec::Http(url) => f.write_str(url),
+        }
+    }
+}
+
+/// Commit/ref operations a push or fetch needs from the remote side.
+///
+/// Every method is one logical round trip over HTTP; the directory
+/// implementation touches the filesystem directly.
+pub trait GitEndpoint {
+    /// The remote's tip for a branch (`None` if absent).
+    fn branch(&self, name: &str) -> Result<Option<Oid>>;
+
+    /// Compare-and-set a branch tip: fails if the remote's current tip
+    /// no longer equals `expected` (a concurrent push won the race).
+    fn set_branch(&self, name: &str, expected: Option<Oid>, new: &Oid) -> Result<()>;
+
+    /// Whether the remote's odb holds an object.
+    fn contains(&self, oid: &Oid) -> Result<bool>;
+
+    /// Read and verify an object from the remote's odb.
+    fn read(&self, oid: &Oid) -> Result<Object>;
+
+    /// Write an object into the remote's odb (idempotent).
+    fn write(&self, obj: &Object) -> Result<()>;
+
+    /// Of `oids`, the ones the remote's odb lacks — one round trip,
+    /// whatever the set size (the odb analogue of the LFS batch call).
+    fn missing(&self, oids: &[Oid]) -> Result<Vec<Oid>>;
+
+    /// Commits reachable from `tip` but not from `exclude`, in the
+    /// remote history's delivery order (the server walks its own DAG).
+    fn commits_between(&self, tip: Oid, exclude: &[Oid]) -> Result<Vec<Oid>>;
+}
+
+/// Open the endpoint a spec addresses (directories are created lazily).
+pub fn open_endpoint(spec: &RemoteSpec) -> Result<Box<dyn GitEndpoint>> {
+    Ok(match spec {
+        RemoteSpec::Dir(path) => Box::new(DirEndpoint::open_or_init(path)?),
+        RemoteSpec::Http(url) => Box::new(HttpEndpoint::open(url)?),
+    })
+}
+
+/// A bare directory remote: just an odb and refs (the seed's
+/// `RemoteDir`, now behind the endpoint trait).
+pub struct DirEndpoint {
+    odb: Odb,
+    refs: Refs,
+}
+
+impl DirEndpoint {
+    /// Open a directory remote, initializing its layout if absent.
+    pub fn open_or_init(path: &Path) -> Result<DirEndpoint> {
+        std::fs::create_dir_all(path.join("refs/heads"))?;
+        let odb = Odb::init(path)?;
+        let refs = Refs::open(path);
+        if !path.join("HEAD").exists() {
+            Refs::init(path, "main")?;
+        }
+        Ok(DirEndpoint { odb, refs })
+    }
+}
+
+impl GitEndpoint for DirEndpoint {
+    fn branch(&self, name: &str) -> Result<Option<Oid>> {
+        self.refs.branch(name)
+    }
+
+    fn set_branch(&self, name: &str, expected: Option<Oid>, new: &Oid) -> Result<()> {
+        let current = self.refs.branch(name)?;
+        if current != expected {
+            bail!("remote branch '{name}' moved during the push (fetch and retry)");
+        }
+        self.refs.set_branch(name, new)
+    }
+
+    fn contains(&self, oid: &Oid) -> Result<bool> {
+        Ok(self.odb.contains(oid))
+    }
+
+    fn read(&self, oid: &Oid) -> Result<Object> {
+        self.odb.read(oid)
+    }
+
+    fn write(&self, obj: &Object) -> Result<()> {
+        self.odb.write(obj).map(|_| ())
+    }
+
+    fn missing(&self, oids: &[Oid]) -> Result<Vec<Oid>> {
+        Ok(oids.iter().filter(|o| !self.odb.contains(o)).copied().collect())
+    }
+
+    fn commits_between(&self, tip: Oid, exclude: &[Oid]) -> Result<Vec<Oid>> {
+        commits_between(&self.odb, tip, exclude)
+    }
+}
+
+/// Client half of the HTTP commit/ref protocol.
+pub struct HttpEndpoint {
+    authority: String,
+    url: String,
+}
+
+impl HttpEndpoint {
+    /// Parse the URL; no connection is made until the first call.
+    /// URLs with a path component are rejected (the protocol is rooted
+    /// at `/`, so a path would be silently ignored).
+    pub fn open(url: &str) -> Result<HttpEndpoint> {
+        http::require_rootless(url)?;
+        Ok(HttpEndpoint {
+            authority: http::authority_of(url)?,
+            url: url.trim_end_matches('/').to_string(),
+        })
+    }
+
+    fn send(&self, req: http::Request) -> Result<http::Response> {
+        let resp = http::roundtrip(&self.authority, &req)?;
+        if !resp.complete {
+            bail!("connection to {} interrupted mid-response", self.url);
+        }
+        Ok(resp)
+    }
+}
+
+/// Encode a `{"want": [oid..]}` request body (shared by the odb and
+/// LFS halves of the wire protocol).
+pub(crate) fn want_body(oids: &[Oid]) -> Vec<u8> {
+    let mut obj = JsonObj::new();
+    obj.insert(
+        "want",
+        Json::Arr(oids.iter().map(|o| Json::from(o.to_hex())).collect()),
+    );
+    Json::Obj(obj).to_string_compact().into_bytes()
+}
+
+/// Decode an oid array field from a wire response.
+pub(crate) fn parse_oid_arr(json: &Json, key: &str) -> Result<Vec<Oid>> {
+    json.get(key)
+        .and_then(|v| v.as_arr())
+        .with_context(|| format!("remote response missing '{key}'"))?
+        .iter()
+        .map(|v| Oid::from_hex(v.as_str().context("non-string oid in remote response")?))
+        .collect()
+}
+
+/// Parse a wire response body as JSON.
+pub(crate) fn parse_json(resp: &http::Response) -> Result<Json> {
+    Json::parse(&String::from_utf8_lossy(&resp.body)).context("parsing remote json response")
+}
+
+impl GitEndpoint for HttpEndpoint {
+    fn branch(&self, name: &str) -> Result<Option<Oid>> {
+        let resp = self.send(http::Request::new("GET", &format!("/refs/{name}")))?;
+        match resp.status {
+            200 => Ok(Some(Oid::from_hex(String::from_utf8_lossy(&resp.body).trim())?)),
+            404 => Ok(None),
+            s => bail!("{}: GET /refs/{name} -> {s}", self.url),
+        }
+    }
+
+    fn set_branch(&self, name: &str, expected: Option<Oid>, new: &Oid) -> Result<()> {
+        let old = match expected {
+            Some(oid) => oid.to_hex(),
+            None => "none".to_string(),
+        };
+        let body = format!("{old} {}", new.to_hex()).into_bytes();
+        let resp = self.send(http::Request::new("PUT", &format!("/refs/{name}")).body(body))?;
+        match resp.status {
+            200 => Ok(()),
+            409 => bail!("remote branch '{name}' moved during the push (fetch and retry)"),
+            s => bail!("{}: PUT /refs/{name} -> {s}", self.url),
+        }
+    }
+
+    fn contains(&self, oid: &Oid) -> Result<bool> {
+        let resp = self.send(http::Request::new("HEAD", &format!("/odb/{}", oid.to_hex())))?;
+        match resp.status {
+            200 => Ok(true),
+            404 => Ok(false),
+            s => bail!("{}: HEAD /odb/{} -> {s}", self.url, oid.short()),
+        }
+    }
+
+    fn read(&self, oid: &Oid) -> Result<Object> {
+        let resp = self.send(http::Request::new("GET", &format!("/odb/{}", oid.to_hex())))?;
+        if resp.status == 404 {
+            bail!("object {} not found on {}", oid.short(), self.url);
+        }
+        if resp.status != 200 {
+            bail!("{}: GET /odb/{} -> {}", self.url, oid.short(), resp.status);
+        }
+        if Oid::of_bytes(&resp.body) != *oid {
+            bail!("object {} from {} failed its content hash", oid.short(), self.url);
+        }
+        Object::decode(&resp.body)
+    }
+
+    fn write(&self, obj: &Object) -> Result<()> {
+        let encoded = obj.encode();
+        let oid = Oid::of_bytes(&encoded);
+        let req = http::Request::new("PUT", &format!("/odb/{}", oid.to_hex())).body(encoded);
+        let resp = self.send(req)?;
+        if resp.status != 200 {
+            bail!("{}: PUT /odb/{} -> {}", self.url, oid.short(), resp.status);
+        }
+        Ok(())
+    }
+
+    fn missing(&self, oids: &[Oid]) -> Result<Vec<Oid>> {
+        if oids.is_empty() {
+            return Ok(Vec::new());
+        }
+        let req = http::Request::new("POST", "/odb/batch").body(want_body(oids));
+        let resp = self.send(req)?;
+        if resp.status != 200 {
+            bail!("{}: POST /odb/batch -> {}", self.url, resp.status);
+        }
+        parse_oid_arr(&parse_json(&resp)?, "missing")
+    }
+
+    fn commits_between(&self, tip: Oid, exclude: &[Oid]) -> Result<Vec<Oid>> {
+        let exclude_csv: Vec<String> = exclude.iter().map(|o| o.to_hex()).collect();
+        let target = if exclude_csv.is_empty() {
+            format!("/history/{}", tip.to_hex())
+        } else {
+            format!("/history/{}?exclude={}", tip.to_hex(), exclude_csv.join(","))
+        };
+        let resp = self.send(http::Request::new("GET", &target))?;
+        if resp.status != 200 {
+            bail!(
+                "{}: history walk from {} failed ({}): {}",
+                self.url,
+                tip.short(),
+                resp.status,
+                String::from_utf8_lossy(&resp.body)
+            );
+        }
+        parse_oid_arr(&parse_json(&resp)?, "commits")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_and_display() {
+        assert_eq!(
+            RemoteSpec::parse("/srv/models").unwrap(),
+            RemoteSpec::Dir(PathBuf::from("/srv/models"))
+        );
+        assert_eq!(
+            RemoteSpec::parse("http://127.0.0.1:8123/").unwrap(),
+            RemoteSpec::Http("http://127.0.0.1:8123".into())
+        );
+        assert!(RemoteSpec::parse("http://h:1").unwrap().is_http());
+        assert!(!RemoteSpec::parse("relative/dir").unwrap().is_http());
+        assert_eq!(
+            RemoteSpec::parse("http://h:1").unwrap().to_string(),
+            "http://h:1"
+        );
+        assert_eq!(
+            RemoteSpec::from_path(Path::new("http://h:2")),
+            RemoteSpec::Http("http://h:2".into())
+        );
+        // Unsupported schemes fail fast instead of minting a local
+        // directory named after the URL.
+        assert!(RemoteSpec::parse("https://models.lab:8417").is_err());
+        assert!(RemoteSpec::parse("ssh://host/repo").is_err());
+    }
+
+    #[test]
+    fn dir_endpoint_cas_rejects_moved_branch() {
+        let td = crate::util::tmp::TempDir::new("gitremote").unwrap();
+        let ep = DirEndpoint::open_or_init(td.path()).unwrap();
+        let a = Oid::of_bytes(b"a");
+        let b = Oid::of_bytes(b"b");
+        ep.set_branch("main", None, &a).unwrap();
+        assert_eq!(ep.branch("main").unwrap(), Some(a));
+        // Stale expectation: someone else moved the branch.
+        assert!(ep.set_branch("main", None, &b).is_err());
+        ep.set_branch("main", Some(a), &b).unwrap();
+        assert_eq!(ep.branch("main").unwrap(), Some(b));
+    }
+}

@@ -13,9 +13,10 @@ use super::mergebase::{commits_between, is_ancestor, merge_base};
 use super::object::{Commit, Object, Oid, Tree, TreeEntry};
 use super::odb::Odb;
 use super::refs::{Head, Refs};
+use super::remote::{open_endpoint, RemoteSpec};
 use super::status::{FileStatus, Status};
 use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::path::{Path, PathBuf};
 
 /// Name of the repository metadata directory (Git's `.git`).
@@ -672,14 +673,26 @@ impl Repository {
     // remote transfer
     // ------------------------------------------------------------------
 
-    /// Push `branch` to a directory remote, transferring missing objects.
+    /// Push `branch` to a directory remote (legacy path-typed entry
+    /// point; see [`Repository::push_spec`] for http remotes).
     pub fn push(&self, remote: &Path, branch: &str) -> Result<PushReport> {
+        self.push_spec(&RemoteSpec::from_path(remote), branch)
+    }
+
+    /// Push `branch` to a remote, transferring missing objects.
+    ///
+    /// Works against any [`RemoteSpec`]: the remote's tip is read, the
+    /// fast-forward check runs locally, pre-push hooks sync LFS objects
+    /// (through `lfs::transport`), then exactly the odb objects the
+    /// remote is missing — negotiated in one round trip — are sent and
+    /// the branch tip is compare-and-set.
+    pub fn push_spec(&self, remote: &RemoteSpec, branch: &str) -> Result<PushReport> {
         let tip = self
             .refs
             .branch(branch)?
             .with_context(|| format!("no local branch '{branch}'"))?;
-        let remote_repo = RemoteDir::open_or_init(remote)?;
-        let remote_tip = remote_repo.refs.branch(branch)?;
+        let endpoint = open_endpoint(remote)?;
+        let remote_tip = endpoint.branch(branch)?;
 
         if let Some(rt) = remote_tip {
             if rt == tip {
@@ -702,29 +715,35 @@ impl Repository {
             hooks.pre_push(self, remote, &commits)?;
         }
 
-        let mut objects_sent = 0usize;
-        let mut bytes_sent = 0u64;
+        // Candidate objects in dependency order (blobs before their
+        // tree, tree before its commit), deduplicated, then negotiated
+        // in a single round trip so only missing objects move.
+        let mut candidates: Vec<Oid> = Vec::new();
         for &commit_oid in &commits {
             let commit = self.odb.read_commit(&commit_oid)?;
             let tree = self.odb.read_tree(&commit.tree)?;
             for entry in &tree.entries {
-                if !remote_repo.odb.contains(&entry.oid) {
-                    let blob = self.odb.read(&entry.oid)?;
-                    bytes_sent += blob_size(&blob);
-                    remote_repo.odb.write(&blob)?;
-                    objects_sent += 1;
-                }
+                candidates.push(entry.oid);
             }
-            if !remote_repo.odb.contains(&commit.tree) {
-                remote_repo.odb.write(&Object::Tree(tree))?;
-                objects_sent += 1;
-            }
-            if !remote_repo.odb.contains(&commit_oid) {
-                remote_repo.odb.write(&Object::Commit(commit))?;
-                objects_sent += 1;
-            }
+            candidates.push(commit.tree);
+            candidates.push(commit_oid);
         }
-        remote_repo.refs.set_branch(branch, &tip)?;
+        let mut seen = HashSet::new();
+        candidates.retain(|o| seen.insert(*o));
+        let missing: HashSet<Oid> = endpoint.missing(&candidates)?.into_iter().collect();
+
+        let mut objects_sent = 0usize;
+        let mut bytes_sent = 0u64;
+        for oid in &candidates {
+            if !missing.contains(oid) {
+                continue;
+            }
+            let obj = self.odb.read(oid)?;
+            bytes_sent += blob_size(&obj);
+            endpoint.write(&obj)?;
+            objects_sent += 1;
+        }
+        endpoint.set_branch(branch, remote_tip, &tip)?;
         Ok(PushReport {
             commits,
             objects_sent,
@@ -732,30 +751,44 @@ impl Repository {
         })
     }
 
-    /// Fetch `branch` from a directory remote into the local odb and
-    /// fast-forward the local branch. Does not touch the working tree.
+    /// Fetch `branch` from a directory remote (legacy path-typed entry
+    /// point; see [`Repository::fetch_spec`] for http remotes).
     pub fn fetch(&self, remote: &Path, branch: &str) -> Result<Oid> {
-        let remote_repo = RemoteDir::open_or_init(remote)?;
-        let remote_tip = remote_repo
-            .refs
+        self.fetch_spec(&RemoteSpec::from_path(remote), branch)
+    }
+
+    /// Fetch `branch` from a remote into the local odb and fast-forward
+    /// the local branch. Does not touch the working tree.
+    pub fn fetch_spec(&self, remote: &RemoteSpec, branch: &str) -> Result<Oid> {
+        let endpoint = open_endpoint(remote)?;
+        let remote_tip = endpoint
             .branch(branch)?
             .with_context(|| format!("remote has no branch '{branch}'"))?;
         let local_tip = self.refs.branch(branch)?;
 
-        let exclude: Vec<Oid> = local_tip
-            .into_iter()
-            .filter(|t| remote_repo.odb.contains(t))
-            .collect();
-        let commits = commits_between(&remote_repo.odb, remote_tip, &exclude)?;
+        let mut exclude: Vec<Oid> = Vec::new();
+        if let Some(t) = local_tip {
+            if endpoint.contains(&t)? {
+                exclude.push(t);
+            }
+        }
+        let commits = endpoint.commits_between(remote_tip, &exclude)?;
         for &commit_oid in &commits {
-            let commit = remote_repo.odb.read_commit(&commit_oid)?;
-            let tree = remote_repo.odb.read_tree(&commit.tree)?;
+            let commit = match endpoint.read(&commit_oid)? {
+                Object::Commit(c) => c,
+                other => bail!("expected commit {}, found {}", commit_oid.short(), other.kind()),
+            };
+            let tree_obj = endpoint.read(&commit.tree)?;
+            let tree = match &tree_obj {
+                Object::Tree(t) => t.clone(),
+                other => bail!("expected tree {}, found {}", commit.tree.short(), other.kind()),
+            };
             for entry in &tree.entries {
                 if !self.odb.contains(&entry.oid) {
-                    self.odb.write(&remote_repo.odb.read(&entry.oid)?)?;
+                    self.odb.write(&endpoint.read(&entry.oid)?)?;
                 }
             }
-            self.odb.write(&Object::Tree(tree))?;
+            self.odb.write(&tree_obj)?;
             self.odb.write(&Object::Commit(commit))?;
         }
         if let Some(lt) = local_tip {
@@ -767,8 +800,14 @@ impl Repository {
         Ok(remote_tip)
     }
 
-    /// Fetch + materialize if HEAD is on that branch (paper's `git pull`).
+    /// Pull from a directory remote (legacy path-typed entry point; see
+    /// [`Repository::pull_spec`] for http remotes).
     pub fn pull(&self, remote: &Path, branch: &str) -> Result<Oid> {
+        self.pull_spec(&RemoteSpec::from_path(remote), branch)
+    }
+
+    /// Fetch + materialize if HEAD is on that branch (paper's `git pull`).
+    pub fn pull_spec(&self, remote: &RemoteSpec, branch: &str) -> Result<Oid> {
         let old_tree = match self.head_commit()? {
             Some(h) => Some(self.odb.read_tree(&self.odb.read_commit(&h)?.tree)?),
             None => None,
@@ -776,33 +815,13 @@ impl Repository {
         // Remember the remote (like git's `origin`) so smudge filters can
         // lazily download large objects referenced by pulled commits.
         if self.config_get("remote")?.is_none() {
-            if let Some(r) = remote.to_str() {
-                self.config_set("remote", r)?;
-            }
+            self.config_set("remote", &remote.to_string())?;
         }
-        let tip = self.fetch(remote, branch)?;
+        let tip = self.fetch_spec(remote, branch)?;
         if self.refs.head()? == Head::Branch(branch.to_string()) {
             self.materialize(tip, old_tree.as_ref())?;
         }
         Ok(tip)
-    }
-}
-
-/// A bare directory remote: just an odb and refs.
-struct RemoteDir {
-    odb: Odb,
-    refs: Refs,
-}
-
-impl RemoteDir {
-    fn open_or_init(path: &Path) -> Result<RemoteDir> {
-        std::fs::create_dir_all(path.join("refs/heads"))?;
-        let odb = Odb::init(path)?;
-        let refs = Refs::open(path);
-        if !path.join("HEAD").exists() {
-            Refs::init(path, "main")?;
-        }
-        Ok(RemoteDir { odb, refs })
     }
 }
 

@@ -1,12 +1,15 @@
-//! Have/want negotiation and the packed transfer engine.
+//! Have/want negotiation and the packed transfer orchestrator.
 //!
 //! The paper's communication-efficiency story (§3.2, §4) is about *what*
 //! moves: only changed parameter-group objects. This module is about
 //! *how* they move: instead of one negotiation and one copy per object,
-//! a client announces its full want/have set in one [`LfsRemote::batch`]
-//! call, the sender assembles every missing object into a single
-//! [`pack`](super::pack), and the receiver fans the pack back into its
-//! store — one round trip and one transfer for N objects.
+//! a client announces its full want/have set in one
+//! [`RemoteTransport::batch`] call, the sender assembles every missing
+//! object into a single [`pack`](super::pack), and the receiver fans
+//! the pack back into its store — one round trip and one transfer for
+//! N objects, over whatever channel the
+//! [`transport`](super::transport) implements (directory or HTTP with
+//! byte-range resume).
 //!
 //! [`Prefetcher`] is the orchestrator: it drops already-present oids,
 //! negotiates once, then pipelines pack assembly → transfer → store
@@ -19,8 +22,8 @@
 //! without interference from concurrently running tests.
 
 use super::pack;
-use super::remote::LfsRemote;
 use super::store::LfsStore;
+use super::transport::{RemoteTransport, WireReport};
 use crate::gitcore::object::Oid;
 use crate::util::par;
 use anyhow::Result;
@@ -32,19 +35,29 @@ use std::sync::atomic::{AtomicU8, Ordering};
 pub struct BatchResponse {
     /// Wanted oids the remote holds.
     pub present: Vec<Oid>,
+    /// Raw byte size of each present oid (aligned with `present`; 0
+    /// when unknown). The fetch planner shards packs on these without
+    /// touching the remote again.
+    pub present_sizes: Vec<u64>,
     /// Wanted oids the remote does not hold.
     pub missing: Vec<Oid>,
 }
 
 /// What one packed transfer actually moved.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TransferSummary {
     /// Objects that crossed the wire.
     pub objects: usize,
     /// Uncompressed payload bytes of those objects.
     pub raw_bytes: u64,
-    /// Pack bytes that crossed the wire.
+    /// Pack bytes of the packs moved (full pack size).
     pub packed_bytes: u64,
+    /// Pack bytes that actually crossed the wire in this call. Equal to
+    /// `packed_bytes` unless a byte-range resume skipped a prefix.
+    pub wire_bytes: u64,
+    /// Pack bytes *not* re-sent because an interrupted transfer was
+    /// resumed from its persisted partial.
+    pub resumed_bytes: u64,
     /// Wanted objects the sender could not provide.
     pub unavailable: usize,
 }
@@ -64,6 +77,11 @@ pub struct TransferStats {
     pub raw_bytes: u64,
     /// Wire bytes moved (pack size; per-object transfers count raw size).
     pub packed_bytes: u64,
+    /// Bytes that actually crossed the wire (≤ `packed_bytes` when a
+    /// resume skipped a persisted prefix).
+    pub wire_bytes: u64,
+    /// Bytes saved by byte-range resume of interrupted transfers.
+    pub resumed_bytes: u64,
 }
 
 impl TransferStats {
@@ -158,13 +176,13 @@ impl Prefetcher {
     /// Download `want` from `remote` into `local`.
     ///
     /// Drops oids already in `local`, negotiates the remainder in one
-    /// [`LfsRemote::batch`] call, and moves everything the remote holds
-    /// as a pack. Oids the remote lacks are reported as `unavailable`
-    /// rather than failing the whole transfer — the caller decides
-    /// whether an absent object is fatal.
+    /// [`RemoteTransport::batch`] call, and moves everything the remote
+    /// holds as packs. Oids the remote lacks are reported as
+    /// `unavailable` rather than failing the whole transfer — the
+    /// caller decides whether an absent object is fatal.
     pub fn fetch(
         &self,
-        remote: &LfsRemote,
+        remote: &dyn RemoteTransport,
         local: &LfsStore,
         want: &[Oid],
     ) -> Result<TransferSummary> {
@@ -174,8 +192,19 @@ impl Prefetcher {
         if need.is_empty() {
             return Ok(TransferSummary::default());
         }
-        let resp = remote.batch(&need);
-        self.move_packs(remote.store(), local, &resp.present, resp.missing.len())
+        let resp = remote.batch(&need)?;
+        let shards = self.shard_sized(&resp.present, &resp.present_sizes);
+        let inner = if shards.len() > 1 { 1 } else { self.threads };
+        let per_shard = par::try_par_map(
+            &shards,
+            self.threads.min(shards.len().max(1)),
+            |_, shard| -> Result<(pack::PackStats, WireReport)> {
+                let (blob, wire) = remote.fetch_pack_blob(shard, inner)?;
+                let stats = pack::unpack_into(local, &blob, inner)?;
+                Ok((stats, wire))
+            },
+        )?;
+        Ok(accumulate(resp.missing.len(), &per_shard))
     }
 
     /// Upload `oids` from `local` to `remote`.
@@ -185,7 +214,7 @@ impl Prefetcher {
     pub fn push(
         &self,
         local: &LfsStore,
-        remote: &LfsRemote,
+        remote: &dyn RemoteTransport,
         oids: &[Oid],
     ) -> Result<TransferSummary> {
         let mut want = oids.to_vec();
@@ -194,70 +223,39 @@ impl Prefetcher {
         if want.is_empty() {
             return Ok(TransferSummary::default());
         }
-        let resp = remote.batch(&want);
+        let resp = remote.batch(&want)?;
+        let held = local.contains_all(&resp.missing);
         let send: Vec<Oid> = resp
             .missing
             .iter()
-            .filter(|o| local.contains(o))
-            .copied()
+            .zip(&held)
+            .filter(|(_, h)| **h)
+            .map(|(o, _)| *o)
             .collect();
         let unavailable = resp.missing.len() - send.len();
-        self.move_packs(local, remote.store(), &send, unavailable)
-    }
-
-    /// Shared pack pipeline: shard `oids`, then per shard assemble a
-    /// pack from `src` and fan it into `dst`. With one shard the
-    /// parallelism lives inside build/unpack; with many shards the
-    /// shards themselves overlap assembly with fan-in.
-    fn move_packs(
-        &self,
-        src: &LfsStore,
-        dst: &LfsStore,
-        oids: &[Oid],
-        unavailable: usize,
-    ) -> Result<TransferSummary> {
-        let mut total = TransferSummary {
-            unavailable,
-            ..Default::default()
-        };
-        if oids.is_empty() {
-            return Ok(total);
-        }
-        let shards = self.shard(src, oids);
+        let shards = self.shard(local, &send);
         let inner = if shards.len() > 1 { 1 } else { self.threads };
         let per_shard = par::try_par_map(
             &shards,
-            self.threads.min(shards.len()),
-            |_, shard| -> Result<pack::PackStats> {
-                let blob = pack::build_pack(src, shard, inner)?;
-                pack::unpack_into(dst, &blob, inner)
+            self.threads.min(shards.len().max(1)),
+            |_, shard| -> Result<(pack::PackStats, WireReport)> {
+                let blob = pack::build_pack(local, shard, inner)?;
+                let id = pack::pack_id(&blob);
+                remote.send_pack_blob(&id, &blob, inner)
             },
         )?;
-        for s in &per_shard {
-            total.objects += s.objects;
-            total.raw_bytes += s.raw_bytes;
-            total.packed_bytes += s.packed_bytes;
-        }
-        record(|t| {
-            t.packs += per_shard.len() as u64;
-            t.objects += total.objects as u64;
-            t.raw_bytes += total.raw_bytes;
-            t.packed_bytes += total.packed_bytes;
-        });
-        Ok(total)
+        Ok(accumulate(unavailable, &per_shard))
     }
 
     /// Greedily split `oids` into shards respecting both the object and
-    /// the raw-byte cap (sizes probed from the source store's metadata;
-    /// an oid the source lacks counts as zero and fails later in
-    /// `build_pack` with a precise error).
-    fn shard(&self, src: &LfsStore, oids: &[Oid]) -> Vec<Vec<Oid>> {
+    /// the raw-byte cap, with sizes supplied per oid.
+    fn shard_pairs(&self, oids: &[Oid], size_of: impl Fn(usize, &Oid) -> u64) -> Vec<Vec<Oid>> {
         let max_objects = self.max_pack_objects.max(1);
         let mut shards = Vec::new();
         let mut cur: Vec<Oid> = Vec::new();
         let mut cur_bytes = 0u64;
-        for &oid in oids {
-            let size = src.size_of(&oid).unwrap_or(0);
+        for (i, &oid) in oids.iter().enumerate() {
+            let size = size_of(i, &oid);
             if !cur.is_empty()
                 && (cur.len() >= max_objects
                     || cur_bytes.saturating_add(size) > self.max_pack_bytes)
@@ -273,21 +271,67 @@ impl Prefetcher {
         }
         shards
     }
+
+    /// Shard with sizes probed from a local source store's metadata (an
+    /// oid the source lacks counts as zero and fails later in
+    /// `build_pack` with a precise error).
+    fn shard(&self, src: &LfsStore, oids: &[Oid]) -> Vec<Vec<Oid>> {
+        self.shard_pairs(oids, |_, oid| src.size_of(oid).unwrap_or(0))
+    }
+
+    /// Shard with sizes reported by the remote's negotiation response.
+    fn shard_sized(&self, oids: &[Oid], sizes: &[u64]) -> Vec<Vec<Oid>> {
+        self.shard_pairs(oids, |i, _| sizes.get(i).copied().unwrap_or(0))
+    }
+}
+
+/// Fold per-shard pack stats + wire reports into one summary and record
+/// it on the calling thread's counters.
+fn accumulate(unavailable: usize, per_shard: &[(pack::PackStats, WireReport)]) -> TransferSummary {
+    let mut total = TransferSummary {
+        unavailable,
+        ..Default::default()
+    };
+    for (s, w) in per_shard {
+        total.objects += s.objects;
+        total.raw_bytes += s.raw_bytes;
+        total.packed_bytes += s.packed_bytes;
+        total.wire_bytes += w.wire_bytes;
+        total.resumed_bytes += w.resumed_bytes;
+    }
+    record(|t| {
+        t.packs += per_shard.len() as u64;
+        t.objects += total.objects as u64;
+        t.raw_bytes += total.raw_bytes;
+        t.packed_bytes += total.packed_bytes;
+        t.wire_bytes += total.wire_bytes;
+        t.resumed_bytes += total.resumed_bytes;
+    });
+    total
 }
 
 /// Fetch `want` into `local` with the default [`Prefetcher`].
-pub fn fetch_pack(remote: &LfsRemote, local: &LfsStore, want: &[Oid]) -> Result<TransferSummary> {
+pub fn fetch_pack(
+    remote: &dyn RemoteTransport,
+    local: &LfsStore,
+    want: &[Oid],
+) -> Result<TransferSummary> {
     Prefetcher::default().fetch(remote, local, want)
 }
 
 /// Push `oids` to `remote` with the default [`Prefetcher`].
-pub fn push_pack(local: &LfsStore, remote: &LfsRemote, oids: &[Oid]) -> Result<TransferSummary> {
+pub fn push_pack(
+    local: &LfsStore,
+    remote: &dyn RemoteTransport,
+    oids: &[Oid],
+) -> Result<TransferSummary> {
     Prefetcher::default().push(local, remote, oids)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lfs::remote::LfsRemote;
     use crate::util::tmp::TempDir;
 
     fn seeded(td: &TempDir, n: usize) -> (LfsStore, Vec<Oid>) {
@@ -312,6 +356,8 @@ mod tests {
         let s = fetch_pack(&remote, &local, &oids).unwrap();
         assert_eq!(s.objects, 20);
         assert_eq!(s.unavailable, 0);
+        assert_eq!(s.wire_bytes, s.packed_bytes);
+        assert_eq!(s.resumed_bytes, 0);
         let t = stats();
         assert_eq!(t.negotiations, 1);
         assert_eq!(t.packs, 1);
@@ -401,5 +447,31 @@ mod tests {
         assert_eq!(t.negotiations, 1);
         assert_eq!(t.packs, 3);
         assert_eq!(t.objects, 6);
+    }
+
+    #[test]
+    fn fetch_shards_on_negotiated_sizes() {
+        // The download planner never probes the remote store directly:
+        // shard decisions come from the negotiation's size report.
+        let td_r = TempDir::new("batch-dlshard-r").unwrap();
+        let td_l = TempDir::new("batch-dlshard-l").unwrap();
+        let remote = LfsRemote::open(td_r.path());
+        let oids: Vec<Oid> = (0..6u8)
+            .map(|i| remote.store().put(&vec![i; 1000]).unwrap().0)
+            .collect();
+        let local = LfsStore::open(td_l.path());
+
+        reset_stats();
+        let p = Prefetcher {
+            max_pack_bytes: 2500,
+            threads: 2,
+            ..Prefetcher::default()
+        };
+        let s = p.fetch(&remote, &local, &oids).unwrap();
+        assert_eq!(s.objects, 6);
+        assert_eq!(stats().packs, 3);
+        for oid in &oids {
+            assert_eq!(local.get(oid).unwrap(), remote.store().get(oid).unwrap());
+        }
     }
 }

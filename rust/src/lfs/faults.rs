@@ -1,0 +1,342 @@
+//! Fault-injection proxy: real-network failure modes for pack streams.
+//!
+//! The transport's resume story ("an interrupted transfer re-sends
+//! only the missing tail") is only provable against a channel that can
+//! actually stall, drop, or duplicate. [`FaultProxy`] sits between a
+//! client and an [`LfsServer`](super::server::LfsServer), forwards
+//! traffic verbatim, and — when armed — injects exactly one fault into
+//! the next matching **pack body**:
+//!
+//! * **truncate** — kill both sockets once `k` pack-body bytes have
+//!   been relayed (k is a byte offset *into the pack*, not the
+//!   connection: HTTP heads are not counted, so tests can sweep k
+//!   across the pack deterministically);
+//! * **duplicate** — re-inject a previously relayed body slice in
+//!   place of the real tail (stream corruption that preserves
+//!   `Content-Length`, so only checksums can catch it);
+//! * **delay** — sleep before relaying the pack.
+//!
+//! Faults are one-shot: after firing, the proxy is transparent again,
+//! which is what lets a test assert "attempt 1 dies at byte k, the
+//! retry resumes". Non-pack requests (negotiations, ref sync) always
+//! pass through untouched.
+//!
+//! The proxy is a deliverable of the test harness (the
+//! `rust/tests/support` module builds on it) but lives in the library
+//! so `benchkit`'s transfer ablation can sample an injected-fault
+//! resume too.
+
+use crate::util::http::{self, Request};
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Which pack streams a fault applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Server → client pack bodies (`GET /packs/<id>` responses).
+    Download,
+    /// Client → server pack bodies (`PUT /packs/<id>` requests).
+    Upload,
+}
+
+/// One fault to inject into the next matching pack stream.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// Which pack direction to target.
+    pub direction: Direction,
+    /// Kill the connection after relaying this many pack-body bytes.
+    pub kill_after: Option<u64>,
+    /// `(offset, len)`: when the body reaches `offset`, re-send the
+    /// `len` bytes preceding it instead of the real continuation
+    /// (total length preserved; content corrupted from `offset` on).
+    pub duplicate_at: Option<(u64, u64)>,
+    /// Sleep this long before relaying the pack body.
+    pub delay_ms: u64,
+}
+
+impl FaultSpec {
+    /// A truncation fault: cut the stream after `k` pack-body bytes.
+    pub fn kill(direction: Direction, k: u64) -> FaultSpec {
+        FaultSpec {
+            direction,
+            kill_after: Some(k),
+            duplicate_at: None,
+            delay_ms: 0,
+        }
+    }
+
+    /// A duplication fault: at body byte `offset`, replay the previous
+    /// `len` bytes (corrupting the stream without changing its length).
+    pub fn duplicate(direction: Direction, offset: u64, len: u64) -> FaultSpec {
+        FaultSpec {
+            direction,
+            kill_after: None,
+            duplicate_at: Some((offset, len)),
+            delay_ms: 0,
+        }
+    }
+
+    /// A delay fault: stall the pack body by `ms` milliseconds.
+    pub fn delay(direction: Direction, ms: u64) -> FaultSpec {
+        FaultSpec {
+            direction,
+            kill_after: None,
+            duplicate_at: None,
+            delay_ms: ms,
+        }
+    }
+}
+
+/// A TCP proxy that can inject one fault into the next pack stream.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    armed: Arc<Mutex<Option<FaultSpec>>>,
+    fired: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Proxy localhost connections to `upstream` (an `http://` URL or
+    /// a bare `host:port` authority).
+    pub fn spawn(upstream: &str) -> Result<FaultProxy> {
+        let upstream = if upstream.starts_with("http://") {
+            http::authority_of(upstream)?
+        } else {
+            upstream.to_string()
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding fault proxy")?;
+        let addr = listener.local_addr()?;
+        let armed = Arc::new(Mutex::new(None));
+        let fired = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (armed2, fired2, stop2) = (armed.clone(), fired.clone(), stop.clone());
+        let accept_thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    let upstream = upstream.clone();
+                    let armed = armed2.clone();
+                    let fired = fired2.clone();
+                    std::thread::spawn(move || {
+                        let _ = relay(stream, &upstream, &armed, &fired);
+                    });
+                }
+            }
+        });
+        Ok(FaultProxy {
+            addr,
+            armed,
+            fired,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The `http://` URL clients should use instead of the upstream's.
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Arm one fault; it fires on the next matching pack stream and
+    /// then disarms (replacing any fault still armed).
+    pub fn arm(&self, spec: FaultSpec) {
+        *self.armed.lock().unwrap() = Some(spec);
+    }
+
+    /// Disarm without firing.
+    pub fn disarm(&self) {
+        *self.armed.lock().unwrap() = None;
+    }
+
+    /// How many faults have fired since spawn.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.accept_thread.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Apply a duplication fault to a body: replace the continuation at
+/// `offset` with a replay of the `len` bytes before it, preserving
+/// total length.
+fn duplicate_body(body: &[u8], offset: u64, len: u64) -> Vec<u8> {
+    let total = body.len();
+    let offset = (offset as usize).min(total);
+    let len = (len as usize).min(offset);
+    if len == 0 {
+        return body.to_vec();
+    }
+    let mut out = Vec::with_capacity(total);
+    out.extend_from_slice(&body[..offset]);
+    out.extend_from_slice(&body[offset - len..offset]);
+    out.extend_from_slice(&body[offset..]);
+    out.truncate(total);
+    out
+}
+
+fn is_pack_request(req: &Request) -> Option<Direction> {
+    if !req.path().starts_with("/packs/") {
+        return None;
+    }
+    match req.method.as_str() {
+        "GET" => Some(Direction::Download),
+        "PUT" => Some(Direction::Upload),
+        _ => None,
+    }
+}
+
+/// Handle one proxied connection at request granularity: read the full
+/// request, apply any armed upload fault while forwarding, read the
+/// full upstream response, apply any armed download fault while
+/// relaying it back.
+fn relay(
+    mut client: TcpStream,
+    upstream: &str,
+    armed: &Mutex<Option<FaultSpec>>,
+    fired: &AtomicU64,
+) -> Result<()> {
+    client.set_read_timeout(Some(http::IO_TIMEOUT)).ok();
+    client.set_write_timeout(Some(http::IO_TIMEOUT)).ok();
+    let (req, _complete) = http::read_request(&mut client)?;
+
+    // Claim the armed fault iff this request is a matching pack stream.
+    let fault = match is_pack_request(&req) {
+        Some(direction) => {
+            let mut guard = armed.lock().unwrap();
+            if (*guard).map(|s| s.direction) == Some(direction) {
+                guard.take()
+            } else {
+                None
+            }
+        }
+        None => None,
+    };
+    if let Some(spec) = &fault {
+        fired.fetch_add(1, Ordering::SeqCst);
+        if spec.delay_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(spec.delay_ms));
+        }
+    }
+
+    let mut up = TcpStream::connect(upstream).context("fault proxy: connecting upstream")?;
+    up.set_read_timeout(Some(http::IO_TIMEOUT)).ok();
+    up.set_write_timeout(Some(http::IO_TIMEOUT)).ok();
+
+    // Forward the request, with upload faults applied to the body.
+    match fault {
+        Some(spec) if spec.direction == Direction::Upload => {
+            if let Some(k) = spec.kill_after {
+                // Declare the full body but send only k bytes, then cut
+                // both sockets: the server sees a short read and
+                // persists the prefix; the client sees a dead channel.
+                let k = (k as usize).min(req.body.len());
+                http::write_request_head(
+                    &mut up,
+                    &req.method,
+                    &req.target,
+                    &req.headers,
+                    req.body.len() as u64,
+                )?;
+                use std::io::Write;
+                up.write_all(&req.body[..k])?;
+                up.flush().ok();
+                return Ok(()); // drop both connections
+            }
+            let mut faulted = req.clone();
+            if let Some((offset, len)) = spec.duplicate_at {
+                faulted.body = duplicate_body(&req.body, offset, len);
+            }
+            http::write_request(&mut up, &faulted)?;
+        }
+        _ => http::write_request(&mut up, &req)?,
+    }
+
+    // Relay the response, with download faults applied to the body.
+    let resp = http::read_response(&mut up, req.method == "HEAD")?;
+    match fault {
+        Some(spec) if spec.direction == Direction::Download => {
+            if let Some(k) = spec.kill_after {
+                let k = (k as usize).min(resp.body.len());
+                http::write_response_head(
+                    &mut client,
+                    resp.status,
+                    &resp.headers,
+                    resp.body.len() as u64,
+                )?;
+                use std::io::Write;
+                client.write_all(&resp.body[..k])?;
+                client.flush().ok();
+                return Ok(());
+            }
+            let mut faulted = resp.clone();
+            if let Some((offset, len)) = spec.duplicate_at {
+                faulted.body = duplicate_body(&resp.body, offset, len);
+            }
+            http::write_response(&mut client, &faulted)?;
+        }
+        _ => http::write_response(&mut client, &resp)?,
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplicate_body_preserves_length_and_corrupts_tail() {
+        let body: Vec<u8> = (0..100u8).collect();
+        let out = duplicate_body(&body, 40, 10);
+        assert_eq!(out.len(), body.len());
+        assert_eq!(&out[..40], &body[..40]);
+        assert_eq!(&out[40..50], &body[30..40]); // replayed slice
+        assert_ne!(out, body);
+        // Degenerate parameters are no-ops.
+        assert_eq!(duplicate_body(&body, 0, 10), body);
+        assert_eq!(duplicate_body(&body, 40, 0), body);
+        // Offset past the end clamps to the end: the replayed slice
+        // lands entirely in the truncated region, so nothing changes.
+        assert_eq!(duplicate_body(&body, 1000, 10), body);
+    }
+
+    #[test]
+    fn passthrough_when_unarmed() {
+        use std::io::{Read, Write};
+        use std::net::TcpListener;
+        // A tiny upstream echoing a fixed response.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let upstream_addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let mut stream = match conn {
+                    Ok(s) => s,
+                    Err(_) => break,
+                };
+                let mut buf = [0u8; 4096];
+                let _ = stream.read(&mut buf);
+                let _ = stream.write_all(
+                    b"HTTP/1.1 200 OK\r\ncontent-length: 5\r\nconnection: close\r\n\r\nhello",
+                );
+            }
+        });
+        let proxy = FaultProxy::spawn(&upstream_addr.to_string()).unwrap();
+        let authority = http::authority_of(&proxy.url()).unwrap();
+        let resp = http::roundtrip(&authority, &Request::new("GET", "/anything")).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"hello");
+        assert_eq!(proxy.fired(), 0);
+    }
+}

@@ -6,13 +6,13 @@
 //! objects to the remote's LFS store.
 
 use super::pointer::Pointer;
-use super::remote::LfsRemote;
 use super::store::LfsStore;
+use super::transport;
 use crate::gitcore::drivers::{DriverRegistry, FilterDriver, Hooks};
 use crate::gitcore::object::Oid;
+use crate::gitcore::remote::RemoteSpec;
 use crate::gitcore::repo::Repository;
 use anyhow::{Context, Result};
-use std::path::Path;
 use std::sync::Arc;
 
 /// The `filter=lfs` driver.
@@ -33,9 +33,11 @@ impl FilterDriver for LfsFilter {
         if !store.contains(&pointer.oid) {
             // Lazy download from the configured remote (paper: "the smudge
             // filter first retrieves the file from the LFS remote server").
-            if let Some(remote) = repo.config_get("remote")? {
-                let remote = LfsRemote::open(Path::new(&remote));
-                remote.download(&store, &[pointer.oid])?;
+            // The remote may be a directory or an http:// endpoint.
+            if let Some(spec) = repo.config_get("remote")? {
+                let remote =
+                    transport::open_transport(&RemoteSpec::parse(&spec)?, Some(repo.theta_dir()))?;
+                transport::download(remote.as_ref(), &store, &[pointer.oid])?;
             }
         }
         store.get(&pointer.oid)
@@ -46,7 +48,7 @@ impl FilterDriver for LfsFilter {
 pub struct LfsHooks;
 
 impl Hooks for LfsHooks {
-    fn pre_push(&self, repo: &Repository, remote: &Path, commits: &[Oid]) -> Result<()> {
+    fn pre_push(&self, repo: &Repository, remote: &RemoteSpec, commits: &[Oid]) -> Result<()> {
         let store = LfsStore::open(repo.theta_dir());
         let mut oids = Vec::new();
         for commit_oid in commits {
@@ -62,7 +64,8 @@ impl Hooks for LfsHooks {
         // Only sync oids we actually have locally (theta-managed pointers
         // inside metadata files are synced by theta's own hook).
         let have: Vec<Oid> = oids.into_iter().filter(|o| store.contains(o)).collect();
-        LfsRemote::open(remote).upload(&store, &have)?;
+        let remote = transport::open_transport(remote, Some(repo.theta_dir()))?;
+        transport::upload(&store, remote.as_ref(), &have)?;
         Ok(())
     }
 }

@@ -1,0 +1,333 @@
+//! HTTP client half of the remote transport (`git-theta serve` peer).
+//!
+//! Speaks a small LFS-batch-style protocol against
+//! [`LfsServer`](super::server::LfsServer):
+//!
+//! * `POST /objects/batch` — one have/want negotiation round trip.
+//! * `POST /packs` + `GET /packs/<id>` — the server assembles (and
+//!   caches) a pack for a want set; the client downloads it, resuming
+//!   an interrupted body with `Range: bytes=<k>-` from a partial file
+//!   persisted under the staging directory.
+//! * `HEAD`/`PUT /packs/<id>` — upload with `Content-Range` resume:
+//!   the server persists whatever body prefix arrives before a
+//!   connection dies, `HEAD` reports how much it holds, and the retry
+//!   sends only the tail.
+//! * `GET`/`PUT /objects/<oid>` — per-object fallback.
+//!
+//! Every pack is verified twice before anything is trusted: its id
+//! must equal its trailing sha256, and `unpack_into` re-hashes every
+//! object. A resumed splice that mixes a stale prefix with a rebuilt
+//! tail therefore cannot corrupt a store — it fails verification and
+//! the client falls back to one clean full download.
+
+use super::batch::{self, BatchResponse};
+use super::pack::{self, PackStats};
+use super::transport::{RemoteTransport, WireReport};
+use crate::gitcore::object::Oid;
+use crate::gitcore::remote::{parse_json, parse_oid_arr, want_body};
+use crate::util::http;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Client handle for an `http://` LFS remote.
+#[derive(Debug, Clone)]
+pub struct HttpRemote {
+    authority: String,
+    url: String,
+    /// Partial-download staging dir (resume persistence); `None`
+    /// disables persistence but not transfers.
+    staging: Option<PathBuf>,
+}
+
+impl HttpRemote {
+    /// Parse the URL; `staging` (usually a repository's `.theta` dir)
+    /// hosts partial pack downloads so an interrupted fetch resumes
+    /// even across process restarts. URLs with a path component are
+    /// rejected (the wire protocol is rooted at `/`).
+    pub fn open(url: &str, staging: Option<&Path>) -> Result<HttpRemote> {
+        http::require_rootless(url)?;
+        Ok(HttpRemote {
+            authority: http::authority_of(url)?,
+            url: url.trim_end_matches('/').to_string(),
+            staging: staging.map(|p| p.join("lfs/incoming")),
+        })
+    }
+
+    /// The endpoint URL this remote talks to.
+    pub fn url(&self) -> &str {
+        &self.url
+    }
+
+    /// Send a request and require a complete response body.
+    fn send(&self, req: http::Request) -> Result<http::Response> {
+        let resp = http::roundtrip(&self.authority, &req)?;
+        if !resp.complete {
+            bail!("connection to {} interrupted mid-response", self.url);
+        }
+        Ok(resp)
+    }
+
+    fn partial_path(&self, id: &str) -> Option<PathBuf> {
+        self.staging.as_ref().map(|d| d.join(id))
+    }
+
+    /// Persist a partial pack body for a later byte-range resume
+    /// (write-then-rename with a unique temp name, so a crash never
+    /// leaves a torn file and concurrent writers never share a path).
+    fn persist_partial(&self, id: &str, bytes: &[u8]) -> Result<()> {
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let path = match self.partial_path(id) {
+            Some(p) => p,
+            None => return Ok(()),
+        };
+        std::fs::create_dir_all(path.parent().unwrap())?;
+        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp{}-{seq}", std::process::id()));
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, &path).context("persisting partial pack")
+    }
+
+    fn drop_partial(&self, id: &str) {
+        if let Some(path) = self.partial_path(id) {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl RemoteTransport for HttpRemote {
+    fn describe(&self) -> String {
+        self.url.clone()
+    }
+
+    fn batch(&self, want: &[Oid]) -> Result<BatchResponse> {
+        batch::record(|s| s.negotiations += 1);
+        let req = http::Request::new("POST", "/objects/batch").body(want_body(want));
+        let resp = self.send(req)?;
+        if resp.status != 200 {
+            bail!("{}: POST /objects/batch -> {}", self.url, resp.status);
+        }
+        let json = parse_json(&resp)?;
+        let present = parse_oid_arr(&json, "present")?;
+        let missing = parse_oid_arr(&json, "missing")?;
+        let present_sizes: Vec<u64> = json
+            .get("sizes")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().map(|v| v.as_u64().unwrap_or(0)).collect())
+            .unwrap_or_default();
+        Ok(BatchResponse {
+            present,
+            present_sizes,
+            missing,
+        })
+    }
+
+    fn fetch_pack_blob(&self, oids: &[Oid], _threads: usize) -> Result<(Vec<u8>, WireReport)> {
+        // The server assembles (or reuses) the pack and reports its
+        // identity + size; identical want sets yield identical ids, so
+        // a retry after an interruption re-addresses the same pack.
+        let resp = self.send(http::Request::new("POST", "/packs").body(want_body(oids)))?;
+        if resp.status != 200 {
+            bail!(
+                "{}: POST /packs -> {}: {}",
+                self.url,
+                resp.status,
+                String::from_utf8_lossy(&resp.body)
+            );
+        }
+        let json = parse_json(&resp)?;
+        let id = json
+            .get("id")
+            .and_then(|v| v.as_str())
+            .context("/packs response missing id")?
+            .to_string();
+        let total = json
+            .get("size")
+            .and_then(|v| v.as_u64())
+            .context("/packs response missing size")?;
+
+        let mut prefix: Vec<u8> = Vec::new();
+        if let Some(path) = self.partial_path(&id) {
+            if let Ok(bytes) = std::fs::read(&path) {
+                if bytes.len() as u64 <= total {
+                    prefix = bytes;
+                } else {
+                    self.drop_partial(&id);
+                }
+            }
+        }
+        // A previous run may have persisted the complete pack just
+        // before dying; verify and use it without touching the wire. A
+        // full-length partial that fails verification is dropped here —
+        // resuming from it would just ask the server for an empty tail.
+        if prefix.len() as u64 == total {
+            if pack::pack_id(&prefix) == id {
+                self.drop_partial(&id);
+                let report = WireReport {
+                    wire_bytes: 0,
+                    resumed_bytes: total,
+                };
+                return Ok((prefix, report));
+            }
+            self.drop_partial(&id);
+            prefix.clear();
+        }
+
+        let mut attempt_full = false;
+        loop {
+            let offset = if attempt_full { 0 } else { prefix.len() as u64 };
+            let mut req = http::Request::new("GET", &format!("/packs/{id}"));
+            if offset > 0 {
+                req = req.header("range", &format!("bytes={offset}-"));
+            }
+            let resp = http::roundtrip(&self.authority, &req)?;
+            match resp.status {
+                200 | 206 => {}
+                404 => bail!("{} no longer has pack {id}", self.url),
+                s => bail!("{}: GET /packs/{id} -> {s}", self.url),
+            }
+            let mut blob = if offset > 0 { prefix.clone() } else { Vec::new() };
+            blob.extend_from_slice(&resp.body);
+            if !resp.complete {
+                // Mid-flight cut: keep every byte that made it across,
+                // so the retry re-requests only the missing tail.
+                self.persist_partial(&id, &blob)?;
+                bail!(
+                    "pack download from {} interrupted after {} of {total} bytes{}",
+                    self.url,
+                    blob.len(),
+                    if self.staging.is_some() {
+                        " (partial persisted; a retry resumes from it)"
+                    } else {
+                        ""
+                    }
+                );
+            }
+            if blob.len() as u64 == total && pack::pack_id(&blob) == id {
+                self.drop_partial(&id);
+                // The server-side pack cache is deliberately left in
+                // place: a concurrent clone of the same tip addresses
+                // the same content-hashed id, and deleting it here
+                // would 404 that transfer mid-flight. Stale outgoing
+                // packs are the server's to reap (ROADMAP).
+                let report = WireReport {
+                    wire_bytes: resp.body.len() as u64,
+                    resumed_bytes: offset,
+                };
+                return Ok((blob, report));
+            }
+            // Verification failed: a stale partial spliced onto a
+            // rebuilt pack, or in-flight corruption. Drop local state
+            // and retry exactly once from scratch.
+            self.drop_partial(&id);
+            if attempt_full || offset == 0 {
+                bail!("pack {id} from {} failed integrity verification", self.url);
+            }
+            attempt_full = true;
+        }
+    }
+
+    fn send_pack_blob(
+        &self,
+        pack_id: &str,
+        pack: &[u8],
+        _threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        let total = pack.len() as u64;
+        // How much of this pack did an earlier, interrupted attempt
+        // already deliver? The server persists partial bodies.
+        let head = self.send(http::Request::new("HEAD", &format!("/packs/{pack_id}")))?;
+        let mut offset = head
+            .get_header("x-received")
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(0);
+        if offset > total {
+            // A foreign partial under our id (should be impossible —
+            // ids are content hashes); clear it and start over.
+            let _ = http::roundtrip(
+                &self.authority,
+                &http::Request::new("DELETE", &format!("/packs/{pack_id}")),
+            );
+            offset = 0;
+        }
+        for _attempt in 0..3 {
+            let range = if offset == total {
+                format!("bytes */{total}")
+            } else {
+                format!("bytes {offset}-{}/{total}", total - 1)
+            };
+            let wire = total - offset;
+            let req = http::Request::new("PUT", &format!("/packs/{pack_id}"))
+                .header("content-range", &range)
+                .body(pack[offset as usize..].to_vec());
+            let resp = http::roundtrip(&self.authority, &req).with_context(|| {
+                format!(
+                    "pack upload to {} interrupted ({} keeps the partial; a retry resumes)",
+                    self.url, self.url
+                )
+            })?;
+            if !resp.complete {
+                bail!(
+                    "pack upload to {} interrupted mid-response; a retry resumes from the \
+                     server-side partial",
+                    self.url
+                );
+            }
+            match resp.status {
+                200 => {
+                    let json = parse_json(&resp)?;
+                    let stats = PackStats {
+                        objects: json.get("objects").and_then(|v| v.as_usize()).unwrap_or(0),
+                        raw_bytes: json.get("raw_bytes").and_then(|v| v.as_u64()).unwrap_or(0),
+                        packed_bytes: total,
+                    };
+                    let report = WireReport {
+                        wire_bytes: wire,
+                        resumed_bytes: offset,
+                    };
+                    return Ok((stats, report));
+                }
+                409 => {
+                    // Our offset raced another writer (or a stale HEAD);
+                    // the server tells us what it actually holds.
+                    offset = resp
+                        .get_header("x-received")
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .unwrap_or(0)
+                        .min(total);
+                }
+                422 => bail!(
+                    "{} rejected pack {pack_id}: {}",
+                    self.url,
+                    String::from_utf8_lossy(&resp.body)
+                ),
+                s => bail!("{}: PUT /packs/{pack_id} -> {s}", self.url),
+            }
+        }
+        bail!("pack upload to {} kept conflicting on its resume offset", self.url)
+    }
+
+    fn get_object(&self, oid: &Oid) -> Result<Vec<u8>> {
+        let resp = self.send(http::Request::new("GET", &format!("/objects/{}", oid.to_hex())))?;
+        if resp.status == 404 {
+            bail!("lfs object {} not found on {}", oid.short(), self.url);
+        }
+        if resp.status != 200 {
+            bail!("{}: GET /objects/{} -> {}", self.url, oid.short(), resp.status);
+        }
+        if Oid::of_bytes(&resp.body) != *oid {
+            bail!("lfs object {} from {} failed its content hash", oid.short(), self.url);
+        }
+        Ok(resp.body)
+    }
+
+    fn put_object(&self, bytes: &[u8]) -> Result<()> {
+        let oid = Oid::of_bytes(bytes);
+        let req =
+            http::Request::new("PUT", &format!("/objects/{}", oid.to_hex())).body(bytes.to_vec());
+        let resp = self.send(req)?;
+        if resp.status != 200 {
+            bail!("{}: PUT /objects/{} -> {}", self.url, oid.short(), resp.status);
+        }
+        Ok(())
+    }
+}

@@ -6,10 +6,14 @@
 //! for pointers, a pre-push hook that syncs referenced objects to an
 //! LFS remote, and smudge-time download from the remote.
 //!
-//! Transfer is batched: [`batch`] negotiates the full have/want set in
-//! one round trip and [`pack`] moves every missing object as a single
-//! integrity-checked packfile (see `docs/ARCHITECTURE.md` for the data
-//! flow).
+//! Transfer is batched and transport-abstracted: [`batch`] negotiates
+//! the full have/want set in one round trip and [`pack`] moves every
+//! missing object as a single integrity-checked packfile over a
+//! [`transport::RemoteTransport`] — a directory ([`remote`]) or an
+//! HTTP server ([`http`] client / [`server`]) with byte-range resume
+//! of interrupted transfers. [`faults`] is the failure-injection proxy
+//! that proves the resume semantics (see `docs/ARCHITECTURE.md`
+//! "Remotes" for the data flow and wire protocol).
 //!
 //! It is used two ways in this repo:
 //! 1. as Git-Theta's parameter-group storage backend (paper §3.3
@@ -18,15 +22,22 @@
 //!    opaque LFS blob (`baseline/`).
 
 pub mod batch;
+pub mod faults;
 pub mod filter;
+pub mod http;
 pub mod pack;
 pub mod pointer;
 pub mod remote;
+pub mod server;
 pub mod store;
+pub mod transport;
 
 pub use batch::{fetch_pack, push_pack, BatchResponse, Prefetcher, TransferStats, TransferSummary};
 pub use filter::{register_lfs, LfsFilter, LfsHooks};
-pub use pack::{build_pack, pack_index, unpack_into, PackStats};
+pub use http::HttpRemote;
+pub use pack::{build_pack, pack_id, pack_index, unpack_into, PackStats};
 pub use pointer::Pointer;
-pub use remote::{sync_to_remote, LfsRemote};
+pub use remote::{sync_to_remote, DirRemote, LfsRemote};
+pub use server::LfsServer;
 pub use store::LfsStore;
+pub use transport::{open_transport, RemoteTransport, WireReport};

@@ -192,6 +192,21 @@ fn record_at(pack: &[u8], off: usize, records_end: usize) -> Result<(Oid, u64, &
     Ok((oid, raw_len, &pack[start..start + comp_len]))
 }
 
+/// The pack's identity: the hex of its trailing sha256.
+///
+/// Stable across rebuilds of the same content (pack assembly is
+/// deterministic: sorted unique oids, fixed zstd level), which is what
+/// lets an interrupted transfer re-address the *same* pack on retry
+/// and resume from a byte offset. Anything too short to carry a
+/// trailer ids as `"invalid"`; a corrupt-but-long-enough blob simply
+/// won't match its re-computed checksum downstream.
+pub fn pack_id(pack: &[u8]) -> String {
+    if pack.len() < HEADER_LEN + TRAILER_LEN {
+        return String::from("invalid");
+    }
+    crate::util::hex::encode(&pack[pack.len() - 32..])
+}
+
 /// List the (oid, raw size) of every object in a pack without
 /// decompressing any payload. Verifies the trailer checksum.
 pub fn pack_index(pack: &[u8]) -> Result<Vec<(Oid, u64)>> {
@@ -311,6 +326,21 @@ mod tests {
         // Truncation anywhere is detected too.
         assert!(unpack_into(&dst, &pack[..pack.len() - 7], 1).is_err());
         assert!(unpack_into(&dst, &pack[..10], 1).is_err());
+    }
+
+    #[test]
+    fn pack_id_is_deterministic_and_content_bound() {
+        let td = TempDir::new("pack-id").unwrap();
+        let (store, oids) = store_with(&td, &[b"w1", b"w2"]);
+        let a = build_pack(&store, &oids, 1).unwrap();
+        let b = build_pack(&store, &oids, 2).unwrap();
+        assert_eq!(a, b, "pack assembly must be deterministic");
+        assert_eq!(pack_id(&a), pack_id(&b));
+        assert_eq!(pack_id(&a).len(), 64);
+        let (_, more) = store_with(&td, &[b"w3"]);
+        let c = build_pack(&store, &more, 1).unwrap();
+        assert_ne!(pack_id(&a), pack_id(&c));
+        assert_eq!(pack_id(&a[..10]), "invalid");
     }
 
     #[test]

@@ -1,34 +1,42 @@
-//! LFS remote transfer: batched have/want negotiation + packed movement.
+//! The directory-backed LFS remote (`<remote>/lfs/objects`).
 //!
-//! A remote is a directory acting as an LFS server (`<remote>/lfs/objects`).
 //! The negotiation API mirrors Git LFS's batch endpoint: the client
-//! announces every oid it wants to send or receive in one [`LfsRemote::batch`]
-//! call and only missing objects move, so re-pushing a model where most
-//! parameter groups are unchanged transfers almost nothing — the
-//! network-efficiency property the paper leans on.
+//! announces every oid it wants to send or receive in one
+//! [`DirRemote::batch`] call and only missing objects move, so
+//! re-pushing a model where most parameter groups are unchanged
+//! transfers almost nothing — the network-efficiency property the
+//! paper leans on.
 //!
-//! Movement itself goes through the [`pack`](super::pack) engine by
-//! default (one negotiation + one pack for N objects); set
-//! `THETA_TRANSFER=object` — or call the `*_per_object` variants — for
-//! the legacy engine that copies each object with its own request,
-//! kept as the benchmark baseline (`benches/ablation_transfer.rs`).
+//! `DirRemote` is one of two [`RemoteTransport`] implementations (the
+//! other is [`HttpRemote`](super::http::HttpRemote)); movement goes
+//! through the [`pack`](super::pack) engine by default (one
+//! negotiation + one pack for N objects). Set `THETA_TRANSFER=object`
+//! — or call the `*_per_object` variants — for the legacy engine that
+//! copies each object with its own request, kept as the benchmark
+//! baseline (`benches/ablation_transfer.rs`).
 
 use super::batch::{self, BatchResponse};
+use super::pack::{self, PackStats};
 use super::store::LfsStore;
+use super::transport::{self, RemoteTransport, WireReport};
 use crate::gitcore::object::Oid;
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::path::Path;
 
 /// Handle to a directory-backed LFS remote.
 #[derive(Debug, Clone)]
-pub struct LfsRemote {
+pub struct DirRemote {
     store: LfsStore,
 }
 
-impl LfsRemote {
+/// Compatibility alias: the seed named the (then only) remote kind
+/// `LfsRemote`. New code should name the transport it means.
+pub type LfsRemote = DirRemote;
+
+impl DirRemote {
     /// Open the LFS area of a directory remote (created lazily on write).
-    pub fn open(remote_root: &Path) -> LfsRemote {
-        LfsRemote {
+    pub fn open(remote_root: &Path) -> DirRemote {
+        DirRemote {
             store: LfsStore::at(&remote_root.join("lfs/objects")),
         }
     }
@@ -39,13 +47,15 @@ impl LfsRemote {
     }
 
     /// Have/want negotiation: partition `want` into the oids the remote
-    /// holds and the oids it lacks, in a single round trip.
+    /// holds and the oids it lacks, in a single round trip (and a
+    /// single directory scan — see [`LfsStore::contains_all`]).
     pub fn batch(&self, want: &[Oid]) -> BatchResponse {
         batch::record(|s| s.negotiations += 1);
         let mut resp = BatchResponse::default();
-        for oid in want {
-            if self.store.contains(oid) {
+        for (oid, present) in want.iter().zip(self.store.contains_all(want)) {
+            if present {
                 resp.present.push(*oid);
+                resp.present_sizes.push(self.store.size_of(oid).unwrap_or(0));
             } else {
                 resp.missing.push(*oid);
             }
@@ -64,84 +74,80 @@ impl LfsRemote {
     /// a single integrity-checked pack. Errors (like the per-object
     /// engine) if a wanted object is absent from the local store too.
     pub fn upload(&self, local: &LfsStore, oids: &[Oid]) -> Result<(usize, u64)> {
-        if batch::per_object_mode() {
-            return self.upload_per_object(local, oids);
-        }
-        let s = batch::push_pack(local, self, oids)?;
-        if s.unavailable > 0 {
-            bail!(
-                "cannot upload: {} wanted object(s) missing from the local store",
-                s.unavailable
-            );
-        }
-        Ok((s.objects, s.raw_bytes))
+        transport::upload(local, self, oids)
     }
 
     /// Legacy upload engine (the seed's behavior): one negotiation for
     /// the whole set, then one copy request per missing object.
     pub fn upload_per_object(&self, local: &LfsStore, oids: &[Oid]) -> Result<(usize, u64)> {
-        let mut sent = 0;
-        let mut bytes = 0;
-        for oid in self.missing(oids) {
-            let data = local.get(&oid)?;
-            bytes += data.len() as u64;
-            self.store.put(&data)?;
-            batch::record(|s| {
-                s.objects += 1;
-                s.object_transfers += 1;
-                s.raw_bytes += data.len() as u64;
-                s.packed_bytes += data.len() as u64;
-            });
-            sent += 1;
-        }
-        Ok((sent, bytes))
+        transport::upload_per_object(local, self, oids)
     }
 
     /// Download objects the local store is missing. Returns
-    /// (fetched, raw bytes). Packed by default, like [`LfsRemote::upload`];
-    /// errors if the remote lacks a requested object.
+    /// (fetched, raw bytes). Packed by default, like
+    /// [`DirRemote::upload`]; errors if the remote lacks a requested
+    /// object.
     pub fn download(&self, local: &LfsStore, oids: &[Oid]) -> Result<(usize, u64)> {
-        if batch::per_object_mode() {
-            return self.download_per_object(local, oids);
-        }
-        let s = batch::fetch_pack(self, local, oids)?;
-        if s.unavailable > 0 {
-            bail!("remote is missing {} requested object(s)", s.unavailable);
-        }
-        Ok((s.objects, s.raw_bytes))
+        transport::download(self, local, oids)
     }
 
     /// Legacy download engine (the seed's behavior): one fetch request
     /// per locally missing object.
     pub fn download_per_object(&self, local: &LfsStore, oids: &[Oid]) -> Result<(usize, u64)> {
-        let mut fetched = 0;
-        let mut bytes = 0;
-        for oid in oids {
-            if !local.contains(oid) {
-                let data = self.store.get(oid)?;
-                bytes += data.len() as u64;
-                local.put(&data)?;
-                batch::record(|s| {
-                    s.objects += 1;
-                    s.object_transfers += 1;
-                    s.raw_bytes += data.len() as u64;
-                    s.packed_bytes += data.len() as u64;
-                });
-                fetched += 1;
-            }
-        }
-        Ok((fetched, bytes))
+        transport::download_per_object(self, local, oids)
+    }
+}
+
+impl RemoteTransport for DirRemote {
+    fn describe(&self) -> String {
+        format!("dir:{}", self.store.root().display())
+    }
+
+    fn batch(&self, want: &[Oid]) -> Result<BatchResponse> {
+        Ok(DirRemote::batch(self, want))
+    }
+
+    fn fetch_pack_blob(&self, oids: &[Oid], threads: usize) -> Result<(Vec<u8>, WireReport)> {
+        let blob = pack::build_pack(&self.store, oids, threads)?;
+        let report = WireReport {
+            wire_bytes: blob.len() as u64,
+            resumed_bytes: 0,
+        };
+        Ok((blob, report))
+    }
+
+    fn send_pack_blob(
+        &self,
+        _pack_id: &str,
+        pack: &[u8],
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        let stats = pack::unpack_into(&self.store, pack, threads)?;
+        let report = WireReport {
+            wire_bytes: pack.len() as u64,
+            resumed_bytes: 0,
+        };
+        Ok((stats, report))
+    }
+
+    fn get_object(&self, oid: &Oid) -> Result<Vec<u8>> {
+        self.store.get(oid)
+    }
+
+    fn put_object(&self, bytes: &[u8]) -> Result<()> {
+        self.store.put(bytes).map(|_| ())
     }
 }
 
 /// Convenience: sync a set of oids from a repo-local store to a remote.
 pub fn sync_to_remote(local: &LfsStore, remote_root: &Path, oids: &[Oid]) -> Result<(usize, u64)> {
-    LfsRemote::open(remote_root).upload(local, oids)
+    DirRemote::open(remote_root).upload(local, oids)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lfs::store;
     use crate::util::tmp::TempDir;
 
     #[test]
@@ -192,8 +198,32 @@ mod tests {
         batch::reset_stats();
         let resp = remote.batch(&[held, absent]);
         assert_eq!(resp.present, vec![held]);
+        assert_eq!(resp.present_sizes, vec![4]);
         assert_eq!(resp.missing, vec![absent]);
         assert_eq!(batch::stats().negotiations, 1);
+    }
+
+    #[test]
+    fn negotiation_of_many_oids_is_one_directory_scan() {
+        let td_remote = TempDir::new("lfs-remote").unwrap();
+        let remote = LfsRemote::open(td_remote.path());
+        let mut want: Vec<Oid> = (0..32u8)
+            .map(|i| remote.store().put(&[i; 8]).unwrap().0)
+            .collect();
+        want.push(Oid::of_bytes(b"ghost-1"));
+        want.push(Oid::of_bytes(b"ghost-2"));
+
+        batch::reset_stats();
+        let scans_before = store::dir_scans();
+        let resp = remote.batch(&want);
+        assert_eq!(batch::stats().negotiations, 1);
+        assert_eq!(
+            store::dir_scans() - scans_before,
+            1,
+            "one negotiation must cost one store scan, not O(want)"
+        );
+        assert_eq!(resp.present.len(), 32);
+        assert_eq!(resp.missing.len(), 2);
     }
 
     #[test]

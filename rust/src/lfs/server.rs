@@ -1,0 +1,698 @@
+//! `git-theta serve`: a dependency-free HTTP remote server.
+//!
+//! Serves a remote root over `std::net::TcpListener` so pushes and
+//! fetches can cross a real network channel. The root uses the same
+//! layout as a directory remote — `objects/` (odb), `refs/heads/` +
+//! `HEAD`, `lfs/objects/` — so a directory remote can be promoted to
+//! an HTTP remote by pointing `git-theta serve` at it.
+//!
+//! Endpoints (client halves: [`HttpRemote`](super::http::HttpRemote),
+//! `gitcore::remote::HttpEndpoint`):
+//!
+//! ```text
+//! POST   /objects/batch   have/want negotiation  -> present/sizes/missing
+//! POST   /packs           build+cache a pack for a want set -> {id,size}
+//! GET    /packs/<id>      download (Range: bytes=k- resumes)
+//! HEAD   /packs/<id>      upload-resume probe -> X-Received: <bytes>
+//! PUT    /packs/<id>      upload (Content-Range); partial bodies persist
+//! DELETE /packs/<id>      drop cached/partial pack state
+//! GET/PUT /objects/<oid>  per-object fallback
+//! GET/HEAD/PUT /odb/<oid>, POST /odb/batch, GET/PUT /refs/<name>,
+//! GET /history/<tip>?exclude=..   commit/ref sync
+//! ```
+//!
+//! Durability and dedup: an interrupted `PUT /packs/<id>` leaves its
+//! received prefix in `lfs/partial/<id>` — the retry HEAD-probes and
+//! sends only the tail. A completed pack is admitted object-by-object
+//! through [`LfsStore::put`], which is content-addressed on sha256, so
+//! re-uploads (and objects shared between packs) deduplicate
+//! server-side; a pack that fails its checksum or id is discarded
+//! whole and poisons nothing.
+
+use super::pack;
+use super::store::LfsStore;
+use crate::gitcore::mergebase::commits_between;
+use crate::gitcore::object::{Object, Oid};
+use crate::gitcore::odb::Odb;
+use crate::gitcore::refs::Refs;
+use crate::util::http::{self, Request, Response};
+use crate::util::json::{Json, JsonObj};
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Worker threads used for server-side pack assembly/fan-in. Kept
+/// small: each connection already runs on its own thread.
+const PACK_THREADS: usize = 2;
+
+/// Unique suffix for write-then-rename temp files: two connections can
+/// build the same pack concurrently, and a shared temp path would let
+/// one writer rename the other's half-written file into place.
+static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+fn unique_tmp(path: &Path) -> PathBuf {
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    path.with_extension(format!("tmp{}-{seq}", std::process::id()))
+}
+
+struct ServerState {
+    root: PathBuf,
+    store: LfsStore,
+    odb: Odb,
+    refs: Refs,
+    /// Serializes ref compare-and-set.
+    refs_lock: Mutex<()>,
+    /// Serializes partial-pack append/finalize per server.
+    partial_lock: Mutex<()>,
+}
+
+/// A running LFS + commit/ref server. Shuts down on drop.
+pub struct LfsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LfsServer {
+    /// Serve `root` on an ephemeral localhost port.
+    pub fn spawn(root: &Path) -> Result<LfsServer> {
+        LfsServer::spawn_on(root, "127.0.0.1:0")
+    }
+
+    /// Serve `root` on an explicit `host:port` bind address.
+    pub fn spawn_on(root: &Path, bind: &str) -> Result<LfsServer> {
+        std::fs::create_dir_all(root.join("refs/heads"))?;
+        let odb = Odb::init(root)?;
+        if !root.join("HEAD").exists() {
+            Refs::init(root, "main")?;
+        }
+        let state = Arc::new(ServerState {
+            root: root.to_path_buf(),
+            store: LfsStore::at(&root.join("lfs/objects")),
+            odb,
+            refs: Refs::open(root),
+            refs_lock: Mutex::new(()),
+            partial_lock: Mutex::new(()),
+        });
+        let listener = TcpListener::bind(bind)
+            .with_context(|| format!("binding lfs server to {bind}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    let state = state.clone();
+                    std::thread::spawn(move || handle_connection(stream, &state));
+                }
+            }
+        });
+        Ok(LfsServer {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound socket address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The `http://` URL clients should use as their remote.
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+}
+
+impl Drop for LfsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.accept_thread.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, state: &ServerState) {
+    stream.set_read_timeout(Some(http::IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(http::IO_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    let (req, complete) = match http::read_request(&mut stream) {
+        Ok(v) => v,
+        Err(_) => return, // head never completed; nothing to answer
+    };
+    if let Some(resp) = route(state, &req, complete) {
+        let _ = http::write_response(&mut stream, &resp);
+    }
+}
+
+fn text(status: u16, body: impl Into<String>) -> Response {
+    Response::new(status).body(body.into().into_bytes())
+}
+
+fn json_response(obj: JsonObj) -> Response {
+    Response::new(200)
+        .header("content-type", "application/json")
+        .body(Json::Obj(obj).to_string_compact().into_bytes())
+}
+
+fn parse_want(req: &Request) -> Result<Vec<Oid>> {
+    let json = Json::parse(&String::from_utf8_lossy(&req.body)).context("parsing request json")?;
+    json.get("want")
+        .and_then(|v| v.as_arr())
+        .context("request missing 'want'")?
+        .iter()
+        .map(|v| Oid::from_hex(v.as_str().context("non-string oid")?))
+        .collect()
+}
+
+fn oid_arr(oids: &[Oid]) -> Json {
+    Json::Arr(oids.iter().map(|o| Json::from(o.to_hex())).collect())
+}
+
+fn is_hex_id(s: &str) -> bool {
+    s.len() == 64 && s.bytes().all(|b| b.is_ascii_hexdigit())
+}
+
+/// Dispatch one request. `None` means "no response" — the connection
+/// died mid-upload and the received prefix was persisted for resume.
+fn route(state: &ServerState, req: &Request, complete: bool) -> Option<Response> {
+    let path = req.path();
+    let method = req.method.as_str();
+
+    if method == "PUT" {
+        if let Some(id) = path.strip_prefix("/packs/") {
+            return pack_put(state, id, req, complete);
+        }
+    }
+    if !complete {
+        // Every other endpoint needs its full body; the peer is gone
+        // anyway, so drop the connection without a response.
+        return None;
+    }
+
+    let result = dispatch(state, method, path, req);
+    Some(result.unwrap_or_else(|e| text(500, format!("{e:#}"))))
+}
+
+fn dispatch(state: &ServerState, method: &str, path: &str, req: &Request) -> Result<Response> {
+    Ok(match (method, path) {
+        ("POST", "/objects/batch") => objects_batch(state, req)?,
+        ("POST", "/packs") => pack_create(state, req)?,
+        ("POST", "/odb/batch") => odb_batch(state, req)?,
+        _ => {
+            if let Some(id) = path.strip_prefix("/packs/") {
+                pack_misc(state, method, id, req)?
+            } else if let Some(hex) = path.strip_prefix("/objects/") {
+                object_endpoint(state, method, hex, req)?
+            } else if let Some(hex) = path.strip_prefix("/odb/") {
+                odb_endpoint(state, method, hex, req)?
+            } else if let Some(name) = path.strip_prefix("/refs/") {
+                refs_endpoint(state, method, name, req)?
+            } else if let Some(hex) = path.strip_prefix("/history/") {
+                history_endpoint(state, hex, req)?
+            } else {
+                text(404, format!("no route for {method} {path}"))
+            }
+        }
+    })
+}
+
+fn objects_batch(state: &ServerState, req: &Request) -> Result<Response> {
+    let want = match parse_want(req) {
+        Ok(w) => w,
+        Err(e) => return Ok(text(400, format!("{e:#}"))),
+    };
+    let mut present = Vec::new();
+    let mut sizes = Vec::new();
+    let mut missing = Vec::new();
+    for (oid, held) in want.iter().zip(state.store.contains_all(&want)) {
+        if held {
+            present.push(*oid);
+            sizes.push(state.store.size_of(oid).unwrap_or(0));
+        } else {
+            missing.push(*oid);
+        }
+    }
+    let mut obj = JsonObj::new();
+    obj.insert("present", oid_arr(&present));
+    obj.insert("sizes", Json::Arr(sizes.into_iter().map(Json::from).collect()));
+    obj.insert("missing", oid_arr(&missing));
+    Ok(json_response(obj))
+}
+
+fn outgoing_path(state: &ServerState, id: &str) -> PathBuf {
+    state.root.join("lfs/outgoing").join(id)
+}
+
+fn partial_path(state: &ServerState, id: &str) -> PathBuf {
+    state.root.join("lfs/partial").join(id)
+}
+
+/// Memo path for a want set: `lfs/outgoing/bywant/<sha256 of the
+/// sorted want hexes>`, holding `"<pack id> <size>"`. Pack contents
+/// are a pure function of the wanted oids (content-addressed), so a
+/// memo hit can never serve stale bytes — at worst the cached pack
+/// file was reaped, which falls back to a rebuild.
+fn want_memo_path(state: &ServerState, want: &[Oid]) -> PathBuf {
+    use sha2::{Digest, Sha256};
+    let mut sorted: Vec<Oid> = want.to_vec();
+    sorted.sort();
+    sorted.dedup();
+    let mut h = Sha256::new();
+    for oid in &sorted {
+        h.update(oid.0);
+    }
+    let digest: [u8; 32] = h.finalize().into();
+    state
+        .root
+        .join("lfs/outgoing/bywant")
+        .join(crate::util::hex::encode(&digest))
+}
+
+fn pack_create(state: &ServerState, req: &Request) -> Result<Response> {
+    let want = match parse_want(req) {
+        Ok(w) => w,
+        Err(e) => return Ok(text(400, format!("{e:#}"))),
+    };
+    // A retry of an interrupted download re-POSTs the same want set;
+    // answer from the memo instead of recompressing the whole pack.
+    let memo = want_memo_path(state, &want);
+    if let Ok(entry) = std::fs::read_to_string(&memo) {
+        if let Some((id, size)) = entry.trim().split_once(' ') {
+            if is_hex_id(id) && outgoing_path(state, id).exists() {
+                let mut obj = JsonObj::new();
+                obj.insert("id", id);
+                obj.insert("size", size.parse::<u64>().unwrap_or(0));
+                return Ok(json_response(obj));
+            }
+        }
+    }
+    let blob = match pack::build_pack(&state.store, &want, PACK_THREADS) {
+        Ok(b) => b,
+        Err(e) => return Ok(text(422, format!("cannot assemble pack: {e:#}"))),
+    };
+    let id = pack::pack_id(&blob);
+    let path = outgoing_path(state, &id);
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap())?;
+        let tmp = unique_tmp(&path);
+        std::fs::write(&tmp, &blob)?;
+        std::fs::rename(&tmp, &path)?;
+    }
+    std::fs::create_dir_all(memo.parent().unwrap())?;
+    let tmp = unique_tmp(&memo);
+    std::fs::write(&tmp, format!("{id} {}", blob.len()))?;
+    std::fs::rename(&tmp, &memo)?;
+    let mut obj = JsonObj::new();
+    obj.insert("id", id);
+    obj.insert("size", blob.len() as u64);
+    Ok(json_response(obj))
+}
+
+fn parse_range(header: Option<&str>) -> Option<u64> {
+    header?
+        .strip_prefix("bytes=")?
+        .strip_suffix('-')?
+        .parse::<u64>()
+        .ok()
+}
+
+/// GET (download, with Range resume), HEAD (upload-resume probe), and
+/// DELETE for `/packs/<id>`.
+fn pack_misc(state: &ServerState, method: &str, id: &str, req: &Request) -> Result<Response> {
+    if !is_hex_id(id) {
+        return Ok(text(400, "pack ids are 64 hex chars"));
+    }
+    match method {
+        "GET" => {
+            let bytes = match std::fs::read(outgoing_path(state, id)) {
+                Ok(b) => b,
+                Err(_) => return Ok(text(404, "unknown pack")),
+            };
+            let total = bytes.len() as u64;
+            match parse_range(req.get_header("range")) {
+                None => Ok(Response::new(200).body(bytes)),
+                Some(k) if k < total => Ok(Response::new(206)
+                    .header("content-range", &format!("bytes {k}-{}/{total}", total - 1))
+                    .body(bytes[k as usize..].to_vec())),
+                Some(_) => Ok(text(416, "range starts at or past the end of the pack")),
+            }
+        }
+        "HEAD" => {
+            let have = std::fs::metadata(partial_path(state, id))
+                .map(|m| m.len())
+                .unwrap_or(0);
+            Ok(Response::new(200).header("x-received", &have.to_string()))
+        }
+        "DELETE" => {
+            let _ = std::fs::remove_file(outgoing_path(state, id));
+            let _ = std::fs::remove_file(partial_path(state, id));
+            Ok(text(200, "gone"))
+        }
+        _ => Ok(text(404, "unsupported pack method")),
+    }
+}
+
+/// `Content-Range: bytes a-b/t` -> (a, t); `bytes */t` -> (None, t).
+fn parse_content_range(header: Option<&str>) -> Option<(Option<u64>, u64)> {
+    let rest = header?.strip_prefix("bytes ")?;
+    let (range, total) = rest.split_once('/')?;
+    let total = total.parse::<u64>().ok()?;
+    if range == "*" {
+        return Some((None, total));
+    }
+    let (start, _end) = range.split_once('-')?;
+    Some((Some(start.parse::<u64>().ok()?), total))
+}
+
+/// Resumable pack upload: append-at-offset with partial persistence.
+///
+/// This is the *server half* of push resume. The body may be
+/// incomplete (`complete == false`): whatever prefix arrived is
+/// appended and persisted, no response is written (the peer is gone),
+/// and the client's retry HEAD-probes `X-Received` to send only the
+/// tail. On completion the pack is id- and checksum-verified, then
+/// fanned into the store (sha256 dedup per object).
+fn pack_put(state: &ServerState, id: &str, req: &Request, complete: bool) -> Option<Response> {
+    if !is_hex_id(id) {
+        return Some(text(400, "pack ids are 64 hex chars"));
+    }
+    let (offset, total) = match parse_content_range(req.get_header("content-range")) {
+        Some(v) => v,
+        None => return Some(text(400, "PUT /packs needs a content-range header")),
+    };
+    let path = partial_path(state, id);
+    let _guard = state.partial_lock.lock().unwrap();
+    let have = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let offset = offset.unwrap_or(have);
+    if offset != have {
+        return Some(
+            text(409, "resume offset does not match the persisted partial")
+                .header("x-received", &have.to_string()),
+        );
+    }
+    if !req.body.is_empty() {
+        use std::io::Write;
+        let append = || -> Result<()> {
+            std::fs::create_dir_all(path.parent().unwrap())?;
+            let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+            f.write_all(&req.body)?;
+            Ok(())
+        };
+        if let Err(e) = append() {
+            return Some(text(500, format!("persisting pack body: {e:#}")));
+        }
+    }
+    let now = have + req.body.len() as u64;
+    if !complete {
+        // Connection died mid-body. The prefix is on disk; the retry
+        // resumes from it. Nobody is listening for a response.
+        return None;
+    }
+    if now < total {
+        return Some(text(202, "partial accepted").header("x-received", &now.to_string()));
+    }
+    // Complete: move the body out from under the lock, so the verify +
+    // store fan-in (the expensive part) doesn't serialize unrelated
+    // concurrent pack uploads on the one partial_lock.
+    let fin = unique_tmp(&path);
+    if let Err(e) = std::fs::rename(&path, &fin) {
+        return Some(text(500, format!("finalizing pack body: {e:#}")));
+    }
+    drop(_guard);
+    let finalize = || -> Result<Response> {
+        let blob = std::fs::read(&fin)?;
+        if now > total || pack::pack_id(&blob) != id {
+            let _ = std::fs::remove_file(&fin);
+            return Ok(text(422, "pack does not match its declared id"));
+        }
+        match pack::unpack_into(&state.store, &blob, PACK_THREADS) {
+            Ok(stats) => {
+                let _ = std::fs::remove_file(&fin);
+                let mut obj = JsonObj::new();
+                obj.insert("objects", stats.objects);
+                obj.insert("raw_bytes", stats.raw_bytes);
+                Ok(json_response(obj))
+            }
+            Err(e) => {
+                let _ = std::fs::remove_file(&fin);
+                Ok(text(422, format!("pack verification failed: {e:#}")))
+            }
+        }
+    };
+    Some(finalize().unwrap_or_else(|e| text(500, format!("{e:#}"))))
+}
+
+fn object_endpoint(
+    state: &ServerState,
+    method: &str,
+    hex: &str,
+    req: &Request,
+) -> Result<Response> {
+    let oid = match Oid::from_hex(hex) {
+        Ok(o) => o,
+        Err(_) => return Ok(text(400, "bad object id")),
+    };
+    match method {
+        "GET" => match state.store.get(&oid) {
+            Ok(bytes) => Ok(Response::new(200).body(bytes)),
+            Err(_) => Ok(text(404, "object not found")),
+        },
+        "PUT" => {
+            if Oid::of_bytes(&req.body) != oid {
+                return Ok(text(422, "object body does not hash to its id"));
+            }
+            state.store.put(&req.body)?;
+            Ok(text(200, "stored"))
+        }
+        _ => Ok(text(404, "unsupported object method")),
+    }
+}
+
+fn odb_batch(state: &ServerState, req: &Request) -> Result<Response> {
+    let want = match parse_want(req) {
+        Ok(w) => w,
+        Err(e) => return Ok(text(400, format!("{e:#}"))),
+    };
+    let mut present = Vec::new();
+    let mut missing = Vec::new();
+    for oid in want {
+        if state.odb.contains(&oid) {
+            present.push(oid);
+        } else {
+            missing.push(oid);
+        }
+    }
+    let mut obj = JsonObj::new();
+    obj.insert("present", oid_arr(&present));
+    obj.insert("missing", oid_arr(&missing));
+    Ok(json_response(obj))
+}
+
+fn odb_endpoint(state: &ServerState, method: &str, hex: &str, req: &Request) -> Result<Response> {
+    let oid = match Oid::from_hex(hex) {
+        Ok(o) => o,
+        Err(_) => return Ok(text(400, "bad object id")),
+    };
+    match method {
+        "GET" => match state.odb.read(&oid) {
+            Ok(obj) => Ok(Response::new(200).body(obj.encode())),
+            Err(_) => Ok(text(404, "object not found")),
+        },
+        "HEAD" => {
+            if state.odb.contains(&oid) {
+                Ok(Response::new(200))
+            } else {
+                Ok(text(404, ""))
+            }
+        }
+        "PUT" => {
+            if Oid::of_bytes(&req.body) != oid {
+                return Ok(text(422, "object body does not hash to its id"));
+            }
+            let obj = match Object::decode(&req.body) {
+                Ok(o) => o,
+                Err(e) => return Ok(text(422, format!("undecodable object: {e:#}"))),
+            };
+            state.odb.write(&obj)?;
+            Ok(text(200, "stored"))
+        }
+        _ => Ok(text(404, "unsupported odb method")),
+    }
+}
+
+fn refs_endpoint(state: &ServerState, method: &str, name: &str, req: &Request) -> Result<Response> {
+    match method {
+        "GET" => match state.refs.branch(name) {
+            Ok(Some(oid)) => Ok(text(200, oid.to_hex())),
+            Ok(None) => Ok(text(404, "no such branch")),
+            Err(e) => Ok(text(400, format!("{e:#}"))),
+        },
+        "PUT" => {
+            let body = String::from_utf8_lossy(&req.body).to_string();
+            let (old, new) = match body.trim().split_once(' ') {
+                Some(v) => v,
+                None => return Ok(text(400, "ref update body is '<old|none> <new>'")),
+            };
+            let expected = if old == "none" {
+                None
+            } else {
+                match Oid::from_hex(old) {
+                    Ok(o) => Some(o),
+                    Err(_) => return Ok(text(400, "bad old oid")),
+                }
+            };
+            let new = match Oid::from_hex(new) {
+                Ok(o) => o,
+                Err(_) => return Ok(text(400, "bad new oid")),
+            };
+            let _guard = state.refs_lock.lock().unwrap();
+            let current = match state.refs.branch(name) {
+                Ok(c) => c,
+                Err(e) => return Ok(text(400, format!("{e:#}"))),
+            };
+            if current != expected {
+                let held = match current {
+                    Some(oid) => oid.to_hex(),
+                    None => "none".to_string(),
+                };
+                return Ok(text(409, held));
+            }
+            state.refs.set_branch(name, &new)?;
+            Ok(text(200, "updated"))
+        }
+        _ => Ok(text(404, "unsupported refs method")),
+    }
+}
+
+fn history_endpoint(state: &ServerState, hex: &str, req: &Request) -> Result<Response> {
+    let tip = match Oid::from_hex(hex) {
+        Ok(o) => o,
+        Err(_) => return Ok(text(400, "bad tip oid")),
+    };
+    let mut exclude = Vec::new();
+    if let Some(query) = req.query() {
+        for pair in query.split('&') {
+            if let Some(csv) = pair.strip_prefix("exclude=") {
+                for part in csv.split(',').filter(|p| !p.is_empty()) {
+                    match Oid::from_hex(part) {
+                        Ok(o) => exclude.push(o),
+                        Err(_) => return Ok(text(400, "bad exclude oid")),
+                    }
+                }
+            }
+        }
+    }
+    match commits_between(&state.odb, tip, &exclude) {
+        Ok(commits) => {
+            let mut obj = JsonObj::new();
+            obj.insert("commits", oid_arr(&commits));
+            Ok(json_response(obj))
+        }
+        Err(e) => Ok(text(404, format!("history walk failed: {e:#}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfs::http::HttpRemote;
+    use crate::lfs::transport::RemoteTransport;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn negotiation_pack_and_object_roundtrip() {
+        let td_root = TempDir::new("srv-root").unwrap();
+        let td_staging = TempDir::new("srv-staging").unwrap();
+        let server = LfsServer::spawn(td_root.path()).unwrap();
+        let remote = HttpRemote::open(&server.url(), Some(td_staging.path())).unwrap();
+
+        // Seed the server store directly (what an earlier push did).
+        let server_store = LfsStore::at(&td_root.path().join("lfs/objects"));
+        let a = server_store.put(b"held-object").unwrap().0;
+        let ghost = Oid::of_bytes(b"nobody");
+
+        let resp = RemoteTransport::batch(&remote, &[a, ghost]).unwrap();
+        assert_eq!(resp.present, vec![a]);
+        assert_eq!(resp.present_sizes, vec![11]);
+        assert_eq!(resp.missing, vec![ghost]);
+
+        // Pack download.
+        let (blob, wire) = remote.fetch_pack_blob(&[a], 1).unwrap();
+        assert_eq!(wire.resumed_bytes, 0);
+        assert_eq!(wire.wire_bytes, blob.len() as u64);
+        let td_local = TempDir::new("srv-local").unwrap();
+        let local = LfsStore::open(td_local.path());
+        pack::unpack_into(&local, &blob, 1).unwrap();
+        assert_eq!(local.get(&a).unwrap(), b"held-object");
+
+        // Per-object fallback + server-side dedup.
+        assert_eq!(remote.get_object(&a).unwrap(), b"held-object");
+        remote.put_object(b"fresh-object").unwrap();
+        remote.put_object(b"fresh-object").unwrap();
+        let fresh = Oid::of_bytes(b"fresh-object");
+        assert_eq!(server_store.get(&fresh).unwrap(), b"fresh-object");
+
+        // Pack upload (fresh content), then re-upload dedups.
+        let b = local.put(b"uploaded-via-pack").unwrap().0;
+        let up = pack::build_pack(&local, &[b], 1).unwrap();
+        let id = pack::pack_id(&up);
+        let (stats, wire) = remote.send_pack_blob(&id, &up, 1).unwrap();
+        assert_eq!(stats.objects, 1);
+        assert_eq!(wire.wire_bytes, up.len() as u64);
+        assert_eq!(server_store.get(&b).unwrap(), b"uploaded-via-pack");
+    }
+
+    #[test]
+    fn unknown_routes_and_bad_ids_are_clean_errors() {
+        let td_root = TempDir::new("srv-root").unwrap();
+        let server = LfsServer::spawn(td_root.path()).unwrap();
+        let authority = server.addr().to_string();
+
+        let resp = http::roundtrip(&authority, &http::Request::new("GET", "/nope")).unwrap();
+        assert_eq!(resp.status, 404);
+        let resp = http::roundtrip(&authority, &http::Request::new("GET", "/packs/zzz")).unwrap();
+        assert_eq!(resp.status, 400);
+        let resp = http::roundtrip(&authority, &http::Request::new("GET", "/objects/abc")).unwrap();
+        assert_eq!(resp.status, 400);
+        // A corrupt per-object upload is rejected, not stored.
+        let bogus = "0".repeat(64);
+        let req = http::Request::new("PUT", &format!("/objects/{bogus}")).body(b"x".to_vec());
+        assert_eq!(http::roundtrip(&authority, &req).unwrap().status, 422);
+    }
+
+    #[test]
+    fn refs_cas_over_http() {
+        let td_root = TempDir::new("srv-refs").unwrap();
+        let server = LfsServer::spawn(td_root.path()).unwrap();
+        let authority = server.addr().to_string();
+        let a = Oid::of_bytes(b"ca");
+        let b = Oid::of_bytes(b"cb");
+
+        let get = |name: &str| {
+            http::roundtrip(&authority, &http::Request::new("GET", &format!("/refs/{name}")))
+                .unwrap()
+        };
+        assert_eq!(get("main").status, 404);
+
+        let put = |body: String| {
+            let req = http::Request::new("PUT", "/refs/main").body(body.into_bytes());
+            http::roundtrip(&authority, &req).unwrap()
+        };
+        assert_eq!(put(format!("none {}", a.to_hex())).status, 200);
+        assert_eq!(String::from_utf8_lossy(&get("main").body), a.to_hex());
+        // Stale expectation loses the race.
+        assert_eq!(put(format!("none {}", b.to_hex())).status, 409);
+        assert_eq!(put(format!("{} {}", a.to_hex(), b.to_hex())).status, 200);
+        assert_eq!(String::from_utf8_lossy(&get("main").body), b.to_hex());
+    }
+}

@@ -16,6 +16,22 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// for its own writer.
 static PUT_SEQ: AtomicU64 = AtomicU64::new(0);
 
+thread_local! {
+    /// Count of full directory scans performed by
+    /// [`LfsStore::contains_all`] on the calling thread. Thread-local —
+    /// like `batch::TransferStats` — so concurrently running tests
+    /// cannot perturb each other's deltas.
+    static DIR_SCANS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Snapshot the calling thread's directory-scan counter
+/// (instrumentation for tests and benchmarks; a whole have/want
+/// negotiation must cost one scan, not O(want) probes — see
+/// [`LfsStore::contains_all`]).
+pub fn dir_scans() -> u64 {
+    DIR_SCANS.with(|c| c.get())
+}
+
 /// A content-addressed object store on the local filesystem.
 #[derive(Debug, Clone)]
 pub struct LfsStore {
@@ -50,6 +66,25 @@ impl LfsStore {
     /// Whether an object is present locally.
     pub fn contains(&self, oid: &Oid) -> bool {
         self.path_for(oid).exists()
+    }
+
+    /// Bulk presence check: one answer per oid, aligned with `oids`.
+    ///
+    /// A have/want negotiation used to probe `contains` once per wanted
+    /// oid — O(want) filesystem stats. For large want-sets this walks
+    /// the store's shard directories **once**, builds the full resident
+    /// set, and answers every probe from memory; small want-sets keep
+    /// the direct-stat path, which is cheaper than scanning a store
+    /// that may hold the history of many models. IO errors read as
+    /// "absent", matching [`LfsStore::contains`].
+    pub fn contains_all(&self, oids: &[Oid]) -> Vec<bool> {
+        if oids.len() <= 16 {
+            return oids.iter().map(|o| self.contains(o)).collect();
+        }
+        DIR_SCANS.with(|c| c.set(c.get() + 1));
+        let resident: std::collections::HashSet<Oid> =
+            self.list().unwrap_or_default().into_iter().collect();
+        oids.iter().map(|o| resident.contains(o)).collect()
     }
 
     /// Size in bytes of a stored object, without reading it
@@ -243,6 +278,35 @@ mod tests {
         // Deleting again (or a ghost) is a clean no-op.
         assert!(!store.delete(&b).unwrap());
         assert!(!store.delete(&Oid::of_bytes(b"ghost")).unwrap());
+    }
+
+    #[test]
+    fn contains_all_is_one_scan_not_one_probe_per_oid() {
+        let td = TempDir::new("lfs").unwrap();
+        let store = LfsStore::open(td.path());
+        let held: Vec<Oid> = (0..40u8).map(|i| store.put(&[i, i, i]).unwrap().0).collect();
+        let mut want = held.clone();
+        for i in 0..24u8 {
+            want.push(Oid::of_bytes(&[b'g', i]));
+        }
+
+        let scans_before = dir_scans();
+        let answers = store.contains_all(&want);
+        assert_eq!(dir_scans() - scans_before, 1, "one negotiation must cost one scan");
+        assert_eq!(answers.len(), want.len());
+        for (i, present) in answers.iter().enumerate() {
+            assert_eq!(*present, i < held.len(), "oid {i}");
+        }
+
+        // Tiny want-sets stat directly — no scan at all.
+        let scans_before = dir_scans();
+        assert_eq!(store.contains_all(&want[..2]), vec![true, true]);
+        assert_eq!(dir_scans(), scans_before);
+
+        // An empty store answers all-absent (still a single scan).
+        let td2 = TempDir::new("lfs-empty").unwrap();
+        let empty = LfsStore::open(td2.path());
+        assert_eq!(empty.contains_all(&want[..5]), vec![false; 5]);
     }
 
     #[test]

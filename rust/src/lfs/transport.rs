@@ -1,0 +1,192 @@
+//! The remote transport abstraction: how packs cross a channel.
+//!
+//! PRs 1–3 built the pack engine against one "channel": a directory on
+//! the same filesystem. [`RemoteTransport`] abstracts the channel into
+//! the three operations the `Prefetcher` actually needs — one
+//! have/want negotiation, pack receive, pack send — plus a per-object
+//! fallback, so the orchestration in [`batch`](super::batch) is
+//! transport-agnostic. Two implementations ship:
+//!
+//! * [`DirRemote`](super::remote::DirRemote) — the original directory
+//!   remote (pack "transfer" is a local build/unpack pair).
+//! * [`HttpRemote`](super::http::HttpRemote) — a client for the
+//!   `git-theta serve` wire protocol with **byte-range resume**: an
+//!   interrupted pack transfer persists its partial bytes (client side
+//!   on fetch, server side on push) and a retry moves only the missing
+//!   tail.
+//!
+//! [`WireReport`] is how a transport tells the orchestrator what
+//! actually crossed the wire, so resume savings are measurable
+//! (`TransferSummary::wire_bytes` / `resumed_bytes`).
+
+use super::batch::{self, BatchResponse};
+use super::pack::PackStats;
+use super::store::LfsStore;
+use crate::gitcore::object::Oid;
+use crate::gitcore::remote::RemoteSpec;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// What one pack transfer moved over the wire.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireReport {
+    /// Pack bytes that crossed the wire in this call.
+    pub wire_bytes: u64,
+    /// Pack bytes *not* re-sent because a persisted partial transfer
+    /// was resumed with a byte range. Always 0 for local transports.
+    pub resumed_bytes: u64,
+}
+
+/// A channel that can negotiate and move packs with a remote store.
+///
+/// Implementations must be cheap to call concurrently: the
+/// `Prefetcher` fans sharded packs across worker threads, each calling
+/// [`RemoteTransport::fetch_pack_blob`] / `send_pack_blob` with its
+/// own shard. Negotiation counters are recorded by the transport (one
+/// per [`RemoteTransport::batch`] call); pack/object/byte counters are
+/// recorded by the orchestrator.
+pub trait RemoteTransport: Send + Sync {
+    /// Human-readable endpoint description for error messages.
+    fn describe(&self) -> String;
+
+    /// One have/want negotiation round trip: partition `want` into
+    /// present (with sizes, for shard planning) and missing.
+    fn batch(&self, want: &[Oid]) -> Result<BatchResponse>;
+
+    /// Obtain a pack holding `oids`, assembled by the remote side.
+    ///
+    /// Resumable: if a previous call was interrupted, implementations
+    /// may re-request only the missing tail and splice it onto the
+    /// persisted prefix. The returned blob is always the complete,
+    /// checksum-verified pack.
+    fn fetch_pack_blob(&self, oids: &[Oid], threads: usize) -> Result<(Vec<u8>, WireReport)>;
+
+    /// Deliver a pack blob (id = [`pack_id`](super::pack::pack_id)) to
+    /// the remote side, which verifies and fans it into its store.
+    ///
+    /// Resumable: if the remote persisted a partial body from an
+    /// interrupted attempt, only the tail is re-sent.
+    fn send_pack_blob(
+        &self,
+        pack_id: &str,
+        pack: &[u8],
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)>;
+
+    /// Per-object fallback: read one object (hash-verified).
+    fn get_object(&self, oid: &Oid) -> Result<Vec<u8>>;
+
+    /// Per-object fallback: store one object (content-addressed, so
+    /// re-sending existing content deduplicates remotely).
+    fn put_object(&self, bytes: &[u8]) -> Result<()>;
+}
+
+/// Open the transport a [`RemoteSpec`] addresses.
+///
+/// `staging` is a repository `.theta` dir (or any directory) where an
+/// HTTP transport persists partial pack downloads so an interrupted
+/// fetch resumes across process restarts; `None` disables persistence
+/// (transfers still work, they just restart from zero).
+pub fn open_transport(
+    spec: &RemoteSpec,
+    staging: Option<&Path>,
+) -> Result<Box<dyn RemoteTransport>> {
+    Ok(match spec {
+        RemoteSpec::Dir(path) => Box::new(super::remote::DirRemote::open(path)),
+        RemoteSpec::Http(url) => Box::new(super::http::HttpRemote::open(url, staging)?),
+    })
+}
+
+/// Upload objects the remote is missing. Returns (sent, raw bytes).
+///
+/// Packed by default: one negotiation, then every missing object in
+/// integrity-checked packs. Errors if a wanted object is absent from
+/// the local store too. `THETA_TRANSFER=object` (or the CLI override)
+/// selects the legacy per-object engine.
+pub fn upload(
+    local: &LfsStore,
+    remote: &dyn RemoteTransport,
+    oids: &[Oid],
+) -> Result<(usize, u64)> {
+    if batch::per_object_mode() {
+        return upload_per_object(local, remote, oids);
+    }
+    let s = batch::push_pack(local, remote, oids)?;
+    if s.unavailable > 0 {
+        bail!(
+            "cannot upload: {} wanted object(s) missing from the local store",
+            s.unavailable
+        );
+    }
+    Ok((s.objects, s.raw_bytes))
+}
+
+/// Download objects the local store is missing. Returns
+/// (fetched, raw bytes). Packed by default, like [`upload`]; errors if
+/// the remote lacks a requested object.
+pub fn download(
+    remote: &dyn RemoteTransport,
+    local: &LfsStore,
+    oids: &[Oid],
+) -> Result<(usize, u64)> {
+    if batch::per_object_mode() {
+        return download_per_object(remote, local, oids);
+    }
+    let s = batch::fetch_pack(remote, local, oids)?;
+    if s.unavailable > 0 {
+        bail!("remote is missing {} requested object(s)", s.unavailable);
+    }
+    Ok((s.objects, s.raw_bytes))
+}
+
+/// Legacy upload engine (the seed's behavior): one negotiation for the
+/// whole set, then one store request per missing object.
+pub fn upload_per_object(
+    local: &LfsStore,
+    remote: &dyn RemoteTransport,
+    oids: &[Oid],
+) -> Result<(usize, u64)> {
+    let mut sent = 0;
+    let mut bytes = 0;
+    for oid in remote.batch(oids)?.missing {
+        let data = local.get(&oid)?;
+        bytes += data.len() as u64;
+        remote.put_object(&data)?;
+        batch::record(|s| {
+            s.objects += 1;
+            s.object_transfers += 1;
+            s.raw_bytes += data.len() as u64;
+            s.packed_bytes += data.len() as u64;
+            s.wire_bytes += data.len() as u64;
+        });
+        sent += 1;
+    }
+    Ok((sent, bytes))
+}
+
+/// Legacy download engine (the seed's behavior): one fetch request per
+/// locally missing object.
+pub fn download_per_object(
+    remote: &dyn RemoteTransport,
+    local: &LfsStore,
+    oids: &[Oid],
+) -> Result<(usize, u64)> {
+    let mut fetched = 0;
+    let mut bytes = 0;
+    for oid in oids {
+        if !local.contains(oid) {
+            let data = remote.get_object(oid)?;
+            bytes += data.len() as u64;
+            local.put(&data)?;
+            batch::record(|s| {
+                s.objects += 1;
+                s.object_transfers += 1;
+                s.raw_bytes += data.len() as u64;
+                s.packed_bytes += data.len() as u64;
+                s.wire_bytes += data.len() as u64;
+            });
+            fetched += 1;
+        }
+    }
+    Ok((fetched, bytes))
+}

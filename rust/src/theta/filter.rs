@@ -18,8 +18,9 @@
 use crate::checkpoint::{detect_format, format_by_name, Checkpoint};
 use crate::gitcore::drivers::FilterDriver;
 use crate::gitcore::object::Oid;
+use crate::gitcore::remote::RemoteSpec;
 use crate::gitcore::repo::Repository;
-use crate::lfs::{batch, LfsRemote, LfsStore};
+use crate::lfs::{batch, transport, LfsStore, RemoteTransport};
 use crate::tensor::{allclose, Tensor};
 use crate::theta::checkout::{self, ReconstructionCache, DEFAULT_SNAPSHOT_DEPTH};
 use crate::theta::lsh::{LshSignature, LshVerdict};
@@ -28,22 +29,33 @@ use crate::theta::serialize::serialize_combined;
 use crate::theta::updates::{infer_best, update_type, UpdatePayload};
 use crate::util::par;
 use anyhow::{bail, Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 /// The `filter=theta` driver.
 pub struct ThetaFilter;
 
-/// LFS access bundle: local store + optional lazy remote.
+/// LFS access bundle: local store + optional lazy remote transport.
 pub struct ObjectAccess {
+    /// The repository-local content-addressed store.
     pub store: LfsStore,
-    pub remote: Option<LfsRemote>,
+    /// Lazy remote transport (directory or http); `None` means fully
+    /// local — a miss is an error instead of a download.
+    pub remote: Option<Box<dyn RemoteTransport>>,
 }
 
 impl ObjectAccess {
+    /// Build the access bundle for a repository: its local store plus
+    /// a transport for the configured `remote` (if any), with partial
+    /// pack downloads staged under the repo's `.theta` dir so
+    /// interrupted fetches resume.
     pub fn for_repo(repo: &Repository) -> Result<ObjectAccess> {
-        let remote = repo
-            .config_get("remote")?
-            .map(|r| LfsRemote::open(&PathBuf::from(r)));
+        let remote = match repo.config_get("remote")? {
+            Some(spec) => Some(transport::open_transport(
+                &RemoteSpec::parse(&spec)?,
+                Some(repo.theta_dir()),
+            )?),
+            None => None,
+        };
         Ok(ObjectAccess {
             store: LfsStore::open(repo.theta_dir()),
             remote,
@@ -60,11 +72,11 @@ impl ObjectAccess {
         if !self.store.contains(&obj.oid) {
             match &self.remote {
                 Some(remote) => {
-                    remote.download(&self.store, &[obj.oid])?;
+                    transport::download(remote.as_ref(), &self.store, &[obj.oid])?;
                 }
                 None => bail!(
                     "lfs object {} not found locally and no remote is configured \
-                     (set one with `git-theta config remote <dir>`)",
+                     (set one with `git-theta config remote <dir|http://host:port>`)",
                     obj.oid.short()
                 ),
             }
@@ -80,7 +92,7 @@ impl ObjectAccess {
     /// [`ObjectAccess::fetch`] to report when actually needed.
     pub fn prefetch(&self, oids: &[Oid]) -> Result<()> {
         if let Some(remote) = &self.remote {
-            batch::fetch_pack(remote, &self.store, oids)?;
+            batch::fetch_pack(remote.as_ref(), &self.store, oids)?;
         }
         Ok(())
     }

@@ -9,12 +9,13 @@
 
 use crate::gitcore::drivers::Hooks;
 use crate::gitcore::object::{Oid, Tree};
+use crate::gitcore::remote::RemoteSpec;
 use crate::gitcore::repo::Repository;
-use crate::lfs::{LfsRemote, LfsStore, Pointer};
+use crate::lfs::{transport, LfsStore, Pointer};
 use crate::theta::metadata::ModelMetadata;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 pub struct ThetaHooks;
 
@@ -117,7 +118,7 @@ impl Hooks for ThetaHooks {
         .context("writing .theta/commits entry")
     }
 
-    fn pre_push(&self, repo: &Repository, remote: &Path, commits: &[Oid]) -> Result<()> {
+    fn pre_push(&self, repo: &Repository, remote: &RemoteSpec, commits: &[Oid]) -> Result<()> {
         let store = LfsStore::open(repo.theta_dir());
         let mut oids = Vec::new();
         for commit in commits {
@@ -128,7 +129,8 @@ impl Hooks for ThetaHooks {
         // Only objects we hold locally; metadata-referenced objects from
         // shallow histories we never materialized can't be pushed.
         let have: Vec<Oid> = oids.into_iter().filter(|o| store.contains(o)).collect();
-        LfsRemote::open(remote).upload(&store, &have)?;
+        let remote = transport::open_transport(remote, Some(repo.theta_dir()))?;
+        transport::upload(&store, remote.as_ref(), &have)?;
         Ok(())
     }
 }

@@ -1,0 +1,450 @@
+//! Minimal dependency-free HTTP/1.1 codec over `std::net`.
+//!
+//! The offline vendor set has no hyper/reqwest, so the HTTP remote
+//! backend (`lfs/http.rs`, `lfs/server.rs`) and the fault-injection
+//! proxy (`lfs/faults.rs`) share this hand-rolled request/response
+//! codec. It deliberately supports only the slice the wire protocol
+//! needs: one request per connection (`Connection: close`),
+//! `Content-Length`-framed bodies, and byte-exact visibility into
+//! *partial* bodies — a transfer cut mid-flight must surface the bytes
+//! that did arrive (for resume persistence), not an opaque error.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Largest accepted head (request/status line + headers).
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+
+/// Largest accepted `Content-Length` (matches the pack format's
+/// per-object ceiling; a pack can legitimately be large).
+const MAX_BODY_BYTES: u64 = 1 << 33;
+
+/// Read/write timeout applied to every transport socket.
+pub const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// An HTTP request (client side builds one, server side parses one).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Request method (`GET`, `PUT`, ...), uppercase.
+    pub method: String,
+    /// Request target: path plus optional `?query`.
+    pub target: String,
+    /// Additional headers, lowercase names. `content-length` and
+    /// `connection` are managed by the codec.
+    pub headers: Vec<(String, String)>,
+    /// Request body.
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Build a body-less request.
+    pub fn new(method: &str, target: &str) -> Request {
+        Request {
+            method: method.to_string(),
+            target: target.to_string(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    /// Attach a header (builder style).
+    pub fn header(mut self, name: &str, value: &str) -> Request {
+        self.headers.push((name.to_ascii_lowercase(), value.to_string()));
+        self
+    }
+
+    /// Attach a body (builder style).
+    pub fn body(mut self, body: Vec<u8>) -> Request {
+        self.body = body;
+        self
+    }
+
+    /// Case-insensitive header lookup.
+    pub fn get_header(&self, name: &str) -> Option<&str> {
+        header_value(&self.headers, name)
+    }
+
+    /// The target's path component (before any `?`).
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// The target's query string (after `?`), if any.
+    pub fn query(&self) -> Option<&str> {
+        self.target.split_once('?').map(|(_, q)| q)
+    }
+}
+
+/// An HTTP response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Status code.
+    pub status: u16,
+    /// Headers, lowercase names (`content-length` is codec-managed).
+    pub headers: Vec<(String, String)>,
+    /// Response body — possibly truncated; check [`Response::complete`].
+    pub body: Vec<u8>,
+    /// Whether the body arrived complete per its `Content-Length`.
+    /// `false` means the connection died mid-body; `body` holds the
+    /// prefix that made it through (resume fodder).
+    pub complete: bool,
+}
+
+impl Response {
+    /// Build an empty response with a status code.
+    pub fn new(status: u16) -> Response {
+        Response {
+            status,
+            headers: Vec::new(),
+            body: Vec::new(),
+            complete: true,
+        }
+    }
+
+    /// Attach a header (builder style).
+    pub fn header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_ascii_lowercase(), value.to_string()));
+        self
+    }
+
+    /// Attach a body (builder style).
+    pub fn body(mut self, body: Vec<u8>) -> Response {
+        self.body = body;
+        self
+    }
+
+    /// Case-insensitive header lookup.
+    pub fn get_header(&self, name: &str) -> Option<&str> {
+        header_value(&self.headers, name)
+    }
+}
+
+/// Case-insensitive header lookup over a parsed header list.
+pub fn header_value<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case(name))
+        .map(|(_, v)| v.as_str())
+}
+
+/// Extract `host:port` from an `http://` URL (port defaults to 80).
+pub fn authority_of(url: &str) -> Result<String> {
+    let rest = url
+        .strip_prefix("http://")
+        .with_context(|| format!("'{url}' is not an http:// URL"))?;
+    let authority = rest.split('/').next().unwrap_or(rest);
+    if authority.is_empty() {
+        bail!("'{url}' has no host");
+    }
+    if authority.contains(':') {
+        Ok(authority.to_string())
+    } else {
+        Ok(format!("{authority}:80"))
+    }
+}
+
+/// Reject `http://` URLs carrying a path component. The git-theta wire
+/// protocol is rooted at `/`; a path would be silently dropped and the
+/// request would land on the wrong (root) remote.
+pub fn require_rootless(url: &str) -> Result<()> {
+    let rest = url.strip_prefix("http://").unwrap_or(url);
+    if let Some((_, path)) = rest.split_once('/') {
+        if !path.trim_end_matches('/').is_empty() {
+            bail!(
+                "'{url}' has a path component; git-theta http remotes are served at the \
+                 server root (use http://host:port)"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read a stream until the blank line ending the head. Returns the head
+/// text and any body bytes that arrived in the same reads.
+fn read_head(stream: &mut TcpStream) -> Result<(String, Vec<u8>)> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(pos) = find_head_end(&buf) {
+            let head = String::from_utf8(buf[..pos].to_vec()).context("non-utf8 http head")?;
+            return Ok((head, buf[pos + 4..].to_vec()));
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            bail!("http head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let n = stream.read(&mut chunk).context("reading http head")?;
+        if n == 0 {
+            bail!("connection closed before the http head completed");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// Read up to `len` body bytes, starting from `leftover`. Returns the
+/// bytes and whether the full declared length arrived. IO errors and
+/// early EOF mid-body are reported as an incomplete body, not an error,
+/// so callers can persist the prefix for a later resume.
+fn read_body(stream: &mut TcpStream, leftover: Vec<u8>, len: u64) -> (Vec<u8>, bool) {
+    let mut body = leftover;
+    if body.len() as u64 > len {
+        body.truncate(len as usize);
+    }
+    let mut chunk = [0u8; 65536];
+    while (body.len() as u64) < len {
+        match stream.read(&mut chunk) {
+            Ok(0) => return (body, false),
+            Ok(n) => {
+                let want = (len - body.len() as u64) as usize;
+                body.extend_from_slice(&chunk[..n.min(want)]);
+            }
+            Err(_) => return (body, false),
+        }
+    }
+    (body, true)
+}
+
+fn parse_headers(lines: &mut std::str::Lines<'_>) -> Vec<(String, String)> {
+    let mut headers = Vec::new();
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+    }
+    headers
+}
+
+fn content_length(headers: &[(String, String)]) -> Result<u64> {
+    let len = match header_value(headers, "content-length") {
+        Some(v) => v.parse::<u64>().context("invalid content-length")?,
+        None => 0,
+    };
+    if len > MAX_BODY_BYTES {
+        bail!("declared body of {len} bytes exceeds the transport limit");
+    }
+    Ok(len)
+}
+
+/// Parse one request from a stream. The `bool` is body completeness —
+/// `false` means the connection died mid-body (the request carries the
+/// prefix that arrived, which pack uploads persist for resume).
+pub fn read_request(stream: &mut TcpStream) -> Result<(Request, bool)> {
+    let (head, leftover) = read_head(stream)?;
+    let mut lines = head.lines();
+    let start = lines.next().context("empty http request")?;
+    let mut parts = start.split_whitespace();
+    let method = parts.next().context("missing method")?.to_ascii_uppercase();
+    let target = parts.next().context("missing request target")?.to_string();
+    let headers = parse_headers(&mut lines);
+    let len = content_length(&headers)?;
+    let (body, complete) = read_body(stream, leftover, len);
+    Ok((
+        Request {
+            method,
+            target,
+            headers,
+            body,
+        },
+        complete,
+    ))
+}
+
+/// Write a request head declaring `content_length` body bytes (which
+/// the caller may then send separately — the fault proxy uses the split
+/// to truncate bodies mid-flight).
+pub fn write_request_head(
+    stream: &mut TcpStream,
+    method: &str,
+    target: &str,
+    headers: &[(String, String)],
+    content_length: u64,
+) -> Result<()> {
+    let mut head = format!("{method} {target} HTTP/1.1\r\n");
+    push_headers(&mut head, headers);
+    head.push_str(&format!("content-length: {content_length}\r\nconnection: close\r\n\r\n"));
+    stream
+        .write_all(head.as_bytes())
+        .context("writing http request head")
+}
+
+/// Append caller headers, skipping the codec-managed ones so relaying
+/// a parsed message (the fault proxy does) never duplicates them.
+fn push_headers(head: &mut String, headers: &[(String, String)]) {
+    for (name, value) in headers {
+        if name.eq_ignore_ascii_case("content-length") || name.eq_ignore_ascii_case("connection") {
+            continue;
+        }
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+}
+
+/// Write a complete request.
+pub fn write_request(stream: &mut TcpStream, req: &Request) -> Result<()> {
+    write_request_head(
+        stream,
+        &req.method,
+        &req.target,
+        &req.headers,
+        req.body.len() as u64,
+    )?;
+    stream
+        .write_all(&req.body)
+        .context("writing http request body")?;
+    stream.flush().context("flushing http request")
+}
+
+fn reason_of(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        204 => "No Content",
+        206 => "Partial Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        416 => "Range Not Satisfiable",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        _ => "Status",
+    }
+}
+
+/// Write a response head declaring `content_length` body bytes.
+pub fn write_response_head(
+    stream: &mut TcpStream,
+    status: u16,
+    headers: &[(String, String)],
+    content_length: u64,
+) -> Result<()> {
+    let mut head = format!("HTTP/1.1 {status} {}\r\n", reason_of(status));
+    push_headers(&mut head, headers);
+    head.push_str(&format!("content-length: {content_length}\r\nconnection: close\r\n\r\n"));
+    stream
+        .write_all(head.as_bytes())
+        .context("writing http response head")
+}
+
+/// Write a complete response.
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    write_response_head(stream, resp.status, &resp.headers, resp.body.len() as u64)?;
+    stream
+        .write_all(&resp.body)
+        .context("writing http response body")?;
+    stream.flush().context("flushing http response")
+}
+
+/// Parse one response from a stream. `head_request` suppresses body
+/// reading (HEAD responses declare a length but carry no body).
+pub fn read_response(stream: &mut TcpStream, head_request: bool) -> Result<Response> {
+    let (head, leftover) = read_head(stream)?;
+    let mut lines = head.lines();
+    let start = lines.next().context("empty http response")?;
+    let status = start
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .with_context(|| format!("bad http status line '{start}'"))?;
+    let headers = parse_headers(&mut lines);
+    if head_request {
+        return Ok(Response {
+            status,
+            headers,
+            body: Vec::new(),
+            complete: true,
+        });
+    }
+    let len = content_length(&headers)?;
+    let (body, complete) = read_body(stream, leftover, len);
+    Ok(Response {
+        status,
+        headers,
+        body,
+        complete,
+    })
+}
+
+/// Connect, send one request, read the response (`Connection: close`).
+pub fn roundtrip(authority: &str, req: &Request) -> Result<Response> {
+    let mut stream = TcpStream::connect(authority)
+        .with_context(|| format!("connecting to http remote {authority}"))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    write_request(&mut stream, req)?;
+    read_response(&mut stream, req.method == "HEAD")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn authority_parsing() {
+        assert_eq!(authority_of("http://127.0.0.1:8123").unwrap(), "127.0.0.1:8123");
+        assert_eq!(authority_of("http://host:9/x/y").unwrap(), "host:9");
+        assert_eq!(authority_of("http://host").unwrap(), "host:80");
+        assert!(authority_of("file:///tmp").is_err());
+        assert!(authority_of("http://").is_err());
+        assert!(require_rootless("http://host:9").is_ok());
+        assert!(require_rootless("http://host:9/").is_ok());
+        assert!(require_rootless("http://host:9/team-a").is_err());
+    }
+
+    #[test]
+    fn request_target_split() {
+        let req = Request::new("GET", "/history/abc?exclude=1,2");
+        assert_eq!(req.path(), "/history/abc");
+        assert_eq!(req.query(), Some("exclude=1,2"));
+        assert_eq!(Request::new("GET", "/x").query(), None);
+    }
+
+    #[test]
+    fn roundtrip_over_real_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let (req, complete) = read_request(&mut stream).unwrap();
+            assert!(complete);
+            assert_eq!(req.method, "PUT");
+            assert_eq!(req.path(), "/echo");
+            assert_eq!(req.get_header("x-tag"), Some("t1"));
+            let resp = Response::new(200).header("x-seen", "yes").body(req.body);
+            write_response(&mut stream, &resp).unwrap();
+        });
+        let payload: Vec<u8> = (0..100_000u32).map(|x| x as u8).collect();
+        let req = Request::new("PUT", "/echo").header("x-tag", "t1").body(payload.clone());
+        let resp = roundtrip(&addr.to_string(), &req).unwrap();
+        server.join().unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.complete);
+        assert_eq!(resp.get_header("x-seen"), Some("yes"));
+        assert_eq!(resp.body, payload);
+    }
+
+    #[test]
+    fn truncated_body_is_reported_incomplete() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            // Declare 1000 body bytes but send only 400, then drop.
+            write_response_head(&mut stream, 200, &[], 1000).unwrap();
+            use std::io::Write;
+            stream.write_all(&[7u8; 400]).unwrap();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write_request(&mut stream, &Request::new("GET", "/partial")).unwrap();
+        let resp = read_response(&mut stream, false).unwrap();
+        server.join().unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(!resp.complete);
+        assert_eq!(resp.body, vec![7u8; 400]);
+    }
+}

@@ -4,12 +4,14 @@
 //! so the small generic pieces Git-Theta needs are implemented here:
 //! JSON and MessagePack codecs, hex, glob matching, a PCG64 RNG, a
 //! scoped-thread parallel map, human-readable sizes, temp dirs, a
-//! tiny property-testing harness, and an opt-in heap high-water-mark
-//! allocator for benchmarks.
+//! tiny property-testing harness, a minimal HTTP/1.1 codec for the
+//! remote transport, and an opt-in heap high-water-mark allocator for
+//! benchmarks.
 
 pub mod alloc;
 pub mod glob;
 pub mod hex;
+pub mod http;
 pub mod humansize;
 pub mod json;
 pub mod msgpack;

@@ -1,0 +1,228 @@
+//! Transport parity: `DirRemote` and `HttpRemote` must be
+//! observationally identical — arbitrary have/want sets produce the
+//! same store states, the same negotiation/pack/byte counters, and the
+//! same fast paths, whichever channel carries the packs.
+
+mod support;
+
+use git_theta::gitcore::object::Oid;
+use git_theta::gitcore::remote::RemoteSpec;
+use git_theta::gitcore::repo::Repository;
+use git_theta::lfs::{batch, LfsRemote, LfsStore, RemoteTransport};
+use git_theta::util::prop::{self, gens};
+use git_theta::util::rng::Pcg64;
+use git_theta::util::tmp::TempDir;
+
+/// One randomized have/want scenario.
+#[derive(Debug)]
+struct Scenario {
+    /// Number of real objects in the source store.
+    objects: usize,
+    /// How many of them the receiving side already has.
+    have: usize,
+    /// Extra wanted oids nobody holds.
+    ghosts: usize,
+    /// Payload seed.
+    seed: u64,
+}
+
+fn gen_scenario(rng: &mut Pcg64) -> Scenario {
+    let objects = gens::usize_in(rng, 1, 10);
+    Scenario {
+        objects,
+        have: gens::usize_in(rng, 0, objects),
+        ghosts: gens::usize_in(rng, 0, 3),
+        seed: rng.next_u64(),
+    }
+}
+
+fn ghost_oids(n: usize, seed: u64) -> Vec<Oid> {
+    (0..n)
+        .map(|i| Oid::of_bytes(format!("ghost-{seed}-{i}").as_bytes()))
+        .collect()
+}
+
+#[test]
+fn push_parity_across_transports() {
+    prop::check("push-parity", gen_scenario, |sc| {
+        let td_local = TempDir::new("parity-local").map_err(|e| e.to_string())?;
+        let local = LfsStore::open(td_local.path());
+        let oids = support::seed_store(&local, sc.objects, 900, sc.seed);
+        let mut want = oids.clone();
+        want.extend(ghost_oids(sc.ghosts, sc.seed));
+
+        // Directory remote, pre-seeded with the `have` subset.
+        let td_dir = TempDir::new("parity-dir").map_err(|e| e.to_string())?;
+        let dir = LfsRemote::open(td_dir.path());
+        for oid in &oids[..sc.have] {
+            dir.store().put(&local.get(oid).unwrap()).unwrap();
+        }
+
+        // HTTP remote over a live server, identically pre-seeded.
+        let fx = support::HttpFixture::new();
+        let server_store = fx.server_store();
+        for oid in &oids[..sc.have] {
+            server_store.put(&local.get(oid).unwrap()).unwrap();
+        }
+        let td_staging = TempDir::new("parity-staging").map_err(|e| e.to_string())?;
+        let http = fx.direct_remote(td_staging.path());
+
+        batch::reset_stats();
+        let sum_dir = batch::push_pack(&local, &dir, &want).map_err(|e| format!("{e:#}"))?;
+        let stats_dir = batch::stats();
+
+        batch::reset_stats();
+        let sum_http = batch::push_pack(&local, &http, &want).map_err(|e| format!("{e:#}"))?;
+        let stats_http = batch::stats();
+
+        if sum_dir != sum_http {
+            return Err(format!("summaries diverge:\n dir {sum_dir:?}\n http {sum_http:?}"));
+        }
+        if stats_dir != stats_http {
+            return Err(format!("counters diverge:\n dir {stats_dir:?}\n http {stats_http:?}"));
+        }
+        if sum_dir.unavailable != sc.ghosts {
+            return Err(format!(
+                "{} ghosts wanted but {} reported unavailable",
+                sc.ghosts, sum_dir.unavailable
+            ));
+        }
+        support::assert_stores_equal(dir.store(), &server_store);
+        Ok(())
+    });
+}
+
+#[test]
+fn fetch_parity_across_transports() {
+    prop::check("fetch-parity", gen_scenario, |sc| {
+        // Both remotes hold the full object set.
+        let td_dir = TempDir::new("parity-dir").map_err(|e| e.to_string())?;
+        let dir = LfsRemote::open(td_dir.path());
+        let oids = support::seed_store(dir.store(), sc.objects, 900, sc.seed);
+        let fx = support::HttpFixture::new();
+        let server_store = fx.server_store();
+        for oid in &oids {
+            server_store.put(&dir.store().get(oid).unwrap()).unwrap();
+        }
+        let mut want = oids.clone();
+        want.extend(ghost_oids(sc.ghosts, sc.seed));
+
+        // Two receivers, each pre-seeded with the same `have` subset.
+        let td_a = TempDir::new("parity-recv-dir").map_err(|e| e.to_string())?;
+        let td_b = TempDir::new("parity-recv-http").map_err(|e| e.to_string())?;
+        let recv_dir = LfsStore::open(td_a.path());
+        let recv_http = LfsStore::open(td_b.path());
+        for oid in &oids[..sc.have] {
+            let bytes = dir.store().get(oid).unwrap();
+            recv_dir.put(&bytes).unwrap();
+            recv_http.put(&bytes).unwrap();
+        }
+        let http = fx.direct_remote(td_b.path());
+
+        batch::reset_stats();
+        let sum_dir = batch::fetch_pack(&dir, &recv_dir, &want).map_err(|e| format!("{e:#}"))?;
+        let stats_dir = batch::stats();
+
+        batch::reset_stats();
+        let sum_http = batch::fetch_pack(&http, &recv_http, &want);
+        let sum_http = sum_http.map_err(|e| format!("{e:#}"))?;
+        let stats_http = batch::stats();
+
+        if sum_dir != sum_http {
+            return Err(format!("summaries diverge:\n dir {sum_dir:?}\n http {sum_http:?}"));
+        }
+        if stats_dir != stats_http {
+            return Err(format!("counters diverge:\n dir {stats_dir:?}\n http {stats_http:?}"));
+        }
+        support::assert_stores_equal(&recv_dir, &recv_http);
+        Ok(())
+    });
+}
+
+/// The empty-want and already-synced fast paths cost zero round trips
+/// on both transports.
+#[test]
+fn fast_paths_cost_nothing_on_both_transports() {
+    let td_local = TempDir::new("parity-fast-local").unwrap();
+    let local = LfsStore::open(td_local.path());
+    let oids = support::seed_store(&local, 5, 600, 0xFA57);
+
+    let td_dir = TempDir::new("parity-fast-dir").unwrap();
+    let dir = LfsRemote::open(td_dir.path());
+    let fx = support::HttpFixture::new();
+    let td_staging = TempDir::new("parity-fast-staging").unwrap();
+    let http = fx.direct_remote(td_staging.path());
+
+    let transports: [&dyn RemoteTransport; 2] = [&dir, &http];
+    for remote in transports {
+        // Empty want: no negotiation at all.
+        batch::reset_stats();
+        let s = batch::push_pack(&local, remote, &[]).unwrap();
+        assert_eq!(s, git_theta::lfs::TransferSummary::default());
+        assert_eq!(batch::stats(), git_theta::lfs::TransferStats::default());
+
+        batch::reset_stats();
+        let s = batch::fetch_pack(remote, &local, &[]).unwrap();
+        assert_eq!(s, git_theta::lfs::TransferSummary::default());
+        assert_eq!(batch::stats(), git_theta::lfs::TransferStats::default());
+
+        // First sync moves the pack; re-sync negotiates once and moves
+        // nothing; a fetch of fully local objects costs zero round trips.
+        batch::push_pack(&local, remote, &oids).unwrap();
+        batch::reset_stats();
+        let s = batch::push_pack(&local, remote, &oids).unwrap();
+        assert_eq!((s.objects, s.packed_bytes), (0, 0));
+        assert_eq!(batch::stats().round_trips(), 1); // the negotiation only
+
+        batch::reset_stats();
+        let s = batch::fetch_pack(remote, &local, &oids).unwrap();
+        assert_eq!(s.objects, 0);
+        assert_eq!(batch::stats().round_trips(), 0);
+    }
+}
+
+/// Commit/ref sync parity: the same history pushed to a directory and
+/// an HTTP remote, then cloned back, yields identical working trees.
+#[test]
+fn repo_sync_parity_dir_vs_http() {
+    git_theta::init();
+    let td = TempDir::new("parity-repo").unwrap();
+    let repo = Repository::init(td.path()).unwrap();
+    std::fs::write(td.join("notes.txt"), "v1").unwrap();
+    repo.add(&["notes.txt"]).unwrap();
+    repo.commit("v1", "t").unwrap();
+    std::fs::write(td.join("notes.txt"), "v2").unwrap();
+    repo.add(&["notes.txt"]).unwrap();
+    repo.commit("v2", "t").unwrap();
+
+    let td_dir = TempDir::new("parity-repo-dir").unwrap();
+    let fx = support::HttpFixture::new();
+    let dir_spec = RemoteSpec::Dir(td_dir.path().to_path_buf());
+    let http_spec = RemoteSpec::parse(&fx.server.url()).unwrap();
+
+    let report_dir = repo.push_spec(&dir_spec, "main").unwrap();
+    let report_http = repo.push_spec(&http_spec, "main").unwrap();
+    assert_eq!(report_dir.commits, report_http.commits);
+    assert_eq!(report_dir.objects_sent, report_http.objects_sent);
+    assert_eq!(report_dir.bytes_sent, report_http.bytes_sent);
+
+    // Idempotent re-push is a no-op on both.
+    assert_eq!(repo.push_spec(&dir_spec, "main").unwrap().objects_sent, 0);
+    assert_eq!(repo.push_spec(&http_spec, "main").unwrap().objects_sent, 0);
+
+    let td_a = TempDir::new("parity-clone-dir").unwrap();
+    let td_b = TempDir::new("parity-clone-http").unwrap();
+    let clone_dir = Repository::init(td_a.path()).unwrap();
+    clone_dir.pull_spec(&dir_spec, "main").unwrap();
+    let clone_http = Repository::init(td_b.path()).unwrap();
+    clone_http.pull_spec(&http_spec, "main").unwrap();
+    assert_eq!(
+        std::fs::read(td_a.join("notes.txt")).unwrap(),
+        std::fs::read(td_b.join("notes.txt")).unwrap()
+    );
+    assert_eq!(
+        clone_dir.head_commit().unwrap(),
+        clone_http.head_commit().unwrap()
+    );
+    assert_eq!(std::fs::read_to_string(td_b.join("notes.txt")).unwrap(), "v2");
+}

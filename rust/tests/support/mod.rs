@@ -1,0 +1,76 @@
+//! Shared harness for the transport integration tests: an HTTP remote
+//! ([`LfsServer`]) fronted by a fault-injection proxy
+//! ([`FaultProxy`]), plus seeded-store helpers. Each test binary
+//! compiles its own copy (`mod support;`), so the pieces it doesn't
+//! use are dead code there.
+#![allow(dead_code)]
+
+use git_theta::gitcore::object::Oid;
+use git_theta::lfs::faults::FaultProxy;
+use git_theta::lfs::{HttpRemote, LfsServer, LfsStore};
+use git_theta::util::rng::Pcg64;
+use git_theta::util::tmp::TempDir;
+use std::path::Path;
+
+/// A live HTTP remote with a fault proxy in front of it.
+pub struct HttpFixture {
+    /// Root directory the server serves (odb + refs + lfs store).
+    pub root: TempDir,
+    /// The running server.
+    pub server: LfsServer,
+    /// A proxy between clients and the server; arm it to inject
+    /// exactly one fault into the next pack stream.
+    pub proxy: FaultProxy,
+}
+
+impl HttpFixture {
+    /// Spawn a fresh server + proxy pair over a temp root.
+    pub fn new() -> HttpFixture {
+        let root = TempDir::new("http-fixture").unwrap();
+        let server = LfsServer::spawn(root.path()).unwrap();
+        let proxy = FaultProxy::spawn(&server.url()).unwrap();
+        HttpFixture { root, server, proxy }
+    }
+
+    /// A client that bypasses the proxy (no faults ever).
+    pub fn direct_remote(&self, staging: &Path) -> HttpRemote {
+        HttpRemote::open(&self.server.url(), Some(staging)).unwrap()
+    }
+
+    /// A client whose traffic crosses the fault proxy.
+    pub fn proxied_remote(&self, staging: &Path) -> HttpRemote {
+        HttpRemote::open(&self.proxy.url(), Some(staging)).unwrap()
+    }
+
+    /// Direct handle on the server's LFS store (seeding/asserting).
+    pub fn server_store(&self) -> LfsStore {
+        LfsStore::at(&self.root.path().join("lfs/objects"))
+    }
+}
+
+/// Fill a store with `n` pseudo-random payloads of roughly
+/// `bytes_per` bytes (deterministic per seed). Returns their oids in
+/// insertion order.
+pub fn seed_store(store: &LfsStore, n: usize, bytes_per: usize, seed: u64) -> Vec<Oid> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = bytes_per / 2 + (rng.below(bytes_per.max(2) as u64) as usize);
+            let payload: Vec<u8> = (0..len.max(1)).map(|_| rng.next_u64() as u8).collect();
+            let (oid, _) = store.put(&payload).unwrap();
+            oid
+        })
+        .collect()
+}
+
+/// Assert two stores hold exactly the same objects with equal bytes.
+pub fn assert_stores_equal(a: &LfsStore, b: &LfsStore) {
+    let mut oids_a = a.list().unwrap();
+    let mut oids_b = b.list().unwrap();
+    oids_a.sort();
+    oids_b.sort();
+    assert_eq!(oids_a, oids_b, "stores hold different object sets");
+    for oid in &oids_a {
+        assert_eq!(a.get(oid).unwrap(), b.get(oid).unwrap(), "object {oid} differs");
+    }
+}

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare BENCH_*.json against a committed baseline.
+
+Usage: bench_gate.py scripts/bench_baseline.json
+
+The baseline file lists tracked metrics as
+    {"file": "BENCH_transfer.json", "path": "runs[1].up_round_trips",
+     "baseline": 2, "direction": "lower", "tolerance": 0.2, "note": "..."}
+
+`direction` says which way is better ("lower" or "higher"); a run fails
+the gate when a metric is worse than baseline by more than `tolerance`
+(relative). A `baseline` of null records the metric advisorily — its
+current value is printed so a later PR can commit it — without gating.
+"""
+
+import json
+import re
+import sys
+
+
+def get_path(doc, path):
+    """Resolve 'runs[1].up_round_trips'-style paths."""
+    cur = doc
+    for part in path.split("."):
+        m = re.fullmatch(r"([A-Za-z_][A-Za-z0-9_]*)(?:\[(\d+)\])?", part)
+        if not m:
+            raise KeyError(f"bad path segment '{part}'")
+        cur = cur[m.group(1)]
+        if m.group(2) is not None:
+            cur = cur[int(m.group(2))]
+    return cur
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__.strip())
+        return 2
+    with open(sys.argv[1]) as f:
+        baseline = json.load(f)
+
+    docs = {}
+    failures = []
+    advisories = []
+    for metric in baseline["metrics"]:
+        fname, path = metric["file"], metric["path"]
+        if fname not in docs:
+            try:
+                with open(fname) as f:
+                    docs[fname] = json.load(f)
+            except FileNotFoundError:
+                failures.append(f"{fname}: missing (did its bench smoke run?)")
+                docs[fname] = None
+        doc = docs[fname]
+        if doc is None:
+            continue
+        try:
+            value = get_path(doc, path)
+        except (KeyError, IndexError, TypeError) as e:
+            failures.append(f"{fname}:{path}: unresolvable ({e})")
+            continue
+        base = metric.get("baseline")
+        if base is None:
+            advisories.append(f"{fname}:{path} = {value} (no baseline committed yet)")
+            continue
+        tol = metric.get("tolerance", 0.2)
+        direction = metric.get("direction", "lower")
+        if direction == "lower":
+            worse = value > base * (1 + tol)
+        else:
+            worse = value < base * (1 - tol)
+        verdict = "FAIL" if worse else "ok"
+        print(f"  [{verdict}] {fname}:{path} = {value} (baseline {base}, {direction} "
+              f"is better, tol {int(tol * 100)}%)")
+        if worse:
+            failures.append(
+                f"{fname}:{path} regressed: {value} vs baseline {base} "
+                f"(>{int(tol * 100)}% worse) — {metric.get('note', '')}")
+
+    for line in advisories:
+        print(f"  [note] {line}")
+    if failures:
+        print("bench regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -62,4 +62,26 @@ test -f BENCH_merge.json || {
     exit 1
 }
 
+# Smoke the transfer ablation (tiny configuration): per-object vs
+# packed vs http transport, plus the +resume injected-fault sample
+# (fault proxy kills the pack stream halfway; the retry must resume).
+echo "==> bench transfer smoke"
+cargo run --release --quiet -- bench transfer 20 2048
+test -f BENCH_transfer.json || {
+    echo "error: bench transfer did not write BENCH_transfer.json" >&2
+    exit 1
+}
+
+# Regression gate: BENCH_*.json counters vs the committed baseline
+# snapshot (scripts/bench_baseline.json). Counter metrics are exact
+# protocol invariants and fail the build when >20% worse; time metrics
+# stay advisory until enough CI history exists to lock them. The JSON
+# files are uploaded as CI artifacts by .github/workflows/ci.yml.
+echo "==> bench regression gate"
+if command -v python3 >/dev/null 2>&1; then
+    python3 scripts/bench_gate.py scripts/bench_baseline.json
+else
+    echo "::warning::python3 unavailable; bench regression gate skipped"
+fi
+
 echo "==> OK"
