@@ -9,7 +9,14 @@
 //! how much of the retry byte-range resume saves. Scale with
 //! `THETA_BENCH_GROUPS` / `THETA_BENCH_ELEMS`.
 
-use git_theta::benchkit::transfer::{render_resume, render_runs, run_compare, run_resume_sample};
+use git_theta::benchkit::transfer::{
+    render_resume, render_runs, render_stream, run_compare, run_resume_sample, run_stream_sample,
+};
+
+// Heap high-water-mark tracking so the `+stream` sample can report the
+// real peak allocation of a pack round trip.
+#[global_allocator]
+static ALLOC: git_theta::util::alloc::TrackingAlloc = git_theta::util::alloc::TrackingAlloc;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key)
@@ -25,6 +32,8 @@ fn main() -> anyhow::Result<()> {
     print!("{}", render_runs(groups, elems, &runs));
     let resume = run_resume_sample(groups, elems)?;
     print!("{}", render_resume(&resume));
+    let stream = run_stream_sample(1024, 8192)?;
+    print!("{}", render_stream(&stream));
 
     let per = &runs[0];
     let packed = &runs[1];

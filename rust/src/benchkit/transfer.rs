@@ -18,12 +18,13 @@
 
 use super::time_once;
 use crate::gitcore::object::Oid;
+use crate::lfs::batch::Prefetcher;
 use crate::lfs::faults::{Direction, FaultProxy, FaultSpec};
 use crate::lfs::{batch, transport, HttpRemote, LfsRemote, LfsServer, LfsStore};
-use crate::util::humansize;
 use crate::util::json::{Json, JsonObj};
 use crate::util::rng::Pcg64;
 use crate::util::tmp::TempDir;
+use crate::util::{alloc, humansize};
 use anyhow::{ensure, Result};
 
 /// Measurements for one engine: upload + download legs.
@@ -59,6 +60,75 @@ impl ResumeSample {
     pub fn retry_fraction(&self) -> f64 {
         self.retry_wire_bytes as f64 / (self.pack_bytes as f64).max(1.0)
     }
+}
+
+/// One streaming-pipeline measurement (the `+stream` lever): peak heap
+/// during an http pack round trip, and TCP connects vs requests.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamSample {
+    /// Bytes of the single pack that moved each way.
+    pub pack_bytes: u64,
+    /// Largest single object in the pack (the streaming memory unit).
+    pub largest_object: u64,
+    /// Peak transient heap during push + fetch (client *and* in-process
+    /// server side). 0 when the running binary has no
+    /// [`TrackingAlloc`](crate::util::alloc::TrackingAlloc) installed.
+    pub peak_heap_bytes: u64,
+    /// `peak_heap_bytes / pack_bytes` — the locked bound: streaming
+    /// keeps this well under 1 however large the pack, where the old
+    /// RAM-materialized path needed several multiples of the pack.
+    pub peak_ratio: f64,
+    /// TCP connections the client opened for the whole round trip.
+    pub http_connects: u64,
+    /// Logical wire requests made (negotiations + pack transfers).
+    pub requests: u64,
+}
+
+/// Push + fetch one model through a real localhost http server with a
+/// pinned 2-thread engine, measuring peak heap (when a `TrackingAlloc`
+/// is installed — the `git-theta` CLI installs one) and connection
+/// reuse. Threads are pinned so the streaming window — and therefore
+/// the locked peak-heap bound — does not scale with the host's cores.
+pub fn run_stream_sample(groups: usize, elems: usize) -> Result<StreamSample> {
+    let (_td_local, local, oids) = seeded_local(groups, elems)?;
+    let largest_object = oids
+        .iter()
+        .filter_map(|o| local.size_of(o))
+        .max()
+        .unwrap_or(0);
+    let td_root = TempDir::new("xfer-stream-root")?;
+    let server = LfsServer::spawn(td_root.path())?;
+    let td_staging = TempDir::new("xfer-stream-staging")?;
+    let remote = HttpRemote::open(&server.url(), Some(td_staging.path()))?;
+    let engine = Prefetcher {
+        threads: 2,
+        ..Prefetcher::default()
+    };
+
+    batch::reset_stats();
+    let tracking = alloc::active();
+    let base = alloc::reset_peak();
+    let up = engine.push(&local, &remote, &oids)?;
+    let td_clone = TempDir::new("xfer-stream-clone")?;
+    let clone_store = LfsStore::open(td_clone.path());
+    let down = engine.fetch(&remote, &clone_store, &oids)?;
+    let peak_heap_bytes = if tracking {
+        alloc::peak_bytes().saturating_sub(base) as u64
+    } else {
+        0
+    };
+    ensure!(up.objects == groups, "stream sample upload incomplete");
+    ensure!(down.objects == groups, "stream sample download incomplete");
+    ensure!(batch::stats().packs == 2, "stream sample must move exactly one pack each way");
+    let pack_bytes = up.packed_bytes;
+    Ok(StreamSample {
+        pack_bytes,
+        largest_object,
+        peak_heap_bytes,
+        peak_ratio: peak_heap_bytes as f64 / (pack_bytes as f64).max(1.0),
+        http_connects: remote.connections_opened(),
+        requests: batch::stats().round_trips(),
+    })
 }
 
 /// Synthesize `groups` parameter-group payloads of `elems` f32s each,
@@ -225,6 +295,28 @@ pub fn render_runs(groups: usize, elems: usize, runs: &[TransferRun]) -> String 
     )
 }
 
+/// Render the `+stream` bounded-memory sample.
+pub fn render_stream(sample: &StreamSample) -> String {
+    let peak = if sample.peak_heap_bytes == 0 {
+        "n/a (no tracking allocator)".to_string()
+    } else {
+        format!(
+            "{} (ratio {:.2} of the pack)",
+            humansize::bytes(sample.peak_heap_bytes),
+            sample.peak_ratio
+        )
+    };
+    format!(
+        "+stream (bounded memory): pack {}, largest object {}, peak heap {}, \
+         {} requests over {} TCP connection(s)\n",
+        humansize::bytes(sample.pack_bytes),
+        humansize::bytes(sample.largest_object),
+        peak,
+        sample.requests,
+        sample.http_connects,
+    )
+}
+
 /// Render the `+resume` fault sample.
 pub fn render_resume(sample: &ResumeSample) -> String {
     format!(
@@ -245,6 +337,7 @@ pub fn runs_to_json(
     elems: usize,
     runs: &[TransferRun],
     resume: &ResumeSample,
+    stream: &StreamSample,
 ) -> Json {
     let mut root = JsonObj::new();
     root.insert("bench", "transfer");
@@ -275,6 +368,14 @@ pub fn runs_to_json(
     res.insert("retry_resumed_bytes", resume.retry_resumed_bytes);
     res.insert("retry_fraction", Json::Num(resume.retry_fraction()));
     root.insert("resume", Json::Obj(res));
+    let mut st = JsonObj::new();
+    st.insert("pack_bytes", stream.pack_bytes);
+    st.insert("largest_object", stream.largest_object);
+    st.insert("peak_heap_bytes", stream.peak_heap_bytes);
+    st.insert("peak_ratio", Json::Num(stream.peak_ratio));
+    st.insert("http_connects", stream.http_connects);
+    st.insert("requests", stream.requests);
+    root.insert("stream", Json::Obj(st));
     Json::Obj(root)
 }
 
@@ -292,7 +393,15 @@ pub fn run_transfer_cli(args: &[String]) -> Result<()> {
     print!("{}", render_runs(groups, elems, &runs));
     let resume = run_resume_sample(groups, elems)?;
     print!("{}", render_resume(&resume));
-    let path = super::write_bench_json("transfer", runs_to_json(groups, elems, &runs, &resume))?;
+    // The stream sample uses its own fixed, larger configuration: the
+    // peak-heap bound is only meaningful when the pack dwarfs the
+    // per-object streaming window (1024 × 32 KiB objects ≈ 32 MiB raw).
+    let stream = run_stream_sample(1024, 8192)?;
+    print!("{}", render_stream(&stream));
+    let path = super::write_bench_json(
+        "transfer",
+        runs_to_json(groups, elems, &runs, &resume, &stream),
+    )?;
     println!("wrote {}", path.display());
     Ok(())
 }
@@ -353,5 +462,25 @@ mod tests {
             sample.retry_wire_bytes < sample.pack_bytes,
             "resume must transfer strictly fewer bytes than a from-scratch retry"
         );
+    }
+
+    #[test]
+    fn stream_sample_reuses_one_connection_for_the_round_trip() {
+        // Small config for test speed; the CLI runs the full-size one.
+        let sample = run_stream_sample(48, 1024).unwrap();
+        // 4 logical round trips (2 negotiations + 2 packs); the real
+        // HTTP request count is higher still (HEAD probe, pack POST).
+        assert!(sample.requests >= 4, "expected ≥4 round trips, got {}", sample.requests);
+        assert_eq!(
+            sample.http_connects, 1,
+            "a sequential push + fetch must ride one keep-alive connection"
+        );
+        assert!(sample.pack_bytes > 0);
+        assert!(sample.largest_object > 0);
+        // The library test binary installs no tracking allocator, so
+        // the heap counter must report "untracked" (0), never garbage.
+        if !crate::util::alloc::active() {
+            assert_eq!(sample.peak_heap_bytes, 0);
+        }
     }
 }

@@ -169,9 +169,12 @@ impl GitEndpoint for DirEndpoint {
 }
 
 /// Client half of the HTTP commit/ref protocol.
+///
+/// Built on the shared [`http::HttpClient`] scaffold, so a whole
+/// commit walk (dozens of `/odb` round trips) reuses one keep-alive
+/// connection instead of opening one per object.
 pub struct HttpEndpoint {
-    authority: String,
-    url: String,
+    client: http::HttpClient,
 }
 
 impl HttpEndpoint {
@@ -179,19 +182,17 @@ impl HttpEndpoint {
     /// URLs with a path component are rejected (the protocol is rooted
     /// at `/`, so a path would be silently ignored).
     pub fn open(url: &str) -> Result<HttpEndpoint> {
-        http::require_rootless(url)?;
         Ok(HttpEndpoint {
-            authority: http::authority_of(url)?,
-            url: url.trim_end_matches('/').to_string(),
+            client: http::HttpClient::open(url)?,
         })
     }
 
+    fn url(&self) -> &str {
+        self.client.url()
+    }
+
     fn send(&self, req: http::Request) -> Result<http::Response> {
-        let resp = http::roundtrip(&self.authority, &req)?;
-        if !resp.complete {
-            bail!("connection to {} interrupted mid-response", self.url);
-        }
-        Ok(resp)
+        self.client.send(&req)
     }
 }
 
@@ -227,7 +228,7 @@ impl GitEndpoint for HttpEndpoint {
         match resp.status {
             200 => Ok(Some(Oid::from_hex(String::from_utf8_lossy(&resp.body).trim())?)),
             404 => Ok(None),
-            s => bail!("{}: GET /refs/{name} -> {s}", self.url),
+            s => bail!("{}: GET /refs/{name} -> {s}", self.url()),
         }
     }
 
@@ -241,7 +242,7 @@ impl GitEndpoint for HttpEndpoint {
         match resp.status {
             200 => Ok(()),
             409 => bail!("remote branch '{name}' moved during the push (fetch and retry)"),
-            s => bail!("{}: PUT /refs/{name} -> {s}", self.url),
+            s => bail!("{}: PUT /refs/{name} -> {s}", self.url()),
         }
     }
 
@@ -250,20 +251,20 @@ impl GitEndpoint for HttpEndpoint {
         match resp.status {
             200 => Ok(true),
             404 => Ok(false),
-            s => bail!("{}: HEAD /odb/{} -> {s}", self.url, oid.short()),
+            s => bail!("{}: HEAD /odb/{} -> {s}", self.url(), oid.short()),
         }
     }
 
     fn read(&self, oid: &Oid) -> Result<Object> {
         let resp = self.send(http::Request::new("GET", &format!("/odb/{}", oid.to_hex())))?;
         if resp.status == 404 {
-            bail!("object {} not found on {}", oid.short(), self.url);
+            bail!("object {} not found on {}", oid.short(), self.url());
         }
         if resp.status != 200 {
-            bail!("{}: GET /odb/{} -> {}", self.url, oid.short(), resp.status);
+            bail!("{}: GET /odb/{} -> {}", self.url(), oid.short(), resp.status);
         }
         if Oid::of_bytes(&resp.body) != *oid {
-            bail!("object {} from {} failed its content hash", oid.short(), self.url);
+            bail!("object {} from {} failed its content hash", oid.short(), self.url());
         }
         Object::decode(&resp.body)
     }
@@ -274,7 +275,7 @@ impl GitEndpoint for HttpEndpoint {
         let req = http::Request::new("PUT", &format!("/odb/{}", oid.to_hex())).body(encoded);
         let resp = self.send(req)?;
         if resp.status != 200 {
-            bail!("{}: PUT /odb/{} -> {}", self.url, oid.short(), resp.status);
+            bail!("{}: PUT /odb/{} -> {}", self.url(), oid.short(), resp.status);
         }
         Ok(())
     }
@@ -286,7 +287,7 @@ impl GitEndpoint for HttpEndpoint {
         let req = http::Request::new("POST", "/odb/batch").body(want_body(oids));
         let resp = self.send(req)?;
         if resp.status != 200 {
-            bail!("{}: POST /odb/batch -> {}", self.url, resp.status);
+            bail!("{}: POST /odb/batch -> {}", self.url(), resp.status);
         }
         parse_oid_arr(&parse_json(&resp)?, "missing")
     }
@@ -302,7 +303,7 @@ impl GitEndpoint for HttpEndpoint {
         if resp.status != 200 {
             bail!(
                 "{}: history walk from {} failed ({}): {}",
-                self.url,
+                self.url(),
                 tip.short(),
                 resp.status,
                 String::from_utf8_lossy(&resp.body)

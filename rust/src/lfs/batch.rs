@@ -153,10 +153,11 @@ pub struct Prefetcher {
     /// Maximum objects per pack. Want-sets larger than this are sharded
     /// into several packs processed concurrently.
     pub max_pack_objects: usize,
-    /// Maximum cumulative *raw* payload bytes per pack. Bounds peak
-    /// memory: a pack (and its raw + compressed blobs) is materialized
-    /// in RAM, so large models shard into several packs regardless of
-    /// object count.
+    /// Maximum cumulative *raw* payload bytes per pack. With the
+    /// streaming pipeline a pack is never RAM-resident (it spills to a
+    /// file and moves in bounded chunks), so this now bounds *disk*
+    /// staging per shard and keeps shards small enough to overlap
+    /// transfer with compression/fan-in across workers.
     pub max_pack_bytes: u64,
     /// Worker threads for compression and store fan-in.
     pub threads: usize,
@@ -199,9 +200,7 @@ impl Prefetcher {
             &shards,
             self.threads.min(shards.len().max(1)),
             |_, shard| -> Result<(pack::PackStats, WireReport)> {
-                let (blob, wire) = remote.fetch_pack_blob(shard, inner)?;
-                let stats = pack::unpack_into(local, &blob, inner)?;
-                Ok((stats, wire))
+                remote.fetch_pack_into(shard, local, inner)
             },
         )?;
         Ok(accumulate(resp.missing.len(), &per_shard))
@@ -239,9 +238,7 @@ impl Prefetcher {
             &shards,
             self.threads.min(shards.len().max(1)),
             |_, shard| -> Result<(pack::PackStats, WireReport)> {
-                let blob = pack::build_pack(local, shard, inner)?;
-                let id = pack::pack_id(&blob);
-                remote.send_pack_blob(&id, &blob, inner)
+                remote.send_pack_from(local, shard, inner)
             },
         )?;
         Ok(accumulate(unavailable, &per_shard))

@@ -198,10 +198,12 @@ fn is_pack_request(req: &Request) -> Option<Direction> {
     }
 }
 
-/// Handle one proxied connection at request granularity: read the full
-/// request, apply any armed upload fault while forwarding, read the
-/// full upstream response, apply any armed download fault while
-/// relaying it back.
+/// Handle one proxied connection at request granularity, looping while
+/// the client keeps the connection alive (so pooled keep-alive clients
+/// work through the proxy): read the full request, apply any armed
+/// upload fault while forwarding, read the full upstream response,
+/// apply any armed download fault while relaying it back. A fired kill
+/// fault ends the loop (both sockets drop — that is the fault).
 fn relay(
     mut client: TcpStream,
     upstream: &str,
@@ -210,7 +212,20 @@ fn relay(
 ) -> Result<()> {
     client.set_read_timeout(Some(http::IO_TIMEOUT)).ok();
     client.set_write_timeout(Some(http::IO_TIMEOUT)).ok();
-    let (req, _complete) = http::read_request(&mut client)?;
+    loop {
+        relay_one(&mut client, upstream, armed, fired)?;
+    }
+}
+
+/// Relay a single request/response exchange; `Err` ends the connection
+/// (including deliberate kill faults).
+fn relay_one(
+    client: &mut TcpStream,
+    upstream: &str,
+    armed: &Mutex<Option<FaultSpec>>,
+    fired: &AtomicU64,
+) -> Result<()> {
+    let (req, _complete) = http::read_request(client)?;
 
     // Claim the armed fault iff this request is a matching pack stream.
     let fault = match is_pack_request(&req) {
@@ -253,7 +268,8 @@ fn relay(
                 use std::io::Write;
                 up.write_all(&req.body[..k])?;
                 up.flush().ok();
-                return Ok(()); // drop both connections
+                // Drop both connections (ends the keep-alive loop).
+                anyhow::bail!("upload kill fault fired");
             }
             let mut faulted = req.clone();
             if let Some((offset, len)) = spec.duplicate_at {
@@ -271,7 +287,7 @@ fn relay(
             if let Some(k) = spec.kill_after {
                 let k = (k as usize).min(resp.body.len());
                 http::write_response_head(
-                    &mut client,
+                    client,
                     resp.status,
                     &resp.headers,
                     resp.body.len() as u64,
@@ -279,15 +295,16 @@ fn relay(
                 use std::io::Write;
                 client.write_all(&resp.body[..k])?;
                 client.flush().ok();
-                return Ok(());
+                // Drop both connections (ends the keep-alive loop).
+                anyhow::bail!("download kill fault fired");
             }
             let mut faulted = resp.clone();
             if let Some((offset, len)) = spec.duplicate_at {
                 faulted.body = duplicate_body(&resp.body, offset, len);
             }
-            http::write_response(&mut client, &faulted)?;
+            http::write_response(client, &faulted)?;
         }
-        _ => http::write_response(&mut client, &resp)?,
+        _ => http::write_response(client, &resp)?,
     }
     Ok(())
 }

@@ -5,37 +5,98 @@
 //!
 //! * `POST /objects/batch` — one have/want negotiation round trip.
 //! * `POST /packs` + `GET /packs/<id>` — the server assembles (and
-//!   caches) a pack for a want set; the client downloads it, resuming
-//!   an interrupted body with `Range: bytes=<k>-` from a partial file
-//!   persisted under the staging directory.
+//!   caches) a pack for a want set; the client **streams** the body
+//!   straight into a partial file under the staging directory, so an
+//!   interrupted download resumes with `Range: bytes=<k>-` and a pack
+//!   is never RAM-resident on the receive path.
 //! * `HEAD`/`PUT /packs/<id>` — upload with `Content-Range` resume:
-//!   the server persists whatever body prefix arrives before a
+//!   the client spills the pack to a file and streams it out in fixed
+//!   chunks; the server persists whatever body prefix arrives before a
 //!   connection dies, `HEAD` reports how much it holds, and the retry
 //!   sends only the tail.
 //! * `GET`/`PUT /objects/<oid>` — per-object fallback.
 //!
-//! Every pack is verified twice before anything is trusted: its id
-//! must equal its trailing sha256, and `unpack_into` re-hashes every
-//! object. A resumed splice that mixes a stale prefix with a rebuilt
-//! tail therefore cannot corrupt a store — it fails verification and
-//! the client falls back to one clean full download.
+//! All requests ride one pooled keep-alive connection per endpoint
+//! (see [`HttpClient`]): a push or fetch that negotiates, probes, and
+//! moves a pack pays a single TCP connect, observable via
+//! [`HttpRemote::connections_opened`].
+//!
+//! Every pack is verified before anything is admitted: the streamed
+//! file must pass [`pack::verify_pack_file`] (structure + trailing
+//! sha256) and match the id the server advertised, and `unpack_file`
+//! re-hashes every object. A resumed splice that mixes a stale prefix
+//! with a rebuilt tail therefore cannot corrupt a store — it fails
+//! verification and the client falls back to one clean full download.
 
 use super::batch::{self, BatchResponse};
 use super::pack::{self, PackStats};
+use super::store::LfsStore;
 use super::transport::{RemoteTransport, WireReport};
 use crate::gitcore::object::Oid;
 use crate::gitcore::remote::{parse_json, parse_oid_arr, want_body};
-use crate::util::http;
+use crate::util::http::{HttpClient, Request};
+use crate::util::tmp::{self, TempDir};
 use anyhow::{bail, Context, Result};
+use std::io::{Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Age past which orphaned `.tmp*` files (claims and spills left by
+/// crashed transfers — their names are unique per process+call, so no
+/// retry ever reuses them) are reaped from a staging directory. Live
+/// transfers are safe: their claims are far younger than this.
+const STAGING_TMP_TTL: Duration = Duration::from_secs(60 * 60);
+
+/// Admit a verified claim file into `dest`, removing it on success.
+/// If admission fails (disk full, a record failing its oid re-hash),
+/// the claim is handed back to the shared resume slot instead of
+/// stranded under its unique name: the downloaded bytes are good, and
+/// the retry must not re-download a multi-GB pack because a local
+/// store write failed.
+fn admit_or_keep(
+    claim: &Path,
+    shared: &Path,
+    dest: &LfsStore,
+    threads: usize,
+    check: &pack::PackCheck,
+) -> Result<PackStats> {
+    match pack::unpack_verified(claim, dest, threads, check) {
+        Ok(stats) => {
+            let _ = std::fs::remove_file(claim);
+            Ok(stats)
+        }
+        Err(e) => {
+            let _ = std::fs::rename(claim, shared);
+            Err(e)
+        }
+    }
+}
+
+/// Drop the first `n` bytes of a file in place (rewrite via a unique
+/// temp + rename). Used when a server ignored our byte-range request
+/// and sent the whole body after a stale prefix.
+fn strip_file_prefix(path: &Path, n: u64) -> Result<()> {
+    let mut src = std::fs::File::open(path).context("reopening partial pack")?;
+    src.seek(SeekFrom::Start(n)).context("seeking partial pack")?;
+    let tmp_path = tmp::unique_sibling(path);
+    let mut dst = std::fs::File::create(&tmp_path).context("rewriting partial pack")?;
+    std::io::copy(&mut src, &mut dst).context("rewriting partial pack")?;
+    dst.flush().context("rewriting partial pack")?;
+    drop(dst);
+    std::fs::rename(&tmp_path, path).context("installing rewritten partial pack")?;
+    Ok(())
+}
 
 /// Client handle for an `http://` LFS remote.
 #[derive(Debug, Clone)]
 pub struct HttpRemote {
-    authority: String,
-    url: String,
-    /// Partial-download staging dir (resume persistence); `None`
-    /// disables persistence but not transfers.
+    client: Arc<HttpClient>,
+    /// Staging root (usually a repository's `.theta` dir): partial
+    /// downloads persist under `lfs/incoming/`, outgoing pack spills
+    /// under `lfs/outgoing/`. `None` stages in throwaway temp dirs
+    /// (transfers still stream and resume within a call, but nothing
+    /// survives the process).
     staging: Option<PathBuf>,
 }
 
@@ -45,197 +106,79 @@ impl HttpRemote {
     /// even across process restarts. URLs with a path component are
     /// rejected (the wire protocol is rooted at `/`).
     pub fn open(url: &str, staging: Option<&Path>) -> Result<HttpRemote> {
-        http::require_rootless(url)?;
         Ok(HttpRemote {
-            authority: http::authority_of(url)?,
-            url: url.trim_end_matches('/').to_string(),
-            staging: staging.map(|p| p.join("lfs/incoming")),
+            client: Arc::new(HttpClient::open(url)?),
+            staging: staging.map(Path::to_path_buf),
         })
     }
 
     /// The endpoint URL this remote talks to.
     pub fn url(&self) -> &str {
-        &self.url
+        self.client.url()
     }
 
-    /// Send a request and require a complete response body.
-    fn send(&self, req: http::Request) -> Result<http::Response> {
-        let resp = http::roundtrip(&self.authority, &req)?;
-        if !resp.complete {
-            bail!("connection to {} interrupted mid-response", self.url);
-        }
-        Ok(resp)
+    /// TCP connections opened so far (all clones of this remote share
+    /// one pool). With keep-alive this stays far below the request
+    /// count — the transfer ablation locks it.
+    pub fn connections_opened(&self) -> u64 {
+        self.client.connections_opened()
     }
 
-    fn partial_path(&self, id: &str) -> Option<PathBuf> {
-        self.staging.as_ref().map(|d| d.join(id))
-    }
-
-    /// Persist a partial pack body for a later byte-range resume
-    /// (write-then-rename with a unique temp name, so a crash never
-    /// leaves a torn file and concurrent writers never share a path).
-    fn persist_partial(&self, id: &str, bytes: &[u8]) -> Result<()> {
-        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-        let path = match self.partial_path(id) {
-            Some(p) => p,
-            None => return Ok(()),
-        };
-        std::fs::create_dir_all(path.parent().unwrap())?;
-        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let tmp = path.with_extension(format!("tmp{}-{seq}", std::process::id()));
-        std::fs::write(&tmp, bytes)?;
-        std::fs::rename(&tmp, &path).context("persisting partial pack")
-    }
-
-    fn drop_partial(&self, id: &str) {
-        if let Some(path) = self.partial_path(id) {
-            let _ = std::fs::remove_file(path);
-        }
-    }
-}
-
-impl RemoteTransport for HttpRemote {
-    fn describe(&self) -> String {
-        self.url.clone()
-    }
-
-    fn batch(&self, want: &[Oid]) -> Result<BatchResponse> {
-        batch::record(|s| s.negotiations += 1);
-        let req = http::Request::new("POST", "/objects/batch").body(want_body(want));
-        let resp = self.send(req)?;
-        if resp.status != 200 {
-            bail!("{}: POST /objects/batch -> {}", self.url, resp.status);
-        }
-        let json = parse_json(&resp)?;
-        let present = parse_oid_arr(&json, "present")?;
-        let missing = parse_oid_arr(&json, "missing")?;
-        let present_sizes: Vec<u64> = json
-            .get("sizes")
-            .and_then(|v| v.as_arr())
-            .map(|a| a.iter().map(|v| v.as_u64().unwrap_or(0)).collect())
-            .unwrap_or_default();
-        Ok(BatchResponse {
-            present,
-            present_sizes,
-            missing,
-        })
-    }
-
-    fn fetch_pack_blob(&self, oids: &[Oid], _threads: usize) -> Result<(Vec<u8>, WireReport)> {
-        // The server assembles (or reuses) the pack and reports its
-        // identity + size; identical want sets yield identical ids, so
-        // a retry after an interruption re-addresses the same pack.
-        let resp = self.send(http::Request::new("POST", "/packs").body(want_body(oids)))?;
-        if resp.status != 200 {
-            bail!(
-                "{}: POST /packs -> {}: {}",
-                self.url,
-                resp.status,
-                String::from_utf8_lossy(&resp.body)
-            );
-        }
-        let json = parse_json(&resp)?;
-        let id = json
-            .get("id")
-            .and_then(|v| v.as_str())
-            .context("/packs response missing id")?
-            .to_string();
-        let total = json
-            .get("size")
-            .and_then(|v| v.as_u64())
-            .context("/packs response missing size")?;
-
-        let mut prefix: Vec<u8> = Vec::new();
-        if let Some(path) = self.partial_path(&id) {
-            if let Ok(bytes) = std::fs::read(&path) {
-                if bytes.len() as u64 <= total {
-                    prefix = bytes;
-                } else {
-                    self.drop_partial(&id);
-                }
+    /// Resolve a staging file path (`<staging>/<subdir>/<name>`,
+    /// directory created) or — with no staging configured — a path in
+    /// a throwaway temp dir whose guard the caller must keep alive.
+    /// Shared by the download partials (`lfs/incoming`) and the upload
+    /// spills (`lfs/outgoing`).
+    fn staging_path(&self, subdir: &str, name: &str) -> Result<(PathBuf, Option<TempDir>)> {
+        match &self.staging {
+            Some(base) => {
+                let dir = base.join(subdir);
+                std::fs::create_dir_all(&dir)?;
+                // Opportunistically reap claim/spill litter from
+                // crashed transfers (unique names: no retry reuses it).
+                tmp::reap_older_than(&dir, STAGING_TMP_TTL, |n| n.contains(".tmp"));
+                Ok((dir.join(name), None))
+            }
+            None => {
+                let td = TempDir::new("http-staging")?;
+                Ok((td.join(name), Some(td)))
             }
         }
-        // A previous run may have persisted the complete pack just
-        // before dying; verify and use it without touching the wire. A
-        // full-length partial that fails verification is dropped here —
-        // resuming from it would just ask the server for an empty tail.
-        if prefix.len() as u64 == total {
-            if pack::pack_id(&prefix) == id {
-                self.drop_partial(&id);
-                let report = WireReport {
-                    wire_bytes: 0,
-                    resumed_bytes: total,
-                };
-                return Ok((prefix, report));
-            }
-            self.drop_partial(&id);
-            prefix.clear();
-        }
-
-        let mut attempt_full = false;
-        loop {
-            let offset = if attempt_full { 0 } else { prefix.len() as u64 };
-            let mut req = http::Request::new("GET", &format!("/packs/{id}"));
-            if offset > 0 {
-                req = req.header("range", &format!("bytes={offset}-"));
-            }
-            let resp = http::roundtrip(&self.authority, &req)?;
-            match resp.status {
-                200 | 206 => {}
-                404 => bail!("{} no longer has pack {id}", self.url),
-                s => bail!("{}: GET /packs/{id} -> {s}", self.url),
-            }
-            let mut blob = if offset > 0 { prefix.clone() } else { Vec::new() };
-            blob.extend_from_slice(&resp.body);
-            if !resp.complete {
-                // Mid-flight cut: keep every byte that made it across,
-                // so the retry re-requests only the missing tail.
-                self.persist_partial(&id, &blob)?;
-                bail!(
-                    "pack download from {} interrupted after {} of {total} bytes{}",
-                    self.url,
-                    blob.len(),
-                    if self.staging.is_some() {
-                        " (partial persisted; a retry resumes from it)"
-                    } else {
-                        ""
-                    }
-                );
-            }
-            if blob.len() as u64 == total && pack::pack_id(&blob) == id {
-                self.drop_partial(&id);
-                // The server-side pack cache is deliberately left in
-                // place: a concurrent clone of the same tip addresses
-                // the same content-hashed id, and deleting it here
-                // would 404 that transfer mid-flight. Stale outgoing
-                // packs are the server's to reap (ROADMAP).
-                let report = WireReport {
-                    wire_bytes: resp.body.len() as u64,
-                    resumed_bytes: offset,
-                };
-                return Ok((blob, report));
-            }
-            // Verification failed: a stale partial spliced onto a
-            // rebuilt pack, or in-flight corruption. Drop local state
-            // and retry exactly once from scratch.
-            self.drop_partial(&id);
-            if attempt_full || offset == 0 {
-                bail!("pack {id} from {} failed integrity verification", self.url);
-            }
-            attempt_full = true;
-        }
     }
 
-    fn send_pack_blob(
+    /// Stream one download attempt into `partial` (append mode) and
+    /// return the server status plus (streamed bytes, complete).
+    fn stream_pack_body(
         &self,
-        pack_id: &str,
-        pack: &[u8],
-        _threads: usize,
-    ) -> Result<(PackStats, WireReport)> {
-        let total = pack.len() as u64;
+        id: &str,
+        offset: u64,
+        partial: &Path,
+    ) -> Result<(u16, u64, bool)> {
+        let mut req = Request::new("GET", &format!("/packs/{id}"));
+        if offset > 0 {
+            req = req.header("range", &format!("bytes={offset}-"));
+        }
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(partial)
+            .context("opening partial pack file")?;
+        let resp = self.client.fetch_to_sink(&req, &[200, 206], &mut file)?;
+        file.flush().context("flushing partial pack file")?;
+        match resp.status {
+            200 | 206 => Ok((resp.status, resp.streamed, resp.complete)),
+            404 => bail!("{} no longer has pack {id}", self.url()),
+            s => bail!("{}: GET /packs/{id} -> {s}", self.url()),
+        }
+    }
+
+    /// Upload a spilled pack file with `Content-Range` resume.
+    fn send_spilled(&self, built: &pack::BuiltPack, spill: &Path) -> Result<(PackStats, WireReport)> {
+        let total = built.len;
+        let id = &built.id;
         // How much of this pack did an earlier, interrupted attempt
         // already deliver? The server persists partial bodies.
-        let head = self.send(http::Request::new("HEAD", &format!("/packs/{pack_id}")))?;
+        let head = self.client.send(&Request::new("HEAD", &format!("/packs/{id}")))?;
         let mut offset = head
             .get_header("x-received")
             .and_then(|v| v.parse::<u64>().ok())
@@ -243,12 +186,12 @@ impl RemoteTransport for HttpRemote {
         if offset > total {
             // A foreign partial under our id (should be impossible —
             // ids are content hashes); clear it and start over.
-            let _ = http::roundtrip(
-                &self.authority,
-                &http::Request::new("DELETE", &format!("/packs/{pack_id}")),
-            );
+            let _ = self
+                .client
+                .roundtrip(&Request::new("DELETE", &format!("/packs/{id}")));
             offset = 0;
         }
+        let mut file = std::fs::File::open(spill).context("opening spilled pack")?;
         for _attempt in 0..3 {
             let range = if offset == total {
                 format!("bytes */{total}")
@@ -256,20 +199,22 @@ impl RemoteTransport for HttpRemote {
                 format!("bytes {offset}-{}/{total}", total - 1)
             };
             let wire = total - offset;
-            let req = http::Request::new("PUT", &format!("/packs/{pack_id}"))
-                .header("content-range", &range)
-                .body(pack[offset as usize..].to_vec());
-            let resp = http::roundtrip(&self.authority, &req).with_context(|| {
-                format!(
-                    "pack upload to {} interrupted ({} keeps the partial; a retry resumes)",
-                    self.url, self.url
-                )
-            })?;
+            let headers = vec![("content-range".to_string(), range)];
+            let resp = self
+                .client
+                .send_file("PUT", &format!("/packs/{id}"), &headers, &mut file, offset, wire)
+                .with_context(|| {
+                    format!(
+                        "pack upload to {} interrupted ({} keeps the partial; a retry resumes)",
+                        self.url(),
+                        self.url()
+                    )
+                })?;
             if !resp.complete {
                 bail!(
                     "pack upload to {} interrupted mid-response; a retry resumes from the \
                      server-side partial",
-                    self.url
+                    self.url()
                 );
             }
             match resp.status {
@@ -296,37 +241,211 @@ impl RemoteTransport for HttpRemote {
                         .min(total);
                 }
                 422 => bail!(
-                    "{} rejected pack {pack_id}: {}",
-                    self.url,
+                    "{} rejected pack {id}: {}",
+                    self.url(),
                     String::from_utf8_lossy(&resp.body)
                 ),
-                s => bail!("{}: PUT /packs/{pack_id} -> {s}", self.url),
+                s => bail!("{}: PUT /packs/{id} -> {s}", self.url()),
             }
         }
-        bail!("pack upload to {} kept conflicting on its resume offset", self.url)
+        bail!(
+            "pack upload to {} kept conflicting on its resume offset",
+            self.url()
+        )
+    }
+}
+
+impl RemoteTransport for HttpRemote {
+    fn describe(&self) -> String {
+        self.url().to_string()
+    }
+
+    fn batch(&self, want: &[Oid]) -> Result<BatchResponse> {
+        batch::record(|s| s.negotiations += 1);
+        let req = Request::new("POST", "/objects/batch").body(want_body(want));
+        let resp = self.client.send(&req)?;
+        if resp.status != 200 {
+            bail!("{}: POST /objects/batch -> {}", self.url(), resp.status);
+        }
+        let json = parse_json(&resp)?;
+        let present = parse_oid_arr(&json, "present")?;
+        let missing = parse_oid_arr(&json, "missing")?;
+        let present_sizes: Vec<u64> = json
+            .get("sizes")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().map(|v| v.as_u64().unwrap_or(0)).collect())
+            .unwrap_or_default();
+        Ok(BatchResponse {
+            present,
+            present_sizes,
+            missing,
+        })
+    }
+
+    fn fetch_pack_into(
+        &self,
+        oids: &[Oid],
+        dest: &LfsStore,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        // The server assembles (or reuses) the pack and reports its
+        // identity + size; identical want sets yield identical ids, so
+        // a retry after an interruption re-addresses the same pack.
+        let resp = self
+            .client
+            .send(&Request::new("POST", "/packs").body(want_body(oids)))?;
+        if resp.status != 200 {
+            bail!(
+                "{}: POST /packs -> {}: {}",
+                self.url(),
+                resp.status,
+                String::from_utf8_lossy(&resp.body)
+            );
+        }
+        let json = parse_json(&resp)?;
+        let id = json
+            .get("id")
+            .and_then(|v| v.as_str())
+            .context("/packs response missing id")?
+            .to_string();
+        let total = json
+            .get("size")
+            .and_then(|v| v.as_u64())
+            .context("/packs response missing size")?;
+
+        // Claim any persisted resume state by *renaming* the shared
+        // `lfs/incoming/<id>` file to a path unique to this call:
+        // concurrent fetches of the same pack id must never
+        // append-interleave into one file. Exactly one claimant wins
+        // the rename; losers simply start from byte zero.
+        let (shared, _tmp_guard) = self.staging_path("lfs/incoming", &id)?;
+        let claim = tmp::unique_sibling(&shared);
+        let _ = std::fs::rename(&shared, &claim);
+        let mut attempt_full = false;
+        loop {
+            if attempt_full {
+                let _ = std::fs::remove_file(&claim);
+            }
+            let mut offset = std::fs::metadata(&claim).map(|m| m.len()).unwrap_or(0);
+            if offset > total {
+                let _ = std::fs::remove_file(&claim);
+                offset = 0;
+            }
+            if offset == total {
+                // A previous run persisted the complete pack just
+                // before dying; verify and use it without touching the
+                // wire. A full-length partial that fails verification
+                // is dropped — resuming from it would just ask the
+                // server for an empty tail.
+                match pack::verify_pack_file(&claim) {
+                    Ok(check) if check.id == id => {
+                        let stats = admit_or_keep(&claim, &shared, dest, threads, &check)?;
+                        let report = WireReport {
+                            wire_bytes: 0,
+                            resumed_bytes: total,
+                        };
+                        return Ok((stats, report));
+                    }
+                    _ => {}
+                }
+                let _ = std::fs::remove_file(&claim);
+                offset = 0;
+            }
+
+            let (status, streamed, complete) = self.stream_pack_body(&id, offset, &claim)?;
+            if status == 200 && offset > 0 {
+                // The server ignored our byte range and sent the pack
+                // from the top; drop our stale prefix so the file is a
+                // clean prefix of the full body (resume math included),
+                // and stop claiming resume savings we didn't get.
+                strip_file_prefix(&claim, offset)?;
+                offset = 0;
+            }
+            if !complete {
+                // Mid-flight cut: every byte that made it across is in
+                // the claim file; hand it back to the shared resume
+                // slot so a retry — this process or the next — asks
+                // only for the missing tail. (Without a staging dir
+                // the slot dies with its temp dir.)
+                let _ = std::fs::rename(&claim, &shared);
+                bail!(
+                    "pack download from {} interrupted after {} of {total} bytes{}",
+                    self.url(),
+                    offset + streamed,
+                    if self.staging.is_some() {
+                        " (partial persisted; a retry resumes from it)"
+                    } else {
+                        ""
+                    }
+                );
+            }
+            let have = std::fs::metadata(&claim).map(|m| m.len()).unwrap_or(0);
+            if have == total {
+                if let Ok(check) = pack::verify_pack_file(&claim) {
+                    if check.id == id {
+                        let stats = admit_or_keep(&claim, &shared, dest, threads, &check)?;
+                        // The server-side pack cache is deliberately left in
+                        // place: a concurrent clone of the same tip addresses
+                        // the same content-hashed id, and deleting it here
+                        // would 404 that transfer mid-flight. Stale outgoing
+                        // packs are reaped by the server's age-based gc.
+                        let report = WireReport {
+                            wire_bytes: streamed,
+                            resumed_bytes: offset,
+                        };
+                        return Ok((stats, report));
+                    }
+                }
+            }
+            // Verification failed: a stale partial spliced onto a
+            // rebuilt pack, or in-flight corruption. Drop local state
+            // and retry exactly once from scratch.
+            let _ = std::fs::remove_file(&claim);
+            if attempt_full || offset == 0 {
+                bail!("pack {id} from {} failed integrity verification", self.url());
+            }
+            attempt_full = true;
+        }
+    }
+
+    fn send_pack_from(
+        &self,
+        src: &LfsStore,
+        oids: &[Oid],
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        // Spill the pack to disk (streaming build), then stream the
+        // file out; the pack bytes are never RAM-resident.
+        let (spill_base, _tmp_guard) = self.staging_path("lfs/outgoing", "pack")?;
+        let spill = tmp::unique_sibling(&spill_base);
+        let built = pack::write_pack_file(src, oids, threads, &spill)?;
+        let result = self.send_spilled(&built, &spill);
+        let _ = std::fs::remove_file(&spill);
+        result
     }
 
     fn get_object(&self, oid: &Oid) -> Result<Vec<u8>> {
-        let resp = self.send(http::Request::new("GET", &format!("/objects/{}", oid.to_hex())))?;
+        let resp = self
+            .client
+            .send(&Request::new("GET", &format!("/objects/{}", oid.to_hex())))?;
         if resp.status == 404 {
-            bail!("lfs object {} not found on {}", oid.short(), self.url);
+            bail!("lfs object {} not found on {}", oid.short(), self.url());
         }
         if resp.status != 200 {
-            bail!("{}: GET /objects/{} -> {}", self.url, oid.short(), resp.status);
+            bail!("{}: GET /objects/{} -> {}", self.url(), oid.short(), resp.status);
         }
         if Oid::of_bytes(&resp.body) != *oid {
-            bail!("lfs object {} from {} failed its content hash", oid.short(), self.url);
+            bail!("lfs object {} from {} failed its content hash", oid.short(), self.url());
         }
         Ok(resp.body)
     }
 
     fn put_object(&self, bytes: &[u8]) -> Result<()> {
         let oid = Oid::of_bytes(bytes);
-        let req =
-            http::Request::new("PUT", &format!("/objects/{}", oid.to_hex())).body(bytes.to_vec());
-        let resp = self.send(req)?;
+        let req = Request::new("PUT", &format!("/objects/{}", oid.to_hex())).body(bytes.to_vec());
+        let resp = self.client.send(&req)?;
         if resp.status != 200 {
-            bail!("{}: PUT /objects/{} -> {}", self.url, oid.short(), resp.status);
+            bail!("{}: PUT /objects/{} -> {}", self.url(), oid.short(), resp.status);
         }
         Ok(())
     }

@@ -6,14 +6,18 @@
 //! for pointers, a pre-push hook that syncs referenced objects to an
 //! LFS remote, and smudge-time download from the remote.
 //!
-//! Transfer is batched and transport-abstracted: [`batch`] negotiates
-//! the full have/want set in one round trip and [`pack`] moves every
-//! missing object as a single integrity-checked packfile over a
-//! [`transport::RemoteTransport`] — a directory ([`remote`]) or an
-//! HTTP server ([`http`] client / [`server`]) with byte-range resume
-//! of interrupted transfers. [`faults`] is the failure-injection proxy
-//! that proves the resume semantics (see `docs/ARCHITECTURE.md`
-//! "Remotes" for the data flow and wire protocol).
+//! Transfer is batched, transport-abstracted, and **streaming**:
+//! [`batch`] negotiates the full have/want set in one round trip and
+//! [`pack`] moves every missing object as a single integrity-checked
+//! packfile over a [`transport::RemoteTransport`] — a directory
+//! ([`remote`]) or an HTTP server ([`http`] client / [`server`]) with
+//! byte-range resume of interrupted transfers. Packs spill to disk and
+//! move in bounded chunks over pooled keep-alive connections, so peak
+//! memory scales with the largest object, not the pack, and a
+//! multi-request push or fetch pays one TCP connect. [`faults`] is the
+//! failure-injection proxy that proves the resume semantics (see
+//! `docs/ARCHITECTURE.md` "Remotes" for the data flow and wire
+//! protocol).
 //!
 //! It is used two ways in this repo:
 //! 1. as Git-Theta's parameter-group storage backend (paper §3.3
@@ -35,7 +39,11 @@ pub mod transport;
 pub use batch::{fetch_pack, push_pack, BatchResponse, Prefetcher, TransferStats, TransferSummary};
 pub use filter::{register_lfs, LfsFilter, LfsHooks};
 pub use http::HttpRemote;
-pub use pack::{build_pack, pack_id, pack_index, unpack_into, PackStats};
+pub use pack::{
+    build_pack, pack_id, pack_index, unpack_file, unpack_into, unpack_verified, verify_pack_file,
+    write_pack_file, BuiltPack, PackCheck, PackStats, PackWriter,
+};
+pub use server::gc_stale_packs;
 pub use pointer::Pointer;
 pub use remote::{sync_to_remote, DirRemote, LfsRemote};
 pub use server::LfsServer;

@@ -22,13 +22,25 @@
 //! additionally verified against its oid (sha256 of the raw bytes) on
 //! unpack, so a pack can never silently install wrong content.
 
+//! **Streaming:** packs are *pipelines*, not blobs. [`PackWriter`]
+//! encodes objects incrementally into any `io::Write` (compress → hash
+//! → index as it goes), so a pack spills to a file or straight into a
+//! socket without ever being RAM-materialized; [`verify_pack_file`] +
+//! [`unpack_file`] check and admit a pack from disk reading one record
+//! window at a time. Peak heap is O(largest object + window), not
+//! O(pack) — the property the transfer ablation's `TrackingAlloc`
+//! counter locks. The buffered [`build_pack`] / [`unpack_into`] remain
+//! as conveniences over the same code paths and produce byte-identical
+//! packs.
+
 use super::store::LfsStore;
 use crate::gitcore::object::Oid;
 use crate::util::par;
 use anyhow::{bail, Context, Result};
 use sha2::{Digest, Sha256};
 use std::cell::RefCell;
-use std::io::Read;
+use std::io::{BufReader, Read, Write};
+use std::path::Path;
 
 /// First four bytes of every pack.
 pub const PACK_MAGIC: &[u8; 4] = b"THP1";
@@ -59,12 +71,136 @@ pub struct PackStats {
     pub packed_bytes: u64,
 }
 
-/// Assemble a pack holding `oids`, read from `store`.
+/// Raw-byte window for the streaming encode/decode batches: how many
+/// cumulative payload bytes may be in flight between the sequential
+/// framing and the parallel compress/admit workers. Bounds peak heap
+/// together with the largest single object.
+const STREAM_WINDOW_BYTES: u64 = 32 << 20;
+
+/// Streaming pack encoder: objects in, framed pack bytes out, with the
+/// trailing index and checksum accumulated on the fly.
+///
+/// The writer never holds more than the object currently being framed:
+/// the pack itself flows straight into `out` (a spill file, a socket,
+/// or a `Vec` for the buffered [`build_pack`] path). The object count
+/// is declared up front because the header carries it; [`PackWriter::finish`]
+/// fails if the promise is broken.
+pub struct PackWriter<W: Write> {
+    out: W,
+    hasher: Sha256,
+    pos: u64,
+    index: Vec<(Oid, u64)>,
+    declared: u64,
+    raw_bytes: u64,
+}
+
+impl<W: Write> PackWriter<W> {
+    /// Start a pack that will carry exactly `objects` records.
+    pub fn new(out: W, objects: u64) -> Result<PackWriter<W>> {
+        let mut w = PackWriter {
+            out,
+            hasher: Sha256::new(),
+            pos: 0,
+            index: Vec::with_capacity(objects.min(1 << 20) as usize),
+            declared: objects,
+            raw_bytes: 0,
+        };
+        let mut header = [0u8; HEADER_LEN];
+        header[..4].copy_from_slice(PACK_MAGIC);
+        header[4..8].copy_from_slice(&PACK_VERSION.to_le_bytes());
+        header[8..16].copy_from_slice(&objects.to_le_bytes());
+        w.emit(&header)?;
+        Ok(w)
+    }
+
+    /// Write bytes through the running checksum.
+    fn emit(&mut self, bytes: &[u8]) -> Result<()> {
+        self.hasher.update(bytes);
+        self.out.write_all(bytes).context("writing pack stream")?;
+        self.pos += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Append one record whose payload the caller already compressed
+    /// (the parallel-compression fan-in path).
+    pub fn add_compressed(&mut self, oid: Oid, raw_len: u64, comp: &[u8]) -> Result<()> {
+        if self.index.len() as u64 >= self.declared {
+            bail!("pack writer: more objects added than declared");
+        }
+        if raw_len > MAX_OBJECT_BYTES {
+            bail!("object {} exceeds the pack format's size limit", oid.short());
+        }
+        self.index.push((oid, self.pos));
+        self.emit(&oid.0)?;
+        self.emit(&raw_len.to_le_bytes())?;
+        self.emit(&(comp.len() as u64).to_le_bytes())?;
+        self.emit(comp)?;
+        self.raw_bytes += raw_len;
+        Ok(())
+    }
+
+    /// Compress and append one record.
+    pub fn add_object(&mut self, oid: Oid, raw: &[u8]) -> Result<()> {
+        let comp = zstd::bulk::compress(raw, PACK_ZSTD_LEVEL).context("pack compress")?;
+        self.add_compressed(oid, raw.len() as u64, &comp)
+    }
+
+    /// Write the index + trailer and flush. Returns the finished
+    /// pack's summary (its id is the trailing sha256, as always).
+    pub fn finish(mut self) -> Result<BuiltPack> {
+        if self.index.len() as u64 != self.declared {
+            bail!(
+                "pack writer: {} objects declared but {} added",
+                self.declared,
+                self.index.len()
+            );
+        }
+        let index_offset = self.pos;
+        // Move the index out so emit (&mut self) can run inside the loop.
+        let index = std::mem::take(&mut self.index);
+        for (oid, off) in &index {
+            self.emit(&oid.0)?;
+            self.emit(&off.to_le_bytes())?;
+        }
+        self.emit(&index_offset.to_le_bytes())?;
+        let digest: [u8; 32] = self.hasher.finalize().into();
+        self.out.write_all(&digest).context("writing pack trailer")?;
+        self.out.flush().context("flushing pack stream")?;
+        Ok(BuiltPack {
+            id: crate::util::hex::encode(&digest),
+            len: self.pos + 32,
+            objects: index.len(),
+            raw_bytes: self.raw_bytes,
+        })
+    }
+}
+
+/// Summary of a streamed pack build.
+#[derive(Debug, Clone)]
+pub struct BuiltPack {
+    /// The pack's identity (hex of the trailing sha256).
+    pub id: String,
+    /// Total pack bytes written.
+    pub len: u64,
+    /// Records carried.
+    pub objects: usize,
+    /// Total uncompressed payload bytes.
+    pub raw_bytes: u64,
+}
+
+/// Stream a pack holding `oids` (read from `store`) into `out`.
 ///
 /// Duplicate oids are packed once. Object payloads are compressed in
-/// parallel across `threads` workers; the surrounding framing is
-/// written sequentially so offsets stay deterministic.
-pub fn build_pack(store: &LfsStore, oids: &[Oid], threads: usize) -> Result<Vec<u8>> {
+/// parallel across `threads` workers in bounded windows; the framing
+/// is written sequentially so the pack is deterministic (and therefore
+/// byte-identical to [`build_pack`] of the same want set). Peak heap
+/// is O(window), independent of the pack size.
+pub fn write_pack_to<W: Write>(
+    store: &LfsStore,
+    oids: &[Oid],
+    threads: usize,
+    out: W,
+) -> Result<BuiltPack> {
     let mut unique = oids.to_vec();
     unique.sort();
     unique.dedup();
@@ -75,47 +211,71 @@ pub fn build_pack(store: &LfsStore, oids: &[Oid], threads: usize) -> Result<Vec<
         // object from the pack-assembly fan-in.
         static READ_SCRATCH: RefCell<Vec<u8>> = RefCell::new(Vec::new());
     }
-    let blobs = par::try_par_map(&unique, threads, |_, oid| -> Result<(u64, Vec<u8>)> {
-        READ_SCRATCH.with(|buf| {
-            let mut raw = buf.borrow_mut();
-            store
-                .get_to(oid, &mut raw)
-                .with_context(|| format!("packing object {}", oid.short()))?;
-            if raw.len() as u64 > MAX_OBJECT_BYTES {
-                bail!("object {} exceeds the pack format's size limit", oid.short());
-            }
-            let comp = zstd::bulk::compress(&raw, PACK_ZSTD_LEVEL).context("pack compress")?;
-            Ok((raw.len() as u64, comp))
-        })
-    })?;
-
-    let body: usize = blobs
-        .iter()
-        .map(|(_, c)| RECORD_HEADER_LEN + c.len())
-        .sum();
-    let mut out =
-        Vec::with_capacity(HEADER_LEN + body + unique.len() * INDEX_ENTRY_LEN + TRAILER_LEN);
-    out.extend_from_slice(PACK_MAGIC);
-    out.extend_from_slice(&PACK_VERSION.to_le_bytes());
-    out.extend_from_slice(&(unique.len() as u64).to_le_bytes());
-
-    let mut offsets = Vec::with_capacity(unique.len());
-    for (oid, (raw_len, comp)) in unique.iter().zip(&blobs) {
-        offsets.push(out.len() as u64);
-        out.extend_from_slice(&oid.0);
-        out.extend_from_slice(&raw_len.to_le_bytes());
-        out.extend_from_slice(&(comp.len() as u64).to_le_bytes());
-        out.extend_from_slice(comp);
+    let mut writer = PackWriter::new(out, unique.len() as u64)?;
+    // Window the compression fan-out: enough objects to keep `threads`
+    // workers busy, but bounded so a huge want set never materializes
+    // in RAM between compression and framing.
+    let window_objects = threads.max(1) * 4;
+    let mut start = 0usize;
+    while start < unique.len() {
+        let mut end = start;
+        let mut window_bytes = 0u64;
+        while end < unique.len()
+            && (end - start) < window_objects
+            && (end == start || window_bytes < STREAM_WINDOW_BYTES)
+        {
+            window_bytes += store.size_of(&unique[end]).unwrap_or(0);
+            end += 1;
+        }
+        let batch = &unique[start..end];
+        let blobs = par::try_par_map(batch, threads, |_, oid| -> Result<(u64, Vec<u8>)> {
+            READ_SCRATCH.with(|buf| {
+                let mut raw = buf.borrow_mut();
+                store
+                    .get_to(oid, &mut raw)
+                    .with_context(|| format!("packing object {}", oid.short()))?;
+                if raw.len() as u64 > MAX_OBJECT_BYTES {
+                    bail!("object {} exceeds the pack format's size limit", oid.short());
+                }
+                let comp = zstd::bulk::compress(&raw, PACK_ZSTD_LEVEL).context("pack compress")?;
+                Ok((raw.len() as u64, comp))
+            })
+        })?;
+        for (oid, (raw_len, comp)) in batch.iter().zip(&blobs) {
+            writer.add_compressed(*oid, *raw_len, comp)?;
+        }
+        start = end;
     }
+    writer.finish()
+}
 
-    let index_offset = out.len() as u64;
-    for (oid, off) in unique.iter().zip(&offsets) {
-        out.extend_from_slice(&oid.0);
-        out.extend_from_slice(&off.to_le_bytes());
+/// Stream a pack for `oids` into a fresh file at `path` (parent
+/// directories created). Returns the build summary; on error the
+/// partial file is removed.
+pub fn write_pack_file(
+    store: &LfsStore,
+    oids: &[Oid],
+    threads: usize,
+    path: &Path,
+) -> Result<BuiltPack> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
     }
-    out.extend_from_slice(&index_offset.to_le_bytes());
-    let digest: [u8; 32] = Sha256::digest(&out).into();
-    out.extend_from_slice(&digest);
+    let file = std::fs::File::create(path).context("creating pack spill file")?;
+    match write_pack_to(store, oids, threads, std::io::BufWriter::new(file)) {
+        Ok(built) => Ok(built),
+        Err(e) => {
+            let _ = std::fs::remove_file(path);
+            Err(e)
+        }
+    }
+}
+
+/// Assemble a pack holding `oids` in memory (buffered convenience over
+/// [`write_pack_to`]; byte-identical output).
+pub fn build_pack(store: &LfsStore, oids: &[Oid], threads: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    write_pack_to(store, oids, threads, &mut out)?;
     Ok(out)
 }
 
@@ -223,6 +383,34 @@ pub fn pack_index(pack: &[u8]) -> Result<Vec<(Oid, u64)>> {
         .collect()
 }
 
+/// Decompress, hash-verify, and store one record's payload. Shared by
+/// the buffered and the streaming admit paths so the safety argument
+/// (bomb guard, content-hash gate) lives in one place.
+fn admit_record(store: &LfsStore, oid: Oid, raw_len: u64, comp: &[u8]) -> Result<u64> {
+    if raw_len > MAX_OBJECT_BYTES {
+        bail!("pack object {} declares an implausible size", oid.short());
+    }
+    // Stream-decompress with a hard read limit: the output buffer
+    // grows with actual data (a crafted `raw_len` cannot force a
+    // giant up-front allocation) and a decompression bomb stops one
+    // byte past the declared size.
+    let mut raw = Vec::with_capacity((raw_len as usize).min(16 << 20));
+    let decoder = zstd::stream::Decoder::new(comp)
+        .with_context(|| format!("pack decompress of {}", oid.short()))?;
+    decoder
+        .take(raw_len + 1)
+        .read_to_end(&mut raw)
+        .with_context(|| format!("pack decompress of {}", oid.short()))?;
+    if raw.len() as u64 != raw_len {
+        bail!("pack object {} has wrong length", oid.short());
+    }
+    if Oid::of_bytes(&raw) != oid {
+        bail!("pack object {} failed its content hash", oid.short());
+    }
+    store.put(&raw)?;
+    Ok(raw_len)
+}
+
 /// Verify, decompress, and store every object in `pack` (store fan-in).
 ///
 /// Objects are admitted only after their raw bytes re-hash to the oid
@@ -235,33 +423,219 @@ pub fn unpack_into(store: &LfsStore, pack: &[u8], threads: usize) -> Result<Pack
         if record_oid != oid {
             bail!("pack index entry for {} points at a foreign record", oid.short());
         }
-        if raw_len > MAX_OBJECT_BYTES {
-            bail!("pack object {} declares an implausible size", oid.short());
-        }
-        // Stream-decompress with a hard read limit: the output buffer
-        // grows with actual data (a crafted `raw_len` cannot force a
-        // giant up-front allocation) and a decompression bomb stops one
-        // byte past the declared size.
-        let mut raw = Vec::with_capacity((raw_len as usize).min(16 << 20));
-        let decoder = zstd::stream::Decoder::new(comp)
-            .with_context(|| format!("pack decompress of {}", oid.short()))?;
-        decoder
-            .take(raw_len + 1)
-            .read_to_end(&mut raw)
-            .with_context(|| format!("pack decompress of {}", oid.short()))?;
-        if raw.len() as u64 != raw_len {
-            bail!("pack object {} has wrong length", oid.short());
-        }
-        if Oid::of_bytes(&raw) != oid {
-            bail!("pack object {} failed its content hash", oid.short());
-        }
-        store.put(&raw)?;
-        Ok(raw_len)
+        admit_record(store, oid, raw_len, comp)
     })?;
     Ok(PackStats {
         objects: sizes.len(),
         raw_bytes: sizes.iter().sum(),
         packed_bytes: pack.len() as u64,
+    })
+}
+
+/// A reader wrapper that feeds everything it reads (up to a hashing
+/// limit — the trailer digest must not hash itself) through a running
+/// sha256 while tracking the stream position.
+struct HashScan<R: Read> {
+    r: R,
+    hasher: Sha256,
+    pos: u64,
+    hash_limit: u64,
+}
+
+impl<R: Read> HashScan<R> {
+    fn read_exact(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.r.read_exact(buf).context("pack file truncated")?;
+        let remain = self.hash_limit.saturating_sub(self.pos);
+        let h = (remain.min(buf.len() as u64)) as usize;
+        self.hasher.update(&buf[..h]);
+        self.pos += buf.len() as u64;
+        Ok(())
+    }
+
+    /// Read-and-discard `n` bytes (they still feed the checksum).
+    fn skip(&mut self, mut n: u64) -> Result<()> {
+        let mut chunk = [0u8; 64 * 1024];
+        while n > 0 {
+            let want = n.min(chunk.len() as u64) as usize;
+            self.read_exact(&mut chunk[..want])?;
+            n -= want as u64;
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of a streaming pack-file verification.
+#[derive(Debug, Clone)]
+pub struct PackCheck {
+    /// The pack's identity (hex of the trailing sha256).
+    pub id: String,
+    /// File length in bytes.
+    pub len: u64,
+    /// Records the pack carries.
+    pub objects: u64,
+}
+
+/// Verify a pack **file** end to end — structure, index, and trailing
+/// checksum — in one streaming pass with O(1) memory (payloads are
+/// hashed and discarded, never decompressed). Nothing is admitted to
+/// any store; this is the gate the streaming receive path runs before
+/// [`unpack_file`] touches a store, so a corrupt pack admits nothing.
+pub fn verify_pack_file(path: &Path) -> Result<PackCheck> {
+    let len = std::fs::metadata(path).context("pack file missing")?.len();
+    if len < (HEADER_LEN + TRAILER_LEN) as u64 {
+        bail!("pack truncated ({len} bytes)");
+    }
+    let file = std::fs::File::open(path).context("opening pack file")?;
+    let mut scan = HashScan {
+        r: BufReader::with_capacity(64 * 1024, file),
+        hasher: Sha256::new(),
+        pos: 0,
+        hash_limit: len - 32,
+    };
+
+    let mut header = [0u8; HEADER_LEN];
+    scan.read_exact(&mut header)?;
+    if &header[..4] != PACK_MAGIC {
+        bail!("pack: bad magic");
+    }
+    let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if version != PACK_VERSION {
+        bail!("pack: unsupported version {version}");
+    }
+    let count = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let index_bytes = count
+        .checked_mul(INDEX_ENTRY_LEN as u64)
+        .filter(|&b| b <= len - (HEADER_LEN + TRAILER_LEN) as u64)
+        .with_context(|| "pack declares more objects than it can hold".to_string())?;
+    let index_offset = len - TRAILER_LEN as u64 - index_bytes;
+
+    // Walk the records region, hashing payloads without decompressing.
+    let mut records: Vec<(Oid, u64)> = Vec::with_capacity(count.min(1 << 20) as usize);
+    let mut rec_header = [0u8; RECORD_HEADER_LEN];
+    while scan.pos < index_offset {
+        if index_offset - scan.pos < RECORD_HEADER_LEN as u64 {
+            bail!("pack records overrun the index");
+        }
+        let off = scan.pos;
+        scan.read_exact(&mut rec_header)?;
+        let oid = Oid(rec_header[..32].try_into().unwrap());
+        let raw_len = u64::from_le_bytes(rec_header[32..40].try_into().unwrap());
+        let comp_len = u64::from_le_bytes(rec_header[40..48].try_into().unwrap());
+        if raw_len > MAX_OBJECT_BYTES {
+            bail!("pack object {} declares an implausible size", oid.short());
+        }
+        if comp_len > index_offset - scan.pos {
+            bail!("pack record for {} overruns the index", oid.short());
+        }
+        scan.skip(comp_len)?;
+        records.push((oid, off));
+    }
+    if records.len() as u64 != count {
+        bail!(
+            "pack declares {count} objects but carries {}",
+            records.len()
+        );
+    }
+
+    // The index must mirror the records we just walked, in order.
+    let mut entry = [0u8; INDEX_ENTRY_LEN];
+    for (oid, off) in &records {
+        scan.read_exact(&mut entry)?;
+        let idx_oid = Oid(entry[..32].try_into().unwrap());
+        let idx_off = u64::from_le_bytes(entry[32..40].try_into().unwrap());
+        if idx_oid != *oid || idx_off != *off {
+            bail!("pack index entry for {} points at a foreign record", idx_oid.short());
+        }
+    }
+    let mut tail = [0u8; 8];
+    scan.read_exact(&mut tail)?;
+    if u64::from_le_bytes(tail) != index_offset {
+        bail!("pack index out of bounds");
+    }
+
+    let digest: [u8; 32] = scan.hasher.finalize().into();
+    let mut trailer = [0u8; 32];
+    scan.r
+        .read_exact(&mut trailer)
+        .context("pack file truncated")?;
+    if digest != trailer {
+        bail!("pack checksum mismatch (corrupt trailer or content)");
+    }
+    Ok(PackCheck {
+        id: crate::util::hex::encode(&trailer),
+        len,
+        objects: count,
+    })
+}
+
+/// Verify a pack file, then decompress + admit its objects reading one
+/// bounded window of records at a time (streaming fan-in).
+///
+/// The checksum pass runs first and touches no store, so a corrupt
+/// pack admits nothing — same guarantee as the buffered
+/// [`unpack_into`], with peak heap O(largest object + window) instead
+/// of O(pack). Callers that already ran [`verify_pack_file`] (the
+/// transfer paths, which also need the id) should pass its result to
+/// [`unpack_verified`] instead of paying a second full-file hash pass.
+pub fn unpack_file(path: &Path, store: &LfsStore, threads: usize) -> Result<PackStats> {
+    let check = verify_pack_file(path)?;
+    unpack_verified(path, store, threads, &check)
+}
+
+/// Decompress + admit a pack file that [`verify_pack_file`] has
+/// already vouched for; `check` must come from that verification of
+/// this same file. Each record still re-hashes to its oid before
+/// admission, so even a file swapped between the passes cannot poison
+/// the store — it just fails here.
+pub fn unpack_verified(
+    path: &Path,
+    store: &LfsStore,
+    threads: usize,
+    check: &PackCheck,
+) -> Result<PackStats> {
+    let file = std::fs::File::open(path).context("opening pack file")?;
+    let mut r = BufReader::with_capacity(64 * 1024, file);
+
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).context("pack file truncated")?;
+
+    let window_objects = threads.max(1) * 4;
+    let mut window: Vec<(Oid, u64, Vec<u8>)> = Vec::with_capacity(window_objects);
+    let mut window_bytes = 0u64;
+    let mut raw_total = 0u64;
+    let mut rec_header = [0u8; RECORD_HEADER_LEN];
+    let flush = |window: &mut Vec<(Oid, u64, Vec<u8>)>, raw_total: &mut u64| -> Result<()> {
+        let sizes = par::try_par_map(window.as_slice(), threads, |_, (oid, raw_len, comp)| {
+            admit_record(store, *oid, *raw_len, comp)
+        })?;
+        *raw_total += sizes.iter().sum::<u64>();
+        window.clear();
+        Ok(())
+    };
+    for _ in 0..check.objects {
+        r.read_exact(&mut rec_header).context("pack file truncated")?;
+        let oid = Oid(rec_header[..32].try_into().unwrap());
+        let raw_len = u64::from_le_bytes(rec_header[32..40].try_into().unwrap());
+        let comp_len = u64::from_le_bytes(rec_header[40..48].try_into().unwrap());
+        // verify_pack_file bounded these already; re-clamp defensively
+        // in case the file changed between the two passes.
+        if comp_len > check.len || raw_len > MAX_OBJECT_BYTES {
+            bail!("pack record for {} changed between passes", oid.short());
+        }
+        let mut comp = vec![0u8; comp_len as usize];
+        r.read_exact(&mut comp).context("pack file truncated")?;
+        window_bytes += comp_len + raw_len;
+        window.push((oid, raw_len, comp));
+        if window.len() >= window_objects || window_bytes >= STREAM_WINDOW_BYTES {
+            flush(&mut window, &mut raw_total)?;
+            window_bytes = 0;
+        }
+    }
+    flush(&mut window, &mut raw_total)?;
+    Ok(PackStats {
+        objects: check.objects as usize,
+        raw_bytes: raw_total,
+        packed_bytes: check.len,
     })
 }
 
@@ -349,5 +723,90 @@ mod tests {
         let (store, _) = store_with(&td, &[b"x"]);
         let ghost = Oid::of_bytes(b"never stored");
         assert!(build_pack(&store, &[ghost], 1).is_err());
+    }
+
+    #[test]
+    fn streamed_pack_is_byte_identical_to_buffered() {
+        let td = TempDir::new("pack-stream").unwrap();
+        let (store, oids) =
+            store_with(&td, &[b"alpha", b"beta", &[5u8; 20_000], b"delta", &[9u8; 3]]);
+        let buffered = build_pack(&store, &oids, 1).unwrap();
+
+        let td2 = TempDir::new("pack-stream2").unwrap();
+        let path = td2.join("spill.pack");
+        let built = write_pack_file(&store, &oids, 2, &path).unwrap();
+        let from_file = std::fs::read(&path).unwrap();
+        assert_eq!(from_file, buffered, "stream and buffer paths must agree byte-for-byte");
+        assert_eq!(built.len, buffered.len() as u64);
+        assert_eq!(built.id, pack_id(&buffered));
+        assert_eq!(built.objects, 5);
+        assert_eq!(built.raw_bytes, 5 + 4 + 20_000 + 5 + 3);
+    }
+
+    #[test]
+    fn verify_and_unpack_file_roundtrip() {
+        let td = TempDir::new("pack-vf").unwrap();
+        let (store, oids) = store_with(&td, &[b"one", b"two", &[3u8; 5000]]);
+        let td_spill = TempDir::new("pack-vf-spill").unwrap();
+        let path = td_spill.join("p.pack");
+        let built = write_pack_file(&store, &oids, 2, &path).unwrap();
+
+        let check = verify_pack_file(&path).unwrap();
+        assert_eq!(check.id, built.id);
+        assert_eq!(check.len, built.len);
+        assert_eq!(check.objects, 3);
+
+        let td_dst = TempDir::new("pack-vf-dst").unwrap();
+        let dst = LfsStore::open(td_dst.path());
+        let stats = unpack_file(&path, &dst, 2).unwrap();
+        assert_eq!(stats.objects, 3);
+        assert_eq!(stats.raw_bytes, 3 + 3 + 5000);
+        assert_eq!(stats.packed_bytes, built.len);
+        for oid in &oids {
+            assert_eq!(dst.get(oid).unwrap(), store.get(oid).unwrap());
+        }
+    }
+
+    #[test]
+    fn corrupt_or_truncated_file_admits_nothing() {
+        let td = TempDir::new("pack-corrupt").unwrap();
+        let (store, oids) = store_with(&td, &[b"weights-a", b"weights-b", &[7u8; 4000]]);
+        let td_spill = TempDir::new("pack-corrupt-spill").unwrap();
+        let good = td_spill.join("good.pack");
+        write_pack_file(&store, &oids, 1, &good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+
+        let td_dst = TempDir::new("pack-corrupt-dst").unwrap();
+        let dst = LfsStore::open(td_dst.path());
+        // Flip a byte in each region, truncate at several points: every
+        // damage mode must fail verification and admit nothing.
+        for at in [2usize, HEADER_LEN + 40, bytes.len() - 50, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0xff;
+            let path = td_spill.join("bad.pack");
+            std::fs::write(&path, &bad).unwrap();
+            assert!(unpack_file(&path, &dst, 2).is_err(), "flip at {at} undetected");
+            assert!(dst.list().unwrap().is_empty(), "flip at {at} admitted objects");
+        }
+        for keep in [10usize, bytes.len() - 7, bytes.len() - 33] {
+            let path = td_spill.join("short.pack");
+            std::fs::write(&path, &bytes[..keep]).unwrap();
+            assert!(unpack_file(&path, &dst, 1).is_err(), "truncation at {keep} undetected");
+            assert!(dst.list().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn writer_enforces_declared_count() {
+        let td = TempDir::new("pack-count").unwrap();
+        let (_store, _) = store_with(&td, &[]);
+        // Fewer objects than declared → finish fails.
+        let mut out = Vec::new();
+        let w = PackWriter::new(&mut out, 2).unwrap();
+        assert!(w.finish().is_err());
+        // More than declared → add fails.
+        let mut out = Vec::new();
+        let mut w = PackWriter::new(&mut out, 0).unwrap();
+        assert!(w.add_object(Oid::of_bytes(b"x"), b"x").is_err());
     }
 }

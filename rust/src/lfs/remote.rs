@@ -47,17 +47,18 @@ impl DirRemote {
     }
 
     /// Have/want negotiation: partition `want` into the oids the remote
-    /// holds and the oids it lacks, in a single round trip (and a
-    /// single directory scan — see [`LfsStore::contains_all`]).
+    /// holds and the oids it lacks, in a single round trip (and at most
+    /// one directory scan, sizes included — see [`LfsStore::stat_all`]).
     pub fn batch(&self, want: &[Oid]) -> BatchResponse {
         batch::record(|s| s.negotiations += 1);
         let mut resp = BatchResponse::default();
-        for (oid, present) in want.iter().zip(self.store.contains_all(want)) {
-            if present {
-                resp.present.push(*oid);
-                resp.present_sizes.push(self.store.size_of(oid).unwrap_or(0));
-            } else {
-                resp.missing.push(*oid);
+        for (oid, stat) in want.iter().zip(self.store.stat_all(want)) {
+            match stat {
+                Some(size) => {
+                    resp.present.push(*oid);
+                    resp.present_sizes.push(size);
+                }
+                None => resp.missing.push(*oid),
             }
         }
         resp
@@ -107,27 +108,22 @@ impl RemoteTransport for DirRemote {
         Ok(DirRemote::batch(self, want))
     }
 
-    fn fetch_pack_blob(&self, oids: &[Oid], threads: usize) -> Result<(Vec<u8>, WireReport)> {
-        let blob = pack::build_pack(&self.store, oids, threads)?;
-        let report = WireReport {
-            wire_bytes: blob.len() as u64,
-            resumed_bytes: 0,
-        };
-        Ok((blob, report))
-    }
-
-    fn send_pack_blob(
+    fn fetch_pack_into(
         &self,
-        _pack_id: &str,
-        pack: &[u8],
+        oids: &[Oid],
+        dest: &LfsStore,
         threads: usize,
     ) -> Result<(PackStats, WireReport)> {
-        let stats = pack::unpack_into(&self.store, pack, threads)?;
-        let report = WireReport {
-            wire_bytes: pack.len() as u64,
-            resumed_bytes: 0,
-        };
-        Ok((stats, report))
+        stream_between(&self.store, dest, oids, threads)
+    }
+
+    fn send_pack_from(
+        &self,
+        src: &LfsStore,
+        oids: &[Oid],
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        stream_between(src, &self.store, oids, threads)
     }
 
     fn get_object(&self, oid: &Oid) -> Result<Vec<u8>> {
@@ -137,6 +133,35 @@ impl RemoteTransport for DirRemote {
     fn put_object(&self, bytes: &[u8]) -> Result<()> {
         self.store.put(bytes).map(|_| ())
     }
+}
+
+/// Move `oids` between two local stores as a pack, streaming through a
+/// spill file: the "wire" of a directory remote is the filesystem, and
+/// the pack is never RAM-resident — same bounded-memory profile (and
+/// byte-identical pack accounting) as the HTTP transport.
+fn stream_between(
+    src: &LfsStore,
+    dest: &LfsStore,
+    oids: &[Oid],
+    threads: usize,
+) -> Result<(PackStats, WireReport)> {
+    let spill = crate::util::tmp::TempDir::new("dirpack")?;
+    let path = spill.join("pack");
+    let built = pack::write_pack_file(src, oids, threads, &path)?;
+    // The writer just produced (and hashed) this file, so its summary
+    // doubles as the verification certificate — no second full-file
+    // checksum pass; per-record oid re-hashing still gates admission.
+    let check = pack::PackCheck {
+        id: built.id,
+        len: built.len,
+        objects: built.objects as u64,
+    };
+    let stats = pack::unpack_verified(&path, dest, threads, &check)?;
+    let report = WireReport {
+        wire_bytes: built.len,
+        resumed_bytes: 0,
+    };
+    Ok((stats, report))
 }
 
 /// Convenience: sync a set of oids from a repo-local store to a remote.

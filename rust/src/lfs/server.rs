@@ -12,22 +12,35 @@
 //! ```text
 //! POST   /objects/batch   have/want negotiation  -> present/sizes/missing
 //! POST   /packs           build+cache a pack for a want set -> {id,size}
-//! GET    /packs/<id>      download (Range: bytes=k- resumes)
+//! GET    /packs/<id>      download (Range: bytes=k- resumes; streamed)
 //! HEAD   /packs/<id>      upload-resume probe -> X-Received: <bytes>
-//! PUT    /packs/<id>      upload (Content-Range); partial bodies persist
+//! PUT    /packs/<id>      upload (Content-Range; body streams to disk)
 //! DELETE /packs/<id>      drop cached/partial pack state
 //! GET/PUT /objects/<oid>  per-object fallback
 //! GET/HEAD/PUT /odb/<oid>, POST /odb/batch, GET/PUT /refs/<name>,
 //! GET /history/<tip>?exclude=..   commit/ref sync
 //! ```
 //!
+//! **Streaming + keep-alive.** Each accepted connection runs a request
+//! loop (HTTP/1.1 persistent connections), so a client pays one TCP
+//! connect for a whole push or fetch. Pack bodies never materialize in
+//! server RAM: `PUT /packs` streams the body straight into the
+//! `lfs/partial/<id>` file, `GET /packs` streams the cached file onto
+//! the socket in fixed chunks, and `POST /packs` builds its pack with
+//! the streaming [`pack::PackWriter`] directly into the cache file —
+//! peak heap per connection is O(largest object + window), not O(pack).
+//!
 //! Durability and dedup: an interrupted `PUT /packs/<id>` leaves its
 //! received prefix in `lfs/partial/<id>` — the retry HEAD-probes and
-//! sends only the tail. A completed pack is admitted object-by-object
-//! through [`LfsStore::put`], which is content-addressed on sha256, so
-//! re-uploads (and objects shared between packs) deduplicate
-//! server-side; a pack that fails its checksum or id is discarded
-//! whole and poisons nothing.
+//! sends only the tail. Partial state is guarded by a **per-pack-id
+//! lock** (unrelated uploads never serialize on each other). A
+//! completed pack is verified end to end ([`pack::verify_pack_file`])
+//! and admitted object-by-object through [`LfsStore::put`], which is
+//! content-addressed on sha256, so re-uploads (and objects shared
+//! between packs) deduplicate server-side; a pack that fails its
+//! checksum or id is discarded whole and poisons nothing. Stale cache
+//! entries (`lfs/outgoing/`, `lfs/partial/`) are reaped by the
+//! age-based [`gc_stale_packs`], run once at spawn.
 
 use super::pack;
 use super::store::LfsStore;
@@ -37,25 +50,26 @@ use crate::gitcore::odb::Odb;
 use crate::gitcore::refs::Refs;
 use crate::util::http::{self, Request, Response};
 use crate::util::json::{Json, JsonObj};
+use crate::util::tmp;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Worker threads used for server-side pack assembly/fan-in. Kept
 /// small: each connection already runs on its own thread.
 const PACK_THREADS: usize = 2;
 
-/// Unique suffix for write-then-rename temp files: two connections can
-/// build the same pack concurrently, and a shared temp path would let
-/// one writer rename the other's half-written file into place.
-static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-
-fn unique_tmp(path: &Path) -> PathBuf {
-    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
-    path.with_extension(format!("tmp{}-{seq}", std::process::id()))
-}
+/// Age past which cached (`lfs/outgoing/`) and partial
+/// (`lfs/partial/`) packs are reaped by [`gc_stale_packs`]. Long
+/// enough that any in-flight resume (client retries span seconds to
+/// minutes) survives; short enough that abandoned transfers do not
+/// accumulate forever.
+pub const STALE_PACK_TTL: Duration = Duration::from_secs(24 * 60 * 60);
 
 struct ServerState {
     root: PathBuf,
@@ -64,8 +78,23 @@ struct ServerState {
     refs: Refs,
     /// Serializes ref compare-and-set.
     refs_lock: Mutex<()>,
-    /// Serializes partial-pack append/finalize per server.
-    partial_lock: Mutex<()>,
+    /// Per-pack-id partial-upload locks: concurrent uploads of
+    /// *different* packs proceed in parallel; writers of the *same*
+    /// pack serialize on its entry. Entries are never removed — minting
+    /// a fresh mutex while an old holder is mid-append would let two
+    /// writers share one partial file — so the map grows with the
+    /// number of distinct pack ids seen, which is tiny.
+    partial_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+}
+
+fn id_lock(state: &ServerState, id: &str) -> Arc<Mutex<()>> {
+    state
+        .partial_locks
+        .lock()
+        .unwrap()
+        .entry(id.to_string())
+        .or_default()
+        .clone()
 }
 
 /// A running LFS + commit/ref server. Shuts down on drop.
@@ -88,13 +117,15 @@ impl LfsServer {
         if !root.join("HEAD").exists() {
             Refs::init(root, "main")?;
         }
+        // Reap pack-cache entries abandoned by long-dead transfers.
+        let _ = gc_stale_packs(root, STALE_PACK_TTL);
         let state = Arc::new(ServerState {
             root: root.to_path_buf(),
             store: LfsStore::at(&root.join("lfs/objects")),
             odb,
             refs: Refs::open(root),
             refs_lock: Mutex::new(()),
-            partial_lock: Mutex::new(()),
+            partial_locks: Mutex::new(HashMap::new()),
         });
         let listener = TcpListener::bind(bind)
             .with_context(|| format!("binding lfs server to {bind}"))?;
@@ -141,17 +172,100 @@ impl Drop for LfsServer {
     }
 }
 
+/// Remove cached (`lfs/outgoing/`, including the by-want memo files)
+/// and partial (`lfs/partial/`) pack entries whose last modification
+/// is older than `max_age`. Returns how many files were removed.
+///
+/// Content-addressing makes this always safe: a reaped outgoing pack
+/// is rebuilt from the store on the next `POST /packs`, and a reaped
+/// partial merely restarts its upload from byte 0.
+pub fn gc_stale_packs(root: &Path, max_age: Duration) -> Result<usize> {
+    let mut removed = 0;
+    for dir in [
+        root.join("lfs/outgoing"),
+        root.join("lfs/outgoing/bywant"),
+        root.join("lfs/partial"),
+    ] {
+        removed += tmp::reap_older_than(&dir, max_age, |_| true);
+    }
+    Ok(removed)
+}
+
+/// Per-connection request loop (HTTP/1.1 keep-alive): serve requests
+/// until the peer closes, asks to close, errors, or a mid-body cut
+/// leaves the stream unframed.
 fn handle_connection(mut stream: TcpStream, state: &ServerState) {
     stream.set_read_timeout(Some(http::IO_TIMEOUT)).ok();
     stream.set_write_timeout(Some(http::IO_TIMEOUT)).ok();
     stream.set_nodelay(true).ok();
-    let (req, complete) = match http::read_request(&mut stream) {
-        Ok(v) => v,
-        Err(_) => return, // head never completed; nothing to answer
-    };
-    if let Some(resp) = route(state, &req, complete) {
-        let _ = http::write_response(&mut stream, &resp);
+    loop {
+        let (req, leftover) = match http::read_request_head(&mut stream) {
+            Ok(v) => v,
+            // Clean close between requests, or a broken head: either
+            // way there is nothing left to answer.
+            Err(_) => return,
+        };
+        match serve_one(state, &mut stream, req, leftover) {
+            Ok(true) => continue,
+            Ok(false) | Err(_) => return,
+        }
     }
+}
+
+/// Serve one request. `Ok(true)` keeps the connection for the next
+/// request; `Ok(false)` closes it (peer gone, close requested, or the
+/// body stream is no longer cleanly framed).
+fn serve_one(
+    state: &ServerState,
+    stream: &mut TcpStream,
+    req: Request,
+    leftover: Vec<u8>,
+) -> Result<bool> {
+    let wants_close = req.wants_close();
+    let path = req.path().to_string();
+
+    // Streaming routes first: pack bodies never enter RAM.
+    if let Some(id) = path.strip_prefix("/packs/") {
+        let keep = match req.method.as_str() {
+            "PUT" => pack_put_streaming(state, stream, &req, leftover, id)?,
+            method => {
+                // GET/HEAD/DELETE carry no meaningful body, but a
+                // declared one must still be drained (to nowhere — a
+                // hostile Content-Length must not buy a buffer) or its
+                // bytes would desync the keep-alive framing.
+                let len = req.declared_len()?;
+                let (_, complete) =
+                    http::read_body_to(stream, &leftover, len, &mut std::io::sink())?;
+                if !complete {
+                    return Ok(false);
+                }
+                if method == "GET" {
+                    pack_get_streaming(state, stream, &req, id)?
+                } else {
+                    let resp = pack_misc(state, method, id)
+                        .unwrap_or_else(|e| text(500, format!("{e:#}")));
+                    http::write_response(stream, &resp)?;
+                    true
+                }
+            }
+        };
+        return Ok(keep && !wants_close);
+    }
+
+    // Buffered routes: negotiation, odb/refs sync, per-object ops —
+    // all small bodies.
+    let len = req.declared_len()?;
+    let (body, complete) = http::read_body(stream, leftover, len);
+    if !complete {
+        // The peer died mid-body; nobody is listening for a response.
+        return Ok(false);
+    }
+    let mut full = req;
+    full.body = body;
+    let resp = dispatch(state, &full.method, &path, &full)
+        .unwrap_or_else(|e| text(500, format!("{e:#}")));
+    http::write_response(stream, &resp)?;
+    Ok(!wants_close)
 }
 
 fn text(status: u16, body: impl Into<String>) -> Response {
@@ -182,36 +296,13 @@ fn is_hex_id(s: &str) -> bool {
     s.len() == 64 && s.bytes().all(|b| b.is_ascii_hexdigit())
 }
 
-/// Dispatch one request. `None` means "no response" — the connection
-/// died mid-upload and the received prefix was persisted for resume.
-fn route(state: &ServerState, req: &Request, complete: bool) -> Option<Response> {
-    let path = req.path();
-    let method = req.method.as_str();
-
-    if method == "PUT" {
-        if let Some(id) = path.strip_prefix("/packs/") {
-            return pack_put(state, id, req, complete);
-        }
-    }
-    if !complete {
-        // Every other endpoint needs its full body; the peer is gone
-        // anyway, so drop the connection without a response.
-        return None;
-    }
-
-    let result = dispatch(state, method, path, req);
-    Some(result.unwrap_or_else(|e| text(500, format!("{e:#}"))))
-}
-
 fn dispatch(state: &ServerState, method: &str, path: &str, req: &Request) -> Result<Response> {
     Ok(match (method, path) {
         ("POST", "/objects/batch") => objects_batch(state, req)?,
         ("POST", "/packs") => pack_create(state, req)?,
         ("POST", "/odb/batch") => odb_batch(state, req)?,
         _ => {
-            if let Some(id) = path.strip_prefix("/packs/") {
-                pack_misc(state, method, id, req)?
-            } else if let Some(hex) = path.strip_prefix("/objects/") {
+            if let Some(hex) = path.strip_prefix("/objects/") {
                 object_endpoint(state, method, hex, req)?
             } else if let Some(hex) = path.strip_prefix("/odb/") {
                 odb_endpoint(state, method, hex, req)?
@@ -234,12 +325,15 @@ fn objects_batch(state: &ServerState, req: &Request) -> Result<Response> {
     let mut present = Vec::new();
     let mut sizes = Vec::new();
     let mut missing = Vec::new();
-    for (oid, held) in want.iter().zip(state.store.contains_all(&want)) {
-        if held {
-            present.push(*oid);
-            sizes.push(state.store.size_of(oid).unwrap_or(0));
-        } else {
-            missing.push(*oid);
+    // One stat_all call answers presence *and* sizes — at most one
+    // store scan, no per-present-oid stat follow-up.
+    for (oid, stat) in want.iter().zip(state.store.stat_all(&want)) {
+        match stat {
+            Some(size) => {
+                present.push(*oid);
+                sizes.push(size);
+            }
+            None => missing.push(*oid),
         }
     }
     let mut obj = JsonObj::new();
@@ -278,6 +372,9 @@ fn want_memo_path(state: &ServerState, want: &[Oid]) -> PathBuf {
         .join(crate::util::hex::encode(&digest))
 }
 
+/// Build (or reuse) a pack for a want set. The pack is assembled by
+/// the streaming writer directly into the outgoing cache file — it is
+/// never RAM-resident.
 fn pack_create(state: &ServerState, req: &Request) -> Result<Response> {
     let want = match parse_want(req) {
         Ok(w) => w,
@@ -296,25 +393,22 @@ fn pack_create(state: &ServerState, req: &Request) -> Result<Response> {
             }
         }
     }
-    let blob = match pack::build_pack(&state.store, &want, PACK_THREADS) {
+    let build_tmp = tmp::unique_sibling(&state.root.join("lfs/outgoing/build"));
+    let built = match pack::write_pack_file(&state.store, &want, PACK_THREADS, &build_tmp) {
         Ok(b) => b,
         Err(e) => return Ok(text(422, format!("cannot assemble pack: {e:#}"))),
     };
-    let id = pack::pack_id(&blob);
-    let path = outgoing_path(state, &id);
-    if !path.exists() {
-        std::fs::create_dir_all(path.parent().unwrap())?;
-        let tmp = unique_tmp(&path);
-        std::fs::write(&tmp, &blob)?;
-        std::fs::rename(&tmp, &path)?;
+    let path = outgoing_path(state, &built.id);
+    if path.exists() {
+        let _ = std::fs::remove_file(&build_tmp);
+    } else if let Err(e) = std::fs::rename(&build_tmp, &path) {
+        let _ = std::fs::remove_file(&build_tmp);
+        return Err(e).context("installing outgoing pack");
     }
-    std::fs::create_dir_all(memo.parent().unwrap())?;
-    let tmp = unique_tmp(&memo);
-    std::fs::write(&tmp, format!("{id} {}", blob.len()))?;
-    std::fs::rename(&tmp, &memo)?;
+    tmp::write_atomic(&memo, format!("{} {}", built.id, built.len).as_bytes())?;
     let mut obj = JsonObj::new();
-    obj.insert("id", id);
-    obj.insert("size", blob.len() as u64);
+    obj.insert("id", built.id);
+    obj.insert("size", built.len);
     Ok(json_response(obj))
 }
 
@@ -326,27 +420,13 @@ fn parse_range(header: Option<&str>) -> Option<u64> {
         .ok()
 }
 
-/// GET (download, with Range resume), HEAD (upload-resume probe), and
-/// DELETE for `/packs/<id>`.
-fn pack_misc(state: &ServerState, method: &str, id: &str, req: &Request) -> Result<Response> {
+/// HEAD (upload-resume probe) and DELETE for `/packs/<id>` (GET and
+/// PUT take the streaming paths).
+fn pack_misc(state: &ServerState, method: &str, id: &str) -> Result<Response> {
     if !is_hex_id(id) {
         return Ok(text(400, "pack ids are 64 hex chars"));
     }
     match method {
-        "GET" => {
-            let bytes = match std::fs::read(outgoing_path(state, id)) {
-                Ok(b) => b,
-                Err(_) => return Ok(text(404, "unknown pack")),
-            };
-            let total = bytes.len() as u64;
-            match parse_range(req.get_header("range")) {
-                None => Ok(Response::new(200).body(bytes)),
-                Some(k) if k < total => Ok(Response::new(206)
-                    .header("content-range", &format!("bytes {k}-{}/{total}", total - 1))
-                    .body(bytes[k as usize..].to_vec())),
-                Some(_) => Ok(text(416, "range starts at or past the end of the pack")),
-            }
-        }
         "HEAD" => {
             let have = std::fs::metadata(partial_path(state, id))
                 .map(|m| m.len())
@@ -354,12 +434,65 @@ fn pack_misc(state: &ServerState, method: &str, id: &str, req: &Request) -> Resu
             Ok(Response::new(200).header("x-received", &have.to_string()))
         }
         "DELETE" => {
+            let lock = id_lock(state, id);
+            let _guard = lock.lock().unwrap();
             let _ = std::fs::remove_file(outgoing_path(state, id));
             let _ = std::fs::remove_file(partial_path(state, id));
             Ok(text(200, "gone"))
         }
         _ => Ok(text(404, "unsupported pack method")),
     }
+}
+
+/// `GET /packs/<id>`: stream the cached pack file (from a byte offset
+/// when a `Range` header resumes) onto the socket in fixed chunks.
+/// Returns whether the connection is still cleanly framed.
+fn pack_get_streaming(
+    state: &ServerState,
+    stream: &mut TcpStream,
+    req: &Request,
+    id: &str,
+) -> Result<bool> {
+    if !is_hex_id(id) {
+        http::write_response(stream, &text(400, "pack ids are 64 hex chars"))?;
+        return Ok(true);
+    }
+    let path = outgoing_path(state, id);
+    let total = match std::fs::metadata(&path) {
+        Ok(m) => m.len(),
+        Err(_) => {
+            http::write_response(stream, &text(404, "unknown pack"))?;
+            return Ok(true);
+        }
+    };
+    let (status, start, headers) = match parse_range(req.get_header("range")) {
+        None => (200, 0, Vec::new()),
+        Some(k) if k < total => (
+            206,
+            k,
+            vec![(
+                "content-range".to_string(),
+                format!("bytes {k}-{}/{total}", total - 1),
+            )],
+        ),
+        Some(_) => {
+            http::write_response(stream, &text(416, "range starts at or past the end of the pack"))?;
+            return Ok(true);
+        }
+    };
+    let mut file = std::fs::File::open(&path).context("opening outgoing pack")?;
+    file.seek(SeekFrom::Start(start)).context("seeking outgoing pack")?;
+    let body_len = total - start;
+    http::write_response_head(stream, status, &headers, body_len)?;
+    let copied = std::io::copy(&mut file.by_ref().take(body_len), stream)
+        .context("streaming pack body")?;
+    if copied != body_len {
+        // The cache file shrank under us (gc raced a download): the
+        // declared length is now wrong, so the connection is poisoned.
+        anyhow::bail!("outgoing pack {id} truncated mid-stream");
+    }
+    stream.flush().context("flushing pack body")?;
+    Ok(true)
 }
 
 /// `Content-Range: bytes a-b/t` -> (a, t); `bytes */t` -> (None, t).
@@ -374,82 +507,121 @@ fn parse_content_range(header: Option<&str>) -> Option<(Option<u64>, u64)> {
     Some((Some(start.parse::<u64>().ok()?), total))
 }
 
-/// Resumable pack upload: append-at-offset with partial persistence.
+/// Resumable pack upload: the body streams straight into the
+/// `lfs/partial/<id>` file (append-at-offset), so an upload of any
+/// size costs O(chunk) server memory.
 ///
-/// This is the *server half* of push resume. The body may be
-/// incomplete (`complete == false`): whatever prefix arrived is
-/// appended and persisted, no response is written (the peer is gone),
-/// and the client's retry HEAD-probes `X-Received` to send only the
-/// tail. On completion the pack is id- and checksum-verified, then
-/// fanned into the store (sha256 dedup per object).
-fn pack_put(state: &ServerState, id: &str, req: &Request, complete: bool) -> Option<Response> {
+/// This is the *server half* of push resume. The body may stop short
+/// (connection died): whatever prefix arrived is already on disk, no
+/// response is written (the peer is gone), and the client's retry
+/// HEAD-probes `X-Received` to send only the tail. On completion the
+/// pack file is id- and checksum-verified, then fanned into the store
+/// (sha256 dedup per object) by the streaming reader.
+///
+/// Returns whether the connection is still cleanly framed (an error
+/// response sent before draining the body closes the connection).
+fn pack_put_streaming(
+    state: &ServerState,
+    stream: &mut TcpStream,
+    req: &Request,
+    leftover: Vec<u8>,
+    id: &str,
+) -> Result<bool> {
     if !is_hex_id(id) {
-        return Some(text(400, "pack ids are 64 hex chars"));
+        http::write_response(stream, &text(400, "pack ids are 64 hex chars"))?;
+        return Ok(false);
     }
+    let declared = req.declared_len()?;
     let (offset, total) = match parse_content_range(req.get_header("content-range")) {
         Some(v) => v,
-        None => return Some(text(400, "PUT /packs needs a content-range header")),
+        None => {
+            http::write_response(stream, &text(400, "PUT /packs needs a content-range header"))?;
+            return Ok(false);
+        }
     };
     let path = partial_path(state, id);
-    let _guard = state.partial_lock.lock().unwrap();
+    let lock = id_lock(state, id);
+    let guard = lock.lock().unwrap();
     let have = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
     let offset = offset.unwrap_or(have);
     if offset != have {
-        return Some(
-            text(409, "resume offset does not match the persisted partial")
-                .header("x-received", &have.to_string()),
-        );
-    }
-    if !req.body.is_empty() {
-        use std::io::Write;
-        let append = || -> Result<()> {
-            std::fs::create_dir_all(path.parent().unwrap())?;
-            let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
-            f.write_all(&req.body)?;
-            Ok(())
-        };
-        if let Err(e) = append() {
-            return Some(text(500, format!("persisting pack body: {e:#}")));
+        // Drain the in-flight body to nowhere (O(chunk) memory) so the
+        // connection stays cleanly framed, then report the real
+        // offset: the client's in-protocol 409 retry depends on
+        // *receiving* this response, not a reset mid-upload.
+        drop(guard);
+        let (_, complete) = http::read_body_to(stream, &leftover, declared, &mut std::io::sink())?;
+        if !complete {
+            return Ok(false); // peer died mid-body anyway
         }
+        let resp = text(409, "resume offset does not match the persisted partial")
+            .header("x-received", &have.to_string());
+        http::write_response(stream, &resp)?;
+        return Ok(true);
     }
-    let now = have + req.body.len() as u64;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .context("opening partial pack file")?;
+    let mut sink = std::io::BufWriter::new(file);
+    let (written, complete) = http::read_body_to(stream, &leftover, declared, &mut sink)?;
+    sink.flush().context("flushing partial pack file")?;
+    drop(sink);
+    let now = have + written;
     if !complete {
         // Connection died mid-body. The prefix is on disk; the retry
         // resumes from it. Nobody is listening for a response.
-        return None;
+        return Ok(false);
     }
     if now < total {
-        return Some(text(202, "partial accepted").header("x-received", &now.to_string()));
+        http::write_response(
+            stream,
+            &text(202, "partial accepted").header("x-received", &now.to_string()),
+        )?;
+        return Ok(true);
     }
     // Complete: move the body out from under the lock, so the verify +
-    // store fan-in (the expensive part) doesn't serialize unrelated
-    // concurrent pack uploads on the one partial_lock.
-    let fin = unique_tmp(&path);
+    // store fan-in (the expensive part) doesn't serialize concurrent
+    // uploads of the same id behind it.
+    let fin = tmp::unique_sibling(&path);
     if let Err(e) = std::fs::rename(&path, &fin) {
-        return Some(text(500, format!("finalizing pack body: {e:#}")));
+        http::write_response(stream, &text(500, format!("finalizing pack body: {e:#}")))?;
+        return Ok(true);
     }
-    drop(_guard);
-    let finalize = || -> Result<Response> {
-        let blob = std::fs::read(&fin)?;
-        if now > total || pack::pack_id(&blob) != id {
-            let _ = std::fs::remove_file(&fin);
+    drop(guard);
+    let resp = finalize_pack(state, id, &fin, now, total);
+    http::write_response(stream, &resp)?;
+    Ok(true)
+}
+
+/// Verify a completed upload end to end (streaming, admits nothing on
+/// failure) and fan it into the store.
+fn finalize_pack(state: &ServerState, id: &str, fin: &Path, now: u64, total: u64) -> Response {
+    let result = (|| -> Result<Response> {
+        if now > total {
             return Ok(text(422, "pack does not match its declared id"));
         }
-        match pack::unpack_into(&state.store, &blob, PACK_THREADS) {
+        let check = match pack::verify_pack_file(fin) {
+            Ok(check) if check.id == id && check.len == total => check,
+            Ok(_) => return Ok(text(422, "pack does not match its declared id")),
+            Err(e) => return Ok(text(422, format!("pack verification failed: {e:#}"))),
+        };
+        match pack::unpack_verified(fin, &state.store, PACK_THREADS, &check) {
             Ok(stats) => {
-                let _ = std::fs::remove_file(&fin);
                 let mut obj = JsonObj::new();
                 obj.insert("objects", stats.objects);
                 obj.insert("raw_bytes", stats.raw_bytes);
                 Ok(json_response(obj))
             }
-            Err(e) => {
-                let _ = std::fs::remove_file(&fin);
-                Ok(text(422, format!("pack verification failed: {e:#}")))
-            }
+            Err(e) => Ok(text(422, format!("pack verification failed: {e:#}"))),
         }
-    };
-    Some(finalize().unwrap_or_else(|e| text(500, format!("{e:#}"))))
+    })();
+    let _ = std::fs::remove_file(fin);
+    result.unwrap_or_else(|e| text(500, format!("{e:#}")))
 }
 
 fn object_endpoint(
@@ -626,13 +798,13 @@ mod tests {
         assert_eq!(resp.present_sizes, vec![11]);
         assert_eq!(resp.missing, vec![ghost]);
 
-        // Pack download.
-        let (blob, wire) = remote.fetch_pack_blob(&[a], 1).unwrap();
-        assert_eq!(wire.resumed_bytes, 0);
-        assert_eq!(wire.wire_bytes, blob.len() as u64);
+        // Streamed pack download straight into a local store.
         let td_local = TempDir::new("srv-local").unwrap();
         let local = LfsStore::open(td_local.path());
-        pack::unpack_into(&local, &blob, 1).unwrap();
+        let (stats, wire) = remote.fetch_pack_into(&[a], &local, 1).unwrap();
+        assert_eq!(stats.objects, 1);
+        assert_eq!(wire.resumed_bytes, 0);
+        assert_eq!(wire.wire_bytes, stats.packed_bytes);
         assert_eq!(local.get(&a).unwrap(), b"held-object");
 
         // Per-object fallback + server-side dedup.
@@ -642,14 +814,21 @@ mod tests {
         let fresh = Oid::of_bytes(b"fresh-object");
         assert_eq!(server_store.get(&fresh).unwrap(), b"fresh-object");
 
-        // Pack upload (fresh content), then re-upload dedups.
+        // Streamed pack upload (fresh content), then re-upload dedups.
         let b = local.put(b"uploaded-via-pack").unwrap().0;
-        let up = pack::build_pack(&local, &[b], 1).unwrap();
-        let id = pack::pack_id(&up);
-        let (stats, wire) = remote.send_pack_blob(&id, &up, 1).unwrap();
+        let (stats, wire) = remote.send_pack_from(&local, &[b], 1).unwrap();
         assert_eq!(stats.objects, 1);
-        assert_eq!(wire.wire_bytes, up.len() as u64);
+        assert_eq!(wire.wire_bytes, stats.packed_bytes);
         assert_eq!(server_store.get(&b).unwrap(), b"uploaded-via-pack");
+
+        // The whole conversation (negotiation, pack each way, object
+        // fallbacks) ran over a handful of reused connections, not one
+        // per request.
+        assert!(
+            remote.connections_opened() <= 2,
+            "{} connects for ~8 requests — keep-alive broken",
+            remote.connections_opened()
+        );
     }
 
     #[test]
@@ -694,5 +873,74 @@ mod tests {
         assert_eq!(put(format!("none {}", b.to_hex())).status, 409);
         assert_eq!(put(format!("{} {}", a.to_hex(), b.to_hex())).status, 200);
         assert_eq!(String::from_utf8_lossy(&get("main").body), b.to_hex());
+    }
+
+    #[test]
+    fn stale_pack_caches_are_reaped_by_age() {
+        let td_root = TempDir::new("srv-gc").unwrap();
+        let server = LfsServer::spawn(td_root.path()).unwrap();
+        let td_staging = TempDir::new("srv-gc-staging").unwrap();
+        let remote = HttpRemote::open(&server.url(), Some(td_staging.path())).unwrap();
+
+        // Create an outgoing pack + memo via a real fetch, and a fake
+        // partial upload.
+        let server_store = LfsStore::at(&td_root.path().join("lfs/objects"));
+        let a = server_store.put(b"gc-object").unwrap().0;
+        let td_local = TempDir::new("srv-gc-local").unwrap();
+        let local = LfsStore::open(td_local.path());
+        remote.fetch_pack_into(&[a], &local, 1).unwrap();
+        let outgoing = td_root.path().join("lfs/outgoing");
+        let n_cached = std::fs::read_dir(&outgoing)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.metadata().map(|m| m.is_file()).unwrap_or(false))
+            .count();
+        assert!(n_cached >= 1, "fetch must leave an outgoing pack cached");
+        std::fs::create_dir_all(td_root.path().join("lfs/partial")).unwrap();
+        std::fs::write(td_root.path().join("lfs/partial").join("0".repeat(64)), b"junk").unwrap();
+
+        // Young entries survive an aged gc.
+        let removed = gc_stale_packs(td_root.path(), Duration::from_secs(3600)).unwrap();
+        assert_eq!(removed, 0, "fresh cache entries must survive");
+
+        // A zero-age gc reaps everything: outgoing pack, bywant memo,
+        // partial.
+        let removed = gc_stale_packs(td_root.path(), Duration::ZERO).unwrap();
+        assert!(removed >= 3, "expected pack + memo + partial reaped, got {removed}");
+
+        // A reaped pack is simply rebuilt on the next request.
+        let td_local2 = TempDir::new("srv-gc-local2").unwrap();
+        let local2 = LfsStore::open(td_local2.path());
+        remote.fetch_pack_into(&[a], &local2, 1).unwrap();
+        assert_eq!(local2.get(&a).unwrap(), b"gc-object");
+    }
+
+    #[test]
+    fn concurrent_uploads_of_different_packs_do_not_serialize() {
+        // Two clients push different packs at the same time; per-id
+        // locking must let both complete (the old global partial_lock
+        // merely serialized them — this asserts correctness, the lock
+        // split is about latency).
+        let td_root = TempDir::new("srv-par").unwrap();
+        let server = LfsServer::spawn(td_root.path()).unwrap();
+        let url = server.url();
+        let mut handles = Vec::new();
+        for i in 0..2u8 {
+            let url = url.clone();
+            handles.push(std::thread::spawn(move || {
+                let td_local = TempDir::new("srv-par-local").unwrap();
+                let local = LfsStore::open(td_local.path());
+                let oid = local.put(&vec![i; 5000]).unwrap().0;
+                let remote = HttpRemote::open(&url, None).unwrap();
+                let (stats, _) = remote.send_pack_from(&local, &[oid], 1).unwrap();
+                assert_eq!(stats.objects, 1);
+                oid
+            }));
+        }
+        let server_store = LfsStore::at(&td_root.path().join("lfs/objects"));
+        for h in handles {
+            let oid = h.join().unwrap();
+            assert!(server_store.contains(&oid));
+        }
     }
 }

@@ -5,16 +5,9 @@
 //! deduplicated by content.
 
 use crate::gitcore::object::Oid;
+use crate::util::tmp;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-
-/// Per-process sequence for temp-file names: parallel clean/merge
-/// workers can store identical content concurrently, and two writers
-/// sharing one temp path could rename a partially written file into
-/// place. A unique suffix per put keeps every write-then-rename atomic
-/// for its own writer.
-static PUT_SEQ: AtomicU64 = AtomicU64::new(0);
 
 thread_local! {
     /// Count of full directory scans performed by
@@ -69,45 +62,97 @@ impl LfsStore {
     }
 
     /// Bulk presence check: one answer per oid, aligned with `oids`.
-    ///
-    /// A have/want negotiation used to probe `contains` once per wanted
-    /// oid — O(want) filesystem stats. For large want-sets this walks
-    /// the store's shard directories **once**, builds the full resident
-    /// set, and answers every probe from memory; small want-sets keep
-    /// the direct-stat path, which is cheaper than scanning a store
-    /// that may hold the history of many models. IO errors read as
-    /// "absent", matching [`LfsStore::contains`].
+    /// Presence-only shorthand for [`LfsStore::stat_all`].
     pub fn contains_all(&self, oids: &[Oid]) -> Vec<bool> {
-        if oids.len() <= 16 {
-            return oids.iter().map(|o| self.contains(o)).collect();
+        self.stat_all(oids).iter().map(|s| s.is_some()).collect()
+    }
+
+    /// Bulk presence **and size** check: one `Some(bytes)` / `None` per
+    /// oid, aligned with `oids`. One call answers a whole have/want
+    /// negotiation, sizes included — no per-present-oid stat follow-up.
+    ///
+    /// Strategy is store-size-aware. A full shard-directory scan costs
+    /// O(store); per-oid metadata stats cost O(want). Small want-sets
+    /// always stat directly; larger ones first *estimate* the store's
+    /// population from a few shard directories (O(1)-ish: one root
+    /// readdir + a handful of shard readdirs) and scan only when the
+    /// store is small enough that one scan beats O(want) stats — a
+    /// store holding the history of many models no longer gets walked
+    /// end to end to answer a 20-oid negotiation. IO errors read as
+    /// "absent", matching [`LfsStore::contains`].
+    pub fn stat_all(&self, oids: &[Oid]) -> Vec<Option<u64>> {
+        const DIRECT_STAT_MAX: usize = 16;
+        // A scan enumerates ~`store` dirents; a stat pass costs `want`
+        // metadata syscalls. Scan only when the store is within this
+        // factor of the want-set (readdir entries are cheaper than
+        // individual stats, hence > 1).
+        const SCAN_CROSSOVER: u64 = 4;
+        if oids.len() <= DIRECT_STAT_MAX {
+            return oids.iter().map(|o| self.size_of(o)).collect();
+        }
+        let estimate = self.estimate_population();
+        if estimate > oids.len() as u64 * SCAN_CROSSOVER {
+            return oids.iter().map(|o| self.size_of(o)).collect();
         }
         DIR_SCANS.with(|c| c.set(c.get() + 1));
-        let resident: std::collections::HashSet<Oid> =
-            self.list().unwrap_or_default().into_iter().collect();
-        oids.iter().map(|o| resident.contains(o)).collect()
+        let resident: std::collections::HashMap<Oid, u64> = self
+            .list_with_sizes()
+            .unwrap_or_default()
+            .into_iter()
+            .collect();
+        oids.iter().map(|o| resident.get(o).copied()).collect()
+    }
+
+    /// Cheap estimate of how many objects the store holds: count the
+    /// shard directories, sample a few, extrapolate. Never scans the
+    /// whole store (≤ 1 root readdir + a fixed handful of shard
+    /// readdirs).
+    fn estimate_population(&self) -> u64 {
+        const ESTIMATE_SAMPLE: usize = 4;
+        let shards = match std::fs::read_dir(&self.root) {
+            Ok(iter) => iter
+                .filter_map(|e| e.ok())
+                .filter(|e| e.file_type().map(|t| t.is_dir()).unwrap_or(false))
+                .collect::<Vec<_>>(),
+            Err(_) => return 0,
+        };
+        if shards.is_empty() {
+            return 0;
+        }
+        let mut sampled_entries = 0u64;
+        let mut sampled = 0u64;
+        for shard in shards.iter().take(ESTIMATE_SAMPLE) {
+            if let Ok(iter) = std::fs::read_dir(shard.path()) {
+                sampled_entries += iter.count() as u64;
+                sampled += 1;
+            }
+        }
+        if sampled == 0 {
+            return 0;
+        }
+        // Extrapolate the sampled mean across all shards; floor at the
+        // shard count (every counted shard holds at least one entry).
+        (sampled_entries * shards.len() as u64 / sampled).max(shards.len() as u64)
     }
 
     /// Size in bytes of a stored object, without reading it
-    /// (`None` if absent). Used to shard packs by payload size.
+    /// (`None` if absent). Used to shard packs by payload size; bulk
+    /// callers should prefer [`LfsStore::stat_all`].
     pub fn size_of(&self, oid: &Oid) -> Option<u64> {
         std::fs::metadata(self.path_for(oid)).ok().map(|m| m.len())
     }
 
     /// Store a blob; returns (oid, size). Idempotent by content.
+    /// Parallel clean/merge workers can store identical content
+    /// concurrently; [`tmp::write_atomic`]'s unique temp names keep
+    /// every write-then-rename atomic for its own writer.
     pub fn put(&self, bytes: &[u8]) -> Result<(Oid, u64)> {
         let oid = Oid::of_bytes(bytes);
         let path = self.path_for(&oid);
         if path.exists() {
             return Ok((oid, bytes.len() as u64));
         }
-        std::fs::create_dir_all(path.parent().unwrap())?;
-        let tmp = path.with_extension(format!(
-            "tmp{}-{}",
-            std::process::id(),
-            PUT_SEQ.fetch_add(1, Ordering::Relaxed)
-        ));
-        std::fs::write(&tmp, bytes)?;
-        std::fs::rename(&tmp, &path)?;
+        tmp::write_atomic(&path, bytes)?;
         Ok((oid, bytes.len() as u64))
     }
 
@@ -186,6 +231,13 @@ impl LfsStore {
 
     /// All stored oids.
     pub fn list(&self) -> Result<Vec<Oid>> {
+        Ok(self.list_with_sizes()?.into_iter().map(|(o, _)| o).collect())
+    }
+
+    /// All stored oids with their byte sizes, from one directory walk
+    /// (the scan half of [`LfsStore::stat_all`]: dirent metadata rides
+    /// along for free, so negotiations that scan never stat again).
+    pub fn list_with_sizes(&self) -> Result<Vec<(Oid, u64)>> {
         let mut out = Vec::new();
         if !self.root.exists() {
             return Ok(out);
@@ -197,9 +249,16 @@ impl LfsStore {
             }
             let prefix = shard.file_name().to_string_lossy().to_string();
             for f in std::fs::read_dir(shard.path())? {
-                let name = f?.file_name().to_string_lossy().to_string();
+                let f = f?;
+                let name = f.file_name().to_string_lossy().to_string();
                 if let Ok(oid) = Oid::from_hex(&format!("{prefix}{name}")) {
-                    out.push(oid);
+                    // An entry whose metadata vanished mid-scan (a
+                    // concurrent `gc --prune` won the race) reads as
+                    // absent — one deleted object must not turn the
+                    // whole negotiation into "everything is missing".
+                    if let Ok(meta) = f.metadata() {
+                        out.push((oid, meta.len()));
+                    }
                 }
             }
         }
@@ -307,6 +366,54 @@ mod tests {
         let td2 = TempDir::new("lfs-empty").unwrap();
         let empty = LfsStore::open(td2.path());
         assert_eq!(empty.contains_all(&want[..5]), vec![false; 5]);
+    }
+
+    #[test]
+    fn stat_all_reports_sizes_on_both_paths() {
+        let td = TempDir::new("lfs-stat").unwrap();
+        let store = LfsStore::open(td.path());
+        let a = store.put(&[1u8; 10]).unwrap().0;
+        let b = store.put(&[2u8; 999]).unwrap().0;
+        let ghost = Oid::of_bytes(b"ghost");
+
+        // Small want-set: direct stats, sizes included, no scan.
+        let scans = dir_scans();
+        assert_eq!(store.stat_all(&[a, ghost, b]), vec![Some(10), None, Some(999)]);
+        assert_eq!(dir_scans(), scans);
+
+        // Large want-set over a small store: one scan, same answers.
+        let mut want = vec![a, b];
+        for i in 0..30u8 {
+            want.push(Oid::of_bytes(&[b'g', i]));
+        }
+        let scans = dir_scans();
+        let stats = store.stat_all(&want);
+        assert_eq!(dir_scans() - scans, 1);
+        assert_eq!(stats[0], Some(10));
+        assert_eq!(stats[1], Some(999));
+        assert!(stats[2..].iter().all(|s| s.is_none()));
+    }
+
+    #[test]
+    fn negotiation_against_a_big_store_stats_instead_of_scanning() {
+        // A store holding far more objects than the want-set must not
+        // be walked end to end: the size estimate flips the crossover
+        // to per-oid stats.
+        let td = TempDir::new("lfs-big").unwrap();
+        let store = LfsStore::open(td.path());
+        let held: Vec<Oid> = (0..300u16)
+            .map(|i| store.put(&i.to_le_bytes()).unwrap().0)
+            .collect();
+        let mut want: Vec<Oid> = held[..12].to_vec();
+        for i in 0..8u8 {
+            want.push(Oid::of_bytes(&[b'x', i]));
+        }
+        assert!(want.len() > 16, "want-set must be past the direct-stat cutoff");
+        let scans = dir_scans();
+        let stats = store.stat_all(&want);
+        assert_eq!(dir_scans(), scans, "a big store must answer via stats, not a scan");
+        assert!(stats[..12].iter().all(|s| s == &Some(2)));
+        assert!(stats[12..].iter().all(|s| s.is_none()));
     }
 
     #[test]

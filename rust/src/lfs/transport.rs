@@ -39,9 +39,17 @@ pub struct WireReport {
 
 /// A channel that can negotiate and move packs with a remote store.
 ///
+/// The pack operations are **streaming end to end**: a transport moves
+/// packs between stores and spill files (client staging dirs, server
+/// caches) in bounded chunks, so peak memory scales with the largest
+/// object plus a small window — never with pack size. That is why the
+/// trait deals in *stores* rather than pack blobs: handing a
+/// `Vec<u8>` across the trait boundary would force the whole pack into
+/// RAM on both sides.
+///
 /// Implementations must be cheap to call concurrently: the
 /// `Prefetcher` fans sharded packs across worker threads, each calling
-/// [`RemoteTransport::fetch_pack_blob`] / `send_pack_blob` with its
+/// [`RemoteTransport::fetch_pack_into`] / `send_pack_from` with its
 /// own shard. Negotiation counters are recorded by the transport (one
 /// per [`RemoteTransport::batch`] call); pack/object/byte counters are
 /// recorded by the orchestrator.
@@ -53,23 +61,29 @@ pub trait RemoteTransport: Send + Sync {
     /// present (with sizes, for shard planning) and missing.
     fn batch(&self, want: &[Oid]) -> Result<BatchResponse>;
 
-    /// Obtain a pack holding `oids`, assembled by the remote side.
+    /// Obtain a pack holding `oids` from the remote side and admit its
+    /// objects into `dest`, streaming (the pack is checksum-verified
+    /// before anything is admitted, and never fully RAM-resident).
     ///
     /// Resumable: if a previous call was interrupted, implementations
-    /// may re-request only the missing tail and splice it onto the
-    /// persisted prefix. The returned blob is always the complete,
-    /// checksum-verified pack.
-    fn fetch_pack_blob(&self, oids: &[Oid], threads: usize) -> Result<(Vec<u8>, WireReport)>;
+    /// may re-request only the missing tail of the persisted partial.
+    fn fetch_pack_into(
+        &self,
+        oids: &[Oid],
+        dest: &LfsStore,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)>;
 
-    /// Deliver a pack blob (id = [`pack_id`](super::pack::pack_id)) to
-    /// the remote side, which verifies and fans it into its store.
+    /// Assemble a pack of `oids` from `src` and deliver it to the
+    /// remote side, which verifies and fans it into its store. The
+    /// pack spills to a file and streams out in bounded chunks.
     ///
     /// Resumable: if the remote persisted a partial body from an
     /// interrupted attempt, only the tail is re-sent.
-    fn send_pack_blob(
+    fn send_pack_from(
         &self,
-        pack_id: &str,
-        pack: &[u8],
+        src: &LfsStore,
+        oids: &[Oid],
         threads: usize,
     ) -> Result<(PackStats, WireReport)>;
 

@@ -212,6 +212,38 @@ pub fn reconstruct(
     apply_entry(access, entry, prev.as_deref())
 }
 
+/// `rtol` of the exact `allclose` fallback (numpy's default; paper:
+/// "weights that have a Euclidean distance ∈ [1e-8, 1e-6] are checked
+/// with np.allclose"). Shared by the clean filter's change probe and
+/// the merge/diff engines' change-skipping.
+pub const EXACT_RTOL: f64 = 1e-5;
+
+/// `atol` of the exact `allclose` fallback (numpy's default).
+pub const EXACT_ATOL: f64 = 1e-8;
+
+/// Exact value-equality fallback for the LSH `NeedsExactCheck` band:
+/// reconstruct both entries (through a shared cache when given — the
+/// two chains usually share a prefix) and compare with `allclose`
+/// under [`EXACT_RTOL`]/[`EXACT_ATOL`].
+///
+/// Shape or dtype mismatches are `false` without reconstructing.
+/// This is the expensive half of the paper's two-tier change check;
+/// callers reach it only for the rare ambiguous band, never for
+/// signatures the LSH already classifies.
+pub fn values_equal_exact(
+    access: &ObjectAccess,
+    a: &GroupMetadata,
+    b: &GroupMetadata,
+    cache: Option<&ReconstructionCache>,
+) -> Result<bool> {
+    if a.tensor.shape != b.tensor.shape || a.tensor.dtype != b.tensor.dtype {
+        return Ok(false);
+    }
+    let ta = reconstruct(access, a, cache)?;
+    let tb = reconstruct(access, b, cache)?;
+    Ok(crate::tensor::allclose(&ta, &tb, EXACT_RTOL, EXACT_ATOL)?)
+}
+
 /// What [`snapshot_metadata`] did to a model.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SnapshotReport {

@@ -50,18 +50,54 @@ pub struct ModelDiff {
 
 impl ModelDiff {
     /// Compute the group-level diff between two metadata versions.
-    /// Pure metadata/LSH comparison — no tensor is ever reconstructed.
+    /// Pure metadata/LSH comparison — no tensor is ever reconstructed;
+    /// the ambiguous LSH band conservatively classifies as modified.
     pub fn between(old: Option<&ModelMetadata>, new: Option<&ModelMetadata>) -> ModelDiff {
         let empty = ModelMetadata::new("");
         let old = old.unwrap_or(&empty);
         let new = new.unwrap_or(&empty);
+        Self::classify(old, new, |_, _| Ok(false))
+            .expect("conservative ambiguity resolver cannot fail")
+    }
+
+    /// Like [`ModelDiff::between`], but groups whose LSH comparison
+    /// lands in the ambiguous `NeedsExactCheck` band are settled by
+    /// the exact fallback — reconstruct both sides (through `cache`)
+    /// and compare with `allclose` — instead of conservatively
+    /// reported as modified. A numerically identical rewrite whose
+    /// distance estimate sits in [1e-8, 1e-6] therefore classifies as
+    /// re-anchored, and `--exact` never computes an L2 for it.
+    pub fn between_exact(
+        access: &ObjectAccess,
+        old: &ModelMetadata,
+        new: &ModelMetadata,
+        cache: Option<&ReconstructionCache>,
+    ) -> Result<ModelDiff> {
+        Self::classify(old, new, |o, n| checkout::values_equal_exact(access, o, n, cache))
+    }
+
+    /// The one classification walk both modes share; `ambiguous_equal`
+    /// decides the LSH `NeedsExactCheck` band (constant `false` for
+    /// the metadata-only mode, the exact reconstruct + `allclose`
+    /// fallback for `--exact`).
+    fn classify(
+        old: &ModelMetadata,
+        new: &ModelMetadata,
+        mut ambiguous_equal: impl FnMut(&GroupMetadata, &GroupMetadata) -> Result<bool>,
+    ) -> Result<ModelDiff> {
+        use crate::theta::metadata::ValueMatch;
         let mut diff = ModelDiff::default();
         for (name, entry) in &new.groups {
             match old.groups.get(name) {
                 None => diff.added.push(name.clone()),
                 Some(o) if o == entry => diff.unchanged += 1,
-                Some(o) if o.values_match(entry) => diff.reanchored.push(name.clone()),
-                Some(_) => diff.modified.push(name.clone()),
+                Some(o) => match o.values_verdict(entry) {
+                    ValueMatch::Equal => diff.reanchored.push(name.clone()),
+                    ValueMatch::Ambiguous if ambiguous_equal(o, entry)? => {
+                        diff.reanchored.push(name.clone())
+                    }
+                    _ => diff.modified.push(name.clone()),
+                },
             }
         }
         for name in old.groups.keys() {
@@ -69,7 +105,7 @@ impl ModelDiff {
                 diff.removed.push(name.clone());
             }
         }
-        diff
+        Ok(diff)
     }
 
     /// True when nothing changed (not even a value-preserving
@@ -174,7 +210,12 @@ pub fn exact_diff(
     new: &ModelMetadata,
     threads: usize,
 ) -> Result<Vec<ValueDelta>> {
-    let diff = ModelDiff::between(Some(old), Some(new));
+    let cache = ReconstructionCache::new();
+    // Exact-mode classification: ambiguous LSH bands get the allclose
+    // fallback here (their reconstructions land in the shared cache,
+    // so nothing is decoded twice), and groups it proves value-equal
+    // drop out of the L2 stage entirely.
+    let diff = ModelDiff::between_exact(access, old, new, Some(&cache))?;
     let pairs: Vec<(&String, &GroupMetadata, &GroupMetadata)> = diff
         .modified
         .iter()
@@ -196,7 +237,6 @@ pub fn exact_diff(
     oids.dedup();
     access.prefetch(&oids)?;
 
-    let cache = ReconstructionCache::new();
     par::try_par_map(&pairs, threads, |_, pair| {
         let (name, o, n) = *pair;
         if o.tensor.shape != n.tensor.shape || o.tensor.dtype != n.tensor.dtype {
@@ -410,6 +450,59 @@ mod tests {
         assert_eq!(deltas.len(), 1);
         assert_eq!(deltas[0].l2, None);
         assert!(render_exact(&deltas).contains("shape changed"));
+    }
+
+    #[test]
+    fn ambiguous_band_reclassifies_as_reanchored_in_exact_mode() {
+        use crate::theta::filter::store_payload;
+        use crate::theta::lsh::{LshSignature, LshVerdict};
+        use crate::theta::updates::UpdatePayload;
+        use crate::util::rng::Pcg64;
+
+        // Deterministically probe seeds for a pair in the ambiguous
+        // LSH band (see the matching merge-engine test).
+        let n = 4096usize;
+        let (base, near) = (0..200u64)
+            .find_map(|seed| {
+                let mut rng = Pcg64::new(2000 + seed);
+                let base: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 2e-3).collect();
+                let per = 3e-8f32 / (n as f32).sqrt();
+                let near: Vec<f32> = base.iter().map(|v| v + per).collect();
+                let a = LshSignature::of_values(&base);
+                let b = LshSignature::of_values(&near);
+                (a.compare(&b) == LshVerdict::NeedsExactCheck).then(|| (base, near))
+            })
+            .expect("no ambiguous pair in 200 deterministic seeds");
+
+        let td = TempDir::new("diff-ambiguous").unwrap();
+        let acc = ObjectAccess {
+            store: LfsStore::open(td.path()),
+            remote: None,
+        };
+        let dense = |vals: &[f32]| {
+            let t = Tensor::from_f32(vec![vals.len()], vals.to_vec()).unwrap();
+            let sig = LshSignature::of_tensor(&t).unwrap();
+            let mut payload = UpdatePayload::new("dense");
+            payload.tensors.insert("values".into(), t.clone());
+            store_payload(&acc, &t, sig, payload, None).unwrap()
+        };
+        let mut v1 = ModelMetadata::new("safetensors");
+        v1.groups.insert("w".into(), dense(&base));
+        let mut v2 = ModelMetadata::new("safetensors");
+        v2.groups.insert("w".into(), dense(&near));
+
+        // Metadata-only classification stays conservative: modified.
+        let plain = ModelDiff::between(Some(&v1), Some(&v2));
+        assert_eq!(plain.modified, vec!["w"]);
+        assert!(plain.reanchored.is_empty());
+
+        // Exact mode settles the band: re-anchored (skip count
+        // improves), and the L2 stage has nothing left to reconstruct.
+        let exact = ModelDiff::between_exact(&acc, &v1, &v2, None).unwrap();
+        assert_eq!(exact.reanchored, vec!["w"]);
+        assert!(exact.modified.is_empty());
+        let deltas = exact_diff(&acc, &v1, &v2, 1).unwrap();
+        assert!(deltas.is_empty());
     }
 
     #[test]

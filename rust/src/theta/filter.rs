@@ -210,7 +210,7 @@ fn clean_group(
                     // value. The probe's reconstruction memoizes the
                     // chain, so the changed path below reuses it.
                     let prev_value = checkout::reconstruct(access, pe, cache)?;
-                    if allclose(tensor, &prev_value, 1e-5, 1e-8)? {
+                    if allclose(tensor, &prev_value, checkout::EXACT_RTOL, checkout::EXACT_ATOL)? {
                         return Ok(pe.clone());
                     }
                     return store_changed(access, tensor, sig, Some((pe, prev_value)), opts);

@@ -17,6 +17,9 @@ use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 
+/// Git-Theta's repository [`Hooks`] implementation: records each
+/// commit's newly introduced LFS objects (post-commit) and batch-syncs
+/// the union of pushed commits' objects to the remote (pre-push).
 pub struct ThetaHooks;
 
 fn commits_dir(repo: &Repository) -> PathBuf {

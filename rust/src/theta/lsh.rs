@@ -88,7 +88,11 @@ pub fn params() -> &'static LshParams {
 /// An LSH signature: bucket ids plus the raw projections they came from.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LshSignature {
+    /// Quantized bucket id per hash function: `floor((y_j + b_j) / W)`.
     pub buckets: [i64; NUM_HASHES],
+    /// Raw pooled projections `y_j` the buckets were derived from;
+    /// kept because projection deltas give an unbiased distance
+    /// estimate between two versions ([`LshSignature::distance_estimate`]).
     pub projections: [f64; NUM_HASHES],
 }
 
@@ -144,6 +148,7 @@ impl LshSignature {
         }
     }
 
+    /// Encode for embedding in the metadata file Git versions.
     pub fn to_json(&self) -> Json {
         let mut obj = JsonObj::new();
         obj.insert(
@@ -157,6 +162,7 @@ impl LshSignature {
         Json::Obj(obj)
     }
 
+    /// Decode a signature previously written by [`LshSignature::to_json`].
     pub fn from_json(json: &Json) -> Result<LshSignature> {
         let buckets_arr = json
             .get("buckets")
@@ -185,9 +191,13 @@ impl LshSignature {
 /// Result of an LSH comparison.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LshVerdict {
+    /// Equal buckets and distance estimate ≤ [`DIST_LOWER`]: the
+    /// values are the same to the paper's 1e-8 bound.
     Unchanged,
-    /// Distance estimate in the ambiguous band: run `allclose`.
+    /// Distance estimate in the ambiguous band: run `allclose`
+    /// (`theta::checkout::values_equal_exact` is the fallback).
     NeedsExactCheck,
+    /// Different buckets, or distance estimate > [`DIST_UPPER`].
     Changed,
 }
 

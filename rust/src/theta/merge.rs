@@ -327,6 +327,11 @@ pub struct MergeStats {
     /// Conflicts auto-resolved by LSH value-equality — never
     /// reconstructed (the change-skipping lever).
     pub value_skipped: usize,
+    /// LSH comparisons that landed in the ambiguous `NeedsExactCheck`
+    /// band and were settled by reconstructing both sides and running
+    /// `allclose` (the exact-check fallback; each may have enabled a
+    /// skip that conservative classification would have resolved).
+    pub exact_checks: u64,
     /// Conflicted groups resolved by a strategy, as "name (strategy)"
     /// in deterministic (name) order.
     pub resolved: Vec<String>,
@@ -343,11 +348,12 @@ impl MergeStats {
     /// One-line `--verbose` summary for a merged file.
     pub fn render_verbose(&self, path: &str) -> String {
         format!(
-            "merge '{path}': {} group(s) — {} trivial, {} value-skipped, {} resolved; \
-             cache {} hit(s) / {} miss(es); {} object(s) prefetched",
+            "merge '{path}': {} group(s) — {} trivial, {} value-skipped ({} exact check(s)), \
+             {} resolved; cache {} hit(s) / {} miss(es); {} object(s) prefetched",
             self.groups,
             self.trivial,
             self.value_skipped,
+            self.exact_checks,
             self.resolved.len(),
             self.cache_hits,
             self.cache_misses,
@@ -356,15 +362,42 @@ impl MergeStats {
     }
 }
 
-/// True when both entries exist and [`GroupMetadata::values_match`]
-/// proves them value-equal. The ambiguous `NeedsExactCheck` band
-/// deliberately returns false — skipping must never be less safe than
-/// resolving.
-fn values_unchanged(x: Option<&GroupMetadata>, y: Option<&GroupMetadata>) -> bool {
-    match (x, y) {
-        (Some(x), Some(y)) => x.values_match(y),
-        _ => false,
-    }
+/// True when both entries exist and their values are provably equal:
+/// either the LSH signatures prove it outright
+/// ([`GroupMetadata::values_verdict`] → `Equal`), or the estimate
+/// lands in the ambiguous `NeedsExactCheck` band and the **exact
+/// fallback** — reconstruct both sides through the engine's shared
+/// cache, compare with `allclose` — settles it (paper: "weights that
+/// have a Euclidean distance ∈ [1e-8, 1e-6] are checked with
+/// np.allclose"). Skipping is therefore never less safe than
+/// resolving, and near-identical re-anchors no longer force a
+/// strategy.
+///
+/// Exact checks run during serial classification, *before* the batched
+/// prefetch, so a remote-backed store fetches their chain objects
+/// lazily — acceptable because the ambiguous band is rare by
+/// construction (LSH calibration puts ≥99% of unchanged groups in
+/// `Equal`); batching ambiguous pairs into their own prefetch is the
+/// follow-up if real workloads disagree.
+fn values_unchanged(
+    access: &ObjectAccess,
+    cache: Option<&ReconstructionCache>,
+    exact_checks: &mut u64,
+    x: Option<&GroupMetadata>,
+    y: Option<&GroupMetadata>,
+) -> Result<bool> {
+    let (x, y) = match (x, y) {
+        (Some(x), Some(y)) => (x, y),
+        _ => return Ok(false),
+    };
+    Ok(match x.values_verdict(y) {
+        crate::theta::metadata::ValueMatch::Equal => true,
+        crate::theta::metadata::ValueMatch::Different => false,
+        crate::theta::metadata::ValueMatch::Ambiguous => {
+            *exact_checks += 1;
+            checkout::values_equal_exact(access, x, y, cache)?
+        }
+    })
 }
 
 /// A classified conflict awaiting (parallel) resolution.
@@ -382,7 +415,9 @@ struct Conflict<'a> {
 ///
 /// Phases (each lever independently toggleable via [`EngineOptions`]):
 ///
-/// 1. **Classify** (serial, metadata-only). Groups equal on both sides,
+/// 1. **Classify** (serial, metadata-only except the rare ambiguous
+///    band, which falls back to an exact reconstruct + `allclose`
+///    through the shared cache). Groups equal on both sides,
 ///    or changed on only one, merge trivially. Remaining conflicts
 ///    whose LSH signatures prove one side value-unchanged are resolved
 ///    by picking the other side — ours-vs-theirs value-equal keeps
@@ -418,9 +453,19 @@ pub fn merge_metadata_opts(
         ..Default::default()
     };
 
+    // The shared cache is created before classification: the exact
+    // fallback for ambiguous LSH bands reconstructs through it, and
+    // any prefix it resolves is reused by phase-3 strategies.
+    let cache = if engine.cache {
+        Some(ReconstructionCache::new())
+    } else {
+        None
+    };
+
     // Phase 1: classification. `Some(pick)` keeps (or, for None-pick,
-    // drops) the group without reconstruction; unresolved conflicts
-    // accumulate for the parallel phase.
+    // drops) the group without reconstruction (except for rare
+    // ambiguous-band exact checks); unresolved conflicts accumulate
+    // for the parallel phase.
     let mut conflicts: Vec<Conflict> = Vec::new();
     for name in names {
         let o = anc.groups.get(name);
@@ -456,15 +501,19 @@ pub fn merge_metadata_opts(
             .iter()
             .any(|(pattern, _)| Glob::new(pattern).matches(name));
         if engine.value_skip && !per_group_override {
-            // Metadata differs on both sides, but the LSH signatures
+            // Metadata differs on both sides, but the LSH signatures —
+            // with the exact allclose fallback for ambiguous bands —
             // may still prove one side value-unchanged (e.g. a snapshot
-            // re-anchor). Prefer keeping our entry when both sides are
+            // re-anchor, or a bitwise-drifted but numerically identical
+            // rewrite). Prefer keeping our entry when both sides are
             // value-equal.
-            let pick: Option<Option<&GroupMetadata>> = if values_unchanged(a, b) {
+            let c = cache.as_ref();
+            let x = &mut stats.exact_checks;
+            let pick: Option<Option<&GroupMetadata>> = if values_unchanged(access, c, x, a, b)? {
                 Some(a)
-            } else if values_unchanged(a, o) {
+            } else if values_unchanged(access, c, x, a, o)? {
                 Some(b)
-            } else if values_unchanged(b, o) {
+            } else if values_unchanged(access, c, x, b, o)? {
                 Some(a)
             } else {
                 None
@@ -508,13 +557,8 @@ pub fn merge_metadata_opts(
         access.prefetch(&oids)?;
     }
 
-    // Phase 3: parallel resolution with a shared cache; assembly in
+    // Phase 3: parallel resolution with the shared cache; assembly in
     // input (name) order keeps the output deterministic.
-    let cache = if engine.cache {
-        Some(ReconstructionCache::new())
-    } else {
-        None
-    };
     let entries = par::try_par_map(&conflicts, engine.threads, |_, c| {
         c.strategy
             .resolve(&ConflictCtx {
@@ -1005,18 +1049,121 @@ mod tests {
     }
 
     #[test]
+    fn ambiguous_band_falls_back_to_exact_check_and_skips() {
+        use crate::theta::lsh::{LshSignature, LshVerdict};
+        use crate::theta::metadata::ValueMatch;
+        use crate::theta::updates::UpdatePayload;
+        use crate::util::rng::Pcg64;
+
+        // Find a deterministic pair of value vectors whose LSH
+        // comparison lands in the ambiguous NeedsExactCheck band
+        // (distance ~3e-8, inside [1e-8, 1e-6]) — the estimate has
+        // sampling spread, so probe seeds until one lands.
+        let n = 4096usize;
+        let (base, near) = (0..200u64)
+            .find_map(|seed| {
+                let mut rng = Pcg64::new(1000 + seed);
+                let base: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 2e-3).collect();
+                let per = 3e-8f32 / (n as f32).sqrt();
+                let near: Vec<f32> = base.iter().map(|v| v + per).collect();
+                let a = LshSignature::of_values(&base);
+                let b = LshSignature::of_values(&near);
+                (a.compare(&b) == LshVerdict::NeedsExactCheck).then(|| (base, near))
+            })
+            .expect("no ambiguous pair in 200 deterministic seeds");
+
+        let td = TempDir::new("merge-exact").unwrap();
+        let acc = access(&td);
+        let dense = |vals: &[f32]| -> GroupMetadata {
+            let t = Tensor::from_f32(vec![vals.len()], vals.to_vec()).unwrap();
+            let sig = LshSignature::of_tensor(&t).unwrap();
+            let mut payload = UpdatePayload::new("dense");
+            payload.tensors.insert("values".into(), t.clone());
+            store_payload(&acc, &t, sig, payload, None).unwrap()
+        };
+        let e_base = dense(&base);
+        let e_near = dense(&near); // ours: numerically identical rewrite
+        let mut changed = base.clone();
+        changed[0] += 0.5;
+        let e_changed = dense(&changed); // theirs: a real value change
+        assert_eq!(e_base.values_verdict(&e_near), ValueMatch::Ambiguous);
+
+        let mk = |e: &GroupMetadata| {
+            let mut m = ModelMetadata::new("safetensors");
+            m.groups.insert("w".to_string(), e.clone());
+            m
+        };
+        let (anc, ours, theirs) = (mk(&e_base), mk(&e_near), mk(&e_changed));
+
+        // Exact fallback proves ours value-unchanged vs the ancestor →
+        // theirs' change wins with no strategy and no conflict.
+        let (merged, stats) = merge_metadata_opts(
+            &acc,
+            Some(&anc),
+            &ours,
+            &theirs,
+            &MergeOptions::default(),
+            &EngineOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(stats.value_skipped, 1, "{stats:?}");
+        assert!(stats.exact_checks >= 1, "{stats:?}");
+        assert!(stats.resolved.is_empty());
+        assert_eq!(merged.groups["w"], theirs.groups["w"]);
+
+        // Parity: byte-identical to an explicit "them" resolution.
+        let (explicit, _) = merge_metadata_opts(
+            &acc,
+            Some(&anc),
+            &ours,
+            &theirs,
+            &opts("them"),
+            &EngineOptions {
+                value_skip: false,
+                ..EngineOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(merged.to_bytes(), explicit.to_bytes());
+
+        // With skipping off the same merge demands a strategy — the
+        // fallback is what rescued it.
+        let err = merge_metadata_opts(
+            &acc,
+            Some(&anc),
+            &ours,
+            &theirs,
+            &MergeOptions::default(),
+            &EngineOptions {
+                value_skip: false,
+                ..EngineOptions::default()
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("conflict in parameter group 'w'"), "{err:#}");
+    }
+
+    #[test]
     fn verbose_stats_render_mentions_counters() {
         let s = MergeStats {
             groups: 5,
             trivial: 2,
             value_skipped: 1,
+            exact_checks: 1,
             resolved: vec!["w (average)".into()],
             cache_hits: 3,
             cache_misses: 7,
             prefetched: 4,
         };
         let line = s.render_verbose("model.safetensors");
-        for needle in ["5 group(s)", "2 trivial", "1 value-skipped", "3 hit", "7 miss"] {
+        for needle in [
+            "5 group(s)",
+            "2 trivial",
+            "1 value-skipped",
+            "1 exact check(s)",
+            "3 hit",
+            "7 miss",
+        ] {
             assert!(line.contains(needle), "{line}");
         }
         assert!(line.contains("4 object(s) prefetched"), "{line}");

@@ -203,10 +203,38 @@ impl GroupMetadata {
     /// the diff driver's re-anchor classification both rely on that
     /// one-sidedness.
     pub fn values_match(&self, other: &GroupMetadata) -> bool {
-        self.tensor.shape == other.tensor.shape
-            && self.tensor.dtype == other.tensor.dtype
-            && self.tensor.lsh.compare(&other.tensor.lsh) == LshVerdict::Unchanged
+        self.values_verdict(other) == ValueMatch::Equal
     }
+
+    /// Tri-state LSH comparison of this entry's values against
+    /// `other`'s: proven equal, proven different, or inside the
+    /// ambiguous band where only an exact reconstruction + `allclose`
+    /// can decide (paper: distances in [1e-8, 1e-6] are checked with
+    /// `np.allclose`). Shape/dtype mismatches are definitively
+    /// different. Callers that cannot afford the exact check treat
+    /// [`ValueMatch::Ambiguous`] as different — the safe direction.
+    pub fn values_verdict(&self, other: &GroupMetadata) -> ValueMatch {
+        if self.tensor.shape != other.tensor.shape || self.tensor.dtype != other.tensor.dtype {
+            return ValueMatch::Different;
+        }
+        match self.tensor.lsh.compare(&other.tensor.lsh) {
+            LshVerdict::Unchanged => ValueMatch::Equal,
+            LshVerdict::NeedsExactCheck => ValueMatch::Ambiguous,
+            LshVerdict::Changed => ValueMatch::Different,
+        }
+    }
+}
+
+/// Outcome of [`GroupMetadata::values_verdict`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValueMatch {
+    /// LSH proves the values equal (distance ≤ 1e-8 bound).
+    Equal,
+    /// Distance estimate inside the ambiguous band: run the exact
+    /// check ([`values_equal_exact`](crate::theta::checkout::values_equal_exact)).
+    Ambiguous,
+    /// Values (or shape/dtype) provably differ.
+    Different,
 }
 
 /// The whole metadata file: one entry per parameter group.

@@ -1,17 +1,32 @@
-//! Minimal dependency-free HTTP/1.1 codec over `std::net`.
+//! Minimal dependency-free HTTP/1.1 codec over `std::net`, with
+//! keep-alive connection pooling and streaming bodies.
 //!
 //! The offline vendor set has no hyper/reqwest, so the HTTP remote
-//! backend (`lfs/http.rs`, `lfs/server.rs`) and the fault-injection
-//! proxy (`lfs/faults.rs`) share this hand-rolled request/response
-//! codec. It deliberately supports only the slice the wire protocol
-//! needs: one request per connection (`Connection: close`),
-//! `Content-Length`-framed bodies, and byte-exact visibility into
-//! *partial* bodies — a transfer cut mid-flight must surface the bytes
-//! that did arrive (for resume persistence), not an opaque error.
+//! backend (`lfs/http.rs`, `lfs/server.rs`), the commit/ref endpoint
+//! (`gitcore/remote.rs`), and the fault-injection proxy
+//! (`lfs/faults.rs`) share this hand-rolled codec. It deliberately
+//! supports only the slice the wire protocol needs:
+//!
+//! * `Content-Length`-framed bodies with **persistent connections**
+//!   (HTTP/1.1 keep-alive): both peers leave the socket open after a
+//!   complete exchange, so a multi-request push or fetch pays one TCP
+//!   connect instead of one per request. [`HttpClient`] is the client
+//!   half — a small per-endpoint pool with reconnect-on-stale
+//!   fallback; the server half is the request loop in `lfs/server.rs`.
+//! * **Streaming bodies**: [`read_body_to`] drains a declared body
+//!   straight into any `io::Write` sink (the pack pipeline streams
+//!   into files, never materializing a pack in RAM) and
+//!   [`HttpClient::send_file`] streams a file region out as a request
+//!   body in fixed-size chunks.
+//! * Byte-exact visibility into *partial* bodies — a transfer cut
+//!   mid-flight must surface the bytes that did arrive (for resume
+//!   persistence), not an opaque error.
 
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Largest accepted head (request/status line + headers).
@@ -23,6 +38,21 @@ const MAX_BODY_BYTES: u64 = 1 << 33;
 
 /// Read/write timeout applied to every transport socket.
 pub const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Chunk size for streaming body copies (socket ↔ file).
+pub const COPY_CHUNK: usize = 64 * 1024;
+
+/// Idle connections kept per [`HttpClient`] pool. Concurrent pack
+/// shards can hold several connections at once; anything beyond this
+/// many returning to the pool is simply closed.
+const POOL_CAP: usize = 8;
+
+/// Maximum age of an idle pooled connection before checkout discards
+/// it. Kept well under the server side's [`IO_TIMEOUT`] (which closes
+/// idle connections), so requests that must not be silently re-sent
+/// (`PUT`s) are never handed a socket the server has probably already
+/// closed.
+const POOL_IDLE_MAX: Duration = Duration::from_secs(15);
 
 /// An HTTP request (client side builds one, server side parses one).
 #[derive(Debug, Clone)]
@@ -75,6 +105,20 @@ impl Request {
     pub fn query(&self) -> Option<&str> {
         self.target.split_once('?').map(|(_, q)| q)
     }
+
+    /// The declared body length (`0` when absent, error when invalid
+    /// or over the transport limit). Used by streaming consumers that
+    /// read the head first and the body separately.
+    pub fn declared_len(&self) -> Result<u64> {
+        content_length(&self.headers)
+    }
+
+    /// Whether the peer asked to close the connection after this
+    /// exchange (HTTP/1.1 defaults to keep-alive).
+    pub fn wants_close(&self) -> bool {
+        self.get_header("connection")
+            .map_or(false, |v| v.eq_ignore_ascii_case("close"))
+    }
 }
 
 /// An HTTP response.
@@ -115,6 +159,31 @@ impl Response {
         self
     }
 
+    /// Case-insensitive header lookup.
+    pub fn get_header(&self, name: &str) -> Option<&str> {
+        header_value(&self.headers, name)
+    }
+}
+
+/// A response whose body was streamed into a caller-provided sink
+/// instead of buffered (see [`HttpClient::fetch_to_sink`]).
+#[derive(Debug)]
+pub struct SinkResponse {
+    /// Status code.
+    pub status: u16,
+    /// Headers, lowercase names.
+    pub headers: Vec<(String, String)>,
+    /// Body bytes written to the sink (streamed statuses only).
+    pub streamed: u64,
+    /// Whether the full declared body arrived. `false` means the
+    /// connection died mid-body; the sink holds the prefix.
+    pub complete: bool,
+    /// Buffered body for statuses the caller did *not* ask to stream
+    /// (error reporting); empty for streamed statuses.
+    pub body: Vec<u8>,
+}
+
+impl SinkResponse {
     /// Case-insensitive header lookup.
     pub fn get_header(&self, name: &str) -> Option<&str> {
         header_value(&self.headers, name)
@@ -190,12 +259,12 @@ fn read_head(stream: &mut TcpStream) -> Result<(String, Vec<u8>)> {
 /// bytes and whether the full declared length arrived. IO errors and
 /// early EOF mid-body are reported as an incomplete body, not an error,
 /// so callers can persist the prefix for a later resume.
-fn read_body(stream: &mut TcpStream, leftover: Vec<u8>, len: u64) -> (Vec<u8>, bool) {
+pub fn read_body(stream: &mut TcpStream, leftover: Vec<u8>, len: u64) -> (Vec<u8>, bool) {
     let mut body = leftover;
     if body.len() as u64 > len {
         body.truncate(len as usize);
     }
-    let mut chunk = [0u8; 65536];
+    let mut chunk = [0u8; COPY_CHUNK];
     while (body.len() as u64) < len {
         match stream.read(&mut chunk) {
             Ok(0) => return (body, false),
@@ -207,6 +276,38 @@ fn read_body(stream: &mut TcpStream, leftover: Vec<u8>, len: u64) -> (Vec<u8>, b
         }
     }
     (body, true)
+}
+
+/// Stream up to `len` body bytes into `sink`, starting from `leftover`.
+///
+/// Returns `(bytes written, complete)`. Socket read errors and early
+/// EOF read as an incomplete body (the sink holds the prefix that
+/// arrived — resume fodder); **sink write errors are real errors** (a
+/// full disk must not masquerade as a network cut). Peak memory is one
+/// [`COPY_CHUNK`], whatever `len` is — this is the receive half of the
+/// streaming pack pipeline.
+pub fn read_body_to<W: Write>(
+    stream: &mut TcpStream,
+    leftover: &[u8],
+    len: u64,
+    sink: &mut W,
+) -> Result<(u64, bool)> {
+    let head = (leftover.len() as u64).min(len) as usize;
+    sink.write_all(&leftover[..head]).context("writing streamed body")?;
+    let mut written = head as u64;
+    let mut chunk = [0u8; COPY_CHUNK];
+    while written < len {
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok((written, false)),
+            Ok(n) => {
+                let want = ((len - written) as usize).min(n);
+                sink.write_all(&chunk[..want]).context("writing streamed body")?;
+                written += want as u64;
+            }
+            Err(_) => return Ok((written, false)),
+        }
+    }
+    Ok((written, true))
 }
 
 fn parse_headers(lines: &mut std::str::Lines<'_>) -> Vec<(String, String)> {
@@ -230,10 +331,13 @@ fn content_length(headers: &[(String, String)]) -> Result<u64> {
     Ok(len)
 }
 
-/// Parse one request from a stream. The `bool` is body completeness —
-/// `false` means the connection died mid-body (the request carries the
-/// prefix that arrived, which pack uploads persist for resume).
-pub fn read_request(stream: &mut TcpStream) -> Result<(Request, bool)> {
+/// Parse a request *head* from a stream: the returned [`Request`] has
+/// an empty body; the second value is any body bytes that arrived in
+/// the same reads (pass them to [`read_body`] / [`read_body_to`]).
+///
+/// This is the server's streaming entry point: routes that spill large
+/// bodies to disk read the head first and drain the body themselves.
+pub fn read_request_head(stream: &mut TcpStream) -> Result<(Request, Vec<u8>)> {
     let (head, leftover) = read_head(stream)?;
     let mut lines = head.lines();
     let start = lines.next().context("empty http request")?;
@@ -241,22 +345,31 @@ pub fn read_request(stream: &mut TcpStream) -> Result<(Request, bool)> {
     let method = parts.next().context("missing method")?.to_ascii_uppercase();
     let target = parts.next().context("missing request target")?.to_string();
     let headers = parse_headers(&mut lines);
-    let len = content_length(&headers)?;
-    let (body, complete) = read_body(stream, leftover, len);
     Ok((
         Request {
             method,
             target,
             headers,
-            body,
+            body: Vec::new(),
         },
-        complete,
+        leftover,
     ))
 }
 
+/// Parse one request from a stream, buffering the body. The `bool` is
+/// body completeness — `false` means the connection died mid-body (the
+/// request carries the prefix that arrived).
+pub fn read_request(stream: &mut TcpStream) -> Result<(Request, bool)> {
+    let (mut req, leftover) = read_request_head(stream)?;
+    let len = req.declared_len()?;
+    let (body, complete) = read_body(stream, leftover, len);
+    req.body = body;
+    Ok((req, complete))
+}
+
 /// Write a request head declaring `content_length` body bytes (which
-/// the caller may then send separately — the fault proxy uses the split
-/// to truncate bodies mid-flight).
+/// the caller then sends separately — streaming uploads and the fault
+/// proxy use the split).
 pub fn write_request_head(
     stream: &mut TcpStream,
     method: &str,
@@ -266,7 +379,7 @@ pub fn write_request_head(
 ) -> Result<()> {
     let mut head = format!("{method} {target} HTTP/1.1\r\n");
     push_headers(&mut head, headers);
-    head.push_str(&format!("content-length: {content_length}\r\nconnection: close\r\n\r\n"));
+    head.push_str(&format!("content-length: {content_length}\r\n\r\n"));
     stream
         .write_all(head.as_bytes())
         .context("writing http request head")
@@ -323,7 +436,7 @@ pub fn write_response_head(
 ) -> Result<()> {
     let mut head = format!("HTTP/1.1 {status} {}\r\n", reason_of(status));
     push_headers(&mut head, headers);
-    head.push_str(&format!("content-length: {content_length}\r\nconnection: close\r\n\r\n"));
+    head.push_str(&format!("content-length: {content_length}\r\n\r\n"));
     stream
         .write_all(head.as_bytes())
         .context("writing http response head")
@@ -338,9 +451,9 @@ pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
     stream.flush().context("flushing http response")
 }
 
-/// Parse one response from a stream. `head_request` suppresses body
-/// reading (HEAD responses declare a length but carry no body).
-pub fn read_response(stream: &mut TcpStream, head_request: bool) -> Result<Response> {
+/// Parse a response *head*: status, headers, and any body bytes that
+/// arrived in the same reads.
+fn read_response_head(stream: &mut TcpStream) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
     let (head, leftover) = read_head(stream)?;
     let mut lines = head.lines();
     let start = lines.next().context("empty http response")?;
@@ -350,6 +463,13 @@ pub fn read_response(stream: &mut TcpStream, head_request: bool) -> Result<Respo
         .and_then(|s| s.parse::<u16>().ok())
         .with_context(|| format!("bad http status line '{start}'"))?;
     let headers = parse_headers(&mut lines);
+    Ok((status, headers, leftover))
+}
+
+/// Parse one response from a stream. `head_request` suppresses body
+/// reading (HEAD responses declare a length but carry no body).
+pub fn read_response(stream: &mut TcpStream, head_request: bool) -> Result<Response> {
+    let (status, headers, leftover) = read_response_head(stream)?;
     if head_request {
         return Ok(Response {
             status,
@@ -368,15 +488,241 @@ pub fn read_response(stream: &mut TcpStream, head_request: bool) -> Result<Respo
     })
 }
 
-/// Connect, send one request, read the response (`Connection: close`).
-pub fn roundtrip(authority: &str, req: &Request) -> Result<Response> {
-    let mut stream = TcpStream::connect(authority)
+fn fresh_connection(authority: &str) -> Result<TcpStream> {
+    let stream = TcpStream::connect(authority)
         .with_context(|| format!("connecting to http remote {authority}"))?;
     stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
     stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
     stream.set_nodelay(true).ok();
+    Ok(stream)
+}
+
+/// Connect, send one request, read the response, drop the connection.
+///
+/// The unpooled one-shot path, kept for tests and the fault proxy;
+/// production clients go through [`HttpClient`] so consecutive
+/// requests reuse one connection.
+pub fn roundtrip(authority: &str, req: &Request) -> Result<Response> {
+    let mut stream = fresh_connection(authority)?;
     write_request(&mut stream, req)?;
     read_response(&mut stream, req.method == "HEAD")
+}
+
+/// Shared HTTP client scaffold: endpoint parsing, a keep-alive
+/// connection pool, and complete-response enforcement.
+///
+/// `lfs/http.rs` (pack transport) and `gitcore/remote.rs` (commit/ref
+/// endpoint) used to each carry their own copy of this plumbing and
+/// opened one TCP connection per request; they now share one scaffold,
+/// and a multi-request push or fetch runs over a single persistent
+/// connection. Pooling rules:
+///
+/// * A connection returns to the pool only after a *complete* response
+///   — a stream that died mid-body is dropped.
+/// * **Reconnect-on-stale**: a pooled connection may have been closed
+///   by an idle timeout or server restart. If the first use of a
+///   *reused* connection fails before a response head arrives, the
+///   request is retried once on a fresh connection — but only for
+///   read-style methods (`GET`/`HEAD`/`POST` queries); `PUT`s are
+///   never silently re-sent, because a resumable pack upload that
+///   half-arrived must surface to its caller's offset logic instead.
+/// * [`HttpClient::connections_opened`] counts real TCP connects, so
+///   tests and the transfer ablation can assert N requests ≤ a handful
+///   of connects.
+#[derive(Debug)]
+pub struct HttpClient {
+    authority: String,
+    url: String,
+    /// Idle connections with the instant they were checked in.
+    pool: Mutex<Vec<(TcpStream, std::time::Instant)>>,
+    opened: AtomicU64,
+}
+
+impl HttpClient {
+    /// Parse an `http://host:port` endpoint (no path component; see
+    /// [`require_rootless`]). No connection is made until first use.
+    pub fn open(url: &str) -> Result<HttpClient> {
+        require_rootless(url)?;
+        Ok(HttpClient {
+            authority: authority_of(url)?,
+            url: url.trim_end_matches('/').to_string(),
+            pool: Mutex::new(Vec::new()),
+            opened: AtomicU64::new(0),
+        })
+    }
+
+    /// The endpoint URL this client talks to.
+    pub fn url(&self) -> &str {
+        &self.url
+    }
+
+    /// How many TCP connections this client has opened since creation.
+    /// With keep-alive working, this stays far below the request count.
+    pub fn connections_opened(&self) -> u64 {
+        self.opened.load(Ordering::Relaxed)
+    }
+
+    /// Take a pooled connection (true = reused) or dial a fresh one.
+    /// Pooled connections idle past [`POOL_IDLE_MAX`] are discarded —
+    /// the peer's idle timeout has probably closed them, and a `PUT`
+    /// handed a dead socket cannot be silently re-sent.
+    fn checkout(&self) -> Result<(TcpStream, bool)> {
+        {
+            let mut pool = self.pool.lock().unwrap();
+            while let Some((stream, since)) = pool.pop() {
+                if since.elapsed() < POOL_IDLE_MAX {
+                    return Ok((stream, true));
+                }
+                // too old: drop and keep looking
+            }
+        }
+        let stream = fresh_connection(&self.authority)?;
+        self.opened.fetch_add(1, Ordering::Relaxed);
+        Ok((stream, false))
+    }
+
+    /// Return a healthy connection to the pool.
+    fn checkin(&self, stream: TcpStream) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push((stream, std::time::Instant::now()));
+        }
+    }
+
+    fn may_retry_stale(method: &str) -> bool {
+        matches!(method, "GET" | "HEAD" | "POST")
+    }
+
+    /// The one copy of the stale-retry policy: write `req` over a
+    /// pooled connection, run `exchange` to read (at least) the
+    /// response head, and — iff the connection was a *reused* one that
+    /// failed before `exchange` succeeded, and the method is
+    /// retry-safe — clear the pool (its other members are just as
+    /// likely dead) and retry once on a fresh dial. Returns the live
+    /// stream so the caller can drain the body and decide on checkin.
+    fn with_connection<T>(
+        &self,
+        req: &Request,
+        mut exchange: impl FnMut(&mut TcpStream) -> Result<T>,
+    ) -> Result<(TcpStream, T)> {
+        let retryable = Self::may_retry_stale(&req.method);
+        for attempt in 0..2 {
+            let (mut stream, reused) = self.checkout()?;
+            match write_request(&mut stream, req).and_then(|_| exchange(&mut stream)) {
+                Ok(v) => return Ok((stream, v)),
+                Err(_) if reused && retryable && attempt == 0 => {
+                    self.pool.lock().unwrap().clear();
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!("stale-retry loop always returns on the fresh attempt");
+    }
+
+    /// Send a buffered request over a pooled connection and read the
+    /// (possibly incomplete) response.
+    pub fn roundtrip(&self, req: &Request) -> Result<Response> {
+        let (stream, resp) =
+            self.with_connection(req, |s| read_response(s, req.method == "HEAD"))?;
+        if resp.complete {
+            self.checkin(stream);
+        }
+        Ok(resp)
+    }
+
+    /// [`HttpClient::roundtrip`] + require a complete response body.
+    pub fn send(&self, req: &Request) -> Result<Response> {
+        let resp = self.roundtrip(req)?;
+        if !resp.complete {
+            bail!("connection to {} interrupted mid-response", self.url);
+        }
+        Ok(resp)
+    }
+
+    /// Stream `body_len` bytes of `file` starting at `offset` as the
+    /// body of a request, in [`COPY_CHUNK`] pieces — the send half of
+    /// the streaming pack pipeline (peak memory is one chunk, whatever
+    /// the pack size). Never stale-retried: a partially delivered
+    /// upload must surface to the caller's resume-offset logic.
+    pub fn send_file(
+        &self,
+        method: &str,
+        target: &str,
+        headers: &[(String, String)],
+        file: &mut std::fs::File,
+        offset: u64,
+        body_len: u64,
+    ) -> Result<Response> {
+        file.seek(SeekFrom::Start(offset)).context("seeking pack file")?;
+        let (mut stream, _reused) = self.checkout()?;
+        write_request_head(&mut stream, method, target, headers, body_len)?;
+        let mut sent = 0u64;
+        let mut chunk = vec![0u8; COPY_CHUNK];
+        while sent < body_len {
+            let want = ((body_len - sent) as usize).min(chunk.len());
+            file.read_exact(&mut chunk[..want])
+                .context("reading pack file for upload")?;
+            stream
+                .write_all(&chunk[..want])
+                .context("writing streamed request body")?;
+            sent += want as u64;
+        }
+        stream.flush().context("flushing streamed request")?;
+        let resp = read_response(&mut stream, method == "HEAD")?;
+        // Only a 200 proves the server drained our whole body; on an
+        // early error response (409 offset conflict, 400) it closes
+        // the connection instead, so pooling it would hand the next
+        // request a dead socket.
+        if resp.complete && resp.status == 200 {
+            self.checkin(stream);
+        }
+        Ok(resp)
+    }
+
+    /// Send a request and stream the response body into `sink` when
+    /// the status is in `stream_statuses`; other statuses buffer their
+    /// (small) body for error reporting — a 404 must not pollute a
+    /// partial-pack file. Incomplete bodies are reported via
+    /// [`SinkResponse::complete`], with the received prefix already in
+    /// the sink.
+    pub fn fetch_to_sink<W: Write>(
+        &self,
+        req: &Request,
+        stream_statuses: &[u16],
+        sink: &mut W,
+    ) -> Result<SinkResponse> {
+        // Only the head read sits inside the retry window: once it
+        // arrives, body bytes may touch the sink and a silent re-send
+        // would be unsound, so the body is drained out here.
+        let (mut stream, (status, headers, leftover)) =
+            self.with_connection(req, read_response_head)?;
+        let len = content_length(&headers)?;
+        if !stream_statuses.contains(&status) {
+            let (body, complete) = read_body(&mut stream, leftover, len);
+            if complete {
+                self.checkin(stream);
+            }
+            return Ok(SinkResponse {
+                status,
+                headers,
+                streamed: 0,
+                complete,
+                body,
+            });
+        }
+        let (streamed, complete) = read_body_to(&mut stream, &leftover, len, sink)?;
+        if complete {
+            self.checkin(stream);
+        }
+        Ok(SinkResponse {
+            status,
+            headers,
+            streamed,
+            complete,
+            body: Vec::new(),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -404,28 +750,124 @@ mod tests {
         assert_eq!(Request::new("GET", "/x").query(), None);
     }
 
-    #[test]
-    fn roundtrip_over_real_socket() {
+    /// A tiny keep-alive echo server: answers every request on a
+    /// connection until the peer closes.
+    fn spawn_echo() -> std::net::SocketAddr {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let server = std::thread::spawn(move || {
-            let (mut stream, _) = listener.accept().unwrap();
-            let (req, complete) = read_request(&mut stream).unwrap();
-            assert!(complete);
-            assert_eq!(req.method, "PUT");
-            assert_eq!(req.path(), "/echo");
-            assert_eq!(req.get_header("x-tag"), Some("t1"));
-            let resp = Response::new(200).header("x-seen", "yes").body(req.body);
-            write_response(&mut stream, &resp).unwrap();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let mut stream = match conn {
+                    Ok(s) => s,
+                    Err(_) => break,
+                };
+                std::thread::spawn(move || loop {
+                    let (req, complete) = match read_request(&mut stream) {
+                        Ok(v) => v,
+                        Err(_) => return,
+                    };
+                    if !complete {
+                        return;
+                    }
+                    let resp = Response::new(200).header("x-seen", "yes").body(req.body);
+                    if write_response(&mut stream, &resp).is_err() {
+                        return;
+                    }
+                });
+            }
         });
+        addr
+    }
+
+    #[test]
+    fn roundtrip_over_real_socket() {
+        let addr = spawn_echo();
         let payload: Vec<u8> = (0..100_000u32).map(|x| x as u8).collect();
         let req = Request::new("PUT", "/echo").header("x-tag", "t1").body(payload.clone());
         let resp = roundtrip(&addr.to_string(), &req).unwrap();
-        server.join().unwrap();
         assert_eq!(resp.status, 200);
         assert!(resp.complete);
         assert_eq!(resp.get_header("x-seen"), Some("yes"));
         assert_eq!(resp.body, payload);
+    }
+
+    #[test]
+    fn pooled_client_reuses_one_connection() {
+        let addr = spawn_echo();
+        let client = HttpClient::open(&format!("http://{addr}")).unwrap();
+        for i in 0..5 {
+            let req = Request::new("POST", "/echo").body(vec![i as u8; 100]);
+            let resp = client.send(&req).unwrap();
+            assert_eq!(resp.body, vec![i as u8; 100]);
+        }
+        assert_eq!(
+            client.connections_opened(),
+            1,
+            "five sequential requests must share one connection"
+        );
+    }
+
+    #[test]
+    fn stale_pooled_connection_reconnects() {
+        // A server that closes every connection after one response:
+        // each pooled reuse is stale, and the client must transparently
+        // reconnect for GET-style requests.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let mut stream = match conn {
+                    Ok(s) => s,
+                    Err(_) => break,
+                };
+                if let Ok((_req, true)) = read_request(&mut stream) {
+                    let _ = write_response(&mut stream, &Response::new(200).body(b"ok".to_vec()));
+                }
+                // drop → connection closed
+            }
+        });
+        let client = HttpClient::open(&format!("http://{addr}")).unwrap();
+        for _ in 0..3 {
+            let resp = client.send(&Request::new("GET", "/x")).unwrap();
+            assert_eq!(resp.body, b"ok");
+        }
+        assert_eq!(client.connections_opened(), 3, "every reuse was stale");
+    }
+
+    #[test]
+    fn send_file_streams_a_region() {
+        let addr = spawn_echo();
+        let client = HttpClient::open(&format!("http://{addr}")).unwrap();
+        let td = crate::util::tmp::TempDir::new("httpfile").unwrap();
+        let path = td.join("body.bin");
+        let payload: Vec<u8> = (0..200_000u32).map(|x| (x % 251) as u8).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let mut f = std::fs::File::open(&path).unwrap();
+        let resp = client
+            .send_file("PUT", "/echo", &[], &mut f, 1000, payload.len() as u64 - 1000)
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, &payload[1000..]);
+    }
+
+    #[test]
+    fn fetch_to_sink_streams_only_expected_statuses() {
+        let addr = spawn_echo();
+        let client = HttpClient::open(&format!("http://{addr}")).unwrap();
+        let payload = vec![9u8; 50_000];
+        let mut sink = Vec::new();
+        let resp = client
+            .fetch_to_sink(
+                &Request::new("POST", "/echo").body(payload.clone()),
+                &[200],
+                &mut sink,
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.complete);
+        assert_eq!(resp.streamed, payload.len() as u64);
+        assert_eq!(sink, payload);
+        assert!(resp.body.is_empty());
     }
 
     #[test]
@@ -436,7 +878,6 @@ mod tests {
             let (mut stream, _) = listener.accept().unwrap();
             // Declare 1000 body bytes but send only 400, then drop.
             write_response_head(&mut stream, 200, &[], 1000).unwrap();
-            use std::io::Write;
             stream.write_all(&[7u8; 400]).unwrap();
         });
         let mut stream = TcpStream::connect(addr).unwrap();
@@ -446,5 +887,25 @@ mod tests {
         assert_eq!(resp.status, 200);
         assert!(!resp.complete);
         assert_eq!(resp.body, vec![7u8; 400]);
+    }
+
+    #[test]
+    fn truncated_body_into_sink_keeps_prefix() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            write_response_head(&mut stream, 200, &[], 1000).unwrap();
+            stream.write_all(&[7u8; 400]).unwrap();
+        });
+        let client = HttpClient::open(&format!("http://{addr}")).unwrap();
+        let mut sink = Vec::new();
+        let resp = client
+            .fetch_to_sink(&Request::new("GET", "/partial"), &[200], &mut sink)
+            .unwrap();
+        server.join().unwrap();
+        assert!(!resp.complete);
+        assert_eq!(resp.streamed, 400);
+        assert_eq!(sink, vec![7u8; 400]);
     }
 }

@@ -1,9 +1,91 @@
-//! Temp directories for tests and benches (tempfile substitute).
+//! Temp directories for tests and benches (tempfile substitute), plus
+//! the shared write-then-rename atomic-file helpers.
+//!
+//! Three subsystems used to carry private copies of the same
+//! tmp-suffix + rename dance (`lfs/store.rs` puts, `lfs/server.rs`
+//! pack caches, `lfs/http.rs` partial persistence); they now share
+//! [`unique_sibling`] / [`write_atomic`] so the concurrency-safety
+//! argument lives in one place: a per-process atomic sequence plus the
+//! pid makes every writer's temp path unique, so no two writers can
+//! rename each other's half-written file into place, and `rename` onto
+//! the final path is atomic on POSIX filesystems.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Per-process sequence for [`unique_sibling`] temp names.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A temp path next to `path`, unique to this (process, call): the
+/// write half of every write-then-rename in the tree. Siblings (same
+/// directory) so the final `rename` never crosses a filesystem.
+pub fn unique_sibling(path: &Path) -> PathBuf {
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    path.with_extension(format!("tmp{}-{seq}", std::process::id()))
+}
+
+/// Delete regular files directly under `dir` whose name passes
+/// `filter` and whose mtime is at least `ttl` old (unreadable metadata
+/// counts as stale). Returns how many files were removed; a missing
+/// directory is a clean zero.
+///
+/// The one age-based reaper for *rebuildable* staging/cache state —
+/// server pack caches, client claim/spill litter. Never point it at
+/// the only copy of anything.
+pub fn reap_older_than(
+    dir: &Path,
+    ttl: std::time::Duration,
+    filter: impl Fn(&str) -> bool,
+) -> usize {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return 0,
+    };
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        if !filter(&entry.file_name().to_string_lossy()) {
+            continue;
+        }
+        let meta = match entry.metadata() {
+            Ok(m) => m,
+            Err(_) => continue,
+        };
+        if !meta.is_file() {
+            continue;
+        }
+        let stale = match meta.modified().ok().and_then(|t| t.elapsed().ok()) {
+            Some(age) => age >= ttl,
+            // Unreadable or future mtime: treat as stale (the state is
+            // rebuildable by contract).
+            None => true,
+        };
+        if stale && std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// Atomically install `bytes` at `path` (write to a unique sibling
+/// temp file, then rename). Creates parent directories. A crash never
+/// leaves a torn file at `path`, and concurrent writers of the same
+/// path each complete their own rename.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = unique_sibling(path);
+    std::fs::write(&tmp, bytes)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
 
 /// A directory deleted on drop.
 pub struct TempDir {
@@ -69,5 +151,29 @@ mod tests {
         let a = TempDir::new("t").unwrap();
         let b = TempDir::new("t").unwrap();
         assert_ne!(a.path(), b.path());
+    }
+
+    #[test]
+    fn unique_siblings_never_collide() {
+        let target = Path::new("/some/dir/file");
+        let a = unique_sibling(target);
+        let b = unique_sibling(target);
+        assert_ne!(a, b);
+        assert_eq!(a.parent(), target.parent());
+    }
+
+    #[test]
+    fn write_atomic_installs_and_overwrites() {
+        let td = TempDir::new("atomic").unwrap();
+        let path = td.join("nested/dir/file.bin");
+        write_atomic(&path, b"one").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"one");
+        write_atomic(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+        // No temp litter left behind.
+        let entries: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .collect();
+        assert_eq!(entries.len(), 1);
     }
 }
