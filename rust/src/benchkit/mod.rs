@@ -8,6 +8,7 @@
 pub mod checkout;
 pub mod figure3;
 pub mod merge;
+pub mod scenario;
 pub mod transfer;
 pub mod workflow;
 
@@ -120,10 +121,11 @@ pub fn cli_bench(args: &[String]) -> Result<()> {
         "transfer" => transfer::run_transfer_cli(&args[1..]),
         "checkout" => checkout::run_checkout_cli(&args[1..]),
         "merge" => merge::run_merge_cli(&args[1..]),
+        "scenario" => scenario::run_scenario_cli(&args[1..]),
         _ => {
             println!(
-                "benchmarks: table1, figure2, figure3, transfer, checkout, merge (full set \
-                 lives in `cargo bench`)\n\
+                "benchmarks: table1, figure2, figure3, transfer, checkout, merge, \
+                 scenario [actors ops seed faults] (full set lives in `cargo bench`)\n\
                  env: THETA_BENCH_PARAMS=<millions> scales the model"
             );
             Ok(())

@@ -1,0 +1,777 @@
+//! Collaboration-at-scale scenario harness: N concurrent collaborator
+//! actors — each a real clone in a tempdir — drive a weighted op mix
+//! (train-step, push, pull, branch+merge, clean, snapshot, gc) against
+//! one served hub ([`LfsServer`]), with one actor's traffic crossing
+//! the [`FaultProxy`] so mid-pack kills can be injected into live
+//! scenario steps.
+//!
+//! The run is **seeded and replayable**: every actor's op sequence is
+//! a pure function of `(scenario seed, actor index)`, the seed is
+//! printed on every run, and on divergence the full per-actor op trace
+//! is dumped next to the bench output. Thread interleaving still
+//! varies between runs — counters like push retries are contention
+//! measurements, not constants — but the op schedule, and therefore
+//! what each actor *tried* to do, replays exactly.
+//!
+//! After the op phase a deterministic **fault phase** kills a fetch
+//! mid-pack through the proxy (the actor must retry, resume from the
+//! partial, and converge), then a **quiesce phase** drives every clone
+//! through fetch → merge → push rounds until the whole fleet sits on
+//! one hub tip. Convergence is then *proved*, not assumed: every
+//! clone's checked-out parameter groups must be byte-identical, a
+//! fresh verification clone from the hub must reproduce the same
+//! bytes, and every object in the hub store must re-hash to its id.
+//!
+//! Contention counters (push retries, merge commits under load,
+//! gc spares, transfer round trips, store directory scans,
+//! [`TrackingAlloc`](crate::util::alloc::TrackingAlloc) peak) are
+//! emitted as `BENCH_scenario.json` and locked in
+//! `scripts/bench_baseline.json`. See `docs/TESTING.md`.
+
+use super::write_bench_json;
+use crate::checkpoint::{Checkpoint, CheckpointFormat, SafetensorsFormat};
+use crate::gitcore::attributes::Attributes;
+use crate::gitcore::drivers::MergeOptions;
+use crate::gitcore::object::Oid;
+use crate::gitcore::remote::RemoteSpec;
+use crate::gitcore::repo::Repository;
+use crate::lfs::faults::{Direction, FaultProxy, FaultSpec};
+use crate::lfs::{batch, open_transport, LfsServer, LfsStore};
+use crate::tensor::Tensor;
+use crate::theta::hooks::referenced_lfs_oids;
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::Pcg64;
+use crate::util::tmp::TempDir;
+use crate::util::{alloc, humansize};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::time::Instant;
+
+/// The one tracked model every collaborator trains.
+const MODEL_PATH: &str = "model.safetensors";
+/// Parameter groups in the shared model.
+const GROUPS: usize = 4;
+/// f32 elements per group (small: contention, not volume, is measured).
+const ELEMS: usize = 128;
+/// Perturbation scale per train step — far above any LSH
+/// change-detection threshold, so every train step genuinely commits.
+const TRAIN_SIGMA: f32 = 0.05;
+/// Push attempts before an actor declares the hub unreachable. Every
+/// retry first fetches + merges the tip that beat it, so forward
+/// progress is guaranteed unless the hub moves faster than the actor
+/// can merge for this many consecutive rounds.
+const PUSH_ATTEMPTS: usize = 32;
+/// Byte offset of the injected mid-pack kill in the fault phase; any
+/// freshly trained group object makes the pack comfortably larger.
+const KILL_AT: u64 = 64;
+
+/// Scenario shape. All runs with equal configs schedule identical
+/// per-actor op sequences.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioConfig {
+    /// Concurrent collaborator clones.
+    pub actors: usize,
+    /// Total ops across all actors (split as evenly as possible).
+    pub ops: usize,
+    /// Master seed; actor i derives its RNG from `(seed, i)`.
+    pub seed: u64,
+    /// Mid-pack fetch kills injected after the op phase.
+    pub faults: usize,
+}
+
+/// Per-actor results: contention counters plus the replayable trace.
+#[derive(Debug, Clone, Default)]
+pub struct ActorStats {
+    pub ops_applied: usize,
+    pub pushes: u64,
+    pub push_retries: u64,
+    pub merge_commits: u64,
+    pub gc_runs: u64,
+    pub gc_spared: u64,
+    /// Thread-local transfer round trips this actor performed.
+    pub round_trips: u64,
+    pub wire_bytes: u64,
+    pub dir_scans: u64,
+    /// One line per op: `a<idx> op<n> <kind>` — the replay trace.
+    pub trace: Vec<String>,
+}
+
+/// Whole-scenario outcome: the convergence verdict plus aggregated
+/// contention counters (actors + the coordinator thread).
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub actors: usize,
+    pub ops_requested: usize,
+    pub ops_applied: usize,
+    /// All clones byte-identical + hub store verified.
+    pub converged: bool,
+    pub faults_fired: u64,
+    /// Fetches that were killed mid-pack and had to retry+resume.
+    pub fetch_retries: u64,
+    pub pushes: u64,
+    pub push_retries: u64,
+    pub merge_commits: u64,
+    pub gc_runs: u64,
+    pub gc_spared: u64,
+    pub quiesce_rounds: u64,
+    pub round_trips: u64,
+    pub wire_bytes: u64,
+    pub dir_scans: u64,
+    /// Hub store objects that re-hashed to their id in the verify pass.
+    pub store_objects_verified: usize,
+    /// 0 when no tracking allocator is installed (library tests).
+    pub peak_heap_bytes: u64,
+    pub scenario_secs: f64,
+    /// Per-actor op traces (deterministic per seed) for replay checks.
+    pub traces: Vec<Vec<String>>,
+}
+
+// ---------------------------------------------------------------------
+// model helpers
+// ---------------------------------------------------------------------
+
+fn base_model(seed: u64) -> Checkpoint {
+    let mut rng = Pcg64::new(seed);
+    let mut ck = Checkpoint::new();
+    for g in 0..GROUPS {
+        let vals: Vec<f32> = (0..ELEMS).map(|_| rng.next_gaussian() as f32 * 0.02).collect();
+        ck.insert(
+            format!("layer_{g}/weight"),
+            Tensor::from_f32(vec![ELEMS], vals).unwrap(),
+        );
+    }
+    ck
+}
+
+fn load_model(repo: &Repository) -> Result<Checkpoint> {
+    SafetensorsFormat.load_file(&repo.worktree().join(MODEL_PATH))
+}
+
+fn save_model(repo: &Repository, ck: &Checkpoint) -> Result<()> {
+    SafetensorsFormat.save_file(ck, &repo.worktree().join(MODEL_PATH))
+}
+
+/// Perturb one randomly chosen parameter group in place (a train step
+/// touches a subset of the model, so concurrent actors sometimes
+/// conflict on a group and sometimes merge trivially).
+fn perturb(ck: &mut Checkpoint, rng: &mut Pcg64) {
+    let names: Vec<String> = ck.iter().map(|(n, _)| n.clone()).collect();
+    let name = names[rng.below(names.len() as u64) as usize].clone();
+    let t = ck.get(&name).unwrap();
+    let shape = t.shape().to_vec();
+    let mut vals = t.to_f32_vec().unwrap();
+    for v in &mut vals {
+        *v += rng.next_gaussian() as f32 * TRAIN_SIGMA;
+    }
+    ck.insert(name, Tensor::from_f32(shape, vals).unwrap());
+}
+
+// ---------------------------------------------------------------------
+// collaborator ops
+// ---------------------------------------------------------------------
+
+fn avg_opts() -> MergeOptions {
+    MergeOptions {
+        strategy: Some("average".to_string()),
+        per_group: Vec::new(),
+        verbose: false,
+    }
+}
+
+/// Merge a fetched remote tip into the local HEAD (parameter conflicts
+/// resolve by averaging). Counts real merge commits, not FFs.
+fn merge_tip(repo: &Repository, tip: Oid, actor: &str, stats: &mut ActorStats) -> Result<()> {
+    if repo.head_commit()? == Some(tip) {
+        return Ok(());
+    }
+    let report = repo
+        .merge(&tip.to_hex(), &avg_opts(), actor)
+        .with_context(|| format!("{actor}: merging remote tip {}", tip.short()))?;
+    if report.commit.is_some() && !report.fast_forward && !report.already_up_to_date {
+        stats.merge_commits += 1;
+    }
+    Ok(())
+}
+
+/// Push with the contention-retry loop: a rejection because the hub
+/// moved (either detected locally or by the server's compare-and-set)
+/// fetches the winning tip, merges it, and tries again.
+fn push_with_retry(
+    repo: &Repository,
+    spec: &RemoteSpec,
+    actor: &str,
+    stats: &mut ActorStats,
+) -> Result<()> {
+    for _ in 0..PUSH_ATTEMPTS {
+        match repo.push_spec(spec, "main") {
+            Ok(_) => {
+                stats.pushes += 1;
+                return Ok(());
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if msg.contains("fetch first") || msg.contains("moved during the push") {
+                    stats.push_retries += 1;
+                    let tip = repo.fetch_head_spec(spec, "main")?;
+                    merge_tip(repo, tip, actor, stats)?;
+                } else {
+                    return Err(e);
+                }
+            }
+        }
+    }
+    bail!("{actor}: push did not land after {PUSH_ATTEMPTS} attempts")
+}
+
+/// Download every parameter-group object the current HEAD references
+/// but the local store is missing, as one pack. Returns objects moved.
+fn prefetch_groups(repo: &Repository, spec: &RemoteSpec) -> Result<u64> {
+    let head = match repo.head_commit()? {
+        Some(h) => h,
+        None => return Ok(0),
+    };
+    let tree = repo.odb().read_tree(&repo.odb().read_commit(&head)?.tree)?;
+    let local = LfsStore::open(repo.theta_dir());
+    let missing: Vec<Oid> = referenced_lfs_oids(repo, &tree)?
+        .into_iter()
+        .filter(|o| !local.contains(o))
+        .collect();
+    if missing.is_empty() {
+        return Ok(0);
+    }
+    let remote = open_transport(spec, Some(repo.theta_dir()))?;
+    let summary = batch::fetch_pack(remote.as_ref(), &local, &missing)?;
+    ensure!(summary.unavailable == 0, "prefetch left {} objects behind", summary.unavailable);
+    Ok(summary.objects as u64)
+}
+
+/// Pull op: fetch the hub tip without moving refs, merge it (handles
+/// both fast-forward and true divergence), then prefetch the referenced
+/// group objects so pack streams actually cross the wire.
+fn pull_op(
+    repo: &Repository,
+    spec: &RemoteSpec,
+    actor: &str,
+    stats: &mut ActorStats,
+) -> Result<()> {
+    let tip = repo.fetch_head_spec(spec, "main")?;
+    merge_tip(repo, tip, actor, stats)?;
+    prefetch_groups(repo, spec)?;
+    Ok(())
+}
+
+/// Train step: perturb one group, clean (add), commit.
+fn train_op(repo: &Repository, rng: &mut Pcg64, actor: &str) -> Result<Oid> {
+    let mut ck = load_model(repo)?;
+    perturb(&mut ck, rng);
+    save_model(repo, &ck)?;
+    repo.add(&[MODEL_PATH])?;
+    repo.commit("train step", actor)
+}
+
+/// Clean op: perturb + stage through the clean filter, no commit (the
+/// staged-but-uncommitted state gc and later commits must respect).
+fn clean_op(repo: &Repository, rng: &mut Pcg64) -> Result<()> {
+    let mut ck = load_model(repo)?;
+    perturb(&mut ck, rng);
+    save_model(repo, &ck)?;
+    repo.add(&[MODEL_PATH])
+}
+
+/// Branch op: fork, train on the branch, train on main (so both sides
+/// diverge), then merge the branch back with parameter averaging.
+fn branch_merge_op(
+    repo: &Repository,
+    rng: &mut Pcg64,
+    actor: &str,
+    branch_n: u64,
+    stats: &mut ActorStats,
+) -> Result<()> {
+    let name = format!("{actor}-b{branch_n}");
+    repo.create_branch(&name)?;
+    repo.checkout(&name)?;
+    train_op(repo, rng, actor)?;
+    repo.checkout("main")?;
+    train_op(repo, rng, actor)?;
+    let report = repo.merge(&name, &avg_opts(), actor)?;
+    if report.commit.is_some() && !report.fast_forward && !report.already_up_to_date {
+        stats.merge_commits += 1;
+    }
+    Ok(())
+}
+
+/// Snapshot op: re-anchor the staged (or committed) metadata's update
+/// chains to dense snapshots and commit the result (`git-theta
+/// snapshot` followed by a commit).
+fn snapshot_op(repo: &Repository, actor: &str) -> Result<()> {
+    let staged = match repo.prior_staged(MODEL_PATH)? {
+        Some(s) => s,
+        None => return Ok(()),
+    };
+    if !crate::theta::ModelMetadata::is_metadata(&staged) {
+        return Ok(());
+    }
+    let access = crate::theta::ObjectAccess::for_repo(repo)?;
+    let meta = crate::theta::ModelMetadata::from_bytes(&staged)?;
+    let (snap, report) = crate::theta::snapshot_metadata(&access, &meta, 1)?;
+    if report.reanchored == 0 {
+        return Ok(()); // every chain already dense
+    }
+    let index = crate::gitcore::index::Index::load(repo.theta_dir())?;
+    let raw = match index.get(MODEL_PATH) {
+        Some(entry) => entry.raw,
+        None => {
+            let ck = crate::theta::smudge_metadata(&access, &snap, 1)?;
+            Oid::of_bytes(&SafetensorsFormat.save_bytes(&ck)?)
+        }
+    };
+    repo.add_staged_bytes(MODEL_PATH, snap.to_bytes(), raw)?;
+    repo.commit("snapshot", actor)?;
+    Ok(())
+}
+
+/// Gc op: a full `gc --prune` on the actor's own clone.
+fn gc_op(repo: &Repository, stats: &mut ActorStats) -> Result<()> {
+    let report = crate::theta::collect_garbage(repo, true)?;
+    stats.gc_runs += 1;
+    stats.gc_spared += report.spared as u64;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// the actor loop
+// ---------------------------------------------------------------------
+
+/// Derive actor i's RNG seed from the scenario seed (splitmix-style
+/// odd-constant mix so adjacent actors decorrelate).
+fn actor_seed(seed: u64, i: usize) -> u64 {
+    seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// One collaborator's whole op phase, run on its own thread against its
+/// own clone. Thread-local transfer/scan counters are snapshotted here,
+/// inside the thread, before it exits.
+fn run_actor(
+    i: usize,
+    repo: Repository,
+    url: String,
+    n_ops: usize,
+    seed: u64,
+) -> Result<ActorStats> {
+    let spec = RemoteSpec::parse(&url)?;
+    let actor = format!("a{i}");
+    let mut rng = Pcg64::new(seed);
+    let mut stats = ActorStats::default();
+    batch::reset_stats();
+    let scans0 = crate::lfs::store::dir_scans();
+    let mut branches = 0u64;
+    for op_idx in 0..n_ops {
+        let roll = rng.below(100);
+        let (kind, result): (&str, Result<()>) = if roll < 40 {
+            ("train", train_op(&repo, &mut rng, &actor).map(|_| ()))
+        } else if roll < 60 {
+            ("push", push_with_retry(&repo, &spec, &actor, &mut stats))
+        } else if roll < 75 {
+            ("pull", pull_op(&repo, &spec, &actor, &mut stats))
+        } else if roll < 85 {
+            branches += 1;
+            ("branch-merge", branch_merge_op(&repo, &mut rng, &actor, branches, &mut stats))
+        } else if roll < 90 {
+            ("clean", clean_op(&repo, &mut rng))
+        } else if roll < 95 {
+            ("snapshot", snapshot_op(&repo, &actor))
+        } else {
+            ("gc", gc_op(&repo, &mut stats))
+        };
+        stats.trace.push(format!("{actor} op{op_idx} {kind}"));
+        result.with_context(|| format!("{actor} op {op_idx} ({kind})"))?;
+        stats.ops_applied += 1;
+    }
+    // Flush any staged-but-uncommitted clean-op state so the clone ends
+    // its op phase with worktree == HEAD — the quiesce merges then keep
+    // the two in lockstep, which the byte-identity proof relies on.
+    repo.add(&[MODEL_PATH])?;
+    repo.commit("flush", &actor)?;
+
+    let wire = batch::stats();
+    stats.round_trips = wire.round_trips();
+    stats.wire_bytes = wire.wire_bytes;
+    stats.dir_scans = crate::lfs::store::dir_scans() - scans0;
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------
+// the scenario
+// ---------------------------------------------------------------------
+
+/// Run one full scenario: seed hub → concurrent op phase → injected
+/// fault phase → quiesce → convergence proof. Never panics on
+/// divergence — it dumps the replay trace and reports
+/// `converged: false` so callers (tests, the bench gate) decide.
+pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioOutcome> {
+    crate::init();
+    ensure!(cfg.actors >= 1, "scenario needs at least one actor");
+    eprintln!(
+        "scenario: {} actors x {} ops, seed {}, {} fault(s) \
+         (replay: git-theta bench scenario {} {} {} {})",
+        cfg.actors, cfg.ops, cfg.seed, cfg.faults, cfg.actors, cfg.ops, cfg.seed, cfg.faults
+    );
+
+    let t0 = Instant::now();
+    let tracking = alloc::active();
+    let alloc_base = alloc::reset_peak();
+    batch::reset_stats();
+    let scans0 = crate::lfs::store::dir_scans();
+
+    // The hub: one served root, with a fault proxy in front of it that
+    // actor 0's traffic always crosses.
+    let td_hub = TempDir::new("scenario-hub")?;
+    let server = LfsServer::spawn(td_hub.path())?;
+    let proxy = FaultProxy::spawn(&server.url())?;
+    let hub_spec = RemoteSpec::parse(&server.url())?;
+    let proxy_spec = RemoteSpec::parse(&proxy.url())?;
+
+    // The coordinator seeds the hub with the shared base model.
+    let td_coord = TempDir::new("scenario-coord")?;
+    let coord = Repository::init(td_coord.path())?;
+    Attributes::add_line(
+        coord.worktree(),
+        "*.safetensors filter=theta diff=theta merge=theta",
+    )?;
+    save_model(&coord, &base_model(cfg.seed))?;
+    coord.add(&[MODEL_PATH, ".thetaattributes"])?;
+    coord.commit("base model", "coordinator")?;
+    coord.config_set("remote", &server.url())?;
+    coord.push_spec(&hub_spec, "main")?;
+
+    // One real clone per actor.
+    let mut actor_dirs = Vec::new();
+    let mut actor_repos = Vec::new();
+    let mut actor_urls = Vec::new();
+    for i in 0..cfg.actors {
+        let td = TempDir::new("scenario-actor")?;
+        let repo = Repository::init(td.path())?;
+        let url = if i == 0 { proxy.url() } else { server.url() };
+        repo.config_set("remote", &url)?;
+        repo.pull_spec(&RemoteSpec::parse(&url)?, "main")?;
+        actor_dirs.push(td);
+        actor_repos.push(repo);
+        actor_urls.push(url);
+    }
+
+    // ---- op phase: all actors at once -------------------------------
+    let per = cfg.ops / cfg.actors;
+    let rem = cfg.ops % cfg.actors;
+    let mut handles = Vec::new();
+    for (i, repo) in actor_repos.iter().enumerate() {
+        let repo = repo.clone();
+        let url = actor_urls[i].clone();
+        let n_ops = per + usize::from(i < rem);
+        let seed = actor_seed(cfg.seed, i);
+        handles.push(std::thread::spawn(move || {
+            run_actor(i, repo, url, n_ops, seed).map_err(|e| format!("{e:#}"))
+        }));
+    }
+    let mut actor_stats = Vec::new();
+    for handle in handles {
+        let stats = handle
+            .join()
+            .map_err(|_| anyhow!("an actor thread panicked"))?
+            .map_err(|e| anyhow!(e))?;
+        actor_stats.push(stats);
+    }
+
+    // ---- fault phase: kill fetches mid-pack, deterministic ----------
+    // The coordinator publishes a fresh train step, then actor 0 pulls
+    // it through the armed proxy: the first pack fetch must die at the
+    // kill offset, and the retry must resume from the partial.
+    let mut coordinator = ActorStats::default();
+    let mut fired_total = 0u64;
+    let mut fetch_retries = 0u64;
+    for f in 0..cfg.faults {
+        let mut rng = Pcg64::new(cfg.seed ^ 0xFA17_0000 ^ f as u64);
+        train_op(&coord, &mut rng, "coordinator")?;
+        push_with_retry(&coord, &hub_spec, "coordinator", &mut coordinator)?;
+
+        let a0 = &actor_repos[0];
+        let tip = a0.fetch_head_spec(&proxy_spec, "main")?;
+        let tree = a0.odb().read_tree(&a0.odb().read_commit(&tip)?.tree)?;
+        let local = LfsStore::open(a0.theta_dir());
+        let missing: Vec<Oid> = referenced_lfs_oids(a0, &tree)?
+            .into_iter()
+            .filter(|o| !local.contains(o))
+            .collect();
+        ensure!(!missing.is_empty(), "fault round {f}: nothing left to fetch");
+        let remote = open_transport(&proxy_spec, Some(a0.theta_dir()))?;
+
+        proxy.arm(FaultSpec::kill(Direction::Download, KILL_AT));
+        let first = batch::fetch_pack(remote.as_ref(), &local, &missing);
+        ensure!(first.is_err(), "fault round {f}: armed kill did not interrupt the fetch");
+        ensure!(proxy.fired() == fired_total + 1, "fault round {f}: kill never fired");
+        fired_total = proxy.fired();
+        fetch_retries += 1;
+
+        let retry = batch::fetch_pack(remote.as_ref(), &local, &missing)
+            .with_context(|| format!("fault round {f}: retry after mid-pack kill"))?;
+        ensure!(retry.unavailable == 0, "fault round {f}: resumed fetch left objects behind");
+        ensure!(
+            retry.resumed_bytes >= KILL_AT,
+            "fault round {f}: retry re-sent bytes the partial already held"
+        );
+        merge_tip(a0, tip, "a0", &mut coordinator)?;
+    }
+    proxy.disarm();
+
+    // ---- quiesce: fetch/merge/push rounds to a fixpoint -------------
+    let mut fleet: Vec<(String, &Repository, String)> =
+        vec![("coordinator".to_string(), &coord, server.url())];
+    for (i, repo) in actor_repos.iter().enumerate() {
+        fleet.push((format!("a{i}"), repo, actor_urls[i].clone()));
+    }
+    let mut quiesce_rounds = 0u64;
+    loop {
+        quiesce_rounds += 1;
+        ensure!(
+            quiesce_rounds <= 4 + 2 * fleet.len() as u64,
+            "quiesce did not reach a fixpoint (seed {})",
+            cfg.seed
+        );
+        for (name, repo, url) in &fleet {
+            let spec = RemoteSpec::parse(url)?;
+            let tip = repo.fetch_head_spec(&spec, "main")?;
+            merge_tip(repo, tip, name, &mut coordinator)?;
+            push_with_retry(repo, &spec, name, &mut coordinator)?;
+        }
+        let hub_tip = coord.fetch_head_spec(&hub_spec, "main")?;
+        let settled = {
+            let mut ok = true;
+            for (_, repo, _) in &fleet {
+                if repo.head_commit()? != Some(hub_tip) {
+                    ok = false;
+                    break;
+                }
+            }
+            ok
+        };
+        if settled {
+            break;
+        }
+    }
+
+    // ---- convergence proof ------------------------------------------
+    let mut converged = true;
+    let reference = std::fs::read(coord.worktree().join(MODEL_PATH))
+        .context("reading the coordinator's checked-out model")?;
+    for (i, repo) in actor_repos.iter().enumerate() {
+        let bytes = std::fs::read(repo.worktree().join(MODEL_PATH))
+            .with_context(|| format!("reading actor a{i}'s checked-out model"))?;
+        if bytes != reference {
+            eprintln!("scenario DIVERGED: actor a{i}'s checkout differs from the coordinator's");
+            converged = false;
+        }
+    }
+    // A fresh clone straight from the hub must reproduce the bytes.
+    let td_verify = TempDir::new("scenario-verify")?;
+    let verify = Repository::init(td_verify.path())?;
+    verify.config_set("remote", &server.url())?;
+    verify.pull_spec(&hub_spec, "main")?;
+    if std::fs::read(td_verify.path().join(MODEL_PATH))? != reference {
+        eprintln!("scenario DIVERGED: a fresh clone of the hub differs from the fleet");
+        converged = false;
+    }
+    // Full hub-store verify pass: every object must re-hash to its id.
+    let hub_store = LfsStore::at(&td_hub.path().join("lfs/objects"));
+    let mut store_objects_verified = 0usize;
+    for oid in hub_store.list()? {
+        let bytes = hub_store.get(&oid)?;
+        if Oid::of_bytes(&bytes) != oid {
+            eprintln!("scenario DIVERGED: hub store object {oid} fails verification");
+            converged = false;
+        } else {
+            store_objects_verified += 1;
+        }
+    }
+
+    let traces: Vec<Vec<String>> = actor_stats.iter().map(|s| s.trace.clone()).collect();
+    if !converged {
+        let path = std::path::PathBuf::from(format!("scenario_trace_{}.txt", cfg.seed));
+        let mut dump = String::new();
+        for s in &actor_stats {
+            for line in &s.trace {
+                dump.push_str(line);
+                dump.push('\n');
+            }
+        }
+        let _ = std::fs::write(&path, dump);
+        eprintln!(
+            "replay with: git-theta bench scenario {} {} {} {} (op trace: {})",
+            cfg.actors,
+            cfg.ops,
+            cfg.seed,
+            cfg.faults,
+            path.display()
+        );
+    }
+
+    // ---- aggregate --------------------------------------------------
+    let mut out = ScenarioOutcome {
+        actors: cfg.actors,
+        ops_requested: cfg.ops,
+        ops_applied: 0,
+        converged,
+        faults_fired: fired_total,
+        fetch_retries,
+        pushes: coordinator.pushes,
+        push_retries: coordinator.push_retries,
+        merge_commits: coordinator.merge_commits,
+        gc_runs: coordinator.gc_runs,
+        gc_spared: coordinator.gc_spared,
+        quiesce_rounds,
+        round_trips: 0,
+        wire_bytes: 0,
+        dir_scans: 0,
+        store_objects_verified,
+        peak_heap_bytes: 0,
+        scenario_secs: 0.0,
+        traces,
+    };
+    for s in &actor_stats {
+        out.ops_applied += s.ops_applied;
+        out.pushes += s.pushes;
+        out.push_retries += s.push_retries;
+        out.merge_commits += s.merge_commits;
+        out.gc_runs += s.gc_runs;
+        out.gc_spared += s.gc_spared;
+        out.round_trips += s.round_trips;
+        out.wire_bytes += s.wire_bytes;
+        out.dir_scans += s.dir_scans;
+    }
+    // The coordinator thread's own wire/scan counters (seeding, fault
+    // phase, quiesce all ran here).
+    let wire = batch::stats();
+    out.round_trips += wire.round_trips();
+    out.wire_bytes += wire.wire_bytes;
+    out.dir_scans += crate::lfs::store::dir_scans() - scans0;
+    out.peak_heap_bytes = if tracking {
+        alloc::peak_bytes().saturating_sub(alloc_base) as u64
+    } else {
+        0
+    };
+    out.scenario_secs = t0.elapsed().as_secs_f64();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// rendering + CLI
+// ---------------------------------------------------------------------
+
+/// Human-readable summary of a scenario run.
+pub fn render_outcome(out: &ScenarioOutcome) -> String {
+    let peak = if out.peak_heap_bytes == 0 {
+        "n/a".to_string()
+    } else {
+        humansize::bytes(out.peak_heap_bytes)
+    };
+    format!(
+        "scenario: {} actors, {}/{} ops applied — {}\n\
+         quiesced in {} round(s); hub store verified ({} objects)\n\
+         pushes {} (+{} contention retries), merge commits {}, gc runs {} (spared {})\n\
+         faults fired {} (fetch retries {}); wire {} over {} round trips; \
+         {} dir scans; peak heap {}; {}\n",
+        out.actors,
+        out.ops_applied,
+        out.ops_requested,
+        if out.converged { "CONVERGED" } else { "DIVERGED" },
+        out.quiesce_rounds,
+        out.store_objects_verified,
+        out.pushes,
+        out.push_retries,
+        out.merge_commits,
+        out.gc_runs,
+        out.gc_spared,
+        out.faults_fired,
+        out.fetch_retries,
+        humansize::bytes(out.wire_bytes),
+        out.round_trips,
+        out.dir_scans,
+        peak,
+        humansize::duration(out.scenario_secs),
+    )
+}
+
+/// Encode the run as the `BENCH_scenario.json` payload for the gate.
+pub fn outcome_to_json(cfg: &ScenarioConfig, out: &ScenarioOutcome) -> Json {
+    let mut root = JsonObj::new();
+    root.insert("bench", "scenario");
+    root.insert("actors", out.actors);
+    root.insert("ops", out.ops_requested);
+    root.insert("seed", cfg.seed);
+    root.insert("converged", u64::from(out.converged));
+    root.insert("ops_applied", out.ops_applied);
+    root.insert("faults_fired", out.faults_fired);
+    root.insert("fetch_retries", out.fetch_retries);
+    root.insert("pushes", out.pushes);
+    root.insert("push_retries", out.push_retries);
+    root.insert("merge_commits", out.merge_commits);
+    root.insert("gc_runs", out.gc_runs);
+    root.insert("gc_spared", out.gc_spared);
+    root.insert("quiesce_rounds", out.quiesce_rounds);
+    root.insert("round_trips", out.round_trips);
+    root.insert("wire_bytes", out.wire_bytes);
+    root.insert("dir_scans", out.dir_scans);
+    root.insert("store_objects_verified", out.store_objects_verified);
+    root.insert("peak_heap_bytes", out.peak_heap_bytes);
+    root.insert("scenario_secs", Json::Num(out.scenario_secs));
+    Json::Obj(root)
+}
+
+/// `git-theta bench scenario [actors] [ops] [seed] [faults]`.
+pub fn run_scenario_cli(args: &[String]) -> Result<()> {
+    let cfg = ScenarioConfig {
+        actors: args.first().and_then(|s| s.parse().ok()).unwrap_or(4),
+        ops: args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40),
+        seed: args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0xCAFE_BABE),
+        faults: args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1),
+    };
+    let out = run_scenario(&cfg)?;
+    print!("{}", render_outcome(&out));
+    let path = write_bench_json("scenario", outcome_to_json(&cfg, &out))?;
+    println!("wrote {}", path.display());
+    ensure!(out.converged, "scenario seed {} did not converge", cfg.seed);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actor_seeds_decorrelate() {
+        let a = actor_seed(1, 0);
+        let b = actor_seed(1, 1);
+        let c = actor_seed(2, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        // And they are pure functions of (seed, index).
+        assert_eq!(a, actor_seed(1, 0));
+    }
+
+    #[test]
+    fn tiny_scenario_converges_and_counts() {
+        let cfg = ScenarioConfig {
+            actors: 2,
+            ops: 8,
+            seed: 11,
+            faults: 1,
+        };
+        let out = run_scenario(&cfg).unwrap();
+        assert!(out.converged, "tiny scenario diverged");
+        assert_eq!(out.ops_applied, 8);
+        assert_eq!(out.faults_fired, 1);
+        assert_eq!(out.fetch_retries, 1);
+        assert!(out.store_objects_verified > 0);
+        assert!(out.round_trips > 0);
+        assert!(out.wire_bytes > 0);
+        assert_eq!(out.traces.len(), 2);
+        assert_eq!(out.traces.iter().map(|t| t.len()).sum::<usize>(), 8);
+    }
+}

@@ -760,6 +760,24 @@ impl Repository {
     /// Fetch `branch` from a remote into the local odb and fast-forward
     /// the local branch. Does not touch the working tree.
     pub fn fetch_spec(&self, remote: &RemoteSpec, branch: &str) -> Result<Oid> {
+        let remote_tip = self.fetch_head_spec(remote, branch)?;
+        if let Some(lt) = self.refs.branch(branch)? {
+            if lt != remote_tip && !is_ancestor(&self.odb, lt, remote_tip)? {
+                bail!("fetch: local branch '{branch}' has diverged from remote");
+            }
+        }
+        self.refs.set_branch(branch, &remote_tip)?;
+        Ok(remote_tip)
+    }
+
+    /// Fetch `branch`'s objects from a remote into the local odb and
+    /// return the remote tip **without moving any local ref**. This is
+    /// the fetch half a push-retry loop needs: when a push is rejected
+    /// because the remote moved, the local branch has diverged by
+    /// definition, so [`Repository::fetch_spec`]'s fast-forward would
+    /// bail — instead the caller merges the returned tip locally and
+    /// pushes again.
+    pub fn fetch_head_spec(&self, remote: &RemoteSpec, branch: &str) -> Result<Oid> {
         let endpoint = open_endpoint(remote)?;
         let remote_tip = endpoint
             .branch(branch)?
@@ -791,12 +809,6 @@ impl Repository {
             self.odb.write(&tree_obj)?;
             self.odb.write(&Object::Commit(commit))?;
         }
-        if let Some(lt) = local_tip {
-            if lt != remote_tip && !is_ancestor(&self.odb, lt, remote_tip)? {
-                bail!("fetch: local branch '{branch}' has diverged from remote");
-            }
-        }
-        self.refs.set_branch(branch, &remote_tip)?;
         Ok(remote_tip)
     }
 

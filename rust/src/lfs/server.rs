@@ -102,6 +102,7 @@ pub struct LfsServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    state: Arc<ServerState>,
 }
 
 impl LfsServer {
@@ -132,13 +133,14 @@ impl LfsServer {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let accept_state = state.clone();
         let accept_thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if stop2.load(Ordering::SeqCst) {
                     break;
                 }
                 if let Ok(stream) = conn {
-                    let state = state.clone();
+                    let state = accept_state.clone();
                     std::thread::spawn(move || handle_connection(stream, &state));
                 }
             }
@@ -147,6 +149,7 @@ impl LfsServer {
             addr,
             stop,
             accept_thread: Some(accept_thread),
+            state,
         })
     }
 
@@ -158,6 +161,32 @@ impl LfsServer {
     /// The `http://` URL clients should use as their remote.
     pub fn url(&self) -> String {
         format!("http://{}", self.addr)
+    }
+
+    /// Run a *claim-aware* stale-pack reap against this server's root:
+    /// like [`gc_stale_packs`], but a partial pack whose per-pack-id
+    /// lock is currently held by an in-flight `PUT /packs/<id>` is
+    /// never reaped, however old its file looks. Mtime age alone is not
+    /// proof of abandonment — a slow upload can legitimately straddle
+    /// the TTL (last append long ago, writer still alive) — so the
+    /// live lock is the authority. Returns how many files were removed.
+    pub fn reap_stale(&self, max_age: Duration) -> usize {
+        let state = &self.state;
+        gc_stale_packs_filtered(&state.root, max_age, |id| {
+            let entry = state
+                .partial_locks
+                .lock()
+                .unwrap()
+                .get(id)
+                .cloned();
+            match entry {
+                // WouldBlock: a writer holds the claim right now.
+                // Poisoned: a writer died holding it; the next PUT of
+                // this id still recovers the partial, so keep it too.
+                Some(lock) => lock.try_lock().is_err(),
+                None => false,
+            }
+        })
     }
 }
 
@@ -180,15 +209,27 @@ impl Drop for LfsServer {
 /// is rebuilt from the store on the next `POST /packs`, and a reaped
 /// partial merely restarts its upload from byte 0.
 pub fn gc_stale_packs(root: &Path, max_age: Duration) -> Result<usize> {
+    // No claim oracle here (nothing can be in flight when this runs at
+    // spawn, before the listener exists), so nothing is exempt.
+    Ok(gc_stale_packs_filtered(root, max_age, |_| false))
+}
+
+/// Core of the stale-pack reap. `claimed` is consulted for entries in
+/// `lfs/partial/` only (keyed by file name, which is the pack id for
+/// resumable uploads): a claimed partial belongs to an in-flight PUT
+/// and must survive regardless of age. Outgoing packs and memos are
+/// pure caches and reap on age alone.
+fn gc_stale_packs_filtered(
+    root: &Path,
+    max_age: Duration,
+    claimed: impl Fn(&str) -> bool,
+) -> usize {
     let mut removed = 0;
-    for dir in [
-        root.join("lfs/outgoing"),
-        root.join("lfs/outgoing/bywant"),
-        root.join("lfs/partial"),
-    ] {
+    for dir in [root.join("lfs/outgoing"), root.join("lfs/outgoing/bywant")] {
         removed += tmp::reap_older_than(&dir, max_age, |_| true);
     }
-    Ok(removed)
+    removed += tmp::reap_older_than(&root.join("lfs/partial"), max_age, |name| !claimed(name));
+    removed
 }
 
 /// Per-connection request loop (HTTP/1.1 keep-alive): serve requests
@@ -913,6 +954,40 @@ mod tests {
         let local2 = LfsStore::open(td_local2.path());
         remote.fetch_pack_into(&[a], &local2, 1).unwrap();
         assert_eq!(local2.get(&a).unwrap(), b"gc-object");
+    }
+
+    #[test]
+    fn claimed_partials_survive_the_stale_reap() {
+        let td_root = TempDir::new("srv-claim").unwrap();
+        let server = LfsServer::spawn(td_root.path()).unwrap();
+
+        // A partial upload whose file looks long-abandoned (mtime two
+        // TTLs in the past) but whose per-pack-id lock is held by an
+        // in-flight PUT.
+        let id = "7".repeat(64);
+        let partial_dir = td_root.path().join("lfs/partial");
+        std::fs::create_dir_all(&partial_dir).unwrap();
+        let path = partial_dir.join(&id);
+        std::fs::write(&path, b"slow upload prefix").unwrap();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_modified(std::time::SystemTime::now() - 2 * STALE_PACK_TTL)
+            .unwrap();
+        drop(f);
+
+        let lock = id_lock(&server.state, &id);
+        let guard = lock.lock().unwrap();
+
+        // While the claim is held, even a zero-TTL reap must spare the
+        // partial (age says stale, the live lock says otherwise).
+        let removed = server.reap_stale(Duration::ZERO);
+        assert_eq!(removed, 0, "reap deleted a partial with a live claim");
+        assert!(path.exists(), "claimed partial was reaped out from under its PUT");
+
+        // Once the upload releases its claim, age wins again.
+        drop(guard);
+        let removed = server.reap_stale(STALE_PACK_TTL);
+        assert_eq!(removed, 1);
+        assert!(!path.exists());
     }
 
     #[test]

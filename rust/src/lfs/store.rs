@@ -146,14 +146,36 @@ impl LfsStore {
     /// Parallel clean/merge workers can store identical content
     /// concurrently; [`tmp::write_atomic`]'s unique temp names keep
     /// every write-then-rename atomic for its own writer.
+    ///
+    /// A dedup hit **freshens the existing file's mtime**. That is the
+    /// store's half of the put-vs-gc handshake: `gc --prune` skips
+    /// orphans whose mtime is at or after the gc pass started (see
+    /// `theta::gc::prune_plan`), so a put racing a prune — re-storing
+    /// content the gc already classified as garbage — marks the object
+    /// live-again before the delete can land. Without the freshen, the
+    /// dedup fast path returns `Ok` while a concurrent prune unlinks
+    /// the file, silently dropping a live object.
     pub fn put(&self, bytes: &[u8]) -> Result<(Oid, u64)> {
         let oid = Oid::of_bytes(bytes);
         let path = self.path_for(&oid);
-        if path.exists() {
+        if let Ok(file) = std::fs::OpenOptions::new().write(true).open(&path) {
+            // Best-effort: a failed utimens only narrows the race
+            // window back to the pre-freshen behavior; the put itself
+            // is still correct.
+            let _ = file.set_modified(std::time::SystemTime::now());
             return Ok((oid, bytes.len() as u64));
         }
         tmp::write_atomic(&path, bytes)?;
         Ok((oid, bytes.len() as u64))
+    }
+
+    /// Last-modified time of a stored object (`None` if absent).
+    /// Fresh mtimes are how racing puts veto a concurrent
+    /// `gc --prune` delete — see [`LfsStore::put`].
+    pub fn modified_of(&self, oid: &Oid) -> Option<std::time::SystemTime> {
+        std::fs::metadata(self.path_for(oid))
+            .and_then(|m| m.modified())
+            .ok()
     }
 
     /// Remove an object from the store (no-op if absent). Returns
@@ -282,6 +304,33 @@ mod tests {
         let before = store.disk_usage().unwrap();
         store.put(&vec![42u8; 1000]).unwrap();
         assert_eq!(store.disk_usage().unwrap(), before);
+    }
+
+    #[test]
+    fn dedup_put_freshens_mtime() {
+        let td = TempDir::new("lfs-fresh").unwrap();
+        let store = LfsStore::open(td.path());
+        let (oid, _) = store.put(b"contended content").unwrap();
+        // Age the object far into the past, as if it were written long
+        // before a gc pass started.
+        let old = std::time::SystemTime::now() - std::time::Duration::from_secs(3600);
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(store.path_for(&oid))
+            .unwrap();
+        f.set_modified(old).unwrap();
+        drop(f);
+        let aged = store.modified_of(&oid).unwrap();
+        assert!(aged <= old + std::time::Duration::from_secs(1));
+
+        // The dedup fast path must move the mtime forward, so a
+        // concurrent prune's grace window sees the object as re-put.
+        store.put(b"contended content").unwrap();
+        let freshened = store.modified_of(&oid).unwrap();
+        assert!(
+            freshened > old + std::time::Duration::from_secs(1800),
+            "dedup put left a stale mtime"
+        );
     }
 
     #[test]

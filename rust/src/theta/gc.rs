@@ -37,6 +37,10 @@ pub struct GcReport {
     pub orphaned_bytes: u64,
     /// Whether the orphans were actually deleted.
     pub pruned: bool,
+    /// Planned orphans the prune *spared* because a concurrent put
+    /// re-stored them after the plan was computed (mtime at or after
+    /// the gc start — see [`prune_plan`]).
+    pub spared: usize,
 }
 
 /// Every LFS oid referenced by any commit reachable from any branch or
@@ -84,10 +88,13 @@ pub fn live_oids(repo: &Repository) -> Result<HashSet<Oid>> {
     Ok(live)
 }
 
-/// Find — and with `prune`, delete — store objects unreachable from
-/// every branch, HEAD, and the index. Dry-run by default: callers must
-/// opt into deletion.
-pub fn collect_garbage(repo: &Repository, prune: bool) -> Result<GcReport> {
+/// Compute a gc plan without deleting anything: the report plus the
+/// instant liveness was computed. The timestamp is the prune's safety
+/// anchor — any planned orphan whose store mtime moves to or past it
+/// was re-stored by a concurrent put ([`LfsStore::put`] freshens
+/// mtimes on dedup hits) and must not be deleted.
+pub fn plan_garbage(repo: &Repository) -> Result<(GcReport, std::time::SystemTime)> {
+    let started = std::time::SystemTime::now();
     let store = LfsStore::open(repo.theta_dir());
     let live = live_oids(repo)?;
     let mut stored = store.list()?;
@@ -105,11 +112,45 @@ pub fn collect_garbage(repo: &Repository, prune: bool) -> Result<GcReport> {
             report.orphaned.push(oid);
         }
     }
-    if prune {
-        for oid in &report.orphaned {
-            store.delete(oid)?;
+    Ok((report, started))
+}
+
+/// Delete a plan's orphans, **sparing** any the store has touched since
+/// `started`: a put racing this prune re-stores content the plan
+/// already classified as garbage, and its mtime freshen (see
+/// [`LfsStore::put`]) is the signal that the object is live again.
+/// Spared oids move out of `orphaned` and are counted in `spared`.
+pub fn prune_plan(
+    store: &LfsStore,
+    report: &mut GcReport,
+    started: std::time::SystemTime,
+) -> Result<()> {
+    let mut kept: Vec<Oid> = Vec::new();
+    for oid in &report.orphaned {
+        match store.modified_of(oid) {
+            Some(mtime) if mtime >= started => kept.push(*oid),
+            _ => {
+                store.delete(oid)?;
+            }
         }
-        report.pruned = true;
+    }
+    if !kept.is_empty() {
+        report.orphaned.retain(|o| !kept.contains(o));
+        report.spared = kept.len();
+        report.live += kept.len();
+    }
+    report.pruned = true;
+    Ok(())
+}
+
+/// Find — and with `prune`, delete — store objects unreachable from
+/// every branch, HEAD, and the index. Dry-run by default: callers must
+/// opt into deletion.
+pub fn collect_garbage(repo: &Repository, prune: bool) -> Result<GcReport> {
+    let (mut report, started) = plan_garbage(repo)?;
+    if prune {
+        let store = LfsStore::open(repo.theta_dir());
+        prune_plan(&store, &mut report, started)?;
     }
     Ok(report)
 }
@@ -173,6 +214,45 @@ mod tests {
         // A second pass finds nothing.
         let report = collect_garbage(&repo, true).unwrap();
         assert!(report.orphaned.is_empty());
+    }
+
+    #[test]
+    fn put_between_plan_and_prune_is_spared() {
+        let (td, repo) = setup_repo();
+        write_ck(&td, vec![3.0; 48]);
+        repo.add(&["model.safetensors", ".thetaattributes"]).unwrap();
+        repo.commit("v1", "t").unwrap();
+
+        let store = LfsStore::open(repo.theta_dir());
+        let payload = b"resolution a merge worker is about to re-store";
+        let (orphan, _) = store.put(payload).unwrap();
+        // Age it so only the freshen (not the original write) can save it.
+        let old = std::time::SystemTime::now() - std::time::Duration::from_secs(3600);
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(td.path().join(".theta/lfs/objects").join({
+                let hex = orphan.to_hex();
+                format!("{}/{}", &hex[..2], &hex[2..])
+            }))
+            .unwrap();
+        f.set_modified(old).unwrap();
+        drop(f);
+
+        let (mut report, started) = plan_garbage(&repo).unwrap();
+        assert_eq!(report.orphaned, vec![orphan]);
+
+        // The race: a concurrent worker re-stores the same content
+        // after the plan was computed but before the prune deletes it.
+        store.put(payload).unwrap();
+
+        prune_plan(&store, &mut report, started).unwrap();
+        assert!(
+            store.contains(&orphan),
+            "prune deleted an object a concurrent put had re-stored"
+        );
+        assert_eq!(report.spared, 1);
+        assert!(report.orphaned.is_empty());
+        assert!(report.pruned);
     }
 
     #[test]

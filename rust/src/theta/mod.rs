@@ -38,7 +38,7 @@ pub use filter::{
     clean_checkpoint, clean_checkpoint_opts, reconstruct_group, smudge_metadata,
     smudge_metadata_opts, CleanOptions, ObjectAccess, ThetaFilter,
 };
-pub use gc::{collect_garbage, GcReport};
+pub use gc::{collect_garbage, plan_garbage, prune_plan, GcReport};
 pub use hooks::ThetaHooks;
 pub use merge::{
     merge_metadata, merge_metadata_opts, register_merge_strategy, EngineOptions, MergeStats,

@@ -160,6 +160,90 @@ fn prop_engine_parity_across_strategies_and_conflict_kinds() {
 }
 
 // ----------------------------------------------------------------------
+// symmetry: ours/theirs order must not matter for commutative strategies
+// ----------------------------------------------------------------------
+
+/// For the commutative strategies (average, fisher) a merge is an
+/// unordered combination of the two sides: swapping ours and theirs
+/// must produce byte-identical metadata. An asymmetry here would mean
+/// two collaborators merging each other's work get different models
+/// depending on who ran the merge — exactly the divergence the
+/// scenario harness exists to rule out.
+#[test]
+fn prop_commutative_strategies_ignore_ours_theirs_order() {
+    git_theta::init(); // registers fisher
+    check(
+        "merge symmetry: average/fisher are ours/theirs-order independent",
+        |rng| rng.below(u64::MAX),
+        |&seed| {
+            let e = |err: anyhow::Error| format!("{err:#}");
+            let mut rng = Pcg64::new(seed);
+            let elems = 24 + rng.below(41) as usize;
+
+            let td = TempDir::new("merge-sym").map_err(|err| err.to_string())?;
+            let acc = access(&td);
+            let mut ck = Checkpoint::new();
+            for g in 0..3 {
+                let vals: Vec<f32> = (0..elems).map(|_| (rng.next_f32() - 0.5) * 2.0).collect();
+                ck.insert(format!("g{g}"), Tensor::from_f32(vec![elems], vals).unwrap());
+            }
+            let anc = clean_checkpoint_opts(&acc, &ck, "native", None, &deep_opts()).map_err(e)?;
+
+            // g0 — BothModified (the strategy actually combines);
+            // g1 — changed on one side only (trivial carry-forward);
+            // g2 — untouched (ancestor carries).
+            let bump = |c: &mut Checkpoint, name: &str, at: usize, delta: f32| {
+                let mut vals = c.get(name).unwrap().to_f32_vec().unwrap();
+                vals[at % vals.len()] += delta;
+                c.insert(name.to_string(), Tensor::from_f32(vec![vals.len()], vals).unwrap());
+            };
+            let mut ours_ck = ck.clone();
+            let mut theirs_ck = ck.clone();
+            bump(&mut ours_ck, "g0", 0, 1.0 + rng.next_f32());
+            bump(&mut theirs_ck, "g0", 1, -(2.0 + rng.next_f32()));
+            bump(&mut theirs_ck, "g1", 2, 0.5 + rng.next_f32());
+            let ours = clean_checkpoint_opts(&acc, &ours_ck, "native", Some(&anc), &deep_opts())
+                .map_err(e)?;
+            let theirs = clean_checkpoint_opts(&acc, &theirs_ck, "native", Some(&anc), &deep_opts())
+                .map_err(e)?;
+
+            for strategy in ["average", "fisher"] {
+                let (ab, ab_stats) = merge_metadata_opts(
+                    &acc,
+                    Some(&anc),
+                    &ours,
+                    &theirs,
+                    &opts(strategy),
+                    &EngineOptions::default(),
+                )
+                .map_err(e)?;
+                let (ba, _) = merge_metadata_opts(
+                    &acc,
+                    Some(&anc),
+                    &theirs,
+                    &ours,
+                    &opts(strategy),
+                    &EngineOptions::default(),
+                )
+                .map_err(e)?;
+                if ab.to_bytes() != ba.to_bytes() {
+                    return Err(format!(
+                        "strategy '{strategy}' seed {seed}: merge(ours, theirs) != \
+                         merge(theirs, ours)"
+                    ));
+                }
+                if ab_stats.resolved.is_empty() {
+                    return Err(format!(
+                        "strategy '{strategy}' seed {seed}: fixture produced no conflict"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ----------------------------------------------------------------------
 // change-skipping: unconflicted groups are never reconstructed
 // ----------------------------------------------------------------------
 

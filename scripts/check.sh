@@ -72,6 +72,18 @@ test -f BENCH_transfer.json || {
     exit 1
 }
 
+# Smoke the collaboration scenario (4 actors x 40 ops, pinned seed,
+# one injected mid-pack fetch kill): concurrent clones against one
+# served hub, quiesce, and the full convergence proof — byte-identical
+# checkouts, fresh-clone reproduction, hub store verify. Exits nonzero
+# on divergence and prints the replay seed.
+echo "==> bench scenario smoke"
+cargo run --release --quiet -- bench scenario 4 40 3405691582 1
+test -f BENCH_scenario.json || {
+    echo "error: bench scenario did not write BENCH_scenario.json" >&2
+    exit 1
+}
+
 # Regression gate: BENCH_*.json counters vs the committed baseline
 # snapshot (scripts/bench_baseline.json). Counter metrics are exact
 # protocol invariants and fail the build when >20% worse; time metrics
