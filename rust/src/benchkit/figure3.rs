@@ -17,14 +17,20 @@ use anyhow::{Context, Result};
 /// Accuracy of one model version on the three tasks.
 #[derive(Debug, Clone)]
 pub struct Fig3Point {
+    /// Short label of the commit this point was evaluated at.
     pub commit_label: &'static str,
+    /// CB task accuracy.
     pub cb: f64,
+    /// RTE task accuracy.
     pub rte: f64,
+    /// ANLI task accuracy.
     pub anli: f64,
 }
 
+/// All evaluation points of one Figure 3 run, in commit order.
 #[derive(Debug, Clone)]
 pub struct Fig3Result {
+    /// One accuracy triple per workflow commit.
     pub points: Vec<Fig3Point>,
 }
 
@@ -147,6 +153,7 @@ pub fn render_figure3(r: &Fig3Result) -> String {
     out
 }
 
+/// `git-theta bench figure3` entry point.
 pub fn run_figure3_cli(args: &[String]) -> Result<()> {
     let steps: usize = args
         .first()

@@ -29,22 +29,27 @@ pub fn write_bench_json(name: &str, payload: Json) -> Result<std::path::PathBuf>
 /// Summary statistics over repeated runs.
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// Raw per-run measurements (seconds), in run order.
     pub samples: Vec<f64>,
 }
 
 impl Stats {
+    /// Arithmetic mean of the samples (0 when empty).
     pub fn mean(&self) -> f64 {
         self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
     }
 
+    /// Fastest sample (`+inf` when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Slowest sample (0 when empty).
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(0.0, f64::max)
     }
 
+    /// Population standard deviation of the samples.
     pub fn stddev(&self) -> f64 {
         let m = self.mean();
         let var = self

@@ -1,6 +1,7 @@
 //! Collaboration-at-scale scenario harness: N concurrent collaborator
 //! actors — each a real clone in a tempdir — drive a weighted op mix
-//! (train-step, push, pull, branch+merge, clean, snapshot, gc) against
+//! (train-step, push, pull, branch+merge, fine-tune, clean, snapshot,
+//! gc) against
 //! one served hub ([`LfsServer`]), with one actor's traffic crossing
 //! the [`FaultProxy`] so mid-pack kills can be injected into live
 //! scenario steps.
@@ -81,15 +82,25 @@ pub struct ScenarioConfig {
 /// Per-actor results: contention counters plus the replayable trace.
 #[derive(Debug, Clone, Default)]
 pub struct ActorStats {
+    /// Ops this actor completed (out of its scheduled share).
     pub ops_applied: usize,
+    /// Pushes that landed on the hub.
     pub pushes: u64,
+    /// Pushes rejected by hub contention that fetched, merged, retried.
     pub push_retries: u64,
+    /// True merge commits created (fast-forwards excluded).
     pub merge_commits: u64,
+    /// `gc --prune` runs on this actor's clone.
     pub gc_runs: u64,
+    /// Objects gc spared across those runs (staged/recent reachability).
     pub gc_spared: u64,
+    /// Fine-tune ops completed (branch → train → snapshot → merge → push).
+    pub finetunes: u64,
     /// Thread-local transfer round trips this actor performed.
     pub round_trips: u64,
+    /// Bytes this actor put on the wire.
     pub wire_bytes: u64,
+    /// Store directory scans this actor's transfers cost.
     pub dir_scans: u64,
     /// One line per op: `a<idx> op<n> <kind>` — the replay trace.
     pub trace: Vec<String>,
@@ -99,27 +110,43 @@ pub struct ActorStats {
 /// contention counters (actors + the coordinator thread).
 #[derive(Debug, Clone)]
 pub struct ScenarioOutcome {
+    /// Concurrent collaborator clones the run drove.
     pub actors: usize,
+    /// Total ops the config scheduled across the fleet.
     pub ops_requested: usize,
+    /// Ops the fleet actually completed.
     pub ops_applied: usize,
     /// All clones byte-identical + hub store verified.
     pub converged: bool,
+    /// Injected mid-pack kills that actually fired.
     pub faults_fired: u64,
     /// Fetches that were killed mid-pack and had to retry+resume.
     pub fetch_retries: u64,
+    /// Pushes that landed on the hub (fleet + coordinator).
     pub pushes: u64,
+    /// Contention-rejected pushes that fetched, merged, and retried.
     pub push_retries: u64,
+    /// True merge commits created fleet-wide (fast-forwards excluded).
     pub merge_commits: u64,
+    /// `gc --prune` runs across the fleet.
     pub gc_runs: u64,
+    /// Objects gc spared across those runs.
     pub gc_spared: u64,
+    /// Fine-tune ops completed fleet-wide.
+    pub finetunes: u64,
+    /// Fetch→merge→push rounds until the fleet sat on one hub tip.
     pub quiesce_rounds: u64,
+    /// Transfer round trips (negotiations + packs + object copies).
     pub round_trips: u64,
+    /// Total bytes the fleet put on the wire.
     pub wire_bytes: u64,
+    /// Store directory scans the run cost.
     pub dir_scans: u64,
     /// Hub store objects that re-hashed to their id in the verify pass.
     pub store_objects_verified: usize,
     /// 0 when no tracking allocator is installed (library tests).
     pub peak_heap_bytes: u64,
+    /// Wall-clock seconds for the whole run.
     pub scenario_secs: f64,
     /// Per-actor op traces (deterministic per seed) for replay checks.
     pub traces: Vec<Vec<String>>,
@@ -329,6 +356,34 @@ fn snapshot_op(repo: &Repository, actor: &str) -> Result<()> {
     Ok(())
 }
 
+/// Fine-tune op: fork a feature branch, take a train step on it,
+/// re-anchor the result with `snapshot` (giving the chain a fresh
+/// dense base — exactly the shape the chain-aware wire negotiation
+/// dedups against), fold the branch back into main, and push. The
+/// push exercises chain negotiation under concurrency and, when the
+/// hub moved meanwhile, the CAS-push retry loop.
+fn finetune_op(
+    repo: &Repository,
+    spec: &RemoteSpec,
+    rng: &mut Pcg64,
+    actor: &str,
+    ft_n: u64,
+    stats: &mut ActorStats,
+) -> Result<()> {
+    let name = format!("{actor}-ft{ft_n}");
+    repo.create_branch(&name)?;
+    repo.checkout(&name)?;
+    train_op(repo, rng, actor)?;
+    snapshot_op(repo, actor)?;
+    repo.checkout("main")?;
+    let report = repo.merge(&name, &avg_opts(), actor)?;
+    if report.commit.is_some() && !report.fast_forward && !report.already_up_to_date {
+        stats.merge_commits += 1;
+    }
+    stats.finetunes += 1;
+    push_with_retry(repo, spec, actor, stats)
+}
+
 /// Gc op: a full `gc --prune` on the actor's own clone.
 fn gc_op(repo: &Repository, stats: &mut ActorStats) -> Result<()> {
     let report = crate::theta::collect_garbage(repo, true)?;
@@ -364,17 +419,21 @@ fn run_actor(
     batch::reset_stats();
     let scans0 = crate::lfs::store::dir_scans();
     let mut branches = 0u64;
+    let mut finetunes = 0u64;
     for op_idx in 0..n_ops {
         let roll = rng.below(100);
-        let (kind, result): (&str, Result<()>) = if roll < 40 {
+        let (kind, result): (&str, Result<()>) = if roll < 35 {
             ("train", train_op(&repo, &mut rng, &actor).map(|_| ()))
-        } else if roll < 60 {
+        } else if roll < 55 {
             ("push", push_with_retry(&repo, &spec, &actor, &mut stats))
-        } else if roll < 75 {
+        } else if roll < 70 {
             ("pull", pull_op(&repo, &spec, &actor, &mut stats))
-        } else if roll < 85 {
+        } else if roll < 80 {
             branches += 1;
             ("branch-merge", branch_merge_op(&repo, &mut rng, &actor, branches, &mut stats))
+        } else if roll < 85 {
+            finetunes += 1;
+            ("finetune", finetune_op(&repo, &spec, &mut rng, &actor, finetunes, &mut stats))
         } else if roll < 90 {
             ("clean", clean_op(&repo, &mut rng))
         } else if roll < 95 {
@@ -625,6 +684,7 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioOutcome> {
         merge_commits: coordinator.merge_commits,
         gc_runs: coordinator.gc_runs,
         gc_spared: coordinator.gc_spared,
+        finetunes: coordinator.finetunes,
         quiesce_rounds,
         round_trips: 0,
         wire_bytes: 0,
@@ -641,6 +701,7 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioOutcome> {
         out.merge_commits += s.merge_commits;
         out.gc_runs += s.gc_runs;
         out.gc_spared += s.gc_spared;
+        out.finetunes += s.finetunes;
         out.round_trips += s.round_trips;
         out.wire_bytes += s.wire_bytes;
         out.dir_scans += s.dir_scans;
@@ -674,7 +735,8 @@ pub fn render_outcome(out: &ScenarioOutcome) -> String {
     format!(
         "scenario: {} actors, {}/{} ops applied — {}\n\
          quiesced in {} round(s); hub store verified ({} objects)\n\
-         pushes {} (+{} contention retries), merge commits {}, gc runs {} (spared {})\n\
+         pushes {} (+{} contention retries), merge commits {}, fine-tunes {}, \
+         gc runs {} (spared {})\n\
          faults fired {} (fetch retries {}); wire {} over {} round trips; \
          {} dir scans; peak heap {}; {}\n",
         out.actors,
@@ -686,6 +748,7 @@ pub fn render_outcome(out: &ScenarioOutcome) -> String {
         out.pushes,
         out.push_retries,
         out.merge_commits,
+        out.finetunes,
         out.gc_runs,
         out.gc_spared,
         out.faults_fired,
@@ -714,6 +777,7 @@ pub fn outcome_to_json(cfg: &ScenarioConfig, out: &ScenarioOutcome) -> Json {
     root.insert("merge_commits", out.merge_commits);
     root.insert("gc_runs", out.gc_runs);
     root.insert("gc_spared", out.gc_spared);
+    root.insert("finetunes", out.finetunes);
     root.insert("quiesce_rounds", out.quiesce_rounds);
     root.insert("round_trips", out.round_trips);
     root.insert("wire_bytes", out.wire_bytes);

@@ -15,6 +15,13 @@
 //! stream halfway, and the retry's byte-range resume is measured
 //! against a from-scratch transfer (`BENCH_transfer.json` carries the
 //! ratio for the CI regression gate).
+//!
+//! The `+delta` lever measures the chain-aware wire protocol: pushing
+//! a fine-tune whose base model the remote already holds, flat
+//! (protocol 1, every object ships whole) vs chain-aware (the client
+//! advertises the chains, the server answers with held depths, and the
+//! pack ships delta records against the remote bases). The wire-bytes
+//! ratio and the round-trip count are locked in `bench_baseline.json`.
 
 use super::time_once;
 use crate::gitcore::object::Oid;
@@ -128,6 +135,121 @@ pub fn run_stream_sample(groups: usize, elems: usize) -> Result<StreamSample> {
         peak_ratio: peak_heap_bytes as f64 / (pack_bytes as f64).max(1.0),
         http_connects: remote.connections_opened(),
         requests: batch::stats().round_trips(),
+    })
+}
+
+/// The `+delta` lever: wire cost of pushing a fine-tune over a base
+/// the remote already holds, flat vs chain-aware.
+#[derive(Debug, Clone, Copy)]
+pub struct DeltaSample {
+    /// Wire bytes of the flat (protocol-1) push of the fine-tune.
+    pub full_wire_bytes: u64,
+    /// Wire bytes of the chain-aware push of the same objects.
+    pub delta_wire_bytes: u64,
+    /// `delta_wire_bytes / full_wire_bytes` — the locked headline
+    /// (< 0.5 is the acceptance bar for a tail-quarter fine-tune).
+    pub ratio: f64,
+    /// Logical round trips of the chain-aware push (1 negotiation +
+    /// 1 pack — chains ride the existing batch round trip).
+    pub round_trips: u64,
+    /// Objects that shipped as delta records rather than full bodies.
+    pub delta_objects: u64,
+}
+
+/// Push a fine-tune whose base model is already on the remote, once
+/// over the flat protocol and once chain-aware, and compare wire
+/// bytes. The fine-tune keeps the leading 3/4 of every group and
+/// re-trains the tail quarter (seed 43), the shape of a parameter-
+/// efficient update; both pushes cross a real localhost http server
+/// and the delta push's reconstructed objects are byte-verified
+/// against the sender's.
+pub fn run_delta_sample(groups: usize, elems: usize) -> Result<DeltaSample> {
+    use crate::lfs::transport::{ChainAdvert, ChainEntryAdvert};
+    let bases = synth_group_payloads(groups, elems, 42);
+    let fresh = synth_group_payloads(groups, elems, 43);
+    let tuned: Vec<Vec<u8>> = bases
+        .iter()
+        .zip(&fresh)
+        .map(|(b, f)| {
+            let keep = b.len() - b.len() / 4;
+            let mut t = b[..keep].to_vec();
+            t.extend_from_slice(&f[keep..]);
+            t
+        })
+        .collect();
+
+    let td_local = TempDir::new("xfer-delta-local")?;
+    let local = LfsStore::open(td_local.path());
+    let base_oids: Vec<Oid> = bases
+        .iter()
+        .map(|p| Ok(local.put(p)?.0))
+        .collect::<Result<_>>()?;
+    let tuned_oids: Vec<Oid> = tuned
+        .iter()
+        .map(|p| Ok(local.put(p)?.0))
+        .collect::<Result<_>>()?;
+
+    // Two identically seeded servers: each already holds the base.
+    let spawn_seeded = |tag: &str| -> Result<(TempDir, LfsServer, HttpRemote, TempDir)> {
+        let td_root = TempDir::new(&format!("xfer-delta-{tag}"))?;
+        let server = LfsServer::spawn(td_root.path())?;
+        let td_staging = TempDir::new(&format!("xfer-delta-{tag}-staging"))?;
+        let remote = HttpRemote::open(&server.url(), Some(td_staging.path()))?;
+        batch::push_pack(&local, &remote, &base_oids)?;
+        Ok((td_root, server, remote, td_staging))
+    };
+
+    // Flat push: the fine-tune ships every object whole.
+    let (_root_full, server_full, remote_full, _stage_full) = spawn_seeded("full")?;
+    batch::reset_stats();
+    let full = batch::push_pack(&local, &remote_full, &tuned_oids)?;
+    ensure!(full.objects == groups, "flat delta-sample push incomplete");
+    drop(server_full);
+
+    // Chain-aware push: one two-entry chain per group ("the base is
+    // depth 1 of this chain; the fine-tune is its suffix").
+    let chains: Vec<Vec<ChainEntryAdvert>> = base_oids
+        .iter()
+        .zip(&tuned_oids)
+        .map(|(b, t)| {
+            vec![
+                ChainEntryAdvert {
+                    key: *b,
+                    oids: vec![*b],
+                },
+                ChainEntryAdvert {
+                    key: *t,
+                    oids: vec![*t],
+                },
+            ]
+        })
+        .collect();
+    let adv = ChainAdvert {
+        chains,
+        want: tuned_oids.clone(),
+    };
+    let (root_delta, server_delta, remote_delta, _stage_delta) = spawn_seeded("delta")?;
+    batch::reset_stats();
+    let deltaed = Prefetcher::default().push_with_chains(&local, &remote_delta, &adv)?;
+    let stats = batch::stats();
+    ensure!(deltaed.objects == groups, "chain-aware delta-sample push incomplete");
+    // The server must have reconstructed byte-identical objects from
+    // the delta records.
+    let server_store = LfsStore::at(&root_delta.join("lfs/objects"));
+    for (oid, payload) in tuned_oids.iter().zip(&tuned) {
+        ensure!(
+            &server_store.get(oid)? == payload,
+            "delta push produced a corrupt object on the receiver"
+        );
+    }
+    drop(server_delta);
+
+    Ok(DeltaSample {
+        full_wire_bytes: full.wire_bytes,
+        delta_wire_bytes: deltaed.wire_bytes,
+        ratio: deltaed.wire_bytes as f64 / (full.wire_bytes as f64).max(1.0),
+        round_trips: stats.round_trips(),
+        delta_objects: stats.delta_objects,
     })
 }
 
@@ -317,6 +439,19 @@ pub fn render_stream(sample: &StreamSample) -> String {
     )
 }
 
+/// Render the `+delta` chain-aware ablation row.
+pub fn render_delta(groups: usize, elems: usize, sample: &DeltaSample) -> String {
+    format!(
+        "+delta (fine-tune over shared base, {groups}x{elems}): full push {}, chain-aware \
+         push {} (ratio {:.2}), {} round trips, {} delta object(s)\n",
+        humansize::bytes(sample.full_wire_bytes),
+        humansize::bytes(sample.delta_wire_bytes),
+        sample.ratio,
+        sample.round_trips,
+        sample.delta_objects,
+    )
+}
+
 /// Render the `+resume` fault sample.
 pub fn render_resume(sample: &ResumeSample) -> String {
     format!(
@@ -328,6 +463,20 @@ pub fn render_resume(sample: &ResumeSample) -> String {
         humansize::bytes(sample.retry_resumed_bytes),
         100.0 * (1.0 - sample.retry_fraction()),
     )
+}
+
+/// Encode the `+delta` sample (with the configuration that produced
+/// it) as the `"delta"` object of `BENCH_transfer.json`.
+pub fn delta_to_json(groups: usize, elems: usize, sample: &DeltaSample) -> Json {
+    let mut d = JsonObj::new();
+    d.insert("groups", groups);
+    d.insert("elems", elems);
+    d.insert("full_wire_bytes", sample.full_wire_bytes);
+    d.insert("delta_wire_bytes", sample.delta_wire_bytes);
+    d.insert("ratio", Json::Num(sample.ratio));
+    d.insert("round_trips", sample.round_trips);
+    d.insert("delta_objects", sample.delta_objects);
+    Json::Obj(d)
 }
 
 /// Encode the ablation as the machine-readable `BENCH_transfer.json`
@@ -379,8 +528,48 @@ pub fn runs_to_json(
     Json::Obj(root)
 }
 
-/// `git-theta bench transfer [groups] [elems]` entry point.
+/// Fixed configuration of the `+delta` ablation row: 64 groups of
+/// 8192 f32s (~32 KiB per group) keeps the sample fast while leaving
+/// each group large enough for content-defined chunking to bite.
+const DELTA_GROUPS: usize = 64;
+const DELTA_ELEMS: usize = 8192;
+
+/// Run only the `+delta` row and merge it into an existing
+/// `BENCH_transfer.json` (creating a minimal one when absent) — the
+/// per-PR smoke re-measures the locked ratio without paying for the
+/// full ablation.
+fn run_delta_cli(args: &[String]) -> Result<()> {
+    let groups = args
+        .first()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DELTA_GROUPS);
+    let elems = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(DELTA_ELEMS);
+    let sample = run_delta_sample(groups, elems)?;
+    print!("{}", render_delta(groups, elems, &sample));
+    let path = std::path::PathBuf::from("BENCH_transfer.json");
+    let mut root = match std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+    {
+        Some(Json::Obj(o)) => o,
+        _ => {
+            let mut o = JsonObj::new();
+            o.insert("bench", "transfer");
+            o
+        }
+    };
+    root.insert("delta", delta_to_json(groups, elems, &sample));
+    let path = super::write_bench_json("transfer", Json::Obj(root))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// `git-theta bench transfer [groups elems | --delta [groups elems]]`
+/// entry point.
 pub fn run_transfer_cli(args: &[String]) -> Result<()> {
+    if args.first().map(|s| s.as_str()) == Some("--delta") {
+        return run_delta_cli(&args[1..]);
+    }
     let groups = args
         .first()
         .and_then(|s| s.parse().ok())
@@ -398,10 +587,14 @@ pub fn run_transfer_cli(args: &[String]) -> Result<()> {
     // per-object streaming window (1024 × 32 KiB objects ≈ 32 MiB raw).
     let stream = run_stream_sample(1024, 8192)?;
     print!("{}", render_stream(&stream));
-    let path = super::write_bench_json(
-        "transfer",
-        runs_to_json(groups, elems, &runs, &resume, &stream),
-    )?;
+    let delta = run_delta_sample(DELTA_GROUPS, DELTA_ELEMS)?;
+    print!("{}", render_delta(DELTA_GROUPS, DELTA_ELEMS, &delta));
+    let mut root = match runs_to_json(groups, elems, &runs, &resume, &stream) {
+        Json::Obj(o) => o,
+        other => anyhow::bail!("runs_to_json produced a non-object: {other:?}"),
+    };
+    root.insert("delta", delta_to_json(DELTA_GROUPS, DELTA_ELEMS, &delta));
+    let path = super::write_bench_json("transfer", Json::Obj(root))?;
     println!("wrote {}", path.display());
     Ok(())
 }
@@ -461,6 +654,19 @@ mod tests {
         assert!(
             sample.retry_wire_bytes < sample.pack_bytes,
             "resume must transfer strictly fewer bytes than a from-scratch retry"
+        );
+    }
+
+    #[test]
+    fn delta_sample_undercuts_half_the_full_push() {
+        // Small config for test speed; the CLI runs the locked 64x8192.
+        let s = run_delta_sample(8, 2048).unwrap();
+        assert_eq!(s.delta_objects, 8, "every fine-tuned group should ship as a delta");
+        assert_eq!(s.round_trips, 2, "chains must ride the one negotiation + one pack");
+        assert!(
+            s.ratio < 0.5,
+            "delta push ratio {} must stay under half the full push",
+            s.ratio
         );
     }
 

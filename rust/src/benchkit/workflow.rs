@@ -27,8 +27,11 @@ use anyhow::{Context, Result};
 /// Synthetic transformer configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ModelConfig {
+    /// Hidden dimension of the synthetic transformer.
     pub d_model: usize,
+    /// Transformer blocks.
     pub layers: usize,
+    /// Embedding vocabulary rows (excluding sentinels).
     pub vocab: usize,
     /// Sentinel rows appended to the embedding (removed by commit 6).
     pub sentinels: usize,
@@ -63,6 +66,7 @@ impl ModelConfig {
         }
     }
 
+    /// Total parameters of the configured model (embedding + blocks).
     pub fn param_count(&self) -> usize {
         let d = self.d_model;
         (self.vocab + self.sentinels) * d + self.layers * (4 * d * d + 8 * d * d + 2 * d)
@@ -167,8 +171,11 @@ pub fn remove_sentinels(ck: &Checkpoint, cfg: &ModelConfig) -> Checkpoint {
 /// One measured commit row.
 #[derive(Debug, Clone)]
 pub struct CommitMeasurement {
+    /// Paper name of the commit (one of [`COMMIT_NAMES`]).
     pub name: &'static str,
+    /// Clean-filter (`git add`) wall-clock seconds.
     pub add_secs: f64,
+    /// Smudge-filter (`git checkout`) wall-clock seconds.
     pub checkout_secs: f64,
     /// Bytes of new objects stored by this commit.
     pub size_bytes: u64,
@@ -177,11 +184,15 @@ pub struct CommitMeasurement {
 /// Full result of one system's run over the workflow.
 #[derive(Debug, Clone)]
 pub struct WorkflowResult {
+    /// System under measurement ("Git LFS" or "Git-Theta").
     pub system: &'static str,
+    /// One measured row per workflow commit, in commit order.
     pub commits: Vec<CommitMeasurement>,
+    /// Total object-store bytes after the last commit.
     pub total_bytes: u64,
 }
 
+/// The paper's six workflow commits, in order.
 pub const COMMIT_NAMES: [&str; 6] = [
     "Add base model",
     "Train on CB with LoRA",
@@ -194,14 +205,21 @@ pub const COMMIT_NAMES: [&str; 6] = [
 /// The six model versions of the workflow, in commit order, plus the
 /// branch structure implied (RTE is authored on a side branch).
 pub struct WorkflowModels {
+    /// Commit 1: the pre-trained base checkpoint.
     pub base: Checkpoint,
+    /// Commit 2: base + LoRA updates on q/v projections.
     pub cb_lora: Checkpoint,
+    /// Commit 3: full fine-tune of `cb_lora` (side branch).
     pub rte: Checkpoint,
+    /// Commit 4: full fine-tune of `cb_lora` (main).
     pub anli: Checkpoint,
+    /// Commit 5: parameter average of `rte` and `anli`.
     pub merged: Checkpoint,
+    /// Commit 6: `merged` with the sentinel embedding rows removed.
     pub trimmed: Checkpoint,
 }
 
+/// Build all six model versions of the workflow from one seed.
 pub fn build_models(cfg: &ModelConfig, seed: u64) -> WorkflowModels {
     let base = base_model(cfg, seed);
     let cb_lora = lora_update(&base, cfg, 16, seed + 1);
@@ -412,6 +430,7 @@ pub fn render_figure2(series: &[(String, f64)]) -> String {
     out
 }
 
+/// `git-theta bench table1` entry point.
 pub fn run_table1_cli(_args: &[String]) -> Result<()> {
     let cfg = ModelConfig::from_env();
     eprintln!(
@@ -429,6 +448,7 @@ pub fn run_table1_cli(_args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `git-theta bench figure2` entry point.
 pub fn run_figure2_cli(_args: &[String]) -> Result<()> {
     let cfg = ModelConfig::from_env();
     let models = build_models(&cfg, 42);

@@ -102,7 +102,9 @@ COMMANDS:
                                  protocol + resumable packs + commit/ref sync;
                                  binds loopback unless --bind says otherwise)
   config <key> [<value>]         get/set repo config (e.g. remote,
-                                 theta.snapshot-depth)
+                                 theta.snapshot-depth; theta.gc-report
+                                 off silences post-snapshot/merge gc
+                                 dry-run reports)
   snapshot <path...>             re-anchor tracked models as dense entries
                                  (bounds checkout chain depth; then commit)
   gc [--prune]                   report LFS objects no branch, HEAD, or the
@@ -114,6 +116,31 @@ COMMANDS:
 fn open_repo() -> Result<Repository> {
     crate::init();
     Repository::discover(Path::new("."))
+}
+
+/// Print a one-line gc dry-run summary after commands that typically
+/// orphan store objects (snapshot re-anchoring, merge resolutions).
+/// Prints nothing when the store is clean, and never fails the parent
+/// command. Silenced by setting the `theta.gc-report` config key to
+/// `off`, `false`, or `0`.
+fn maybe_print_gc_report(repo: &Repository) {
+    match repo.config_get("theta.gc-report") {
+        Ok(Some(v)) if matches!(v.trim(), "off" | "false" | "0") => return,
+        Err(_) => return,
+        _ => {}
+    }
+    let Ok((report, _)) = crate::theta::plan_garbage(repo) else {
+        return;
+    };
+    if report.orphaned.is_empty() {
+        return;
+    }
+    println!(
+        "gc: {} orphaned object(s) holding {}; `git-theta gc --prune` reclaims them \
+         (silence with `git-theta config theta.gc-report off`)",
+        report.orphaned.len(),
+        humansize::bytes(report.orphaned_bytes)
+    );
 }
 
 fn cmd_init(args: &[String]) -> Result<()> {
@@ -307,6 +334,9 @@ fn cmd_merge(args: &[String]) -> Result<()> {
         for group in &report.driver_resolved {
             println!("  resolved: {group}");
         }
+        // Strategy resolutions that lost to the committed result (and
+        // abandoned staging runs) are now orphans; surface them.
+        maybe_print_gc_report(&repo);
     }
     Ok(())
 }
@@ -539,6 +569,9 @@ fn cmd_snapshot(args: &[String]) -> Result<()> {
             report.reanchored, report.groups, report.max_depth_before
         );
     }
+    // Re-anchoring replaces staged chains with dense entries; any
+    // objects that became unreferenced show up in the dry-run report.
+    maybe_print_gc_report(&repo);
     Ok(())
 }
 
@@ -671,6 +704,25 @@ mod tests {
         // The object is local before any checkout touches it.
         let store = crate::lfs::LfsStore::open(&td_clone.path().join(".theta"));
         assert_eq!(store.list().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn gc_report_prints_and_respects_silencer() {
+        let td = TempDir::new("cli-gcreport").unwrap();
+        in_dir(td.path(), || {
+            dispatch(&sv(&["init"]))?;
+            let repo = open_repo()?;
+            // Orphan an object so the dry-run report has content.
+            let store = crate::lfs::LfsStore::open(repo.theta_dir());
+            store.put(b"abandoned resolution")?;
+            maybe_print_gc_report(&repo);
+            dispatch(&sv(&["config", "theta.gc-report", "off"]))?;
+            assert_eq!(repo.config_get("theta.gc-report")?.as_deref(), Some("off"));
+            maybe_print_gc_report(&repo);
+            // The report never deletes: the orphan must still exist.
+            assert_eq!(store.list()?.len(), 1);
+            Ok(())
+        });
     }
 
     #[test]

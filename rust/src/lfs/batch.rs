@@ -17,21 +17,31 @@
 //! several packs processed concurrently (bounded memory, overlapping
 //! compression with fan-in).
 //!
+//! Chain-aware pushes ([`Prefetcher::push_with_chains`]) extend the
+//! single negotiation with chain advertisements derived from group
+//! metadata: the remote answers how deep a prefix of each chain it
+//! already holds, and the planner ships suffix objects as
+//! content-defined deltas against those proven bases (or against a
+//! shared base travelling in the same pack). Every fallback — no
+//! chains, `THETA_NEGOTIATE=flat`, a chain-oblivious peer — degrades
+//! to wire traffic byte-identical to the flat protocol.
+//!
 //! Every operation updates **thread-local** [`TransferStats`] counters,
 //! so tests and benchmarks can assert on round trips and wire bytes
 //! without interference from concurrently running tests.
 
 use super::pack;
 use super::store::LfsStore;
-use super::transport::{RemoteTransport, WireReport};
+use super::transport::{ChainAdvert, ChainNegotiation, RemoteTransport, WireReport};
 use crate::gitcore::object::Oid;
 use crate::util::par;
 use anyhow::Result;
 use std::cell::Cell;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Result of one have/want negotiation against a remote.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct BatchResponse {
     /// Wanted oids the remote holds.
     pub present: Vec<Oid>,
@@ -82,6 +92,9 @@ pub struct TransferStats {
     pub wire_bytes: u64,
     /// Bytes saved by byte-range resume of interrupted transfers.
     pub resumed_bytes: u64,
+    /// Objects that crossed the wire as delta records (chain-aware
+    /// pushes) instead of whole payloads.
+    pub delta_objects: u64,
 }
 
 impl TransferStats {
@@ -143,6 +156,34 @@ pub fn per_object_mode() -> bool {
             std::env::var("THETA_TRANSFER").as_deref(),
             Ok("object") | Ok("per-object")
         ),
+    }
+}
+
+/// Process-wide negotiation override, same shape as [`set_per_object_mode`]:
+/// 0 = defer to the environment, 1 = chain-aware, 2 = flat.
+static NEGOTIATE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force the negotiation protocol for this process: `Some(true)` =
+/// flat (chain advertisements are ignored and pushes take the plain
+/// packed path), `Some(false)` = chain-aware, `None` = defer to the
+/// `THETA_NEGOTIATE` environment variable.
+pub fn set_flat_negotiation(mode: Option<bool>) {
+    let v = match mode {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    NEGOTIATE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Whether chain advertisements should be ignored — by
+/// [`set_flat_negotiation`], else `THETA_NEGOTIATE=flat` (the default
+/// is chain-aware negotiation whenever chains are advertised).
+pub fn flat_negotiation() -> bool {
+    match NEGOTIATE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => matches!(std::env::var("THETA_NEGOTIATE").as_deref(), Ok("flat")),
     }
 }
 
@@ -244,6 +285,67 @@ impl Prefetcher {
         Ok(accumulate(unavailable, &per_shard))
     }
 
+    /// Chain-aware upload: negotiate once with chain advertisements,
+    /// then ship each shard as a delta-planned pack wherever the
+    /// negotiation proved a usable base.
+    ///
+    /// Degrades gracefully at every step: empty chains or a forced
+    /// flat negotiation take [`Prefetcher::push`] verbatim; a
+    /// chain-oblivious remote (version skew) answers `chain_aware:
+    /// false` and every object ships whole through the same shard
+    /// loop; and any candidate that fails the delta planner's worth-it
+    /// gate falls back to a full record. A push that plans no deltas
+    /// produces wire traffic byte-identical to the flat protocol.
+    pub fn push_with_chains(
+        &self,
+        local: &LfsStore,
+        remote: &dyn RemoteTransport,
+        adv: &ChainAdvert,
+    ) -> Result<TransferSummary> {
+        if adv.chains.is_empty() || flat_negotiation() {
+            return self.push(local, remote, &adv.want);
+        }
+        let mut adv = adv.clone();
+        adv.want.sort();
+        adv.want.dedup();
+        if adv.want.is_empty() {
+            return Ok(TransferSummary::default());
+        }
+        let neg = remote.negotiate_chains(&adv)?;
+        let held = local.contains_all(&neg.batch.missing);
+        let send: Vec<Oid> = neg
+            .batch
+            .missing
+            .iter()
+            .zip(&held)
+            .filter(|(_, h)| **h)
+            .map(|(o, _)| *o)
+            .collect();
+        let unavailable = neg.batch.missing.len() - send.len();
+        let base_of = chain_bases(&adv, &neg, &send);
+        let shards = self.shard(local, &send);
+        let inner = if shards.len() > 1 { 1 } else { self.threads };
+        let per_shard = par::try_par_map(
+            &shards,
+            self.threads.min(shards.len().max(1)),
+            |_, shard| -> Result<((pack::PackStats, WireReport), u64)> {
+                let plan = pack::plan_deltas(local, shard, &base_of, inner)?;
+                let deltas = plan.deltas.len() as u64;
+                let moved = if deltas == 0 {
+                    remote.send_pack_from(local, shard, inner)?
+                } else {
+                    remote.send_pack_with_bases(local, &plan, inner)?
+                };
+                Ok((moved, deltas))
+            },
+        )?;
+        let delta_objects: u64 = per_shard.iter().map(|&(_, d)| d).sum();
+        record(|t| t.delta_objects += delta_objects);
+        let moved: Vec<(pack::PackStats, WireReport)> =
+            per_shard.into_iter().map(|(m, _)| m).collect();
+        Ok(accumulate(unavailable, &moved))
+    }
+
     /// Greedily split `oids` into shards respecting both the object and
     /// the raw-byte cap, with sizes supplied per oid.
     fn shard_pairs(&self, oids: &[Oid], size_of: impl Fn(usize, &Oid) -> u64) -> Vec<Vec<Oid>> {
@@ -280,6 +382,59 @@ impl Prefetcher {
     fn shard_sized(&self, oids: &[Oid], sizes: &[u64]) -> Vec<Vec<Oid>> {
         self.shard_pairs(oids, |i, _| sizes.get(i).copied().unwrap_or(0))
     }
+}
+
+/// Pair each to-be-sent object with the delta base the chain
+/// negotiation nominated. A chain the remote holds a prefix of pairs
+/// its suffix objects against the deepest held entry's first oid
+/// ([`pack::KIND_STORE`] — proven present remotely); a chain being
+/// pushed whole pairs entries past the base against the chain's first
+/// object travelling in the same push ([`pack::KIND_REF`]; the planner
+/// demotes the pair to a full record if base and target land in
+/// different shards). A chain-oblivious peer gets no pairings at all,
+/// so version skew can never produce a pack the receiver cannot read.
+fn chain_bases(
+    adv: &ChainAdvert,
+    neg: &ChainNegotiation,
+    send: &[Oid],
+) -> HashMap<Oid, (Oid, u8)> {
+    let mut base_of: HashMap<Oid, (Oid, u8)> = HashMap::new();
+    if !neg.chain_aware {
+        return base_of;
+    }
+    let send_set: HashSet<Oid> = send.iter().copied().collect();
+    for (chain, &depth) in adv.chains.iter().zip(&neg.have_depths) {
+        if chain.is_empty() {
+            continue;
+        }
+        if depth >= 1 {
+            let Some(&base) = chain.get(depth - 1).and_then(|e| e.oids.first()) else {
+                continue;
+            };
+            for entry in &chain[depth.min(chain.len())..] {
+                for oid in &entry.oids {
+                    if send_set.contains(oid) && *oid != base {
+                        base_of.entry(*oid).or_insert((base, pack::KIND_STORE));
+                    }
+                }
+            }
+        } else {
+            let Some(&base) = chain[0].oids.first() else {
+                continue;
+            };
+            if !send_set.contains(&base) {
+                continue;
+            }
+            for entry in &chain[1..] {
+                for oid in &entry.oids {
+                    if send_set.contains(oid) && *oid != base {
+                        base_of.entry(*oid).or_insert((base, pack::KIND_REF));
+                    }
+                }
+            }
+        }
+    }
+    base_of
 }
 
 /// Fold per-shard pack stats + wire reports into one summary and record
@@ -470,5 +625,102 @@ mod tests {
         for oid in &oids {
             assert_eq!(local.get(oid).unwrap(), remote.store().get(oid).unwrap());
         }
+    }
+
+    /// Incompressible base + fine-tune differing only in the tail
+    /// quarter — the delta planner's ideal customer.
+    fn near_pair(seed: u64, len: usize) -> (Vec<u8>, Vec<u8>) {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let base: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let mut tuned = base.clone();
+        for b in &mut tuned[len - len / 4..] {
+            *b = rng.next_u64() as u8;
+        }
+        (base, tuned)
+    }
+
+    #[test]
+    fn chain_push_ships_deltas_against_remote_bases() {
+        use crate::lfs::transport::ChainEntryAdvert;
+        let td_l = TempDir::new("batch-chain-l").unwrap();
+        let td_r = TempDir::new("batch-chain-r").unwrap();
+        let local = LfsStore::open(td_l.path());
+        let (base, tuned) = near_pair(31, 64 * 1024);
+        let (base_oid, _) = local.put(&base).unwrap();
+        let (tuned_oid, _) = local.put(&tuned).unwrap();
+        let remote = LfsRemote::open(td_r.path());
+        remote.store().put(&base).unwrap();
+
+        let adv = ChainAdvert {
+            chains: vec![vec![
+                ChainEntryAdvert { key: base_oid, oids: vec![base_oid] },
+                ChainEntryAdvert { key: tuned_oid, oids: vec![tuned_oid] },
+            ]],
+            want: vec![tuned_oid],
+        };
+        reset_stats();
+        let s = Prefetcher::default()
+            .push_with_chains(&local, &remote, &adv)
+            .unwrap();
+        assert_eq!((s.objects, s.unavailable), (1, 0));
+        let t = stats();
+        assert_eq!(t.negotiations, 1);
+        assert_eq!(t.packs, 1);
+        assert_eq!(t.delta_objects, 1);
+        assert_eq!(remote.store().get(&tuned_oid).unwrap(), tuned);
+
+        // Same object pushed flat to a second remote costs far more wire.
+        let td_flat = TempDir::new("batch-chain-flat").unwrap();
+        let flat = LfsRemote::open(td_flat.path());
+        flat.store().put(&base).unwrap();
+        reset_stats();
+        let sf = push_pack(&local, &flat, &[tuned_oid]).unwrap();
+        assert!(
+            s.wire_bytes < sf.wire_bytes / 2,
+            "delta push ({}) should undercut flat push ({})",
+            s.wire_bytes,
+            sf.wire_bytes
+        );
+        assert_eq!(stats().delta_objects, 0);
+    }
+
+    #[test]
+    fn whole_chain_push_dedups_against_its_own_base() {
+        use crate::lfs::transport::ChainEntryAdvert;
+        let td_l = TempDir::new("batch-wchain-l").unwrap();
+        let td_r = TempDir::new("batch-wchain-r").unwrap();
+        let local = LfsStore::open(td_l.path());
+        let (base, tuned) = near_pair(32, 64 * 1024);
+        let (base_oid, _) = local.put(&base).unwrap();
+        let (tuned_oid, _) = local.put(&tuned).unwrap();
+        // The remote holds nothing: the whole chain ships, with the
+        // suffix entry referencing the base record in the same pack.
+        let remote = LfsRemote::open(td_r.path());
+        let adv = ChainAdvert {
+            chains: vec![vec![
+                ChainEntryAdvert { key: base_oid, oids: vec![base_oid] },
+                ChainEntryAdvert { key: tuned_oid, oids: vec![tuned_oid] },
+            ]],
+            want: vec![base_oid, tuned_oid],
+        };
+        reset_stats();
+        let s = Prefetcher::default()
+            .push_with_chains(&local, &remote, &adv)
+            .unwrap();
+        assert_eq!(s.objects, 2);
+        assert_eq!(stats().delta_objects, 1);
+        assert_eq!(remote.store().get(&base_oid).unwrap(), base);
+        assert_eq!(remote.store().get(&tuned_oid).unwrap(), tuned);
+
+        let td_flat = TempDir::new("batch-wchain-flat").unwrap();
+        let flat = LfsRemote::open(td_flat.path());
+        reset_stats();
+        let sf = push_pack(&local, &flat, &[base_oid, tuned_oid]).unwrap();
+        assert!(
+            s.wire_bytes < sf.wire_bytes * 3 / 4,
+            "in-pack dedup ({}) should undercut the flat push ({})",
+            s.wire_bytes,
+            sf.wire_bytes
+        );
     }
 }

@@ -1,0 +1,385 @@
+//! Content-defined-chunking binary deltas for near-identical objects.
+//!
+//! Two models fine-tuned from one base share most of every dense
+//! parameter group byte-for-byte, yet their group objects hash to
+//! different oids, so oid-level dedup alone re-ships the whole group.
+//! [`encode_delta`] closes that gap: it splits the *base* object into
+//! content-defined chunks (a gear rolling hash picks the boundaries,
+//! so an insertion shifts chunk edges locally instead of invalidating
+//! every later block), indexes them by content hash, and walks the
+//! *target* emitting copy ops for chunks the base already holds and
+//! literal ops for genuinely new bytes. [`apply_delta`] replays the
+//! ops against the base with full bounds checking — a corrupt or
+//! hostile ops stream yields an error, never a panic or an oversized
+//! allocation.
+//!
+//! The ops stream is a flat tag-length encoding (integers
+//! little-endian):
+//!
+//! ```text
+//! 0x00 | len u32 | bytes        literal: append `len` raw bytes
+//! 0x01 | off u64 | len u32      copy: append base[off .. off+len]
+//! ```
+//!
+//! Adjacent ops coalesce (contiguous copies merge into one, literal
+//! runs merge into one), so identical inputs encode to a single
+//! whole-object copy. Chunk-hash matches are confirmed with a byte
+//! compare — the hash is only a filter — so an encoded delta can never
+//! describe a wrong copy. Chunking parameters and the gear table are
+//! fixed constants, making encoding fully deterministic: the same
+//! (base, target) pair always yields the same ops bytes, which is what
+//! keeps delta packs content-addressed and resumable.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+/// Minimum chunk length: the boundary test is suppressed below this,
+/// keeping pathological inputs from degenerating into tiny chunks.
+const MIN_CHUNK: usize = 512;
+/// Hard maximum chunk length: a boundary is forced at this size even
+/// if the rolling hash never fires (e.g. on constant data).
+const MAX_CHUNK: usize = 4096;
+/// Boundary mask: a chunk ends where `hash & MASK == 0`, giving ~1 KiB
+/// average chunks between the min/max clamps.
+const BOUNDARY_MASK: u64 = (1 << 10) - 1;
+
+/// Ops-stream tag: literal bytes follow.
+const OP_LITERAL: u8 = 0x00;
+/// Ops-stream tag: copy a base range.
+const OP_COPY: u8 = 0x01;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The 256-entry gear table, derived deterministically (splitmix64 of
+/// the byte value) so chunk boundaries — and therefore encoded deltas
+/// and the packs that carry them — are stable across processes.
+fn gear() -> &'static [u64; 256] {
+    static GEAR: OnceLock<[u64; 256]> = OnceLock::new();
+    GEAR.get_or_init(|| {
+        let mut table = [0u64; 256];
+        for (i, slot) in table.iter_mut().enumerate() {
+            *slot = splitmix64(i as u64);
+        }
+        table
+    })
+}
+
+/// Split `data` into content-defined chunks, returned as (offset, len)
+/// spans covering the input exactly.
+fn chunk_spans(data: &[u8]) -> Vec<(usize, usize)> {
+    let gear = gear();
+    let mut spans = Vec::with_capacity(data.len() / 1024 + 1);
+    let mut start = 0usize;
+    let mut hash = 0u64;
+    let mut len = 0usize;
+    for (i, &b) in data.iter().enumerate() {
+        hash = (hash << 1).wrapping_add(gear[b as usize]);
+        len += 1;
+        if (len >= MIN_CHUNK && (hash & BOUNDARY_MASK) == 0) || len >= MAX_CHUNK {
+            spans.push((start, len));
+            start = i + 1;
+            hash = 0;
+            len = 0;
+        }
+    }
+    if len > 0 {
+        spans.push((start, len));
+    }
+    spans
+}
+
+/// FNV-1a over a chunk: the index filter. Matches are re-verified with
+/// a byte compare before any copy op is emitted.
+fn chunk_hash(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Incremental ops encoder that coalesces adjacent literals and
+/// base-contiguous copies.
+struct OpsBuilder {
+    ops: Vec<u8>,
+    lit: Vec<u8>,
+    copy: Option<(u64, u64)>,
+}
+
+impl OpsBuilder {
+    fn new() -> OpsBuilder {
+        OpsBuilder {
+            ops: Vec::new(),
+            lit: Vec::new(),
+            copy: None,
+        }
+    }
+
+    fn flush_lit(&mut self) {
+        // u32 op lengths: a >4 GiB literal run (at the pack format's
+        // object limit) splits into several ops.
+        for piece in self.lit.chunks(u32::MAX as usize) {
+            self.ops.push(OP_LITERAL);
+            self.ops.extend_from_slice(&(piece.len() as u32).to_le_bytes());
+            self.ops.extend_from_slice(piece);
+        }
+        self.lit.clear();
+    }
+
+    fn flush_copy(&mut self) {
+        if let Some((mut off, mut len)) = self.copy.take() {
+            while len > 0 {
+                let piece = len.min(u32::MAX as u64);
+                self.ops.push(OP_COPY);
+                self.ops.extend_from_slice(&off.to_le_bytes());
+                self.ops.extend_from_slice(&(piece as u32).to_le_bytes());
+                off += piece;
+                len -= piece;
+            }
+        }
+    }
+
+    fn literal(&mut self, bytes: &[u8]) {
+        self.flush_copy();
+        self.lit.extend_from_slice(bytes);
+    }
+
+    fn copy(&mut self, off: u64, len: u64) {
+        self.flush_lit();
+        match self.copy {
+            Some((o, l)) if o + l == off => self.copy = Some((o, l + len)),
+            Some(_) => {
+                self.flush_copy();
+                self.copy = Some((off, len));
+            }
+            None => self.copy = Some((off, len)),
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        self.flush_lit();
+        self.flush_copy();
+        self.ops
+    }
+}
+
+/// Encode `target` as an ops stream against `base`.
+///
+/// Deterministic, and always correct for *any* pair of inputs — in the
+/// worst case (nothing shared) the ops are one literal holding the
+/// whole target plus 5 bytes of framing. Whether the delta is *worth
+/// shipping* is the caller's decision (the pack planner compares the
+/// compressed ops against the compressed full object).
+pub fn encode_delta(base: &[u8], target: &[u8]) -> Vec<u8> {
+    let mut index: HashMap<u64, Vec<(usize, usize)>> = HashMap::new();
+    for (off, len) in chunk_spans(base) {
+        index
+            .entry(chunk_hash(&base[off..off + len]))
+            .or_default()
+            .push((off, len));
+    }
+    let mut b = OpsBuilder::new();
+    for (off, len) in chunk_spans(target) {
+        let piece = &target[off..off + len];
+        let hit = index.get(&chunk_hash(piece)).and_then(|cands| {
+            cands
+                .iter()
+                .find(|&&(boff, blen)| blen == len && &base[boff..boff + blen] == piece)
+        });
+        match hit {
+            Some(&(boff, _)) => b.copy(boff as u64, len as u64),
+            None => b.literal(piece),
+        }
+    }
+    b.finish()
+}
+
+fn take<'a>(ops: &'a [u8], at: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if ops.len() - *at < n {
+        bail!("delta ops stream truncated");
+    }
+    let s = &ops[*at..*at + n];
+    *at += n;
+    Ok(s)
+}
+
+/// Replay an ops stream against `base`, producing exactly
+/// `expected_len` bytes.
+///
+/// Every read is bounds-checked against the ops stream and the base,
+/// and the output is capped at `expected_len` as it grows, so a
+/// corrupt or hostile stream fails fast without a panic or an
+/// allocation larger than the declared result.
+pub fn apply_delta(base: &[u8], ops: &[u8], expected_len: u64) -> Result<Vec<u8>> {
+    let mut out: Vec<u8> = Vec::with_capacity((expected_len as usize).min(16 << 20));
+    let mut at = 0usize;
+    while at < ops.len() {
+        let tag = ops[at];
+        at += 1;
+        match tag {
+            OP_LITERAL => {
+                let len = u32::from_le_bytes(take(ops, &mut at, 4)?.try_into().unwrap()) as usize;
+                let bytes = take(ops, &mut at, len)?;
+                if out.len() as u64 + len as u64 > expected_len {
+                    bail!("delta output exceeds its declared length");
+                }
+                out.extend_from_slice(bytes);
+            }
+            OP_COPY => {
+                let off = u64::from_le_bytes(take(ops, &mut at, 8)?.try_into().unwrap());
+                let len =
+                    u32::from_le_bytes(take(ops, &mut at, 4)?.try_into().unwrap()) as u64;
+                let end = off
+                    .checked_add(len)
+                    .filter(|&e| e <= base.len() as u64)
+                    .ok_or_else(|| anyhow::anyhow!("delta copy overruns its base"))?;
+                if out.len() as u64 + len > expected_len {
+                    bail!("delta output exceeds its declared length");
+                }
+                out.extend_from_slice(&base[off as usize..end as usize]);
+            }
+            t => bail!("delta ops stream has unknown tag {t:#04x}"),
+        }
+    }
+    if out.len() as u64 != expected_len {
+        bail!(
+            "delta output has wrong length ({} declared, {} produced)",
+            expected_len,
+            out.len()
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, gens};
+    use crate::util::rng::Pcg64;
+
+    fn roundtrip(base: &[u8], target: &[u8]) -> Vec<u8> {
+        let ops = encode_delta(base, target);
+        let back = apply_delta(base, &ops, target.len() as u64).unwrap();
+        assert_eq!(back, target, "delta roundtrip changed the content");
+        ops
+    }
+
+    #[test]
+    fn identical_inputs_encode_one_copy() {
+        let data: Vec<u8> = (0..20_000u32).map(|i| (i % 251) as u8).collect();
+        let ops = roundtrip(&data, &data);
+        // One coalesced copy op: tag + off + len.
+        assert_eq!(ops.len(), 13, "identical inputs must coalesce to one copy");
+    }
+
+    #[test]
+    fn near_identical_is_mostly_copies() {
+        let mut rng = Pcg64::new(7);
+        let base: Vec<u8> = (0..64 * 1024).map(|_| rng.next_u64() as u8).collect();
+        let mut target = base.clone();
+        // Overwrite an interior 4 KiB window.
+        for b in &mut target[20_000..24_096] {
+            *b = rng.next_u64() as u8;
+        }
+        let ops = roundtrip(&base, &target);
+        assert!(
+            ops.len() < target.len() / 4,
+            "ops ({} bytes) should be far smaller than the target ({} bytes)",
+            ops.len(),
+            target.len()
+        );
+    }
+
+    #[test]
+    fn disjoint_inputs_still_roundtrip() {
+        let mut rng = Pcg64::new(8);
+        let base: Vec<u8> = (0..8000).map(|_| rng.next_u64() as u8).collect();
+        let target: Vec<u8> = (0..9000).map(|_| rng.next_u64() as u8).collect();
+        roundtrip(&base, &target);
+        roundtrip(&[], &target);
+        roundtrip(&base, &[]);
+        assert!(encode_delta(&base, &[]).is_empty());
+    }
+
+    #[test]
+    fn random_edits_roundtrip_property() {
+        prop::check(
+            "delta_random_edits",
+            |rng| {
+                let n = gens::usize_in(rng, 0, 40_000);
+                let base: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+                let mut target = base.clone();
+                // A few random splices: overwrite, insert, or truncate.
+                for _ in 0..gens::usize_in(rng, 0, 4) {
+                    if target.is_empty() {
+                        break;
+                    }
+                    let at = gens::usize_in(rng, 0, target.len() - 1);
+                    let len = gens::usize_in(rng, 1, 2000).min(target.len() - at);
+                    match rng.below(3) {
+                        0 => {
+                            for b in &mut target[at..at + len] {
+                                *b = rng.next_u64() as u8;
+                            }
+                        }
+                        1 => {
+                            let ins: Vec<u8> =
+                                (0..len).map(|_| rng.next_u64() as u8).collect();
+                            target.splice(at..at, ins);
+                        }
+                        _ => {
+                            target.drain(at..at + len);
+                        }
+                    }
+                }
+                (base, target)
+            },
+            |(base, target)| {
+                let ops = encode_delta(base, target);
+                let back = apply_delta(base, &ops, target.len() as u64)
+                    .map_err(|e| format!("apply failed: {e:#}"))?;
+                if back != *target {
+                    return Err("roundtrip mismatch".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn corrupt_ops_never_panic_and_never_pass() {
+        let mut rng = Pcg64::new(9);
+        let base: Vec<u8> = (0..10_000).map(|_| rng.next_u64() as u8).collect();
+        let mut target = base.clone();
+        for b in &mut target[4000..4200] {
+            *b = rng.next_u64() as u8;
+        }
+        let ops = encode_delta(&base, &target);
+
+        // Truncations: must error (or, if the stream stays well formed,
+        // fail the final length check) — never produce the target.
+        for keep in [0, 1, 5, ops.len() / 2, ops.len() - 1] {
+            if let Ok(out) = apply_delta(&base, &ops[..keep], target.len() as u64) {
+                assert_ne!(out, target, "truncated ops at {keep} reproduced the target");
+            }
+        }
+        // Byte flips across the stream: same contract.
+        for at in (0..ops.len()).step_by(7) {
+            let mut bad = ops.clone();
+            bad[at] ^= 0xff;
+            if let Ok(out) = apply_delta(&base, &bad, target.len() as u64) {
+                assert_ne!(out, target, "flipped ops at {at} reproduced the target");
+            }
+        }
+        // A wrong declared length is always rejected.
+        assert!(apply_delta(&base, &ops, target.len() as u64 + 1).is_err());
+        assert!(apply_delta(&base, &ops, target.len() as u64 - 1).is_err());
+    }
+}

@@ -4,6 +4,10 @@
 //! [`LfsServer`](super::server::LfsServer):
 //!
 //! * `POST /objects/batch` — one have/want negotiation round trip.
+//!   With a protocol-2 body the same request also advertises chain
+//!   prefixes and the server reports per-chain held depths, enabling
+//!   delta packs ([`RemoteTransport::negotiate_chains`]); servers that
+//!   ignore the extra fields degrade the push to flat records.
 //! * `POST /packs` + `GET /packs/<id>` — the server assembles (and
 //!   caches) a pack for a want set; the client **streams** the body
 //!   straight into a partial file under the staging directory, so an
@@ -29,9 +33,9 @@
 //! verification and the client falls back to one clean full download.
 
 use super::batch::{self, BatchResponse};
-use super::pack::{self, PackStats};
+use super::pack::{self, DeltaPlan, PackStats};
 use super::store::LfsStore;
-use super::transport::{RemoteTransport, WireReport};
+use super::transport::{self, ChainAdvert, ChainNegotiation, RemoteTransport, WireReport};
 use crate::gitcore::object::Oid;
 use crate::gitcore::remote::{parse_json, parse_oid_arr, want_body};
 use crate::util::http::{HttpClient, Request};
@@ -280,6 +284,66 @@ impl RemoteTransport for HttpRemote {
             present_sizes,
             missing,
         })
+    }
+
+    fn negotiate_chains(&self, adv: &ChainAdvert) -> Result<ChainNegotiation> {
+        batch::record(|s| s.negotiations += 1);
+        let req =
+            Request::new("POST", "/objects/batch").body(transport::chain_advert_body(adv));
+        let resp = self.client.send(&req)?;
+        if resp.status != 200 {
+            bail!("{}: POST /objects/batch -> {}", self.url(), resp.status);
+        }
+        let json = parse_json(&resp)?;
+        let present = parse_oid_arr(&json, "present")?;
+        let missing = parse_oid_arr(&json, "missing")?;
+        let present_sizes: Vec<u64> = json
+            .get("sizes")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().map(|v| v.as_u64().unwrap_or(0)).collect())
+            .unwrap_or_default();
+        let batch = BatchResponse {
+            present,
+            present_sizes,
+            missing,
+        };
+        // A chain-aware server echoes protocol 2 and a per-chain depth
+        // array; an older server answers the flat fields only, and the
+        // push degrades to whole-object records (version skew rule).
+        let chain_aware = json.get("protocol").and_then(|v| v.as_u64()) == Some(2);
+        let have_depths = if chain_aware {
+            json.get("chains")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .map(|c| {
+                            c.get("have_depth").and_then(|v| v.as_usize()).unwrap_or(0)
+                        })
+                        .collect()
+                })
+                .unwrap_or_else(|| vec![0; adv.chains.len()])
+        } else {
+            vec![0; adv.chains.len()]
+        };
+        Ok(ChainNegotiation {
+            batch,
+            have_depths,
+            chain_aware,
+        })
+    }
+
+    fn send_pack_with_bases(
+        &self,
+        src: &LfsStore,
+        plan: &DeltaPlan,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        let (spill_base, _tmp_guard) = self.staging_path("lfs/outgoing", "pack")?;
+        let spill = tmp::unique_sibling(&spill_base);
+        let built = pack::write_delta_pack_file(src, plan, threads, &spill)?;
+        let result = self.send_spilled(&built, &spill);
+        let _ = std::fs::remove_file(&spill);
+        result
     }
 
     fn fetch_pack_into(

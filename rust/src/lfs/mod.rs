@@ -14,7 +14,13 @@
 //! byte-range resume of interrupted transfers. Packs spill to disk and
 //! move in bounded chunks over pooled keep-alive connections, so peak
 //! memory scales with the largest object, not the pack, and a
-//! multi-request push or fetch pays one TCP connect. [`faults`] is the
+//! multi-request push or fetch pays one TCP connect. Pushes that carry
+//! model update chains advertise them ([`transport::ChainAdvert`]) in
+//! the same negotiation round trip; a chain-aware receiver answers
+//! with its held prefix depths and the pack ships suffix objects as
+//! [`delta`] records against bases the receiver holds (pack format v2
+//! — the flat protocol remains the version-skew fallback). [`faults`]
+//! is the
 //! failure-injection proxy that proves the resume semantics (see
 //! `docs/ARCHITECTURE.md` "Remotes" for the data flow and wire
 //! protocol).
@@ -26,6 +32,7 @@
 //!    opaque LFS blob (`baseline/`).
 
 pub mod batch;
+pub mod delta;
 pub mod faults;
 pub mod filter;
 pub mod http;
@@ -37,15 +44,20 @@ pub mod store;
 pub mod transport;
 
 pub use batch::{fetch_pack, push_pack, BatchResponse, Prefetcher, TransferStats, TransferSummary};
+pub use delta::{apply_delta, encode_delta};
 pub use filter::{register_lfs, LfsFilter, LfsHooks};
 pub use http::HttpRemote;
 pub use pack::{
-    build_pack, pack_id, pack_index, unpack_file, unpack_into, unpack_verified, verify_pack_file,
-    write_pack_file, BuiltPack, PackCheck, PackStats, PackWriter,
+    build_pack, pack_id, pack_index, plan_deltas, unpack_file, unpack_into, unpack_verified,
+    verify_pack_file, write_delta_pack_file, write_pack_file, BuiltPack, DeltaPlan, DeltaRecord,
+    PackCheck, PackStats, PackWriter, PACK_VERSION_DELTA,
 };
 pub use server::gc_stale_packs;
 pub use pointer::Pointer;
 pub use remote::{sync_to_remote, DirRemote, LfsRemote};
 pub use server::LfsServer;
 pub use store::LfsStore;
-pub use transport::{open_transport, RemoteTransport, WireReport};
+pub use transport::{
+    answer_chains, open_transport, upload_with_chains, ChainAdvert, ChainEntryAdvert,
+    ChainNegotiation, RemoteTransport, WireReport,
+};

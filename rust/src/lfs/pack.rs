@@ -33,12 +33,30 @@
 //! as conveniences over the same code paths and produce byte-identical
 //! packs.
 
+//! **Deltas (format v2):** a [`PACK_VERSION_DELTA`] pack may carry two
+//! extra record kinds alongside full objects — [`KIND_REF`], a
+//! content-defined-chunking delta against a full record travelling
+//! earlier in the *same* pack (a shared base is emitted once and later
+//! records reference it by oid), and [`KIND_STORE`], a delta against a
+//! base the *receiver* already holds (proven present during chain
+//! negotiation). The record kind rides the high byte of the on-disk
+//! `raw_len` field (real lengths are capped at 2³² by
+//! [`MAX_OBJECT_BYTES`]), so v1 packs are bit-for-bit unchanged and a
+//! plan with no deltas still writes a v1 pack. A delta payload is the
+//! 32-byte base oid followed by the zstd-compressed [`delta`] ops
+//! stream; resolution on unpack is O(1) memory over the
+//! already-admitted records and the receiving store, and every
+//! reconstructed object still re-hashes to its oid before admission.
+//!
+//! [`delta`]: super::delta
+
 use super::store::LfsStore;
 use crate::gitcore::object::Oid;
 use crate::util::par;
 use anyhow::{bail, Context, Result};
 use sha2::{Digest, Sha256};
 use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufReader, Read, Write};
 use std::path::Path;
 
@@ -46,6 +64,31 @@ use std::path::Path;
 pub const PACK_MAGIC: &[u8; 4] = b"THP1";
 /// Current pack format version.
 pub const PACK_VERSION: u32 = 1;
+/// Pack format version that may carry delta records. Writers only use
+/// it when a plan actually holds deltas, so flat transfers keep
+/// producing version-1 packs older peers can read.
+pub const PACK_VERSION_DELTA: u32 = 2;
+
+/// Record kind: a whole zstd-compressed object (the only kind in v1).
+pub const KIND_FULL: u8 = 0;
+/// Record kind: delta whose base is a full record earlier in the same
+/// pack (shared-base reference).
+pub const KIND_REF: u8 = 1;
+/// Record kind: delta whose base lives in the receiver's store,
+/// negotiated present before the pack was built.
+pub const KIND_STORE: u8 = 2;
+
+/// Pack the record kind into the high byte of the on-disk `raw_len`
+/// field. Safe because [`MAX_OBJECT_BYTES`] caps true lengths at 2³²,
+/// and kind 0 leaves v1 records byte-identical.
+fn encode_len(kind: u8, raw_len: u64) -> u64 {
+    ((kind as u64) << 56) | raw_len
+}
+
+/// Split an on-disk length field into (kind, raw_len).
+fn decode_len(field: u64) -> (u8, u64) {
+    ((field >> 56) as u8, field & ((1u64 << 56) - 1))
+}
 
 const HEADER_LEN: usize = 16; // magic + version + count
 const TRAILER_LEN: usize = 40; // index offset + sha256
@@ -92,11 +135,21 @@ pub struct PackWriter<W: Write> {
     index: Vec<(Oid, u64)>,
     declared: u64,
     raw_bytes: u64,
+    version: u32,
 }
 
 impl<W: Write> PackWriter<W> {
     /// Start a pack that will carry exactly `objects` records.
     pub fn new(out: W, objects: u64) -> Result<PackWriter<W>> {
+        PackWriter::new_versioned(out, objects, PACK_VERSION)
+    }
+
+    /// Start a pack in an explicit format version: [`PACK_VERSION`] for
+    /// flat packs, [`PACK_VERSION_DELTA`] when delta records follow.
+    pub fn new_versioned(out: W, objects: u64, version: u32) -> Result<PackWriter<W>> {
+        if version != PACK_VERSION && version != PACK_VERSION_DELTA {
+            bail!("pack: unsupported version {version}");
+        }
         let mut w = PackWriter {
             out,
             hasher: Sha256::new(),
@@ -104,10 +157,11 @@ impl<W: Write> PackWriter<W> {
             index: Vec::with_capacity(objects.min(1 << 20) as usize),
             declared: objects,
             raw_bytes: 0,
+            version,
         };
         let mut header = [0u8; HEADER_LEN];
         header[..4].copy_from_slice(PACK_MAGIC);
-        header[4..8].copy_from_slice(&PACK_VERSION.to_le_bytes());
+        header[4..8].copy_from_slice(&version.to_le_bytes());
         header[8..16].copy_from_slice(&objects.to_le_bytes());
         w.emit(&header)?;
         Ok(w)
@@ -143,6 +197,40 @@ impl<W: Write> PackWriter<W> {
     pub fn add_object(&mut self, oid: Oid, raw: &[u8]) -> Result<()> {
         let comp = zstd::bulk::compress(raw, PACK_ZSTD_LEVEL).context("pack compress")?;
         self.add_compressed(oid, raw.len() as u64, &comp)
+    }
+
+    /// Append one delta record: `oid` reconstructs to `raw_len` bytes
+    /// by replaying the zstd-compressed ops in `ops_comp` against
+    /// `base`. Only valid in a [`PACK_VERSION_DELTA`] pack; `kind` must
+    /// be [`KIND_REF`] or [`KIND_STORE`].
+    pub fn add_delta(
+        &mut self,
+        oid: Oid,
+        kind: u8,
+        raw_len: u64,
+        base: &Oid,
+        ops_comp: &[u8],
+    ) -> Result<()> {
+        if self.version < PACK_VERSION_DELTA {
+            bail!("pack writer: delta records need a version-{PACK_VERSION_DELTA} pack");
+        }
+        if kind != KIND_REF && kind != KIND_STORE {
+            bail!("pack writer: invalid delta kind {kind}");
+        }
+        if self.index.len() as u64 >= self.declared {
+            bail!("pack writer: more objects added than declared");
+        }
+        if raw_len > MAX_OBJECT_BYTES {
+            bail!("object {} exceeds the pack format's size limit", oid.short());
+        }
+        self.index.push((oid, self.pos));
+        self.emit(&oid.0)?;
+        self.emit(&encode_len(kind, raw_len).to_le_bytes())?;
+        self.emit(&((32 + ops_comp.len()) as u64).to_le_bytes())?;
+        self.emit(&base.0)?;
+        self.emit(ops_comp)?;
+        self.raw_bytes += raw_len;
+        Ok(())
     }
 
     /// Write the index + trailer and flush. Returns the finished
@@ -188,30 +276,124 @@ pub struct BuiltPack {
     pub raw_bytes: u64,
 }
 
-/// Stream a pack holding `oids` (read from `store`) into `out`.
+/// One planned delta record: `oid` ships as CDC ops against `base`.
+#[derive(Debug, Clone)]
+pub struct DeltaRecord {
+    /// Object being shipped.
+    pub oid: Oid,
+    /// Base object the ops replay against.
+    pub base: Oid,
+    /// [`KIND_REF`] (base travels as a full record in the same pack)
+    /// or [`KIND_STORE`] (base already held by the receiver).
+    pub kind: u8,
+    /// Reconstructed length in bytes.
+    pub raw_len: u64,
+    /// zstd-compressed [`super::delta`] ops stream.
+    pub ops_comp: Vec<u8>,
+}
+
+/// A pack plan: which objects ship whole and which ship as deltas.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaPlan {
+    /// Objects shipped as ordinary full records.
+    pub full: Vec<Oid>,
+    /// Objects shipped as delta records.
+    pub deltas: Vec<DeltaRecord>,
+}
+
+impl DeltaPlan {
+    /// Every object the pack will carry (full + delta).
+    pub fn all_oids(&self) -> Vec<Oid> {
+        self.full
+            .iter()
+            .copied()
+            .chain(self.deltas.iter().map(|d| d.oid))
+            .collect()
+    }
+}
+
+/// Build a [`DeltaPlan`] for `oids`: each object with a candidate base
+/// in `base_of` (oid → (base, kind)) is CDC-encoded against it and
+/// kept as a delta only when the compressed ops beat the compressed
+/// full object by a clear margin; everything else ships whole.
 ///
-/// Duplicate oids are packed once. Object payloads are compressed in
-/// parallel across `threads` workers in bounded windows; the framing
-/// is written sequentially so the pack is deterministic (and therefore
-/// byte-identical to [`build_pack`] of the same want set). Peak heap
-/// is O(window), independent of the pack size.
-pub fn write_pack_to<W: Write>(
+/// Demotions to full records keep the pack self-consistent:
+/// [`KIND_REF`] candidates whose base is not itself in `oids` (the
+/// base must travel in the same pack), objects that *serve* as a base
+/// for another candidate (a base is never itself a delta), and
+/// candidates whose base the source store cannot produce. Encoding is
+/// parallel across `threads` and fully deterministic for a given store
+/// state, so retried packs keep their id and stay resumable.
+pub fn plan_deltas(
     store: &LfsStore,
     oids: &[Oid],
+    base_of: &HashMap<Oid, (Oid, u8)>,
     threads: usize,
-    out: W,
-) -> Result<BuiltPack> {
+) -> Result<DeltaPlan> {
     let mut unique = oids.to_vec();
     unique.sort();
     unique.dedup();
+    let in_pack: HashSet<Oid> = unique.iter().copied().collect();
+    let bases_used: HashSet<Oid> = unique
+        .iter()
+        .filter_map(|o| base_of.get(o).map(|&(b, _)| b))
+        .collect();
+    let encoded = par::try_par_map(&unique, threads, |_, oid| -> Result<Option<DeltaRecord>> {
+        let Some(&(base, kind)) = base_of.get(oid) else {
+            return Ok(None);
+        };
+        if base == *oid
+            || bases_used.contains(oid)
+            || (kind == KIND_REF && !in_pack.contains(&base))
+        {
+            return Ok(None);
+        }
+        let Ok(base_bytes) = store.get(&base) else {
+            return Ok(None);
+        };
+        let target = store
+            .get(oid)
+            .with_context(|| format!("packing object {}", oid.short()))?;
+        let ops = super::delta::encode_delta(&base_bytes, &target);
+        let ops_comp = zstd::bulk::compress(&ops, PACK_ZSTD_LEVEL).context("pack compress")?;
+        let full_comp = zstd::bulk::compress(&target, PACK_ZSTD_LEVEL).context("pack compress")?;
+        // Worth-it gate: after framing (the 32-byte base oid) the delta
+        // must undercut the full record by ≥10% or it ships whole.
+        if 32 + ops_comp.len() >= full_comp.len() * 9 / 10 {
+            return Ok(None);
+        }
+        Ok(Some(DeltaRecord {
+            oid: *oid,
+            base,
+            kind,
+            raw_len: target.len() as u64,
+            ops_comp,
+        }))
+    })?;
+    let mut plan = DeltaPlan::default();
+    for (oid, rec) in unique.iter().zip(encoded) {
+        match rec {
+            Some(d) => plan.deltas.push(d),
+            None => plan.full.push(*oid),
+        }
+    }
+    Ok(plan)
+}
 
+/// Stream full records for `unique` (pre-sorted, deduped) through
+/// `writer`: windowed parallel compression, sequential framing.
+fn stream_full_records<W: Write>(
+    store: &LfsStore,
+    writer: &mut PackWriter<W>,
+    unique: &[Oid],
+    threads: usize,
+) -> Result<()> {
     thread_local! {
         // Per-worker read buffer recycled across objects: with
         // `LfsStore::get_to` this drops one allocation + full copy per
         // object from the pack-assembly fan-in.
         static READ_SCRATCH: RefCell<Vec<u8>> = RefCell::new(Vec::new());
     }
-    let mut writer = PackWriter::new(out, unique.len() as u64)?;
     // Window the compression fan-out: enough objects to keep `threads`
     // workers busy, but bounded so a huge want set never materializes
     // in RAM between compression and framing.
@@ -246,7 +428,78 @@ pub fn write_pack_to<W: Write>(
         }
         start = end;
     }
+    Ok(())
+}
+
+/// Stream a pack holding `oids` (read from `store`) into `out`.
+///
+/// Duplicate oids are packed once. Object payloads are compressed in
+/// parallel across `threads` workers in bounded windows; the framing
+/// is written sequentially so the pack is deterministic (and therefore
+/// byte-identical to [`build_pack`] of the same want set). Peak heap
+/// is O(window), independent of the pack size.
+pub fn write_pack_to<W: Write>(
+    store: &LfsStore,
+    oids: &[Oid],
+    threads: usize,
+    out: W,
+) -> Result<BuiltPack> {
+    let mut unique = oids.to_vec();
+    unique.sort();
+    unique.dedup();
+    let mut writer = PackWriter::new(out, unique.len() as u64)?;
+    stream_full_records(store, &mut writer, &unique, threads)?;
     writer.finish()
+}
+
+/// Stream a delta-planned pack into `out`: full records first (the
+/// exact [`write_pack_to`] streaming path, so in-pack bases are always
+/// admitted before anything references them), then the plan's delta
+/// records sorted by oid. A plan with no deltas degrades to a
+/// byte-identical version-1 pack, keeping flat pushes wire-compatible
+/// with older receivers.
+pub fn write_delta_pack_to<W: Write>(
+    store: &LfsStore,
+    plan: &DeltaPlan,
+    threads: usize,
+    out: W,
+) -> Result<BuiltPack> {
+    if plan.deltas.is_empty() {
+        return write_pack_to(store, &plan.full, threads, out);
+    }
+    let mut full = plan.full.clone();
+    full.sort();
+    full.dedup();
+    let mut deltas: Vec<&DeltaRecord> = plan.deltas.iter().collect();
+    deltas.sort_by_key(|d| d.oid);
+    let total = (full.len() + deltas.len()) as u64;
+    let mut writer = PackWriter::new_versioned(out, total, PACK_VERSION_DELTA)?;
+    stream_full_records(store, &mut writer, &full, threads)?;
+    for d in deltas {
+        writer.add_delta(d.oid, d.kind, d.raw_len, &d.base, &d.ops_comp)?;
+    }
+    writer.finish()
+}
+
+/// Stream a delta-planned pack into a fresh file at `path` (parent
+/// directories created; partial file removed on error).
+pub fn write_delta_pack_file(
+    store: &LfsStore,
+    plan: &DeltaPlan,
+    threads: usize,
+    path: &Path,
+) -> Result<BuiltPack> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let file = std::fs::File::create(path).context("creating pack spill file")?;
+    match write_delta_pack_to(store, plan, threads, std::io::BufWriter::new(file)) {
+        Ok(built) => Ok(built),
+        Err(e) => {
+            let _ = std::fs::remove_file(path);
+            Err(e)
+        }
+    }
 }
 
 /// Stream a pack for `oids` into a fresh file at `path` (parent
@@ -285,6 +538,8 @@ struct PackView {
     index: Vec<(Oid, usize)>,
     /// Where the index begins == where record data ends.
     records_end: usize,
+    /// Format version (bounds which record kinds are legal).
+    version: u32,
 }
 
 fn parse(pack: &[u8]) -> Result<PackView> {
@@ -295,7 +550,7 @@ fn parse(pack: &[u8]) -> Result<PackView> {
         bail!("pack: bad magic");
     }
     let version = u32::from_le_bytes(pack[4..8].try_into().unwrap());
-    if version != PACK_VERSION {
+    if version != PACK_VERSION && version != PACK_VERSION_DELTA {
         bail!("pack: unsupported version {version}");
     }
     let checksum_at = pack.len() - 32;
@@ -335,13 +590,14 @@ fn parse(pack: &[u8]) -> Result<PackView> {
     Ok(PackView {
         index,
         records_end: index_offset,
+        version,
     })
 }
 
-/// Slice the record at `off`, returning (oid, raw_len, compressed bytes).
-fn record_at(pack: &[u8], off: usize, records_end: usize) -> Result<(Oid, u64, &[u8])> {
+/// Slice the record at `off`, returning (oid, kind, raw_len, payload).
+fn record_at(pack: &[u8], off: usize, records_end: usize) -> Result<(Oid, u8, u64, &[u8])> {
     let oid = Oid(pack[off..off + 32].try_into().unwrap());
-    let raw_len = u64::from_le_bytes(pack[off + 32..off + 40].try_into().unwrap());
+    let (kind, raw_len) = decode_len(u64::from_le_bytes(pack[off + 32..off + 40].try_into().unwrap()));
     let comp_len = u64::from_le_bytes(pack[off + 40..off + 48].try_into().unwrap());
     let start = off + RECORD_HEADER_LEN;
     // Overflow-safe: compare in u64 before narrowing.
@@ -349,7 +605,24 @@ fn record_at(pack: &[u8], off: usize, records_end: usize) -> Result<(Oid, u64, &
         bail!("pack record for {} overruns the index", oid.short());
     }
     let comp_len = comp_len as usize;
-    Ok((oid, raw_len, &pack[start..start + comp_len]))
+    Ok((oid, kind, raw_len, &pack[start..start + comp_len]))
+}
+
+/// Validate a record's kind against the pack version it appeared in.
+fn check_kind(version: u32, kind: u8, payload_len: u64, oid: &Oid) -> Result<()> {
+    match kind {
+        KIND_FULL => Ok(()),
+        KIND_REF | KIND_STORE if version >= PACK_VERSION_DELTA => {
+            if payload_len < 32 {
+                bail!(
+                    "pack delta record for {} is too short to name a base",
+                    oid.short()
+                );
+            }
+            Ok(())
+        }
+        _ => bail!("pack record for {} has invalid kind {kind}", oid.short()),
+    }
 }
 
 /// The pack's identity: the hex of its trailing sha256.
@@ -374,10 +647,11 @@ pub fn pack_index(pack: &[u8]) -> Result<Vec<(Oid, u64)>> {
     view.index
         .iter()
         .map(|&(oid, off)| {
-            let (record_oid, raw_len, _) = record_at(pack, off, view.records_end)?;
+            let (record_oid, kind, raw_len, payload) = record_at(pack, off, view.records_end)?;
             if record_oid != oid {
                 bail!("pack index entry for {} points at a foreign record", oid.short());
             }
+            check_kind(view.version, kind, payload.len() as u64, &oid)?;
             Ok((oid, raw_len))
         })
         .collect()
@@ -411,23 +685,89 @@ fn admit_record(store: &LfsStore, oid: Oid, raw_len: u64, comp: &[u8]) -> Result
     Ok(raw_len)
 }
 
+/// Resolve and admit one delta record: fetch the base from the
+/// receiving store (full records of the same pack were admitted first,
+/// so [`KIND_REF`] bases resolve the same way [`KIND_STORE`] ones do),
+/// bomb-guard decompress the ops, replay them, and gate admission on
+/// the content hash — the same safety contract as [`admit_record`],
+/// with O(1) extra memory beyond the base and the result.
+fn admit_delta_record(store: &LfsStore, oid: Oid, raw_len: u64, payload: &[u8]) -> Result<u64> {
+    if raw_len > MAX_OBJECT_BYTES {
+        bail!("pack object {} declares an implausible size", oid.short());
+    }
+    if payload.len() < 32 {
+        bail!(
+            "pack delta record for {} is too short to name a base",
+            oid.short()
+        );
+    }
+    let base_oid = Oid(payload[..32].try_into().unwrap());
+    let base = store.get(&base_oid).with_context(|| {
+        format!(
+            "delta base {} for {} is missing from the receiving store",
+            base_oid.short(),
+            oid.short()
+        )
+    })?;
+    // The ops stream frames the literal content, so its size is
+    // bounded a little above the declared output; cap decompression
+    // there so a bomb fails fast.
+    let ops_limit = raw_len + raw_len / 16 + 4096;
+    let mut ops = Vec::with_capacity(((raw_len / 4) as usize).min(16 << 20));
+    let decoder = zstd::stream::Decoder::new(&payload[32..])
+        .with_context(|| format!("pack decompress of {}", oid.short()))?;
+    decoder
+        .take(ops_limit + 1)
+        .read_to_end(&mut ops)
+        .with_context(|| format!("pack decompress of {}", oid.short()))?;
+    if ops.len() as u64 > ops_limit {
+        bail!(
+            "pack delta record for {} has implausibly large ops",
+            oid.short()
+        );
+    }
+    let raw = super::delta::apply_delta(&base, &ops, raw_len)
+        .with_context(|| format!("replaying delta for {}", oid.short()))?;
+    if Oid::of_bytes(&raw) != oid {
+        bail!("pack object {} failed its content hash", oid.short());
+    }
+    store.put(&raw)?;
+    Ok(raw_len)
+}
+
 /// Verify, decompress, and store every object in `pack` (store fan-in).
 ///
 /// Objects are admitted only after their raw bytes re-hash to the oid
-/// the pack claims, so a damaged pack can never poison a store. Workers
-/// fan objects in concurrently; [`LfsStore::put`] is atomic.
+/// the pack claims, so a damaged pack can never poison a store. Full
+/// records fan in concurrently ([`LfsStore::put`] is atomic); delta
+/// records resolve afterwards, so in-pack bases are always admitted
+/// before anything references them.
 pub fn unpack_into(store: &LfsStore, pack: &[u8], threads: usize) -> Result<PackStats> {
     let view = parse(pack)?;
-    let sizes = par::try_par_map(&view.index, threads, |_, &(oid, off)| -> Result<u64> {
-        let (record_oid, raw_len, comp) = record_at(pack, off, view.records_end)?;
+    let mut full: Vec<(Oid, u64, &[u8])> = Vec::with_capacity(view.index.len());
+    let mut deltas: Vec<(Oid, u64, &[u8])> = Vec::new();
+    for &(oid, off) in &view.index {
+        let (record_oid, kind, raw_len, payload) = record_at(pack, off, view.records_end)?;
         if record_oid != oid {
             bail!("pack index entry for {} points at a foreign record", oid.short());
         }
+        check_kind(view.version, kind, payload.len() as u64, &oid)?;
+        if kind == KIND_FULL {
+            full.push((oid, raw_len, payload));
+        } else {
+            deltas.push((oid, raw_len, payload));
+        }
+    }
+    let sizes = par::try_par_map(&full, threads, |_, &(oid, raw_len, comp)| {
         admit_record(store, oid, raw_len, comp)
     })?;
+    let mut raw_total: u64 = sizes.iter().sum();
+    for (oid, raw_len, payload) in deltas {
+        raw_total += admit_delta_record(store, oid, raw_len, payload)?;
+    }
     Ok(PackStats {
-        objects: sizes.len(),
-        raw_bytes: sizes.iter().sum(),
+        objects: view.index.len(),
+        raw_bytes: raw_total,
         packed_bytes: pack.len() as u64,
     })
 }
@@ -499,7 +839,7 @@ pub fn verify_pack_file(path: &Path) -> Result<PackCheck> {
         bail!("pack: bad magic");
     }
     let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
-    if version != PACK_VERSION {
+    if version != PACK_VERSION && version != PACK_VERSION_DELTA {
         bail!("pack: unsupported version {version}");
     }
     let count = u64::from_le_bytes(header[8..16].try_into().unwrap());
@@ -519,7 +859,8 @@ pub fn verify_pack_file(path: &Path) -> Result<PackCheck> {
         let off = scan.pos;
         scan.read_exact(&mut rec_header)?;
         let oid = Oid(rec_header[..32].try_into().unwrap());
-        let raw_len = u64::from_le_bytes(rec_header[32..40].try_into().unwrap());
+        let (kind, raw_len) =
+            decode_len(u64::from_le_bytes(rec_header[32..40].try_into().unwrap()));
         let comp_len = u64::from_le_bytes(rec_header[40..48].try_into().unwrap());
         if raw_len > MAX_OBJECT_BYTES {
             bail!("pack object {} declares an implausible size", oid.short());
@@ -527,6 +868,7 @@ pub fn verify_pack_file(path: &Path) -> Result<PackCheck> {
         if comp_len > index_offset - scan.pos {
             bail!("pack record for {} overruns the index", oid.short());
         }
+        check_kind(version, kind, comp_len, &oid)?;
         scan.skip(comp_len)?;
         records.push((oid, off));
     }
@@ -615,20 +957,30 @@ pub fn unpack_verified(
     for _ in 0..check.objects {
         r.read_exact(&mut rec_header).context("pack file truncated")?;
         let oid = Oid(rec_header[..32].try_into().unwrap());
-        let raw_len = u64::from_le_bytes(rec_header[32..40].try_into().unwrap());
+        let (kind, raw_len) =
+            decode_len(u64::from_le_bytes(rec_header[32..40].try_into().unwrap()));
         let comp_len = u64::from_le_bytes(rec_header[40..48].try_into().unwrap());
         // verify_pack_file bounded these already; re-clamp defensively
         // in case the file changed between the two passes.
-        if comp_len > check.len || raw_len > MAX_OBJECT_BYTES {
+        if comp_len > check.len || raw_len > MAX_OBJECT_BYTES || kind > KIND_STORE {
             bail!("pack record for {} changed between passes", oid.short());
         }
         let mut comp = vec![0u8; comp_len as usize];
         r.read_exact(&mut comp).context("pack file truncated")?;
-        window_bytes += comp_len + raw_len;
-        window.push((oid, raw_len, comp));
-        if window.len() >= window_objects || window_bytes >= STREAM_WINDOW_BYTES {
+        if kind == KIND_FULL {
+            window_bytes += comp_len + raw_len;
+            window.push((oid, raw_len, comp));
+            if window.len() >= window_objects || window_bytes >= STREAM_WINDOW_BYTES {
+                flush(&mut window, &mut raw_total)?;
+                window_bytes = 0;
+            }
+        } else {
+            // A delta may reference a full record travelling earlier in
+            // this same pack: drain the pending window so every in-pack
+            // base is admitted, then resolve serially against the store.
             flush(&mut window, &mut raw_total)?;
             window_bytes = 0;
+            raw_total += admit_delta_record(store, oid, raw_len, &comp)?;
         }
     }
     flush(&mut window, &mut raw_total)?;
@@ -808,5 +1160,178 @@ mod tests {
         let mut out = Vec::new();
         let mut w = PackWriter::new(&mut out, 0).unwrap();
         assert!(w.add_object(Oid::of_bytes(b"x"), b"x").is_err());
+    }
+
+    /// A ~repeating base and a near-identical fine-tune of it (tail
+    /// rewritten), both compressible but clearly delta-friendly.
+    fn near_identical_pair(seed: u64, len: usize) -> (Vec<u8>, Vec<u8>) {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let base: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let mut tuned = base.clone();
+        let tail = len / 4;
+        for b in &mut tuned[len - tail..] {
+            *b = rng.next_u64() as u8;
+        }
+        (base, tuned)
+    }
+
+    #[test]
+    fn delta_pack_roundtrips_and_shrinks() {
+        let td = TempDir::new("pack-delta").unwrap();
+        let (base, tuned) = near_identical_pair(21, 64 * 1024);
+        let (store, oids) = store_with(&td, &[base.as_slice(), tuned.as_slice()]);
+        let (base_oid, tuned_oid) = (oids[0], oids[1]);
+
+        let mut base_of = HashMap::new();
+        base_of.insert(tuned_oid, (base_oid, KIND_REF));
+        let plan = plan_deltas(&store, &oids, &base_of, 2).unwrap();
+        assert_eq!(plan.deltas.len(), 1, "near-identical pair must delta");
+        assert_eq!(plan.full, vec![base_oid]);
+
+        let td_spill = TempDir::new("pack-delta-spill").unwrap();
+        let path = td_spill.join("d.pack");
+        let built = write_delta_pack_file(&store, &plan, 2, &path).unwrap();
+        let flat = build_pack(&store, &oids, 1).unwrap();
+        assert!(
+            built.len < flat.len() as u64 * 3 / 4,
+            "delta pack ({}) should clearly undercut the flat pack ({})",
+            built.len,
+            flat.len()
+        );
+        assert_eq!(built.raw_bytes, (base.len() + tuned.len()) as u64);
+
+        // Streamed and buffered v2 writers agree byte for byte.
+        let mut buffered = Vec::new();
+        let rebuilt = write_delta_pack_to(&store, &plan, 1, &mut buffered).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), buffered);
+        assert_eq!(rebuilt.id, built.id, "delta packs must be deterministic");
+
+        // File path admits both objects byte-identically.
+        let td_dst = TempDir::new("pack-delta-dst").unwrap();
+        let dst = LfsStore::open(td_dst.path());
+        let stats = unpack_file(&path, &dst, 2).unwrap();
+        assert_eq!(stats.objects, 2);
+        assert_eq!(stats.raw_bytes, built.raw_bytes);
+        assert_eq!(dst.get(&base_oid).unwrap(), base);
+        assert_eq!(dst.get(&tuned_oid).unwrap(), tuned);
+
+        // Buffered path agrees.
+        let td_dst2 = TempDir::new("pack-delta-dst2").unwrap();
+        let dst2 = LfsStore::open(td_dst2.path());
+        let stats2 = unpack_into(&dst2, &buffered, 2).unwrap();
+        assert_eq!(stats2.objects, 2);
+        assert_eq!(dst2.get(&tuned_oid).unwrap(), tuned);
+        assert_eq!(pack_index(&buffered).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn store_based_delta_resolves_against_receiver() {
+        let td = TempDir::new("pack-sdelta").unwrap();
+        let (base, tuned) = near_identical_pair(22, 48 * 1024);
+        let (store, oids) = store_with(&td, &[base.as_slice(), tuned.as_slice()]);
+        let (base_oid, tuned_oid) = (oids[0], oids[1]);
+
+        let mut base_of = HashMap::new();
+        base_of.insert(tuned_oid, (base_oid, KIND_STORE));
+        // Only the tuned object ships; the base is "already remote".
+        let plan = plan_deltas(&store, &[tuned_oid], &base_of, 1).unwrap();
+        assert_eq!(plan.deltas.len(), 1);
+        assert!(plan.full.is_empty());
+
+        let td_spill = TempDir::new("pack-sdelta-spill").unwrap();
+        let path = td_spill.join("s.pack");
+        write_delta_pack_file(&store, &plan, 1, &path).unwrap();
+
+        // A receiver holding the base reconstructs the tuned object.
+        let td_dst = TempDir::new("pack-sdelta-dst").unwrap();
+        let dst = LfsStore::open(td_dst.path());
+        dst.put(&base).unwrap();
+        let stats = unpack_file(&path, &dst, 1).unwrap();
+        assert_eq!(stats.objects, 1);
+        assert_eq!(dst.get(&tuned_oid).unwrap(), tuned);
+
+        // A receiver without the base fails cleanly and admits nothing.
+        let td_bare = TempDir::new("pack-sdelta-bare").unwrap();
+        let bare = LfsStore::open(td_bare.path());
+        let err = unpack_file(&path, &bare, 1).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("missing from the receiving store"),
+            "unexpected error: {err:#}"
+        );
+        assert!(bare.list().unwrap().is_empty());
+    }
+
+    #[test]
+    fn empty_delta_plan_writes_a_byte_identical_v1_pack() {
+        let td = TempDir::new("pack-flatplan").unwrap();
+        let (store, oids) = store_with(&td, &[b"alpha", b"beta", &[3u8; 9000]]);
+        let plan = DeltaPlan {
+            full: oids.clone(),
+            deltas: Vec::new(),
+        };
+        let mut out = Vec::new();
+        write_delta_pack_to(&store, &plan, 2, &mut out).unwrap();
+        assert_eq!(out, build_pack(&store, &oids, 1).unwrap());
+    }
+
+    #[test]
+    fn unworthy_deltas_ship_full() {
+        let td = TempDir::new("pack-unworthy").unwrap();
+        let mut rng = crate::util::rng::Pcg64::new(23);
+        let a: Vec<u8> = (0..20_000).map(|_| rng.next_u64() as u8).collect();
+        let b: Vec<u8> = (0..20_000).map(|_| rng.next_u64() as u8).collect();
+        let (store, oids) = store_with(&td, &[a.as_slice(), b.as_slice()]);
+        let mut base_of = HashMap::new();
+        base_of.insert(oids[1], (oids[0], KIND_REF));
+        let plan = plan_deltas(&store, &oids, &base_of, 1).unwrap();
+        assert!(plan.deltas.is_empty(), "unrelated objects must ship whole");
+        assert_eq!(plan.full.len(), 2);
+    }
+
+    #[test]
+    fn corrupt_delta_pack_admits_nothing() {
+        let td = TempDir::new("pack-dcorrupt").unwrap();
+        let (base, tuned) = near_identical_pair(24, 32 * 1024);
+        let (store, oids) = store_with(&td, &[base.as_slice(), tuned.as_slice()]);
+        let mut base_of = HashMap::new();
+        base_of.insert(oids[1], (oids[0], KIND_REF));
+        let plan = plan_deltas(&store, &oids, &base_of, 1).unwrap();
+        assert_eq!(plan.deltas.len(), 1);
+        let td_spill = TempDir::new("pack-dcorrupt-spill").unwrap();
+        let good = td_spill.join("good.pack");
+        write_delta_pack_file(&store, &plan, 1, &good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+
+        let td_dst = TempDir::new("pack-dcorrupt-dst").unwrap();
+        let dst = LfsStore::open(td_dst.path());
+        for at in [5usize, HEADER_LEN + 40, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0xff;
+            let path = td_spill.join("bad.pack");
+            std::fs::write(&path, &bad).unwrap();
+            assert!(unpack_file(&path, &dst, 1).is_err(), "flip at {at} undetected");
+            assert!(dst.list().unwrap().is_empty(), "flip at {at} admitted objects");
+        }
+        for keep in [20usize, bytes.len() - 5, bytes.len() - 40] {
+            let path = td_spill.join("short.pack");
+            std::fs::write(&path, &bytes[..keep]).unwrap();
+            assert!(unpack_file(&path, &dst, 1).is_err());
+            assert!(dst.list().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn writer_rejects_misplaced_delta_records() {
+        // Delta records are illegal in a v1 pack.
+        let mut out = Vec::new();
+        let mut w = PackWriter::new(&mut out, 1).unwrap();
+        let oid = Oid::of_bytes(b"t");
+        let base = Oid::of_bytes(b"b");
+        assert!(w.add_delta(oid, KIND_REF, 1, &base, &[]).is_err());
+        // And only the two delta kinds are accepted in a v2 pack.
+        let mut out = Vec::new();
+        let mut w = PackWriter::new_versioned(&mut out, 1, PACK_VERSION_DELTA).unwrap();
+        assert!(w.add_delta(oid, KIND_FULL, 1, &base, &[]).is_err());
+        assert!(w.add_delta(oid, 7, 1, &base, &[]).is_err());
     }
 }

@@ -16,9 +16,9 @@
 //! baseline (`benches/ablation_transfer.rs`).
 
 use super::batch::{self, BatchResponse};
-use super::pack::{self, PackStats};
+use super::pack::{self, DeltaPlan, PackStats};
 use super::store::LfsStore;
-use super::transport::{self, RemoteTransport, WireReport};
+use super::transport::{self, ChainAdvert, ChainNegotiation, RemoteTransport, WireReport};
 use crate::gitcore::object::Oid;
 use anyhow::Result;
 use std::path::Path;
@@ -106,6 +106,33 @@ impl RemoteTransport for DirRemote {
 
     fn batch(&self, want: &[Oid]) -> Result<BatchResponse> {
         Ok(DirRemote::batch(self, want))
+    }
+
+    fn negotiate_chains(&self, adv: &ChainAdvert) -> Result<ChainNegotiation> {
+        batch::record(|s| s.negotiations += 1);
+        Ok(transport::answer_chains(&self.store, adv))
+    }
+
+    fn send_pack_with_bases(
+        &self,
+        src: &LfsStore,
+        plan: &DeltaPlan,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        let spill = crate::util::tmp::TempDir::new("dirpack")?;
+        let path = spill.join("pack");
+        let built = pack::write_delta_pack_file(src, plan, threads, &path)?;
+        let check = pack::PackCheck {
+            id: built.id,
+            len: built.len,
+            objects: built.objects as u64,
+        };
+        let stats = pack::unpack_verified(&path, &self.store, threads, &check)?;
+        let report = WireReport {
+            wire_bytes: built.len,
+            resumed_bytes: 0,
+        };
+        Ok((stats, report))
     }
 
     fn fetch_pack_into(
@@ -249,6 +276,47 @@ mod tests {
         );
         assert_eq!(resp.present.len(), 32);
         assert_eq!(resp.missing.len(), 2);
+    }
+
+    #[test]
+    fn chain_negotiation_reports_held_prefix_depth() {
+        use crate::lfs::transport::ChainEntryAdvert;
+        let td_remote = TempDir::new("lfs-remote").unwrap();
+        let remote = LfsRemote::open(td_remote.path());
+        let (a, _) = remote.store().put(b"depth-0").unwrap();
+        let (b, _) = remote.store().put(b"depth-1").unwrap();
+        let c = Oid::of_bytes(b"depth-2-missing");
+
+        let chain = vec![
+            ChainEntryAdvert {
+                key: Oid::of_bytes(b"k0"),
+                oids: vec![a],
+            },
+            ChainEntryAdvert {
+                key: Oid::of_bytes(b"k1"),
+                oids: vec![b],
+            },
+            ChainEntryAdvert {
+                key: Oid::of_bytes(b"k2"),
+                oids: vec![c],
+            },
+        ];
+        let adv = ChainAdvert {
+            chains: vec![chain],
+            want: vec![c],
+        };
+        batch::reset_stats();
+        let scans_before = store::dir_scans();
+        let neg = remote.negotiate_chains(&adv).unwrap();
+        assert!(neg.chain_aware);
+        assert_eq!(neg.have_depths, vec![2]);
+        assert_eq!(neg.batch.missing, vec![c]);
+        assert_eq!(batch::stats().negotiations, 1);
+        assert_eq!(
+            store::dir_scans() - scans_before,
+            1,
+            "chain negotiation must stay one store scan, not O(oids)"
+        );
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //!
 //! ```text
 //! POST   /objects/batch   have/want negotiation  -> present/sizes/missing
+//!                         (protocol-2 bodies also carry chain adverts
+//!                          and the response adds per-chain have_depth)
 //! POST   /packs           build+cache a pack for a want set -> {id,size}
 //! GET    /packs/<id>      download (Range: bytes=k- resumes; streamed)
 //! HEAD   /packs/<id>      upload-resume probe -> X-Received: <bytes>
@@ -44,6 +46,7 @@
 
 use super::pack;
 use super::store::LfsStore;
+use super::transport;
 use crate::gitcore::mergebase::commits_between;
 use crate::gitcore::object::{Object, Oid};
 use crate::gitcore::odb::Odb;
@@ -359,6 +362,47 @@ fn dispatch(state: &ServerState, method: &str, path: &str, req: &Request) -> Res
 }
 
 fn objects_batch(state: &ServerState, req: &Request) -> Result<Response> {
+    let json = match Json::parse(&String::from_utf8_lossy(&req.body)).context("parsing request json")
+    {
+        Ok(j) => j,
+        Err(e) => return Ok(text(400, format!("{e:#}"))),
+    };
+    // A protocol-2 client advertises chain prefixes alongside its want
+    // set; answer with per-chain held depths so it can plan delta
+    // records. A plain `{"want":[..]}` body (older clients) gets the
+    // byte-identical flat response it always has.
+    if json.get("chains").is_some() {
+        let adv = match transport::parse_chain_advert(&json) {
+            Ok(a) => a,
+            Err(e) => return Ok(text(400, format!("{e:#}"))),
+        };
+        let neg = transport::answer_chains(&state.store, &adv);
+        let mut obj = JsonObj::new();
+        obj.insert("protocol", 2u32);
+        obj.insert("present", oid_arr(&neg.batch.present));
+        obj.insert(
+            "sizes",
+            Json::Arr(
+                neg.batch
+                    .present_sizes
+                    .iter()
+                    .map(|&s| Json::from(s))
+                    .collect(),
+            ),
+        );
+        obj.insert("missing", oid_arr(&neg.batch.missing));
+        let chains: Vec<Json> = neg
+            .have_depths
+            .iter()
+            .map(|&d| {
+                let mut c = JsonObj::new();
+                c.insert("have_depth", d);
+                Json::Obj(c)
+            })
+            .collect();
+        obj.insert("chains", chains);
+        return Ok(json_response(obj));
+    }
     let want = match parse_want(req) {
         Ok(w) => w,
         Err(e) => return Ok(text(400, format!("{e:#}"))),

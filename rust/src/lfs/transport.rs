@@ -20,11 +20,13 @@
 //! (`TransferSummary::wire_bytes` / `resumed_bytes`).
 
 use super::batch::{self, BatchResponse};
-use super::pack::PackStats;
+use super::pack::{DeltaPlan, PackStats};
 use super::store::LfsStore;
 use crate::gitcore::object::Oid;
 use crate::gitcore::remote::RemoteSpec;
-use anyhow::{bail, Result};
+use crate::util::json::{Json, JsonObj};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::path::Path;
 
 /// What one pack transfer moved over the wire.
@@ -35,6 +37,167 @@ pub struct WireReport {
     /// Pack bytes *not* re-sent because a persisted partial transfer
     /// was resumed with a byte range. Always 0 for local transports.
     pub resumed_bytes: u64,
+}
+
+/// One entry of a chain advertisement: the chain key identifying the
+/// metadata prefix ending at this entry, plus the LFS oids that entry
+/// references.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainEntryAdvert {
+    /// `GroupMetadata::chain_key` of the prefix ending here — the
+    /// identity a responder *could* match on; presence is actually
+    /// decided from the oids, so keys never have to exist remotely.
+    pub key: Oid,
+    /// LFS oids this chain entry references.
+    pub oids: Vec<Oid>,
+}
+
+/// What a chain-aware client advertises in one negotiation: the chains
+/// it is about to push (base → tip, one `Vec<ChainEntryAdvert>` per
+/// group chain) plus the flat want set. The want set is authoritative —
+/// chains only *annotate* it with structure a responder can use to
+/// nominate delta bases.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChainAdvert {
+    /// Group chains, each base → tip.
+    pub chains: Vec<Vec<ChainEntryAdvert>>,
+    /// Flat want set (exactly what [`RemoteTransport::batch`] would be
+    /// asked), so a chain-oblivious responder loses nothing.
+    pub want: Vec<Oid>,
+}
+
+/// A responder's answer to a [`ChainAdvert`]: the flat have/want split
+/// plus, per advertised chain, how deep a prefix the responder already
+/// holds (entries `0..have_depth` fully present).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChainNegotiation {
+    /// Flat negotiation result over the want set (identical shape to
+    /// [`RemoteTransport::batch`]).
+    pub batch: BatchResponse,
+    /// Per advertised chain: the deepest k such that entries `0..k`
+    /// are fully present on the responder. Suffix entries `k..` are
+    /// what the client must ship.
+    pub have_depths: Vec<usize>,
+    /// Whether the responder actually understood the chain protocol.
+    /// `false` means the depths are all zero because the peer only
+    /// speaks the flat protocol (version skew) — callers must not plan
+    /// store-based deltas in that case.
+    pub chain_aware: bool,
+}
+
+/// Answer a [`ChainAdvert`] against a store: one bulk [`LfsStore::stat_all`]
+/// over the union of the want set and every advertised chain oid (no
+/// per-oid stats), split into the flat response plus per-chain have
+/// depths. Shared by the directory transport and the HTTP server so
+/// both ends of the wire agree by construction.
+pub fn answer_chains(store: &LfsStore, adv: &ChainAdvert) -> ChainNegotiation {
+    let mut all: Vec<Oid> = adv.want.clone();
+    for chain in &adv.chains {
+        for entry in chain {
+            all.extend_from_slice(&entry.oids);
+        }
+    }
+    all.sort();
+    all.dedup();
+    let sizes = store.stat_all(&all);
+    let present: HashMap<Oid, Option<u64>> = all.iter().copied().zip(sizes).collect();
+
+    let mut batch = BatchResponse::default();
+    for oid in &adv.want {
+        match present.get(oid).copied().flatten() {
+            Some(size) => {
+                batch.present.push(*oid);
+                batch.present_sizes.push(size);
+            }
+            None => batch.missing.push(*oid),
+        }
+    }
+    let have_depths = adv
+        .chains
+        .iter()
+        .map(|chain| {
+            chain
+                .iter()
+                .take_while(|entry| {
+                    !entry.oids.is_empty()
+                        && entry
+                            .oids
+                            .iter()
+                            .all(|o| present.get(o).copied().flatten().is_some())
+                })
+                .count()
+        })
+        .collect();
+    ChainNegotiation {
+        batch,
+        have_depths,
+        chain_aware: true,
+    }
+}
+
+/// Encode a [`ChainAdvert`] as the `POST /objects/batch` request body
+/// of protocol 2. The `want` field is byte-compatible with the flat
+/// protocol, so an old server simply ignores the extra keys.
+pub(crate) fn chain_advert_body(adv: &ChainAdvert) -> Vec<u8> {
+    let mut obj = JsonObj::new();
+    obj.insert("protocol", 2u32);
+    obj.insert(
+        "want",
+        Json::Arr(adv.want.iter().map(|o| Json::from(o.to_hex())).collect()),
+    );
+    let chains: Vec<Json> = adv
+        .chains
+        .iter()
+        .map(|chain| {
+            let entries: Vec<Json> = chain
+                .iter()
+                .map(|entry| {
+                    let mut e = JsonObj::new();
+                    e.insert("key", entry.key.to_hex());
+                    e.insert(
+                        "oids",
+                        Json::Arr(entry.oids.iter().map(|o| Json::from(o.to_hex())).collect()),
+                    );
+                    Json::Obj(e)
+                })
+                .collect();
+            let mut c = JsonObj::new();
+            c.insert("entries", Json::Arr(entries));
+            Json::Obj(c)
+        })
+        .collect();
+    obj.insert("chains", Json::Arr(chains));
+    Json::Obj(obj).to_string_compact().into_bytes()
+}
+
+/// Decode the chain portion of a protocol-2 `POST /objects/batch`
+/// request (the server side of [`chain_advert_body`]).
+pub(crate) fn parse_chain_advert(json: &Json) -> Result<ChainAdvert> {
+    let want = crate::gitcore::remote::parse_oid_arr(json, "want")?;
+    let mut chains = Vec::new();
+    for chain in json
+        .get("chains")
+        .and_then(|v| v.as_arr())
+        .context("chain negotiation request missing 'chains'")?
+    {
+        let entries = chain
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .context("chain advertisement missing 'entries'")?;
+        let mut parsed = Vec::with_capacity(entries.len());
+        for entry in entries {
+            let key = Oid::from_hex(
+                entry
+                    .get("key")
+                    .and_then(|v| v.as_str())
+                    .context("chain entry missing 'key'")?,
+            )?;
+            let oids = crate::gitcore::remote::parse_oid_arr(entry, "oids")?;
+            parsed.push(ChainEntryAdvert { key, oids });
+        }
+        chains.push(parsed);
+    }
+    Ok(ChainAdvert { chains, want })
 }
 
 /// A channel that can negotiate and move packs with a remote store.
@@ -93,6 +256,36 @@ pub trait RemoteTransport: Send + Sync {
     /// Per-object fallback: store one object (content-addressed, so
     /// re-sending existing content deduplicates remotely).
     fn put_object(&self, bytes: &[u8]) -> Result<()>;
+
+    /// Chain-aware negotiation: one round trip answering the flat
+    /// have/want split *and* how deep a prefix of each advertised
+    /// chain the remote already holds.
+    ///
+    /// The default degrades to the flat protocol — [`RemoteTransport::batch`]
+    /// over the want set with all depths zero and `chain_aware: false` —
+    /// which is exactly the version-skew fallback: a transport that
+    /// predates chains still negotiates correctly, it just never earns
+    /// deltas.
+    fn negotiate_chains(&self, adv: &ChainAdvert) -> Result<ChainNegotiation> {
+        Ok(ChainNegotiation {
+            batch: self.batch(&adv.want)?,
+            have_depths: vec![0; adv.chains.len()],
+            chain_aware: false,
+        })
+    }
+
+    /// Deliver a delta-planned pack. The default ignores the plan's
+    /// delta pairings and ships every object whole via
+    /// [`RemoteTransport::send_pack_from`] — correct for any receiver,
+    /// since a delta pack is an optimization, never a requirement.
+    fn send_pack_with_bases(
+        &self,
+        src: &LfsStore,
+        plan: &DeltaPlan,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        self.send_pack_from(src, &plan.all_oids(), threads)
+    }
 }
 
 /// Open the transport a [`RemoteSpec`] addresses.
@@ -126,6 +319,34 @@ pub fn upload(
         return upload_per_object(local, remote, oids);
     }
     let s = batch::push_pack(local, remote, oids)?;
+    if s.unavailable > 0 {
+        bail!(
+            "cannot upload: {} wanted object(s) missing from the local store",
+            s.unavailable
+        );
+    }
+    Ok((s.objects, s.raw_bytes))
+}
+
+/// Upload with chain advertisements: like [`upload`], but the remote
+/// may answer with chain depths that let the pack ship suffix objects
+/// as deltas against bases it already holds (or against a shared base
+/// travelling in the same pack).
+///
+/// Falls back to the plain packed [`upload`] whenever chains are
+/// empty, the per-object engine is selected, or flat negotiation is
+/// forced (`THETA_NEGOTIATE=flat` / [`batch::set_flat_negotiation`]) —
+/// in all of those cases the wire traffic is byte-identical to the
+/// flat protocol.
+pub fn upload_with_chains(
+    local: &LfsStore,
+    remote: &dyn RemoteTransport,
+    adv: &ChainAdvert,
+) -> Result<(usize, u64)> {
+    if batch::per_object_mode() || adv.chains.is_empty() || batch::flat_negotiation() {
+        return upload(local, remote, &adv.want);
+    }
+    let s = batch::Prefetcher::default().push_with_chains(local, remote, adv)?;
     if s.unavailable > 0 {
         bail!(
             "cannot upload: {} wanted object(s) missing from the local store",

@@ -24,7 +24,6 @@
 // `theta/metadata.rs` must carry docs.
 #[allow(missing_docs)]
 pub mod baseline;
-#[allow(missing_docs)]
 pub mod benchkit;
 #[allow(missing_docs)]
 pub mod checkpoint;

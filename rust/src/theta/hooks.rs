@@ -132,10 +132,62 @@ impl Hooks for ThetaHooks {
         // Only objects we hold locally; metadata-referenced objects from
         // shallow histories we never materialized can't be pushed.
         let have: Vec<Oid> = oids.into_iter().filter(|o| store.contains(o)).collect();
+        let adv = transport::ChainAdvert {
+            chains: chain_adverts(repo, commits)?,
+            want: have,
+        };
         let remote = transport::open_transport(remote, Some(repo.theta_dir()))?;
-        transport::upload(&store, remote.as_ref(), &have)?;
+        transport::upload_with_chains(&store, remote.as_ref(), &adv)?;
         Ok(())
     }
+}
+
+/// Collect the incremental chains (depth ≥ 2) referenced by the pushed
+/// commits' metadata files, as wire adverts. A chain-aware remote that
+/// already holds a prefix of one answers with its depth, and the push
+/// ships the suffix as deltas against the deepest held entry. Commits
+/// with no model metadata yield no chains, which keeps their pushes on
+/// the exact flat (protocol-1) path.
+fn chain_adverts(
+    repo: &Repository,
+    commits: &[Oid],
+) -> Result<Vec<Vec<transport::ChainEntryAdvert>>> {
+    let mut seen_tips = std::collections::HashSet::new();
+    let mut chains = Vec::new();
+    for commit in commits {
+        let c = repo.odb().read_commit(commit)?;
+        let tree = repo.odb().read_tree(&c.tree)?;
+        for entry in &tree.entries {
+            let blob = repo.odb().read_blob(&entry.oid)?;
+            if !ModelMetadata::is_metadata(&blob) {
+                continue;
+            }
+            let Ok(meta) = ModelMetadata::from_bytes(&blob) else {
+                continue;
+            };
+            for group in meta.groups.values() {
+                if group.chain_depth() < 2 {
+                    continue;
+                }
+                let entries = group.chain_entries();
+                // Dedup by tip key: the same chain appears in every
+                // commit that carries the group forward unchanged.
+                let Some((tip_key, _)) = entries.last() else {
+                    continue;
+                };
+                if !seen_tips.insert(*tip_key) {
+                    continue;
+                }
+                chains.push(
+                    entries
+                        .into_iter()
+                        .map(|(key, oids)| transport::ChainEntryAdvert { key, oids })
+                        .collect(),
+                );
+            }
+        }
+    }
+    Ok(chains)
 }
 
 #[cfg(test)]

@@ -195,6 +195,24 @@ impl GroupMetadata {
         self.update.objects.values().map(|o| o.size).sum()
     }
 
+    /// The chain as a base-first list of `(chain_key, own oids)` pairs:
+    /// element 0 is the dense anchor, the last element is this entry.
+    /// This is the shape the wire negotiation advertises — a receiver
+    /// holding every oid of a prefix of this list holds "depth k of
+    /// chain X", and only the suffix entries (plus deltas against the
+    /// deepest held entry) need to travel.
+    pub fn chain_entries(&self) -> Vec<(Oid, Vec<Oid>)> {
+        let mut out = match &self.prev {
+            Some(p) => p.chain_entries(),
+            None => Vec::new(),
+        };
+        out.push((
+            self.chain_key(),
+            self.update.objects.values().map(|o| o.oid).collect(),
+        ));
+        out
+    }
+
     /// LSH proof that this entry and `other` hold the same tensor
     /// values (distance ≤ the paper's 1e-8 "unchanged" bound), however
     /// different their chains. The ambiguous `NeedsExactCheck` band
@@ -406,6 +424,20 @@ mod tests {
         // Roundtripping through JSON preserves the key.
         let back = GroupMetadata::from_json(&inc.to_json()).unwrap();
         assert_eq!(back.chain_key(), inc.chain_key());
+    }
+
+    #[test]
+    fn chain_entries_list_base_first() {
+        let base = sample_group(&[1.0], "dense", None);
+        let mid = sample_group(&[2.0], "sparse", Some(base.clone()));
+        let tip = sample_group(&[3.0], "ia3", Some(mid.clone()));
+        let entries = tip.chain_entries();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0].0, base.chain_key());
+        assert_eq!(entries[1].0, mid.chain_key());
+        assert_eq!(entries[2].0, tip.chain_key());
+        assert_eq!(entries[0].1, vec![Oid::of_bytes(b"dense")]);
+        assert_eq!(entries[2].1, vec![Oid::of_bytes(b"ia3")]);
     }
 
     #[test]

@@ -8,7 +8,10 @@ mod support;
 use git_theta::gitcore::object::Oid;
 use git_theta::gitcore::remote::RemoteSpec;
 use git_theta::gitcore::repo::Repository;
-use git_theta::lfs::{batch, LfsRemote, LfsStore, RemoteTransport};
+use git_theta::lfs::{
+    batch, BatchResponse, ChainAdvert, ChainEntryAdvert, LfsRemote, LfsStore, PackStats,
+    Prefetcher, RemoteTransport, WireReport,
+};
 use git_theta::util::prop::{self, gens};
 use git_theta::util::rng::Pcg64;
 use git_theta::util::tmp::TempDir;
@@ -179,6 +182,211 @@ fn fast_paths_cost_nothing_on_both_transports() {
         assert_eq!(s.objects, 0);
         assert_eq!(batch::stats().round_trips(), 0);
     }
+}
+
+/// One randomized chain-prefix push scenario.
+#[derive(Debug)]
+struct ChainScenario {
+    /// Chain length (entries, base → tip).
+    depth: usize,
+    /// Prefix depth the receiving side already holds.
+    have: usize,
+    /// Standalone wanted objects outside any chain.
+    extra: usize,
+    /// Payload seed.
+    seed: u64,
+}
+
+fn gen_chain_scenario(rng: &mut Pcg64) -> ChainScenario {
+    let depth = gens::usize_in(rng, 2, 5);
+    ChainScenario {
+        depth,
+        have: gens::usize_in(rng, 0, depth),
+        extra: gens::usize_in(rng, 0, 2),
+        seed: rng.next_u64(),
+    }
+}
+
+/// `depth` chain payloads: a random base plus successors that share its
+/// first three quarters (a fine-tune touching the same region), so
+/// suffix entries genuinely delta against any held prefix entry.
+fn chain_payloads(depth: usize, len: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Pcg64::new(seed);
+    let base: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+    let mut out = vec![base.clone()];
+    for _ in 1..depth {
+        let mut next = base.clone();
+        for b in &mut next[len - len / 4..] {
+            *b = rng.next_u64() as u8;
+        }
+        out.push(next);
+    }
+    out
+}
+
+/// A chain-oblivious peer for the version-skew fallback path: it
+/// delegates the wire to a real [`LfsRemote`] but implements only the
+/// trait's *required* methods, so the default (flat)
+/// `negotiate_chains`/`send_pack_with_bases` bodies run — exactly what
+/// a binary predating the chain protocol looks like on the other end.
+struct ObliviousRemote(LfsRemote);
+
+impl RemoteTransport for ObliviousRemote {
+    fn describe(&self) -> String {
+        self.0.describe()
+    }
+
+    fn batch(&self, want: &[Oid]) -> anyhow::Result<BatchResponse> {
+        Ok(self.0.batch(want))
+    }
+
+    fn fetch_pack_into(
+        &self,
+        oids: &[Oid],
+        dest: &LfsStore,
+        threads: usize,
+    ) -> anyhow::Result<(PackStats, WireReport)> {
+        self.0.fetch_pack_into(oids, dest, threads)
+    }
+
+    fn send_pack_from(
+        &self,
+        src: &LfsStore,
+        oids: &[Oid],
+        threads: usize,
+    ) -> anyhow::Result<(PackStats, WireReport)> {
+        self.0.send_pack_from(src, oids, threads)
+    }
+
+    fn get_object(&self, oid: &Oid) -> anyhow::Result<Vec<u8>> {
+        self.0.get_object(oid)
+    }
+
+    fn put_object(&self, bytes: &[u8]) -> anyhow::Result<()> {
+        self.0.put_object(bytes)
+    }
+}
+
+/// Chain-prefix pushes: Dir and Http remotes must negotiate identical
+/// suffix sets (same `have_depths`, same flat split) and end up with
+/// byte-identical stores; a chain-oblivious peer must still converge to
+/// the same store over the flat fallback, with zero deltas on the wire.
+#[test]
+fn chain_negotiation_parity_across_transports() {
+    prop::check("chain-parity", gen_chain_scenario, |sc| {
+        let td_local = TempDir::new("chain-local").map_err(|e| e.to_string())?;
+        let local = LfsStore::open(td_local.path());
+        let payloads = chain_payloads(sc.depth, 8192, sc.seed);
+        let chain_oids: Vec<Oid> = payloads.iter().map(|p| local.put(p).unwrap().0).collect();
+        let extras = support::seed_store(&local, sc.extra, 700, sc.seed ^ 0xE77A);
+
+        let entries: Vec<ChainEntryAdvert> = chain_oids
+            .iter()
+            .enumerate()
+            .map(|(i, oid)| ChainEntryAdvert {
+                key: Oid::of_bytes(format!("chain-key-{}-{i}", sc.seed).as_bytes()),
+                oids: vec![*oid],
+            })
+            .collect();
+        let mut want = chain_oids.clone();
+        want.extend(extras.iter().copied());
+        let adv = ChainAdvert {
+            chains: vec![entries],
+            want,
+        };
+
+        // Three receivers, identically pre-seeded to prefix depth `have`.
+        let td_dir = TempDir::new("chain-dir").map_err(|e| e.to_string())?;
+        let dir = LfsRemote::open(td_dir.path());
+        let fx = support::HttpFixture::new();
+        let server_store = fx.server_store();
+        let td_flat = TempDir::new("chain-flat").map_err(|e| e.to_string())?;
+        let flat = ObliviousRemote(LfsRemote::open(td_flat.path()));
+        for p in &payloads[..sc.have] {
+            dir.store().put(p).unwrap();
+            server_store.put(p).unwrap();
+            flat.0.store().put(p).unwrap();
+        }
+        let td_staging = TempDir::new("chain-staging").map_err(|e| e.to_string())?;
+        let http = fx.direct_remote(td_staging.path());
+
+        // Negotiation parity: same depths, same flat split, one round trip.
+        let neg_dir = dir.negotiate_chains(&adv).map_err(|e| format!("{e:#}"))?;
+        let neg_http = http.negotiate_chains(&adv).map_err(|e| format!("{e:#}"))?;
+        if !neg_dir.chain_aware || !neg_http.chain_aware {
+            return Err("a chain-aware transport answered chain-oblivious".into());
+        }
+        if neg_dir.have_depths != vec![sc.have] || neg_http.have_depths != vec![sc.have] {
+            return Err(format!(
+                "held prefix depth {} but dir negotiated {:?}, http {:?}",
+                sc.have, neg_dir.have_depths, neg_http.have_depths
+            ));
+        }
+        if neg_dir.batch != neg_http.batch {
+            return Err(format!(
+                "flat splits diverge:\n dir {:?}\n http {:?}",
+                neg_dir.batch, neg_http.batch
+            ));
+        }
+
+        // Version skew: the oblivious peer negotiates the same flat
+        // split but earns no depths.
+        let neg_flat = flat.negotiate_chains(&adv).map_err(|e| format!("{e:#}"))?;
+        if neg_flat.chain_aware || neg_flat.have_depths != vec![0] {
+            return Err(format!(
+                "oblivious peer claimed chain awareness: {:?}",
+                neg_flat.have_depths
+            ));
+        }
+        if neg_flat.batch != neg_dir.batch {
+            return Err("flat fallback negotiated a different want split".into());
+        }
+
+        // Push parity: identical summaries, counters, and store bytes.
+        batch::reset_stats();
+        let sum_dir = Prefetcher::default()
+            .push_with_chains(&local, &dir, &adv)
+            .map_err(|e| format!("{e:#}"))?;
+        let stats_dir = batch::stats();
+        batch::reset_stats();
+        let sum_http = Prefetcher::default()
+            .push_with_chains(&local, &http, &adv)
+            .map_err(|e| format!("{e:#}"))?;
+        let stats_http = batch::stats();
+        if sum_dir != sum_http {
+            return Err(format!("summaries diverge:\n dir {sum_dir:?}\n http {sum_http:?}"));
+        }
+        if stats_dir != stats_http {
+            return Err(format!("counters diverge:\n dir {stats_dir:?}\n http {stats_http:?}"));
+        }
+        // Suffix entries ride as deltas whenever a base exists for them
+        // (a held prefix entry, or the chain's own base in the pack).
+        if sc.depth - sc.have >= 1 && sc.depth >= 2 && stats_dir.delta_objects == 0 {
+            return Err(format!(
+                "suffix of {} object(s) shipped without a single delta",
+                sc.depth - sc.have
+            ));
+        }
+
+        // Flat fallback: the same objects land, all of them whole.
+        batch::reset_stats();
+        let sum_flat = Prefetcher::default()
+            .push_with_chains(&local, &flat, &adv)
+            .map_err(|e| format!("{e:#}"))?;
+        let stats_flat = batch::stats();
+        if sum_flat.objects != sum_dir.objects || sum_flat.unavailable != sum_dir.unavailable {
+            return Err(format!(
+                "fallback moved a different object set: {sum_flat:?} vs {sum_dir:?}"
+            ));
+        }
+        if stats_flat.delta_objects != 0 {
+            return Err("a delta record was sent to a chain-oblivious peer".into());
+        }
+
+        support::assert_stores_equal(dir.store(), &server_store);
+        support::assert_stores_equal(dir.store(), flat.0.store());
+        Ok(())
+    });
 }
 
 /// Commit/ref sync parity: the same history pushed to a directory and

@@ -8,9 +8,13 @@ The baseline file lists tracked metrics as
      "baseline": 2, "direction": "lower", "tolerance": 0.2, "note": "..."}
 
 `direction` says which way is better ("lower" or "higher"); a run fails
-the gate when a metric is worse than baseline by more than `tolerance`
-(relative). A `baseline` of null records the metric advisorily — its
-current value is printed so a later PR can commit it — without gating.
+the gate when a metric is worse than baseline by more than `tolerance`.
+For ratio-scale metrics — numeric baselines with |baseline| <= 1.0 —
+`tolerance` is an absolute delta (a relative rule on a near-zero
+baseline is either meaninglessly tight or vacuous at 0); for everything
+else it is relative. A `baseline` of null records the metric
+advisorily — its current value is printed so a later PR can commit
+it — without gating.
 """
 
 import json
@@ -64,17 +68,26 @@ def main():
             continue
         tol = metric.get("tolerance", 0.2)
         direction = metric.get("direction", "lower")
-        if direction == "lower":
-            worse = value > base * (1 + tol)
+        if abs(base) <= 1.0:
+            # Ratio-scale metric: absolute-delta threshold.
+            if direction == "lower":
+                worse = value > base + tol
+            else:
+                worse = value < base - tol
+            rule = f"abs tol {tol}"
         else:
-            worse = value < base * (1 - tol)
+            if direction == "lower":
+                worse = value > base * (1 + tol)
+            else:
+                worse = value < base * (1 - tol)
+            rule = f"tol {int(tol * 100)}%"
         verdict = "FAIL" if worse else "ok"
         print(f"  [{verdict}] {fname}:{path} = {value} (baseline {base}, {direction} "
-              f"is better, tol {int(tol * 100)}%)")
+              f"is better, {rule})")
         if worse:
             failures.append(
                 f"{fname}:{path} regressed: {value} vs baseline {base} "
-                f"(>{int(tol * 100)}% worse) — {metric.get('note', '')}")
+                f"(worse than {rule}) — {metric.get('note', '')}")
 
     for line in advisories:
         print(f"  [note] {line}")

@@ -62,6 +62,13 @@ test -f BENCH_merge.json || {
     exit 1
 }
 
+# Smoke the chain-aware delta protocol in isolation (tiny config):
+# chain-prefix negotiation, v2 delta pack against a held base, and
+# byte-verified reconstruction on the receiving store. The full
+# transfer smoke below re-runs it at the locked 64x8192 shape.
+echo "==> bench transfer --delta smoke"
+cargo run --release --quiet -- bench transfer --delta 8 2048
+
 # Smoke the transfer ablation (tiny configuration): per-object vs
 # packed vs http transport, plus the +resume injected-fault sample
 # (fault proxy kills the pack stream halfway; the retry must resume).
