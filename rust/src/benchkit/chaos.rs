@@ -1,0 +1,440 @@
+//! Chaos suite: the overload-safety proof for the serving core and the
+//! client resilience layer.
+//!
+//! Where the [`scenario`](super::scenario) harness measures *contention*
+//! on a healthy hub, this harness attacks an **undersized** hub (two
+//! workers, a two-slot accept queue, a sub-second request budget) with
+//! the failure shapes the resilience layer exists for, and proves the
+//! fleet still converges:
+//!
+//! 1. **Overload** — idle connections hog the whole worker pool and
+//!    accept queue; new arrivals must be shed with `503 + Retry-After`
+//!    (never queued without bound, never accepted and starved), and a
+//!    [`RetryPolicy`]-wrapped client must ride the sheds to success
+//!    once the hogs disappear.
+//! 2. **Stall** — a request that sends half its body and goes silent
+//!    must be cut by the server's request budget (`timed_out` counts
+//!    it), with the received prefix persisted for byte-range resume.
+//! 3. **Admission + pacing faults in live transfers** — one actor's
+//!    traffic crosses a [`FaultProxy`] armed with reject-N-then-accept
+//!    and a mid-upload stall; every actor pushes its objects and
+//!    fetches everyone else's through the starved hub, and all stores
+//!    must end byte-identical to the hub's.
+//!
+//! The run is seeded: backoff jitter and payloads derive from the
+//! config seed, so a failing run replays with `git-theta bench chaos
+//! <actors> <objects> <seed>`. Counters land in `BENCH_chaos.json` and
+//! are locked by `scripts/bench_baseline.json` (floors for shed/retry/
+//! timeout counts, an exact pin for converged and faults fired).
+
+use super::write_bench_json;
+use crate::gitcore::object::Oid;
+use crate::lfs::faults::{Direction, FaultProxy, FaultSpec};
+use crate::lfs::{batch, HttpRemote, LfsServer, LfsStore, Prefetcher, RetryPolicy, ServeOptions, WireError};
+use crate::util::http::{self, Request};
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::Pcg64;
+use crate::util::tmp::TempDir;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// Half-declared body bytes the stalled upload of phase 2 sends before
+/// going silent (the other half never arrives).
+const STALL_SENT: usize = 4096;
+/// Body byte offset of the mid-upload stall injected into the live
+/// actor push of phase 3 (any pushed pack is comfortably larger).
+const ACTOR_STALL_AT: u64 = 512;
+/// Requests the fault proxy rejects with a local 503 in phase 3.
+const REJECTS: u64 = 3;
+
+/// Chaos shape. Equal configs replay the same payloads and jitter.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosConfig {
+    /// Concurrent transfer actors (each pushes then fetches the rest).
+    pub actors: usize,
+    /// Objects per actor.
+    pub objects: usize,
+    /// Master seed for payloads and backoff jitter.
+    pub seed: u64,
+}
+
+/// Chaos verdict: the convergence bit plus the shed/timeout/retry
+/// counters the baseline locks.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosOutcome {
+    /// Actors the run drove.
+    pub actors: usize,
+    /// Objects per actor.
+    pub objects: usize,
+    /// Every actor store ended byte-identical to the verified hub.
+    pub converged: bool,
+    /// Connections the hub admitted.
+    pub accepted: u64,
+    /// Connections the hub shed with `503 + Retry-After`.
+    pub rejected: u64,
+    /// Requests the hub cut at the request budget.
+    pub timed_out: u64,
+    /// Requests the hub served.
+    pub requests: u64,
+    /// In-flight requests after drain — zero proves no leaked worker.
+    pub in_flight_after_drain: u64,
+    /// Client-side: 503 sheds absorbed by backoff.
+    pub sheds: u64,
+    /// Client-side: transient failures retried under backoff.
+    pub backoff_retries: u64,
+    /// Client-side: bytes byte-range resume skipped re-sending.
+    pub resumed_bytes: u64,
+    /// Faults the proxy injected (rejects + the stall), exact.
+    pub faults_fired: u64,
+    /// Wall-clock seconds for the whole run.
+    pub chaos_secs: f64,
+}
+
+/// Deterministic payload for `(seed, actor, object)` — every actor can
+/// derive every oid without talking to anyone.
+fn payload(seed: u64, actor: usize, object: usize) -> Vec<u8> {
+    let mut rng = Pcg64::new(
+        seed ^ (actor as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (object as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+    );
+    // ~3 KiB: bigger than the actor-stall offset, small enough that
+    // the chaos run is dominated by faults, not payload.
+    (0..3072).map(|_| rng.next_u32() as u8).collect()
+}
+
+/// Phase 1: hog every worker and queue slot with idle connections,
+/// then prove a policy-wrapped probe is shed (503 + Retry-After) and
+/// recovers once the hogs disappear.
+fn overload_phase(server: &LfsServer, opts: &ServeOptions, seed: u64) -> Result<()> {
+    let authority = http::authority_of(&server.url())?;
+    let mut hogs = Vec::new();
+    for _ in 0..(opts.workers + opts.queue + 2) {
+        hogs.push(TcpStream::connect(authority.as_str()).context("connecting a hog")?);
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut hogs = Some(hogs);
+    let policy = RetryPolicy {
+        max_attempts: 6,
+        base: Duration::from_millis(40),
+        cap: Duration::from_millis(300),
+        seed,
+    };
+    let mut attempt = 0u32;
+    let resp = policy
+        .run(|| {
+            attempt += 1;
+            if attempt > 1 {
+                // The overload "ends": freed hogs EOF instantly, so
+                // the retry finds workers available.
+                hogs.take();
+            }
+            let resp = http::roundtrip(&authority, &Request::new("GET", "/metrics"))?;
+            if resp.status == 503 {
+                let after = resp.get_header("retry-after").and_then(|v| v.parse().ok());
+                return Err(anyhow::Error::new(WireError::shed(
+                    after,
+                    "hub shed the metrics probe",
+                )));
+            }
+            Ok(resp)
+        })
+        .context("overload phase: probe never got through")?;
+    ensure!(resp.status == 200, "overload phase: probe ended on {}", resp.status);
+    ensure!(attempt >= 2, "overload phase: the hogs never forced a shed");
+    ensure!(
+        server.metrics().rejected >= 1,
+        "overload phase: a full pool shed nothing"
+    );
+    Ok(())
+}
+
+/// Phase 2: a raw half-sent upload goes silent; the request budget must
+/// cut it (`timed_out`) and the received prefix must be probe-able for
+/// resume.
+fn stall_phase(server: &LfsServer) -> Result<()> {
+    let authority = http::authority_of(&server.url())?;
+    let id = "6".repeat(64);
+    let mut stalled = TcpStream::connect(authority.as_str())?;
+    let total = STALL_SENT * 2;
+    write!(
+        stalled,
+        "PUT /packs/{id} HTTP/1.1\r\nhost: chaos\r\ncontent-length: {total}\r\n\
+         content-range: bytes 0-{}/{total}\r\n\r\n",
+        total - 1
+    )?;
+    stalled.write_all(&vec![9u8; STALL_SENT])?;
+    stalled.flush()?;
+    // Hold the socket open and silent; only the budget can cut it.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if server.metrics().timed_out >= 1 {
+            break;
+        }
+        ensure!(
+            Instant::now() < deadline,
+            "stall phase: the stalled upload was never cut by the request budget"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    drop(stalled);
+    let probe = http::roundtrip(&authority, &Request::new("HEAD", &format!("/packs/{id}")))?;
+    let have: Option<u64> = probe.get_header("x-received").and_then(|v| v.parse().ok());
+    ensure!(
+        have == Some(STALL_SENT as u64),
+        "stall phase: the cut upload's prefix was not persisted for resume (got {have:?})"
+    );
+    Ok(())
+}
+
+/// One actor of phase 3: put its payloads, push them, wait for the
+/// fleet, fetch everyone's. Returns the thread's transfer stats.
+fn run_chaos_actor(
+    i: usize,
+    url: String,
+    seed: u64,
+    objects: usize,
+    actors: usize,
+    gate: Arc<Barrier>,
+) -> Result<(batch::TransferStats, TempDir)> {
+    batch::reset_stats();
+    let td = TempDir::new("chaos-actor")?;
+    let store = LfsStore::open(td.path());
+    let remote = HttpRemote::open(&url, Some(td.path()))?;
+    let policy = RetryPolicy {
+        max_attempts: 6,
+        base: Duration::from_millis(40),
+        cap: Duration::from_millis(400),
+        seed: seed ^ (i as u64 + 1),
+    };
+    let prefetcher = Prefetcher {
+        retry: policy,
+        ..Prefetcher::default()
+    };
+    let mut mine = Vec::new();
+    for j in 0..objects {
+        mine.push(store.put(&payload(seed, i, j))?.0);
+    }
+    let pushed = prefetcher
+        .push(&store, &remote, &mine)
+        .with_context(|| format!("actor {i}: push under chaos"))?;
+    ensure!(pushed.unavailable == 0, "actor {i}: push left objects behind");
+    gate.wait();
+    let everyone: Vec<Oid> = (0..actors)
+        .flat_map(|a| (0..objects).map(move |j| Oid::of_bytes(&payload(seed, a, j))))
+        .collect();
+    let fetched = prefetcher
+        .fetch(&remote, &store, &everyone)
+        .with_context(|| format!("actor {i}: fetch under chaos"))?;
+    ensure!(fetched.unavailable == 0, "actor {i}: fetch left objects behind");
+    Ok((batch::stats(), td))
+}
+
+/// Run the whole chaos suite against one undersized hub. Convergence is
+/// reported, not assumed: a divergent run returns `converged: false`
+/// so the caller (CLI, gate) decides.
+pub fn run_chaos(cfg: &ChaosConfig) -> Result<ChaosOutcome> {
+    crate::init();
+    ensure!(cfg.actors >= 2, "chaos needs at least two actors");
+    ensure!(cfg.objects >= 1, "chaos needs at least one object per actor");
+    eprintln!(
+        "chaos: {} actors x {} objects, seed {} (replay: git-theta bench chaos {} {} {})",
+        cfg.actors, cfg.objects, cfg.seed, cfg.actors, cfg.objects, cfg.seed
+    );
+    let t0 = Instant::now();
+
+    // Deliberately undersized: two workers, two queue slots, a
+    // sub-second budget. Everything that converges here converges
+    // because of shedding, budgets, and retries — not headroom.
+    let opts = ServeOptions {
+        workers: 2,
+        queue: 2,
+        request_budget: Duration::from_millis(700),
+        drain_deadline: Duration::from_secs(2),
+        retry_after_secs: 0,
+    };
+    let td_hub = TempDir::new("chaos-hub")?;
+    let server = LfsServer::spawn_with(td_hub.path(), "127.0.0.1:0", opts)?;
+    let proxy = FaultProxy::spawn(&server.url())?;
+
+    batch::reset_stats();
+    overload_phase(&server, &opts, cfg.seed)?;
+    stall_phase(&server)?;
+    let probe_stats = batch::stats();
+
+    // Phase 3: actor 0's traffic crosses the armed proxy.
+    proxy.reject_next(REJECTS, 0);
+    proxy.arm(FaultSpec::stall(Direction::Upload, ACTOR_STALL_AT, 1500));
+    let gate = Arc::new(Barrier::new(cfg.actors));
+    let mut handles = Vec::new();
+    for i in 0..cfg.actors {
+        let url = if i == 0 { proxy.url() } else { server.url() };
+        let (seed, objects, actors, gate) = (cfg.seed, cfg.objects, cfg.actors, gate.clone());
+        handles.push(std::thread::spawn(move || {
+            run_chaos_actor(i, url, seed, objects, actors, gate).map_err(|e| format!("{e:#}"))
+        }));
+    }
+    let mut actor_stats = Vec::new();
+    let mut actor_dirs = Vec::new();
+    for handle in handles {
+        let (stats, td) = handle
+            .join()
+            .map_err(|_| anyhow!("a chaos actor panicked"))?
+            .map_err(|e| anyhow!(e))?;
+        actor_stats.push(stats);
+        actor_dirs.push(td);
+    }
+
+    // Convergence proof: the hub store verifies, and every actor store
+    // holds every payload byte-for-byte.
+    let mut converged = true;
+    let hub_store = LfsStore::at(&td_hub.path().join("lfs/objects"));
+    for a in 0..cfg.actors {
+        for j in 0..cfg.objects {
+            let bytes = payload(cfg.seed, a, j);
+            let oid = Oid::of_bytes(&bytes);
+            if !matches!(hub_store.get(&oid), Ok(ref b) if *b == bytes) {
+                eprintln!("chaos DIVERGED: hub lost or corrupted object {oid}");
+                converged = false;
+            }
+            for (i, td) in actor_dirs.iter().enumerate() {
+                let store = LfsStore::open(td.path());
+                if !matches!(store.get(&oid), Ok(ref b) if *b == bytes) {
+                    eprintln!("chaos DIVERGED: actor {i} lost or corrupted object {oid}");
+                    converged = false;
+                }
+            }
+        }
+    }
+
+    let fired = proxy.fired();
+    ensure!(
+        fired == REJECTS + 1,
+        "chaos: expected exactly {} injected faults (rejects + stall), saw {fired}",
+        REJECTS + 1
+    );
+    drop(proxy);
+    let snap = server.shutdown(); // joins every worker — leaks hang here
+
+    let mut out = ChaosOutcome {
+        actors: cfg.actors,
+        objects: cfg.objects,
+        converged,
+        accepted: snap.accepted,
+        rejected: snap.rejected,
+        timed_out: snap.timed_out,
+        requests: snap.requests,
+        in_flight_after_drain: snap.in_flight,
+        sheds: probe_stats.sheds,
+        backoff_retries: probe_stats.backoff_retries,
+        resumed_bytes: probe_stats.resumed_bytes,
+        faults_fired: fired,
+        chaos_secs: 0.0,
+    };
+    for stats in &actor_stats {
+        out.sheds += stats.sheds;
+        out.backoff_retries += stats.backoff_retries;
+        out.resumed_bytes += stats.resumed_bytes;
+    }
+    ensure!(
+        out.sheds >= REJECTS + 1,
+        "chaos: the proxy rejects and the overload probe must all register as sheds"
+    );
+    ensure!(out.backoff_retries >= out.sheds, "chaos: every shed is also a backoff retry");
+    ensure!(out.in_flight_after_drain == 0, "chaos: drain left requests in flight");
+    out.chaos_secs = t0.elapsed().as_secs_f64();
+    Ok(out)
+}
+
+/// Human-readable summary of a chaos run.
+pub fn render_chaos(out: &ChaosOutcome) -> String {
+    format!(
+        "chaos: {} actors x {} objects — {}\n\
+         hub: {} accepted, {} shed, {} cut at budget, {} served, {} in flight after drain\n\
+         clients: {} sheds absorbed, {} backoff retries, {} bytes resume skipped; \
+         {} fault(s) injected; {:.2}s\n",
+        out.actors,
+        out.objects,
+        if out.converged { "CONVERGED" } else { "DIVERGED" },
+        out.accepted,
+        out.rejected,
+        out.timed_out,
+        out.requests,
+        out.in_flight_after_drain,
+        out.sheds,
+        out.backoff_retries,
+        out.resumed_bytes,
+        out.faults_fired,
+        out.chaos_secs,
+    )
+}
+
+/// Encode the run as the `BENCH_chaos.json` payload for the gate.
+pub fn chaos_to_json(cfg: &ChaosConfig, out: &ChaosOutcome) -> Json {
+    let mut root = JsonObj::new();
+    root.insert("bench", "chaos");
+    root.insert("actors", out.actors);
+    root.insert("objects", out.objects);
+    root.insert("seed", cfg.seed);
+    root.insert("converged", u64::from(out.converged));
+    root.insert("accepted", out.accepted);
+    root.insert("rejected", out.rejected);
+    root.insert("timed_out", out.timed_out);
+    root.insert("requests", out.requests);
+    root.insert("in_flight_after_drain", out.in_flight_after_drain);
+    root.insert("sheds", out.sheds);
+    root.insert("backoff_retries", out.backoff_retries);
+    root.insert("resumed_bytes", out.resumed_bytes);
+    root.insert("faults_fired", out.faults_fired);
+    root.insert("chaos_secs", Json::Num(out.chaos_secs));
+    Json::Obj(root)
+}
+
+/// `git-theta bench chaos [actors] [objects] [seed]`.
+pub fn run_chaos_cli(args: &[String]) -> Result<()> {
+    let cfg = ChaosConfig {
+        actors: args.first().and_then(|s| s.parse().ok()).unwrap_or(4),
+        objects: args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3),
+        seed: args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0xC4A0_5EED),
+    };
+    let out = run_chaos(&cfg)?;
+    print!("{}", render_chaos(&out));
+    let path = write_bench_json("chaos", chaos_to_json(&cfg, &out))?;
+    println!("wrote {}", path.display());
+    ensure!(out.converged, "chaos seed {} did not converge", cfg.seed);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payloads_are_deterministic_and_distinct() {
+        assert_eq!(payload(7, 0, 0), payload(7, 0, 0));
+        assert_ne!(payload(7, 0, 0), payload(7, 0, 1));
+        assert_ne!(payload(7, 0, 0), payload(7, 1, 0));
+        assert_ne!(payload(7, 0, 0), payload(8, 0, 0));
+        assert!(payload(7, 0, 0).len() as u64 > ACTOR_STALL_AT);
+    }
+
+    #[test]
+    fn tiny_chaos_run_converges_under_faults() {
+        let cfg = ChaosConfig {
+            actors: 2,
+            objects: 2,
+            seed: 23,
+        };
+        let out = run_chaos(&cfg).unwrap();
+        assert!(out.converged, "tiny chaos run diverged");
+        assert_eq!(out.faults_fired, REJECTS + 1);
+        assert!(out.rejected >= 1);
+        assert!(out.timed_out >= 1);
+        assert!(out.sheds >= REJECTS + 1);
+        assert!(out.backoff_retries >= out.sheds);
+        assert!(out.resumed_bytes >= 1);
+        assert_eq!(out.in_flight_after_drain, 0);
+    }
+}

@@ -5,6 +5,7 @@
 //! workflow (§4) over both Git LFS and Git-Theta; `benches/*.rs` are
 //! thin `harness = false` wrappers that print each paper table/figure.
 
+pub mod chaos;
 pub mod checkout;
 pub mod figure3;
 pub mod merge;
@@ -127,10 +128,12 @@ pub fn cli_bench(args: &[String]) -> Result<()> {
         "checkout" => checkout::run_checkout_cli(&args[1..]),
         "merge" => merge::run_merge_cli(&args[1..]),
         "scenario" => scenario::run_scenario_cli(&args[1..]),
+        "chaos" => chaos::run_chaos_cli(&args[1..]),
         _ => {
             println!(
                 "benchmarks: table1, figure2, figure3, transfer, checkout, merge, \
-                 scenario [actors ops seed faults] (full set lives in `cargo bench`)\n\
+                 scenario [actors ops seed faults], chaos [actors objects seed] \
+                 (full set lives in `cargo bench`)\n\
                  env: THETA_BENCH_PARAMS=<millions> scales the model"
             );
             Ok(())

@@ -31,6 +31,7 @@
 //! without interference from concurrently running tests.
 
 use super::pack;
+use super::retry::RetryPolicy;
 use super::store::LfsStore;
 use super::transport::{ChainAdvert, ChainNegotiation, RemoteTransport, WireReport};
 use crate::gitcore::object::Oid;
@@ -95,6 +96,12 @@ pub struct TransferStats {
     /// Objects that crossed the wire as delta records (chain-aware
     /// pushes) instead of whole payloads.
     pub delta_objects: u64,
+    /// Transfer attempts repeated after a retryable failure
+    /// ([`RetryPolicy::run`](super::retry::RetryPolicy::run) pauses).
+    pub backoff_retries: u64,
+    /// Retries caused specifically by a server shed (`503 +
+    /// Retry-After`) — a subset of `backoff_retries`.
+    pub sheds: u64,
 }
 
 impl TransferStats {
@@ -202,6 +209,12 @@ pub struct Prefetcher {
     pub max_pack_bytes: u64,
     /// Worker threads for compression and store fan-in.
     pub threads: usize,
+    /// Retry policy wrapped around every wire exchange (negotiation
+    /// and per-shard pack transfer). Defaults to
+    /// [`RetryPolicy::none`]: backoff is an explicit opt-in, so a
+    /// first failure stays visible to callers (and to the
+    /// fault-injection suites) unless a caller asks for resilience.
+    pub retry: RetryPolicy,
 }
 
 impl Default for Prefetcher {
@@ -210,6 +223,7 @@ impl Default for Prefetcher {
             max_pack_objects: 4096,
             max_pack_bytes: 256 << 20,
             threads: par::default_threads(),
+            retry: RetryPolicy::none(),
         }
     }
 }
@@ -234,14 +248,16 @@ impl Prefetcher {
         if need.is_empty() {
             return Ok(TransferSummary::default());
         }
-        let resp = remote.batch(&need)?;
+        let resp = self.retry.run(|| remote.batch(&need))?;
         let shards = self.shard_sized(&resp.present, &resp.present_sizes);
         let inner = if shards.len() > 1 { 1 } else { self.threads };
         let per_shard = par::try_par_map(
             &shards,
             self.threads.min(shards.len().max(1)),
             |_, shard| -> Result<(pack::PackStats, WireReport)> {
-                remote.fetch_pack_into(shard, local, inner)
+                // A retried shard rides byte-range resume: bytes the
+                // local partial already holds are never re-fetched.
+                self.retry.run(|| remote.fetch_pack_into(shard, local, inner))
             },
         )?;
         Ok(accumulate(resp.missing.len(), &per_shard))
@@ -263,7 +279,7 @@ impl Prefetcher {
         if want.is_empty() {
             return Ok(TransferSummary::default());
         }
-        let resp = remote.batch(&want)?;
+        let resp = self.retry.run(|| remote.batch(&want))?;
         let held = local.contains_all(&resp.missing);
         let send: Vec<Oid> = resp
             .missing
@@ -279,7 +295,9 @@ impl Prefetcher {
             &shards,
             self.threads.min(shards.len().max(1)),
             |_, shard| -> Result<(pack::PackStats, WireReport)> {
-                remote.send_pack_from(local, shard, inner)
+                // A retried upload HEAD-probes the server's partial
+                // and sends only the tail the server lacks.
+                self.retry.run(|| remote.send_pack_from(local, shard, inner))
             },
         )?;
         Ok(accumulate(unavailable, &per_shard))
@@ -311,7 +329,7 @@ impl Prefetcher {
         if adv.want.is_empty() {
             return Ok(TransferSummary::default());
         }
-        let neg = remote.negotiate_chains(&adv)?;
+        let neg = self.retry.run(|| remote.negotiate_chains(&adv))?;
         let held = local.contains_all(&neg.batch.missing);
         let send: Vec<Oid> = neg
             .batch
@@ -332,9 +350,9 @@ impl Prefetcher {
                 let plan = pack::plan_deltas(local, shard, &base_of, inner)?;
                 let deltas = plan.deltas.len() as u64;
                 let moved = if deltas == 0 {
-                    remote.send_pack_from(local, shard, inner)?
+                    self.retry.run(|| remote.send_pack_from(local, shard, inner))?
                 } else {
-                    remote.send_pack_with_bases(local, &plan, inner)?
+                    self.retry.run(|| remote.send_pack_with_bases(local, &plan, inner))?
                 };
                 Ok((moved, deltas))
             },

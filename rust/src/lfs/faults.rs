@@ -14,12 +14,23 @@
 //! * **duplicate** — re-inject a previously relayed body slice in
 //!   place of the real tail (stream corruption that preserves
 //!   `Content-Length`, so only checksums can catch it);
-//! * **delay** — sleep before relaying the pack.
+//! * **delay** — sleep before relaying the pack;
+//! * **stall** — relay the body up to an offset, then hold the
+//!   connection silent for a fixed time before sending the rest (the
+//!   slow-loris shape that request budgets must cut);
+//! * **slow-drip** — relay the body in tiny chunks with a pause
+//!   between each (a peer that is alive but pathologically slow).
 //!
 //! Faults are one-shot: after firing, the proxy is transparent again,
 //! which is what lets a test assert "attempt 1 dies at byte k, the
 //! retry resumes". Non-pack requests (negotiations, ref sync) always
 //! pass through untouched.
+//!
+//! Separately from per-pack faults, [`FaultProxy::reject_next`] arms a
+//! **multi-shot admission fault**: the next `n` requests (any route)
+//! are answered locally with `503 + Retry-After` without touching the
+//! upstream — the overload-shedding shape the client's
+//! [`RetryPolicy`](super::retry::RetryPolicy) must absorb.
 //!
 //! The proxy is a deliverable of the test harness (the
 //! `rust/tests/support` module builds on it) but lives in the library
@@ -54,16 +65,39 @@ pub struct FaultSpec {
     pub duplicate_at: Option<(u64, u64)>,
     /// Sleep this long before relaying the pack body.
     pub delay_ms: u64,
+    /// Relay the body up to this offset, then go silent for
+    /// [`stall_ms`](FaultSpec::stall_ms) before sending the rest.
+    pub stall_at: Option<u64>,
+    /// How long a `stall_at` fault holds the connection silent.
+    pub stall_ms: u64,
+    /// Relay the body in chunks of this size with a
+    /// [`drip_ms`](FaultSpec::drip_ms) pause between each.
+    pub drip_chunk: Option<usize>,
+    /// The per-chunk pause of a `drip_chunk` fault.
+    pub drip_ms: u64,
+}
+
+/// A spec with no fault modes set (direction only); constructors start
+/// from this and flip on the one mode they model.
+fn base_spec(direction: Direction) -> FaultSpec {
+    FaultSpec {
+        direction,
+        kill_after: None,
+        duplicate_at: None,
+        delay_ms: 0,
+        stall_at: None,
+        stall_ms: 0,
+        drip_chunk: None,
+        drip_ms: 0,
+    }
 }
 
 impl FaultSpec {
     /// A truncation fault: cut the stream after `k` pack-body bytes.
     pub fn kill(direction: Direction, k: u64) -> FaultSpec {
         FaultSpec {
-            direction,
             kill_after: Some(k),
-            duplicate_at: None,
-            delay_ms: 0,
+            ..base_spec(direction)
         }
     }
 
@@ -71,29 +105,58 @@ impl FaultSpec {
     /// `len` bytes (corrupting the stream without changing its length).
     pub fn duplicate(direction: Direction, offset: u64, len: u64) -> FaultSpec {
         FaultSpec {
-            direction,
-            kill_after: None,
             duplicate_at: Some((offset, len)),
-            delay_ms: 0,
+            ..base_spec(direction)
         }
     }
 
     /// A delay fault: stall the pack body by `ms` milliseconds.
     pub fn delay(direction: Direction, ms: u64) -> FaultSpec {
         FaultSpec {
-            direction,
-            kill_after: None,
-            duplicate_at: None,
             delay_ms: ms,
+            ..base_spec(direction)
         }
     }
+
+    /// A stall fault: relay `offset` body bytes, hold the connection
+    /// silent for `ms` milliseconds, then relay the rest. The socket
+    /// stays open the whole time — only a request budget can cut it.
+    pub fn stall(direction: Direction, offset: u64, ms: u64) -> FaultSpec {
+        FaultSpec {
+            stall_at: Some(offset),
+            stall_ms: ms,
+            ..base_spec(direction)
+        }
+    }
+
+    /// A slow-drip fault: relay the body `chunk` bytes at a time with
+    /// `ms` milliseconds between chunks — alive, but pathologically
+    /// slow.
+    pub fn drip(direction: Direction, chunk: usize, ms: u64) -> FaultSpec {
+        FaultSpec {
+            drip_chunk: Some(chunk.max(1)),
+            drip_ms: ms,
+            ..base_spec(direction)
+        }
+    }
+}
+
+/// State shared between the proxy handle and its relay threads.
+struct ProxyShared {
+    /// The one-shot pack-stream fault, if armed.
+    armed: Mutex<Option<FaultSpec>>,
+    /// Total faults fired since spawn (pack faults + rejections).
+    fired: AtomicU64,
+    /// How many more requests to answer locally with a 503.
+    reject_left: AtomicU64,
+    /// The `Retry-After` value (seconds) rejection responses carry.
+    reject_retry_after: AtomicU64,
 }
 
 /// A TCP proxy that can inject one fault into the next pack stream.
 pub struct FaultProxy {
     addr: SocketAddr,
-    armed: Arc<Mutex<Option<FaultSpec>>>,
-    fired: Arc<AtomicU64>,
+    shared: Arc<ProxyShared>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
@@ -109,10 +172,14 @@ impl FaultProxy {
         };
         let listener = TcpListener::bind("127.0.0.1:0").context("binding fault proxy")?;
         let addr = listener.local_addr()?;
-        let armed = Arc::new(Mutex::new(None));
-        let fired = Arc::new(AtomicU64::new(0));
+        let shared = Arc::new(ProxyShared {
+            armed: Mutex::new(None),
+            fired: AtomicU64::new(0),
+            reject_left: AtomicU64::new(0),
+            reject_retry_after: AtomicU64::new(0),
+        });
         let stop = Arc::new(AtomicBool::new(false));
-        let (armed2, fired2, stop2) = (armed.clone(), fired.clone(), stop.clone());
+        let (shared2, stop2) = (shared.clone(), stop.clone());
         let accept_thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if stop2.load(Ordering::SeqCst) {
@@ -120,18 +187,16 @@ impl FaultProxy {
                 }
                 if let Ok(stream) = conn {
                     let upstream = upstream.clone();
-                    let armed = armed2.clone();
-                    let fired = fired2.clone();
+                    let shared = shared2.clone();
                     std::thread::spawn(move || {
-                        let _ = relay(stream, &upstream, &armed, &fired);
+                        let _ = relay(stream, &upstream, &shared);
                     });
                 }
             }
         });
         Ok(FaultProxy {
             addr,
-            armed,
-            fired,
+            shared,
             stop,
             accept_thread: Some(accept_thread),
         })
@@ -145,17 +210,30 @@ impl FaultProxy {
     /// Arm one fault; it fires on the next matching pack stream and
     /// then disarms (replacing any fault still armed).
     pub fn arm(&self, spec: FaultSpec) {
-        *self.armed.lock().unwrap() = Some(spec);
+        *self.shared.armed.lock().unwrap() = Some(spec);
     }
 
     /// Disarm without firing.
     pub fn disarm(&self) {
-        *self.armed.lock().unwrap() = None;
+        *self.shared.armed.lock().unwrap() = None;
+    }
+
+    /// Answer the next `n` requests (any route) locally with
+    /// `503 + Retry-After: <retry_after_secs>` without contacting the
+    /// upstream — the reject-N-then-accept shape of an overloaded
+    /// server. Unlike pack faults this is multi-shot: each rejection
+    /// fires (and counts), the connection survives, and request `n+1`
+    /// passes through normally.
+    pub fn reject_next(&self, n: u64, retry_after_secs: u64) {
+        self.shared
+            .reject_retry_after
+            .store(retry_after_secs, Ordering::SeqCst);
+        self.shared.reject_left.store(n, Ordering::SeqCst);
     }
 
     /// How many faults have fired since spawn.
     pub fn fired(&self) -> u64 {
-        self.fired.load(Ordering::SeqCst)
+        self.shared.fired.load(Ordering::SeqCst)
     }
 }
 
@@ -204,33 +282,37 @@ fn is_pack_request(req: &Request) -> Option<Direction> {
 /// upload fault while forwarding, read the full upstream response,
 /// apply any armed download fault while relaying it back. A fired kill
 /// fault ends the loop (both sockets drop — that is the fault).
-fn relay(
-    mut client: TcpStream,
-    upstream: &str,
-    armed: &Mutex<Option<FaultSpec>>,
-    fired: &AtomicU64,
-) -> Result<()> {
+fn relay(mut client: TcpStream, upstream: &str, shared: &ProxyShared) -> Result<()> {
     client.set_read_timeout(Some(http::IO_TIMEOUT)).ok();
     client.set_write_timeout(Some(http::IO_TIMEOUT)).ok();
     loop {
-        relay_one(&mut client, upstream, armed, fired)?;
+        relay_one(&mut client, upstream, shared)?;
     }
 }
 
 /// Relay a single request/response exchange; `Err` ends the connection
 /// (including deliberate kill faults).
-fn relay_one(
-    client: &mut TcpStream,
-    upstream: &str,
-    armed: &Mutex<Option<FaultSpec>>,
-    fired: &AtomicU64,
-) -> Result<()> {
+fn relay_one(client: &mut TcpStream, upstream: &str, shared: &ProxyShared) -> Result<()> {
     let (req, _complete) = http::read_request(client)?;
+
+    // Admission faults answer locally, before any upstream contact:
+    // an overloaded server sheds without doing the request's work.
+    let claimed_reject = shared
+        .reject_left
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+        .is_ok();
+    if claimed_reject {
+        shared.fired.fetch_add(1, Ordering::SeqCst);
+        let secs = shared.reject_retry_after.load(Ordering::SeqCst);
+        let resp = http::Response::new(503).header("retry-after", &secs.to_string());
+        http::write_response(client, &resp)?;
+        return Ok(()); // keep-alive: the retry rides the same channel
+    }
 
     // Claim the armed fault iff this request is a matching pack stream.
     let fault = match is_pack_request(&req) {
         Some(direction) => {
-            let mut guard = armed.lock().unwrap();
+            let mut guard = shared.armed.lock().unwrap();
             if (*guard).map(|s| s.direction) == Some(direction) {
                 guard.take()
             } else {
@@ -240,7 +322,7 @@ fn relay_one(
         None => None,
     };
     if let Some(spec) = &fault {
-        fired.fetch_add(1, Ordering::SeqCst);
+        shared.fired.fetch_add(1, Ordering::SeqCst);
         if spec.delay_ms > 0 {
             std::thread::sleep(std::time::Duration::from_millis(spec.delay_ms));
         }
@@ -271,11 +353,18 @@ fn relay_one(
                 // Drop both connections (ends the keep-alive loop).
                 anyhow::bail!("upload kill fault fired");
             }
-            let mut faulted = req.clone();
+            let mut body = req.body.clone();
             if let Some((offset, len)) = spec.duplicate_at {
-                faulted.body = duplicate_body(&req.body, offset, len);
+                body = duplicate_body(&req.body, offset, len);
             }
-            http::write_request(&mut up, &faulted)?;
+            http::write_request_head(
+                &mut up,
+                &req.method,
+                &req.target,
+                &req.headers,
+                body.len() as u64,
+            )?;
+            write_body_faulted(&mut up, &body, &spec)?;
         }
         _ => http::write_request(&mut up, &req)?,
     }
@@ -298,15 +387,40 @@ fn relay_one(
                 // Drop both connections (ends the keep-alive loop).
                 anyhow::bail!("download kill fault fired");
             }
-            let mut faulted = resp.clone();
+            let mut body = resp.body.clone();
             if let Some((offset, len)) = spec.duplicate_at {
-                faulted.body = duplicate_body(&resp.body, offset, len);
+                body = duplicate_body(&resp.body, offset, len);
             }
-            http::write_response(client, &faulted)?;
+            http::write_response_head(client, resp.status, &resp.headers, body.len() as u64)?;
+            write_body_faulted(client, &body, &spec)?;
         }
         _ => http::write_response(client, &resp)?,
     }
     Ok(())
+}
+
+/// Write a (possibly duplicated) body with any stall or drip fault
+/// applied; the head — with the body's true length — is already on the
+/// wire, so the peer's `Content-Length` accounting stays honest while
+/// the *pacing* misbehaves.
+fn write_body_faulted(stream: &mut TcpStream, body: &[u8], spec: &FaultSpec) -> Result<()> {
+    use std::io::Write;
+    if let Some(offset) = spec.stall_at {
+        let offset = (offset as usize).min(body.len());
+        stream.write_all(&body[..offset])?;
+        stream.flush().ok();
+        std::thread::sleep(std::time::Duration::from_millis(spec.stall_ms));
+        stream.write_all(&body[offset..])?;
+    } else if let Some(chunk) = spec.drip_chunk {
+        for piece in body.chunks(chunk.max(1)) {
+            stream.write_all(piece)?;
+            stream.flush().ok();
+            std::thread::sleep(std::time::Duration::from_millis(spec.drip_ms));
+        }
+    } else {
+        stream.write_all(body)?;
+    }
+    stream.flush().context("flushing faulted body")
 }
 
 #[cfg(test)]
@@ -329,11 +443,11 @@ mod tests {
         assert_eq!(duplicate_body(&body, 1000, 10), body);
     }
 
-    #[test]
-    fn passthrough_when_unarmed() {
+    /// A tiny single-purpose upstream answering every request with
+    /// `200 hello`, for tests that only exercise the proxy itself.
+    fn tiny_upstream() -> std::net::SocketAddr {
         use std::io::{Read, Write};
         use std::net::TcpListener;
-        // A tiny upstream echoing a fixed response.
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let upstream_addr = listener.local_addr().unwrap();
         std::thread::spawn(move || {
@@ -349,11 +463,57 @@ mod tests {
                 );
             }
         });
+        upstream_addr
+    }
+
+    #[test]
+    fn passthrough_when_unarmed() {
+        let upstream_addr = tiny_upstream();
         let proxy = FaultProxy::spawn(&upstream_addr.to_string()).unwrap();
         let authority = http::authority_of(&proxy.url()).unwrap();
         let resp = http::roundtrip(&authority, &Request::new("GET", "/anything")).unwrap();
         assert_eq!(resp.status, 200);
         assert_eq!(resp.body, b"hello");
         assert_eq!(proxy.fired(), 0);
+    }
+
+    #[test]
+    fn reject_next_sheds_locally_then_passes_through() {
+        let upstream_addr = tiny_upstream();
+        let proxy = FaultProxy::spawn(&upstream_addr.to_string()).unwrap();
+        let authority = http::authority_of(&proxy.url()).unwrap();
+        proxy.reject_next(2, 9);
+        for _ in 0..2 {
+            let resp = http::roundtrip(&authority, &Request::new("GET", "/anything")).unwrap();
+            assert_eq!(resp.status, 503);
+            assert_eq!(resp.get_header("retry-after"), Some("9"));
+        }
+        // Request n+1 reaches the upstream untouched.
+        let resp = http::roundtrip(&authority, &Request::new("GET", "/anything")).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"hello");
+        assert_eq!(proxy.fired(), 2);
+    }
+
+    #[test]
+    fn stall_and_drip_deliver_the_full_body_late() {
+        let upstream_addr = tiny_upstream();
+        let proxy = FaultProxy::spawn(&upstream_addr.to_string()).unwrap();
+        let authority = http::authority_of(&proxy.url()).unwrap();
+        // Pack-shaped target so the armed download faults match.
+        let target = format!("/packs/{}", "0".repeat(64));
+        for spec in [
+            FaultSpec::stall(Direction::Download, 2, 120),
+            FaultSpec::drip(Direction::Download, 1, 15),
+        ] {
+            proxy.arm(spec);
+            let started = std::time::Instant::now();
+            let resp = http::roundtrip(&authority, &Request::new("GET", &target)).unwrap();
+            assert_eq!(resp.status, 200);
+            assert_eq!(resp.body, b"hello"); // late, but intact
+            assert!(resp.complete);
+            assert!(started.elapsed() >= std::time::Duration::from_millis(50));
+        }
+        assert_eq!(proxy.fired(), 2);
     }
 }

@@ -34,6 +34,7 @@
 
 use super::batch::{self, BatchResponse};
 use super::pack::{self, DeltaPlan, PackStats};
+use super::retry::WireError;
 use super::store::LfsStore;
 use super::transport::{self, ChainAdvert, ChainNegotiation, RemoteTransport, WireReport};
 use crate::gitcore::object::Oid;
@@ -90,6 +91,18 @@ fn strip_file_prefix(path: &Path, n: u64) -> Result<()> {
     drop(dst);
     std::fs::rename(&tmp_path, path).context("installing rewritten partial pack")?;
     Ok(())
+}
+
+/// Type an unexpected response status for the retry layer: a `503` is
+/// a shed (its `Retry-After` hint travels with the error), anything
+/// else is fatal — the server answered, it just said no.
+fn status_error(status: u16, retry_after: Option<&str>, what: String) -> anyhow::Error {
+    if status == 503 {
+        let after = retry_after.and_then(|v| v.parse::<u64>().ok());
+        anyhow::Error::new(WireError::shed(after, what))
+    } else {
+        anyhow::Error::new(WireError::fatal(what))
+    }
 }
 
 /// Client handle for an `http://` LFS remote.
@@ -172,7 +185,11 @@ impl HttpRemote {
         match resp.status {
             200 | 206 => Ok((resp.status, resp.streamed, resp.complete)),
             404 => bail!("{} no longer has pack {id}", self.url()),
-            s => bail!("{}: GET /packs/{id} -> {s}", self.url()),
+            s => Err(status_error(
+                s,
+                resp.get_header("retry-after"),
+                format!("{}: GET /packs/{id} -> {s}", self.url()),
+            )),
         }
     }
 
@@ -215,11 +232,13 @@ impl HttpRemote {
                     )
                 })?;
             if !resp.complete {
-                bail!(
+                // Typed as a cut so the retry layer backs off and
+                // resumes instead of giving up.
+                return Err(anyhow::Error::new(WireError::cut(format!(
                     "pack upload to {} interrupted mid-response; a retry resumes from the \
                      server-side partial",
                     self.url()
-                );
+                ))));
             }
             match resp.status {
                 200 => {
@@ -244,12 +263,22 @@ impl HttpRemote {
                         .unwrap_or(0)
                         .min(total);
                 }
-                422 => bail!(
-                    "{} rejected pack {id}: {}",
-                    self.url(),
-                    String::from_utf8_lossy(&resp.body)
-                ),
-                s => bail!("{}: PUT /packs/{id} -> {s}", self.url()),
+                422 => {
+                    // The server answered: the pack itself is bad.
+                    // Retrying would re-send the same rejected bytes.
+                    return Err(anyhow::Error::new(WireError::fatal(format!(
+                        "{} rejected pack {id}: {}",
+                        self.url(),
+                        String::from_utf8_lossy(&resp.body)
+                    ))));
+                }
+                s => {
+                    return Err(status_error(
+                        s,
+                        resp.get_header("retry-after"),
+                        format!("{}: PUT /packs/{id} -> {s}", self.url()),
+                    ))
+                }
             }
         }
         bail!(
@@ -269,7 +298,11 @@ impl RemoteTransport for HttpRemote {
         let req = Request::new("POST", "/objects/batch").body(want_body(want));
         let resp = self.client.send(&req)?;
         if resp.status != 200 {
-            bail!("{}: POST /objects/batch -> {}", self.url(), resp.status);
+            return Err(status_error(
+                resp.status,
+                resp.get_header("retry-after"),
+                format!("{}: POST /objects/batch -> {}", self.url(), resp.status),
+            ));
         }
         let json = parse_json(&resp)?;
         let present = parse_oid_arr(&json, "present")?;
@@ -292,7 +325,11 @@ impl RemoteTransport for HttpRemote {
             Request::new("POST", "/objects/batch").body(transport::chain_advert_body(adv));
         let resp = self.client.send(&req)?;
         if resp.status != 200 {
-            bail!("{}: POST /objects/batch -> {}", self.url(), resp.status);
+            return Err(status_error(
+                resp.status,
+                resp.get_header("retry-after"),
+                format!("{}: POST /objects/batch -> {}", self.url(), resp.status),
+            ));
         }
         let json = parse_json(&resp)?;
         let present = parse_oid_arr(&json, "present")?;
@@ -359,12 +396,16 @@ impl RemoteTransport for HttpRemote {
             .client
             .send(&Request::new("POST", "/packs").body(want_body(oids)))?;
         if resp.status != 200 {
-            bail!(
-                "{}: POST /packs -> {}: {}",
-                self.url(),
+            return Err(status_error(
                 resp.status,
-                String::from_utf8_lossy(&resp.body)
-            );
+                resp.get_header("retry-after"),
+                format!(
+                    "{}: POST /packs -> {}: {}",
+                    self.url(),
+                    resp.status,
+                    String::from_utf8_lossy(&resp.body)
+                ),
+            ));
         }
         let json = parse_json(&resp)?;
         let id = json
@@ -432,7 +473,9 @@ impl RemoteTransport for HttpRemote {
                 // only for the missing tail. (Without a staging dir
                 // the slot dies with its temp dir.)
                 let _ = std::fs::rename(&claim, &shared);
-                bail!(
+                // Typed as a cut: the retry layer resumes from the
+                // persisted partial instead of treating this as final.
+                return Err(anyhow::Error::new(WireError::cut(format!(
                     "pack download from {} interrupted after {} of {total} bytes{}",
                     self.url(),
                     offset + streamed,
@@ -441,7 +484,7 @@ impl RemoteTransport for HttpRemote {
                     } else {
                         ""
                     }
-                );
+                ))));
             }
             let have = std::fs::metadata(&claim).map(|m| m.len()).unwrap_or(0);
             if have == total {
@@ -496,7 +539,11 @@ impl RemoteTransport for HttpRemote {
             bail!("lfs object {} not found on {}", oid.short(), self.url());
         }
         if resp.status != 200 {
-            bail!("{}: GET /objects/{} -> {}", self.url(), oid.short(), resp.status);
+            return Err(status_error(
+                resp.status,
+                resp.get_header("retry-after"),
+                format!("{}: GET /objects/{} -> {}", self.url(), oid.short(), resp.status),
+            ));
         }
         if Oid::of_bytes(&resp.body) != *oid {
             bail!("lfs object {} from {} failed its content hash", oid.short(), self.url());
@@ -509,7 +556,11 @@ impl RemoteTransport for HttpRemote {
         let req = Request::new("PUT", &format!("/objects/{}", oid.to_hex())).body(bytes.to_vec());
         let resp = self.client.send(&req)?;
         if resp.status != 200 {
-            bail!("{}: PUT /objects/{} -> {}", self.url(), oid.short(), resp.status);
+            return Err(status_error(
+                resp.status,
+                resp.get_header("retry-after"),
+                format!("{}: PUT /objects/{} -> {}", self.url(), oid.short(), resp.status),
+            ));
         }
         Ok(())
     }

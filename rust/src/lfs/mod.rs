@@ -19,8 +19,11 @@
 //! the same negotiation round trip; a chain-aware receiver answers
 //! with its held prefix depths and the pack ships suffix objects as
 //! [`delta`] records against bases the receiver holds (pack format v2
-//! — the flat protocol remains the version-skew fallback). [`faults`]
-//! is the
+//! — the flat protocol remains the version-skew fallback). Failures
+//! are typed and classified ([`retry`]): a shed (`503 + Retry-After`),
+//! cut, or timeout is retryable under a seeded, capped backoff policy
+//! that rides byte-range resume; a `4xx` or checksum mismatch is
+//! fatal and surfaces immediately. [`faults`] is the
 //! failure-injection proxy that proves the resume semantics (see
 //! `docs/ARCHITECTURE.md` "Remotes" for the data flow and wire
 //! protocol).
@@ -39,6 +42,7 @@ pub mod http;
 pub mod pack;
 pub mod pointer;
 pub mod remote;
+pub mod retry;
 pub mod server;
 pub mod store;
 pub mod transport;
@@ -55,7 +59,8 @@ pub use pack::{
 pub use server::gc_stale_packs;
 pub use pointer::Pointer;
 pub use remote::{sync_to_remote, DirRemote, LfsRemote};
-pub use server::LfsServer;
+pub use retry::{classify, FailureClass, RetryPolicy, WireError};
+pub use server::{LfsServer, MetricsSnapshot, ServeOptions};
 pub use store::LfsStore;
 pub use transport::{
     answer_chains, open_transport, upload_with_chains, ChainAdvert, ChainEntryAdvert,

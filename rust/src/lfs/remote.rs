@@ -14,6 +14,18 @@
 //! — or call the `*_per_object` variants — for the legacy engine that
 //! copies each object with its own request, kept as the benchmark
 //! baseline (`benches/ablation_transfer.rs`).
+//!
+//! **Failure classification parity.** Directory-remote failures keep
+//! their source `std::io::Error` in the error chain (nothing is
+//! flattened to a string), so [`retry::classify`](super::retry::classify)
+//! applies the same retryable/fatal split here as over HTTP: a missing
+//! object or permission problem is fatal on both transports, and
+//! [`RetryPolicy`](super::retry::RetryPolicy) makes the same number of
+//! attempts whichever transport is underneath
+//! (`rust/tests/remote_parity.rs` pins this). A local filesystem never
+//! legitimately sheds or times out, so no directory-remote error ever
+//! classifies as retryable — retrying a disk error would just repeat
+//! it.
 
 use super::batch::{self, BatchResponse};
 use super::pack::{self, DeltaPlan, PackStats};

@@ -1,0 +1,360 @@
+//! Failure classification and the client retry policy.
+//!
+//! One question decides everything the resilience layer does: *is this
+//! failure worth retrying?* A shed (`503 + Retry-After`), a connection
+//! reset, a timeout — yes: the server asked for backoff or the channel
+//! hiccuped, and the byte-range resume protocol means a retry never
+//! re-sends bytes the server already holds. A `4xx`, a checksum
+//! mismatch, a malformed response — no: the same request will fail the
+//! same way forever, and retrying converts a crisp error into a slow
+//! one.
+//!
+//! [`classify`] answers the question for any `anyhow::Error` by walking
+//! its chain: a typed [`WireError`] (attached by the transports at the
+//! point of failure) wins; otherwise `std::io::Error` kinds map to
+//! [`FailureClass::Timeout`] / [`FailureClass::Cut`]; anything else is
+//! [`FailureClass::Fatal`]. Both transports route their failures
+//! through the same mapping, so [`RetryPolicy`] behaves identically
+//! over HTTP and a directory remote (`rust/tests/remote_parity.rs`
+//! pins this).
+//!
+//! [`RetryPolicy::run`] drives the loop: capped exponential backoff
+//! with deterministic jitter (seeded, so chaos runs replay exactly),
+//! honoring the server's `Retry-After` as a floor. Every pause is
+//! counted on the thread-local transfer stats (`backoff_retries`,
+//! `sheds`), so tests can lock how much retrying a scenario performed.
+
+use anyhow::Result;
+use std::time::Duration;
+
+/// What kind of failure a transfer error represents — the whole
+/// retryable/fatal split lives here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureClass {
+    /// The server shed load (`503 + Retry-After`): back off and retry.
+    Shed,
+    /// An I/O deadline expired (socket timeout, request budget).
+    Timeout,
+    /// The connection was cut mid-conversation (reset, EOF, refused).
+    Cut,
+    /// Retrying cannot help: `4xx`, checksum mismatch, malformed data.
+    Fatal,
+}
+
+impl FailureClass {
+    /// Whether a retry has any chance of succeeding.
+    pub fn retryable(self) -> bool {
+        !matches!(self, FailureClass::Fatal)
+    }
+}
+
+/// A typed transfer failure: the class that drives the retry decision,
+/// the server's `Retry-After` hint when one was sent, and a
+/// human-readable message. Transports attach this at the point of
+/// failure so [`classify`] never has to parse error strings.
+#[derive(Debug)]
+pub struct WireError {
+    class: FailureClass,
+    retry_after: Option<u64>,
+    message: String,
+}
+
+impl WireError {
+    /// A `503 + Retry-After` shed from the server.
+    pub fn shed(retry_after: Option<u64>, message: impl Into<String>) -> WireError {
+        WireError {
+            class: FailureClass::Shed,
+            retry_after,
+            message: message.into(),
+        }
+    }
+
+    /// A deadline expiry (socket timeout or request budget).
+    pub fn timeout(message: impl Into<String>) -> WireError {
+        WireError {
+            class: FailureClass::Timeout,
+            retry_after: None,
+            message: message.into(),
+        }
+    }
+
+    /// A connection cut mid-conversation.
+    pub fn cut(message: impl Into<String>) -> WireError {
+        WireError {
+            class: FailureClass::Cut,
+            retry_after: None,
+            message: message.into(),
+        }
+    }
+
+    /// A failure retrying cannot fix.
+    pub fn fatal(message: impl Into<String>) -> WireError {
+        WireError {
+            class: FailureClass::Fatal,
+            retry_after: None,
+            message: message.into(),
+        }
+    }
+
+    /// The failure class.
+    pub fn class(&self) -> FailureClass {
+        self.class
+    }
+
+    /// The server's `Retry-After` hint in seconds, if any.
+    pub fn retry_after(&self) -> Option<u64> {
+        self.retry_after
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Classify any transfer error by walking its chain: a typed
+/// [`WireError`] wins; otherwise `std::io::Error` kinds map timeouts
+/// and cuts; anything unrecognized is [`FailureClass::Fatal`] —
+/// unknown failures must not loop.
+pub fn classify(err: &anyhow::Error) -> FailureClass {
+    for cause in err.chain() {
+        if let Some(wire) = cause.downcast_ref::<WireError>() {
+            return wire.class;
+        }
+        if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+            use std::io::ErrorKind as K;
+            return match io.kind() {
+                K::TimedOut | K::WouldBlock => FailureClass::Timeout,
+                K::ConnectionReset
+                | K::ConnectionAborted
+                | K::BrokenPipe
+                | K::UnexpectedEof
+                | K::ConnectionRefused => FailureClass::Cut,
+                _ => FailureClass::Fatal,
+            };
+        }
+    }
+    FailureClass::Fatal
+}
+
+/// The `Retry-After` hint carried by the error chain's [`WireError`],
+/// if any.
+pub fn retry_after_of(err: &anyhow::Error) -> Option<u64> {
+    err.chain()
+        .find_map(|c| c.downcast_ref::<WireError>())
+        .and_then(|w| w.retry_after())
+}
+
+/// Capped exponential backoff with deterministic jitter.
+///
+/// `pause(retry, ..)` for retry `r` (0-based) draws from
+/// `[base·2^r / 2, base·2^r)` — a half-window floor keeps pauses from
+/// collapsing to zero, the jitter de-synchronizes a fleet — capped at
+/// `cap`, with the server's `Retry-After` as a floor. The jitter is a
+/// pure function of `(seed, retry)`, so a seeded chaos run replays the
+/// exact same schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts (the first try included). `1` disables retrying.
+    pub max_attempts: u32,
+    /// Backoff window for the first retry; doubles per retry.
+    pub base: Duration,
+    /// Upper bound on any single pause.
+    pub cap: Duration,
+    /// Jitter seed: same seed, same pause schedule.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            base: Duration::from_millis(50),
+            cap: Duration::from_secs(2),
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never retries: one attempt, errors surface
+    /// immediately. This is the [`Prefetcher`](super::Prefetcher)
+    /// default — opting *into* backoff is an explicit decision, and
+    /// fault-injection tests depend on first failures being visible.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            ..RetryPolicy::default()
+        }
+    }
+
+    /// The pause before retry `retry` (0-based), honoring a
+    /// `Retry-After` hint as a floor.
+    pub fn pause(&self, retry: u32, retry_after: Option<u64>) -> Duration {
+        let window = self
+            .base
+            .saturating_mul(1u32 << retry.min(16))
+            .min(self.cap);
+        let half = window / 2;
+        // Deterministic per-(seed, retry) jitter in [half, window).
+        let mut rng = crate::util::rng::Pcg64::new(
+            self.seed ^ ((retry as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        );
+        let span = window.saturating_sub(half).as_millis().max(1) as u64;
+        let jittered = half + Duration::from_millis(rng.next_u64() % span);
+        let floor = Duration::from_secs(retry_after.unwrap_or(0));
+        jittered.min(self.cap).max(floor)
+    }
+
+    /// Run `op` until it succeeds, fails fatally, or attempts run out.
+    /// Retryable failures short of the last attempt sleep the jittered
+    /// pause and count onto the thread-local transfer stats
+    /// (`backoff_retries`; `sheds` additionally for 503s).
+    pub fn run<T>(&self, mut op: impl FnMut() -> Result<T>) -> Result<T> {
+        let attempts = self.max_attempts.max(1);
+        let mut retry = 0u32;
+        loop {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(err) => {
+                    let class = classify(&err);
+                    if !class.retryable() || retry + 1 >= attempts {
+                        return Err(err);
+                    }
+                    let pause = self.pause(retry, retry_after_of(&err));
+                    super::batch::record(|t| {
+                        t.backoff_retries += 1;
+                        if class == FailureClass::Shed {
+                            t.sheds += 1;
+                        }
+                    });
+                    std::thread::sleep(pause);
+                    retry += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfs::batch;
+    use anyhow::{anyhow, Context};
+
+    #[test]
+    fn classification_walks_the_error_chain() {
+        let shed = anyhow::Error::new(WireError::shed(Some(3), "server shed"))
+            .context("pushing pack");
+        assert_eq!(classify(&shed), FailureClass::Shed);
+        assert_eq!(retry_after_of(&shed), Some(3));
+
+        let cut = anyhow::Error::new(std::io::Error::new(
+            std::io::ErrorKind::ConnectionReset,
+            "reset by peer",
+        ))
+        .context("reading response");
+        assert_eq!(classify(&cut), FailureClass::Cut);
+
+        let timeout = anyhow::Error::new(std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            "read timed out",
+        ));
+        assert_eq!(classify(&timeout), FailureClass::Timeout);
+
+        // Unknown errors and explicit protocol rejections never loop.
+        assert_eq!(classify(&anyhow!("some parse error")), FailureClass::Fatal);
+        let fatal = anyhow::Error::new(WireError::fatal("422: bad pack"));
+        assert_eq!(classify(&fatal), FailureClass::Fatal);
+        assert!(!FailureClass::Fatal.retryable());
+        assert!(FailureClass::Shed.retryable());
+    }
+
+    #[test]
+    fn pauses_are_deterministic_capped_and_floor_on_retry_after() {
+        let p = RetryPolicy {
+            seed: 42,
+            ..RetryPolicy::default()
+        };
+        // Same seed, same schedule; different seed, different jitter.
+        assert_eq!(p.pause(0, None), p.pause(0, None));
+        let other = RetryPolicy {
+            seed: 43,
+            ..RetryPolicy::default()
+        };
+        assert_ne!(
+            (p.pause(0, None), p.pause(1, None), p.pause(2, None)),
+            (other.pause(0, None), other.pause(1, None), other.pause(2, None)),
+            "jitter ignored its seed"
+        );
+        // Half-window floor and window ceiling.
+        for retry in 0..6 {
+            let window = p.base.saturating_mul(1 << retry).min(p.cap);
+            let pause = p.pause(retry, None);
+            assert!(pause >= window / 2, "pause collapsed below the half-window");
+            assert!(pause <= p.cap, "pause escaped the cap");
+        }
+        // Retry-After outranks the backoff schedule.
+        assert_eq!(p.pause(0, Some(5)), Duration::from_secs(5));
+    }
+
+    #[test]
+    fn run_retries_transient_failures_and_counts_them() {
+        batch::reset_stats();
+        let p = RetryPolicy {
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(4),
+            ..RetryPolicy::default()
+        };
+        let mut calls = 0u32;
+        let out: Result<u32> = p.run(|| {
+            calls += 1;
+            if calls < 3 {
+                Err(anyhow::Error::new(WireError::shed(None, "busy")))
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(out.unwrap(), 3);
+        let t = batch::stats();
+        assert_eq!(t.backoff_retries, 2);
+        assert_eq!(t.sheds, 2);
+    }
+
+    #[test]
+    fn run_surfaces_fatal_failures_immediately() {
+        batch::reset_stats();
+        let p = RetryPolicy::default();
+        let mut calls = 0u32;
+        let out: Result<()> = p.run(|| {
+            calls += 1;
+            Err(anyhow!("schema violation"))
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 1, "a fatal error must not be retried");
+        assert_eq!(batch::stats(), batch::TransferStats::default());
+    }
+
+    #[test]
+    fn run_exhausts_attempts_on_persistent_transient_failures() {
+        batch::reset_stats();
+        let p = RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(2),
+            ..RetryPolicy::default()
+        };
+        let mut calls = 0u32;
+        let out: Result<()> = p.run(|| {
+            calls += 1;
+            Err(anyhow::Error::new(WireError::cut("flaky network")))
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 3);
+        assert_eq!(batch::stats().backoff_retries, 2);
+        assert_eq!(batch::stats().sheds, 0);
+    }
+}

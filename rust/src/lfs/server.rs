@@ -43,6 +43,19 @@
 //! checksum or id is discarded whole and poisons nothing. Stale cache
 //! entries (`lfs/outgoing/`, `lfs/partial/`) are reaped by the
 //! age-based [`gc_stale_packs`], run once at spawn.
+//!
+//! **Overload safety.** Connections are served by a fixed worker pool
+//! fed by a bounded accept queue ([`ServeOptions`]); when the queue is
+//! full the accept loop sheds the connection with `503 + Retry-After`
+//! instead of stalling or spawning without bound. Every request runs
+//! under a wall-clock [`Deadline`](crate::util::http::Deadline)
+//! layered on the socket `IO_TIMEOUT`, so a slow-loris head or stalled
+//! body cannot pin a worker past the budget. Degradation shows up in
+//! numbers: per-request counters ([`MetricsSnapshot`]) are exposed
+//! over `GET /metrics`. Shutdown drains: accepting stops, in-flight
+//! requests get a grace period, stragglers are cut (their partial
+//! bodies are already on disk — resume covers a restart), and every
+//! worker is joined, so no thread outlives the server.
 
 use super::pack;
 use super::store::LfsStore;
@@ -55,13 +68,13 @@ use crate::util::http::{self, Request, Response};
 use crate::util::json::{Json, JsonObj};
 use crate::util::tmp;
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Worker threads used for server-side pack assembly/fan-in. Kept
 /// small: each connection already runs on its own thread.
@@ -73,6 +86,150 @@ const PACK_THREADS: usize = 2;
 /// minutes) survives; short enough that abandoned transfers do not
 /// accumulate forever.
 pub const STALE_PACK_TTL: Duration = Duration::from_secs(24 * 60 * 60);
+
+/// Tuning for the serving core: worker pool size, admission control,
+/// per-request budget, and drain behavior. The [`Default`] is sized
+/// for test fleets and small teams; `git-theta serve` and the chaos
+/// harness pass explicit values.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Fixed worker threads serving accepted connections. A keep-alive
+    /// connection holds its worker between requests (up to the request
+    /// budget when idle), so size this above the expected number of
+    /// concurrent clients.
+    pub workers: usize,
+    /// Bounded accept queue ahead of the workers. When it is full, new
+    /// connections are shed with `503 + Retry-After` instead of
+    /// stalling the accept loop or spawning without bound.
+    pub queue: usize,
+    /// Wall-clock budget per request (head + body + response), layered
+    /// on the socket `IO_TIMEOUT` so a slow-loris or stalled body
+    /// cannot pin a worker forever. Also bounds how long an idle
+    /// keep-alive connection may hold a worker.
+    pub request_budget: Duration,
+    /// How long shutdown waits for in-flight requests before cutting
+    /// their sockets (partial bodies are on disk either way; resume
+    /// covers a restart).
+    pub drain_deadline: Duration,
+    /// Seconds advertised in the `Retry-After` header of a shed.
+    pub retry_after_secs: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            workers: 32,
+            queue: 256,
+            request_budget: Duration::from_secs(120),
+            drain_deadline: Duration::from_secs(5),
+            retry_after_secs: 1,
+        }
+    }
+}
+
+/// Monotonic serving counters (`GET /metrics`): degradation under load
+/// must show up in numbers, not anecdotes.
+#[derive(Debug, Default)]
+struct ServeMetrics {
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    timed_out: AtomicU64,
+    requests: AtomicU64,
+    in_flight: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl ServeMetrics {
+    fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            timed_out: self.timed_out.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the serving counters (the in-process view of
+/// `GET /metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Connections admitted to the worker queue.
+    pub accepted: u64,
+    /// Connections shed with `503 + Retry-After` (queue full).
+    pub rejected: u64,
+    /// Requests cut by the per-request deadline.
+    pub timed_out: u64,
+    /// Requests served to completion.
+    pub requests: u64,
+    /// Requests currently being served.
+    pub in_flight: u64,
+    /// Request body bytes received.
+    pub bytes_in: u64,
+    /// Response body bytes sent.
+    pub bytes_out: u64,
+}
+
+/// Bounded handoff between the accept loop and the worker pool.
+struct AcceptQueue {
+    /// Queued connections, plus whether the server is draining.
+    slots: Mutex<(VecDeque<TcpStream>, bool)>,
+    ready: Condvar,
+    cap: usize,
+}
+
+impl AcceptQueue {
+    fn new(cap: usize) -> AcceptQueue {
+        AcceptQueue {
+            slots: Mutex::new((VecDeque::new(), false)),
+            ready: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Admit a connection, or hand it back when the queue is full (the
+    /// caller sheds it) or the server is draining.
+    fn try_push(&self, stream: TcpStream) -> std::result::Result<(), TcpStream> {
+        let mut slots = self.slots.lock().unwrap();
+        if slots.1 || slots.0.len() >= self.cap {
+            return Err(stream);
+        }
+        slots.0.push_back(stream);
+        drop(slots);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until a connection is available (`Some`) or the queue has
+    /// closed (`None`: the worker exits).
+    fn pop(&self) -> Option<TcpStream> {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            if let Some(stream) = slots.0.pop_front() {
+                return Some(stream);
+            }
+            if slots.1 {
+                return None;
+            }
+            slots = self.ready.wait(slots).unwrap();
+        }
+    }
+
+    /// Stop admitting work and wake every idle worker. Queued
+    /// connections not yet claimed are dropped — their clients observe
+    /// a cut, which the retry layer classifies as retryable.
+    fn close(&self) {
+        let mut slots = self.slots.lock().unwrap();
+        slots.1 = true;
+        slots.0.clear();
+        drop(slots);
+        self.ready.notify_all();
+    }
+}
 
 struct ServerState {
     root: PathBuf,
@@ -88,6 +245,35 @@ struct ServerState {
     /// writers share one partial file — so the map grows with the
     /// number of distinct pack ids seen, which is tiny.
     partial_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    /// Serving knobs this server was spawned with.
+    options: ServeOptions,
+    /// Serving counters (`GET /metrics`).
+    metrics: ServeMetrics,
+    /// Clones of every connection currently held by a worker, so
+    /// drain/kill can unblock workers via `TcpStream::shutdown`.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn: AtomicU64,
+}
+
+/// Track a worker's connection so drain/kill can unblock it; `None`
+/// when the clone fails (the connection is then served untracked).
+fn register_conn(state: &ServerState, stream: &TcpStream) -> Option<u64> {
+    let clone = stream.try_clone().ok()?;
+    let id = state.next_conn.fetch_add(1, Ordering::Relaxed);
+    state.conns.lock().unwrap().insert(id, clone);
+    Some(id)
+}
+
+/// Turn away a connection with `503 + Retry-After`, written blind —
+/// the request is never read, so a slow or hostile peer costs the
+/// accept path nothing. Best-effort: the peer may already be gone.
+fn shed(mut stream: TcpStream, retry_after_secs: u64) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let head = format!(
+        "HTTP/1.1 503 Service Unavailable\r\nretry-after: {retry_after_secs}\r\ncontent-length: 0\r\n\r\n"
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.flush();
 }
 
 fn id_lock(state: &ServerState, id: &str) -> Arc<Mutex<()>> {
@@ -100,11 +286,13 @@ fn id_lock(state: &ServerState, id: &str) -> Arc<Mutex<()>> {
         .clone()
 }
 
-/// A running LFS + commit/ref server. Shuts down on drop.
+/// A running LFS + commit/ref server. Drains and shuts down on drop.
 pub struct LfsServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    queue: Arc<AcceptQueue>,
     state: Arc<ServerState>,
 }
 
@@ -116,6 +304,12 @@ impl LfsServer {
 
     /// Serve `root` on an explicit `host:port` bind address.
     pub fn spawn_on(root: &Path, bind: &str) -> Result<LfsServer> {
+        LfsServer::spawn_with(root, bind, ServeOptions::default())
+    }
+
+    /// Serve `root` with explicit [`ServeOptions`] (worker pool size,
+    /// admission control, request budget, drain deadline).
+    pub fn spawn_with(root: &Path, bind: &str, options: ServeOptions) -> Result<LfsServer> {
         std::fs::create_dir_all(root.join("refs/heads"))?;
         let odb = Odb::init(root)?;
         if !root.join("HEAD").exists() {
@@ -130,21 +324,47 @@ impl LfsServer {
             refs: Refs::open(root),
             refs_lock: Mutex::new(()),
             partial_locks: Mutex::new(HashMap::new()),
+            options,
+            metrics: ServeMetrics::default(),
+            conns: Mutex::new(HashMap::new()),
+            next_conn: AtomicU64::new(0),
         });
         let listener = TcpListener::bind(bind)
             .with_context(|| format!("binding lfs server to {bind}"))?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(AcceptQueue::new(options.queue));
+        let mut workers = Vec::with_capacity(options.workers.max(1));
+        for _ in 0..options.workers.max(1) {
+            let queue = queue.clone();
+            let state = state.clone();
+            workers.push(std::thread::spawn(move || {
+                while let Some(stream) = queue.pop() {
+                    let conn_id = register_conn(&state, &stream);
+                    handle_connection(stream, &state);
+                    if let Some(id) = conn_id {
+                        state.conns.lock().unwrap().remove(&id);
+                    }
+                }
+            }));
+        }
         let stop2 = stop.clone();
         let accept_state = state.clone();
+        let accept_queue = queue.clone();
         let accept_thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if stop2.load(Ordering::SeqCst) {
                     break;
                 }
-                if let Ok(stream) = conn {
-                    let state = accept_state.clone();
-                    std::thread::spawn(move || handle_connection(stream, &state));
+                let Ok(stream) = conn else { continue };
+                match accept_queue.try_push(stream) {
+                    Ok(()) => {
+                        accept_state.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(stream) => {
+                        accept_state.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        shed(stream, accept_state.options.retry_after_secs);
+                    }
                 }
             }
         });
@@ -152,6 +372,8 @@ impl LfsServer {
             addr,
             stop,
             accept_thread: Some(accept_thread),
+            workers,
+            queue,
             state,
         })
     }
@@ -159,6 +381,64 @@ impl LfsServer {
     /// The bound socket address.
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Point-in-time serving counters (the in-process version of
+    /// `GET /metrics`).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.state.metrics.snapshot()
+    }
+
+    /// Forcibly shut down every connection currently held by a worker;
+    /// in-flight requests observe a cut. The listener keeps accepting,
+    /// so to clients this is indistinguishable from a server restart
+    /// that kept its disk state — which is what the keep-alive
+    /// recovery tests simulate (a literal restart cannot reliably
+    /// rebind the same port: std's `TcpListener` takes no
+    /// `SO_REUSEADDR`). Returns how many connections were cut.
+    pub fn kill_connections(&self) -> usize {
+        let conns = self.state.conns.lock().unwrap();
+        for stream in conns.values() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+        conns.len()
+    }
+
+    /// Graceful shutdown: stop accepting, give in-flight requests the
+    /// drain deadline to finish, cut stragglers (their partial bodies
+    /// are already on disk; resume covers a restart), and join every
+    /// worker — zero threads survive. Returns the final counters.
+    /// Dropping the server runs the same drain.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.drain();
+        self.state.metrics.snapshot()
+    }
+
+    fn drain(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) && self.accept_thread.is_none() {
+            return; // already drained
+        }
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.accept_thread.take() {
+            let _ = handle.join();
+        }
+        // Stop admitting queued work and wake idle workers.
+        self.queue.close();
+        // Grace period for whatever is mid-request.
+        let deadline = Instant::now() + self.state.options.drain_deadline;
+        while self.state.metrics.in_flight.load(Ordering::Relaxed) > 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Cut whatever is left (idle keep-alive connections included;
+        // nothing in flight loses data — partial bodies are on disk)
+        // so blocked workers unblock and exit.
+        self.kill_connections();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
     }
 
     /// The `http://` URL clients should use as their remote.
@@ -195,12 +475,7 @@ impl LfsServer {
 
 impl Drop for LfsServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // Unblock the accept loop with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(handle) = self.accept_thread.take() {
-            let _ = handle.join();
-        }
+        self.drain();
     }
 }
 
@@ -236,22 +511,53 @@ fn gc_stale_packs_filtered(
 }
 
 /// Per-connection request loop (HTTP/1.1 keep-alive): serve requests
-/// until the peer closes, asks to close, errors, or a mid-body cut
-/// leaves the stream unframed.
+/// until the peer closes, asks to close, errors, a mid-body cut leaves
+/// the stream unframed, or the per-request [`http::Deadline`] expires.
 fn handle_connection(mut stream: TcpStream, state: &ServerState) {
-    stream.set_read_timeout(Some(http::IO_TIMEOUT)).ok();
-    stream.set_write_timeout(Some(http::IO_TIMEOUT)).ok();
-    stream.set_nodelay(true).ok();
+    if let Err(e) = http::prepare_stream(&stream) {
+        // A socket that cannot be given I/O deadlines must not be
+        // served unbounded: fail closed. Log the condition once — it
+        // is an environment problem, not a per-connection one.
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| {
+            eprintln!(
+                "git-theta serve: closing connection that cannot be given socket deadlines: {e:#}"
+            );
+        });
+        return;
+    }
     loop {
-        let (req, leftover) = match http::read_request_head(&mut stream) {
-            Ok(v) => v,
-            // Clean close between requests, or a broken head: either
-            // way there is nothing left to answer.
+        // Arm the budget before the head read: an idle keep-alive
+        // connection holds its worker for at most
+        // min(IO_TIMEOUT, request_budget) before being reclaimed.
+        let deadline = http::Deadline::after(state.options.request_budget);
+        let (req, leftover) =
+            match http::read_request_head_within(&mut stream, Some(&deadline)) {
+                Ok(v) => v,
+                // Clean close between requests, or a broken head:
+                // either way there is nothing left to answer.
+                Err(_) => return,
+            };
+        state.metrics.in_flight.fetch_add(1, Ordering::Relaxed);
+        let served = serve_one(state, &mut stream, req, leftover, &deadline);
+        state.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+        if deadline.expired() {
+            // The budget was exhausted mid-request (stalled body or
+            // slow drain). Whatever prefix arrived is on disk for
+            // resumable routes; the connection itself is unframed.
+            state.metrics.timed_out.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        match served {
+            Ok(true) => {
+                state.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            Ok(false) => {
+                state.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
             Err(_) => return,
-        };
-        match serve_one(state, &mut stream, req, leftover) {
-            Ok(true) => continue,
-            Ok(false) | Err(_) => return,
         }
     }
 }
@@ -264,6 +570,7 @@ fn serve_one(
     stream: &mut TcpStream,
     req: Request,
     leftover: Vec<u8>,
+    deadline: &http::Deadline,
 ) -> Result<bool> {
     let wants_close = req.wants_close();
     let path = req.path().to_string();
@@ -271,23 +578,33 @@ fn serve_one(
     // Streaming routes first: pack bodies never enter RAM.
     if let Some(id) = path.strip_prefix("/packs/") {
         let keep = match req.method.as_str() {
-            "PUT" => pack_put_streaming(state, stream, &req, leftover, id)?,
+            "PUT" => pack_put_streaming(state, stream, &req, leftover, id, deadline)?,
             method => {
                 // GET/HEAD/DELETE carry no meaningful body, but a
                 // declared one must still be drained (to nowhere — a
                 // hostile Content-Length must not buy a buffer) or its
                 // bytes would desync the keep-alive framing.
                 let len = req.declared_len()?;
-                let (_, complete) =
-                    http::read_body_to(stream, &leftover, len, &mut std::io::sink())?;
+                let (drained, complete) = http::read_body_to_within(
+                    stream,
+                    &leftover,
+                    len,
+                    &mut std::io::sink(),
+                    Some(deadline),
+                )?;
+                state.metrics.bytes_in.fetch_add(drained, Ordering::Relaxed);
                 if !complete {
                     return Ok(false);
                 }
                 if method == "GET" {
-                    pack_get_streaming(state, stream, &req, id)?
+                    pack_get_streaming(state, stream, &req, id, deadline)?
                 } else {
                     let resp = pack_misc(state, method, id)
                         .unwrap_or_else(|e| text(500, format!("{e:#}")));
+                    state
+                        .metrics
+                        .bytes_out
+                        .fetch_add(resp.body.len() as u64, Ordering::Relaxed);
                     http::write_response(stream, &resp)?;
                     true
                 }
@@ -299,7 +616,10 @@ fn serve_one(
     // Buffered routes: negotiation, odb/refs sync, per-object ops —
     // all small bodies.
     let len = req.declared_len()?;
-    let (body, complete) = http::read_body(stream, leftover, len);
+    let mut body = Vec::new();
+    let (read, complete) =
+        http::read_body_to_within(stream, &leftover, len, &mut body, Some(deadline))?;
+    state.metrics.bytes_in.fetch_add(read, Ordering::Relaxed);
     if !complete {
         // The peer died mid-body; nobody is listening for a response.
         return Ok(false);
@@ -308,6 +628,10 @@ fn serve_one(
     full.body = body;
     let resp = dispatch(state, &full.method, &path, &full)
         .unwrap_or_else(|e| text(500, format!("{e:#}")));
+    state
+        .metrics
+        .bytes_out
+        .fetch_add(resp.body.len() as u64, Ordering::Relaxed);
     http::write_response(stream, &resp)?;
     Ok(!wants_close)
 }
@@ -345,6 +669,7 @@ fn dispatch(state: &ServerState, method: &str, path: &str, req: &Request) -> Res
         ("POST", "/objects/batch") => objects_batch(state, req)?,
         ("POST", "/packs") => pack_create(state, req)?,
         ("POST", "/odb/batch") => odb_batch(state, req)?,
+        ("GET", "/metrics") => metrics_response(state),
         _ => {
             if let Some(hex) = path.strip_prefix("/objects/") {
                 object_endpoint(state, method, hex, req)?
@@ -359,6 +684,24 @@ fn dispatch(state: &ServerState, method: &str, path: &str, req: &Request) -> Res
             }
         }
     })
+}
+
+/// `GET /metrics`: the serving counters plus the pool geometry, as
+/// JSON — degradation under load must be observable remotely, not
+/// just from inside the process.
+fn metrics_response(state: &ServerState) -> Response {
+    let snap = state.metrics.snapshot();
+    let mut obj = JsonObj::new();
+    obj.insert("accepted", snap.accepted);
+    obj.insert("rejected", snap.rejected);
+    obj.insert("timed_out", snap.timed_out);
+    obj.insert("requests", snap.requests);
+    obj.insert("in_flight", snap.in_flight);
+    obj.insert("bytes_in", snap.bytes_in);
+    obj.insert("bytes_out", snap.bytes_out);
+    obj.insert("workers", state.options.workers as u64);
+    obj.insert("queue", state.options.queue as u64);
+    json_response(obj)
 }
 
 fn objects_batch(state: &ServerState, req: &Request) -> Result<Response> {
@@ -537,6 +880,7 @@ fn pack_get_streaming(
     stream: &mut TcpStream,
     req: &Request,
     id: &str,
+    deadline: &http::Deadline,
 ) -> Result<bool> {
     if !is_hex_id(id) {
         http::write_response(stream, &text(400, "pack ids are 64 hex chars"))?;
@@ -569,13 +913,27 @@ fn pack_get_streaming(
     file.seek(SeekFrom::Start(start)).context("seeking outgoing pack")?;
     let body_len = total - start;
     http::write_response_head(stream, status, &headers, body_len)?;
-    let copied = std::io::copy(&mut file.by_ref().take(body_len), stream)
-        .context("streaming pack body")?;
-    if copied != body_len {
-        // The cache file shrank under us (gc raced a download): the
-        // declared length is now wrong, so the connection is poisoned.
-        anyhow::bail!("outgoing pack {id} truncated mid-stream");
+    // Chunked copy so the request budget is re-checked per chunk: a
+    // peer that stalls its receive window cannot pin this worker past
+    // the deadline.
+    let mut chunk = vec![0u8; http::COPY_CHUNK];
+    let mut copied = 0u64;
+    while copied < body_len {
+        deadline
+            .arm(stream)
+            .with_context(|| format!("request budget exhausted streaming pack {id}"))?;
+        let want = ((body_len - copied) as usize).min(chunk.len());
+        // The cache file shrinking under us (gc raced a download)
+        // surfaces here: the declared length is now wrong, so the
+        // connection is poisoned either way.
+        file.read_exact(&mut chunk[..want])
+            .with_context(|| format!("outgoing pack {id} truncated mid-stream"))?;
+        stream
+            .write_all(&chunk[..want])
+            .context("streaming pack body")?;
+        copied += want as u64;
     }
+    state.metrics.bytes_out.fetch_add(copied, Ordering::Relaxed);
     stream.flush().context("flushing pack body")?;
     Ok(true)
 }
@@ -611,6 +969,7 @@ fn pack_put_streaming(
     req: &Request,
     leftover: Vec<u8>,
     id: &str,
+    deadline: &http::Deadline,
 ) -> Result<bool> {
     if !is_hex_id(id) {
         http::write_response(stream, &text(400, "pack ids are 64 hex chars"))?;
@@ -635,7 +994,14 @@ fn pack_put_streaming(
         // offset: the client's in-protocol 409 retry depends on
         // *receiving* this response, not a reset mid-upload.
         drop(guard);
-        let (_, complete) = http::read_body_to(stream, &leftover, declared, &mut std::io::sink())?;
+        let (drained, complete) = http::read_body_to_within(
+            stream,
+            &leftover,
+            declared,
+            &mut std::io::sink(),
+            Some(deadline),
+        )?;
+        state.metrics.bytes_in.fetch_add(drained, Ordering::Relaxed);
         if !complete {
             return Ok(false); // peer died mid-body anyway
         }
@@ -653,9 +1019,11 @@ fn pack_put_streaming(
         .open(&path)
         .context("opening partial pack file")?;
     let mut sink = std::io::BufWriter::new(file);
-    let (written, complete) = http::read_body_to(stream, &leftover, declared, &mut sink)?;
+    let (written, complete) =
+        http::read_body_to_within(stream, &leftover, declared, &mut sink, Some(deadline))?;
     sink.flush().context("flushing partial pack file")?;
     drop(sink);
+    state.metrics.bytes_in.fetch_add(written, Ordering::Relaxed);
     let now = have + written;
     if !complete {
         // Connection died mid-body. The prefix is on disk; the retry
@@ -1061,5 +1429,173 @@ mod tests {
             let oid = h.join().unwrap();
             assert!(server_store.contains(&oid));
         }
+    }
+
+    #[test]
+    fn overload_sheds_with_retry_after_and_recovers() {
+        let td_root = TempDir::new("srv-shed").unwrap();
+        let server = LfsServer::spawn_with(
+            td_root.path(),
+            "127.0.0.1:0",
+            ServeOptions {
+                workers: 1,
+                queue: 1,
+                request_budget: Duration::from_secs(1),
+                retry_after_secs: 7,
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        let authority = server.addr().to_string();
+
+        // One idle connection pins the only worker, a second fills the
+        // only queue slot.
+        let hog_a = TcpStream::connect(server.addr()).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let hog_b = TcpStream::connect(server.addr()).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+
+        // The next connection must be shed immediately — 503 with a
+        // Retry-After hint, not a stall behind the hogs.
+        let resp =
+            http::roundtrip(&authority, &http::Request::new("GET", "/metrics")).unwrap();
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.get_header("retry-after"), Some("7"));
+        assert!(server.metrics().rejected >= 1);
+
+        // Capacity returns once the hogs go away (dropped here; the
+        // request budget would have reclaimed them within 1s anyway).
+        drop(hog_a);
+        drop(hog_b);
+        let start = Instant::now();
+        loop {
+            let resp =
+                http::roundtrip(&authority, &http::Request::new("GET", "/metrics")).unwrap();
+            if resp.status == 200 {
+                break;
+            }
+            assert!(
+                start.elapsed() < Duration::from_secs(10),
+                "server never recovered from overload"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    #[test]
+    fn stalled_upload_is_cut_by_the_request_budget_and_resumes() {
+        let td_root = TempDir::new("srv-stall").unwrap();
+        let server = LfsServer::spawn_with(
+            td_root.path(),
+            "127.0.0.1:0",
+            ServeOptions {
+                workers: 2,
+                queue: 4,
+                request_budget: Duration::from_millis(400),
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        let id = "5".repeat(64);
+
+        // A client starts a 10_000-byte pack upload, sends 4_000
+        // bytes, then stalls while holding the socket open.
+        let mut stalled = TcpStream::connect(server.addr()).unwrap();
+        let head = format!(
+            "PUT /packs/{id} HTTP/1.1\r\nhost: x\r\ncontent-length: 10000\r\ncontent-range: bytes 0-9999/10000\r\n\r\n"
+        );
+        stalled.write_all(head.as_bytes()).unwrap();
+        stalled.write_all(&[7u8; 4000]).unwrap();
+        stalled.flush().unwrap();
+
+        // The 400ms request budget — not the 30s IO_TIMEOUT — must cut
+        // the stall, and the cut must be counted.
+        let start = Instant::now();
+        while server.metrics().timed_out < 1 {
+            assert!(
+                start.elapsed() < Duration::from_secs(5),
+                "stalled upload was never cut by the request budget"
+            );
+            std::thread::sleep(Duration::from_millis(25));
+        }
+
+        // The received prefix survived on disk: the retry can resume.
+        let authority = server.addr().to_string();
+        let probe = http::Request::new("HEAD", &format!("/packs/{id}"));
+        let resp = http::roundtrip(&authority, &probe).unwrap();
+        assert_eq!(resp.get_header("x-received"), Some("4000"));
+        drop(stalled);
+    }
+
+    #[test]
+    fn restart_mid_session_reconnects_transparently_for_reads() {
+        let td_root = TempDir::new("srv-restart").unwrap();
+        let server = LfsServer::spawn(td_root.path()).unwrap();
+        let server_store = LfsStore::at(&td_root.path().join("lfs/objects"));
+        let a = server_store.put(b"survives-restart").unwrap().0;
+
+        let remote = HttpRemote::open(&server.url(), None).unwrap();
+        RemoteTransport::batch(&remote, &[a]).unwrap();
+        assert_eq!(remote.connections_opened(), 1);
+
+        // "Restart": every live connection is cut; disk state persists.
+        assert!(server.kill_connections() >= 1);
+        std::thread::sleep(Duration::from_millis(50));
+
+        // The next negotiation rides the stale pooled connection, sees
+        // the cut, and transparently reconnects (POST is
+        // stale-retryable; see `may_retry_stale`).
+        let resp = RemoteTransport::batch(&remote, &[a]).unwrap();
+        assert_eq!(resp.present, vec![a]);
+        assert_eq!(remote.connections_opened(), 2);
+
+        // A full fetch works end to end on the new connection.
+        let td_local = TempDir::new("srv-restart-local").unwrap();
+        let local = LfsStore::open(td_local.path());
+        remote.fetch_pack_into(&[a], &local, 1).unwrap();
+        assert_eq!(local.get(&a).unwrap(), b"survives-restart");
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_and_joins_every_worker() {
+        let td_root = TempDir::new("srv-drain").unwrap();
+        let server = LfsServer::spawn(td_root.path()).unwrap();
+        let authority = server.addr().to_string();
+        let resp =
+            http::roundtrip(&authority, &http::Request::new("GET", "/metrics")).unwrap();
+        assert_eq!(resp.status, 200);
+
+        // Park an idle keep-alive connection on a worker.
+        let idle = TcpStream::connect(server.addr()).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+
+        // Drain: the idle straggler is cut and every worker joined —
+        // shutdown() returning at all proves zero leaked threads.
+        let finals = server.shutdown();
+        assert_eq!(finals.in_flight, 0);
+        assert!(finals.requests >= 1);
+        assert!(finals.accepted >= 2);
+        drop(idle);
+    }
+
+    #[test]
+    fn metrics_endpoint_reports_counters_as_json() {
+        let td_root = TempDir::new("srv-metrics").unwrap();
+        let server = LfsServer::spawn(td_root.path()).unwrap();
+        let authority = server.addr().to_string();
+        http::roundtrip(&authority, &http::Request::new("GET", "/nope")).unwrap();
+        let resp =
+            http::roundtrip(&authority, &http::Request::new("GET", "/metrics")).unwrap();
+        assert_eq!(resp.status, 200);
+        let body = String::from_utf8_lossy(&resp.body).to_string();
+        let json = Json::parse(&body).unwrap();
+        assert!(json.get("accepted").and_then(|v| v.as_u64()).unwrap() >= 1);
+        assert_eq!(
+            json.get("workers").and_then(|v| v.as_u64()),
+            Some(ServeOptions::default().workers as u64)
+        );
+        // The metrics request itself is observably in flight.
+        assert!(json.get("in_flight").and_then(|v| v.as_u64()).unwrap() >= 1);
+        assert!(server.metrics().requests >= 1);
     }
 }

@@ -41,7 +41,6 @@ pub mod tensor;
 pub mod theta;
 #[allow(missing_docs)]
 pub mod train;
-#[allow(missing_docs)]
 pub mod util;
 
 /// Register every built-in driver/plug-in (idempotent). Call once at

@@ -14,6 +14,8 @@ pub struct Glob {
 }
 
 impl Glob {
+    /// Compile a pattern (a leading `./` is stripped; whether the
+    /// pattern contains a `/` decides basename vs full-path matching).
     pub fn new(pattern: &str) -> Glob {
         Glob {
             pattern: pattern.trim_start_matches("./").to_string(),
@@ -21,6 +23,7 @@ impl Glob {
         }
     }
 
+    /// The normalized source pattern this glob was compiled from.
     pub fn pattern(&self) -> &str {
         &self.pattern
     }

@@ -54,6 +54,75 @@ const POOL_CAP: usize = 8;
 /// closed.
 const POOL_IDLE_MAX: Duration = Duration::from_secs(15);
 
+/// A per-request wall-clock budget layered on the socket [`IO_TIMEOUT`].
+///
+/// The socket timeout alone bounds each *individual* read or write
+/// call; a peer trickling one byte per interval can still pin a thread
+/// indefinitely (slow-loris). A `Deadline` bounds the whole exchange:
+/// before every chunk the socket timeout is re-armed to the *remaining*
+/// budget (capped at [`IO_TIMEOUT`]), so the OS wakes the thread no
+/// later than the deadline and the caller observes expiry as an
+/// ordinary timeout.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    end: std::time::Instant,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline {
+            end: std::time::Instant::now() + budget,
+        }
+    }
+
+    /// Time left before expiry (zero once expired).
+    pub fn remaining(&self) -> Duration {
+        self.end.saturating_duration_since(std::time::Instant::now())
+    }
+
+    /// Whether the budget is spent.
+    pub fn expired(&self) -> bool {
+        self.remaining().is_zero()
+    }
+
+    /// Re-arm `stream`'s read/write timeouts to the remaining budget,
+    /// capped at [`IO_TIMEOUT`]. Errors once the deadline has passed,
+    /// and surfaces timeout-arming failures (see [`prepare_stream`])
+    /// instead of leaving the socket unbounded.
+    pub fn arm(&self, stream: &TcpStream) -> Result<()> {
+        let left = self.remaining();
+        if left.is_zero() {
+            bail!("request deadline exceeded");
+        }
+        let window = left.min(IO_TIMEOUT);
+        stream
+            .set_read_timeout(Some(window))
+            .context("arming socket read deadline")?;
+        stream
+            .set_write_timeout(Some(window))
+            .context("arming socket write deadline")?;
+        Ok(())
+    }
+}
+
+/// Arm a transport socket: read/write deadlines ([`IO_TIMEOUT`]) plus
+/// `TCP_NODELAY`. Timeout failures are **errors**, not advisories — a
+/// socket that cannot get a deadline would hang its thread forever on
+/// a stalled peer, so callers must close it instead of serving it
+/// unbounded (an earlier version's `.ok()` silently did the latter).
+pub fn prepare_stream(stream: &TcpStream) -> Result<()> {
+    stream
+        .set_read_timeout(Some(IO_TIMEOUT))
+        .context("arming socket read deadline")?;
+    stream
+        .set_write_timeout(Some(IO_TIMEOUT))
+        .context("arming socket write deadline")?;
+    // Nagle costs only latency; failing to disable it is harmless.
+    stream.set_nodelay(true).ok();
+    Ok(())
+}
+
 /// An HTTP request (client side builds one, server side parses one).
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -235,8 +304,10 @@ fn find_head_end(buf: &[u8]) -> Option<usize> {
 }
 
 /// Read a stream until the blank line ending the head. Returns the head
-/// text and any body bytes that arrived in the same reads.
-fn read_head(stream: &mut TcpStream) -> Result<(String, Vec<u8>)> {
+/// text and any body bytes that arrived in the same reads. With a
+/// `deadline`, the socket timeout is re-armed to the remaining budget
+/// before every read, so a slow-loris head is cut at the deadline.
+fn read_head(stream: &mut TcpStream, deadline: Option<&Deadline>) -> Result<(String, Vec<u8>)> {
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
     let mut chunk = [0u8; 4096];
     loop {
@@ -247,9 +318,17 @@ fn read_head(stream: &mut TcpStream) -> Result<(String, Vec<u8>)> {
         if buf.len() > MAX_HEAD_BYTES {
             bail!("http head exceeds {MAX_HEAD_BYTES} bytes");
         }
+        if let Some(d) = deadline {
+            d.arm(stream)?;
+        }
         let n = stream.read(&mut chunk).context("reading http head")?;
         if n == 0 {
-            bail!("connection closed before the http head completed");
+            // Typed as an io error so the retry layer can classify a
+            // peer that vanished between requests as retryable.
+            return Err(anyhow::Error::new(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before the http head completed",
+            )));
         }
         buf.extend_from_slice(&chunk[..n]);
     }
@@ -292,11 +371,31 @@ pub fn read_body_to<W: Write>(
     len: u64,
     sink: &mut W,
 ) -> Result<(u64, bool)> {
+    read_body_to_within(stream, leftover, len, sink, None)
+}
+
+/// [`read_body_to`] under a per-request [`Deadline`]: the socket
+/// timeout is re-armed to the remaining budget before every chunk, so
+/// a slow-dripping peer is cut when the budget runs out. Expiry
+/// surfaces as an incomplete body whose prefix is already in `sink` —
+/// exactly like a peer that died, so resume persistence still works.
+pub fn read_body_to_within<W: Write>(
+    stream: &mut TcpStream,
+    leftover: &[u8],
+    len: u64,
+    sink: &mut W,
+    deadline: Option<&Deadline>,
+) -> Result<(u64, bool)> {
     let head = (leftover.len() as u64).min(len) as usize;
     sink.write_all(&leftover[..head]).context("writing streamed body")?;
     let mut written = head as u64;
     let mut chunk = [0u8; COPY_CHUNK];
     while written < len {
+        if let Some(d) = deadline {
+            if d.arm(stream).is_err() {
+                return Ok((written, false));
+            }
+        }
         match stream.read(&mut chunk) {
             Ok(0) => return Ok((written, false)),
             Ok(n) => {
@@ -338,7 +437,17 @@ fn content_length(headers: &[(String, String)]) -> Result<u64> {
 /// This is the server's streaming entry point: routes that spill large
 /// bodies to disk read the head first and drain the body themselves.
 pub fn read_request_head(stream: &mut TcpStream) -> Result<(Request, Vec<u8>)> {
-    let (head, leftover) = read_head(stream)?;
+    read_request_head_within(stream, None)
+}
+
+/// [`read_request_head`] under a per-request [`Deadline`] (re-armed
+/// before every read), so a peer drizzling header bytes cannot hold a
+/// server worker past its request budget.
+pub fn read_request_head_within(
+    stream: &mut TcpStream,
+    deadline: Option<&Deadline>,
+) -> Result<(Request, Vec<u8>)> {
+    let (head, leftover) = read_head(stream, deadline)?;
     let mut lines = head.lines();
     let start = lines.next().context("empty http request")?;
     let mut parts = start.split_whitespace();
@@ -423,6 +532,7 @@ fn reason_of(status: u16) -> &'static str {
         416 => "Range Not Satisfiable",
         422 => "Unprocessable Entity",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Status",
     }
 }
@@ -454,7 +564,7 @@ pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
 /// Parse a response *head*: status, headers, and any body bytes that
 /// arrived in the same reads.
 fn read_response_head(stream: &mut TcpStream) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
-    let (head, leftover) = read_head(stream)?;
+    let (head, leftover) = read_head(stream, None)?;
     let mut lines = head.lines();
     let start = lines.next().context("empty http response")?;
     let status = start
@@ -491,9 +601,7 @@ pub fn read_response(stream: &mut TcpStream, head_request: bool) -> Result<Respo
 fn fresh_connection(authority: &str) -> Result<TcpStream> {
     let stream = TcpStream::connect(authority)
         .with_context(|| format!("connecting to http remote {authority}"))?;
-    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
-    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
-    stream.set_nodelay(true).ok();
+    prepare_stream(&stream).with_context(|| format!("configuring socket to {authority}"))?;
     Ok(stream)
 }
 
@@ -635,7 +743,12 @@ impl HttpClient {
     pub fn send(&self, req: &Request) -> Result<Response> {
         let resp = self.roundtrip(req)?;
         if !resp.complete {
-            bail!("connection to {} interrupted mid-response", self.url);
+            // Typed as an io error so the retry layer classifies a
+            // connection that died mid-response as retryable.
+            return Err(anyhow::Error::new(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("connection to {} interrupted mid-response", self.url),
+            )));
         }
         Ok(resp)
     }
@@ -832,6 +945,85 @@ mod tests {
             assert_eq!(resp.body, b"ok");
         }
         assert_eq!(client.connections_opened(), 3, "every reuse was stale");
+    }
+
+    #[test]
+    fn restart_surfaces_puts_but_transparently_retries_reads() {
+        // A "restarting" server: every connection answers exactly one
+        // request, then closes — so a pooled connection is always
+        // stale by its next use. This pins the `may_retry_stale`
+        // policy: read-style methods reconnect transparently, while a
+        // PUT handed a dead socket must surface the failure to its
+        // caller's resume-offset logic instead of being silently
+        // re-sent.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let mut stream = match conn {
+                    Ok(s) => s,
+                    Err(_) => break,
+                };
+                if let Ok((_req, true)) = read_request(&mut stream) {
+                    let _ = write_response(&mut stream, &Response::new(200).body(b"ok".to_vec()));
+                }
+            }
+        });
+        let client = HttpClient::open(&format!("http://{addr}")).unwrap();
+        assert_eq!(client.send(&Request::new("GET", "/x")).unwrap().status, 200);
+        assert_eq!(client.connections_opened(), 1);
+        // Give the server's close a moment to land on the pooled socket.
+        std::thread::sleep(Duration::from_millis(50));
+        client
+            .send(&Request::new("PUT", "/y").body(vec![1u8; 64]))
+            .expect_err("a PUT over a dead pooled connection must surface, not re-send");
+        assert_eq!(
+            client.connections_opened(),
+            1,
+            "the failed PUT must not have been silently re-sent on a fresh dial"
+        );
+        // Reads recover on their own: a fresh dial behind the scenes.
+        assert_eq!(client.send(&Request::new("GET", "/z")).unwrap().body, b"ok");
+        assert_eq!(client.connections_opened(), 2);
+    }
+
+    #[test]
+    fn deadline_cuts_a_slow_loris_body() {
+        // A client that declares 1000 body bytes, drips a few, then
+        // stalls while holding the socket open. The server-side read
+        // under a ~300 ms deadline must cut within the budget (not the
+        // 30 s socket timeout), keeping the received prefix.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            write_request_head(&mut stream, "PUT", "/drip", &[], 1000).unwrap();
+            for _ in 0..5 {
+                let _ = stream.write_all(&[7u8]);
+                let _ = stream.flush();
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            // Stall, holding the connection open past the deadline.
+            std::thread::sleep(Duration::from_millis(1500));
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        prepare_stream(&stream).unwrap();
+        let (req, leftover) = read_request_head(&mut stream).unwrap();
+        assert_eq!(req.declared_len().unwrap(), 1000);
+        let deadline = Deadline::after(Duration::from_millis(300));
+        let started = std::time::Instant::now();
+        let mut sink = Vec::new();
+        let (written, complete) =
+            read_body_to_within(&mut stream, &leftover, 1000, &mut sink, Some(&deadline)).unwrap();
+        assert!(!complete, "a stalled body must read as incomplete");
+        assert!(written < 1000);
+        assert_eq!(sink.len() as u64, written);
+        assert!(deadline.expired());
+        assert!(
+            started.elapsed() < Duration::from_millis(1400),
+            "the deadline, not the peer, must end the read"
+        );
+        client.join().unwrap();
     }
 
     #[test]

@@ -13,11 +13,15 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// The `null` literal.
     Null,
+    /// `true` / `false`.
     Bool(bool),
     /// All JSON numbers are kept as f64; integers round-trip exactly up to 2^53.
     Num(f64),
+    /// A string value.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
     /// Objects preserve insertion order via a parallel key list.
     Obj(JsonObj),
@@ -31,10 +35,13 @@ pub struct JsonObj {
 }
 
 impl JsonObj {
+    /// An empty object.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Set `key` to `value`; a re-inserted key keeps its original
+    /// position in the key order.
     pub fn insert(&mut self, key: impl Into<String>, value: impl Into<Json>) {
         let key = key.into();
         if !self.map.contains_key(&key) {
@@ -43,14 +50,17 @@ impl JsonObj {
         self.map.insert(key, value.into());
     }
 
+    /// Look a field up by key.
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.map.get(key)
     }
 
+    /// Whether the object has a field named `key`.
     pub fn contains_key(&self, key: &str) -> bool {
         self.map.contains_key(key)
     }
 
+    /// Remove and return a field (its key slot is dropped too).
     pub fn remove(&mut self, key: &str) -> Option<Json> {
         if let Some(v) = self.map.remove(key) {
             self.keys.retain(|k| k != key);
@@ -60,18 +70,22 @@ impl JsonObj {
         }
     }
 
+    /// Number of fields.
     pub fn len(&self) -> usize {
         self.keys.len()
     }
 
+    /// Whether the object has no fields.
     pub fn is_empty(&self) -> bool {
         self.keys.is_empty()
     }
 
+    /// Iterate `(key, value)` pairs in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &Json)> {
         self.keys.iter().map(move |k| (k, &self.map[k]))
     }
 
+    /// Iterate keys in insertion order.
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.keys.iter()
     }
@@ -88,6 +102,7 @@ impl FromIterator<(String, Json)> for JsonObj {
 }
 
 impl Json {
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -95,6 +110,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -102,6 +118,7 @@ impl Json {
         }
     }
 
+    /// The value as a u64, if it is a non-negative integer ≤ 2^53.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) => {
@@ -111,6 +128,7 @@ impl Json {
         }
     }
 
+    /// The value as an i64, if it is an integer with |n| ≤ 2^53.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Num(n) if n.fract() == 0.0 && n.abs() <= 2f64.powi(53) => Some(*n as i64),
@@ -118,10 +136,12 @@ impl Json {
         }
     }
 
+    /// The value as a usize (via [`as_u64`](Json::as_u64)).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
     }
 
+    /// The string slice, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -129,6 +149,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -136,6 +157,7 @@ impl Json {
         }
     }
 
+    /// The object, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&JsonObj> {
         match self {
             Json::Obj(o) => Some(o),
@@ -234,7 +256,9 @@ impl From<JsonObj> for Json {
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
 #[error("json parse error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset into the source text where parsing failed.
     pub pos: usize,
+    /// What the parser expected or found.
     pub msg: String,
 }
 

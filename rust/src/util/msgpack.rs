@@ -10,20 +10,30 @@ use std::collections::BTreeMap;
 /// A decoded MessagePack value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Mp {
+    /// The nil value.
     Nil,
+    /// A boolean.
     Bool(bool),
+    /// A signed integer (negative values decode here).
     Int(i64),
+    /// An unsigned integer (non-negative values decode here).
     UInt(u64),
+    /// A 32-bit float.
     F32(f32),
+    /// A 64-bit float.
     F64(f64),
+    /// A UTF-8 string.
     Str(String),
+    /// A raw binary blob.
     Bin(Vec<u8>),
+    /// An array of values.
     Arr(Vec<Mp>),
     /// String-keyed map (sufficient for Git-Theta payloads), ordered.
     Map(Vec<(String, Mp)>),
 }
 
 impl Mp {
+    /// The value as a u64 (accepts non-negative [`Mp::Int`]s too).
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Mp::UInt(v) => Some(*v),
@@ -32,6 +42,7 @@ impl Mp {
         }
     }
 
+    /// The value as an i64 (accepts [`Mp::UInt`]s that fit).
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Mp::Int(v) => Some(*v),
@@ -40,6 +51,7 @@ impl Mp {
         }
     }
 
+    /// The value as a string slice, if it is a [`Mp::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Mp::Str(s) => Some(s),
@@ -47,6 +59,7 @@ impl Mp {
         }
     }
 
+    /// The value as a byte slice, if it is a [`Mp::Bin`].
     pub fn as_bin(&self) -> Option<&[u8]> {
         match self {
             Mp::Bin(b) => Some(b),
@@ -54,6 +67,7 @@ impl Mp {
         }
     }
 
+    /// The value as a slice of elements, if it is an [`Mp::Arr`].
     pub fn as_arr(&self) -> Option<&[Mp]> {
         match self {
             Mp::Arr(a) => Some(a),
@@ -61,6 +75,7 @@ impl Mp {
         }
     }
 
+    /// Look up `key` in a [`Mp::Map`] (first match wins).
     pub fn get(&self, key: &str) -> Option<&Mp> {
         match self {
             Mp::Map(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -68,6 +83,7 @@ impl Mp {
         }
     }
 
+    /// Build a [`Mp::Map`] from `(key, value)` pairs.
     pub fn map_from(entries: Vec<(&str, Mp)>) -> Mp {
         Mp::Map(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
@@ -90,18 +106,26 @@ impl Mp {
     }
 }
 
+/// Why a msgpack decode failed (byte offsets index the input slice).
 #[derive(Debug, thiserror::Error)]
 pub enum MpError {
+    /// The input ended before the value it declared was complete.
     #[error("msgpack: truncated input at byte {0}")]
     Truncated(usize),
+    /// A tag byte outside the supported subset.
     #[error("msgpack: unknown or unsupported tag 0x{0:02x} at byte {1}")]
     BadTag(u8, usize),
+    /// A str payload that is not valid UTF-8.
     #[error("msgpack: invalid utf-8 string at byte {0}")]
     BadUtf8(usize),
+    /// A map key that is not a string (or a bin-map value that is not
+    /// a bin).
     #[error("msgpack: non-string map key at byte {0}")]
     BadKey(usize),
+    /// Bytes remained after the first complete value.
     #[error("msgpack: trailing bytes after value at byte {0}")]
     Trailing(usize),
+    /// Containers nested beyond the decoder's depth limit.
     #[error("msgpack: nesting too deep")]
     TooDeep,
 }

@@ -15,6 +15,8 @@ pub struct Pcg64 {
 const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
 
 impl Pcg64 {
+    /// Seed a generator. Equal seeds yield identical streams on every
+    /// platform (and match the JAX-side pool generator).
     pub fn new(seed: u64) -> Pcg64 {
         // SplitMix-style seeding to fill 128 bits of state from 64.
         let mut sm = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -32,6 +34,7 @@ impl Pcg64 {
         rng
     }
 
+    /// Next uniformly distributed 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self
             .state
@@ -46,6 +49,8 @@ impl Pcg64 {
         hi.wrapping_mul(lo)
     }
 
+    /// Next uniformly distributed 32-bit value (the high word of
+    /// [`next_u64`](Pcg64::next_u64)).
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }

@@ -106,10 +106,12 @@ impl TempDir {
         Ok(TempDir { path })
     }
 
+    /// The directory's path.
     pub fn path(&self) -> &Path {
         &self.path
     }
 
+    /// A path inside the directory.
     pub fn join(&self, rel: &str) -> PathBuf {
         self.path.join(rel)
     }

@@ -9,8 +9,8 @@ use git_theta::gitcore::object::Oid;
 use git_theta::gitcore::remote::RemoteSpec;
 use git_theta::gitcore::repo::Repository;
 use git_theta::lfs::{
-    batch, BatchResponse, ChainAdvert, ChainEntryAdvert, LfsRemote, LfsStore, PackStats,
-    Prefetcher, RemoteTransport, WireReport,
+    batch, classify, BatchResponse, ChainAdvert, ChainEntryAdvert, FailureClass, LfsRemote,
+    LfsStore, PackStats, Prefetcher, RemoteTransport, RetryPolicy, WireReport,
 };
 use git_theta::util::prop::{self, gens};
 use git_theta::util::rng::Pcg64;
@@ -387,6 +387,45 @@ fn chain_negotiation_parity_across_transports() {
         support::assert_stores_equal(dir.store(), flat.0.store());
         Ok(())
     });
+}
+
+/// Failure-classification parity: the *kind* of failure a caller sees
+/// must not depend on the transport. A missing object is fatal on both
+/// `DirRemote` and `HttpRemote` — so a backoff policy spends exactly
+/// one attempt on it on either channel, and no retry counters move.
+#[test]
+fn failure_classification_is_transport_agnostic() {
+    let td_dir = TempDir::new("classify-dir").unwrap();
+    let dir = LfsRemote::open(td_dir.path());
+    let fx = support::HttpFixture::new();
+    let td_staging = TempDir::new("classify-staging").unwrap();
+    let http = fx.direct_remote(td_staging.path());
+    let ghost = ghost_oids(1, 0xC1A5)[0];
+
+    let transports: [&dyn RemoteTransport; 2] = [&dir, &http];
+    for remote in transports {
+        let err = remote
+            .get_object(&ghost)
+            .expect_err("a ghost object cannot be served");
+        assert_eq!(
+            classify(&err),
+            FailureClass::Fatal,
+            "{}: a missing object must classify fatal, got {err:#}",
+            remote.describe()
+        );
+
+        // A fatal failure surfaces immediately: one attempt, no backoff.
+        batch::reset_stats();
+        let mut attempts = 0u32;
+        let run = RetryPolicy::default().run(|| {
+            attempts += 1;
+            remote.get_object(&ghost)
+        });
+        assert!(run.is_err());
+        assert_eq!(attempts, 1, "{}: fatal failures must not be retried", remote.describe());
+        assert_eq!(batch::stats().backoff_retries, 0);
+        assert_eq!(batch::stats().sheds, 0);
+    }
 }
 
 /// Commit/ref sync parity: the same history pushed to a directory and

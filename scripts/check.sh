@@ -91,6 +91,19 @@ test -f BENCH_scenario.json || {
     exit 1
 }
 
+# Smoke the chaos suite (default 4 actors x 3 objects, pinned seed):
+# overload the undersized hub until it sheds, cut a stalled upload with
+# the request budget, then converge an actor fleet through injected 503
+# bursts and a mid-upload stall. Exits nonzero unless stores converge
+# byte-identically, every fault fired, and shutdown drains clean; prints
+# the replay seed on entry.
+echo "==> bench chaos smoke"
+cargo run --release --quiet -- bench chaos
+test -f BENCH_chaos.json || {
+    echo "error: bench chaos did not write BENCH_chaos.json" >&2
+    exit 1
+}
+
 # Regression gate: BENCH_*.json counters vs the committed baseline
 # snapshot (scripts/bench_baseline.json). Counter metrics are exact
 # protocol invariants and fail the build when >20% worse; time metrics
