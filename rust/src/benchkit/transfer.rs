@@ -16,12 +16,17 @@
 //! against a from-scratch transfer (`BENCH_transfer.json` carries the
 //! ratio for the CI regression gate).
 //!
-//! The `+delta` lever measures the chain-aware wire protocol: pushing
-//! a fine-tune whose base model the remote already holds, flat
-//! (protocol 1, every object ships whole) vs chain-aware (the client
-//! advertises the chains, the server answers with held depths, and the
-//! pack ships delta records against the remote bases). The wire-bytes
-//! ratio and the round-trip count are locked in `bench_baseline.json`.
+//! The `+delta` lever measures the chain-aware wire protocol in both
+//! directions. Push: a fine-tune whose base model the remote already
+//! holds, flat (protocol 1, every object ships whole) vs chain-aware
+//! (the client advertises the chains, the server answers with held
+//! depths, and the pack ships delta records against the remote bases).
+//! Fetch: a clone that holds the shared base pulls the fine-tune, flat
+//! vs chain-aware (the client advertises the chains it holds, the
+//! server plans deltas against the client's bases — consulting its
+//! (base, target) plan cache — and the clone reconstructs locally). The
+//! wire-bytes ratios, the round-trip counts, and the plan-cache hit
+//! count are locked in `bench_baseline.json`.
 
 use super::time_once;
 use crate::gitcore::object::Oid;
@@ -156,18 +161,35 @@ pub struct DeltaSample {
     pub delta_objects: u64,
 }
 
-/// Push a fine-tune whose base model is already on the remote, once
-/// over the flat protocol and once chain-aware, and compare wire
-/// bytes. The fine-tune keeps the leading 3/4 of every group and
-/// re-trains the tail quarter (seed 43), the shape of a parameter-
-/// efficient update; both pushes cross a real localhost http server
-/// and the delta push's reconstructed objects are byte-verified
-/// against the sender's.
-pub fn run_delta_sample(groups: usize, elems: usize) -> Result<DeltaSample> {
-    use crate::lfs::transport::{ChainAdvert, ChainEntryAdvert};
+/// The fetch mirror of [`DeltaSample`]: wire cost of a clone that
+/// holds the shared base pulling the fine-tune, flat vs chain-aware.
+#[derive(Debug, Clone, Copy)]
+pub struct FetchDeltaSample {
+    /// Wire bytes of the flat (protocol-1) fetch of the fine-tune.
+    pub full_wire_bytes: u64,
+    /// Wire bytes of the chain-aware fetch of the same objects.
+    pub delta_wire_bytes: u64,
+    /// `delta_wire_bytes / full_wire_bytes` — the locked headline
+    /// (≤ 0.5 is the acceptance bar for a tail-quarter fine-tune).
+    pub ratio: f64,
+    /// Logical round trips of the chain-aware fetch (1 negotiation +
+    /// 1 pack — same budget as the flat path).
+    pub round_trips: u64,
+    /// Objects that arrived as delta records rather than full bodies.
+    pub delta_objects: u64,
+    /// Server plan-cache hits after a second clone fetched a superset
+    /// want: every (base, fine-tune) encode is answered from cache.
+    pub plan_cache_hits: u64,
+}
+
+/// Base + fine-tune payload pair shared by both `+delta` directions:
+/// the fine-tune keeps the leading 3/4 of every group and re-trains
+/// the tail quarter (seed 43) — the shape of a parameter-efficient
+/// update.
+fn fine_tune_payloads(groups: usize, elems: usize) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
     let bases = synth_group_payloads(groups, elems, 42);
     let fresh = synth_group_payloads(groups, elems, 43);
-    let tuned: Vec<Vec<u8>> = bases
+    let tuned = bases
         .iter()
         .zip(&fresh)
         .map(|(b, f)| {
@@ -177,6 +199,41 @@ pub fn run_delta_sample(groups: usize, elems: usize) -> Result<DeltaSample> {
             t
         })
         .collect();
+    (bases, tuned)
+}
+
+/// One two-entry chain advert per group: "the base is depth 1 of this
+/// chain; the fine-tune is its suffix".
+fn two_entry_chains(
+    base_oids: &[Oid],
+    tuned_oids: &[Oid],
+) -> Vec<Vec<transport::ChainEntryAdvert>> {
+    base_oids
+        .iter()
+        .zip(tuned_oids)
+        .map(|(b, t)| {
+            vec![
+                transport::ChainEntryAdvert {
+                    key: *b,
+                    oids: vec![*b],
+                },
+                transport::ChainEntryAdvert {
+                    key: *t,
+                    oids: vec![*t],
+                },
+            ]
+        })
+        .collect()
+}
+
+/// Push a fine-tune whose base model is already on the remote, once
+/// over the flat protocol and once chain-aware, and compare wire
+/// bytes. Both pushes cross a real localhost http server and the
+/// delta push's reconstructed objects are byte-verified against the
+/// sender's.
+pub fn run_delta_sample(groups: usize, elems: usize) -> Result<DeltaSample> {
+    use crate::lfs::transport::ChainAdvert;
+    let (bases, tuned) = fine_tune_payloads(groups, elems);
 
     let td_local = TempDir::new("xfer-delta-local")?;
     let local = LfsStore::open(td_local.path());
@@ -206,26 +263,9 @@ pub fn run_delta_sample(groups: usize, elems: usize) -> Result<DeltaSample> {
     ensure!(full.objects == groups, "flat delta-sample push incomplete");
     drop(server_full);
 
-    // Chain-aware push: one two-entry chain per group ("the base is
-    // depth 1 of this chain; the fine-tune is its suffix").
-    let chains: Vec<Vec<ChainEntryAdvert>> = base_oids
-        .iter()
-        .zip(&tuned_oids)
-        .map(|(b, t)| {
-            vec![
-                ChainEntryAdvert {
-                    key: *b,
-                    oids: vec![*b],
-                },
-                ChainEntryAdvert {
-                    key: *t,
-                    oids: vec![*t],
-                },
-            ]
-        })
-        .collect();
+    // Chain-aware push of the same objects.
     let adv = ChainAdvert {
-        chains,
+        chains: two_entry_chains(&base_oids, &tuned_oids),
         want: tuned_oids.clone(),
     };
     let (root_delta, server_delta, remote_delta, _stage_delta) = spawn_seeded("delta")?;
@@ -250,6 +290,106 @@ pub fn run_delta_sample(groups: usize, elems: usize) -> Result<DeltaSample> {
         ratio: deltaed.wire_bytes as f64 / (full.wire_bytes as f64).max(1.0),
         round_trips: stats.round_trips(),
         delta_objects: stats.delta_objects,
+    })
+}
+
+/// Fetch a fine-tune into clones that already hold the shared base,
+/// once flat and once chain-aware, against one http server holding
+/// both versions (the fresh-clone-with-base shape: `git-theta clone` a
+/// base checkpoint, then `fetch` a fine-tune branch). A third clone
+/// repeats the chain-aware fetch with a superset want so the server's
+/// advert memo misses and its (base, target) plan cache answers every
+/// re-planned encode.
+pub fn run_fetch_delta_sample(groups: usize, elems: usize) -> Result<FetchDeltaSample> {
+    use crate::lfs::transport::ChainAdvert;
+    let (bases, tuned) = fine_tune_payloads(groups, elems);
+
+    // One server holding base + fine-tune: the upstream everyone pulls.
+    let td_seed = TempDir::new("xfer-fdelta-seed")?;
+    let seed = LfsStore::open(td_seed.path());
+    let base_oids: Vec<Oid> = bases
+        .iter()
+        .map(|p| Ok(seed.put(p)?.0))
+        .collect::<Result<_>>()?;
+    let tuned_oids: Vec<Oid> = tuned
+        .iter()
+        .map(|p| Ok(seed.put(p)?.0))
+        .collect::<Result<_>>()?;
+    let td_root = TempDir::new("xfer-fdelta-root")?;
+    let server = LfsServer::spawn(td_root.path())?;
+    let td_up = TempDir::new("xfer-fdelta-up")?;
+    let upstream = HttpRemote::open(&server.url(), Some(td_up.path()))?;
+    let mut all = base_oids.clone();
+    all.extend(&tuned_oids);
+    batch::push_pack(&seed, &upstream, &all)?;
+
+    // Each clone starts with the base materialized locally.
+    let clone_with_base = |tag: &str| -> Result<(TempDir, LfsStore, HttpRemote, TempDir)> {
+        let td = TempDir::new(&format!("xfer-fdelta-{tag}"))?;
+        let store = LfsStore::open(td.path());
+        for p in &bases {
+            store.put(p)?;
+        }
+        let td_staging = TempDir::new(&format!("xfer-fdelta-{tag}-staging"))?;
+        let remote = HttpRemote::open(&server.url(), Some(td_staging.path()))?;
+        Ok((td, store, remote, td_staging))
+    };
+
+    // Flat fetch: the fine-tune arrives whole.
+    let (_td_flat, flat_store, flat_remote, _stage_flat) = clone_with_base("flat")?;
+    batch::reset_stats();
+    let flat = batch::fetch_pack(&flat_remote, &flat_store, &tuned_oids)?;
+    ensure!(flat.objects == groups, "flat fetch-delta sample incomplete");
+
+    // Chain-aware fetch of the same objects into a second clone.
+    let adv = ChainAdvert {
+        chains: two_entry_chains(&base_oids, &tuned_oids),
+        want: tuned_oids.clone(),
+    };
+    let (_td_chain, chain_store, chain_remote, _stage_chain) = clone_with_base("chain")?;
+    batch::reset_stats();
+    let deltaed = Prefetcher::default().fetch_with_chains(&chain_remote, &chain_store, &adv)?;
+    let stats = batch::stats();
+    ensure!(deltaed.objects == groups, "chain-aware fetch-delta sample incomplete");
+    // The clone must have reconstructed byte-identical objects from the
+    // delta records against its local bases.
+    for (oid, payload) in tuned_oids.iter().zip(&tuned) {
+        ensure!(
+            &chain_store.get(oid)? == payload,
+            "chain-aware fetch produced a corrupt object on the client"
+        );
+    }
+
+    // Third clone, superset want (one extra fresh object): the advert
+    // memo misses, the planner re-runs, and every (base, fine-tune)
+    // encode must come back from the plan cache instead of re-chunking.
+    let extra_payload = synth_group_payloads(1, elems, 44).remove(0);
+    let extra = seed.put(&extra_payload)?.0;
+    batch::push_pack(&seed, &upstream, &[extra])?;
+    let (_td_cache, cache_store, cache_remote, _stage_cache) = clone_with_base("cache")?;
+    let mut superset = tuned_oids.clone();
+    superset.push(extra);
+    let cache_adv = ChainAdvert {
+        chains: two_entry_chains(&base_oids, &tuned_oids),
+        want: superset,
+    };
+    let repeat = Prefetcher::default().fetch_with_chains(&cache_remote, &cache_store, &cache_adv)?;
+    ensure!(repeat.objects == groups + 1, "cache fetch-delta sample incomplete");
+    let metrics = server.metrics();
+    ensure!(
+        metrics.plan_cache_hits >= groups as u64,
+        "repeat fetch answered {} plan-cache hits, expected >= {groups}",
+        metrics.plan_cache_hits
+    );
+    drop(server);
+
+    Ok(FetchDeltaSample {
+        full_wire_bytes: flat.wire_bytes,
+        delta_wire_bytes: deltaed.wire_bytes,
+        ratio: deltaed.wire_bytes as f64 / (flat.wire_bytes as f64).max(1.0),
+        round_trips: stats.round_trips(),
+        delta_objects: stats.delta_objects,
+        plan_cache_hits: metrics.plan_cache_hits,
     })
 }
 
@@ -439,7 +579,7 @@ pub fn render_stream(sample: &StreamSample) -> String {
     )
 }
 
-/// Render the `+delta` chain-aware ablation row.
+/// Render the `+delta` chain-aware ablation row (push direction).
 pub fn render_delta(groups: usize, elems: usize, sample: &DeltaSample) -> String {
     format!(
         "+delta (fine-tune over shared base, {groups}x{elems}): full push {}, chain-aware \
@@ -449,6 +589,20 @@ pub fn render_delta(groups: usize, elems: usize, sample: &DeltaSample) -> String
         sample.ratio,
         sample.round_trips,
         sample.delta_objects,
+    )
+}
+
+/// Render the `+delta` fetch-direction ablation row.
+pub fn render_fetch_delta(groups: usize, elems: usize, sample: &FetchDeltaSample) -> String {
+    format!(
+        "+delta fetch (clone holding base, {groups}x{elems}): flat fetch {}, chain-aware \
+         fetch {} (ratio {:.2}), {} round trips, {} delta object(s), {} plan-cache hit(s)\n",
+        humansize::bytes(sample.full_wire_bytes),
+        humansize::bytes(sample.delta_wire_bytes),
+        sample.ratio,
+        sample.round_trips,
+        sample.delta_objects,
+        sample.plan_cache_hits,
     )
 }
 
@@ -465,9 +619,16 @@ pub fn render_resume(sample: &ResumeSample) -> String {
     )
 }
 
-/// Encode the `+delta` sample (with the configuration that produced
-/// it) as the `"delta"` object of `BENCH_transfer.json`.
-pub fn delta_to_json(groups: usize, elems: usize, sample: &DeltaSample) -> Json {
+/// Encode both `+delta` samples (with the configuration that produced
+/// them) as the `"delta"` object of `BENCH_transfer.json`. Push keys
+/// are unprefixed (the original schema); fetch keys carry a `fetch_`
+/// prefix so both directions' gates live under one object.
+pub fn delta_to_json(
+    groups: usize,
+    elems: usize,
+    sample: &DeltaSample,
+    fetch: &FetchDeltaSample,
+) -> Json {
     let mut d = JsonObj::new();
     d.insert("groups", groups);
     d.insert("elems", elems);
@@ -476,6 +637,12 @@ pub fn delta_to_json(groups: usize, elems: usize, sample: &DeltaSample) -> Json 
     d.insert("ratio", Json::Num(sample.ratio));
     d.insert("round_trips", sample.round_trips);
     d.insert("delta_objects", sample.delta_objects);
+    d.insert("fetch_full_wire_bytes", fetch.full_wire_bytes);
+    d.insert("fetch_delta_wire_bytes", fetch.delta_wire_bytes);
+    d.insert("fetch_ratio", Json::Num(fetch.ratio));
+    d.insert("fetch_round_trips", fetch.round_trips);
+    d.insert("fetch_delta_objects", fetch.delta_objects);
+    d.insert("plan_cache_hits", fetch.plan_cache_hits);
     Json::Obj(d)
 }
 
@@ -546,6 +713,8 @@ fn run_delta_cli(args: &[String]) -> Result<()> {
     let elems = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(DELTA_ELEMS);
     let sample = run_delta_sample(groups, elems)?;
     print!("{}", render_delta(groups, elems, &sample));
+    let fetch = run_fetch_delta_sample(groups, elems)?;
+    print!("{}", render_fetch_delta(groups, elems, &fetch));
     let path = std::path::PathBuf::from("BENCH_transfer.json");
     let mut root = match std::fs::read_to_string(&path)
         .ok()
@@ -558,7 +727,7 @@ fn run_delta_cli(args: &[String]) -> Result<()> {
             o
         }
     };
-    root.insert("delta", delta_to_json(groups, elems, &sample));
+    root.insert("delta", delta_to_json(groups, elems, &sample, &fetch));
     let path = super::write_bench_json("transfer", Json::Obj(root))?;
     println!("wrote {}", path.display());
     Ok(())
@@ -589,11 +758,13 @@ pub fn run_transfer_cli(args: &[String]) -> Result<()> {
     print!("{}", render_stream(&stream));
     let delta = run_delta_sample(DELTA_GROUPS, DELTA_ELEMS)?;
     print!("{}", render_delta(DELTA_GROUPS, DELTA_ELEMS, &delta));
+    let fetch = run_fetch_delta_sample(DELTA_GROUPS, DELTA_ELEMS)?;
+    print!("{}", render_fetch_delta(DELTA_GROUPS, DELTA_ELEMS, &fetch));
     let mut root = match runs_to_json(groups, elems, &runs, &resume, &stream) {
         Json::Obj(o) => o,
         other => anyhow::bail!("runs_to_json produced a non-object: {other:?}"),
     };
-    root.insert("delta", delta_to_json(DELTA_GROUPS, DELTA_ELEMS, &delta));
+    root.insert("delta", delta_to_json(DELTA_GROUPS, DELTA_ELEMS, &delta, &fetch));
     let path = super::write_bench_json("transfer", Json::Obj(root))?;
     println!("wrote {}", path.display());
     Ok(())
@@ -667,6 +838,24 @@ mod tests {
             s.ratio < 0.5,
             "delta push ratio {} must stay under half the full push",
             s.ratio
+        );
+    }
+
+    #[test]
+    fn fetch_delta_sample_undercuts_half_and_hits_the_plan_cache() {
+        // Small config for test speed; the CLI runs the locked 64x8192.
+        let s = run_fetch_delta_sample(8, 2048).unwrap();
+        assert_eq!(s.delta_objects, 8, "every fine-tuned group should arrive as a delta");
+        assert_eq!(s.round_trips, 2, "chains must ride the one negotiation + one pack");
+        assert!(
+            s.ratio < 0.5,
+            "delta fetch ratio {} must stay under half the flat fetch",
+            s.ratio
+        );
+        assert!(
+            s.plan_cache_hits >= 8,
+            "superset re-fetch should hit the plan cache, got {}",
+            s.plan_cache_hits
         );
     }
 

@@ -411,13 +411,16 @@ fn cmd_fetch(args: &[String]) -> Result<()> {
 
     // Prefetch every LFS object the fetched tip references — model
     // metadata chains and plain LFS pointers alike — in one pack, so a
-    // later checkout smudges entirely from the local store. Over an
-    // http remote an interrupted pack resumes on the next fetch.
+    // later checkout smudges entirely from the local store. The advert
+    // carries the tip's update chains, so a chain-aware remote ships
+    // only missing suffixes, as deltas against bases this clone
+    // already holds. Over an http remote an interrupted pack resumes
+    // on the next fetch.
     let tree = repo.odb().read_tree(&repo.odb().read_commit(&tip)?.tree)?;
-    let oids = crate::theta::hooks::referenced_lfs_oids(&repo, &tree)?;
+    let adv = crate::theta::hooks::fetch_advert(&repo, &tree)?;
     let store = crate::lfs::LfsStore::open(repo.theta_dir());
     let remote = crate::lfs::open_transport(&spec, Some(repo.theta_dir()))?;
-    let summary = crate::lfs::fetch_pack(remote.as_ref(), &store, &oids)?;
+    let summary = crate::lfs::fetch_pack_chains(remote.as_ref(), &store, &adv)?;
     if summary.unavailable > 0 {
         eprintln!(
             "warning: remote is missing {} referenced object(s); \

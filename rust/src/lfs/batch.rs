@@ -17,14 +17,18 @@
 //! several packs processed concurrently (bounded memory, overlapping
 //! compression with fan-in).
 //!
-//! Chain-aware pushes ([`Prefetcher::push_with_chains`]) extend the
-//! single negotiation with chain advertisements derived from group
-//! metadata: the remote answers how deep a prefix of each chain it
-//! already holds, and the planner ships suffix objects as
-//! content-defined deltas against those proven bases (or against a
-//! shared base travelling in the same pack). Every fallback — no
-//! chains, `THETA_NEGOTIATE=flat`, a chain-oblivious peer — degrades
-//! to wire traffic byte-identical to the flat protocol.
+//! Chain-aware transfers extend the single negotiation with chain
+//! advertisements derived from group metadata, in **both directions**:
+//! on push ([`Prefetcher::push_with_chains`]) the remote answers how
+//! deep a prefix of each chain it already holds and the planner ships
+//! suffix objects as content-defined deltas against those proven bases
+//! (or against a shared base travelling in the same pack); on fetch
+//! ([`Prefetcher::fetch_with_chains`]) the client advertises the
+//! chains it holds prefixes of and the *responder* plans the deltas,
+//! shipping the wanted suffix against bases the advert proves the
+//! client can resolve. Every fallback — no chains,
+//! `THETA_NEGOTIATE=flat`, a chain-oblivious peer on either side —
+//! degrades to wire traffic byte-identical to the flat protocol.
 //!
 //! Every operation updates **thread-local** [`TransferStats`] counters,
 //! so tests and benchmarks can assert on round trips and wire bytes
@@ -364,6 +368,79 @@ impl Prefetcher {
         Ok(accumulate(unavailable, &moved))
     }
 
+    /// Chain-aware download: negotiate once with chain advertisements,
+    /// then fetch each shard through
+    /// [`RemoteTransport::fetch_pack_with_chains`] so the responder can
+    /// ship suffix objects as deltas against bases this client holds.
+    ///
+    /// The fallback ladder mirrors [`Prefetcher::push_with_chains`]:
+    /// empty chains or a forced flat negotiation take
+    /// [`Prefetcher::fetch`] verbatim; a chain-oblivious remote
+    /// (version skew) answers `chain_aware: false` and every shard
+    /// moves as a flat pack; and a responder that plans no worthwhile
+    /// deltas ships a byte-identical version-1 pack. Like `fetch`, the
+    /// want set is trimmed to locally missing oids first — which is
+    /// also what lets the responder derive this client's held chain
+    /// depths from the advert alone.
+    pub fn fetch_with_chains(
+        &self,
+        remote: &dyn RemoteTransport,
+        local: &LfsStore,
+        adv: &ChainAdvert,
+    ) -> Result<TransferSummary> {
+        if adv.chains.is_empty() || flat_negotiation() {
+            return self.fetch(remote, local, &adv.want);
+        }
+        let mut need: Vec<Oid> = adv
+            .want
+            .iter()
+            .filter(|o| !local.contains(o))
+            .copied()
+            .collect();
+        need.sort();
+        need.dedup();
+        if need.is_empty() {
+            return Ok(TransferSummary::default());
+        }
+        let mut adv = adv.clone();
+        adv.want = need;
+        let neg = self.retry.run(|| remote.negotiate_chains(&adv))?;
+        let shards = self.shard_sized(&neg.batch.present, &neg.batch.present_sizes);
+        let inner = if shards.len() > 1 { 1 } else { self.threads };
+        if !neg.chain_aware {
+            let per_shard = par::try_par_map(
+                &shards,
+                self.threads.min(shards.len().max(1)),
+                |_, shard| -> Result<(pack::PackStats, WireReport)> {
+                    self.retry.run(|| remote.fetch_pack_into(shard, local, inner))
+                },
+            )?;
+            return Ok(accumulate(neg.batch.missing.len(), &per_shard));
+        }
+        let per_shard = par::try_par_map(
+            &shards,
+            self.threads.min(shards.len().max(1)),
+            |_, shard| -> Result<(pack::PackStats, WireReport)> {
+                // Chains travel whole with every shard (they are cheap
+                // annotations); only the want set is shard-scoped.
+                let shard_adv = ChainAdvert {
+                    chains: adv.chains.clone(),
+                    want: shard.clone(),
+                };
+                // A retried shard re-addresses the same deterministic
+                // pack and rides byte-range resume.
+                self.retry
+                    .run(|| remote.fetch_pack_with_chains(&shard_adv, local, inner))
+            },
+        )?;
+        // The apply side counted every delta record it resolved; fold
+        // that onto the thread's counters (the push path counts from
+        // its plan instead — both land in the same field).
+        let delta_objects: u64 = per_shard.iter().map(|(s, _)| s.delta_objects as u64).sum();
+        record(|t| t.delta_objects += delta_objects);
+        Ok(accumulate(neg.batch.missing.len(), &per_shard))
+    }
+
     /// Greedily split `oids` into shards respecting both the object and
     /// the raw-byte cap, with sizes supplied per oid.
     fn shard_pairs(&self, oids: &[Oid], size_of: impl Fn(usize, &Oid) -> u64) -> Vec<Vec<Oid>> {
@@ -411,7 +488,7 @@ impl Prefetcher {
 /// demotes the pair to a full record if base and target land in
 /// different shards). A chain-oblivious peer gets no pairings at all,
 /// so version skew can never produce a pack the receiver cannot read.
-fn chain_bases(
+pub(crate) fn chain_bases(
     adv: &ChainAdvert,
     neg: &ChainNegotiation,
     send: &[Oid],
@@ -487,6 +564,17 @@ pub fn fetch_pack(
     want: &[Oid],
 ) -> Result<TransferSummary> {
     Prefetcher::default().fetch(remote, local, want)
+}
+
+/// Fetch an advert's want set with the default [`Prefetcher`],
+/// advertising the client's held chains so a chain-aware remote ships
+/// missing suffixes as deltas against bases already in `local`.
+pub fn fetch_pack_chains(
+    remote: &dyn RemoteTransport,
+    local: &LfsStore,
+    adv: &ChainAdvert,
+) -> Result<TransferSummary> {
+    Prefetcher::default().fetch_with_chains(remote, local, adv)
 }
 
 /// Push `oids` to `remote` with the default [`Prefetcher`].

@@ -53,29 +53,25 @@ use std::time::Duration;
 /// transfers are safe: their claims are far younger than this.
 const STAGING_TMP_TTL: Duration = Duration::from_secs(60 * 60);
 
-/// Admit a verified claim file into `dest`, removing it on success.
-/// If admission fails (disk full, a record failing its oid re-hash),
-/// the claim is handed back to the shared resume slot instead of
-/// stranded under its unique name: the downloaded bytes are good, and
-/// the retry must not re-download a multi-GB pack because a local
-/// store write failed.
-fn admit_or_keep(
+/// Admit a verified claim file into `dest`, removing it on success
+/// **and** on failure. A claim that passed `verify_pack_file` but then
+/// fails admission (a record failing its oid re-hash, a delta record
+/// whose store base this client lacks, disk full) must not be handed
+/// back to the shared resume slot: a full-length partial there is
+/// re-verified and re-admitted on the next fetch of the same pack id,
+/// so a deterministically bad pack would fail the same way forever —
+/// the poisoned-resume loop. Deleting it costs one clean re-download
+/// and lets the retry start from offset 0 (and, for a delta pack, lets
+/// the caller renegotiate for a flat one).
+fn admit_and_consume(
     claim: &Path,
-    shared: &Path,
     dest: &LfsStore,
     threads: usize,
     check: &pack::PackCheck,
 ) -> Result<PackStats> {
-    match pack::unpack_verified(claim, dest, threads, check) {
-        Ok(stats) => {
-            let _ = std::fs::remove_file(claim);
-            Ok(stats)
-        }
-        Err(e) => {
-            let _ = std::fs::rename(claim, shared);
-            Err(e)
-        }
-    }
+    let result = pack::unpack_verified(claim, dest, threads, check);
+    let _ = std::fs::remove_file(claim);
+    result
 }
 
 /// Drop the first `n` bytes of a file in place (rewrite via a unique
@@ -95,10 +91,13 @@ fn strip_file_prefix(path: &Path, n: u64) -> Result<()> {
 
 /// Type an unexpected response status for the retry layer: a `503` is
 /// a shed (its `Retry-After` hint travels with the error), anything
-/// else is fatal — the server answered, it just said no.
+/// else is fatal — the server answered, it just said no. Header
+/// parsing is delegated to [`retry::parse_retry_after`], which maps
+/// HTTP-date and garbage values to `None` (→ default backoff) instead
+/// of a zero-length pause.
 fn status_error(status: u16, retry_after: Option<&str>, what: String) -> anyhow::Error {
     if status == 503 {
-        let after = retry_after.and_then(|v| v.parse::<u64>().ok());
+        let after = retry_after.and_then(super::retry::parse_retry_after);
         anyhow::Error::new(WireError::shed(after, what))
     } else {
         anyhow::Error::new(WireError::fatal(what))
@@ -247,6 +246,9 @@ impl HttpRemote {
                         objects: json.get("objects").and_then(|v| v.as_usize()).unwrap_or(0),
                         raw_bytes: json.get("raw_bytes").and_then(|v| v.as_u64()).unwrap_or(0),
                         packed_bytes: total,
+                        // Push-side delta counting comes from the plan
+                        // (the receiver's count stays server-side).
+                        delta_objects: 0,
                     };
                     let report = WireReport {
                         wire_bytes: wire,
@@ -285,6 +287,141 @@ impl HttpRemote {
             "pack upload to {} kept conflicting on its resume offset",
             self.url()
         )
+    }
+
+    /// POST `/packs` with an arbitrary request body (flat want list or
+    /// protocol-2 chain advert), then stream the advertised pack down
+    /// with byte-range resume, verify it, and admit it into `dest`.
+    /// The server assembles (or reuses) the pack and reports its
+    /// identity + size; identical requests yield identical ids, so a
+    /// retry after an interruption re-addresses the same pack.
+    fn fetch_pack_request(
+        &self,
+        body: Vec<u8>,
+        dest: &LfsStore,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        let resp = self
+            .client
+            .send(&Request::new("POST", "/packs").body(body))?;
+        if resp.status != 200 {
+            return Err(status_error(
+                resp.status,
+                resp.get_header("retry-after"),
+                format!(
+                    "{}: POST /packs -> {}: {}",
+                    self.url(),
+                    resp.status,
+                    String::from_utf8_lossy(&resp.body)
+                ),
+            ));
+        }
+        let json = parse_json(&resp)?;
+        let id = json
+            .get("id")
+            .and_then(|v| v.as_str())
+            .context("/packs response missing id")?
+            .to_string();
+        let total = json
+            .get("size")
+            .and_then(|v| v.as_u64())
+            .context("/packs response missing size")?;
+
+        // Claim any persisted resume state by *renaming* the shared
+        // `lfs/incoming/<id>` file to a path unique to this call:
+        // concurrent fetches of the same pack id must never
+        // append-interleave into one file. Exactly one claimant wins
+        // the rename; losers simply start from byte zero.
+        let (shared, _tmp_guard) = self.staging_path("lfs/incoming", &id)?;
+        let claim = tmp::unique_sibling(&shared);
+        let _ = std::fs::rename(&shared, &claim);
+        let mut attempt_full = false;
+        loop {
+            if attempt_full {
+                let _ = std::fs::remove_file(&claim);
+            }
+            let mut offset = std::fs::metadata(&claim).map(|m| m.len()).unwrap_or(0);
+            if offset > total {
+                let _ = std::fs::remove_file(&claim);
+                offset = 0;
+            }
+            if offset == total {
+                // A previous run persisted the complete pack just
+                // before dying; verify and use it without touching the
+                // wire. A full-length partial that fails verification
+                // is dropped — resuming from it would just ask the
+                // server for an empty tail.
+                match pack::verify_pack_file(&claim) {
+                    Ok(check) if check.id == id => {
+                        let stats = admit_and_consume(&claim, dest, threads, &check)?;
+                        let report = WireReport {
+                            wire_bytes: 0,
+                            resumed_bytes: total,
+                        };
+                        return Ok((stats, report));
+                    }
+                    _ => {}
+                }
+                let _ = std::fs::remove_file(&claim);
+                offset = 0;
+            }
+
+            let (status, streamed, complete) = self.stream_pack_body(&id, offset, &claim)?;
+            if status == 200 && offset > 0 {
+                // The server ignored our byte range and sent the pack
+                // from the top; drop our stale prefix so the file is a
+                // clean prefix of the full body (resume math included),
+                // and stop claiming resume savings we didn't get.
+                strip_file_prefix(&claim, offset)?;
+                offset = 0;
+            }
+            if !complete {
+                // Mid-flight cut: every byte that made it across is in
+                // the claim file; hand it back to the shared resume
+                // slot so a retry — this process or the next — asks
+                // only for the missing tail. (Without a staging dir
+                // the slot dies with its temp dir.)
+                let _ = std::fs::rename(&claim, &shared);
+                // Typed as a cut: the retry layer resumes from the
+                // persisted partial instead of treating this as final.
+                return Err(anyhow::Error::new(WireError::cut(format!(
+                    "pack download from {} interrupted after {} of {total} bytes{}",
+                    self.url(),
+                    offset + streamed,
+                    if self.staging.is_some() {
+                        " (partial persisted; a retry resumes from it)"
+                    } else {
+                        ""
+                    }
+                ))));
+            }
+            let have = std::fs::metadata(&claim).map(|m| m.len()).unwrap_or(0);
+            if have == total {
+                if let Ok(check) = pack::verify_pack_file(&claim) {
+                    if check.id == id {
+                        let stats = admit_and_consume(&claim, dest, threads, &check)?;
+                        // The server-side pack cache is deliberately left in
+                        // place: a concurrent clone of the same tip addresses
+                        // the same content-hashed id, and deleting it here
+                        // would 404 that transfer mid-flight. Stale outgoing
+                        // packs are reaped by the server's age-based gc.
+                        let report = WireReport {
+                            wire_bytes: streamed,
+                            resumed_bytes: offset,
+                        };
+                        return Ok((stats, report));
+                    }
+                }
+            }
+            // Verification failed: a stale partial spliced onto a
+            // rebuilt pack, or in-flight corruption. Drop local state
+            // and retry exactly once from scratch.
+            let _ = std::fs::remove_file(&claim);
+            if attempt_full || offset == 0 {
+                bail!("pack {id} from {} failed integrity verification", self.url());
+            }
+            attempt_full = true;
+        }
     }
 }
 
@@ -389,130 +526,21 @@ impl RemoteTransport for HttpRemote {
         dest: &LfsStore,
         threads: usize,
     ) -> Result<(PackStats, WireReport)> {
-        // The server assembles (or reuses) the pack and reports its
-        // identity + size; identical want sets yield identical ids, so
-        // a retry after an interruption re-addresses the same pack.
-        let resp = self
-            .client
-            .send(&Request::new("POST", "/packs").body(want_body(oids)))?;
-        if resp.status != 200 {
-            return Err(status_error(
-                resp.status,
-                resp.get_header("retry-after"),
-                format!(
-                    "{}: POST /packs -> {}: {}",
-                    self.url(),
-                    resp.status,
-                    String::from_utf8_lossy(&resp.body)
-                ),
-            ));
-        }
-        let json = parse_json(&resp)?;
-        let id = json
-            .get("id")
-            .and_then(|v| v.as_str())
-            .context("/packs response missing id")?
-            .to_string();
-        let total = json
-            .get("size")
-            .and_then(|v| v.as_u64())
-            .context("/packs response missing size")?;
+        self.fetch_pack_request(want_body(oids), dest, threads)
+    }
 
-        // Claim any persisted resume state by *renaming* the shared
-        // `lfs/incoming/<id>` file to a path unique to this call:
-        // concurrent fetches of the same pack id must never
-        // append-interleave into one file. Exactly one claimant wins
-        // the rename; losers simply start from byte zero.
-        let (shared, _tmp_guard) = self.staging_path("lfs/incoming", &id)?;
-        let claim = tmp::unique_sibling(&shared);
-        let _ = std::fs::rename(&shared, &claim);
-        let mut attempt_full = false;
-        loop {
-            if attempt_full {
-                let _ = std::fs::remove_file(&claim);
-            }
-            let mut offset = std::fs::metadata(&claim).map(|m| m.len()).unwrap_or(0);
-            if offset > total {
-                let _ = std::fs::remove_file(&claim);
-                offset = 0;
-            }
-            if offset == total {
-                // A previous run persisted the complete pack just
-                // before dying; verify and use it without touching the
-                // wire. A full-length partial that fails verification
-                // is dropped — resuming from it would just ask the
-                // server for an empty tail.
-                match pack::verify_pack_file(&claim) {
-                    Ok(check) if check.id == id => {
-                        let stats = admit_or_keep(&claim, &shared, dest, threads, &check)?;
-                        let report = WireReport {
-                            wire_bytes: 0,
-                            resumed_bytes: total,
-                        };
-                        return Ok((stats, report));
-                    }
-                    _ => {}
-                }
-                let _ = std::fs::remove_file(&claim);
-                offset = 0;
-            }
-
-            let (status, streamed, complete) = self.stream_pack_body(&id, offset, &claim)?;
-            if status == 200 && offset > 0 {
-                // The server ignored our byte range and sent the pack
-                // from the top; drop our stale prefix so the file is a
-                // clean prefix of the full body (resume math included),
-                // and stop claiming resume savings we didn't get.
-                strip_file_prefix(&claim, offset)?;
-                offset = 0;
-            }
-            if !complete {
-                // Mid-flight cut: every byte that made it across is in
-                // the claim file; hand it back to the shared resume
-                // slot so a retry — this process or the next — asks
-                // only for the missing tail. (Without a staging dir
-                // the slot dies with its temp dir.)
-                let _ = std::fs::rename(&claim, &shared);
-                // Typed as a cut: the retry layer resumes from the
-                // persisted partial instead of treating this as final.
-                return Err(anyhow::Error::new(WireError::cut(format!(
-                    "pack download from {} interrupted after {} of {total} bytes{}",
-                    self.url(),
-                    offset + streamed,
-                    if self.staging.is_some() {
-                        " (partial persisted; a retry resumes from it)"
-                    } else {
-                        ""
-                    }
-                ))));
-            }
-            let have = std::fs::metadata(&claim).map(|m| m.len()).unwrap_or(0);
-            if have == total {
-                if let Ok(check) = pack::verify_pack_file(&claim) {
-                    if check.id == id {
-                        let stats = admit_or_keep(&claim, &shared, dest, threads, &check)?;
-                        // The server-side pack cache is deliberately left in
-                        // place: a concurrent clone of the same tip addresses
-                        // the same content-hashed id, and deleting it here
-                        // would 404 that transfer mid-flight. Stale outgoing
-                        // packs are reaped by the server's age-based gc.
-                        let report = WireReport {
-                            wire_bytes: streamed,
-                            resumed_bytes: offset,
-                        };
-                        return Ok((stats, report));
-                    }
-                }
-            }
-            // Verification failed: a stale partial spliced onto a
-            // rebuilt pack, or in-flight corruption. Drop local state
-            // and retry exactly once from scratch.
-            let _ = std::fs::remove_file(&claim);
-            if attempt_full || offset == 0 {
-                bail!("pack {id} from {} failed integrity verification", self.url());
-            }
-            attempt_full = true;
-        }
+    fn fetch_pack_with_chains(
+        &self,
+        adv: &ChainAdvert,
+        dest: &LfsStore,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        // Same endpoint, protocol-2 body: the advert carries both the
+        // want set and the chains this client holds prefixes of. A
+        // chain-aware server plans deltas against those bases; an older
+        // server reads only `want` and builds a flat v1 pack — the
+        // claim/resume/verify loop below is identical either way.
+        self.fetch_pack_request(transport::chain_advert_body(adv), dest, threads)
     }
 
     fn send_pack_from(

@@ -14,12 +14,16 @@
 //! byte-range resume of interrupted transfers. Packs spill to disk and
 //! move in bounded chunks over pooled keep-alive connections, so peak
 //! memory scales with the largest object, not the pack, and a
-//! multi-request push or fetch pays one TCP connect. Pushes that carry
-//! model update chains advertise them ([`transport::ChainAdvert`]) in
-//! the same negotiation round trip; a chain-aware receiver answers
-//! with its held prefix depths and the pack ships suffix objects as
-//! [`delta`] records against bases the receiver holds (pack format v2
-//! — the flat protocol remains the version-skew fallback). Failures
+//! multi-request push or fetch pays one TCP connect. Transfers that
+//! carry model update chains advertise them
+//! ([`transport::ChainAdvert`]) in the same negotiation round trip, in
+//! both directions: on push the receiver answers its held prefix
+//! depths and the sender ships suffix objects as [`delta`] records
+//! against bases the receiver holds; on fetch the client advertises
+//! the chains it holds and the responder plans the deltas — consulting
+//! a (base, target) [`pack::PlanCache`] so repeated fine-tune fetches
+//! of one base skip the CDC chunking (pack format v2 — the flat
+//! protocol remains the version-skew fallback either way). Failures
 //! are typed and classified ([`retry`]): a shed (`503 + Retry-After`),
 //! cut, or timeout is retryable under a seeded, capped backoff policy
 //! that rides byte-range resume; a `4xx` or checksum mismatch is
@@ -47,22 +51,26 @@ pub mod server;
 pub mod store;
 pub mod transport;
 
-pub use batch::{fetch_pack, push_pack, BatchResponse, Prefetcher, TransferStats, TransferSummary};
+pub use batch::{
+    fetch_pack, fetch_pack_chains, push_pack, BatchResponse, Prefetcher, TransferStats,
+    TransferSummary,
+};
 pub use delta::{apply_delta, encode_delta};
 pub use filter::{register_lfs, LfsFilter, LfsHooks};
 pub use http::HttpRemote;
 pub use pack::{
-    build_pack, pack_id, pack_index, plan_deltas, unpack_file, unpack_into, unpack_verified,
-    verify_pack_file, write_delta_pack_file, write_pack_file, BuiltPack, DeltaPlan, DeltaRecord,
-    PackCheck, PackStats, PackWriter, PACK_VERSION_DELTA,
+    build_pack, full_record_cost, pack_id, pack_index, plan_deltas, plan_deltas_cached,
+    unpack_file, unpack_into, unpack_verified, verify_pack_file, write_delta_pack_file,
+    write_pack_file, BuiltPack, DeltaPlan, DeltaRecord, PackCheck, PackStats, PackWriter,
+    PlanCache, PACK_VERSION_DELTA,
 };
 pub use server::gc_stale_packs;
 pub use pointer::Pointer;
 pub use remote::{sync_to_remote, DirRemote, LfsRemote};
-pub use retry::{classify, FailureClass, RetryPolicy, WireError};
+pub use retry::{classify, parse_retry_after, FailureClass, RetryPolicy, WireError};
 pub use server::{LfsServer, MetricsSnapshot, ServeOptions};
 pub use store::LfsStore;
 pub use transport::{
-    answer_chains, open_transport, upload_with_chains, ChainAdvert, ChainEntryAdvert,
-    ChainNegotiation, RemoteTransport, WireReport,
+    answer_chains, download_with_chains, open_transport, upload_with_chains, ChainAdvert,
+    ChainEntryAdvert, ChainNegotiation, RemoteTransport, WireReport,
 };

@@ -59,6 +59,7 @@ use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::io::{BufReader, Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 /// First four bytes of every pack.
 pub const PACK_MAGIC: &[u8; 4] = b"THP1";
@@ -112,6 +113,11 @@ pub struct PackStats {
     pub raw_bytes: u64,
     /// Bytes of the pack blob itself (what moves over the wire).
     pub packed_bytes: u64,
+    /// Objects that arrived as delta records ([`KIND_REF`] /
+    /// [`KIND_STORE`]) rather than whole payloads. Counted on the
+    /// *apply* side, so a receiver can report delta savings without
+    /// trusting the sender's plan.
+    pub delta_objects: usize,
 }
 
 /// Raw-byte window for the streaming encode/decode batches: how many
@@ -292,6 +298,25 @@ pub struct DeltaRecord {
     pub ops_comp: Vec<u8>,
 }
 
+impl DeltaRecord {
+    /// Wire bytes this record occupies in a v2 pack: the 48-byte
+    /// record header, the 32-byte base oid, and the compressed ops.
+    pub fn wire_cost(&self) -> u64 {
+        48 + 32 + self.ops_comp.len() as u64
+    }
+}
+
+/// Wire bytes `oid` would occupy as a full record: the 48-byte header
+/// plus its payload compressed at the pack's zstd level. The delta
+/// planner's worth-it gate promises every kept delta undercuts this
+/// *compressed* cost by at least 10% — never a comparison against the
+/// raw object length; `tests/pack_format.rs` audits that promise.
+pub fn full_record_cost(store: &LfsStore, oid: &Oid) -> Result<u64> {
+    let raw = store.get(oid)?;
+    let comp = zstd::bulk::compress(&raw, PACK_ZSTD_LEVEL).context("pack compress")?;
+    Ok(48 + comp.len() as u64)
+}
+
 /// A pack plan: which objects ship whole and which ship as deltas.
 #[derive(Debug, Clone, Default)]
 pub struct DeltaPlan {
@@ -330,6 +355,91 @@ pub fn plan_deltas(
     base_of: &HashMap<Oid, (Oid, u8)>,
     threads: usize,
 ) -> Result<DeltaPlan> {
+    plan_deltas_cached(store, oids, base_of, threads, None)
+}
+
+/// Outcome of one content-addressed `(base, target)` delta encode,
+/// memoized by [`PlanCache`]. A demotion (the gate said "ship whole")
+/// is cached too — re-running CDC just to re-reject is the expensive
+/// half of repeated fine-tune fetches.
+#[derive(Debug, Clone)]
+enum CachedEncode {
+    /// The worth-it gate demoted this pairing to a full record.
+    Demoted,
+    /// The compressed ops stream and the target's raw length.
+    Delta { raw_len: u64, ops_comp: Arc<Vec<u8>> },
+}
+
+/// Cap on memoized encodes. Entries are tiny relative to the tensors
+/// they describe (just the compressed ops), but a long-lived server
+/// must still bound them; past the cap new encodes simply aren't
+/// cached. 1024 entries comfortably covers the chains of the hottest
+/// bases a hub serves between restarts.
+const PLAN_CACHE_MAX_ENTRIES: usize = 1024;
+
+/// Server-side delta-base plan cache, keyed by `(base oid, target oid)`.
+///
+/// The CDC encode + worth-it gate in [`plan_deltas`] depend only on the
+/// *contents* of the base and target objects, and oids are content
+/// hashes — so a memoized outcome can never go stale; eviction is
+/// purely a capacity concern (entries past [`PLAN_CACHE_MAX_ENTRIES`]
+/// are not retained). Context-dependent demotions (base missing from
+/// the pack, an object serving as another's base) are decided *before*
+/// the cache is consulted and are never memoized.
+///
+/// Hit/miss counters feed `GET /metrics` on the HTTP server, so the
+/// amortization claim (repeated fine-tune fetches of one base don't
+/// re-run chunking) is observable, not assumed.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    entries: std::sync::Mutex<HashMap<(Oid, Oid), CachedEncode>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl PlanCache {
+    /// A fresh, empty cache.
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Encodes served from memory instead of re-running CDC chunking.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Encodes that had to run (and were then memoized, capacity
+    /// permitting).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn get(&self, key: &(Oid, Oid)) -> Option<CachedEncode> {
+        let found = self.entries.lock().unwrap().get(key).cloned();
+        let counter = if found.is_some() { &self.hits } else { &self.misses };
+        counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        found
+    }
+
+    fn put(&self, key: (Oid, Oid), value: CachedEncode) {
+        let mut entries = self.entries.lock().unwrap();
+        if entries.len() < PLAN_CACHE_MAX_ENTRIES {
+            entries.insert(key, value);
+        }
+    }
+}
+
+/// [`plan_deltas`] with an optional [`PlanCache`]: per `(base, target)`
+/// pair the CDC encode (or its demotion) is served from the cache when
+/// present, so a responder replanning the same fine-tune suffix for
+/// every fresh clone pays the chunking cost once.
+pub fn plan_deltas_cached(
+    store: &LfsStore,
+    oids: &[Oid],
+    base_of: &HashMap<Oid, (Oid, u8)>,
+    threads: usize,
+    cache: Option<&PlanCache>,
+) -> Result<DeltaPlan> {
     let mut unique = oids.to_vec();
     unique.sort();
     unique.dedup();
@@ -348,6 +458,21 @@ pub fn plan_deltas(
         {
             return Ok(None);
         }
+        // Past the context-dependent demotions above, the encode is a
+        // pure function of the two objects' contents — exactly what
+        // the cache memoizes.
+        if let Some(hit) = cache.and_then(|c| c.get(&(base, *oid))) {
+            return Ok(match hit {
+                CachedEncode::Demoted => None,
+                CachedEncode::Delta { raw_len, ops_comp } => Some(DeltaRecord {
+                    oid: *oid,
+                    base,
+                    kind,
+                    raw_len,
+                    ops_comp: ops_comp.as_ref().clone(),
+                }),
+            });
+        }
         let Ok(base_bytes) = store.get(&base) else {
             return Ok(None);
         };
@@ -357,10 +482,29 @@ pub fn plan_deltas(
         let ops = super::delta::encode_delta(&base_bytes, &target);
         let ops_comp = zstd::bulk::compress(&ops, PACK_ZSTD_LEVEL).context("pack compress")?;
         let full_comp = zstd::bulk::compress(&target, PACK_ZSTD_LEVEL).context("pack compress")?;
-        // Worth-it gate: after framing (the 32-byte base oid) the delta
-        // must undercut the full record by ≥10% or it ships whole.
+        // Worth-it gate, compressed-vs-compressed by design: a delta
+        // record's wire cost is its 48-byte header + 32-byte base oid +
+        // compressed ops; the full record it would replace costs the
+        // same header + the *zstd-compressed* payload (`full_comp`),
+        // never the raw object length. Requiring `32 + ops_comp` to
+        // undercut `full_comp` by ≥10% therefore guarantees a kept
+        // delta ships strictly fewer wire bytes than the full record —
+        // the invariant `tests/pack_format.rs` pins with random
+        // near-duplicate tensors.
         if 32 + ops_comp.len() >= full_comp.len() * 9 / 10 {
+            if let Some(c) = cache {
+                c.put((base, *oid), CachedEncode::Demoted);
+            }
             return Ok(None);
+        }
+        if let Some(c) = cache {
+            c.put(
+                (base, *oid),
+                CachedEncode::Delta {
+                    raw_len: target.len() as u64,
+                    ops_comp: Arc::new(ops_comp.clone()),
+                },
+            );
         }
         Ok(Some(DeltaRecord {
             oid: *oid,
@@ -762,6 +906,7 @@ pub fn unpack_into(store: &LfsStore, pack: &[u8], threads: usize) -> Result<Pack
         admit_record(store, oid, raw_len, comp)
     })?;
     let mut raw_total: u64 = sizes.iter().sum();
+    let delta_objects = deltas.len();
     for (oid, raw_len, payload) in deltas {
         raw_total += admit_delta_record(store, oid, raw_len, payload)?;
     }
@@ -769,6 +914,7 @@ pub fn unpack_into(store: &LfsStore, pack: &[u8], threads: usize) -> Result<Pack
         objects: view.index.len(),
         raw_bytes: raw_total,
         packed_bytes: pack.len() as u64,
+        delta_objects,
     })
 }
 
@@ -945,6 +1091,7 @@ pub fn unpack_verified(
     let mut window: Vec<(Oid, u64, Vec<u8>)> = Vec::with_capacity(window_objects);
     let mut window_bytes = 0u64;
     let mut raw_total = 0u64;
+    let mut delta_objects = 0usize;
     let mut rec_header = [0u8; RECORD_HEADER_LEN];
     let flush = |window: &mut Vec<(Oid, u64, Vec<u8>)>, raw_total: &mut u64| -> Result<()> {
         let sizes = par::try_par_map(window.as_slice(), threads, |_, (oid, raw_len, comp)| {
@@ -981,6 +1128,7 @@ pub fn unpack_verified(
             flush(&mut window, &mut raw_total)?;
             window_bytes = 0;
             raw_total += admit_delta_record(store, oid, raw_len, &comp)?;
+            delta_objects += 1;
         }
     }
     flush(&mut window, &mut raw_total)?;
@@ -988,6 +1136,7 @@ pub fn unpack_verified(
         objects: check.objects as usize,
         raw_bytes: raw_total,
         packed_bytes: check.len,
+        delta_objects,
     })
 }
 

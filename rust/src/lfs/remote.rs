@@ -28,17 +28,22 @@
 //! it.
 
 use super::batch::{self, BatchResponse};
-use super::pack::{self, DeltaPlan, PackStats};
+use super::pack::{self, DeltaPlan, PackStats, PlanCache};
 use super::store::LfsStore;
 use super::transport::{self, ChainAdvert, ChainNegotiation, RemoteTransport, WireReport};
 use crate::gitcore::object::Oid;
 use anyhow::Result;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Handle to a directory-backed LFS remote.
 #[derive(Debug, Clone)]
 pub struct DirRemote {
     store: LfsStore,
+    /// Memoized delta encodings for the responder side of chain-aware
+    /// fetches (shared across clones of this handle, like a server
+    /// process would share it across requests).
+    plan_cache: Arc<PlanCache>,
 }
 
 /// Compatibility alias: the seed named the (then only) remote kind
@@ -50,12 +55,19 @@ impl DirRemote {
     pub fn open(remote_root: &Path) -> DirRemote {
         DirRemote {
             store: LfsStore::at(&remote_root.join("lfs/objects")),
+            plan_cache: Arc::new(PlanCache::new()),
         }
     }
 
     /// The remote's backing object store.
     pub fn store(&self) -> &LfsStore {
         &self.store
+    }
+
+    /// The responder-side delta plan cache (hit/miss counters included),
+    /// for tests and metrics parity with the HTTP server.
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plan_cache
     }
 
     /// Have/want negotiation: partition `want` into the oids the remote
@@ -154,6 +166,33 @@ impl RemoteTransport for DirRemote {
         threads: usize,
     ) -> Result<(PackStats, WireReport)> {
         stream_between(&self.store, dest, oids, threads)
+    }
+
+    fn fetch_pack_with_chains(
+        &self,
+        adv: &ChainAdvert,
+        dest: &LfsStore,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        let plan = transport::plan_fetch_deltas(&self.store, adv, threads, Some(&self.plan_cache))?;
+        if plan.deltas.is_empty() {
+            // Nothing worth encoding — ship the byte-identical flat pack.
+            return self.fetch_pack_into(&adv.want, dest, threads);
+        }
+        let spill = crate::util::tmp::TempDir::new("dirpack")?;
+        let path = spill.join("pack");
+        let built = pack::write_delta_pack_file(&self.store, &plan, threads, &path)?;
+        let check = pack::PackCheck {
+            id: built.id,
+            len: built.len,
+            objects: built.objects as u64,
+        };
+        let stats = pack::unpack_verified(&path, dest, threads, &check)?;
+        let report = WireReport {
+            wire_bytes: built.len,
+            resumed_bytes: 0,
+        };
+        Ok((stats, report))
     }
 
     fn send_pack_from(

@@ -148,6 +148,27 @@ pub fn retry_after_of(err: &anyhow::Error) -> Option<u64> {
         .and_then(|w| w.retry_after())
 }
 
+/// Parse an HTTP `Retry-After` header value into delay seconds.
+///
+/// Only the delta-seconds form is honored; RFC 9110 also allows an
+/// HTTP-date, which this client deliberately does not interpret —
+/// clock skew between peers makes an absolute date a worse hint than
+/// the local backoff schedule. An HTTP-date or garbage value returns
+/// `None` so the caller falls back to the default jittered backoff; it
+/// must never surface as an error or (worse) parse as a zero-second
+/// pause that turns a shed into a tight retry loop. Absurdly large
+/// delta values parse fine here and are clamped to the policy's `cap`
+/// by [`RetryPolicy::pause`].
+pub fn parse_retry_after(value: &str) -> Option<u64> {
+    let v = value.trim();
+    if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    // Saturate rather than fail on overflow-length digit strings: the
+    // server said "a very long time", and the cap clamps it anyway.
+    Some(v.parse::<u64>().unwrap_or(u64::MAX))
+}
+
 /// Capped exponential backoff with deterministic jitter.
 ///
 /// `pause(retry, ..)` for retry `r` (0-based) draws from
@@ -192,7 +213,10 @@ impl RetryPolicy {
     }
 
     /// The pause before retry `retry` (0-based), honoring a
-    /// `Retry-After` hint as a floor.
+    /// `Retry-After` hint as a floor — but never past `cap`: the cap
+    /// must bound *every* pause, or one absurd (or hostile) header
+    /// value stalls a transfer for hours. Applying the floor before
+    /// the cap keeps `cap` the final word.
     pub fn pause(&self, retry: u32, retry_after: Option<u64>) -> Duration {
         let window = self
             .base
@@ -206,7 +230,7 @@ impl RetryPolicy {
         let span = window.saturating_sub(half).as_millis().max(1) as u64;
         let jittered = half + Duration::from_millis(rng.next_u64() % span);
         let floor = Duration::from_secs(retry_after.unwrap_or(0));
-        jittered.min(self.cap).max(floor)
+        jittered.max(floor).min(self.cap)
     }
 
     /// Run `op` until it succeeds, fails fatally, or attempts run out.
@@ -297,8 +321,36 @@ mod tests {
             assert!(pause >= window / 2, "pause collapsed below the half-window");
             assert!(pause <= p.cap, "pause escaped the cap");
         }
-        // Retry-After outranks the backoff schedule.
-        assert_eq!(p.pause(0, Some(5)), Duration::from_secs(5));
+        // Retry-After outranks the backoff schedule up to the cap
+        // (default cap 2s): a modest hint floors the pause, an absurd
+        // one clamps to the cap instead of stalling the transfer.
+        assert_eq!(p.pause(0, Some(1)), Duration::from_secs(1));
+        assert_eq!(p.pause(0, Some(5)), p.cap);
+        assert_eq!(p.pause(0, Some(u64::MAX)), p.cap);
+    }
+
+    #[test]
+    fn retry_after_parses_seconds_and_degrades_on_dates_and_garbage() {
+        // Integer delta-seconds: honored verbatim.
+        assert_eq!(parse_retry_after("3"), Some(3));
+        assert_eq!(parse_retry_after(" 120 "), Some(120));
+        assert_eq!(parse_retry_after("0"), Some(0));
+        // HTTP-date: deliberately not interpreted — must fall back to
+        // the default backoff, not error and not parse as 0.
+        assert_eq!(parse_retry_after("Fri, 07 Aug 2026 09:00:00 GMT"), None);
+        // Garbage: same degradation.
+        assert_eq!(parse_retry_after(""), None);
+        assert_eq!(parse_retry_after("soon"), None);
+        assert_eq!(parse_retry_after("-5"), None);
+        assert_eq!(parse_retry_after("1.5"), None);
+        // Overflow-length digit strings saturate (and the pause cap
+        // clamps them) rather than failing back to None.
+        assert_eq!(
+            parse_retry_after("99999999999999999999999999"),
+            Some(u64::MAX)
+        );
+        let p = RetryPolicy::default();
+        assert_eq!(p.pause(0, parse_retry_after("not-a-date")), p.pause(0, None));
     }
 
     #[test]

@@ -150,6 +150,10 @@ impl ServeMetrics {
             in_flight: self.in_flight.load(Ordering::Relaxed),
             bytes_in: self.bytes_in.load(Ordering::Relaxed),
             bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            // Filled in by ServerState::metrics_snapshot, which also
+            // sees the plan cache.
+            plan_cache_hits: 0,
+            plan_cache_misses: 0,
         }
     }
 }
@@ -172,6 +176,12 @@ pub struct MetricsSnapshot {
     pub bytes_in: u64,
     /// Response body bytes sent.
     pub bytes_out: u64,
+    /// Chain-aware `POST /packs` delta encodings answered from the
+    /// (base, target) plan cache — repeated fine-tune fetches of one
+    /// base amortize their CDC chunking here.
+    pub plan_cache_hits: u64,
+    /// Delta encodings that had to be computed (and were then cached).
+    pub plan_cache_misses: u64,
 }
 
 /// Bounded handoff between the accept loop and the worker pool.
@@ -249,10 +259,26 @@ struct ServerState {
     options: ServeOptions,
     /// Serving counters (`GET /metrics`).
     metrics: ServeMetrics,
+    /// (base, target) delta-encoding memo for chain-aware fetches:
+    /// repeated `POST /packs` for fine-tunes of one base skip the CDC
+    /// chunking. Content-addressed keys mean entries are never stale;
+    /// eviction is capacity-only (see [`pack::PlanCache`]).
+    plan_cache: pack::PlanCache,
     /// Clones of every connection currently held by a worker, so
     /// drain/kill can unblock workers via `TcpStream::shutdown`.
     conns: Mutex<HashMap<u64, TcpStream>>,
     next_conn: AtomicU64,
+}
+
+impl ServerState {
+    /// The serving counters plus the plan-cache counters, as one
+    /// consistent-enough point-in-time copy.
+    fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let mut snap = self.metrics.snapshot();
+        snap.plan_cache_hits = self.plan_cache.hits();
+        snap.plan_cache_misses = self.plan_cache.misses();
+        snap
+    }
 }
 
 /// Track a worker's connection so drain/kill can unblock it; `None`
@@ -326,6 +352,7 @@ impl LfsServer {
             partial_locks: Mutex::new(HashMap::new()),
             options,
             metrics: ServeMetrics::default(),
+            plan_cache: pack::PlanCache::new(),
             conns: Mutex::new(HashMap::new()),
             next_conn: AtomicU64::new(0),
         });
@@ -386,7 +413,7 @@ impl LfsServer {
     /// Point-in-time serving counters (the in-process version of
     /// `GET /metrics`).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.state.metrics.snapshot()
+        self.state.metrics_snapshot()
     }
 
     /// Forcibly shut down every connection currently held by a worker;
@@ -411,7 +438,7 @@ impl LfsServer {
     /// Dropping the server runs the same drain.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.drain();
-        self.state.metrics.snapshot()
+        self.state.metrics_snapshot()
     }
 
     fn drain(&mut self) {
@@ -690,7 +717,7 @@ fn dispatch(state: &ServerState, method: &str, path: &str, req: &Request) -> Res
 /// JSON — degradation under load must be observable remotely, not
 /// just from inside the process.
 fn metrics_response(state: &ServerState) -> Response {
-    let snap = state.metrics.snapshot();
+    let snap = state.metrics_snapshot();
     let mut obj = JsonObj::new();
     obj.insert("accepted", snap.accepted);
     obj.insert("rejected", snap.rejected);
@@ -699,6 +726,8 @@ fn metrics_response(state: &ServerState) -> Response {
     obj.insert("in_flight", snap.in_flight);
     obj.insert("bytes_in", snap.bytes_in);
     obj.insert("bytes_out", snap.bytes_out);
+    obj.insert("plan_cache_hits", snap.plan_cache_hits);
+    obj.insert("plan_cache_misses", snap.plan_cache_misses);
     obj.insert("workers", state.options.workers as u64);
     obj.insert("queue", state.options.queue as u64);
     json_response(obj)
@@ -800,44 +829,150 @@ fn want_memo_path(state: &ServerState, want: &[Oid]) -> PathBuf {
         .join(crate::util::hex::encode(&digest))
 }
 
+/// Memo path for a chain advert: like [`want_memo_path`], but the
+/// digest also covers the advertised chains — the delta pack a
+/// protocol-2 `POST /packs` builds depends on which bases the *client*
+/// holds, so two adverts with equal want sets but different held
+/// prefixes must never share a memo entry. Still safe to reuse: pack
+/// contents are a pure function of (want, chains, store contents), the
+/// store is append-only content-addressed, and a server that has since
+/// *gained* a base would at worst serve the older, equally valid pack.
+fn advert_memo_path(state: &ServerState, adv: &transport::ChainAdvert) -> PathBuf {
+    use sha2::{Digest, Sha256};
+    let mut sorted: Vec<Oid> = adv.want.to_vec();
+    sorted.sort();
+    sorted.dedup();
+    let mut h = Sha256::new();
+    h.update(b"advert-v2\n");
+    for oid in &sorted {
+        h.update(oid.0);
+    }
+    for chain in &adv.chains {
+        // Length-framed so (chains, entries, oids) nesting can never
+        // collide across different shapes.
+        h.update((chain.len() as u64).to_le_bytes());
+        for entry in chain {
+            h.update(entry.key.0);
+            h.update((entry.oids.len() as u64).to_le_bytes());
+            for oid in &entry.oids {
+                h.update(oid.0);
+            }
+        }
+    }
+    let digest: [u8; 32] = h.finalize().into();
+    state
+        .root
+        .join("lfs/outgoing/bywant")
+        .join(crate::util::hex::encode(&digest))
+}
+
+/// Answer a `POST /packs` from a memo file, if it points at a pack
+/// that is still in the outgoing cache.
+fn memo_answer(state: &ServerState, memo: &Path) -> Option<Response> {
+    let entry = std::fs::read_to_string(memo).ok()?;
+    let (id, size) = entry.trim().split_once(' ')?;
+    if !is_hex_id(id) || !outgoing_path(state, id).exists() {
+        return None;
+    }
+    let mut obj = JsonObj::new();
+    obj.insert("id", id);
+    obj.insert("size", size.parse::<u64>().unwrap_or(0));
+    Some(json_response(obj))
+}
+
+/// Install a freshly built pack into the outgoing cache under its
+/// content-hashed id, record the memo, and answer `{id, size}`.
+fn install_built(
+    state: &ServerState,
+    build_tmp: &Path,
+    built: &pack::BuiltPack,
+    memo: &Path,
+) -> Result<Response> {
+    let path = outgoing_path(state, &built.id);
+    if path.exists() {
+        let _ = std::fs::remove_file(build_tmp);
+    } else if let Err(e) = std::fs::rename(build_tmp, &path) {
+        let _ = std::fs::remove_file(build_tmp);
+        return Err(e).context("installing outgoing pack");
+    }
+    tmp::write_atomic(memo, format!("{} {}", built.id, built.len).as_bytes())?;
+    let mut obj = JsonObj::new();
+    obj.insert("id", built.id.as_str());
+    obj.insert("size", built.len);
+    Ok(json_response(obj))
+}
+
 /// Build (or reuse) a pack for a want set. The pack is assembled by
 /// the streaming writer directly into the outgoing cache file — it is
-/// never RAM-resident.
+/// never RAM-resident. A protocol-2 body (chain advert alongside the
+/// want set) gets a v2 delta pack planned against the bases the client
+/// holds; a plain `{"want":[..]}` body (older clients) gets the flat
+/// v1 pack it always has.
 fn pack_create(state: &ServerState, req: &Request) -> Result<Response> {
+    let json = match Json::parse(&String::from_utf8_lossy(&req.body)).context("parsing request json")
+    {
+        Ok(j) => j,
+        Err(e) => return Ok(text(400, format!("{e:#}"))),
+    };
+    if json.get("chains").is_some() {
+        let adv = match transport::parse_chain_advert(&json) {
+            Ok(a) => a,
+            Err(e) => return Ok(text(400, format!("{e:#}"))),
+        };
+        return pack_create_chains(state, &adv);
+    }
     let want = match parse_want(req) {
         Ok(w) => w,
         Err(e) => return Ok(text(400, format!("{e:#}"))),
     };
+    pack_create_flat(state, &want)
+}
+
+/// The flat (protocol-1) half of `POST /packs`.
+fn pack_create_flat(state: &ServerState, want: &[Oid]) -> Result<Response> {
     // A retry of an interrupted download re-POSTs the same want set;
     // answer from the memo instead of recompressing the whole pack.
-    let memo = want_memo_path(state, &want);
-    if let Ok(entry) = std::fs::read_to_string(&memo) {
-        if let Some((id, size)) = entry.trim().split_once(' ') {
-            if is_hex_id(id) && outgoing_path(state, id).exists() {
-                let mut obj = JsonObj::new();
-                obj.insert("id", id);
-                obj.insert("size", size.parse::<u64>().unwrap_or(0));
-                return Ok(json_response(obj));
-            }
-        }
+    let memo = want_memo_path(state, want);
+    if let Some(resp) = memo_answer(state, &memo) {
+        return Ok(resp);
     }
     let build_tmp = tmp::unique_sibling(&state.root.join("lfs/outgoing/build"));
-    let built = match pack::write_pack_file(&state.store, &want, PACK_THREADS, &build_tmp) {
+    let built = match pack::write_pack_file(&state.store, want, PACK_THREADS, &build_tmp) {
         Ok(b) => b,
         Err(e) => return Ok(text(422, format!("cannot assemble pack: {e:#}"))),
     };
-    let path = outgoing_path(state, &built.id);
-    if path.exists() {
-        let _ = std::fs::remove_file(&build_tmp);
-    } else if let Err(e) = std::fs::rename(&build_tmp, &path) {
-        let _ = std::fs::remove_file(&build_tmp);
-        return Err(e).context("installing outgoing pack");
+    install_built(state, &build_tmp, &built, &memo)
+}
+
+/// The chain-aware (protocol-2) half of `POST /packs`: plan suffix
+/// deltas against bases the advert proves the client holds, consulting
+/// the (base, target) plan cache so repeated fine-tune fetches of one
+/// base skip the CDC chunking.
+fn pack_create_chains(state: &ServerState, adv: &transport::ChainAdvert) -> Result<Response> {
+    let memo = advert_memo_path(state, adv);
+    if let Some(resp) = memo_answer(state, &memo) {
+        return Ok(resp);
     }
-    tmp::write_atomic(&memo, format!("{} {}", built.id, built.len).as_bytes())?;
-    let mut obj = JsonObj::new();
-    obj.insert("id", built.id);
-    obj.insert("size", built.len);
-    Ok(json_response(obj))
+    let plan = match transport::plan_fetch_deltas(
+        &state.store,
+        adv,
+        PACK_THREADS,
+        Some(&state.plan_cache),
+    ) {
+        Ok(p) => p,
+        Err(e) => return Ok(text(422, format!("cannot assemble pack: {e:#}"))),
+    };
+    if plan.deltas.is_empty() {
+        // Nothing worth delta-encoding; the flat path serves (and
+        // memoizes) the byte-identical v1 pack.
+        return pack_create_flat(state, &adv.want);
+    }
+    let build_tmp = tmp::unique_sibling(&state.root.join("lfs/outgoing/build"));
+    let built = match pack::write_delta_pack_file(&state.store, &plan, PACK_THREADS, &build_tmp) {
+        Ok(b) => b,
+        Err(e) => return Ok(text(422, format!("cannot assemble pack: {e:#}"))),
+    };
+    install_built(state, &build_tmp, &built, &memo)
 }
 
 fn parse_range(header: Option<&str>) -> Option<u64> {

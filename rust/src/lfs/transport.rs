@@ -20,7 +20,7 @@
 //! (`TransferSummary::wire_bytes` / `resumed_bytes`).
 
 use super::batch::{self, BatchResponse};
-use super::pack::{DeltaPlan, PackStats};
+use super::pack::{self, DeltaPlan, PackStats, PlanCache};
 use super::store::LfsStore;
 use crate::gitcore::object::Oid;
 use crate::gitcore::remote::RemoteSpec;
@@ -133,6 +133,60 @@ pub fn answer_chains(store: &LfsStore, adv: &ChainAdvert) -> ChainNegotiation {
         have_depths,
         chain_aware: true,
     }
+}
+
+/// Per advertised chain, how deep a prefix the *advertising client*
+/// holds, derived purely from the advert itself: the want set is
+/// exactly what the client lacks, so an entry whose oids are all
+/// outside `want` is provably client-held. This is the fetch-direction
+/// mirror of [`answer_chains`] — there the responder's store decides
+/// the depth, here the client's own want set does, and no extra round
+/// trip is spent asking.
+pub(crate) fn client_held_depths(adv: &ChainAdvert) -> Vec<usize> {
+    let want: std::collections::HashSet<Oid> = adv.want.iter().copied().collect();
+    adv.chains
+        .iter()
+        .map(|chain| {
+            chain
+                .iter()
+                .take_while(|entry| {
+                    !entry.oids.is_empty() && entry.oids.iter().all(|o| !want.contains(o))
+                })
+                .count()
+        })
+        .collect()
+}
+
+/// Responder half of a chain-aware **fetch**: plan the delta pack a
+/// client's [`ChainAdvert`] earns, against `store` (the responder's
+/// objects).
+///
+/// The client's held depth per chain comes from [`client_held_depths`];
+/// [`batch::chain_bases`] then nominates the deepest client-held entry
+/// as a [`pack::KIND_STORE`] base (resolvable by the receiver by
+/// construction) — or, for chains the client holds nothing of, the
+/// in-flight base as [`pack::KIND_REF`]. Bases the *responder* cannot
+/// read are demoted to full records inside [`pack::plan_deltas_cached`],
+/// so the effective depth is min(client-held, responder-held) without a
+/// second store scan. Shared by the directory transport and the HTTP
+/// server so both responders plan identically; `cache` memoizes the CDC
+/// encodes across repeated fetches of the same chain.
+pub(crate) fn plan_fetch_deltas(
+    store: &LfsStore,
+    adv: &ChainAdvert,
+    threads: usize,
+    cache: Option<&PlanCache>,
+) -> Result<DeltaPlan> {
+    let mut want = adv.want.clone();
+    want.sort();
+    want.dedup();
+    let neg = ChainNegotiation {
+        batch: BatchResponse::default(),
+        have_depths: client_held_depths(adv),
+        chain_aware: true,
+    };
+    let base_of = batch::chain_bases(adv, &neg, &want);
+    pack::plan_deltas_cached(store, &want, &base_of, threads, cache)
 }
 
 /// Encode a [`ChainAdvert`] as the `POST /objects/batch` request body
@@ -286,6 +340,25 @@ pub trait RemoteTransport: Send + Sync {
     ) -> Result<(PackStats, WireReport)> {
         self.send_pack_from(src, &plan.all_oids(), threads)
     }
+
+    /// Fetch the advert's want set, letting the responder ship suffix
+    /// objects as delta records against bases the advert proves the
+    /// *client* holds (the fetch-direction mirror of
+    /// [`RemoteTransport::send_pack_with_bases`]).
+    ///
+    /// The default ignores the chains and fetches a flat pack of the
+    /// want set via [`RemoteTransport::fetch_pack_into`] — exactly the
+    /// version-skew fallback: a transport (or the server behind it)
+    /// that predates fetch deltas still converges byte-identically, it
+    /// just never earns them.
+    fn fetch_pack_with_chains(
+        &self,
+        adv: &ChainAdvert,
+        dest: &LfsStore,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        self.fetch_pack_into(&adv.want, dest, threads)
+    }
 }
 
 /// Open the transport a [`RemoteSpec`] addresses.
@@ -368,6 +441,30 @@ pub fn download(
         return download_per_object(remote, local, oids);
     }
     let s = batch::fetch_pack(remote, local, oids)?;
+    if s.unavailable > 0 {
+        bail!("remote is missing {} requested object(s)", s.unavailable);
+    }
+    Ok((s.objects, s.raw_bytes))
+}
+
+/// Download with chain advertisements: like [`download`], but the
+/// responder may answer the advert with delta records against bases
+/// the advert proves this client already holds, so fetching a
+/// fine-tune over a held base ships a fraction of the flat wire bytes.
+///
+/// Falls back to the plain packed [`download`] whenever chains are
+/// empty, the per-object engine is selected, or flat negotiation is
+/// forced — mirroring [`upload_with_chains`]'s fallback ladder, with
+/// wire traffic byte-identical to the flat protocol in each case.
+pub fn download_with_chains(
+    remote: &dyn RemoteTransport,
+    local: &LfsStore,
+    adv: &ChainAdvert,
+) -> Result<(usize, u64)> {
+    if batch::per_object_mode() || adv.chains.is_empty() || batch::flat_negotiation() {
+        return download(remote, local, &adv.want);
+    }
+    let s = batch::Prefetcher::default().fetch_with_chains(remote, local, adv)?;
     if s.unavailable > 0 {
         bail!("remote is missing {} requested object(s)", s.unavailable);
     }

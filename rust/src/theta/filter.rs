@@ -96,6 +96,26 @@ impl ObjectAccess {
         }
         Ok(())
     }
+
+    /// Ensure every object `meta` references is local, advertising the
+    /// metadata's update chains so a chain-aware remote ships only the
+    /// missing chain suffixes — as deltas against bases already here.
+    /// Same no-op and leftover-miss semantics as
+    /// [`ObjectAccess::prefetch`].
+    pub fn prefetch_meta(&self, meta: &ModelMetadata) -> Result<()> {
+        let Some(remote) = &self.remote else {
+            return Ok(());
+        };
+        let mut seen_tips = std::collections::HashSet::new();
+        let mut chains = Vec::new();
+        crate::theta::hooks::meta_chain_adverts(meta, &mut seen_tips, &mut chains);
+        let adv = transport::ChainAdvert {
+            chains,
+            want: meta.all_oids(),
+        };
+        batch::fetch_pack_chains(remote.as_ref(), &self.store, &adv)?;
+        Ok(())
+    }
 }
 
 /// Reconstruct a group's full values from its metadata entry, resolving
@@ -327,8 +347,9 @@ pub fn smudge_metadata_opts(
     use_cache: bool,
 ) -> Result<Checkpoint> {
     // One negotiation + one pack for every object the model references
-    // (instead of a lazy download per missing group during reconstruction).
-    access.prefetch(&meta.all_oids())?;
+    // (instead of a lazy download per missing group during
+    // reconstruction), chain-aware so held bases turn misses into deltas.
+    access.prefetch_meta(meta)?;
     let cache = if use_cache {
         Some(ReconstructionCache::new())
     } else {

@@ -157,37 +157,79 @@ fn chain_adverts(
     for commit in commits {
         let c = repo.odb().read_commit(commit)?;
         let tree = repo.odb().read_tree(&c.tree)?;
-        for entry in &tree.entries {
-            let blob = repo.odb().read_blob(&entry.oid)?;
-            if !ModelMetadata::is_metadata(&blob) {
-                continue;
-            }
-            let Ok(meta) = ModelMetadata::from_bytes(&blob) else {
-                continue;
-            };
-            for group in meta.groups.values() {
-                if group.chain_depth() < 2 {
-                    continue;
-                }
-                let entries = group.chain_entries();
-                // Dedup by tip key: the same chain appears in every
-                // commit that carries the group forward unchanged.
-                let Some((tip_key, _)) = entries.last() else {
-                    continue;
-                };
-                if !seen_tips.insert(*tip_key) {
-                    continue;
-                }
-                chains.push(
-                    entries
-                        .into_iter()
-                        .map(|(key, oids)| transport::ChainEntryAdvert { key, oids })
-                        .collect(),
-                );
-            }
-        }
+        tree_chain_adverts(repo, &tree, &mut seen_tips, &mut chains)?;
     }
     Ok(chains)
+}
+
+/// Append the chain adverts one tree's metadata files reference,
+/// deduped by tip key across calls (the same chain appears in every
+/// commit — and every metadata file — that carries the group forward
+/// unchanged).
+fn tree_chain_adverts(
+    repo: &Repository,
+    tree: &Tree,
+    seen_tips: &mut std::collections::HashSet<Oid>,
+    chains: &mut Vec<Vec<transport::ChainEntryAdvert>>,
+) -> Result<()> {
+    for entry in &tree.entries {
+        let blob = repo.odb().read_blob(&entry.oid)?;
+        if !ModelMetadata::is_metadata(&blob) {
+            continue;
+        }
+        let Ok(meta) = ModelMetadata::from_bytes(&blob) else {
+            continue;
+        };
+        meta_chain_adverts(&meta, seen_tips, chains);
+    }
+    Ok(())
+}
+
+/// Append the chain adverts (depth ≥ 2) one metadata file records.
+/// Shallower groups stay off the advert: a depth-1 chain has no prefix
+/// a peer could hold, so advertising it would only bloat the
+/// negotiation body.
+pub(crate) fn meta_chain_adverts(
+    meta: &ModelMetadata,
+    seen_tips: &mut std::collections::HashSet<Oid>,
+    chains: &mut Vec<Vec<transport::ChainEntryAdvert>>,
+) {
+    for group in meta.groups.values() {
+        if group.chain_depth() < 2 {
+            continue;
+        }
+        let entries = group.chain_entries();
+        let Some((tip_key, _)) = entries.last() else {
+            continue;
+        };
+        if !seen_tips.insert(*tip_key) {
+            continue;
+        }
+        chains.push(
+            entries
+                .into_iter()
+                .map(|(key, oids)| transport::ChainEntryAdvert { key, oids })
+                .collect(),
+        );
+    }
+}
+
+/// The chain advert a fetch of `tree` should send: every LFS oid the
+/// tree references as the want set, plus the update chains its
+/// metadata records. The transfer layer trims the want set to locally
+/// missing oids before the advert leaves the process — which is
+/// exactly what lets the responder read this client's held chain
+/// depths straight off the advert (an entry whose oids are all outside
+/// the want set is provably held here) and ship the wanted suffix as
+/// deltas against bases this clone already has.
+pub fn fetch_advert(repo: &Repository, tree: &Tree) -> Result<transport::ChainAdvert> {
+    let mut seen_tips = std::collections::HashSet::new();
+    let mut chains = Vec::new();
+    tree_chain_adverts(repo, tree, &mut seen_tips, &mut chains)?;
+    Ok(transport::ChainAdvert {
+        chains,
+        want: referenced_lfs_oids(repo, tree)?,
+    })
 }
 
 #[cfg(test)]

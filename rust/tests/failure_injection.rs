@@ -291,6 +291,49 @@ fn duplicated_pack_bytes_are_detected_never_admitted() {
     }
 }
 
+/// A downloaded partial that fails pack verification must be deleted,
+/// not left to poison the next byte-range resume: a duplicated slice
+/// preserves Content-Length, so the client ends up with a
+/// complete-*looking* but corrupt partial — if it survived, the retry
+/// would "resume" past it, skip the re-download, and fail forever on
+/// the same bytes.
+#[test]
+fn poisoned_partial_is_deleted_and_retry_restarts_clean() {
+    let fx = support::HttpFixture::new();
+    let server_store = fx.server_store();
+    let oids = support::seed_store(&server_store, 10, 1500, 0xBADD);
+
+    let td = TempDir::new("fi-poison").unwrap();
+    let local = LfsStore::open(td.path());
+    let remote = fx.proxied_remote(td.path());
+
+    fx.proxy.arm(FaultSpec::duplicate(Direction::Download, 2000, 256));
+    let err = batch::fetch_pack(&remote, &local, &oids).unwrap_err();
+    assert!(format!("{err:#}").contains("integrity"), "{err:#}");
+
+    // The poisoned partial must be gone from the staging area...
+    let incoming = td.path().join("lfs/incoming");
+    let leftovers: Vec<String> = match std::fs::read_dir(&incoming) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect(),
+        Err(_) => Vec::new(), // staging dir never created: equally clean
+    };
+    assert!(
+        leftovers.is_empty(),
+        "verify failure left poisoned partial(s) behind: {leftovers:?}"
+    );
+
+    // ...so the retry restarts from byte zero instead of resuming
+    // corrupt bytes, and converges byte-identically.
+    batch::reset_stats();
+    let retry = batch::fetch_pack(&remote, &local, &oids).unwrap();
+    assert_eq!(retry.resumed_bytes, 0, "a clean retry must not resume poisoned bytes");
+    assert_eq!(retry.wire_bytes, retry.packed_bytes);
+    support::assert_stores_equal(&server_store, &local);
+}
+
 /// A stalled pack stream completes once the delay passes (no spurious
 /// timeouts at test scale).
 #[test]

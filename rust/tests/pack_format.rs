@@ -4,7 +4,11 @@
 //! index entries).
 
 use git_theta::gitcore::object::Oid;
-use git_theta::lfs::{build_pack, pack_index, unpack_into, LfsStore};
+use git_theta::lfs::pack::KIND_STORE;
+use git_theta::lfs::{
+    build_pack, full_record_cost, pack_index, plan_deltas, unpack_into, unpack_verified,
+    write_delta_pack_file, LfsStore, PackCheck,
+};
 use git_theta::util::prop::{check, gens};
 use git_theta::util::rng::Pcg64;
 use git_theta::util::tmp::TempDir;
@@ -82,6 +86,106 @@ fn roundtrip_property_random_shapes() {
                 if b.get(oid).map_err(|e| format!("{e:#}"))?
                     != a.get(oid).map_err(|e| format!("{e:#}"))?
                 {
+                    return Err(format!("object {} did not roundtrip", oid.short()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Audit of the delta planner's worth-it gate over random
+/// near-duplicate tensors: every *kept* delta must undercut the
+/// **compressed** full-record wire size by the gate's 10% margin
+/// (a comparison against the raw object length would keep deltas that
+/// inflate the wire), the resulting v2 pack never exceeds the flat
+/// pack, and a receiver holding the bases reconstructs byte-identical
+/// objects.
+#[test]
+fn delta_gate_compares_compressed_wire_sizes() {
+    check(
+        "delta worth-it gate",
+        |rng| {
+            let groups = gens::usize_in(rng, 1, 5);
+            let elems = gens::usize_in(rng, 256, 4096);
+            // How much of each base the near-duplicate keeps, in
+            // eighths: low values should mostly demote (the delta is
+            // not worth it), high values should mostly keep.
+            let kept_eighths = gens::usize_in(rng, 1, 7);
+            (groups, elems, kept_eighths, rng.next_u64())
+        },
+        |&(groups, elems, kept_eighths, seed)| {
+            let mut rng = Pcg64::new(seed);
+            let td_src = TempDir::new("pf-gate-src").map_err(|e| e.to_string())?;
+            let src = LfsStore::open(td_src.path());
+            let mut base_of = std::collections::HashMap::new();
+            let mut bases = Vec::new();
+            let mut targets = Vec::new();
+            for _ in 0..groups {
+                let len = elems * 4;
+                let base = random_payload(&mut rng, len);
+                let mut target = base.clone();
+                for b in &mut target[len * kept_eighths / 8..] {
+                    *b = rng.below(256) as u8;
+                }
+                let (b_oid, _) = src.put(&base).unwrap();
+                let (t_oid, _) = src.put(&target).unwrap();
+                if b_oid == t_oid {
+                    continue; // the mutation happened to be identity
+                }
+                base_of.insert(t_oid, (b_oid, KIND_STORE));
+                bases.push(base);
+                targets.push((t_oid, target));
+            }
+            let want: Vec<Oid> = targets.iter().map(|(o, _)| *o).collect();
+            let plan = plan_deltas(&src, &want, &base_of, 2).map_err(|e| format!("{e:#}"))?;
+
+            // The gate's promise, per kept record: delta payload bytes
+            // (32-byte base oid + compressed ops) undercut the zstd-
+            // compressed full payload by >= 10%.
+            for d in &plan.deltas {
+                let full_cost = full_record_cost(&src, &d.oid).map_err(|e| format!("{e:#}"))?;
+                if d.wire_cost() - 48 >= (full_cost - 48) * 9 / 10 {
+                    return Err(format!(
+                        "kept delta {} does not undercut the compressed full record: \
+                         delta wire {} vs full wire {}",
+                        d.oid.short(),
+                        d.wire_cost(),
+                        full_cost
+                    ));
+                }
+            }
+
+            // Whatever the plan decided, the v2 pack must not exceed
+            // the flat pack for the same want set...
+            let td_packs = TempDir::new("pf-gate-packs").map_err(|e| e.to_string())?;
+            let delta_path = td_packs.join("delta.pack");
+            let built =
+                write_delta_pack_file(&src, &plan, 2, &delta_path).map_err(|e| format!("{e:#}"))?;
+            let flat = build_pack(&src, &want, 2).map_err(|e| format!("{e:#}"))?;
+            if built.len > flat.len() as u64 {
+                return Err(format!(
+                    "delta pack ({} bytes) exceeds the flat pack ({} bytes)",
+                    built.len,
+                    flat.len()
+                ));
+            }
+
+            // ...and a receiver holding the bases must reconstruct
+            // byte-identical objects.
+            let td_dst = TempDir::new("pf-gate-dst").map_err(|e| e.to_string())?;
+            let dst = LfsStore::open(td_dst.path());
+            for base in &bases {
+                dst.put(base).unwrap();
+            }
+            let pack_check = PackCheck {
+                id: built.id,
+                len: built.len,
+                objects: built.objects as u64,
+            };
+            unpack_verified(&delta_path, &dst, 2, &pack_check).map_err(|e| format!("{e:#}"))?;
+            for (oid, payload) in &targets {
+                if &dst.get(oid).map_err(|e| format!("{e:#}"))? != payload {
                     return Err(format!("object {} did not roundtrip", oid.short()));
                 }
             }

@@ -389,6 +389,142 @@ fn chain_negotiation_parity_across_transports() {
     });
 }
 
+/// Fetch-direction chain parity: a clone holding a chain prefix pulls
+/// the suffix from Dir and Http remotes — identical negotiations,
+/// identical delta counters, byte-identical clone stores — and a
+/// chain-oblivious *responder* (version skew on the server side)
+/// converges the same clone over the flat v1 pack with zero deltas.
+#[test]
+fn fetch_chain_parity_across_transports() {
+    prop::check("fetch-chain-parity", gen_chain_scenario, |sc| {
+        let payloads = chain_payloads(sc.depth, 8192, sc.seed);
+
+        // All three remotes hold the full chain plus the extras.
+        let td_dir = TempDir::new("fchain-dir").map_err(|e| e.to_string())?;
+        let dir = LfsRemote::open(td_dir.path());
+        let chain_oids: Vec<Oid> = payloads
+            .iter()
+            .map(|p| dir.store().put(p).unwrap().0)
+            .collect();
+        let extras = support::seed_store(dir.store(), sc.extra, 700, sc.seed ^ 0xFE7C);
+        let fx = support::HttpFixture::new();
+        let server_store = fx.server_store();
+        let td_flat = TempDir::new("fchain-flat").map_err(|e| e.to_string())?;
+        let flat = ObliviousRemote(LfsRemote::open(td_flat.path()));
+        for oid in chain_oids.iter().chain(&extras) {
+            let bytes = dir.store().get(oid).unwrap();
+            server_store.put(&bytes).unwrap();
+            flat.0.store().put(&bytes).unwrap();
+        }
+
+        let entries: Vec<ChainEntryAdvert> = chain_oids
+            .iter()
+            .enumerate()
+            .map(|(i, oid)| ChainEntryAdvert {
+                key: Oid::of_bytes(format!("fchain-key-{}-{i}", sc.seed).as_bytes()),
+                oids: vec![*oid],
+            })
+            .collect();
+        let mut want = chain_oids.clone();
+        want.extend(extras.iter().copied());
+        let adv = ChainAdvert {
+            chains: vec![entries],
+            want,
+        };
+
+        // Three clones, identically pre-seeded to prefix depth `have`.
+        let td_a = TempDir::new("fchain-recv-dir").map_err(|e| e.to_string())?;
+        let td_b = TempDir::new("fchain-recv-http").map_err(|e| e.to_string())?;
+        let td_c = TempDir::new("fchain-recv-flat").map_err(|e| e.to_string())?;
+        let recv_dir = LfsStore::open(td_a.path());
+        let recv_http = LfsStore::open(td_b.path());
+        let recv_flat = LfsStore::open(td_c.path());
+        for p in &payloads[..sc.have] {
+            recv_dir.put(p).unwrap();
+            recv_http.put(p).unwrap();
+            recv_flat.put(p).unwrap();
+        }
+        let td_staging = TempDir::new("fchain-staging").map_err(|e| e.to_string())?;
+        let http = fx.direct_remote(td_staging.path());
+
+        // Negotiation parity for the advert the engine would send (want
+        // trimmed to what the clone lacks): identical depths — both
+        // servers hold the whole chain — and identical flat splits.
+        let trimmed = ChainAdvert {
+            chains: adv.chains.clone(),
+            want: adv
+                .want
+                .iter()
+                .filter(|o| !recv_dir.contains(o))
+                .copied()
+                .collect(),
+        };
+        let neg_dir = dir.negotiate_chains(&trimmed).map_err(|e| format!("{e:#}"))?;
+        let neg_http = http.negotiate_chains(&trimmed).map_err(|e| format!("{e:#}"))?;
+        if !neg_dir.chain_aware || !neg_http.chain_aware {
+            return Err("a chain-aware transport answered chain-oblivious".into());
+        }
+        if neg_dir.have_depths != neg_http.have_depths {
+            return Err(format!(
+                "negotiated depths diverge: dir {:?}, http {:?}",
+                neg_dir.have_depths, neg_http.have_depths
+            ));
+        }
+        if neg_dir.batch != neg_http.batch {
+            return Err(format!(
+                "flat splits diverge:\n dir {:?}\n http {:?}",
+                neg_dir.batch, neg_http.batch
+            ));
+        }
+
+        // Fetch parity: identical summaries, counters, clone bytes.
+        batch::reset_stats();
+        let sum_dir = Prefetcher::default()
+            .fetch_with_chains(&dir, &recv_dir, &adv)
+            .map_err(|e| format!("{e:#}"))?;
+        let stats_dir = batch::stats();
+        batch::reset_stats();
+        let sum_http = Prefetcher::default()
+            .fetch_with_chains(&http, &recv_http, &adv)
+            .map_err(|e| format!("{e:#}"))?;
+        let stats_http = batch::stats();
+        if sum_dir != sum_http {
+            return Err(format!("summaries diverge:\n dir {sum_dir:?}\n http {sum_http:?}"));
+        }
+        if stats_dir != stats_http {
+            return Err(format!("counters diverge:\n dir {stats_dir:?}\n http {stats_http:?}"));
+        }
+        // The wanted suffix arrives as deltas whenever a base exists
+        // for it: a prefix entry held by the clone, or the chain's own
+        // base riding in the same pack.
+        if sc.depth - sc.have >= 1 && stats_dir.delta_objects == 0 {
+            return Err(format!(
+                "suffix of {} object(s) arrived without a single delta",
+                sc.depth - sc.have
+            ));
+        }
+
+        // Version skew: a chain-oblivious responder serves the same
+        // objects whole and the clone still converges byte-identically.
+        batch::reset_stats();
+        let sum_flat = Prefetcher::default()
+            .fetch_with_chains(&flat, &recv_flat, &adv)
+            .map_err(|e| format!("{e:#}"))?;
+        if sum_flat.objects != sum_dir.objects || sum_flat.unavailable != sum_dir.unavailable {
+            return Err(format!(
+                "fallback moved a different object set: {sum_flat:?} vs {sum_dir:?}"
+            ));
+        }
+        if batch::stats().delta_objects != 0 {
+            return Err("a delta record arrived from a chain-oblivious responder".into());
+        }
+
+        support::assert_stores_equal(&recv_dir, &recv_http);
+        support::assert_stores_equal(&recv_dir, &recv_flat);
+        Ok(())
+    });
+}
+
 /// Failure-classification parity: the *kind* of failure a caller sees
 /// must not depend on the transport. A missing object is fatal on both
 /// `DirRemote` and `HttpRemote` — so a backoff policy spends exactly

@@ -62,10 +62,13 @@ test -f BENCH_merge.json || {
     exit 1
 }
 
-# Smoke the chain-aware delta protocol in isolation (tiny config):
-# chain-prefix negotiation, v2 delta pack against a held base, and
-# byte-verified reconstruction on the receiving store. The full
-# transfer smoke below re-runs it at the locked 64x8192 shape.
+# Smoke the chain-aware delta protocol in isolation (tiny config),
+# both directions: push (chain-prefix negotiation, v2 delta pack
+# against a held remote base) and fetch (a clone holding the base
+# advertises its chains, the server plans deltas through its plan
+# cache), with byte-verified reconstruction on each receiving store.
+# The full transfer smoke below re-runs both at the locked 64x8192
+# shape.
 echo "==> bench transfer --delta smoke"
 cargo run --release --quiet -- bench transfer --delta 8 2048
 
