@@ -9,6 +9,7 @@ pub mod chaos;
 pub mod checkout;
 pub mod figure3;
 pub mod merge;
+pub mod replicate;
 pub mod scenario;
 pub mod transfer;
 pub mod workflow;
@@ -129,11 +130,12 @@ pub fn cli_bench(args: &[String]) -> Result<()> {
         "merge" => merge::run_merge_cli(&args[1..]),
         "scenario" => scenario::run_scenario_cli(&args[1..]),
         "chaos" => chaos::run_chaos_cli(&args[1..]),
+        "replicate" => replicate::run_replicate_cli(&args[1..]),
         _ => {
             println!(
                 "benchmarks: table1, figure2, figure3, transfer, checkout, merge, \
-                 scenario [actors ops seed faults], chaos [actors objects seed] \
-                 (full set lives in `cargo bench`)\n\
+                 scenario [actors ops seed faults], chaos [actors objects seed], \
+                 replicate [objects seed] (full set lives in `cargo bench`)\n\
                  env: THETA_BENCH_PARAMS=<millions> scales the model"
             );
             Ok(())

@@ -1,0 +1,319 @@
+//! Replication suite: the robustness proof for multi-mirror remotes.
+//!
+//! Two deterministic phases drive a [`ReplicatedRemote`] through the
+//! failure shapes it exists for and lock the outcome in
+//! `BENCH_replicate.json`:
+//!
+//! 1. **Quorum-degraded push + anti-entropy repair** — a three-mirror
+//!    set (two live directory mirrors, one dead HTTP mirror) takes a
+//!    push at write quorum 2. The push must succeed, register a
+//!    quorum shortfall, and leave the dead mirror behind; then the
+//!    mirror comes back empty, `repair` ships it exactly the missing
+//!    objects, and all three stores must end byte-identical — a
+//!    second repair must find nothing to do.
+//! 2. **Mid-pack mirror death + failover resume** — two identically
+//!    seeded HTTP mirrors serve a fetch; a [`FaultProxy`] kills the
+//!    first mirror's pack stream at byte `k`. One `fetch_pack` call
+//!    must complete by failing over to the second mirror, resuming
+//!    from the dead mirror's `k`-byte partial (shared staging), so
+//!    exactly `pack − k` bytes cross the wire on the survivor.
+//!
+//! Zero checksum failures are admitted in either phase. The run is
+//! seeded; a failing run replays with
+//! `git-theta bench replicate <objects> <seed>`.
+
+use super::write_bench_json;
+use crate::gitcore::object::Oid;
+use crate::lfs::faults::{Direction, FaultProxy, FaultSpec};
+use crate::lfs::{batch, DirRemote, HttpRemote, LfsServer, LfsStore, ReplicatedRemote};
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::Pcg64;
+use crate::util::tmp::TempDir;
+use anyhow::{ensure, Context, Result};
+use std::time::Instant;
+
+/// Replication-suite shape. Equal configs replay the same payloads.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicateConfig {
+    /// Objects pushed/fetched per phase.
+    pub objects: usize,
+    /// Master seed for payloads.
+    pub seed: u64,
+}
+
+/// Replication verdict: the convergence bit plus the counters the
+/// baseline locks.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicateOutcome {
+    /// Objects per phase.
+    pub objects: usize,
+    /// Every mirror store ended byte-identical in both phases.
+    pub converged: bool,
+    /// Pushes that met quorum but left a mirror behind (phase 1).
+    pub quorum_shortfalls: u64,
+    /// Objects the anti-entropy repair shipped to the laggard.
+    pub repair_objects: u64,
+    /// Fetches that abandoned a dying mirror mid-pack (phase 2).
+    pub failovers: u64,
+    /// Bytes the failover skipped by resuming the dead mirror's
+    /// partial (phase 2; must equal the kill offset).
+    pub resumed_bytes: u64,
+    /// Byte mismatches found across all convergence checks — locked
+    /// to exactly zero.
+    pub checksum_failures: u64,
+    /// Wall-clock seconds for the whole run.
+    pub replicate_secs: f64,
+}
+
+/// Deterministic ~2 KiB payload for `(seed, object)`.
+fn payload(seed: u64, object: usize) -> Vec<u8> {
+    let mut rng = Pcg64::new(seed ^ (object as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (0..2048).map(|_| rng.next_u32() as u8).collect()
+}
+
+/// Count objects in `stores` whose bytes differ from `local`'s.
+fn divergent_objects(local: &LfsStore, stores: &[LfsStore], oids: &[Oid]) -> Result<u64> {
+    let mut failures = 0u64;
+    for oid in oids {
+        let want = local.get(oid)?;
+        for (i, store) in stores.iter().enumerate() {
+            if !matches!(store.get(oid), Ok(ref b) if *b == want) {
+                eprintln!("replicate DIVERGED: mirror {i} lost or corrupted object {oid}");
+                failures += 1;
+            }
+        }
+    }
+    Ok(failures)
+}
+
+/// Phase 1: push at quorum 2-of-3 with one mirror dead, then revive it
+/// and prove anti-entropy repair converges all three stores.
+fn quorum_phase(cfg: &ReplicateConfig) -> Result<(u64, u64, u64)> {
+    let td = TempDir::new("bench-replicate-quorum")?;
+    let local = LfsStore::open(&td.join("local"));
+    let oids: Vec<Oid> = (0..cfg.objects)
+        .map(|i| local.put(&payload(cfg.seed, i)).map(|(o, _)| o))
+        .collect::<Result<_>>()?;
+
+    let (root_a, root_b, root_c) = (td.join("mirror-a"), td.join("mirror-b"), td.join("mirror-c"));
+    for root in [&root_a, &root_b, &root_c] {
+        std::fs::create_dir_all(root)?;
+    }
+    // Reserve an address for the third mirror, then leave it dead: a
+    // connect to it fails until the revival below binds the same port.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").context("reserving mirror c")?;
+    let addr = listener.local_addr()?;
+    drop(listener);
+
+    let replica = ReplicatedRemote::new(
+        vec![
+            Box::new(DirRemote::open(&root_a)),
+            Box::new(DirRemote::open(&root_b)),
+            Box::new(HttpRemote::open(&format!("http://{addr}"), Some(&td.join("staging")))?),
+        ],
+        Some(2),
+    );
+
+    batch::reset_stats();
+    let pushed = batch::push_pack(&local, &replica, &oids).context("quorum-degraded push")?;
+    ensure!(pushed.unavailable == 0, "quorum push left objects behind");
+    let shortfalls = batch::stats().quorum_shortfalls;
+    ensure!(shortfalls >= 1, "the dead mirror never registered a quorum shortfall");
+
+    // The dead mirror comes back empty on the same address; repair
+    // negotiates have/want against the union and ships what it missed.
+    let server = LfsServer::spawn_on(&root_c, &addr.to_string())?;
+    let report = replica.repair(2).context("anti-entropy repair")?;
+    ensure!(
+        report.laggards_healed == 1,
+        "expected exactly the revived mirror healed, got {}",
+        report.laggards_healed
+    );
+    ensure!(
+        report.objects_shipped == oids.len() as u64,
+        "repair shipped {} of {} missing objects",
+        report.objects_shipped,
+        oids.len()
+    );
+    let second = replica.repair(2)?;
+    ensure!(
+        second.objects_shipped == 0 && second.laggards_healed == 0,
+        "a second repair pass must find nothing to ship"
+    );
+
+    let stores = [
+        LfsStore::at(&root_a.join("lfs/objects")),
+        LfsStore::at(&root_b.join("lfs/objects")),
+        LfsStore::at(&root_c.join("lfs/objects")),
+    ];
+    let failures = divergent_objects(&local, &stores, &oids)?;
+    server.shutdown();
+    Ok((shortfalls, report.objects_shipped, failures))
+}
+
+/// Phase 2: kill mirror A's pack stream at byte `k` mid-fetch; one
+/// call must fail over and resume from the partial on mirror B.
+fn failover_phase(cfg: &ReplicateConfig) -> Result<(u64, u64, u64)> {
+    let td = TempDir::new("bench-replicate-failover")?;
+    let (root_a, root_b) = (td.join("server-a"), td.join("server-b"));
+    for root in [&root_a, &root_b] {
+        std::fs::create_dir_all(root)?;
+    }
+    let store_a = LfsStore::at(&root_a.join("lfs/objects"));
+    let store_b = LfsStore::at(&root_b.join("lfs/objects"));
+    let mut oids = Vec::with_capacity(cfg.objects);
+    for i in 0..cfg.objects {
+        let bytes = payload(cfg.seed ^ 0xF0F0, i);
+        oids.push(store_a.put(&bytes)?.0);
+        store_b.put(&bytes)?;
+    }
+    let server_a = LfsServer::spawn(&root_a)?;
+    let server_b = LfsServer::spawn(&root_b)?;
+    let proxy = FaultProxy::spawn(&server_a.url())?;
+
+    // Learn the pack size with an unfaulted fetch into a scratch store.
+    let scratch_root = td.join("scratch");
+    let scratch = LfsStore::open(&scratch_root);
+    let direct = HttpRemote::open(&server_b.url(), Some(&scratch_root))?;
+    let pack_bytes = batch::fetch_pack(&direct, &scratch, &oids)?.packed_bytes;
+    ensure!(pack_bytes > 2, "fixture pack too small to cut");
+    let k = pack_bytes / 2;
+
+    // Both mirrors share the fetching repo's staging dir, so the
+    // partial the dying mirror leaves is the prefix the survivor
+    // resumes (packs are content-addressed: same want set, same id).
+    let local_root = td.join("local");
+    let local = LfsStore::open(&local_root);
+    let replica = ReplicatedRemote::new(
+        vec![
+            Box::new(HttpRemote::open(&proxy.url(), Some(&local_root))?),
+            Box::new(HttpRemote::open(&server_b.url(), Some(&local_root))?),
+        ],
+        None,
+    );
+    proxy.arm(FaultSpec::kill(Direction::Download, k));
+    batch::reset_stats();
+    let summary = batch::fetch_pack(&replica, &local, &oids)
+        .context("fetch must survive a mid-pack mirror death")?;
+    let stats = batch::stats();
+    ensure!(proxy.fired() == 1, "the mid-pack kill never fired");
+    ensure!(
+        stats.mirror_failovers == 1,
+        "expected exactly one failover, saw {}",
+        stats.mirror_failovers
+    );
+    ensure!(
+        summary.resumed_bytes == k,
+        "failover resumed {} bytes; the dead mirror delivered exactly {k}",
+        summary.resumed_bytes
+    );
+    ensure!(
+        summary.wire_bytes == pack_bytes - k,
+        "survivor sent {} wire bytes; only the {}-byte tail after the cut may move",
+        summary.wire_bytes,
+        pack_bytes - k
+    );
+
+    let failures = divergent_objects(&store_a, &[local], &oids)?;
+    drop(proxy);
+    server_a.shutdown();
+    server_b.shutdown();
+    Ok((stats.mirror_failovers, summary.resumed_bytes, failures))
+}
+
+/// Run both phases. Convergence is reported, not assumed: a divergent
+/// run returns `converged: false` so the caller (CLI, gate) decides.
+pub fn run_replicate(cfg: &ReplicateConfig) -> Result<ReplicateOutcome> {
+    crate::init();
+    ensure!(cfg.objects >= 2, "replicate needs at least two objects");
+    eprintln!(
+        "replicate: {} objects, seed {} (replay: git-theta bench replicate {} {})",
+        cfg.objects, cfg.seed, cfg.objects, cfg.seed
+    );
+    let t0 = Instant::now();
+    let (quorum_shortfalls, repair_objects, quorum_failures) = quorum_phase(cfg)?;
+    let (failovers, resumed_bytes, failover_failures) = failover_phase(cfg)?;
+    let checksum_failures = quorum_failures + failover_failures;
+    Ok(ReplicateOutcome {
+        objects: cfg.objects,
+        converged: checksum_failures == 0,
+        quorum_shortfalls,
+        repair_objects,
+        failovers,
+        resumed_bytes,
+        checksum_failures,
+        replicate_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Human-readable summary of a replication run.
+pub fn render_replicate(out: &ReplicateOutcome) -> String {
+    format!(
+        "replicate: {} objects — {}\n\
+         quorum: {} shortfall(s) absorbed, repair shipped {} object(s)\n\
+         failover: {} mirror switch(es), {} bytes resumed from the dead mirror's partial; \
+         {} checksum failure(s); {:.2}s\n",
+        out.objects,
+        if out.converged { "CONVERGED" } else { "DIVERGED" },
+        out.quorum_shortfalls,
+        out.repair_objects,
+        out.failovers,
+        out.resumed_bytes,
+        out.checksum_failures,
+        out.replicate_secs,
+    )
+}
+
+/// Encode the run as the `BENCH_replicate.json` payload for the gate.
+pub fn replicate_to_json(cfg: &ReplicateConfig, out: &ReplicateOutcome) -> Json {
+    let mut root = JsonObj::new();
+    root.insert("bench", "replicate");
+    root.insert("objects", out.objects);
+    root.insert("seed", cfg.seed);
+    root.insert("converged", u64::from(out.converged));
+    root.insert("quorum_shortfalls", out.quorum_shortfalls);
+    root.insert("repair_objects", out.repair_objects);
+    root.insert("failovers", out.failovers);
+    root.insert("resumed_bytes", out.resumed_bytes);
+    root.insert("checksum_failures", out.checksum_failures);
+    root.insert("replicate_secs", Json::Num(out.replicate_secs));
+    Json::Obj(root)
+}
+
+/// `git-theta bench replicate [objects] [seed]`.
+pub fn run_replicate_cli(args: &[String]) -> Result<()> {
+    let cfg = ReplicateConfig {
+        objects: args.first().and_then(|s| s.parse().ok()).unwrap_or(8),
+        seed: args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0x5EED_0F_A11),
+    };
+    let out = run_replicate(&cfg)?;
+    print!("{}", render_replicate(&out));
+    let path = write_bench_json("replicate", replicate_to_json(&cfg, &out))?;
+    println!("wrote {}", path.display());
+    ensure!(out.converged, "replicate seed {} did not converge", cfg.seed);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payloads_are_deterministic_and_distinct() {
+        assert_eq!(payload(7, 0), payload(7, 0));
+        assert_ne!(payload(7, 0), payload(7, 1));
+        assert_ne!(payload(7, 0), payload(8, 0));
+    }
+
+    #[test]
+    fn tiny_replicate_run_converges_under_faults() {
+        let cfg = ReplicateConfig { objects: 3, seed: 41 };
+        let out = run_replicate(&cfg).unwrap();
+        assert!(out.converged, "tiny replicate run diverged");
+        assert!(out.quorum_shortfalls >= 1);
+        assert_eq!(out.repair_objects, 3);
+        assert_eq!(out.failovers, 1);
+        assert!(out.resumed_bytes >= 1);
+        assert_eq!(out.checksum_failures, 0);
+    }
+}

@@ -54,6 +54,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "fetch" => cmd_fetch(rest),
         "pull" => cmd_pull(rest),
         "clone" => cmd_clone(rest),
+        "replicate" => cmd_replicate(rest),
         "config" => cmd_config(rest),
         "serve" => cmd_serve(rest),
         "snapshot" => cmd_snapshot(rest),
@@ -92,11 +93,20 @@ COMMANDS:
                                  prints merge-engine statistics
   push <remote> [branch] [--pack|--per-object]
                                  push commits + LFS objects (packed by default);
-                                 <remote> is a directory or http://host:port
+                                 <remote> is a directory, http://host:port, or a
+                                 comma-separated replica set of mirrors (pushes
+                                 fan out and succeed at theta.replica-quorum)
   fetch <remote> [branch]        fetch commits + prefetch model objects as one
-                                 pack (interrupted pack transfers resume)
+                                 pack (interrupted pack transfers resume; a
+                                 replica set serves from its healthiest mirror
+                                 and fails over mid-pack)
   pull <remote> [branch]         pull commits + metadata
-  clone <remote> <dir>           clone a remote (directory or http://)
+  clone <remote> <dir>           clone a remote (directory, http://, or a
+                                 replica set)
+  replicate [--repair] [remote] [branch]
+                                 show replica-set mirror status; --repair runs
+                                 the anti-entropy pass (ships objects mirrors
+                                 missed and fast-forwards lagging branch tips)
   serve <root-dir> [--port N] [--bind HOST]
                                  serve a remote root over http (LFS batch
                                  protocol + resumable packs + commit/ref sync;
@@ -104,7 +114,10 @@ COMMANDS:
   config <key> [<value>]         get/set repo config (e.g. remote,
                                  theta.snapshot-depth; theta.gc-report
                                  off silences post-snapshot/merge gc
-                                 dry-run reports)
+                                 dry-run reports; theta.gc-auto on prunes
+                                 those orphans automatically;
+                                 theta.replica-quorum N sets the replica
+                                 write quorum, default all mirrors)
   snapshot <path...>             re-anchor tracked models as dense entries
                                  (bounds checkout chain depth; then commit)
   gc [--prune]                   report LFS objects no branch, HEAD, or the
@@ -122,17 +135,38 @@ fn open_repo() -> Result<Repository> {
 /// orphan store objects (snapshot re-anchoring, merge resolutions).
 /// Prints nothing when the store is clean, and never fails the parent
 /// command. Silenced by setting the `theta.gc-report` config key to
-/// `off`, `false`, or `0`.
+/// `off`, `false`, or `0`. With `theta.gc-auto` set to `on`, `true`,
+/// or `1` the orphans are pruned on the spot instead of just reported
+/// — under the same plan-instant safety rule as `gc --prune`: an
+/// orphan a concurrent put re-stores after the plan was computed is
+/// spared, never deleted.
 fn maybe_print_gc_report(repo: &Repository) {
     match repo.config_get("theta.gc-report") {
         Ok(Some(v)) if matches!(v.trim(), "off" | "false" | "0") => return,
         Err(_) => return,
         _ => {}
     }
-    let Ok((report, _)) = crate::theta::plan_garbage(repo) else {
+    let Ok((mut report, started)) = crate::theta::plan_garbage(repo) else {
         return;
     };
     if report.orphaned.is_empty() {
+        return;
+    }
+    if gc_auto_enabled(repo) {
+        if auto_prune_planned(repo, &mut report, started).is_err() {
+            return;
+        }
+        println!(
+            "gc: auto-pruned {} orphaned object(s), freed {}{} \
+             (disable with `git-theta config theta.gc-auto off`)",
+            report.orphaned.len(),
+            humansize::bytes(report.orphaned_bytes),
+            if report.spared > 0 {
+                format!("; spared {} concurrently re-stored", report.spared)
+            } else {
+                String::new()
+            }
+        );
         return;
     }
     println!(
@@ -141,6 +175,31 @@ fn maybe_print_gc_report(repo: &Repository) {
         report.orphaned.len(),
         humansize::bytes(report.orphaned_bytes)
     );
+}
+
+/// Whether `theta.gc-auto` opts this repo into pruning right after the
+/// post-snapshot/merge report.
+fn gc_auto_enabled(repo: &Repository) -> bool {
+    matches!(
+        repo.config_get("theta.gc-auto")
+            .ok()
+            .flatten()
+            .as_deref()
+            .map(str::trim),
+        Some("on" | "true" | "1")
+    )
+}
+
+/// Prune a computed gc plan (the `theta.gc-auto` action), preserving
+/// the plan-instant spare rule. Split out so tests can interleave a
+/// racing `put` between the plan and the prune.
+fn auto_prune_planned(
+    repo: &Repository,
+    report: &mut crate::theta::GcReport,
+    started: std::time::SystemTime,
+) -> Result<()> {
+    let store = crate::lfs::LfsStore::open(repo.theta_dir());
+    crate::theta::prune_plan(&store, report, started)
 }
 
 fn cmd_init(args: &[String]) -> Result<()> {
@@ -465,6 +524,80 @@ fn cmd_clone(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_replicate(args: &[String]) -> Result<()> {
+    let repo = open_repo()?;
+    let mut repair = false;
+    let mut remote = None;
+    let mut branch = None;
+    for arg in args {
+        match arg.as_str() {
+            "--repair" => repair = true,
+            other if other.starts_with("--") => bail!("unknown replicate flag '{other}'"),
+            other if remote.is_none() => remote = Some(other.to_string()),
+            other if branch.is_none() => branch = Some(other.to_string()),
+            other => bail!("unexpected replicate argument '{other}'"),
+        }
+    }
+    let remote = match remote {
+        Some(r) => r,
+        None => repo.config_get("remote")?.context(
+            "usage: git-theta replicate [--repair] <remote> [branch] (or set a `remote` config)",
+        )?,
+    };
+    let branch = branch.as_deref().unwrap_or("main");
+    let spec = RemoteSpec::parse(&remote)?;
+    let mirrors = spec.mirrors();
+    if mirrors.len() < 2 {
+        bail!("'{spec}' is not a replica set; give a comma-separated mirror list");
+    }
+    let replica = crate::lfs::ReplicatedRemote::open(&mirrors, Some(repo.theta_dir()))?;
+    println!(
+        "replica set: {} mirror(s), write quorum {}",
+        replica.mirror_count(),
+        replica.quorum()
+    );
+
+    if !repair {
+        // Status: per-mirror inventory so a lagging mirror is visible
+        // before anyone trips over it on fetch.
+        for (i, m) in mirrors.iter().enumerate() {
+            let transport = crate::lfs::open_transport(m, Some(repo.theta_dir()))?;
+            match transport.list_oids() {
+                Ok(Some(oids)) => println!("  [{i}] {m}: {} LFS object(s)", oids.len()),
+                Ok(None) => println!("  [{i}] {m}: inventory unsupported (old server)"),
+                Err(e) => println!("  [{i}] {m}: unreachable ({e:#})"),
+            }
+        }
+        return Ok(());
+    }
+
+    // Anti-entropy: converge the LFS stores first so a laggard's branch
+    // tip never lands before the objects its commits reference.
+    let report = replica.repair(crate::util::par::default_threads())?;
+    println!(
+        "lfs repair: {} object(s) across {} mirror(s); healed {} laggard(s), \
+         shipped {} object(s) ({} on the wire)",
+        report.union_objects,
+        report.mirrors,
+        report.laggards_healed,
+        report.objects_shipped,
+        humansize::bytes(report.wire_bytes_shipped)
+    );
+    let refs = repo.repair_replica_refs(&mirrors, branch)?;
+    if refs.diverged {
+        eprintln!("warning: mirrors hold diverged '{branch}' tips; merge and push to resolve");
+    } else if let Some(tip) = refs.tip {
+        println!(
+            "ref repair: '{branch}' at {} on all mirrors ({} fast-forwarded)",
+            tip.short(),
+            refs.fast_forwarded
+        );
+    } else {
+        println!("ref repair: no mirror holds branch '{branch}'");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let mut root = None;
     let mut port = 0u16;
@@ -724,6 +857,114 @@ mod tests {
             maybe_print_gc_report(&repo);
             // The report never deletes: the orphan must still exist.
             assert_eq!(store.list()?.len(), 1);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gc_auto_prunes_orphans_and_spares_concurrent_restores() {
+        let td = TempDir::new("cli-gcauto").unwrap();
+        in_dir(td.path(), || {
+            dispatch(&sv(&["init"]))?;
+            std::fs::write("notes.txt", "keep")?;
+            dispatch(&sv(&["add", "notes.txt"]))?;
+            dispatch(&sv(&["commit", "-m", "base"]))?;
+            let repo = open_repo()?;
+            let store = crate::lfs::LfsStore::open(repo.theta_dir());
+            // Age an object so only a fresh put (not its original
+            // write) can move its mtime past a gc plan instant.
+            let age = |oid: &crate::gitcore::object::Oid| {
+                let hex = oid.to_hex();
+                let f = std::fs::OpenOptions::new()
+                    .write(true)
+                    .open(
+                        repo.theta_dir()
+                            .join("lfs/objects")
+                            .join(format!("{}/{}", &hex[..2], &hex[2..])),
+                    )
+                    .unwrap();
+                f.set_modified(std::time::SystemTime::now() - std::time::Duration::from_secs(3600))
+                    .unwrap();
+            };
+
+            // gc-auto off (the default): the report-only path never deletes.
+            let (doomed, _) = store.put(b"left behind by an abandoned merge")?;
+            age(&doomed);
+            maybe_print_gc_report(&repo);
+            assert!(store.contains(&doomed));
+
+            // gc-auto on: the same call prunes the orphan on the spot.
+            dispatch(&sv(&["config", "theta.gc-auto", "on"]))?;
+            maybe_print_gc_report(&repo);
+            assert!(!store.contains(&doomed), "gc-auto left the orphan behind");
+
+            // Regression: an orphan re-stored after the plan instant
+            // must be spared — auto-prune rides the same safety rule
+            // as `gc --prune`.
+            let payload = b"resolution re-stored mid-prune";
+            let (racy, _) = store.put(payload)?;
+            age(&racy);
+            let (mut report, started) = crate::theta::plan_garbage(&repo)?;
+            assert!(report.orphaned.contains(&racy));
+            store.put(payload)?; // the race: mtime freshens past the plan
+            auto_prune_planned(&repo, &mut report, started)?;
+            assert!(store.contains(&racy), "auto-prune deleted a re-stored object");
+            assert_eq!(report.spared, 1);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replicate_status_and_repair_converge_mirrors() {
+        let td = TempDir::new("cli-replicate").unwrap();
+        let work = td.join("work");
+        std::fs::create_dir_all(&work).unwrap();
+        let ma = td.join("mirror-a");
+        let mb = td.join("mirror-b");
+        let (ma_s, mb_s) = (ma.display().to_string(), mb.display().to_string());
+        let set = format!("{ma_s},{mb_s}");
+        in_dir(&work, || {
+            dispatch(&sv(&["init"]))?;
+            dispatch(&sv(&["lfs-track", "*.bin"]))?;
+            std::fs::write("w.bin", vec![7u8; 2048])?;
+            dispatch(&sv(&["add", "w.bin", ".thetaattributes"]))?;
+            dispatch(&sv(&["commit", "-m", "v1"]))?;
+            dispatch(&sv(&["push", set.as_str(), "main"]))?;
+
+            // A plain spec is not a replica set; status over the
+            // healthy set works.
+            assert!(dispatch(&sv(&["replicate", ma_s.as_str()])).is_err());
+            dispatch(&sv(&["replicate", set.as_str()]))?;
+
+            // Advance only mirror a: b now lags by one commit and one
+            // LFS object (a quorum-shortfall push in miniature).
+            std::fs::write("w.bin", vec![9u8; 2048])?;
+            dispatch(&sv(&["add", "w.bin"]))?;
+            dispatch(&sv(&["commit", "-m", "v2"]))?;
+            dispatch(&sv(&["push", ma_s.as_str(), "main"]))?;
+
+            use crate::gitcore::remote::open_endpoint;
+            let ea = open_endpoint(&RemoteSpec::parse(&ma_s)?)?;
+            let eb = open_endpoint(&RemoteSpec::parse(&mb_s)?)?;
+            assert_ne!(ea.branch("main")?, eb.branch("main")?);
+
+            dispatch(&sv(&["replicate", "--repair", set.as_str(), "main"]))?;
+
+            let tip = ea.branch("main")?;
+            assert!(tip.is_some());
+            assert_eq!(tip, eb.branch("main")?, "branch tips did not converge");
+            let sa = crate::lfs::LfsStore::at(&ma.join("lfs/objects"));
+            let sb = crate::lfs::LfsStore::at(&mb.join("lfs/objects"));
+            let (mut la, mut lb) = (sa.list()?, sb.list()?);
+            la.sort();
+            lb.sort();
+            assert_eq!(la, lb, "LFS stores did not converge");
+            assert_eq!(la.len(), 2);
+            for oid in &la {
+                assert_eq!(sa.get(oid)?, sb.get(oid)?, "object bytes differ across mirrors");
+            }
+            // Idempotent: a second repair finds nothing to ship.
+            dispatch(&sv(&["replicate", "--repair", set.as_str(), "main"]))?;
             Ok(())
         });
     }

@@ -14,13 +14,18 @@ use anyhow::Result;
 use std::collections::BTreeMap;
 use std::path::Path;
 
+/// File name the attribute rules are read from at the worktree root
+/// (this repo's analogue of `.gitattributes`).
 pub const ATTRIBUTES_FILE: &str = ".thetaattributes";
 
 /// Value of one attribute for one file.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum AttrValue {
+    /// The attribute is present with no value (`pattern attr`).
     Set,
+    /// The attribute is explicitly removed (`pattern -attr`).
     Unset,
+    /// The attribute carries a value (`pattern attr=value`).
     Value(String),
 }
 
@@ -37,6 +42,8 @@ pub struct Attributes {
 }
 
 impl Attributes {
+    /// Parse attributes-file text into an ordered rule list (later
+    /// lines override earlier ones, as in Git).
     pub fn parse(text: &str) -> Attributes {
         let mut rules = Vec::new();
         for line in text.lines() {

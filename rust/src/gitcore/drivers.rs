@@ -103,38 +103,47 @@ static REGISTRIES: Lazy<RwLock<Registries>> = Lazy::new(|| RwLock::new(Registrie
 pub struct DriverRegistry;
 
 impl DriverRegistry {
+    /// Register (or replace) the clean/smudge filter driver `name`.
     pub fn register_filter(name: &str, driver: Arc<dyn FilterDriver>) {
         REGISTRIES.write().unwrap().filters.insert(name.to_string(), driver);
     }
 
+    /// Register (or replace) the diff driver `name`.
     pub fn register_diff(name: &str, driver: Arc<dyn DiffDriver>) {
         REGISTRIES.write().unwrap().diffs.insert(name.to_string(), driver);
     }
 
+    /// Register (or replace) the merge driver `name`.
     pub fn register_merge(name: &str, driver: Arc<dyn MergeDriver>) {
         REGISTRIES.write().unwrap().merges.insert(name.to_string(), driver);
     }
 
+    /// Append a hook set; all registered hooks run on push/fetch.
     pub fn register_hooks(hooks: Arc<dyn Hooks>) {
         REGISTRIES.write().unwrap().hooks.push(hooks);
     }
 
+    /// Look up the filter driver registered under `name`.
     pub fn filter(name: &str) -> Option<Arc<dyn FilterDriver>> {
         REGISTRIES.read().unwrap().filters.get(name).cloned()
     }
 
+    /// Look up the diff driver registered under `name`.
     pub fn diff(name: &str) -> Option<Arc<dyn DiffDriver>> {
         REGISTRIES.read().unwrap().diffs.get(name).cloned()
     }
 
+    /// Look up the merge driver registered under `name`.
     pub fn merge(name: &str) -> Option<Arc<dyn MergeDriver>> {
         REGISTRIES.read().unwrap().merges.get(name).cloned()
     }
 
+    /// Every registered hook set, in registration order.
     pub fn all_hooks() -> Vec<Arc<dyn Hooks>> {
         REGISTRIES.read().unwrap().hooks.clone()
     }
 
+    /// Names of all registered filter drivers (sorted).
     pub fn filter_names() -> Vec<String> {
         REGISTRIES.read().unwrap().filters.keys().cloned().collect()
     }

@@ -13,6 +13,8 @@ use std::path::{Path, PathBuf};
 /// One staged file.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct IndexEntry {
+    /// Oid of the staged blob (the clean-filter output for filtered
+    /// files).
     pub oid: Oid,
     /// Size of the staged blob in bytes.
     pub size: u64,
@@ -29,10 +31,12 @@ pub struct Index {
 }
 
 impl Index {
+    /// An empty index.
     pub fn new() -> Index {
         Index::default()
     }
 
+    /// Load the index from `.theta/index` (empty if absent).
     pub fn load(theta_dir: &Path) -> Result<Index> {
         let path = index_path(theta_dir);
         if !path.exists() {
@@ -67,6 +71,7 @@ impl Index {
         Ok(Index { entries })
     }
 
+    /// Persist the index to `.theta/index`.
     pub fn save(&self, theta_dir: &Path) -> Result<()> {
         let mut obj = JsonObj::new();
         for (path, e) in &self.entries {
@@ -83,26 +88,32 @@ impl Index {
             .context("writing index")
     }
 
+    /// Stage `path` at `oid` (replacing any previous entry).
     pub fn stage(&mut self, path: impl Into<String>, oid: Oid, size: u64, raw: Oid) {
         self.entries.insert(path.into(), IndexEntry { oid, size, raw });
     }
 
+    /// Remove `path` from the index, returning its entry if staged.
     pub fn unstage(&mut self, path: &str) -> Option<IndexEntry> {
         self.entries.remove(path)
     }
 
+    /// The staged entry for `path`, if any.
     pub fn get(&self, path: &str) -> Option<&IndexEntry> {
         self.entries.get(path)
     }
 
+    /// Iterate staged `(path, entry)` pairs in path order.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &IndexEntry)> {
         self.entries.iter()
     }
 
+    /// Number of staged entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether nothing is staged.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

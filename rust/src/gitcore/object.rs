@@ -10,16 +10,19 @@ use std::fmt;
 pub struct Oid(pub [u8; 32]);
 
 impl Oid {
+    /// Hash raw bytes into an oid (sha256 of the encoded object).
     pub fn of_bytes(bytes: &[u8]) -> Oid {
         let mut h = Sha256::new();
         h.update(bytes);
         Oid(h.finalize().into())
     }
 
+    /// Lowercase 64-char hex form.
     pub fn to_hex(&self) -> String {
         hex::encode(&self.0)
     }
 
+    /// Parse a 64-char hex id (surrounding whitespace tolerated).
     pub fn from_hex(s: &str) -> Result<Oid> {
         let bytes = hex::decode(s.trim()).context("invalid hex oid")?;
         let arr: [u8; 32] = bytes
@@ -54,23 +57,28 @@ impl fmt::Display for Oid {
 /// negligible at checkpoint-metadata scale.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TreeEntry {
+    /// Path of the tracked file, relative to the worktree root.
     pub path: String,
+    /// Blob oid the path resolves to at this commit.
     pub oid: Oid,
 }
 
 /// A flat tree (sorted by path).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Tree {
+    /// Entries sorted by path (see [`Tree::from_entries`]).
     pub entries: Vec<TreeEntry>,
 }
 
 impl Tree {
+    /// Build a tree, sorting by path and dropping duplicate paths.
     pub fn from_entries(mut entries: Vec<TreeEntry>) -> Tree {
         entries.sort_by(|a, b| a.path.cmp(&b.path));
         entries.dedup_by(|a, b| a.path == b.path);
         Tree { entries }
     }
 
+    /// Look up the blob oid for a path (binary search).
     pub fn get(&self, path: &str) -> Option<Oid> {
         self.entries
             .binary_search_by(|e| e.path.as_str().cmp(path))
@@ -78,6 +86,7 @@ impl Tree {
             .map(|i| self.entries[i].oid)
     }
 
+    /// All tracked paths, in sorted order.
     pub fn paths(&self) -> impl Iterator<Item = &str> {
         self.entries.iter().map(|e| e.path.as_str())
     }
@@ -86,23 +95,31 @@ impl Tree {
 /// A commit object.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Commit {
+    /// The tree snapshot this commit records.
     pub tree: Oid,
+    /// Parent commits (empty for a root, two for a merge).
     pub parents: Vec<Oid>,
+    /// Free-form author string.
     pub author: String,
     /// Seconds since the epoch.
     pub timestamp: u64,
+    /// Commit message.
     pub message: String,
 }
 
 /// Any object in the database.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Object {
+    /// Raw file contents.
     Blob(Vec<u8>),
+    /// A flat path manifest.
     Tree(Tree),
+    /// A history node.
     Commit(Commit),
 }
 
 impl Object {
+    /// Object type name: `"blob"`, `"tree"`, or `"commit"`.
     pub fn kind(&self) -> &'static str {
         match self {
             Object::Blob(_) => "blob",

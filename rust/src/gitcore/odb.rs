@@ -15,12 +15,14 @@ pub struct Odb {
 }
 
 impl Odb {
+    /// Open the store under `<theta_dir>/objects` (need not exist yet).
     pub fn open(theta_dir: &Path) -> Odb {
         Odb {
             root: theta_dir.join("objects"),
         }
     }
 
+    /// Open the store and create its directory on disk.
     pub fn init(theta_dir: &Path) -> Result<Odb> {
         let odb = Odb::open(theta_dir);
         std::fs::create_dir_all(&odb.root).context("creating objects dir")?;
@@ -32,6 +34,7 @@ impl Odb {
         self.root.join(&hex[..2]).join(&hex[2..])
     }
 
+    /// Whether the object is present on disk.
     pub fn contains(&self, oid: &Oid) -> bool {
         self.path_for(oid).exists()
     }
@@ -74,6 +77,7 @@ impl Odb {
         Object::decode(&encoded)
     }
 
+    /// Read an object that must be a blob.
     pub fn read_blob(&self, oid: &Oid) -> Result<Vec<u8>> {
         match self.read(oid)? {
             Object::Blob(data) => Ok(data),
@@ -81,6 +85,7 @@ impl Odb {
         }
     }
 
+    /// Read an object that must be a tree.
     pub fn read_tree(&self, oid: &Oid) -> Result<Tree> {
         match self.read(oid)? {
             Object::Tree(t) => Ok(t),
@@ -88,6 +93,7 @@ impl Odb {
         }
     }
 
+    /// Read an object that must be a commit.
     pub fn read_commit(&self, oid: &Oid) -> Result<Commit> {
         match self.read(oid)? {
             Object::Commit(c) => Ok(c),
@@ -95,6 +101,7 @@ impl Odb {
         }
     }
 
+    /// Store raw bytes as a blob; returns its oid.
     pub fn write_blob(&self, data: Vec<u8>) -> Result<Oid> {
         self.write(&Object::Blob(data))
     }

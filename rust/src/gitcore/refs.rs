@@ -14,17 +14,20 @@ pub enum Head {
 }
 
 #[derive(Debug, Clone)]
+/// Loose-file ref storage under `<theta_dir>/refs/heads` plus `HEAD`.
 pub struct Refs {
     theta_dir: PathBuf,
 }
 
 impl Refs {
+    /// Open the ref store rooted at `theta_dir` (need not exist yet).
     pub fn open(theta_dir: &Path) -> Refs {
         Refs {
             theta_dir: theta_dir.to_path_buf(),
         }
     }
 
+    /// Create the ref layout and point HEAD at `default_branch`.
     pub fn init(theta_dir: &Path, default_branch: &str) -> Result<Refs> {
         let refs = Refs::open(theta_dir);
         std::fs::create_dir_all(theta_dir.join("refs/heads"))?;
@@ -47,6 +50,7 @@ impl Refs {
         Ok(self.theta_dir.join("refs/heads").join(name))
     }
 
+    /// Read HEAD: either a branch pointer or a detached commit.
     pub fn head(&self) -> Result<Head> {
         let text = std::fs::read_to_string(self.head_path()).context("reading HEAD")?;
         let text = text.trim();
@@ -57,6 +61,7 @@ impl Refs {
         }
     }
 
+    /// Rewrite HEAD.
     pub fn set_head(&self, head: &Head) -> Result<()> {
         let content = match head {
             Head::Branch(name) => format!("ref: refs/heads/{name}\n"),
@@ -73,6 +78,7 @@ impl Refs {
         }
     }
 
+    /// Read a branch tip (None if the branch does not exist).
     pub fn branch(&self, name: &str) -> Result<Option<Oid>> {
         let path = self.branch_path(name)?;
         if !path.exists() {
@@ -82,6 +88,7 @@ impl Refs {
         Ok(Some(Oid::from_hex(text.trim())?))
     }
 
+    /// Point a branch at a commit, creating it if needed.
     pub fn set_branch(&self, name: &str, oid: &Oid) -> Result<()> {
         let path = self.branch_path(name)?;
         if let Some(parent) = path.parent() {
@@ -90,6 +97,7 @@ impl Refs {
         std::fs::write(path, format!("{oid}\n")).context("writing branch ref")
     }
 
+    /// Remove a branch ref (no-op if absent).
     pub fn delete_branch(&self, name: &str) -> Result<()> {
         let path = self.branch_path(name)?;
         if path.exists() {
@@ -98,6 +106,7 @@ impl Refs {
         Ok(())
     }
 
+    /// All branches as `(name, tip)` pairs, sorted by name.
     pub fn branches(&self) -> Result<Vec<(String, Oid)>> {
         let dir = self.theta_dir.join("refs/heads");
         let mut out = Vec::new();

@@ -20,14 +20,19 @@ use anyhow::{bail, Context, Result};
 use std::fmt;
 use std::path::{Path, PathBuf};
 
-/// Where a remote lives: a directory on this filesystem or an HTTP
-/// server speaking the `git-theta serve` protocol.
+/// Where a remote lives: a directory on this filesystem, an HTTP
+/// server speaking the `git-theta serve` protocol, or a replica set of
+/// several such mirrors addressed as one logical remote.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RemoteSpec {
     /// A bare directory remote (the seed's only kind).
     Dir(PathBuf),
     /// An `http://host:port` endpoint.
     Http(String),
+    /// A comma-separated replica set of two or more mirrors (Dir or
+    /// Http, mixed). Pushes fan out to every mirror and succeed at a
+    /// write quorum; fetches fail over between them.
+    Replica(Vec<RemoteSpec>),
 }
 
 impl RemoteSpec {
@@ -36,8 +41,21 @@ impl RemoteSpec {
     /// any *other* `<scheme>://` is rejected — silently treating
     /// `https://host` as a local directory would fabricate a directory
     /// literally named `https:/host` and report a successful push that
-    /// never left the machine.
+    /// never left the machine. A comma-separated list of endpoints
+    /// parses as a [`RemoteSpec::Replica`] set; duplicate entries are
+    /// dropped with a warning (a duplicated mirror would silently
+    /// double-push), and a list whose entries are *all* the same
+    /// endpoint is rejected outright — it is one remote wearing a
+    /// replica costume, and accepting it would report N-way redundancy
+    /// that does not exist.
     pub fn parse(s: &str) -> Result<RemoteSpec> {
+        if s.contains(',') {
+            return RemoteSpec::parse_replica(s);
+        }
+        RemoteSpec::parse_single(s)
+    }
+
+    fn parse_single(s: &str) -> Result<RemoteSpec> {
         if s.starts_with("http://") {
             return Ok(RemoteSpec::Http(s.trim_end_matches('/').to_string()));
         }
@@ -48,6 +66,51 @@ impl RemoteSpec {
             );
         }
         Ok(RemoteSpec::Dir(PathBuf::from(s)))
+    }
+
+    fn parse_replica(s: &str) -> Result<RemoteSpec> {
+        let entries: Vec<&str> = s.split(',').map(str::trim).filter(|e| !e.is_empty()).collect();
+        if entries.is_empty() {
+            bail!("empty replica set '{s}' — list at least one endpoint");
+        }
+        let mut mirrors: Vec<RemoteSpec> = Vec::new();
+        let mut dropped = 0usize;
+        for entry in &entries {
+            let spec = RemoteSpec::parse_single(entry)?;
+            if mirrors.contains(&spec) {
+                eprintln!(
+                    "warning: duplicate mirror '{spec}' in replica set dropped \
+                     (it would be pushed twice)"
+                );
+                dropped += 1;
+            } else {
+                mirrors.push(spec);
+            }
+        }
+        if mirrors.len() == 1 {
+            if dropped > 0 {
+                // Fail closed: every entry named the same endpoint, so
+                // the promised redundancy is fictional.
+                bail!(
+                    "replica set '{s}' lists the same endpoint {} times — \
+                     a replica set needs at least two distinct mirrors",
+                    dropped + 1
+                );
+            }
+            // A single-entry "list" (e.g. a trailing comma) is just
+            // that endpoint; no replica wrapper.
+            return Ok(mirrors.remove(0));
+        }
+        Ok(RemoteSpec::Replica(mirrors))
+    }
+
+    /// The individual mirrors this spec addresses: the set's members
+    /// for a replica, otherwise the spec itself.
+    pub fn mirrors(&self) -> Vec<RemoteSpec> {
+        match self {
+            RemoteSpec::Replica(set) => set.clone(),
+            other => vec![other.clone()],
+        }
     }
 
     /// Classify a path-typed remote (legacy call sites); a path whose
@@ -61,9 +124,14 @@ impl RemoteSpec {
         }
     }
 
-    /// Whether this spec addresses an HTTP remote.
+    /// Whether this spec addresses an HTTP remote (for a replica set:
+    /// whether any mirror does).
     pub fn is_http(&self) -> bool {
-        matches!(self, RemoteSpec::Http(_))
+        match self {
+            RemoteSpec::Http(_) => true,
+            RemoteSpec::Replica(set) => set.iter().any(RemoteSpec::is_http),
+            RemoteSpec::Dir(_) => false,
+        }
     }
 }
 
@@ -72,6 +140,15 @@ impl fmt::Display for RemoteSpec {
         match self {
             RemoteSpec::Dir(p) => write!(f, "{}", p.display()),
             RemoteSpec::Http(url) => f.write_str(url),
+            RemoteSpec::Replica(set) => {
+                for (i, spec) in set.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{spec}")?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -107,11 +184,154 @@ pub trait GitEndpoint {
 }
 
 /// Open the endpoint a spec addresses (directories are created lazily).
+/// A replica set opens as a [`ReplicatedEndpoint`] requiring every
+/// mirror for writes; use [`open_endpoint_with_quorum`] to relax that.
 pub fn open_endpoint(spec: &RemoteSpec) -> Result<Box<dyn GitEndpoint>> {
+    open_endpoint_with_quorum(spec, None)
+}
+
+/// Open the endpoint a spec addresses with an explicit write quorum
+/// for replica sets (`None` = all mirrors; clamped to `1..=N`).
+/// Non-replica specs ignore `quorum`.
+pub fn open_endpoint_with_quorum(
+    spec: &RemoteSpec,
+    quorum: Option<usize>,
+) -> Result<Box<dyn GitEndpoint>> {
     Ok(match spec {
         RemoteSpec::Dir(path) => Box::new(DirEndpoint::open_or_init(path)?),
         RemoteSpec::Http(url) => Box::new(HttpEndpoint::open(url)?),
+        RemoteSpec::Replica(set) => {
+            let mirrors = set
+                .iter()
+                .map(open_endpoint)
+                .collect::<Result<Vec<_>>>()?;
+            Box::new(ReplicatedEndpoint::new(mirrors, quorum))
+        }
     })
+}
+
+/// Commit/ref replication over N mirrors: reads come from the first
+/// mirror that answers (falling through dead or lacking ones), writes
+/// fan out to every mirror and succeed once `quorum` of them do.
+///
+/// A mirror that missed an earlier quorum write fails its CAS on the
+/// next push (its tip is behind the expectation read from a fresh
+/// mirror) and simply stays behind, still internally consistent at its
+/// old tip — `git-theta replicate --repair` fast-forwards it. This is
+/// the odb/ref twin of the LFS-side
+/// [`ReplicatedRemote`](crate::lfs::replicate::ReplicatedRemote).
+pub struct ReplicatedEndpoint {
+    mirrors: Vec<Box<dyn GitEndpoint>>,
+    quorum: usize,
+}
+
+impl ReplicatedEndpoint {
+    /// Wrap `mirrors` with a write quorum (`None` = all, clamped to
+    /// `1..=N`).
+    pub fn new(mirrors: Vec<Box<dyn GitEndpoint>>, quorum: Option<usize>) -> ReplicatedEndpoint {
+        let n = mirrors.len().max(1);
+        let quorum = quorum.unwrap_or(n).clamp(1, n);
+        ReplicatedEndpoint { mirrors, quorum }
+    }
+
+    /// Run `op` against mirrors in order, returning the first success;
+    /// if every mirror fails, the last error (with fall-through
+    /// context) surfaces.
+    fn first_ok<T>(
+        &self,
+        what: &str,
+        op: impl Fn(&dyn GitEndpoint) -> Result<T>,
+    ) -> Result<T> {
+        let mut last: Option<anyhow::Error> = None;
+        for mirror in &self.mirrors {
+            match op(mirror.as_ref()) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last
+            .unwrap_or_else(|| anyhow::anyhow!("replica set has no mirrors"))
+            .context(format!("{what} failed on every mirror of the replica set")))
+    }
+
+    /// Fan `op` out to every mirror; succeed once `quorum` do,
+    /// otherwise surface an error naming each mirror failure.
+    fn quorum_write(&self, what: &str, op: impl Fn(&dyn GitEndpoint) -> Result<()>) -> Result<()> {
+        let mut successes = 0usize;
+        let mut failures: Vec<String> = Vec::new();
+        for (i, mirror) in self.mirrors.iter().enumerate() {
+            match op(mirror.as_ref()) {
+                Ok(()) => successes += 1,
+                Err(e) => failures.push(format!("mirror {i}: {e:#}")),
+            }
+        }
+        if successes >= self.quorum {
+            return Ok(());
+        }
+        bail!(
+            "{what}: write quorum not met ({successes}/{} mirrors succeeded, quorum {}): {}",
+            self.mirrors.len(),
+            self.quorum,
+            failures.join("; ")
+        );
+    }
+}
+
+impl GitEndpoint for ReplicatedEndpoint {
+    fn branch(&self, name: &str) -> Result<Option<Oid>> {
+        self.first_ok("reading branch tip", |m| m.branch(name))
+    }
+
+    fn set_branch(&self, name: &str, expected: Option<Oid>, new: &Oid) -> Result<()> {
+        self.quorum_write("updating branch tip", |m| m.set_branch(name, expected, new))
+    }
+
+    fn contains(&self, oid: &Oid) -> Result<bool> {
+        self.first_ok("odb membership check", |m| m.contains(oid))
+    }
+
+    fn read(&self, oid: &Oid) -> Result<Object> {
+        // Fall through mirrors that lack the object (a laggard replica)
+        // as well as dead ones — any holder serves the read.
+        self.first_ok("odb read", |m| m.read(oid))
+    }
+
+    fn write(&self, obj: &Object) -> Result<()> {
+        self.quorum_write("odb write", |m| m.write(obj))
+    }
+
+    fn missing(&self, oids: &[Oid]) -> Result<Vec<Oid>> {
+        // Union across reachable mirrors: an object any mirror lacks
+        // must be pushed (writes are idempotent, so mirrors that
+        // already hold it dedup on arrival). At least one mirror must
+        // answer, or the push has nothing truthful to go on.
+        let mut missing: Vec<Oid> = Vec::new();
+        let mut answered = false;
+        let mut last: Option<anyhow::Error> = None;
+        for mirror in &self.mirrors {
+            match mirror.missing(oids) {
+                Ok(m) => {
+                    answered = true;
+                    for oid in m {
+                        if !missing.contains(&oid) {
+                            missing.push(oid);
+                        }
+                    }
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        if !answered {
+            return Err(last
+                .unwrap_or_else(|| anyhow::anyhow!("replica set has no mirrors"))
+                .context("odb negotiation failed on every mirror of the replica set"));
+        }
+        Ok(missing)
+    }
+
+    fn commits_between(&self, tip: Oid, exclude: &[Oid]) -> Result<Vec<Oid>> {
+        self.first_ok("history walk", |m| m.commits_between(tip, exclude))
+    }
 }
 
 /// A bare directory remote: just an odb and refs (the seed's
@@ -341,6 +561,105 @@ mod tests {
         // directory named after the URL.
         assert!(RemoteSpec::parse("https://models.lab:8417").is_err());
         assert!(RemoteSpec::parse("ssh://host/repo").is_err());
+    }
+
+    #[test]
+    fn replica_spec_parses_dedups_and_fails_closed() {
+        // Mixed-kind list parses, preserves order, and round-trips
+        // through Display.
+        let spec = RemoteSpec::parse("/srv/a,http://h:1,/srv/b").unwrap();
+        assert_eq!(
+            spec,
+            RemoteSpec::Replica(vec![
+                RemoteSpec::Dir(PathBuf::from("/srv/a")),
+                RemoteSpec::Http("http://h:1".into()),
+                RemoteSpec::Dir(PathBuf::from("/srv/b")),
+            ])
+        );
+        assert_eq!(spec.to_string(), "/srv/a,http://h:1,/srv/b");
+        assert_eq!(RemoteSpec::parse(&spec.to_string()).unwrap(), spec);
+        assert!(spec.is_http());
+        assert_eq!(spec.mirrors().len(), 3);
+
+        // Duplicates are dropped (with a warning), not double-pushed.
+        assert_eq!(
+            RemoteSpec::parse("/srv/a,/srv/b,/srv/a").unwrap(),
+            RemoteSpec::Replica(vec![
+                RemoteSpec::Dir(PathBuf::from("/srv/a")),
+                RemoteSpec::Dir(PathBuf::from("/srv/b")),
+            ])
+        );
+
+        // A fully-duplicate list is one remote in a replica costume:
+        // fail closed rather than promise redundancy that isn't there.
+        assert!(RemoteSpec::parse("/srv/a,/srv/a").is_err());
+        assert!(RemoteSpec::parse("http://h:1,http://h:1/").is_err());
+
+        // A trailing comma is a single endpoint, not a replica set.
+        assert_eq!(
+            RemoteSpec::parse("/srv/a,").unwrap(),
+            RemoteSpec::Dir(PathBuf::from("/srv/a"))
+        );
+        assert!(RemoteSpec::parse(",,").is_err());
+        // One bad scheme poisons the whole list.
+        assert!(RemoteSpec::parse("/srv/a,ssh://host/repo").is_err());
+    }
+
+    #[test]
+    fn replicated_endpoint_quorum_and_fallthrough() {
+        let td = crate::util::tmp::TempDir::new("gitreplica").unwrap();
+        let a_dir = td.path().join("a");
+        let b_dir = td.path().join("b");
+        let a = Oid::of_bytes(b"commit-a");
+        let b = Oid::of_bytes(b"commit-b");
+
+        // Quorum 2/2 (default): a write lands on both mirrors.
+        let ep = ReplicatedEndpoint::new(
+            vec![
+                Box::new(DirEndpoint::open_or_init(&a_dir).unwrap()),
+                Box::new(DirEndpoint::open_or_init(&b_dir).unwrap()),
+            ],
+            None,
+        );
+        ep.set_branch("main", None, &a).unwrap();
+        assert_eq!(
+            DirEndpoint::open_or_init(&a_dir).unwrap().branch("main").unwrap(),
+            Some(a)
+        );
+        assert_eq!(
+            DirEndpoint::open_or_init(&b_dir).unwrap().branch("main").unwrap(),
+            Some(a)
+        );
+
+        // Desynchronize mirror b (simulates a missed quorum write).
+        DirEndpoint::open_or_init(&b_dir)
+            .unwrap()
+            .set_branch("main", Some(a), &b)
+            .unwrap();
+
+        // Quorum 2/2: the divergent CAS fails the whole write.
+        assert!(ep.set_branch("main", Some(a), &b).is_err());
+
+        // Quorum 1/2: the same write succeeds on the mirror whose tip
+        // still matches, and the laggard is left to repair.
+        let ep1 = ReplicatedEndpoint::new(
+            vec![
+                Box::new(DirEndpoint::open_or_init(&a_dir).unwrap()),
+                Box::new(DirEndpoint::open_or_init(&b_dir).unwrap()),
+            ],
+            Some(1),
+        );
+        ep1.set_branch("main", Some(a), &b).unwrap();
+        assert_eq!(ep1.branch("main").unwrap(), Some(b));
+
+        // missing() is the union across mirrors: an object held by only
+        // one mirror still counts as missing (the push must fan it out).
+        let obj = Object::Blob(b"payload".to_vec());
+        DirEndpoint::open_or_init(&a_dir).unwrap().write(&obj).unwrap();
+        let oid = Oid::of_bytes(&obj.encode());
+        assert_eq!(ep1.missing(&[oid]).unwrap(), vec![oid]);
+        ep1.write(&obj).unwrap();
+        assert!(ep1.missing(&[oid]).unwrap().is_empty());
     }
 
     #[test]

@@ -13,7 +13,7 @@ use super::mergebase::{commits_between, is_ancestor, merge_base};
 use super::object::{Commit, Object, Oid, Tree, TreeEntry};
 use super::odb::Odb;
 use super::refs::{Head, Refs};
-use super::remote::{open_endpoint, RemoteSpec};
+use super::remote::{open_endpoint, open_endpoint_with_quorum, GitEndpoint, RemoteSpec};
 use super::status::{FileStatus, Status};
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, HashSet};
@@ -34,8 +34,11 @@ pub struct Repository {
 /// Result of a merge.
 #[derive(Debug, Clone)]
 pub struct MergeReport {
+    /// The merge commit created (None for fast-forward / no-op merges).
     pub commit: Option<Oid>,
+    /// True when the merge was a plain fast-forward.
     pub fast_forward: bool,
+    /// True when there was nothing to merge.
     pub already_up_to_date: bool,
     /// Paths whose conflicts were resolved by a merge driver.
     pub driver_resolved: Vec<String>,
@@ -44,9 +47,26 @@ pub struct MergeReport {
 /// Result of a push.
 #[derive(Debug, Clone)]
 pub struct PushReport {
+    /// New commits delivered to the remote, oldest first.
     pub commits: Vec<Oid>,
+    /// Odb objects the remote was missing and received.
     pub objects_sent: usize,
+    /// Raw blob bytes among the objects sent.
     pub bytes_sent: u64,
+}
+
+/// What [`Repository::repair_replica_refs`] did (or refused to do).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RefRepair {
+    /// Distinct branch tips observed across the mirrors.
+    pub tips: usize,
+    /// The winning tip every mirror now points at (`None` when no
+    /// mirror held the branch, or the tips diverged).
+    pub tip: Option<Oid>,
+    /// Mirrors whose branch ref was fast-forwarded to the winner.
+    pub fast_forwarded: usize,
+    /// True when no tip dominated the others; refs were left alone.
+    pub diverged: bool,
 }
 
 impl Repository {
@@ -94,26 +114,32 @@ impl Repository {
         }
     }
 
+    /// The working-tree root.
     pub fn worktree(&self) -> &Path {
         &self.worktree
     }
 
+    /// The `.theta` metadata directory.
     pub fn theta_dir(&self) -> &Path {
         &self.theta_dir
     }
 
+    /// The object database.
     pub fn odb(&self) -> &Odb {
         &self.odb
     }
 
+    /// The ref store.
     pub fn refs(&self) -> &Refs {
         &self.refs
     }
 
+    /// Parse `.thetaattributes` from the worktree (empty if absent).
     pub fn attributes(&self) -> Result<Attributes> {
         Attributes::load(&self.worktree)
     }
 
+    /// The commit HEAD resolves to (None on an unborn branch).
     pub fn head_commit(&self) -> Result<Option<Oid>> {
         self.refs.head_commit()
     }
@@ -206,6 +232,7 @@ impl Repository {
             .unwrap_or(0)
     }
 
+    /// Commit the index with an explicit parent list (merge commits).
     pub fn commit_with_parents(
         &self,
         message: &str,
@@ -673,6 +700,22 @@ impl Repository {
     // remote transfer
     // ------------------------------------------------------------------
 
+    /// The configured replica write quorum (`theta.replica-quorum`),
+    /// if any. `0`, negative, or unparsable values are treated as
+    /// unset (= all mirrors) rather than silently weakening writes.
+    pub fn replica_quorum(&self) -> Result<Option<usize>> {
+        Ok(self
+            .config_get("theta.replica-quorum")?
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|q| *q > 0))
+    }
+
+    /// Open `remote`'s endpoint honoring this repo's configured
+    /// replica quorum for replica sets.
+    fn endpoint_for(&self, remote: &RemoteSpec) -> Result<Box<dyn GitEndpoint>> {
+        open_endpoint_with_quorum(remote, self.replica_quorum()?)
+    }
+
     /// Push `branch` to a directory remote (legacy path-typed entry
     /// point; see [`Repository::push_spec`] for http remotes).
     pub fn push(&self, remote: &Path, branch: &str) -> Result<PushReport> {
@@ -691,7 +734,7 @@ impl Repository {
             .refs
             .branch(branch)?
             .with_context(|| format!("no local branch '{branch}'"))?;
-        let endpoint = open_endpoint(remote)?;
+        let endpoint = self.endpoint_for(remote)?;
         let remote_tip = endpoint.branch(branch)?;
 
         if let Some(rt) = remote_tip {
@@ -778,7 +821,7 @@ impl Repository {
     /// bail — instead the caller merges the returned tip locally and
     /// pushes again.
     pub fn fetch_head_spec(&self, remote: &RemoteSpec, branch: &str) -> Result<Oid> {
-        let endpoint = open_endpoint(remote)?;
+        let endpoint = self.endpoint_for(remote)?;
         let remote_tip = endpoint
             .branch(branch)?
             .with_context(|| format!("remote has no branch '{branch}'"))?;
@@ -810,6 +853,94 @@ impl Repository {
             self.odb.write(&Object::Commit(commit))?;
         }
         Ok(remote_tip)
+    }
+
+    /// Converge the `branch` tips of a replica set's mirrors after a
+    /// quorum-shortfall write left some of them behind.
+    ///
+    /// Every mirror's history is fetched into the local odb (no local
+    /// ref moves), the winning tip — the one every other observed tip
+    /// is an ancestor of — is picked, and each lagging mirror receives
+    /// exactly the odb objects it is missing before its branch ref is
+    /// compare-and-set forward. True divergence (no tip dominates) is
+    /// reported, never resolved: that needs a merge and a fresh push.
+    /// All mirrors must be reachable — repairing around a dead mirror
+    /// would just mint a new laggard.
+    pub fn repair_replica_refs(&self, mirrors: &[RemoteSpec], branch: &str) -> Result<RefRepair> {
+        let mut tips: Vec<Option<Oid>> = Vec::with_capacity(mirrors.len());
+        for m in mirrors {
+            tips.push(open_endpoint(m)?.branch(branch)?);
+        }
+        let mut distinct: Vec<Oid> = tips.iter().flatten().copied().collect();
+        distinct.sort();
+        distinct.dedup();
+        if distinct.is_empty() {
+            return Ok(RefRepair::default());
+        }
+
+        // Pull every tip's history into the local odb so the ancestry
+        // checks and object shipping below run against local state.
+        for (m, tip) in mirrors.iter().zip(&tips) {
+            if tip.is_some() {
+                self.fetch_head_spec(m, branch)?;
+            }
+        }
+
+        // The winner is the tip every other tip fast-forwards to.
+        let mut best = None;
+        'cand: for &cand in &distinct {
+            for &other in &distinct {
+                if other != cand && !is_ancestor(&self.odb, other, cand)? {
+                    continue 'cand;
+                }
+            }
+            best = Some(cand);
+            break;
+        }
+        let Some(best) = best else {
+            return Ok(RefRepair {
+                tips: distinct.len(),
+                diverged: true,
+                ..RefRepair::default()
+            });
+        };
+
+        let mut report = RefRepair {
+            tips: distinct.len(),
+            tip: Some(best),
+            ..RefRepair::default()
+        };
+        for (m, tip) in mirrors.iter().zip(&tips) {
+            if *tip == Some(best) {
+                continue;
+            }
+            let endpoint = open_endpoint(m)?;
+            let exclude: Vec<Oid> = tip.iter().copied().collect();
+            let commits = commits_between(&self.odb, best, &exclude)?;
+            // Dependency order, as in push_spec: blobs before their
+            // tree, tree before its commit.
+            let mut candidates: Vec<Oid> = Vec::new();
+            for &commit_oid in &commits {
+                let commit = self.odb.read_commit(&commit_oid)?;
+                let tree = self.odb.read_tree(&commit.tree)?;
+                for entry in &tree.entries {
+                    candidates.push(entry.oid);
+                }
+                candidates.push(commit.tree);
+                candidates.push(commit_oid);
+            }
+            let mut seen = HashSet::new();
+            candidates.retain(|o| seen.insert(*o));
+            let missing: HashSet<Oid> = endpoint.missing(&candidates)?.into_iter().collect();
+            for oid in &candidates {
+                if missing.contains(oid) {
+                    endpoint.write(&self.odb.read(oid)?)?;
+                }
+            }
+            endpoint.set_branch(branch, *tip, &best)?;
+            report.fast_forwarded += 1;
+        }
+        Ok(report)
     }
 
     /// Pull from a directory remote (legacy path-typed entry point; see

@@ -29,12 +29,15 @@ pub struct Status {
 }
 
 impl Status {
+    /// True when nothing is staged, modified, or deleted
+    /// (untracked files do not count as dirty).
     pub fn is_clean(&self) -> bool {
         self.entries
             .iter()
             .all(|(_, s)| matches!(s, FileStatus::Untracked))
     }
 
+    /// Status of one path, if it appears in the snapshot.
     pub fn of(&self, path: &str) -> Option<&FileStatus> {
         self.entries
             .iter()

@@ -106,6 +106,12 @@ pub struct TransferStats {
     /// Retries caused specifically by a server shed (`503 +
     /// Retry-After`) — a subset of `backoff_retries`.
     pub sheds: u64,
+    /// Fetches that abandoned a dying mirror and completed against the
+    /// next one in a [replica set](super::replicate::ReplicatedRemote).
+    pub mirror_failovers: u64,
+    /// Replicated pushes that met their write quorum but left at least
+    /// one mirror behind (healed later by `replicate --repair`).
+    pub quorum_shortfalls: u64,
 }
 
 impl TransferStats {

@@ -456,6 +456,21 @@ impl RemoteTransport for HttpRemote {
         })
     }
 
+    fn list_oids(&self) -> Result<Option<Vec<Oid>>> {
+        let resp = self.client.send(&Request::new("GET", "/objects"))?;
+        match resp.status {
+            200 => Ok(Some(parse_oid_arr(&parse_json(&resp)?, "oids")?)),
+            // A pre-inventory server has no /objects route: report
+            // "cannot enumerate", not an error (version skew rule).
+            404 => Ok(None),
+            s => Err(status_error(
+                s,
+                resp.get_header("retry-after"),
+                format!("{}: GET /objects -> {s}", self.url()),
+            )),
+        }
+    }
+
     fn negotiate_chains(&self, adv: &ChainAdvert) -> Result<ChainNegotiation> {
         batch::record(|s| s.negotiations += 1);
         let req =

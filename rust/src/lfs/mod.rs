@@ -46,6 +46,7 @@ pub mod http;
 pub mod pack;
 pub mod pointer;
 pub mod remote;
+pub mod replicate;
 pub mod retry;
 pub mod server;
 pub mod store;
@@ -67,7 +68,8 @@ pub use pack::{
 pub use server::gc_stale_packs;
 pub use pointer::Pointer;
 pub use remote::{sync_to_remote, DirRemote, LfsRemote};
-pub use retry::{classify, parse_retry_after, FailureClass, RetryPolicy, WireError};
+pub use replicate::{HealthState, MirrorHealth, RepairReport, ReplicatedRemote};
+pub use retry::{classify, parse_retry_after, FailureClass, RetryBudget, RetryPolicy, WireError};
 pub use server::{LfsServer, MetricsSnapshot, ServeOptions};
 pub use store::LfsStore;
 pub use transport::{

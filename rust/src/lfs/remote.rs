@@ -132,6 +132,12 @@ impl RemoteTransport for DirRemote {
         Ok(DirRemote::batch(self, want))
     }
 
+    fn list_oids(&self) -> Result<Option<Vec<Oid>>> {
+        let mut oids = self.store.list()?;
+        oids.sort();
+        Ok(Some(oids))
+    }
+
     fn negotiate_chains(&self, adv: &ChainAdvert) -> Result<ChainNegotiation> {
         batch::record(|s| s.negotiations += 1);
         Ok(transport::answer_chains(&self.store, adv))

@@ -1,0 +1,810 @@
+//! Replicated multi-mirror remotes: quorum pushes, failover fetch
+//! with cross-mirror resume, and anti-entropy repair.
+//!
+//! A shared model artifact at hub scale cannot depend on one remote
+//! staying up: a mirror dying mid-transfer must neither lose a push
+//! nor restart a multi-gigabyte fetch from byte zero.
+//! [`ReplicatedRemote`] implements [`RemoteTransport`] over N inner
+//! transports (Dir or HTTP, mixed) so the whole transfer stack —
+//! `Prefetcher`, chain negotiation, the CLI — drives a replica set
+//! exactly as it drives one remote:
+//!
+//! - **Pushes fan out** to every mirror and succeed at a configurable
+//!   write quorum (`theta.replica-quorum`, default all). A push that
+//!   meets quorum with some mirror down succeeds and counts a
+//!   `quorum_shortfalls` on the transfer stats; the laggard converges
+//!   later via [`ReplicatedRemote::repair`]. A sub-quorum outcome is
+//!   an error — retryable (a [`WireError::cut`]) when enough of the
+//!   per-mirror failures were themselves retryable under
+//!   [`classify`] to make quorum reachable, fatal otherwise.
+//! - **Fetches pick the healthiest mirror** via a per-mirror
+//!   [`MirrorHealth`] circuit breaker: consecutive shed/timeout/cut
+//!   failures open it, bypasses eventually admit a half-open probe,
+//!   and a success closes it again. Among equally healthy mirrors the
+//!   lowest latency EWMA serves first.
+//! - **A mid-pack mirror death fails over, resuming mid-byte.**
+//!   Partial downloads in `lfs/incoming/` are content-addressed (the
+//!   pack id is a hash of the pack's object set), *not*
+//!   mirror-addressed — so when mirror A dies at byte `k`, the next
+//!   mirror's transport claims the same persisted partial and range-
+//!   requests bytes `k..` instead of starting over. Each switch
+//!   counts one `mirror_failovers`.
+//! - **Retry cost does not multiply with mirrors.** Every attempt —
+//!   first try or failover — spends from one per-operation
+//!   [`RetryBudget`], so N mirrors share the policy's retry
+//!   allowance instead of each claiming its own.
+//!
+//! Negotiation merges are deliberately asymmetric: `batch` reports an
+//! object *present* when any reachable mirror holds it (so fetches
+//! can fail over to the holder) and *missing* only when no mirror
+//! does. A push therefore ships exactly the objects new to the whole
+//! set; objects that some-but-not-all mirrors hold (the residue of a
+//! past quorum shortfall) are not re-fanned by pushes — that is
+//! [`ReplicatedRemote::repair`]'s job: union the mirror inventories
+//! ([`RemoteTransport::list_oids`]), run a have/want negotiation per
+//! mirror over the union, fetch each missing object from a mirror
+//! that holds it, and ship it to each mirror that lacks it. Repair
+//! moves whole objects (delta records need chain metadata that lives
+//! above this layer) and is idempotent: a second pass ships nothing.
+//!
+//! A replica set of one mirror delegates every call straight through,
+//! byte- and stat-identically to the bare transport
+//! (`rust/tests/remote_parity.rs` pins this).
+//!
+//! [`WireError::cut`]: super::retry::WireError::cut
+//! [`classify`]: super::retry::classify
+
+use super::batch::{self, BatchResponse};
+use super::pack::{DeltaPlan, PackStats};
+use super::retry::{classify, retry_after_of, FailureClass, RetryBudget, RetryPolicy};
+use super::store::LfsStore;
+use super::transport::{
+    open_transport, ChainAdvert, ChainNegotiation, RemoteTransport, WireReport,
+};
+use crate::gitcore::object::Oid;
+use crate::gitcore::remote::RemoteSpec;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Consecutive retryable failures that open a mirror's circuit.
+const OPEN_AFTER: u32 = 3;
+/// Times an open mirror is bypassed before it earns a half-open probe.
+const PROBE_AFTER: u32 = 4;
+
+/// Circuit-breaker position for one mirror.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Healthy: serves requests normally.
+    Closed,
+    /// Tripped: bypassed while better mirrors are available.
+    Open,
+    /// Tripped but due a probe: the next request may test it.
+    HalfOpen,
+}
+
+/// Per-mirror health: a deterministic circuit breaker plus a latency
+/// EWMA for fastest-first selection.
+///
+/// The breaker counts *consecutive retryable* failures (shed, timeout,
+/// cut — the classes [`classify`] deems transient); [`OPEN_AFTER`] of
+/// them open it. An open mirror is not gone forever: each time
+/// selection bypasses it a counter ticks, and after [`PROBE_AFTER`]
+/// bypasses the mirror reports [`HealthState::HalfOpen`] — the next
+/// operation tries it as a probe. Success closes the breaker (and
+/// zeroes the failure run); a failed probe re-opens it and the
+/// bypass count starts over. Counting bypasses instead of wall-clock
+/// keeps seeded chaos runs replayable.
+#[derive(Debug, Default)]
+pub struct MirrorHealth {
+    consecutive_failures: AtomicU32,
+    bypasses: AtomicU32,
+    /// Latency EWMA in microseconds; 0 = no sample yet.
+    ewma_micros: AtomicU64,
+}
+
+impl MirrorHealth {
+    /// Current breaker position.
+    pub fn state(&self) -> HealthState {
+        if self.consecutive_failures.load(Ordering::Relaxed) < OPEN_AFTER {
+            HealthState::Closed
+        } else if self.bypasses.load(Ordering::Relaxed) >= PROBE_AFTER {
+            HealthState::HalfOpen
+        } else {
+            HealthState::Open
+        }
+    }
+
+    /// Record a successful operation and its latency: closes the
+    /// breaker and folds the sample into the EWMA (¼ new, ¾ old).
+    pub fn record_success(&self, elapsed_micros: u64) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        self.bypasses.store(0, Ordering::Relaxed);
+        let old = self.ewma_micros.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            elapsed_micros.max(1)
+        } else {
+            (3 * old + elapsed_micros.max(1)) / 4
+        };
+        self.ewma_micros.store(new, Ordering::Relaxed);
+    }
+
+    /// Record a failed operation. Only retryable classes feed the
+    /// breaker — a fatal answer (`4xx`, checksum mismatch) proves the
+    /// mirror is *reachable*, just unwilling, and tripping on it would
+    /// mask a real error behind "mirror unhealthy".
+    pub fn record_failure(&self, class: FailureClass) {
+        if class.retryable() {
+            self.consecutive_failures.fetch_add(1, Ordering::Relaxed);
+            self.bypasses.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Note that selection bypassed this (open) mirror; enough of
+    /// these earn a half-open probe.
+    pub fn note_bypass(&self) {
+        self.bypasses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The latency EWMA in microseconds (0 until the first success).
+    pub fn latency_micros(&self) -> u64 {
+        self.ewma_micros.load(Ordering::Relaxed)
+    }
+}
+
+struct Mirror {
+    transport: Box<dyn RemoteTransport>,
+    health: MirrorHealth,
+}
+
+/// N inner transports behind one [`RemoteTransport`] face: quorum
+/// writes, health-ordered failover reads, cross-mirror resume, and an
+/// anti-entropy [`ReplicatedRemote::repair`] pass. See the module
+/// docs for the full semantics.
+pub struct ReplicatedRemote {
+    mirrors: Vec<Mirror>,
+    quorum: usize,
+    policy: RetryPolicy,
+}
+
+impl ReplicatedRemote {
+    /// Open every mirror of `set` (sharing `staging`, so partial
+    /// downloads are resumable across mirrors) and read the write
+    /// quorum from `theta.replica-quorum` in `<staging>/config` when
+    /// present (at repository call sites `staging` *is* the repo's
+    /// `.theta` dir). Default quorum: all mirrors.
+    pub fn open(set: &[RemoteSpec], staging: Option<&Path>) -> Result<ReplicatedRemote> {
+        let mut transports = Vec::with_capacity(set.len());
+        for spec in set {
+            if matches!(spec, RemoteSpec::Replica(_)) {
+                bail!("replica sets do not nest");
+            }
+            transports.push(open_transport(spec, staging)?);
+        }
+        let quorum = staging.and_then(configured_quorum);
+        Ok(ReplicatedRemote::new(transports, quorum))
+    }
+
+    /// Wrap `transports` with an explicit write quorum (`None` = all
+    /// mirrors; clamped to `1..=N`).
+    pub fn new(
+        transports: Vec<Box<dyn RemoteTransport>>,
+        quorum: Option<usize>,
+    ) -> ReplicatedRemote {
+        let n = transports.len().max(1);
+        ReplicatedRemote {
+            mirrors: transports
+                .into_iter()
+                .map(|transport| Mirror {
+                    transport,
+                    health: MirrorHealth::default(),
+                })
+                .collect(),
+            quorum: quorum.unwrap_or(n).clamp(1, n),
+            policy: RetryPolicy::default(),
+        }
+    }
+
+    /// Number of mirrors in the set.
+    pub fn mirror_count(&self) -> usize {
+        self.mirrors.len()
+    }
+
+    /// The effective write quorum.
+    pub fn quorum(&self) -> usize {
+        self.quorum
+    }
+
+    /// Each mirror's current breaker position (for `replicate status`).
+    pub fn health_states(&self) -> Vec<HealthState> {
+        self.mirrors.iter().map(|m| m.health.state()).collect()
+    }
+
+    fn single(&self) -> Option<&dyn RemoteTransport> {
+        if self.mirrors.len() == 1 {
+            Some(self.mirrors[0].transport.as_ref())
+        } else {
+            None
+        }
+    }
+
+    /// Mirror indices in serving order: closed breakers first, then
+    /// half-open probes, open ones last (still tried — a fully tripped
+    /// set must degrade to "try everything", not to certain failure);
+    /// ties break on latency EWMA then index. Bypassed open mirrors
+    /// tick toward their probe.
+    fn fetch_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.mirrors.len()).collect();
+        let rank = |s: HealthState| match s {
+            HealthState::Closed => 0u8,
+            HealthState::HalfOpen => 1,
+            HealthState::Open => 2,
+        };
+        order.sort_by_key(|&i| {
+            let h = &self.mirrors[i].health;
+            (rank(h.state()), h.latency_micros(), i)
+        });
+        for &i in order.iter().skip(1) {
+            if self.mirrors[i].health.state() == HealthState::Open {
+                self.mirrors[i].health.note_bypass();
+            }
+        }
+        order
+    }
+
+    /// Run `op` against mirrors in health order, failing over on
+    /// retryable errors under one shared [`RetryBudget`]. Each switch
+    /// to another mirror counts one `mirror_failovers`; a fatal
+    /// classification surfaces immediately (no mirror will answer a
+    /// checksum mismatch differently).
+    fn fail_over<T>(
+        &self,
+        what: &str,
+        op: impl Fn(&dyn RemoteTransport) -> Result<T>,
+    ) -> Result<T> {
+        let order = self.fetch_order();
+        let n = order.len();
+        let budget = RetryBudget::for_mirrors(n, &self.policy);
+        let mut last: Option<anyhow::Error> = None;
+        let mut tries = 0u32;
+        while budget.spend() {
+            let mirror = &self.mirrors[order[tries as usize % n]];
+            let t0 = Instant::now();
+            match op(mirror.transport.as_ref()) {
+                Ok(v) => {
+                    mirror
+                        .health
+                        .record_success(t0.elapsed().as_micros() as u64);
+                    return Ok(v);
+                }
+                Err(e) => {
+                    let class = classify(&e);
+                    mirror.health.record_failure(class);
+                    if class == FailureClass::Fatal {
+                        return Err(e);
+                    }
+                    let retry_after = retry_after_of(&e);
+                    last = Some(e);
+                    batch::record(|s| s.mirror_failovers += 1);
+                    tries += 1;
+                    // Moving to a *different* mirror needs no pause —
+                    // its channel is independent. Only wrapping back to
+                    // an already-tried mirror backs off.
+                    if tries as usize % n == 0 && budget.remaining() > 0 {
+                        std::thread::sleep(self.policy.pause(tries / n as u32 - 1, retry_after));
+                    }
+                }
+            }
+        }
+        Err(last
+            .unwrap_or_else(|| anyhow!("replica set has no mirrors"))
+            .context(format!("{what}: every mirror of the replica set failed")))
+    }
+
+    /// Fan a write out to every mirror in parallel and demand the
+    /// quorum. On success with stragglers, counts one
+    /// `quorum_shortfalls`; sub-quorum outcomes error — retryable iff
+    /// successes plus retryable failures could still reach quorum.
+    fn quorum_push(
+        &self,
+        what: &str,
+        op: impl Fn(&dyn RemoteTransport) -> Result<(PackStats, WireReport)> + Sync,
+    ) -> Result<(PackStats, WireReport)> {
+        if let Some(t) = self.single() {
+            return op(t);
+        }
+        let budget = RetryBudget::for_mirrors(self.mirrors.len(), &self.policy);
+        let indices: Vec<usize> = (0..self.mirrors.len()).collect();
+        // Pack sends record nothing on thread-local transfer stats, so
+        // fanning them across threads loses no counters; every stat
+        // below is recorded back on the calling thread.
+        let results: Vec<Result<(PackStats, WireReport)>> = crate::util::par::par_map(
+            &indices,
+            self.mirrors.len(),
+            |_, &i| -> Result<(PackStats, WireReport)> {
+                if !budget.spend() {
+                    bail!("retry budget exhausted before mirror {i} was attempted");
+                }
+                let mirror = &self.mirrors[i];
+                let t0 = Instant::now();
+                let r = op(mirror.transport.as_ref());
+                match &r {
+                    Ok(_) => mirror
+                        .health
+                        .record_success(t0.elapsed().as_micros() as u64),
+                    Err(e) => mirror.health.record_failure(classify(e)),
+                }
+                r
+            },
+        );
+        self.settle_quorum(what, results)
+    }
+
+    fn settle_quorum(
+        &self,
+        what: &str,
+        results: Vec<Result<(PackStats, WireReport)>>,
+    ) -> Result<(PackStats, WireReport)> {
+        let mut first_ok: Option<PackStats> = None;
+        let mut wire = WireReport::default();
+        let mut successes = 0usize;
+        let mut retryable = 0usize;
+        let mut failures: Vec<String> = Vec::new();
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Ok((stats, report)) => {
+                    successes += 1;
+                    wire.wire_bytes += report.wire_bytes;
+                    wire.resumed_bytes += report.resumed_bytes;
+                    first_ok.get_or_insert(stats);
+                }
+                Err(e) => {
+                    let class = classify(&e);
+                    if class.retryable() {
+                        retryable += 1;
+                    }
+                    failures.push(format!("mirror {i} ({class:?}): {e:#}"));
+                }
+            }
+        }
+        if successes >= self.quorum {
+            if !failures.is_empty() {
+                batch::record(|s| s.quorum_shortfalls += 1);
+                eprintln!(
+                    "warning: {what} met quorum {}/{} but left mirrors behind \
+                     (run `git-theta replicate --repair`): {}",
+                    successes,
+                    self.mirrors.len(),
+                    failures.join("; ")
+                );
+            }
+            return Ok((first_ok.expect("quorum >= 1 implies a success"), wire));
+        }
+        let msg = format!(
+            "{what}: write quorum not met ({successes}/{} mirrors succeeded, quorum {}): {}",
+            self.mirrors.len(),
+            self.quorum,
+            failures.join("; ")
+        );
+        if successes + retryable >= self.quorum {
+            // Enough of the failures were transient that a retry can
+            // still reach quorum: surface as a retryable cut.
+            Err(anyhow::Error::new(super::retry::WireError::cut(msg)))
+        } else {
+            Err(anyhow!(msg))
+        }
+    }
+
+    /// One anti-entropy pass: converge every mirror's store onto the
+    /// union of all mirrors' objects. See the module docs for the
+    /// protocol; `threads` bounds pack streaming parallelism.
+    ///
+    /// Idempotent — a converged set reports zero shipped objects.
+    pub fn repair(&self, threads: usize) -> Result<RepairReport> {
+        let mut report = RepairReport {
+            mirrors: self.mirrors.len(),
+            ..RepairReport::default()
+        };
+        // 1. Inventories. A mirror that cannot enumerate cannot be
+        //    diffed against the union; refusing beats guessing.
+        let mut inventories: Vec<BTreeSet<Oid>> = Vec::with_capacity(self.mirrors.len());
+        for (i, mirror) in self.mirrors.iter().enumerate() {
+            let oids = mirror
+                .transport
+                .list_oids()
+                .with_context(|| format!("listing mirror {i} ({})", mirror.transport.describe()))?
+                .with_context(|| {
+                    format!(
+                        "mirror {i} ({}) cannot enumerate its store; \
+                         anti-entropy repair needs an inventory-capable remote",
+                        mirror.transport.describe()
+                    )
+                })?;
+            inventories.push(oids.into_iter().collect());
+        }
+        let union: Vec<Oid> = inventories
+            .iter()
+            .flat_map(|inv| inv.iter().copied())
+            .collect::<BTreeSet<Oid>>()
+            .into_iter()
+            .collect();
+        report.union_objects = union.len() as u64;
+        if union.is_empty() {
+            return Ok(report);
+        }
+
+        // 2. Have/want negotiation per mirror over the union — the
+        //    existing batch protocol decides what each mirror lacks
+        //    (the inventory alone could be stale by now).
+        let mut missing_per: Vec<Vec<Oid>> = Vec::with_capacity(self.mirrors.len());
+        for mirror in &self.mirrors {
+            missing_per.push(mirror.transport.batch(&union)?.missing);
+        }
+        if missing_per.iter().all(|m| m.is_empty()) {
+            return Ok(report);
+        }
+
+        // 3. Stage every missing-anywhere object into a local buffer
+        //    store, fetching each from the first mirror that holds it.
+        let spill = crate::util::tmp::TempDir::new("replica-repair")?;
+        let buffer = LfsStore::at(&spill.join("objects"));
+        let all_missing: BTreeSet<Oid> = missing_per.iter().flatten().copied().collect();
+        let mut by_donor: BTreeMap<usize, Vec<Oid>> = BTreeMap::new();
+        for oid in &all_missing {
+            let donor = inventories
+                .iter()
+                .position(|inv| inv.contains(oid))
+                .with_context(|| format!("object {} held by no mirror", oid.short()))?;
+            by_donor.entry(donor).or_default().push(*oid);
+        }
+        for (donor, oids) in &by_donor {
+            self.mirrors[*donor]
+                .transport
+                .fetch_pack_into(oids, &buffer, threads)
+                .with_context(|| format!("staging repair objects from mirror {donor}"))?;
+        }
+
+        // 4. Ship each laggard exactly its missing set.
+        for (i, missing) in missing_per.iter().enumerate() {
+            if missing.is_empty() {
+                continue;
+            }
+            let (stats, wire) = self.mirrors[i]
+                .transport
+                .send_pack_from(&buffer, missing, threads)
+                .with_context(|| format!("repairing mirror {i}"))?;
+            report.laggards_healed += 1;
+            report.objects_shipped += missing.len() as u64;
+            report.raw_bytes_shipped += stats.raw_bytes;
+            report.wire_bytes_shipped += wire.wire_bytes;
+        }
+        Ok(report)
+    }
+}
+
+/// What one [`ReplicatedRemote::repair`] pass moved.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RepairReport {
+    /// Mirrors in the set.
+    pub mirrors: usize,
+    /// Distinct objects across all mirrors after the union.
+    pub union_objects: u64,
+    /// Mirrors that were missing at least one object and got healed.
+    pub laggards_healed: usize,
+    /// Object copies delivered to laggards (one object shipped to two
+    /// mirrors counts twice).
+    pub objects_shipped: u64,
+    /// Raw payload bytes of the shipped copies.
+    pub raw_bytes_shipped: u64,
+    /// Pack bytes that crossed the wire to laggards.
+    pub wire_bytes_shipped: u64,
+}
+
+/// Read `theta.replica-quorum` from `<staging>/config`; unreadable or
+/// non-positive values mean "unset" (= all mirrors), never a weaker
+/// quorum than the user configured.
+fn configured_quorum(staging: &Path) -> Option<usize> {
+    let text = std::fs::read_to_string(staging.join("config")).ok()?;
+    let json = crate::util::json::Json::parse(&text).ok()?;
+    json.get("theta.replica-quorum")
+        .and_then(|v| v.as_str())
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|q| *q > 0)
+}
+
+impl RemoteTransport for ReplicatedRemote {
+    fn describe(&self) -> String {
+        let names: Vec<String> = self
+            .mirrors
+            .iter()
+            .map(|m| m.transport.describe())
+            .collect();
+        format!(
+            "replica[{}; quorum {}/{}]",
+            names.join(","),
+            self.quorum,
+            self.mirrors.len()
+        )
+    }
+
+    fn batch(&self, want: &[Oid]) -> Result<BatchResponse> {
+        if let Some(t) = self.single() {
+            return t.batch(want);
+        }
+        // Merge per-mirror answers: present on any reachable mirror =
+        // present (fetches fail over to the holder); missing only when
+        // no mirror holds it. Sizes come from the first holder. Dead
+        // mirrors are skipped, but at least one must answer — an
+        // all-dead set has nothing truthful to report.
+        let mut held: BTreeMap<Oid, u64> = BTreeMap::new();
+        let mut answered = false;
+        let mut last: Option<anyhow::Error> = None;
+        for mirror in &self.mirrors {
+            match mirror.transport.batch(want) {
+                Ok(resp) => {
+                    answered = true;
+                    for (i, oid) in resp.present.iter().enumerate() {
+                        let size = resp.present_sizes.get(i).copied().unwrap_or(0);
+                        held.entry(*oid).or_insert(size);
+                    }
+                }
+                Err(e) => {
+                    mirror.health.record_failure(classify(&e));
+                    last = Some(e);
+                }
+            }
+        }
+        if !answered {
+            return Err(last
+                .unwrap_or_else(|| anyhow!("replica set has no mirrors"))
+                .context("negotiation failed on every mirror of the replica set"));
+        }
+        let mut resp = BatchResponse::default();
+        for oid in want {
+            match held.get(oid) {
+                Some(size) => {
+                    resp.present.push(*oid);
+                    resp.present_sizes.push(*size);
+                }
+                None => resp.missing.push(*oid),
+            }
+        }
+        Ok(resp)
+    }
+
+    fn negotiate_chains(&self, adv: &ChainAdvert) -> Result<ChainNegotiation> {
+        if let Some(t) = self.single() {
+            return t.negotiate_chains(adv);
+        }
+        // Chain-aware only when *every* mirror answers chain-aware:
+        // depths merge to the element-wise minimum so a planned delta
+        // resolves on every receiver, and one unreachable (or
+        // pre-chains) mirror degrades the whole round to flat packs —
+        // it could not resolve a delta pack it never negotiated.
+        let mut merged: Option<ChainNegotiation> = None;
+        for mirror in &self.mirrors {
+            let neg = match mirror.transport.negotiate_chains(adv) {
+                Ok(n) => n,
+                Err(e) => {
+                    mirror.health.record_failure(classify(&e));
+                    return Ok(ChainNegotiation {
+                        batch: self.batch(&adv.want)?,
+                        have_depths: vec![0; adv.chains.len()],
+                        chain_aware: false,
+                    });
+                }
+            };
+            merged = Some(match merged.take() {
+                None => neg,
+                Some(mut acc) => {
+                    acc.chain_aware &= neg.chain_aware;
+                    for (a, b) in acc.have_depths.iter_mut().zip(&neg.have_depths) {
+                        *a = (*a).min(*b);
+                    }
+                    acc
+                }
+            });
+        }
+        let mut merged = merged.expect("non-empty replica set");
+        // The flat split must still follow the any-present merge rule,
+        // not the last mirror's view.
+        merged.batch = self.batch(&adv.want)?;
+        Ok(merged)
+    }
+
+    fn fetch_pack_into(
+        &self,
+        oids: &[Oid],
+        dest: &LfsStore,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        if let Some(t) = self.single() {
+            return t.fetch_pack_into(oids, dest, threads);
+        }
+        self.fail_over("fetch", |t| t.fetch_pack_into(oids, dest, threads))
+    }
+
+    fn fetch_pack_with_chains(
+        &self,
+        adv: &ChainAdvert,
+        dest: &LfsStore,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        if let Some(t) = self.single() {
+            return t.fetch_pack_with_chains(adv, dest, threads);
+        }
+        self.fail_over("fetch", |t| t.fetch_pack_with_chains(adv, dest, threads))
+    }
+
+    fn send_pack_from(
+        &self,
+        src: &LfsStore,
+        oids: &[Oid],
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        self.quorum_push("push", |t| t.send_pack_from(src, oids, threads))
+    }
+
+    fn send_pack_with_bases(
+        &self,
+        src: &LfsStore,
+        plan: &DeltaPlan,
+        threads: usize,
+    ) -> Result<(PackStats, WireReport)> {
+        self.quorum_push("push", |t| t.send_pack_with_bases(src, plan, threads))
+    }
+
+    fn get_object(&self, oid: &Oid) -> Result<Vec<u8>> {
+        if let Some(t) = self.single() {
+            return t.get_object(oid);
+        }
+        self.fail_over("object fetch", |t| t.get_object(oid))
+    }
+
+    fn put_object(&self, bytes: &[u8]) -> Result<()> {
+        if let Some(t) = self.single() {
+            return t.put_object(bytes);
+        }
+        // Same quorum discipline as packs, minus the wire accounting.
+        let results: Vec<Result<(PackStats, WireReport)>> = self
+            .mirrors
+            .iter()
+            .map(|m| {
+                m.transport
+                    .put_object(bytes)
+                    .map(|()| (PackStats::default(), WireReport::default()))
+            })
+            .collect();
+        self.settle_quorum("object push", results).map(|_| ())
+    }
+
+    fn list_oids(&self) -> Result<Option<Vec<Oid>>> {
+        // The set's inventory is the union of its mirrors'; if any
+        // mirror cannot enumerate, neither can the set.
+        let mut union: BTreeSet<Oid> = BTreeSet::new();
+        for mirror in &self.mirrors {
+            match mirror.transport.list_oids()? {
+                Some(oids) => union.extend(oids),
+                None => return Ok(None),
+            }
+        }
+        Ok(Some(union.into_iter().collect()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfs::remote::DirRemote;
+    use crate::util::tmp::TempDir;
+
+    fn seeded_remote(td: &TempDir, name: &str, payloads: &[&[u8]]) -> (Box<DirRemote>, Vec<Oid>) {
+        let remote = DirRemote::open(&td.join(name));
+        let oids = payloads
+            .iter()
+            .map(|p| remote.store().put(p).unwrap().0)
+            .collect();
+        (Box::new(remote), oids)
+    }
+
+    #[test]
+    fn health_breaker_opens_probes_and_closes() {
+        let h = MirrorHealth::default();
+        assert_eq!(h.state(), HealthState::Closed);
+        for _ in 0..OPEN_AFTER {
+            h.record_failure(FailureClass::Cut);
+        }
+        assert_eq!(h.state(), HealthState::Open);
+        // Fatal answers never feed the breaker.
+        let h2 = MirrorHealth::default();
+        for _ in 0..10 {
+            h2.record_failure(FailureClass::Fatal);
+        }
+        assert_eq!(h2.state(), HealthState::Closed);
+        // Enough bypasses earn a half-open probe…
+        for _ in 0..PROBE_AFTER {
+            h.note_bypass();
+        }
+        assert_eq!(h.state(), HealthState::HalfOpen);
+        // …a failed probe re-opens, a success closes.
+        h.record_failure(FailureClass::Timeout);
+        assert_eq!(h.state(), HealthState::Open);
+        h.record_success(100);
+        assert_eq!(h.state(), HealthState::Closed);
+        assert_eq!(h.latency_micros(), 100);
+    }
+
+    #[test]
+    fn batch_merges_any_present_and_quorum_push_fans_out() {
+        crate::init();
+        let td = TempDir::new("replica").unwrap();
+        let (a, oids_a) = seeded_remote(&td, "a", &[b"alpha", b"shared"]);
+        let (b, oids_b) = seeded_remote(&td, "b", &[b"beta", b"shared"]);
+        let replica = ReplicatedRemote::new(vec![a, b], None);
+
+        let ghost = Oid::of_bytes(b"nowhere");
+        let want = vec![oids_a[0], oids_b[0], oids_a[1], ghost];
+        let resp = replica.batch(&want).unwrap();
+        // alpha (only on a), beta (only on b), shared: all present;
+        // only the ghost is missing from the whole set.
+        assert_eq!(resp.present, vec![oids_a[0], oids_b[0], oids_a[1]]);
+        assert_eq!(resp.missing, vec![ghost]);
+
+        // A push fans out to both mirrors.
+        let local_td = TempDir::new("replica-local").unwrap();
+        let local = LfsStore::at(&local_td.join("objects"));
+        let (oid, _) = local.put(b"fresh payload").unwrap();
+        replica.send_pack_from(&local, &[oid], 2).unwrap();
+        let a_store = LfsStore::at(&td.join("a").join("lfs/objects"));
+        let b_store = LfsStore::at(&td.join("b").join("lfs/objects"));
+        assert!(a_store.contains(&oid) && b_store.contains(&oid));
+    }
+
+    #[test]
+    fn repair_converges_divergent_mirrors_and_is_idempotent() {
+        crate::init();
+        let td = TempDir::new("replica-repair").unwrap();
+        let (a, _) = seeded_remote(&td, "a", &[b"only-on-a", b"both"]);
+        let (b, _) = seeded_remote(&td, "b", &[b"only-on-b", b"both"]);
+        let replica = ReplicatedRemote::new(vec![a, b], None);
+
+        let report = replica.repair(2).unwrap();
+        assert_eq!(report.union_objects, 3);
+        assert_eq!(report.laggards_healed, 2);
+        assert_eq!(report.objects_shipped, 2);
+
+        let a_store = LfsStore::at(&td.join("a").join("lfs/objects"));
+        let b_store = LfsStore::at(&td.join("b").join("lfs/objects"));
+        let mut a_list = a_store.list().unwrap();
+        let mut b_list = b_store.list().unwrap();
+        a_list.sort();
+        b_list.sort();
+        assert_eq!(a_list, b_list, "repair must converge the stores");
+        for oid in &a_list {
+            assert_eq!(a_store.get(oid).unwrap(), b_store.get(oid).unwrap());
+        }
+
+        // Second pass: nothing left to ship.
+        let again = replica.repair(2).unwrap();
+        assert_eq!(again.objects_shipped, 0);
+        assert_eq!(again.laggards_healed, 0);
+    }
+
+    #[test]
+    fn sub_quorum_push_is_retryable_only_if_quorum_reachable() {
+        crate::init();
+        // A fatal per-mirror failure (object missing from the local
+        // store) against quorum=all must not surface as retryable.
+        let td = TempDir::new("replica-q").unwrap();
+        let (a, _) = seeded_remote(&td, "a", &[]);
+        let (b, _) = seeded_remote(&td, "b", &[]);
+        let replica = ReplicatedRemote::new(vec![a, b], None);
+        let local_td = TempDir::new("replica-q-local").unwrap();
+        let local = LfsStore::at(&local_td.join("objects"));
+        let ghost = Oid::of_bytes(b"never stored");
+        let err = replica.send_pack_from(&local, &[ghost], 1).unwrap_err();
+        assert_eq!(classify(&err), FailureClass::Fatal);
+    }
+}

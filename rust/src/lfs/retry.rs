@@ -25,6 +25,7 @@
 //! `sheds`), so tests can lock how much retrying a scenario performed.
 
 use anyhow::Result;
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::time::Duration;
 
 /// What kind of failure a transfer error represents — the whole
@@ -263,6 +264,56 @@ impl RetryPolicy {
     }
 }
 
+/// A retry allowance shared across every mirror of one logical
+/// operation.
+///
+/// A replicated remote multiplies retry surfaces: N mirrors, each
+/// wrapped in its own [`RetryPolicy`], would spend up to
+/// `N × max_attempts` tries (and `N ×` the backoff cap in wall time)
+/// on a single fetch. The budget makes the allowance *per operation*
+/// instead of per mirror: every attempt — first try or failover —
+/// spends from one shared pool, so adding mirrors adds failover
+/// choices, not wall-clock.
+///
+/// Atomic so concurrently fanned-out pushes can draw from one pool;
+/// exhaustion is not an error by itself — callers surface the last
+/// mirror failure once `spend` declines.
+#[derive(Debug)]
+pub struct RetryBudget {
+    remaining: AtomicU32,
+}
+
+impl RetryBudget {
+    /// A budget of `attempts` total tries across all mirrors.
+    pub fn new(attempts: u32) -> RetryBudget {
+        RetryBudget {
+            remaining: AtomicU32::new(attempts),
+        }
+    }
+
+    /// Size a budget for `mirrors` endpoints under `policy`: every
+    /// mirror is guaranteed one try, plus the policy's retry allowance
+    /// (`max_attempts − 1`) shared across the whole set — *not*
+    /// multiplied by it.
+    pub fn for_mirrors(mirrors: usize, policy: &RetryPolicy) -> RetryBudget {
+        let mirrors = mirrors.min(u32::MAX as usize) as u32;
+        RetryBudget::new(mirrors.max(1) + policy.max_attempts.max(1) - 1)
+    }
+
+    /// Spend one attempt. Returns `false` when the pool is empty — the
+    /// caller must stop failing over and surface its best error.
+    pub fn spend(&self) -> bool {
+        self.remaining
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+            .is_ok()
+    }
+
+    /// Attempts left in the pool.
+    pub fn remaining(&self) -> u32 {
+        self.remaining.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -408,5 +459,25 @@ mod tests {
         assert_eq!(calls, 3);
         assert_eq!(batch::stats().backoff_retries, 2);
         assert_eq!(batch::stats().sheds, 0);
+    }
+
+    #[test]
+    fn budget_is_shared_not_multiplied() {
+        // 3 mirrors under the default 4-attempt policy: 3 guaranteed
+        // first tries + 3 shared retries — not 3 × 4 = 12.
+        let b = RetryBudget::for_mirrors(3, &RetryPolicy::default());
+        assert_eq!(b.remaining(), 6);
+        for _ in 0..6 {
+            assert!(b.spend());
+        }
+        assert!(!b.spend(), "an exhausted budget must decline");
+        assert!(!b.spend(), "and stay exhausted (no underflow wrap)");
+        assert_eq!(b.remaining(), 0);
+    }
+
+    #[test]
+    fn budget_guarantees_one_try_per_mirror_even_without_retries() {
+        let b = RetryBudget::for_mirrors(5, &RetryPolicy::none());
+        assert_eq!(b.remaining(), 5);
     }
 }

@@ -697,6 +697,7 @@ fn dispatch(state: &ServerState, method: &str, path: &str, req: &Request) -> Res
         ("POST", "/packs") => pack_create(state, req)?,
         ("POST", "/odb/batch") => odb_batch(state, req)?,
         ("GET", "/metrics") => metrics_response(state),
+        ("GET", "/objects") => objects_inventory(state)?,
         _ => {
             if let Some(hex) = path.strip_prefix("/objects/") {
                 object_endpoint(state, method, hex, req)?
@@ -731,6 +732,18 @@ fn metrics_response(state: &ServerState) -> Response {
     obj.insert("workers", state.options.workers as u64);
     obj.insert("queue", state.options.queue as u64);
     json_response(obj)
+}
+
+/// `GET /objects`: the store's full oid inventory, sorted. This is the
+/// wire half of [`RemoteTransport::list_oids`](super::transport::RemoteTransport::list_oids);
+/// anti-entropy repair unions these lists across mirrors to find what
+/// each one is missing.
+fn objects_inventory(state: &ServerState) -> Result<Response> {
+    let mut oids = state.store.list()?;
+    oids.sort();
+    let mut obj = JsonObj::new();
+    obj.insert("oids", oid_arr(&oids));
+    Ok(json_response(obj))
 }
 
 fn objects_batch(state: &ServerState, req: &Request) -> Result<Response> {

@@ -359,6 +359,17 @@ pub trait RemoteTransport: Send + Sync {
     ) -> Result<(PackStats, WireReport)> {
         self.fetch_pack_into(&adv.want, dest, threads)
     }
+
+    /// The remote store's full oid inventory, if this transport can
+    /// enumerate it (`GET /objects` over HTTP, a directory scan for a
+    /// dir remote). Anti-entropy repair unions inventories across
+    /// mirrors to compute what each one is missing. The default
+    /// returns `Ok(None)`: a transport that cannot enumerate (a
+    /// pre-inventory server) degrades to "cannot be repaired", never
+    /// to a wrong answer.
+    fn list_oids(&self) -> Result<Option<Vec<Oid>>> {
+        Ok(None)
+    }
 }
 
 /// Open the transport a [`RemoteSpec`] addresses.
@@ -366,7 +377,13 @@ pub trait RemoteTransport: Send + Sync {
 /// `staging` is a repository `.theta` dir (or any directory) where an
 /// HTTP transport persists partial pack downloads so an interrupted
 /// fetch resumes across process restarts; `None` disables persistence
-/// (transfers still work, they just restart from zero).
+/// (transfers still work, they just restart from zero). For a replica
+/// set the same staging dir is shared by every mirror — partials are
+/// content-addressed, not mirror-addressed, which is what lets a
+/// failover resume another mirror's interrupted download. The replica
+/// write quorum is read from `theta.replica-quorum` in
+/// `<staging>/config` when present (the staging dir *is* the repo's
+/// `.theta` dir at every repository call site).
 pub fn open_transport(
     spec: &RemoteSpec,
     staging: Option<&Path>,
@@ -374,6 +391,9 @@ pub fn open_transport(
     Ok(match spec {
         RemoteSpec::Dir(path) => Box::new(super::remote::DirRemote::open(path)),
         RemoteSpec::Http(url) => Box::new(super::http::HttpRemote::open(url, staging)?),
+        RemoteSpec::Replica(set) => {
+            Box::new(super::replicate::ReplicatedRemote::open(set, staging)?)
+        }
     })
 }
 

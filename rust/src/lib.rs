@@ -29,7 +29,6 @@ pub mod benchkit;
 pub mod checkpoint;
 #[allow(missing_docs)]
 pub mod cli;
-#[allow(missing_docs)]
 pub mod gitcore;
 pub mod lfs;
 #[allow(missing_docs)]

@@ -13,7 +13,7 @@ use git_theta::gitcore::attributes::Attributes;
 use git_theta::gitcore::remote::RemoteSpec;
 use git_theta::gitcore::repo::Repository;
 use git_theta::lfs::faults::{Direction, FaultSpec};
-use git_theta::lfs::{batch, LfsStore};
+use git_theta::lfs::{batch, LfsStore, ReplicatedRemote};
 use git_theta::tensor::Tensor;
 use git_theta::theta::filter::{clean_checkpoint, smudge_metadata, ObjectAccess};
 use git_theta::theta::metadata::ModelMetadata;
@@ -201,6 +201,88 @@ fn fetch_kill_sweep_resumes_at_every_offset() {
                 let want = server_store.get(oid).map_err(|e| format!("{e:#}"))?;
                 if got != want {
                     return Err(format!("object {oid} corrupt after resume"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Kill one mirror of a replica set at byte k for k swept across the
+/// pack: a SINGLE `fetch_pack` call must complete by failing over to
+/// the second mirror, resuming from the dead mirror's k-byte partial
+/// (the mirrors share the client's staging dir and packs are
+/// content-addressed), so exactly `pack − k` bytes cross the wire on
+/// the survivor and every object lands byte-for-byte.
+#[test]
+fn replicated_fetch_fails_over_mid_pack_and_resumes() {
+    // Two mirrors seeded identically (same seed ⇒ same payloads ⇒
+    // byte-identical packs for the same want set).
+    let fx_a = support::HttpFixture::new();
+    let fx_b = support::HttpFixture::new();
+    let store_a = fx_a.server_store();
+    let store_b = fx_b.server_store();
+    let oids = support::seed_store(&store_a, 12, 1500, 0x41FE);
+    let oids_b = support::seed_store(&store_b, 12, 1500, 0x41FE);
+    assert_eq!(oids, oids_b, "mirrors must hold identical object sets");
+
+    // Learn the pack size with an unfaulted fetch into a scratch store.
+    let td_scratch = TempDir::new("fi-rep-scratch").unwrap();
+    let scratch = LfsStore::open(td_scratch.path());
+    let pack_bytes = batch::fetch_pack(&fx_b.direct_remote(td_scratch.path()), &scratch, &oids)
+        .unwrap()
+        .packed_bytes;
+    assert!(pack_bytes > 2, "fixture pack too small to sweep");
+
+    prop::check(
+        "replicated-failover-at-k",
+        |rng| gens::usize_in(rng, 1, (pack_bytes - 1) as usize) as u64,
+        |&k| {
+            let td = TempDir::new("fi-rep").map_err(|e| e.to_string())?;
+            let local = LfsStore::open(td.path());
+            // Mirror A (proxied, about to die) is tried first: both
+            // breakers start closed and ties break by index.
+            let replica = ReplicatedRemote::new(
+                vec![
+                    Box::new(fx_a.proxied_remote(td.path())),
+                    Box::new(fx_b.direct_remote(td.path())),
+                ],
+                None,
+            );
+            fx_a.proxy.arm(FaultSpec::kill(Direction::Download, k));
+            let fired_before = fx_a.proxy.fired();
+
+            batch::reset_stats();
+            let summary = batch::fetch_pack(&replica, &local, &oids)
+                .map_err(|e| format!("failover after kill at {k} failed: {e:#}"))?;
+            let stats = batch::stats();
+            if fx_a.proxy.fired() != fired_before + 1 {
+                return Err("fault never fired".into());
+            }
+            if stats.mirror_failovers != 1 {
+                return Err(format!(
+                    "kill at byte {k}: expected exactly one failover, saw {}",
+                    stats.mirror_failovers
+                ));
+            }
+            if summary.resumed_bytes != k {
+                return Err(format!(
+                    "failover resumed {} bytes; the dead mirror delivered exactly {k}",
+                    summary.resumed_bytes
+                ));
+            }
+            if summary.wire_bytes != pack_bytes - k {
+                return Err(format!(
+                    "survivor sent {} bytes; only the {}-byte tail after the cut may move",
+                    summary.wire_bytes,
+                    pack_bytes - k
+                ));
+            }
+            for oid in &oids {
+                let got = local.get(oid).map_err(|e| format!("{e:#}"))?;
+                let want = store_b.get(oid).map_err(|e| format!("{e:#}"))?;
+                if got != want {
+                    return Err(format!("object {oid} corrupt after failover resume"));
                 }
             }
             Ok(())

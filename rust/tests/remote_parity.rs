@@ -10,7 +10,7 @@ use git_theta::gitcore::remote::RemoteSpec;
 use git_theta::gitcore::repo::Repository;
 use git_theta::lfs::{
     batch, classify, BatchResponse, ChainAdvert, ChainEntryAdvert, FailureClass, LfsRemote,
-    LfsStore, PackStats, Prefetcher, RemoteTransport, RetryPolicy, WireReport,
+    LfsStore, PackStats, Prefetcher, RemoteTransport, ReplicatedRemote, RetryPolicy, WireReport,
 };
 use git_theta::util::prop::{self, gens};
 use git_theta::util::rng::Pcg64;
@@ -138,6 +138,83 @@ fn fetch_parity_across_transports() {
             return Err(format!("counters diverge:\n dir {stats_dir:?}\n http {stats_http:?}"));
         }
         support::assert_stores_equal(&recv_dir, &recv_http);
+        Ok(())
+    });
+}
+
+/// A replica set of one must be invisible: pushes and fetches through
+/// [`ReplicatedRemote`] over a single mirror produce byte-identical
+/// stores and identical `TransferSummary`/`TransferStats` to the bare
+/// transport — no extra negotiations, no failover or quorum counters.
+#[test]
+fn single_mirror_replica_is_transparent() {
+    prop::check("replica-of-one-parity", gen_scenario, |sc| {
+        let td_local = TempDir::new("rep1-local").map_err(|e| e.to_string())?;
+        let local = LfsStore::open(td_local.path());
+        let oids = support::seed_store(&local, sc.objects, 900, sc.seed);
+        let mut want = oids.clone();
+        want.extend(ghost_oids(sc.ghosts, sc.seed));
+
+        // Two identically pre-seeded dir remotes: one bare, one
+        // wrapped in a replica set of one.
+        let td_bare = TempDir::new("rep1-bare").map_err(|e| e.to_string())?;
+        let td_wrapped = TempDir::new("rep1-wrapped").map_err(|e| e.to_string())?;
+        let bare = LfsRemote::open(td_bare.path());
+        let wrapped = LfsRemote::open(td_wrapped.path());
+        for oid in &oids[..sc.have] {
+            let bytes = local.get(oid).unwrap();
+            bare.store().put(&bytes).unwrap();
+            wrapped.store().put(&bytes).unwrap();
+        }
+        let replica =
+            ReplicatedRemote::new(vec![Box::new(LfsRemote::open(td_wrapped.path()))], None);
+
+        // Push parity.
+        batch::reset_stats();
+        let sum_bare = batch::push_pack(&local, &bare, &want).map_err(|e| format!("{e:#}"))?;
+        let stats_bare = batch::stats();
+        batch::reset_stats();
+        let sum_rep = batch::push_pack(&local, &replica, &want).map_err(|e| format!("{e:#}"))?;
+        let stats_rep = batch::stats();
+        if sum_bare != sum_rep {
+            return Err(format!(
+                "push summaries diverge:\n bare {sum_bare:?}\n replica {sum_rep:?}"
+            ));
+        }
+        if stats_bare != stats_rep {
+            return Err(format!(
+                "push counters diverge:\n bare {stats_bare:?}\n replica {stats_rep:?}"
+            ));
+        }
+        if stats_rep.mirror_failovers != 0 || stats_rep.quorum_shortfalls != 0 {
+            return Err("a healthy replica of one recorded failovers or shortfalls".into());
+        }
+        support::assert_stores_equal(bare.store(), wrapped.store());
+
+        // Fetch parity, back into two fresh receivers.
+        let td_ra = TempDir::new("rep1-recv-bare").map_err(|e| e.to_string())?;
+        let td_rb = TempDir::new("rep1-recv-rep").map_err(|e| e.to_string())?;
+        let recv_bare = LfsStore::open(td_ra.path());
+        let recv_rep = LfsStore::open(td_rb.path());
+        batch::reset_stats();
+        let fsum_bare =
+            batch::fetch_pack(&bare, &recv_bare, &want).map_err(|e| format!("{e:#}"))?;
+        let fstats_bare = batch::stats();
+        batch::reset_stats();
+        let fsum_rep =
+            batch::fetch_pack(&replica, &recv_rep, &want).map_err(|e| format!("{e:#}"))?;
+        let fstats_rep = batch::stats();
+        if fsum_bare != fsum_rep {
+            return Err(format!(
+                "fetch summaries diverge:\n bare {fsum_bare:?}\n replica {fsum_rep:?}"
+            ));
+        }
+        if fstats_bare != fstats_rep {
+            return Err(format!(
+                "fetch counters diverge:\n bare {fstats_bare:?}\n replica {fstats_rep:?}"
+            ));
+        }
+        support::assert_stores_equal(&recv_bare, &recv_rep);
         Ok(())
     });
 }

@@ -107,6 +107,18 @@ test -f BENCH_chaos.json || {
     exit 1
 }
 
+# Smoke the replication suite (default 8 objects, pinned seed): a
+# quorum-degraded push over a 2-of-3 replica set that anti-entropy
+# repair converges byte-identically, then a fetch that survives a
+# mid-pack mirror kill by failing over and resuming the partial. Exits
+# nonzero unless both phases converge with zero checksum failures.
+echo "==> bench replicate smoke"
+cargo run --release --quiet -- bench replicate
+test -f BENCH_replicate.json || {
+    echo "error: bench replicate did not write BENCH_replicate.json" >&2
+    exit 1
+}
+
 # Regression gate: BENCH_*.json counters vs the committed baseline
 # snapshot (scripts/bench_baseline.json). Counter metrics are exact
 # protocol invariants and fail the build when >20% worse; time metrics
